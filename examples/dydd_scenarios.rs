@@ -1,0 +1,58 @@
+//! DyDD walkthrough: replays the paper's §5 eight-subdomain example
+//! (Figures 1-4) step by step, then every Example 1/2 case from §6.
+//!
+//!   cargo run --release --example dydd_scenarios
+
+use dydd_da::dydd::{balance, repair, schedule_once, DyddParams};
+use dydd_da::graph::{laplacian_solve, Graph};
+use dydd_da::harness::scenarios;
+
+fn main() -> anyhow::Result<()> {
+    // ---- The §5 walkthrough (Figures 1-4) --------------------------------
+    println!("== Paper §5 walkthrough: 8 subdomains, loads after repair ==");
+    let g = Graph::paper_example();
+    let loads = vec![5usize, 4, 6, 2, 5, 3, 5, 2]; // Figure 1(b)
+    let avg = loads.iter().sum::<usize>() as f64 / 8.0;
+    println!("graph      : {} edges, max degree {}", g.num_edges(), g.max_degree());
+    println!("loads      : {loads:?}  (average {avg})");
+
+    // Scheduling step: the Laplacian system of eq. (30).
+    let b: Vec<f64> = loads.iter().map(|&l| l as f64 - avg).collect();
+    let lambda = laplacian_solve(&g, &b)?;
+    println!("lambda     : {:?}", lambda.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>());
+    let sched = schedule_once(&g, &loads)?;
+    for (i, j, d) in &sched {
+        if *d != 0 {
+            println!("  migrate {:+} obs across edge ({}, {})", d, i + 1, j + 1);
+        }
+    }
+    let out = balance(&g, &loads, &DyddParams::default())?;
+    println!("l_fin      : {:?}  (E = {:.3}, {} iterations)\n", out.l_fin, out.balance(), out.iters);
+
+    // ---- DD (repair) step in isolation -----------------------------------
+    println!("== DD step: empty-subdomain repair (Table 2 shape) ==");
+    let chain = Graph::chain(2);
+    let mut l = vec![1500usize, 0];
+    repair(&chain, &mut l)?;
+    println!("l_in = [1500, 0]  ->  l_r = {l:?}\n");
+
+    // ---- Every §6 scenario -------------------------------------------------
+    for (name, sc) in [
+        ("Example 1 Case 1", scenarios::example1(1)),
+        ("Example 1 Case 2", scenarios::example1(2)),
+        ("Example 2 Case 1", scenarios::example2(1)),
+        ("Example 2 Case 2", scenarios::example2(2)),
+        ("Example 2 Case 3", scenarios::example2(3)),
+        ("Example 2 Case 4", scenarios::example2(4)),
+        ("Example 3 (p=8)", scenarios::example3(8)),
+        ("Example 4 (p=8)", scenarios::example4(8)),
+    ] {
+        let out = balance(&sc.graph, &sc.l_in, &DyddParams::default())?;
+        println!(
+            "{name:18} l_in = {:?} -> l_fin = {:?}  E = {:.3}",
+            out.l_in, out.l_fin, out.balance()
+        );
+    }
+    println!("\ndydd_scenarios OK");
+    Ok(())
+}

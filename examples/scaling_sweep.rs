@@ -1,0 +1,56 @@
+//! Scaling sweep: DD-KF accuracy and simulated-parallel efficiency across
+//! subdomain counts and observation layouts (the Examples 3/4 axis of the
+//! paper, on configurable problem sizes).
+//!
+//!   cargo run --release --example scaling_sweep [-- --n 512 --m 400]
+
+use dydd_da::config::ExperimentConfig;
+use dydd_da::domain::ObsLayout;
+use dydd_da::harness::run_experiment;
+use dydd_da::util::timer::fmt_secs;
+use dydd_da::util::Table;
+
+fn arg<T: std::str::FromStr>(key: &str, default: T) -> T {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = arg("--n", 512);
+    let m: usize = arg("--m", 400);
+
+    for layout in [ObsLayout::Uniform, ObsLayout::Cluster, ObsLayout::LeftPacked] {
+        let mut t = Table::new(
+            &format!("scaling sweep — layout {layout:?}, n = {n}, m = {m}"),
+            &["p", "E (dydd)", "iters", "T^p_sim", "S^p_sim", "E^p_sim", "error_DD-DA"],
+        );
+        for p in [2usize, 4, 8, 16] {
+            if n / p < 8 {
+                continue;
+            }
+            let mut cfg = ExperimentConfig::default();
+            cfg.n = n;
+            cfg.m = m;
+            cfg.p = p;
+            cfg.layout = layout;
+            let rep = run_experiment(&cfg, true)?;
+            t.row(&[
+                p.to_string(),
+                format!("{:.3}", rep.balance().unwrap()),
+                rep.iters.to_string(),
+                fmt_secs(rep.t_critical.as_secs_f64()),
+                format!("{:.2}", rep.speedup_sim().unwrap()),
+                format!("{:.2}", rep.efficiency_sim().unwrap()),
+                format!("{:.1e}", rep.error_dd_da.unwrap()),
+            ]);
+            assert!(rep.error_dd_da.unwrap() < 1e-8, "accuracy must hold at any p");
+        }
+        println!("{}", t.render());
+    }
+    println!("scaling_sweep OK");
+    Ok(())
+}

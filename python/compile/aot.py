@@ -1,0 +1,128 @@
+"""AOT pipeline: lower every L2 function at its shape buckets to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME_SUBSTR] [--force]
+
+Python runs ONLY here (and in pytest). The rust binary is self-contained
+once artifacts/ is built; `make artifacts` is a no-op when inputs are
+unchanged (mtime-based, plus a content fingerprint in the manifest).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model, shapes  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources; stored in the manifest so stale
+    artifacts are detectable even when mtimes lie (e.g. git checkout)."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+# Kinds whose CPU lowering emits typed-FFI LAPACK custom-calls
+# (lapack_dpotrf_ffi / lapack_dtrsm_ffi) that xla_extension 0.5.1 cannot
+# execute. Lowering these for the TPU platform emits the *builtin* HLO
+# Cholesky / TriangularSolve ops instead, which the CPU PJRT client expands
+# natively — numerics verified against scipy in python/tests and against
+# the rust-native path in cargo tests. (The Schwarz hot-path artifacts
+# assemble/solve avoid factorization entirely — see model.assemble_fn.)
+_TPU_LOWERED_KINDS = {"cls_full"}
+
+
+def lower_spec(spec) -> str:
+    fn = model.FUNCTIONS[spec.kind]
+    args = model.make_example_args(spec)
+    if spec.kind in _TPU_LOWERED_KINDS:
+        lowered = jax.jit(fn).trace(*args).lower(lowering_platforms=("tpu",))
+    else:
+        lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    assert "custom-call" not in text, f"{spec.name}: unexpected custom-call"
+    return text
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = shapes.manifest_dict()
+    manifest["fingerprint"] = source_fingerprint()
+    manifest_path = out_dir / "manifest.json"
+
+    old_fp = None
+    if manifest_path.exists():
+        try:
+            old_fp = json.loads(manifest_path.read_text()).get("fingerprint")
+        except (json.JSONDecodeError, OSError):
+            old_fp = None
+    force = args.force or old_fp != manifest["fingerprint"]
+
+    specs = shapes.all_specs()
+    if args.only:
+        specs = [s for s in specs if args.only in s.name]
+
+    t_total = time.time()
+    n_done = n_skip = 0
+    for spec in specs:
+        path = out_dir / spec.filename
+        if path.exists() and not force:
+            n_skip += 1
+            continue
+        t0 = time.time()
+        text = lower_spec(spec)
+        path.write_text(text)
+        n_done += 1
+        print(
+            f"  lowered {spec.name:28s} {len(text) / 1024:9.1f} KiB"
+            f"  {time.time() - t0:6.2f}s",
+            flush=True,
+        )
+
+    if not args.only:
+        manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(
+        f"artifacts: {n_done} lowered, {n_skip} up-to-date"
+        f" ({time.time() - t_total:.1f}s) -> {out_dir}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

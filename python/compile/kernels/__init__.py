@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels: the numeric hot spots of DD-KF on CLS.
+
+All kernels are written against the TPU mental model (VMEM-resident output
+tiles, HBM->VMEM streaming expressed through BlockSpec, MXU-shaped
+contractions) but are lowered with ``interpret=True`` so the resulting HLO
+runs on the CPU PJRT client — real-TPU lowering emits Mosaic custom-calls
+the CPU plugin cannot execute. See DESIGN.md §Hardware-Adaptation.
+"""
+
+from .gram import at_db, weighted_gram  # noqa: F401
+from .matvec import matvec  # noqa: F401
+from .rank1 import outer_update  # noqa: F401
+from .residual import weighted_residual_sq  # noqa: F401
+from .tiling import choose_blocks, vmem_bytes  # noqa: F401

@@ -1,0 +1,100 @@
+"""Weighted gram kernels: G = A^T D A and c = A^T D r (D = diag(d) >= 0).
+
+These are the normal-equations assembly of the CLS solve — the dominant
+cost of every local Schwarz subproblem (O(M n_loc^2) flops, the paper's
+per-subdomain compute). The kernel is the canonical TPU matmul shape:
+
+  grid = (n/bn, n/bn, M/bm); the (bn x bn) output tile for (i, j) stays
+  resident in VMEM while the k axis streams (bm x bn) panels of A from HBM.
+  The contraction `a_i^T @ (d * a_j)` is MXU-shaped (bn x bm @ bm x bn).
+
+Row padding is exact: padded rows carry d = 0 and contribute nothing.
+Column padding is handled downstream by the diagonal regularization vector
+(see model.assemble_fn).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import choose_blocks
+
+
+def _gram_kernel(a_i_ref, a_j_ref, d_ref, g_ref):
+    """One (i, j, k) grid step: accumulate a_i^T D a_j into the (i, j) tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    a_i = a_i_ref[...]  # (bm, bn)
+    a_j = a_j_ref[...]  # (bm, bn)
+    d = d_ref[...]  # (bm,)
+    # Scale the streaming panel once; the contraction then feeds the MXU.
+    g_ref[...] += jnp.dot(a_i.T, d[:, None] * a_j, precision="highest")
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def weighted_gram(a, d, *, block_m: int | None = None, block_n: int | None = None):
+    """G = A^T diag(d) A for A: (M, N), d: (M,). Returns (N, N)."""
+    m, n = a.shape
+    if block_m is None or block_n is None:
+        bm, bn = choose_blocks(m, n, a.dtype.itemsize)
+        block_m = block_m or bm
+        block_n = block_n or bn
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    grid = (n // block_n, n // block_n, m // block_m)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_m,), lambda i, j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=True,
+    )(a, a, d)
+
+
+def _at_db_kernel(a_ref, d_ref, r_ref, c_ref):
+    """One (j, k) grid step: accumulate a^T (d * r) into the j-th block of c."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    a = a_ref[...]  # (bm, bn)
+    dr = d_ref[...] * r_ref[...]  # (bm,)
+    c_ref[...] += jnp.dot(a.T, dr, precision="highest")
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def at_db(a, d, r, *, block_m: int | None = None, block_n: int | None = None):
+    """c = A^T diag(d) r for A: (M, N), d, r: (M,). Returns (N,)."""
+    m, n = a.shape
+    if block_m is None or block_n is None:
+        bm, bn = choose_blocks(m, n, a.dtype.itemsize)
+        block_m = block_m or bm
+        block_n = block_n or bn
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    grid = (n // block_n, m // block_m)
+    return pl.pallas_call(
+        _at_db_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda j, k: (k, j)),
+            pl.BlockSpec((block_m,), lambda j, k: (k,)),
+            pl.BlockSpec((block_m,), lambda j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda j, k: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, d, r)

@@ -1,0 +1,49 @@
+"""Blocked matvec kernel: y = A x.
+
+Used by the KF rank-1 analysis step (w = P h, the O(n^2) half of each
+observation update) and by diagnostics. Grid streams (bm x bn) panels of A;
+the (bm,) output block accumulates across the j axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import choose_blocks
+
+
+def _matvec_kernel(a_ref, x_ref, y_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jnp.dot(a_ref[...], x_ref[...], precision="highest")
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matvec(a, x, *, block_m: int | None = None, block_n: int | None = None):
+    """y = A @ x for A: (M, N), x: (N,). Returns (M,)."""
+    m, n = a.shape
+    if block_m is None or block_n is None:
+        bm, bn = choose_blocks(m, n, a.dtype.itemsize)
+        block_m = block_m or bm
+        block_n = block_n or bn
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)

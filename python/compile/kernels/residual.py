@@ -1,0 +1,75 @@
+"""Weighted residual kernel: J(x) = || A x - b ||^2_D = sum_i d_i (A x - b)_i^2.
+
+The CLS objective (eq. 17) restricted to a subdomain; used by the Schwarz
+convergence check and the benchmark harness. Single-pass: each row panel
+computes its local residual and accumulates the scalar into a (1, 1) output
+tile that stays resident across the whole grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import choose_blocks
+
+
+def _residual_kernel(a_ref, x_ref, b_ref, d_ref, o_ref, r_ref):
+    """(i, j) grid step. The second output r is a per-row-panel residual
+    accumulator (r = A x - b, built up across the j axis); on the last j
+    step its weighted square is folded into the grid-resident scalar o."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_o():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(j == 0)
+    def _init_r():
+        r_ref[...] = -b_ref[...]
+
+    r_ref[...] += jnp.dot(a_ref[...], x_ref[...], precision="highest")
+
+    @pl.when(j == nj - 1)
+    def _fold():
+        r = r_ref[...]
+        o_ref[...] += jnp.sum(d_ref[...] * r * r)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def weighted_residual_sq(
+    a, x, b, d, *, block_m: int | None = None, block_n: int | None = None
+):
+    """sum(d * (A x - b)^2) for A: (M, N). Returns a scalar (shape (1,))."""
+    m, n = a.shape
+    if block_m is None or block_n is None:
+        bm, bn = choose_blocks(m, n, a.dtype.itemsize)
+        block_m = block_m or bm
+        block_n = block_n or bn
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    grid = (m // block_m, n // block_n)
+    out, _ = pl.pallas_call(
+        _residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), a.dtype),
+            jax.ShapeDtypeStruct((m,), a.dtype),
+        ],
+        interpret=True,
+    )(a, x, b, d)
+    return out

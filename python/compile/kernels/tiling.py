@@ -1,0 +1,52 @@
+"""Block-size selection and VMEM accounting for the Pallas kernels.
+
+On a real TPU the constraint is VMEM (~16 MiB/core on v4): the gram kernel
+keeps one (bn x bn) output tile resident plus two (bm x bn) input panels and
+a (bm,) weight slice, all at the working dtype. We pick the largest blocks
+that keep the projected footprint under a conservative budget and divide the
+bucket dims exactly (buckets are multiples of 128/256 by construction, see
+shapes.py). Interpret-mode wallclock is *not* a TPU proxy; these choices are
+validated structurally (footprint + MXU-shape) in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+# Conservative VMEM budget (bytes) for one kernel invocation's working set.
+VMEM_BUDGET = 12 * 1024 * 1024
+
+# MXU-friendly tile quanta: the systolic array is 128x128; sublane quantum
+# for f32 is 8. We only ever pick multiples of these.
+LANE = 128
+SUBLANE = 8
+
+
+def vmem_bytes(bm: int, bn: int, itemsize: int = 8) -> int:
+    """Projected VMEM working set of the gram kernel for (bm, bn) blocks.
+
+    Two input panels (bm x bn), one output tile (bn x bn), one weight slice
+    (bm,), plus a scaled-panel temporary (bm x bn).
+    """
+    return itemsize * (3 * bm * bn + bn * bn + bm)
+
+
+def _largest_divisor_block(dim: int, cap: int) -> int:
+    """Largest b <= cap with b | dim, preferring multiples of LANE."""
+    b = min(dim, cap)
+    while b > 1 and dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def choose_blocks(m: int, n: int, itemsize: int = 8) -> tuple[int, int]:
+    """Pick (bm, bn) for an (m, n) operand under the VMEM budget.
+
+    Defaults target bm=256, bn=128 (the §Perf sweep winner); shrink bm first
+    (streaming dim) if the budget is exceeded, then bn.
+    """
+    bn = _largest_divisor_block(n, 128)
+    bm = _largest_divisor_block(m, 256)
+    while vmem_bytes(bm, bn, itemsize) > VMEM_BUDGET and bm > SUBLANE:
+        bm //= 2
+    while vmem_bytes(bm, bn, itemsize) > VMEM_BUDGET and bn > SUBLANE:
+        bn //= 2
+    return bm, bn

@@ -1,0 +1,163 @@
+"""Layer-2 JAX model: the CLS / KF compute graphs lowered to HLO artifacts.
+
+Each public ``*_fn`` below is jitted and AOT-lowered by aot.py at the fixed
+shape buckets in shapes.py, then executed from the rust coordinator through
+PJRT. They compose the Layer-1 Pallas kernels with XLA-native factorizations.
+
+Conventions (shared with rust/src/runtime/):
+  * dtype is f64 end-to-end (the paper's 1e-11 accuracy claims require it);
+  * row padding: padded rows carry d = 0 (and h = 0, rvar = 1 for KF rows) —
+    exact no-ops;
+  * column padding: padded columns carry diag_reg = 1 and reg_rhs = 0, so the
+    padded solution entries are exactly 0 and the true block is untouched;
+  * every function returns a tuple (lowered with return_tuple=True, unpacked
+    with to_tupleN on the rust side).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import at_db, matvec, outer_update, weighted_gram
+
+jax.config.update("jax_enable_x64", True)
+
+
+def assemble_fn(a, d, diag_reg):
+    """Assemble the local normal matrix G = A^T D A + diag(diag_reg).
+
+    Runs once per subdomain per DyDD epoch (the matrix does not change
+    across Schwarz iterations — only the right-hand side does). The O(M n^2)
+    gram is the L1 Pallas kernel; the O(n^3)-once Cholesky factorization of
+    the returned G happens natively on the rust side (L3) — the HLO
+    Cholesky expander of the target runtime (xla_extension 0.5.1 CPU) is a
+    scalar loop ~300x slower than a native factorization, see
+    EXPERIMENTS.md §Perf.
+
+    diag_reg carries: mu on overlap columns (the O_{1,2} regularization of
+    eqs. 25-26), 1.0 on padded columns, 0 elsewhere.
+    """
+    g = weighted_gram(a, d) + jnp.diag(diag_reg)
+    return (g,)
+
+
+def solve_fn(a, d, b_eff, reg_rhs):
+    """Schwarz-iteration right-hand side: c = A^T D b_eff + reg_rhs.
+
+    The O(M n) weighted projection is the L1 Pallas at_db kernel; the
+    O(n^2) triangular back-substitutions against the epoch's Cholesky
+    factor run natively on the rust side (same rationale as assemble_fn).
+
+    b_eff = b - A_neighbour x_neighbour (eq. 24) is assembled natively by
+    the worker (halo matvec, O(M) — the halo coupling is sparse); reg_rhs
+    carries mu * x_other on overlap columns (eqs. 25-26), 0 on padding.
+    """
+    c = at_db(a, d, b_eff) + reg_rhs
+    return (c,)
+
+
+def kf_chunk_fn(x, p, hrows, rvars, ys):
+    """Sequential VAR-KF: process `chunk` observation rows by rank-1 updates.
+
+    The paper's reference algorithm (§2.1): for each row h with variance
+    rvar and datum y,
+        w = P h;  s = h^T w + rvar;  k = w / s
+        x <- x + k (y - h^T x);  P <- (I - k h^T) P = P - k w^T.
+    The O(n^2) matvec and the fused outer-product update are the L1 Pallas
+    kernels. Padded rows (h = 0, rvar = 1, y = 0) are exact no-ops.
+    """
+
+    def step(carry, inp):
+        x, p = carry
+        h, rvar, y = inp
+        w = matvec(p, h)
+        s = h @ w + rvar
+        k = w / s
+        x = x + k * (y - h @ x)
+        p = outer_update(p, k, w)
+        return (x, p), ()
+
+    (x, p), _ = lax.scan(step, (x, p), (hrows, rvars, ys))
+    return (x, p)
+
+
+def kf_predict_fn(x, p, mmat, qdiag):
+    """KF Predictor phase (eqs. 5-6): x' = M x, P' = M P M^T + Q.
+
+    Dense n^3 matmuls — left to XLA's native gemm (no Pallas win on CPU, and
+    on TPU the MXU path is exactly this). Q is diagonal (model error).
+    """
+    xp = mmat @ x
+    pp = mmat @ p @ mmat.T + jnp.diag(qdiag)
+    return (xp, pp)
+
+
+def cls_full_fn(a, d, b, diag_reg):
+    """Global CLS reference solve (eqs. 18-19) via gram + Cholesky.
+
+    Used to compute error_DD-DA = ||x_KF - x_DD-DA|| (Table 11 / Figure 5)
+    without trusting either decomposed path.
+    """
+    g = weighted_gram(a, d) + jnp.diag(diag_reg)
+    l = jnp.linalg.cholesky(g)
+    c = at_db(a, d, b)
+    x = jax.scipy.linalg.cho_solve((l, True), c)
+    return (x,)
+
+
+def make_example_args(spec):
+    """ShapeDtypeStructs matching an ArtifactSpec — the AOT lowering inputs."""
+    f64 = jnp.float64
+    k, dims = spec.kind, spec.dims
+    if k == "assemble":
+        m, n = dims["m"], dims["nloc"]
+        return (
+            jax.ShapeDtypeStruct((m, n), f64),
+            jax.ShapeDtypeStruct((m,), f64),
+            jax.ShapeDtypeStruct((n,), f64),
+        )
+    if k == "solve":
+        m, n = dims["m"], dims["nloc"]
+        return (
+            jax.ShapeDtypeStruct((m, n), f64),
+            jax.ShapeDtypeStruct((m,), f64),
+            jax.ShapeDtypeStruct((m,), f64),
+            jax.ShapeDtypeStruct((n,), f64),
+        )
+    if k == "kf_chunk":
+        n, c = dims["n"], dims["chunk"]
+        return (
+            jax.ShapeDtypeStruct((n,), f64),
+            jax.ShapeDtypeStruct((n, n), f64),
+            jax.ShapeDtypeStruct((c, n), f64),
+            jax.ShapeDtypeStruct((c,), f64),
+            jax.ShapeDtypeStruct((c,), f64),
+        )
+    if k == "kf_predict":
+        n = dims["n"]
+        return (
+            jax.ShapeDtypeStruct((n,), f64),
+            jax.ShapeDtypeStruct((n, n), f64),
+            jax.ShapeDtypeStruct((n, n), f64),
+            jax.ShapeDtypeStruct((n,), f64),
+        )
+    if k == "cls_full":
+        m, n = dims["m"], dims["n"]
+        return (
+            jax.ShapeDtypeStruct((m, n), f64),
+            jax.ShapeDtypeStruct((m,), f64),
+            jax.ShapeDtypeStruct((m,), f64),
+            jax.ShapeDtypeStruct((n,), f64),
+        )
+    raise ValueError(f"unknown artifact kind {k!r}")
+
+
+FUNCTIONS = {
+    "assemble": assemble_fn,
+    "solve": solve_fn,
+    "kf_chunk": kf_chunk_fn,
+    "kf_predict": kf_predict_fn,
+    "cls_full": cls_full_fn,
+}

@@ -1,0 +1,113 @@
+"""Shape-bucket registry shared by the AOT pipeline, tests and the manifest.
+
+Every HLO artifact is lowered at a fixed shape. The rust runtime picks, per
+subdomain, the smallest bucket that fits the actual local problem
+(rows are padded with zero weights, columns with unit diagonal
+regularization — both padding schemes are exact, see kernels/gram.py).
+
+Buckets are sized for the paper's experiments (n = 2048 unknowns,
+m <= 2000 observations, p in {1,2,4,8,16,32}) plus small test/e2e sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+# (M_rows, n_loc) buckets for the local Schwarz solve artifacts.
+#
+# A local subproblem has M_loc = (state rows with support in the subdomain)
+# + (observations located in the subdomain) rows and n_loc columns. DyDD
+# migration shifts spatial boundaries, so n_loc drifts away from n/p on
+# clustered workloads — the bucket grid is therefore finer than powers of
+# two (quarter steps) to bound column-padding waste, and every value is
+# divisible by an MXU-friendly block (see kernels/tiling.py).
+#
+# With the paper's parameters the post-balance loads are l_i ~= m/p, e.g.:
+#   p=2,  n=2048, m=2000 -> n_loc=1024, M_loc ~= 1024+2+1000 -> (2560, 1024)
+#   p=32, n=2048, m=1032 -> n_loc=64,   M_loc ~= 64+2+33     -> (128, 64)
+NLOCS: List[int] = [
+    32, 48, 64, 96, 128, 160, 192, 224, 256, 320, 384, 448, 512,
+    640, 768, 896, 1024, 1280, 1536, 1792, 2048,
+]  # fmt: skip
+
+MROWS: List[int] = [
+    64, 96, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048, 2560, 3072, 4608,
+]  # fmt: skip
+
+
+def _useful(m: int, n: int) -> bool:
+    """Keep (m, n) pairs a real subproblem could need: at least the state
+    rows (n+2) must fit, and anything beyond n + m_max(=2048) + slack is
+    never requested."""
+    return m >= n + 34 and m <= n + 3072
+
+
+ASSEMBLE_PAIRS: List[Tuple[int, int]] = [
+    (m, n) for n in NLOCS for m in MROWS if _useful(m, n)
+]
+
+# (n, chunk) for the sequential KF baseline artifact: a lax.scan of `chunk`
+# rank-1 observation updates over state dim n (used by the T^1 baseline and
+# the e2e driver's analysis step).
+KF_CHUNK_PAIRS: List[Tuple[int, int]] = [
+    (64, 16),
+    (128, 32),
+    (256, 32),
+    (2048, 64),
+]
+
+# n for the dense KF predict artifact: P' = M P M^T + Q, x' = M x.
+KF_PREDICT_SIZES: List[int] = [64, 128, 256]
+
+# (M_rows, n) for the full-problem CLS reference solve (used to compute
+# error_DD-DA against the global solution).
+CLS_FULL_PAIRS: List[Tuple[int, int]] = [
+    (256, 64),
+    (256, 128),
+    (512, 256),
+    (2560, 1024),
+    (4608, 2048),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT artifact: a jax function lowered at a fixed shape."""
+
+    name: str  # e.g. "assemble_m256_n64"
+    kind: str  # assemble | solve | matvec | kf_chunk | kf_predict | cls_full
+    dims: dict  # kind-specific dims, mirrored into the manifest
+
+    @property
+    def filename(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+
+def all_specs() -> List[ArtifactSpec]:
+    specs: List[ArtifactSpec] = []
+    for m, n in ASSEMBLE_PAIRS:
+        specs.append(
+            ArtifactSpec(f"assemble_m{m}_n{n}", "assemble", {"m": m, "nloc": n})
+        )
+        specs.append(ArtifactSpec(f"solve_m{m}_n{n}", "solve", {"m": m, "nloc": n}))
+    for n, c in KF_CHUNK_PAIRS:
+        specs.append(
+            ArtifactSpec(f"kf_chunk_n{n}_c{c}", "kf_chunk", {"n": n, "chunk": c})
+        )
+    for n in KF_PREDICT_SIZES:
+        specs.append(ArtifactSpec(f"kf_predict_n{n}", "kf_predict", {"n": n}))
+    for m, n in CLS_FULL_PAIRS:
+        specs.append(ArtifactSpec(f"cls_full_m{m}_n{n}", "cls_full", {"m": m, "n": n}))
+    return specs
+
+
+def manifest_dict() -> dict:
+    return {
+        "version": 1,
+        "dtype": "f64",
+        "artifacts": [
+            {"name": s.name, "kind": s.kind, "file": s.filename, **s.dims}
+            for s in all_specs()
+        ],
+    }

@@ -1,0 +1,59 @@
+"""AOT pipeline: HLO text is produced, parses as HLO, manifest is complete,
+and the lowered computation has the right parameter arity."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, model, shapes
+
+
+def test_manifest_covers_all_specs():
+    man = shapes.manifest_dict()
+    names = {a["name"] for a in man["artifacts"]}
+    assert len(names) == len(man["artifacts"]), "duplicate artifact names"
+    for s in shapes.all_specs():
+        assert s.name in names
+    assert man["dtype"] == "f64"
+
+
+def test_bucket_shapes_divide_by_blocks():
+    """Every bucket must be tileable by choose_blocks' picks."""
+    from compile.kernels import choose_blocks
+
+    for m, n in shapes.ASSEMBLE_PAIRS:
+        bm, bn = choose_blocks(m, n)
+        assert m % bm == 0 and n % bn == 0
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [s for s in shapes.all_specs() if s.dims.get("m", 1e9) <= 256],
+    ids=lambda s: s.name,
+)
+def test_small_specs_lower_to_parseable_hlo(spec, tmp_path):
+    text = aot.lower_spec(spec)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # Parameter arity must match make_example_args.
+    n_params = len(model.make_example_args(spec))
+    assert text.count("parameter(") >= n_params
+
+
+def test_aot_main_skips_up_to_date(tmp_path):
+    out = str(tmp_path / "arts")
+    assert aot.main(["--out-dir", out, "--only", "assemble_m128_n32"]) == 0
+    p = pathlib.Path(out) / "assemble_m128_n32.hlo.txt"
+    assert p.exists()
+    mtime = p.stat().st_mtime_ns
+    # manifest written only on full runs; write one so fingerprint matches
+    man = shapes.manifest_dict()
+    man["fingerprint"] = aot.source_fingerprint()
+    (pathlib.Path(out) / "manifest.json").write_text(json.dumps(man))
+    assert aot.main(["--out-dir", out, "--only", "assemble_m128_n32"]) == 0
+    assert p.stat().st_mtime_ns == mtime, "should have been skipped"
+
+
+def test_fingerprint_stable():
+    assert aot.source_fingerprint() == aot.source_fingerprint()

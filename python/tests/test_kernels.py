@@ -1,0 +1,114 @@
+"""L1 Pallas kernels vs pure-jnp oracles (ref.py) — the core numeric signal.
+
+hypothesis sweeps shapes, dtypes, block sizes and weight patterns; every
+kernel must match its oracle to tight f64 tolerances.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    at_db,
+    matvec,
+    outer_update,
+    ref,
+    weighted_gram,
+    weighted_residual_sq,
+)
+
+DIMS = st.sampled_from([8, 16, 24, 32, 64, 128])
+SEEDS = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, seed=SEEDS)
+def test_weighted_gram_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, n)
+    d = jnp.asarray(rng.random(m))
+    got = weighted_gram(a, d)
+    np.testing.assert_allclose(got, ref.weighted_gram(a, d), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, seed=SEEDS)
+def test_at_db_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, n)
+    d = jnp.asarray(rng.random(m))
+    r = _rand(rng, m)
+    np.testing.assert_allclose(
+        at_db(a, d, r), ref.at_db(a, d, r), rtol=1e-12, atol=1e-12
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, seed=SEEDS)
+def test_matvec_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, n)
+    x = _rand(rng, n)
+    np.testing.assert_allclose(matvec(a, x), ref.matvec(a, x), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=DIMS, seed=SEEDS)
+def test_outer_update_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    p = _rand(rng, n, n)
+    k = _rand(rng, n)
+    w = _rand(rng, n)
+    np.testing.assert_allclose(
+        outer_update(p, k, w), ref.outer_update(p, k, w), rtol=1e-12, atol=1e-12
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, seed=SEEDS)
+def test_weighted_residual_sq_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, m, n)
+    x = _rand(rng, n)
+    b = _rand(rng, m)
+    d = jnp.asarray(rng.random(m))
+    got = weighted_residual_sq(a, x, b, d)[0]
+    np.testing.assert_allclose(
+        got, ref.weighted_residual_sq(a, x, b, d), rtol=1e-11, atol=1e-11
+    )
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 32), (64, 16), (128, 128)])
+def test_gram_block_sweep(bm, bn):
+    """Result must be identical (up to fp) for any legal block shape."""
+    rng = np.random.default_rng(7)
+    a = _rand(rng, 128, 128)
+    d = jnp.asarray(rng.random(128))
+    want = ref.weighted_gram(a, d)
+    got = weighted_gram(a, d, block_m=bm, block_n=bn)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_gram_zero_weight_rows_are_noops():
+    """Row padding semantics: d = 0 rows must contribute exactly nothing."""
+    rng = np.random.default_rng(3)
+    a = _rand(rng, 64, 32)
+    d = jnp.asarray(rng.random(64))
+    d_pad = jnp.concatenate([d, jnp.zeros(64)])
+    a_pad = jnp.concatenate([a, jnp.asarray(rng.standard_normal((64, 32)))])
+    np.testing.assert_array_equal(weighted_gram(a_pad, d_pad), weighted_gram(a, d))
+
+
+def test_f32_also_supported():
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.standard_normal((32, 16)), dtype=jnp.float32)
+    d = jnp.asarray(rng.random(32), dtype=jnp.float32)
+    got = weighted_gram(a, d)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, ref.weighted_gram(a, d), rtol=1e-5)

@@ -1,0 +1,147 @@
+"""L2 model functions vs numpy oracles: solve correctness, padding semantics,
+KF-vs-CLS equivalence (the identity the whole paper rests on)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _problem(rng, m, n, obs_rows=None):
+    """A well-posed CLS instance: state rows (identity-ish) + obs rows."""
+    a = rng.standard_normal((m, n)) * 0.1
+    a[:n, :n] += np.eye(n)
+    d = rng.random(m) + 0.5
+    b = rng.standard_normal(m)
+    return jnp.asarray(a), jnp.asarray(d), jnp.asarray(b)
+
+
+def _local_solve(a, d, b, reg, reg_rhs=None):
+    """The full local solve as the rust side performs it: the assemble and
+    solve ARTIFACTS produce G and c; the O(n^3)-once factorization and the
+    O(n^2) back-substitution run natively (here: numpy stands in)."""
+    n = a.shape[1]
+    (g,) = model.assemble_fn(a, d, reg)
+    (c,) = model.solve_fn(a, d, b, reg_rhs if reg_rhs is not None else jnp.zeros(n))
+    return jnp.asarray(np.linalg.solve(np.asarray(g), np.asarray(c)))
+
+
+def test_assemble_solve_roundtrip():
+    rng = np.random.default_rng(0)
+    m, n = 96, 32
+    a, d, b = _problem(rng, m, n)
+    x = _local_solve(a, d, b, jnp.zeros(n))
+    want = ref.cls_solve(a, d, b, jnp.zeros(n))
+    np.testing.assert_allclose(x, want, rtol=1e-10, atol=1e-10)
+
+
+def test_column_padding_is_exact():
+    """Padded columns (diag_reg = 1) yield x_pad = 0 and do not perturb the
+    true block — the invariant the rust bucket-picker relies on."""
+    rng = np.random.default_rng(1)
+    m, n, n_pad = 96, 24, 32
+    a, d, b = _problem(rng, m, n)
+    a_pad = jnp.concatenate([a, jnp.zeros((m, n_pad - n))], axis=1)
+    reg_pad = jnp.concatenate([jnp.zeros(n), jnp.ones(n_pad - n)])
+    x_pad = _local_solve(a_pad, d, b, reg_pad)
+    want = ref.cls_solve(a, d, b, jnp.zeros(n))
+    np.testing.assert_allclose(x_pad[:n], want, rtol=1e-10, atol=1e-10)
+    np.testing.assert_array_equal(x_pad[n:], 0.0)
+
+
+def test_row_padding_is_exact():
+    rng = np.random.default_rng(2)
+    m, n, m_pad = 64, 16, 96
+    a, d, b = _problem(rng, m, n)
+    a_big = jnp.concatenate([a, jnp.asarray(rng.standard_normal((m_pad - m, n)))])
+    d_big = jnp.concatenate([d, jnp.zeros(m_pad - m)])
+    b_big = jnp.concatenate([b, jnp.asarray(rng.standard_normal(m_pad - m))])
+    x = _local_solve(a_big, d_big, b_big, jnp.zeros(n))
+    want = ref.cls_solve(a, d, b, jnp.zeros(n))
+    np.testing.assert_allclose(x, want, rtol=1e-10, atol=1e-10)
+
+
+def test_kf_chunk_equals_cls_solution():
+    """VAR-KF processing all rows sequentially must reproduce the CLS
+    normal-equations solution (the §2 KF <-> variational equivalence)."""
+    rng = np.random.default_rng(3)
+    n, m_obs = 16, 48
+    h0 = np.eye(n) + 0.1 * rng.standard_normal((n, n))
+    y0 = rng.standard_normal(n)
+    r0 = rng.random(n) + 0.5
+    h1 = rng.standard_normal((m_obs, n))
+    y1 = rng.standard_normal(m_obs)
+    r1 = rng.random(m_obs) + 0.5
+
+    # KF: init from the state system, then rank-1 updates over observations.
+    g0 = h0.T @ np.diag(r0) @ h0
+    p = jnp.asarray(np.linalg.inv(g0))
+    x = jnp.asarray(np.linalg.solve(g0, h0.T @ (r0 * y0)))
+    (x, p) = model.kf_chunk_fn(
+        x, p, jnp.asarray(h1), jnp.asarray(1.0 / r1), jnp.asarray(y1)
+    )
+
+    # CLS: stacked normal equations.
+    a = np.concatenate([h0, h1])
+    d = np.concatenate([r0, r1])
+    b = np.concatenate([y0, y1])
+    want = ref.cls_solve(jnp.asarray(a), jnp.asarray(d), jnp.asarray(b), jnp.zeros(n))
+    np.testing.assert_allclose(x, want, rtol=1e-9, atol=1e-9)
+
+
+def test_kf_chunk_padded_rows_are_noops():
+    rng = np.random.default_rng(4)
+    n, c = 8, 8
+    p0 = np.eye(n) * 2.0
+    x0 = rng.standard_normal(n)
+    h = np.zeros((c, n))
+    h[0] = rng.standard_normal(n)
+    rvar = np.ones(c)
+    y = np.zeros(c)
+    y[0] = 1.3
+    x, p = model.kf_chunk_fn(
+        jnp.asarray(x0),
+        jnp.asarray(p0),
+        jnp.asarray(h),
+        jnp.asarray(rvar),
+        jnp.asarray(y),
+    )
+    xw, pw = ref.kf_rank1_step(
+        jnp.asarray(x0), jnp.asarray(p0), jnp.asarray(h[0]), 1.0, 1.3
+    )
+    np.testing.assert_allclose(x, xw, rtol=1e-12)
+    np.testing.assert_allclose(p, pw, rtol=1e-12)
+
+
+def test_kf_predict():
+    rng = np.random.default_rng(5)
+    n = 12
+    x = rng.standard_normal(n)
+    p = rng.standard_normal((n, n))
+    p = p @ p.T
+    mmat = rng.standard_normal((n, n))
+    q = rng.random(n)
+    xp, pp = model.kf_predict_fn(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(mmat), jnp.asarray(q)
+    )
+    np.testing.assert_allclose(xp, mmat @ x, rtol=1e-12)
+    np.testing.assert_allclose(pp, mmat @ p @ mmat.T + np.diag(q), rtol=1e-12)
+
+
+def test_cls_full_matches_dense_solve():
+    rng = np.random.default_rng(6)
+    a, d, b = _problem(rng, 96, 32)
+    reg = jnp.zeros(32)
+    (x,) = model.cls_full_fn(a, d, b, reg)
+    np.testing.assert_allclose(x, ref.cls_solve(a, d, b, reg), rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("kind", sorted(model.FUNCTIONS))
+def test_example_args_cover_all_kinds(kind):
+    from compile import shapes
+
+    spec = next(s for s in shapes.all_specs() if s.kind == kind)
+    args = model.make_example_args(spec)
+    assert all(a.dtype == jnp.float64 for a in args)

@@ -1,0 +1,146 @@
+//! `cargo bench --bench ablations` — ablation studies over the design
+//! choices DESIGN.md calls out:
+//!
+//!  A1. DyDD on/off: load balance + critical-path solve time under a
+//!      clustered layout (the paper's motivation).
+//!  A2. Repair (DD step) on/off for empty-subdomain scenarios.
+//!  A3. Sweep order: multiplicative vs red-black (iterations to converge).
+//!  A4. Overlap/μ: iterations and solution bias vs (s, μ).
+//!  A5. Backend: native vs local-KF vs PJRT artifacts on one problem.
+
+use dydd_da::cls::{ClsProblem, StateOp};
+use dydd_da::coordinator::{run_parallel, RunConfig, SolverBackend};
+use dydd_da::ddkf::{schwarz_solve, NativeLocalSolver, SchwarzOptions, SweepOrder};
+use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
+use dydd_da::dydd::{balance_ratio, rebalance_partition, DyddParams};
+use dydd_da::linalg::mat::dist2;
+use dydd_da::runtime;
+use dydd_da::util::timer::fmt_secs;
+use dydd_da::util::{Rng, Table};
+
+fn problem(n: usize, m: usize, layout: ObsLayout, seed: u64) -> ClsProblem {
+    let mesh = Mesh1d::new(n);
+    let mut rng = Rng::new(seed);
+    let obs = generators::generate(layout, m, &mut rng);
+    let y0 = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+    ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![4.0; n], obs)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 512;
+    let p = 8;
+
+    // ---------- A1: DyDD on/off under clustering ----------
+    let mut t = Table::new(
+        "A1 — DyDD on/off (n=512, m=400, p=8, clustered observations)",
+        &["dydd", "E", "T^p_sim", "max/min worker busy"],
+    );
+    let prob = problem(n, 400, ObsLayout::Cluster, 31);
+    let mesh = Mesh1d::new(n);
+    let part0 = Partition::uniform(n, p);
+    for dydd in [false, true] {
+        let part = if dydd {
+            rebalance_partition(&mesh, &part0, &prob.obs, &DyddParams::default())?.partition
+        } else {
+            part0.clone()
+        };
+        let out = run_parallel(&prob, &part, &RunConfig::default())?;
+        let census = prob.obs.census(&mesh, &part);
+        let busy_max = out.worker_busy.iter().max().unwrap().as_secs_f64();
+        let busy_min =
+            out.worker_busy.iter().min().unwrap().as_secs_f64().max(1e-9);
+        t.row(&[
+            dydd.to_string(),
+            format!("{:.3}", balance_ratio(&census)),
+            fmt_secs(out.t_critical.as_secs_f64()),
+            format!("{:.1}", busy_max / busy_min),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---------- A2: repair ablation ----------
+    let mut t = Table::new(
+        "A2 — DD (repair) step on empty subdomains (abstract, p=4 ring)",
+        &["l_in", "with repair: l_fin", "E"],
+    );
+    use dydd_da::dydd::balance;
+    use dydd_da::graph::Graph;
+    let mut ring = Graph::new(4);
+    for (a, b) in [(0, 1), (1, 2), (2, 3), (3, 0)] {
+        ring.add_edge(a, b);
+    }
+    for l_in in [[0usize, 0, 0, 1500], [450, 0, 450, 600]] {
+        let out = balance(&ring, &l_in, &DyddParams::default())?;
+        t.row(&[
+            format!("{l_in:?}"),
+            format!("{:?}", out.l_fin),
+            format!("{:.3}", out.balance()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---------- A3: sweep order ----------
+    let mut t = Table::new(
+        "A3 — sweep order (iterations to tol=1e-13)",
+        &["p", "multiplicative", "red-black"],
+    );
+    let prob3 = problem(n, 300, ObsLayout::Uniform, 32);
+    for p in [2usize, 4, 8, 16] {
+        let part = Partition::uniform(n, p);
+        let mut iters = Vec::new();
+        for order in [SweepOrder::Multiplicative, SweepOrder::RedBlack] {
+            let opts = SchwarzOptions { order, ..SchwarzOptions::default() };
+            let out = schwarz_solve(&prob3, &part, &opts, &mut NativeLocalSolver)?;
+            assert!(out.converged);
+            iters.push(out.iters);
+        }
+        t.row(&[p.to_string(), iters[0].to_string(), iters[1].to_string()]);
+    }
+    println!("{}", t.render());
+
+    // ---------- A4: overlap / μ ----------
+    let mut t = Table::new(
+        "A4 — overlap & regularization (p=4): iterations and relative bias",
+        &["s", "mu", "iters", "rel bias vs exact"],
+    );
+    let prob4 = problem(n, 300, ObsLayout::Uniform, 33);
+    let want = prob4.solve_reference();
+    let part = Partition::uniform(n, 4);
+    let norm = dist2(&want, &vec![0.0; n]);
+    for (s, mu) in [(0usize, 0.0), (2, 1e-8), (2, 1e-4), (4, 1e-8), (8, 1e-8)] {
+        let opts = SchwarzOptions { overlap: s, mu, max_iters: 500, ..SchwarzOptions::default() };
+        let out = schwarz_solve(&prob4, &part, &opts, &mut NativeLocalSolver)?;
+        t.row(&[
+            s.to_string(),
+            format!("{mu:.0e}"),
+            out.iters.to_string(),
+            format!("{:.1e}", dist2(&out.x, &want) / norm),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---------- A5: backend comparison ----------
+    let mut t = Table::new(
+        "A5 — solver backend (n=256, m=180, p=4): wall time and error",
+        &["backend", "T^p_wall", "error vs reference"],
+    );
+    let prob5 = problem(256, 180, ObsLayout::Uniform, 34);
+    let want5 = prob5.solve_reference();
+    let part5 = Partition::uniform(256, 4);
+    let mut backends = vec![SolverBackend::Native, SolverBackend::Kf];
+    if runtime::artifacts_available(&runtime::default_artifacts_dir()) {
+        backends.push(SolverBackend::Pjrt);
+    }
+    for backend in backends {
+        let cfg = RunConfig { backend, ..RunConfig::default() };
+        let out = run_parallel(&prob5, &part5, &cfg)?;
+        t.row(&[
+            format!("{backend:?}"),
+            fmt_secs(out.t_total.as_secs_f64()),
+            format!("{:.1e}", dist2(&out.x, &want5)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    Ok(())
+}

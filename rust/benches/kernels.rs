@@ -1,0 +1,115 @@
+//! `cargo bench --bench kernels` — micro-benchmarks of the numeric
+//! substrates and the PJRT artifact path vs the native path, per shape
+//! bucket. This is the L3-side profile that drives the §Perf iteration
+//! log in EXPERIMENTS.md.
+
+use dydd_da::cls::{ClsProblem, StateOp};
+use dydd_da::ddkf::{LocalSolver, NativeLocalSolver};
+use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
+use dydd_da::graph::{laplacian_solve, Graph};
+use dydd_da::kf::sequential::rank1_update;
+use dydd_da::linalg::{Cholesky, Mat};
+use dydd_da::runtime::{self, PjrtLocalSolver};
+use dydd_da::util::{Rng, TimingStats};
+
+fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
+    let mut stats = TimingStats::default();
+    // Warmup.
+    std::hint::black_box(f());
+    for _ in 0..iters {
+        stats.time(|| std::hint::black_box(f()));
+    }
+    println!(
+        "{name:44} {:>10.3} ms  ±{:>8.3} ms   (n={})",
+        stats.mean() * 1e3,
+        stats.stddev() * 1e3,
+        stats.n()
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    println!("-- linalg substrate --");
+    for n in [128usize, 256, 512] {
+        let a = Mat::gaussian(2 * n, n, &mut rng);
+        let d: Vec<f64> = (0..2 * n).map(|_| rng.uniform() + 0.5).collect();
+        bench(&format!("weighted_gram {:>4}x{n}", 2 * n), 5, || a.weighted_gram(&d));
+        let mut g = a.weighted_gram(&d);
+        for i in 0..n {
+            g[(i, i)] += 1.0;
+        }
+        bench(&format!("cholesky {n}x{n}"), 5, || Cholesky::new(&g).unwrap());
+        let chol = Cholesky::new(&g).unwrap();
+        let b = rng.gaussian_vec(n);
+        bench(&format!("chol_solve {n}"), 20, || chol.solve(&b));
+    }
+
+    println!("\n-- KF rank-1 update --");
+    for n in [256usize, 512, 1024] {
+        let mut p = Mat::eye(n);
+        let mut x = rng.gaussian_vec(n);
+        let mut h = vec![0.0; n];
+        h[n / 2] = 1.0;
+        h[n / 3] = 0.5;
+        bench(&format!("rank1_update n={n}"), 10, || {
+            rank1_update(&mut x, &mut p, &h, 0.1, 1.0);
+        });
+    }
+
+    println!("\n-- DyDD scheduling (Laplacian solve) --");
+    for p in [8usize, 32, 128, 512] {
+        let g = Graph::chain(p);
+        let mut b: Vec<f64> = (0..p).map(|i| (i as f64) - (p as f64 - 1.0) / 2.0).collect();
+        let mean = b.iter().sum::<f64>() / p as f64;
+        for v in &mut b {
+            *v -= mean;
+        }
+        bench(&format!("laplacian_solve chain p={p}"), 20, || laplacian_solve(&g, &b).unwrap());
+    }
+
+    println!("\n-- local solve: native vs PJRT artifacts --");
+    let dir = runtime::default_artifacts_dir();
+    let have_artifacts = runtime::artifacts_available(&dir);
+    for (n, m) in [(256usize, 180usize), (512, 380)] {
+        let mesh = Mesh1d::new(n);
+        let mut r2 = Rng::new(7);
+        let obs = generators::generate(ObsLayout::Uniform, m, &mut r2);
+        let y0 = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+        let prob = ClsProblem::new(
+            mesh,
+            StateOp::Tridiag { main: 1.0, off: 0.15 },
+            y0,
+            vec![4.0; n],
+            obs,
+        );
+        let part = Partition::uniform(n, 4);
+        let blk = prob.local_block(&part, 1, 0);
+        let reg = vec![0.0; blk.n_loc()];
+        let zero = vec![0.0; blk.n_loc()];
+        let be = blk.b_eff(|_| 0.0);
+
+        let mut native = NativeLocalSolver;
+        bench(&format!("native assemble ({},{})", blk.m_loc(), blk.n_loc()), 5, || {
+            native.assemble(&blk, &reg).unwrap()
+        });
+        let f = native.assemble(&blk, &reg).unwrap();
+        bench(&format!("native solve    ({},{})", blk.m_loc(), blk.n_loc()), 10, || {
+            native.solve(&blk, &f, &be, &zero).unwrap()
+        });
+
+        if have_artifacts {
+            let mut pjrt = PjrtLocalSolver::new(dir.clone()).unwrap();
+            bench(&format!("pjrt   assemble ({},{})", blk.m_loc(), blk.n_loc()), 5, || {
+                pjrt.assemble(&blk, &reg).unwrap()
+            });
+            let fp = pjrt.assemble(&blk, &reg).unwrap();
+            bench(&format!("pjrt   solve    ({},{})", blk.m_loc(), blk.n_loc()), 10, || {
+                pjrt.solve(&blk, &fp, &be, &zero).unwrap()
+            });
+        }
+    }
+    if !have_artifacts {
+        println!("(artifacts missing — PJRT rows skipped; run `make artifacts`)");
+    }
+}

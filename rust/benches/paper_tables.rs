@@ -1,0 +1,30 @@
+//! `cargo bench --bench paper_tables` — regenerates **every table and
+//! figure** of the paper's §6 at benchmark scale and prints them.
+//!
+//! Scale: `DYDD_BENCH_FULL=1` uses the paper's exact parameters
+//! (n = 2048, m ∈ {1500, 2000, 1032}); the default uses n = 256 with m
+//! scaled by 1/8 so a full sweep stays interactive on this 1-core testbed.
+//! EXPERIMENTS.md records a full-scale run.
+
+use dydd_da::harness::{all_tables, render_table};
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var_os("DYDD_BENCH_FULL").is_some();
+    println!(
+        "== paper tables @ {} scale ==\n",
+        if full { "FULL (paper parameters, n=2048)" } else { "quick (n=256, m/8)" }
+    );
+    let t_all = Instant::now();
+    for id in all_tables() {
+        let t0 = Instant::now();
+        match render_table(id, full) {
+            Ok(t) => {
+                println!("{}", t.render());
+                println!("  [generated in {:.2}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("{id:?}: FAILED: {e:#}\n"),
+        }
+    }
+    println!("total: {:.1}s", t_all.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! The Constrained Least Squares model — the paper's prototype DA problem
+//! (§3.1): two stacked weighted overdetermined systems
+//!
+//! ```text
+//!   H0 x = y0   (state / background,  m0 x n)
+//!   H1 x = y1   (observations,        m1 x n)
+//! ```
+//!
+//! with weights R = diag(R0, R1) and solution
+//! x̂ = (AᵀRA)⁻¹ AᵀRb (eqs. 18-19).
+
+mod problem;
+mod state_op;
+
+pub use problem::{ClsProblem, LocalBlock};
+pub use state_op::StateOp;

@@ -1,0 +1,310 @@
+//! CLS problem assembly and local-block extraction (the DD-CLS restriction
+//! A|_{I_i} of Definition 3 / eq. 23, exploiting row sparsity).
+
+use super::state_op::StateOp;
+use crate::domain::{Mesh1d, ObservationSet, Partition};
+use crate::linalg::{Cholesky, Mat};
+
+/// A full CLS instance: state system (H0, y0, w0) + observations.
+///
+/// Weight convention: `w0[i]` and the observation weights are *inverse
+/// variances* (the diagonal of R in the paper's ‖·‖²_R norms).
+#[derive(Debug, Clone)]
+pub struct ClsProblem {
+    pub mesh: Mesh1d,
+    pub state: StateOp,
+    /// Background data y0 (length n).
+    pub y0: Vec<f64>,
+    /// State weights R0 diagonal (length n).
+    pub w0: Vec<f64>,
+    pub obs: ObservationSet,
+}
+
+impl ClsProblem {
+    pub fn new(
+        mesh: Mesh1d,
+        state: StateOp,
+        y0: Vec<f64>,
+        w0: Vec<f64>,
+        obs: ObservationSet,
+    ) -> Self {
+        assert_eq!(y0.len(), mesh.n());
+        assert_eq!(w0.len(), mesh.n());
+        assert!(w0.iter().all(|&w| w > 0.0), "state weights must be positive");
+        ClsProblem { mesh, state, y0, w0, obs }
+    }
+
+    pub fn n(&self) -> usize {
+        self.mesh.n()
+    }
+
+    /// m0: state rows (one per grid point).
+    pub fn m0(&self) -> usize {
+        self.mesh.n()
+    }
+
+    /// m1: observation rows.
+    pub fn m1(&self) -> usize {
+        self.obs.len()
+    }
+
+    pub fn m_total(&self) -> usize {
+        self.m0() + self.m1()
+    }
+
+    /// Sparse row r of the stacked system A = [H0; H1] as (col, coef)
+    /// pairs, plus its weight and datum.
+    pub fn sparse_row(&self, r: usize) -> (Vec<(usize, f64)>, f64, f64) {
+        let n = self.n();
+        if r < n {
+            (self.state.row(r, n), self.w0[r], self.y0[r])
+        } else {
+            let k = r - n;
+            let (j, wl, wr) = self.obs.interp_row(&self.mesh, k);
+            let row = if wr == 0.0 { vec![(j, wl)] } else { vec![(j, wl), (j + 1, wr)] };
+            (row, 1.0 / self.obs.variances[k], self.obs.values[k])
+        }
+    }
+
+    /// Dense (A, d, b) — reference/oracle paths only.
+    pub fn dense(&self) -> (Mat, Vec<f64>, Vec<f64>) {
+        let (m, n) = (self.m_total(), self.n());
+        let mut a = Mat::zeros(m, n);
+        let mut d = vec![0.0; m];
+        let mut b = vec![0.0; m];
+        for r in 0..m {
+            let (cols, w, y) = self.sparse_row(r);
+            for (j, v) in cols {
+                a[(r, j)] = v;
+            }
+            d[r] = w;
+            b[r] = y;
+        }
+        (a, d, b)
+    }
+
+    /// Global normal-equations solution x̂ = (AᵀRA)⁻¹AᵀRb (eq. 19) —
+    /// the reference every decomposed path is compared against.
+    pub fn solve_reference(&self) -> Vec<f64> {
+        let (a, d, b) = self.dense();
+        let g = a.weighted_gram(&d);
+        let rhs = a.at_db(&d, &b);
+        Cholesky::new(&g).expect("CLS normal matrix must be SPD").solve(&rhs)
+    }
+
+    /// Extract the local block for subdomain `i` of `part`, extended by
+    /// `overlap` columns into each neighbour (s of eqs. 21-22).
+    ///
+    /// Included rows: every row of A with at least one non-zero in the
+    /// (extended) column interval. Coefficients at columns outside the
+    /// interval become halo couplings (they multiply neighbour-owned
+    /// unknowns in b_eff = b − A_other x_other, eq. 24).
+    pub fn local_block(&self, part: &Partition, i: usize, overlap: usize) -> LocalBlock {
+        let (lo, hi) = part.interval_with_overlap(i, overlap);
+        let (own_lo, own_hi) = part.interval(i);
+        let n = self.n();
+        let nloc = hi - lo;
+        let bw = self.state.bandwidth();
+
+        let mut rows: Vec<usize> = Vec::new();
+        // State rows with support in [lo, hi): i ∈ [lo-bw, hi+bw) ∩ [0, n).
+        let s_lo = lo.saturating_sub(bw);
+        let s_hi = (hi + bw).min(n);
+        rows.extend(s_lo..s_hi);
+        // Observation rows with interpolation support in [lo, hi).
+        for k in 0..self.obs.len() {
+            let (j, _, wr) = self.obs.interp_row(&self.mesh, k);
+            let support_hi = if wr == 0.0 { j } else { j + 1 };
+            if support_hi >= lo && j < hi {
+                rows.push(n + k);
+            }
+        }
+
+        let m_loc = rows.len();
+        let mut a = Mat::zeros(m_loc, nloc);
+        let mut d = vec![0.0; m_loc];
+        let mut b = vec![0.0; m_loc];
+        let mut halo: Vec<(usize, usize, f64)> = Vec::new();
+        for (r_loc, &r) in rows.iter().enumerate() {
+            let (cols, w, y) = self.sparse_row(r);
+            d[r_loc] = w;
+            b[r_loc] = y;
+            for (j, v) in cols {
+                if (lo..hi).contains(&j) {
+                    a[(r_loc, j - lo)] = v;
+                } else {
+                    halo.push((r_loc, j, v));
+                }
+            }
+        }
+
+        LocalBlock {
+            col_lo: lo,
+            col_hi: hi,
+            own_lo,
+            own_hi,
+            a,
+            d,
+            b,
+            halo,
+            global_rows: rows,
+        }
+    }
+}
+
+/// The restriction of the CLS system to one subdomain's columns.
+#[derive(Debug, Clone)]
+pub struct LocalBlock {
+    /// Extended (with overlap) column interval [col_lo, col_hi).
+    pub col_lo: usize,
+    pub col_hi: usize,
+    /// Owned (no-overlap) interval [own_lo, own_hi) ⊆ [col_lo, col_hi).
+    pub own_lo: usize,
+    pub own_hi: usize,
+    /// m_loc x n_loc restricted matrix A|_{I_i}.
+    pub a: Mat,
+    /// Row weights (R diagonal).
+    pub d: Vec<f64>,
+    /// Row data b.
+    pub b: Vec<f64>,
+    /// Halo couplings: (local row, global column outside the interval,
+    /// coefficient).
+    pub halo: Vec<(usize, usize, f64)>,
+    /// Global row index of each local row (diagnostics/tests).
+    pub global_rows: Vec<usize>,
+}
+
+impl LocalBlock {
+    pub fn n_loc(&self) -> usize {
+        self.col_hi - self.col_lo
+    }
+
+    pub fn m_loc(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Distinct global columns referenced by halo couplings — the values a
+    /// worker must receive from its neighbours each Schwarz iteration.
+    pub fn halo_cols(&self) -> Vec<usize> {
+        let mut cols: Vec<usize> = self.halo.iter().map(|&(_, c, _)| c).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        cols
+    }
+
+    /// b_eff = b − A_other x_other (eq. 24): subtract halo contributions
+    /// given a lookup of neighbour-owned unknowns.
+    pub fn b_eff(&self, x_at: impl Fn(usize) -> f64) -> Vec<f64> {
+        let mut be = self.b.clone();
+        for &(r, c, v) in &self.halo {
+            be[r] -= v * x_at(c);
+        }
+        be
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::generators::{self, ObsLayout};
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    pub fn small_problem(n: usize, m: usize, seed: u64) -> ClsProblem {
+        let mesh = Mesh1d::new(n);
+        let mut rng = Rng::new(seed);
+        let obs = generators::generate(ObsLayout::Uniform, m, &mut rng);
+        let y0: Vec<f64> = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+        let w0 = vec![4.0; n];
+        ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, w0, obs)
+    }
+
+    #[test]
+    fn dense_shapes() {
+        let p = small_problem(32, 20, 1);
+        let (a, d, b) = p.dense();
+        assert_eq!(a.rows(), 52);
+        assert_eq!(a.cols(), 32);
+        assert_eq!(d.len(), 52);
+        assert_eq!(b.len(), 52);
+    }
+
+    #[test]
+    fn reference_solution_solves_normal_equations() {
+        let p = small_problem(24, 16, 2);
+        let x = p.solve_reference();
+        let (a, d, b) = p.dense();
+        let g = a.weighted_gram(&d);
+        let rhs = a.at_db(&d, &b);
+        assert!(dist2(&g.matvec(&x), &rhs) < 1e-9);
+    }
+
+    #[test]
+    fn local_blocks_partition_all_rows_with_support() {
+        let p = small_problem(40, 25, 3);
+        let part = Partition::uniform(40, 4);
+        let mut covered = vec![false; p.m_total()];
+        for i in 0..4 {
+            let blk = p.local_block(&part, i, 0);
+            assert_eq!(blk.n_loc(), 10);
+            for &r in &blk.global_rows {
+                covered[r] = true;
+            }
+            // Every local row must have at least one non-zero in-block coef.
+            for r_loc in 0..blk.m_loc() {
+                let nz = (0..blk.n_loc()).any(|c| blk.a[(r_loc, c)] != 0.0);
+                assert!(nz, "row {r_loc} of block {i} is all-zero");
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "some row belongs to no block");
+    }
+
+    #[test]
+    fn halo_matches_dense_coupling() {
+        // b_eff computed through halo couplings must equal the dense
+        // b − A_other x_other.
+        let p = small_problem(30, 18, 4);
+        let part = Partition::uniform(30, 3);
+        let (a, _d, b) = p.dense();
+        let mut rng = Rng::new(5);
+        let x_global = rng.gaussian_vec(30);
+        for i in 0..3 {
+            let blk = p.local_block(&part, i, 0);
+            let (lo, hi) = (blk.col_lo, blk.col_hi);
+            let be = blk.b_eff(|c| x_global[c]);
+            for (r_loc, &r) in blk.global_rows.iter().enumerate() {
+                let mut want = b[r];
+                for c in 0..30 {
+                    if !(lo..hi).contains(&c) {
+                        want -= a[(r, c)] * x_global[c];
+                    }
+                }
+                assert!((be[r_loc] - want).abs() < 1e-12, "block {i} row {r_loc}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_extends_columns() {
+        let p = small_problem(30, 10, 6);
+        let part = Partition::uniform(30, 3);
+        let blk = p.local_block(&part, 1, 2);
+        assert_eq!((blk.col_lo, blk.col_hi), (8, 22));
+        assert_eq!((blk.own_lo, blk.own_hi), (10, 20));
+    }
+
+    #[test]
+    fn halo_cols_only_near_boundaries() {
+        let p = small_problem(64, 30, 7);
+        let part = Partition::uniform(64, 4);
+        let blk = p.local_block(&part, 1, 0);
+        // Interval [16, 32); tridiag bw 1 + interp support 1 => halo cols
+        // within 2 of the boundary.
+        for c in blk.halo_cols() {
+            assert!(
+                (14..16).contains(&c) || (32..34).contains(&c),
+                "unexpected halo col {c}"
+            );
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! The state operator H0 — the discretized dynamic-model constraint of the
+//! CLS formulation.
+//!
+//! The paper treats H0 abstractly ("rewrite the state estimation problem
+//! as a CLS model"); we provide the structured operators a discretize-
+//! then-optimize pipeline actually produces, with explicit sparse row
+//! access so local blocks can be extracted without densifying.
+
+use crate::linalg::Mat;
+
+/// Structured n x n state operators.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StateOp {
+    /// H0 = I: pure background term (3D-Var-like).
+    Identity,
+    /// Tridiagonal smoothing/transport stencil: row i is
+    /// (off, main, off) at columns (i-1, i, i+1) — the discretization of a
+    /// 1-D diffusion/advection model constraint. Boundary rows truncate.
+    Tridiag { main: f64, off: f64 },
+}
+
+impl StateOp {
+    /// Non-zero entries (col, val) of row i, ascending by column.
+    pub fn row(&self, i: usize, n: usize) -> Vec<(usize, f64)> {
+        debug_assert!(i < n);
+        match *self {
+            StateOp::Identity => vec![(i, 1.0)],
+            StateOp::Tridiag { main, off } => {
+                let mut r = Vec::with_capacity(3);
+                if i > 0 {
+                    r.push((i - 1, off));
+                }
+                r.push((i, main));
+                if i + 1 < n {
+                    r.push((i + 1, off));
+                }
+                r
+            }
+        }
+    }
+
+    /// Column support half-width: rows within this distance of a column
+    /// interval can touch it.
+    pub fn bandwidth(&self) -> usize {
+        match self {
+            StateOp::Identity => 0,
+            StateOp::Tridiag { .. } => 1,
+        }
+    }
+
+    /// Dense n x n materialization (reference/oracle paths only).
+    pub fn to_dense(&self, n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for (j, v) in self.row(i, n) {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+
+    /// y = H0 x without materializing.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = x.len();
+        (0..n)
+            .map(|i| self.row(i, n).into_iter().map(|(j, v)| v * x[j]).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_rows() {
+        let op = StateOp::Identity;
+        assert_eq!(op.row(3, 8), vec![(3, 1.0)]);
+        assert_eq!(op.bandwidth(), 0);
+    }
+
+    #[test]
+    fn tridiag_truncates_at_boundaries() {
+        let op = StateOp::Tridiag { main: 2.0, off: -0.5 };
+        assert_eq!(op.row(0, 4), vec![(0, 2.0), (1, -0.5)]);
+        assert_eq!(op.row(3, 4), vec![(2, -0.5), (3, 2.0)]);
+        assert_eq!(op.row(1, 4), vec![(0, -0.5), (1, 2.0), (2, -0.5)]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let op = StateOp::Tridiag { main: 1.5, off: 0.25 };
+        let mut rng = Rng::new(1);
+        let x = rng.gaussian_vec(16);
+        let want = op.to_dense(16).matvec(&x);
+        assert!(dist2(&op.matvec(&x), &want) < 1e-14);
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration system: a TOML-subset parser (tables, strings, numbers,
+//! booleans, arrays — serde/toml are unavailable in this offline build) and
+//! the typed experiment configuration with validation.
+
+mod spec;
+mod toml;
+
+pub use spec::{ExperimentConfig, StateOpConfig, ValidationError};
+pub use toml::{parse_toml, TomlError, TomlValue};

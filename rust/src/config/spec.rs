@@ -1,0 +1,298 @@
+//! Typed experiment configuration with validation, loadable from TOML
+//! (`configs/*.toml`) or built programmatically.
+
+use super::toml::{parse_toml, TomlError, TomlValue};
+use crate::coordinator::SolverBackend;
+use crate::ddkf::{SchwarzOptions, SweepOrder};
+use crate::domain::ObsLayout;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// State-operator choice in configs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StateOpConfig {
+    Identity,
+    Tridiag { main: f64, off: f64 },
+}
+
+impl StateOpConfig {
+    pub fn build(&self) -> crate::cls::StateOp {
+        match *self {
+            StateOpConfig::Identity => crate::cls::StateOp::Identity,
+            StateOpConfig::Tridiag { main, off } => crate::cls::StateOp::Tridiag { main, off },
+        }
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Mesh size n.
+    pub n: usize,
+    /// Observation count m.
+    pub m: usize,
+    /// Subdomain / worker count p.
+    pub p: usize,
+    pub layout: ObsLayout,
+    pub state_op: StateOpConfig,
+    /// State weight (R0 diagonal).
+    pub state_weight: f64,
+    pub seed: u64,
+    pub schwarz: SchwarzOptions,
+    pub backend: SolverBackend,
+    pub artifacts_dir: PathBuf,
+    /// Run DyDD before solving.
+    pub dydd: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            n: 2048,
+            m: 1500,
+            p: 4,
+            layout: ObsLayout::Uniform,
+            state_op: StateOpConfig::Tridiag { main: 1.0, off: 0.15 },
+            state_weight: 4.0,
+            seed: 42,
+            schwarz: SchwarzOptions::default(),
+            backend: SolverBackend::Native,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            dydd: true,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ValidationError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error(transparent)]
+    Toml(#[from] TomlError),
+    #[error("config invalid: {0}")]
+    Invalid(String),
+}
+
+fn layout_from_str(s: &str) -> Option<ObsLayout> {
+    Some(match s.to_ascii_lowercase().as_str() {
+        "uniform" => ObsLayout::Uniform,
+        "ramp" => ObsLayout::Ramp,
+        "cluster" => ObsLayout::Cluster,
+        "two_clusters" | "twoclusters" => ObsLayout::TwoClusters,
+        "left_packed" | "leftpacked" => ObsLayout::LeftPacked,
+        _ => return None,
+    })
+}
+
+impl ExperimentConfig {
+    pub fn from_toml_str(text: &str) -> Result<Self, ValidationError> {
+        let t = parse_toml(text)?;
+        Self::from_table(&t)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self, ValidationError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|source| ValidationError::Io { path: path.to_path_buf(), source })?;
+        Self::from_toml_str(&text)
+    }
+
+    fn from_table(t: &BTreeMap<String, TomlValue>) -> Result<Self, ValidationError> {
+        let mut cfg = ExperimentConfig::default();
+        let bad = |k: &str| ValidationError::Invalid(format!("bad value for {k}"));
+        for (k, v) in t {
+            match k.as_str() {
+                "name" => cfg.name = v.as_str().ok_or_else(|| bad(k))?.to_string(),
+                "problem.n" => cfg.n = v.as_usize().ok_or_else(|| bad(k))?,
+                "problem.m" => cfg.m = v.as_usize().ok_or_else(|| bad(k))?,
+                "problem.p" => cfg.p = v.as_usize().ok_or_else(|| bad(k))?,
+                "problem.layout" => {
+                    cfg.layout = v
+                        .as_str()
+                        .and_then(layout_from_str)
+                        .ok_or_else(|| bad(k))?
+                }
+                "problem.seed" => cfg.seed = v.as_int().ok_or_else(|| bad(k))? as u64,
+                "problem.state_weight" => {
+                    cfg.state_weight = v.as_float().ok_or_else(|| bad(k))?
+                }
+                "problem.state_op" => {
+                    cfg.state_op = match v.as_str().ok_or_else(|| bad(k))? {
+                        "identity" => StateOpConfig::Identity,
+                        "tridiag" => StateOpConfig::Tridiag { main: 1.0, off: 0.15 },
+                        other => {
+                            return Err(ValidationError::Invalid(format!(
+                                "unknown state_op {other:?}"
+                            )))
+                        }
+                    }
+                }
+                "problem.tridiag_main" => {
+                    if let StateOpConfig::Tridiag { ref mut main, .. } = cfg.state_op {
+                        *main = v.as_float().ok_or_else(|| bad(k))?;
+                    }
+                }
+                "problem.tridiag_off" => {
+                    if let StateOpConfig::Tridiag { ref mut off, .. } = cfg.state_op {
+                        *off = v.as_float().ok_or_else(|| bad(k))?;
+                    }
+                }
+                "schwarz.overlap" => cfg.schwarz.overlap = v.as_usize().ok_or_else(|| bad(k))?,
+                "schwarz.mu" => cfg.schwarz.mu = v.as_float().ok_or_else(|| bad(k))?,
+                "schwarz.tol" => cfg.schwarz.tol = v.as_float().ok_or_else(|| bad(k))?,
+                "schwarz.max_iters" => {
+                    cfg.schwarz.max_iters = v.as_usize().ok_or_else(|| bad(k))?
+                }
+                "schwarz.order" => {
+                    cfg.schwarz.order = match v.as_str().ok_or_else(|| bad(k))? {
+                        "multiplicative" => SweepOrder::Multiplicative,
+                        "red_black" | "redblack" => SweepOrder::RedBlack,
+                        other => {
+                            return Err(ValidationError::Invalid(format!(
+                                "unknown sweep order {other:?}"
+                            )))
+                        }
+                    }
+                }
+                "run.backend" => {
+                    cfg.backend = v
+                        .as_str()
+                        .and_then(SolverBackend::parse)
+                        .ok_or_else(|| bad(k))?
+                }
+                "run.artifacts_dir" => {
+                    cfg.artifacts_dir = PathBuf::from(v.as_str().ok_or_else(|| bad(k))?)
+                }
+                "run.dydd" => cfg.dydd = v.as_bool().ok_or_else(|| bad(k))?,
+                other => {
+                    return Err(ValidationError::Invalid(format!("unknown key {other:?}")))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        let fail = |m: String| Err(ValidationError::Invalid(m));
+        if self.n < 4 {
+            return fail(format!("n = {} too small", self.n));
+        }
+        if self.p == 0 || self.p > self.n / 2 {
+            return fail(format!("p = {} out of range for n = {}", self.p, self.n));
+        }
+        if self.m == 0 {
+            return fail("m = 0: nothing to assimilate".into());
+        }
+        if self.state_weight <= 0.0 {
+            return fail("state_weight must be positive".into());
+        }
+        if self.schwarz.tol <= 0.0 || self.schwarz.max_iters == 0 {
+            return fail("bad schwarz tolerance/iteration budget".into());
+        }
+        if self.schwarz.mu < 0.0 {
+            return fail("mu must be >= 0".into());
+        }
+        if self.schwarz.overlap > self.n / (2 * self.p).max(1) {
+            return fail(format!(
+                "overlap {} exceeds half a subdomain (n/p = {})",
+                self.schwarz.overlap,
+                self.n / self.p
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build the CLS problem instance this config describes.
+    pub fn build_problem(&self) -> crate::cls::ClsProblem {
+        use crate::domain::{generators, Mesh1d};
+        let mesh = Mesh1d::new(self.n);
+        let mut rng = crate::util::Rng::new(self.seed);
+        let obs = generators::generate(self.layout, self.m, &mut rng);
+        let y0 = (0..self.n)
+            .map(|j| generators::field(j as f64 / (self.n - 1) as f64))
+            .collect();
+        crate::cls::ClsProblem::new(
+            mesh,
+            self.state_op.build(),
+            y0,
+            vec![self.state_weight; self.n],
+            obs,
+        )
+    }
+
+    /// The coordinator RunConfig slice of this experiment.
+    pub fn run_config(&self) -> crate::coordinator::RunConfig {
+        crate::coordinator::RunConfig {
+            schwarz: self.schwarz.clone(),
+            backend: self.backend,
+            artifacts_dir: self.artifacts_dir.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_from_toml() {
+        let text = r#"
+name = "table12"
+[problem]
+n = 512
+m = 300
+p = 8
+layout = "ramp"
+seed = 7
+[schwarz]
+overlap = 2
+mu = 1e-6
+[run]
+backend = "native"
+dydd = true
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.name, "table12");
+        assert_eq!((cfg.n, cfg.m, cfg.p), (512, 300, 8));
+        assert_eq!(cfg.layout, ObsLayout::Ramp);
+        assert_eq!(cfg.schwarz.overlap, 2);
+        assert_eq!(cfg.backend, SolverBackend::Native);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_toml_str("nonsense = 1").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_p() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.p = cfg.n; // too many subdomains
+        assert!(cfg.validate().is_err());
+        cfg.p = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_oversized_overlap() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.schwarz.overlap = cfg.n; // absurd
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn build_problem_matches_config() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 128;
+        cfg.m = 64;
+        let prob = cfg.build_problem();
+        assert_eq!(prob.n(), 128);
+        assert_eq!(prob.m1(), 64);
+    }
+}

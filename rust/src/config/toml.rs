@@ -1,0 +1,192 @@
+//! Minimal TOML-subset parser: `[table]` headers, `key = value` pairs with
+//! string / integer / float / boolean / homogeneous-array values, `#`
+//! comments. Enough for `configs/*.toml`; unknown syntax fails loudly.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse into `table.key -> value` (root keys have no prefix).
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut prefix = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated table header"))?;
+            let name = name.trim();
+            if name.is_empty() || name.contains('[') {
+                return Err(err("bad table name"));
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() || key.contains(' ') {
+            return Err(err("bad key"));
+        }
+        let value = parse_value(value.trim()).map_err(|m| err(&m))?;
+        out.insert(format!("{prefix}{key}"), value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote not supported".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<_>, _> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let text = r#"
+# experiment config
+name = "ex1"            # inline comment
+[problem]
+n = 2048
+mu = 1.5e-3
+layouts = ["uniform", "cluster"]
+sizes = [2, 4, 8]
+[run]
+parallel = true
+"#;
+        let t = parse_toml(text).unwrap();
+        assert_eq!(t["name"].as_str(), Some("ex1"));
+        assert_eq!(t["problem.n"].as_usize(), Some(2048));
+        assert_eq!(t["problem.mu"].as_float(), Some(1.5e-3));
+        assert_eq!(t["run.parallel"].as_bool(), Some(true));
+        assert_eq!(t["problem.sizes"].as_array().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn reports_line_numbers() {
+        let err = parse_toml("x = 1\ny 2").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse_toml("x = ").is_err());
+        assert!(parse_toml("x = \"open").is_err());
+        assert!(parse_toml("[t\nx = 1").is_err());
+        assert!(parse_toml("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let t = parse_toml("big = 1_000_000").unwrap();
+        assert_eq!(t["big"].as_int(), Some(1_000_000));
+    }
+}

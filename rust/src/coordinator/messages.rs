@@ -1,0 +1,59 @@
+//! Leader <-> worker message types.
+
+use crate::cls::LocalBlock;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which local solver workers instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverBackend {
+    /// Rust-native Cholesky (default; no artifacts needed).
+    Native,
+    /// Local VAR-KF rank-1 processing (the paper's DD-KF local method).
+    Kf,
+    /// AOT XLA artifacts through PJRT (one engine per worker thread; the
+    /// engine's compile cache persists for the worker's lifetime, so
+    /// pooled workers amortize compilation across epochs).
+    Pjrt,
+}
+
+impl SolverBackend {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "native" => SolverBackend::Native,
+            "kf" => SolverBackend::Kf,
+            "pjrt" | "xla" => SolverBackend::Pjrt,
+            _ => return None,
+        })
+    }
+}
+
+/// Per-epoch subdomain assignment (a new DyDD epoch re-sends this).
+pub struct EpochSetup {
+    pub blk: LocalBlock,
+    /// Diagonal regularization (μ on overlap columns, 0 elsewhere).
+    pub reg: Vec<f64>,
+    /// Global columns carrying μ (for reg_rhs = μ·x_other).
+    pub reg_cols: Vec<usize>,
+    pub mu: f64,
+}
+
+/// Leader -> worker.
+pub enum ToWorker {
+    /// (Re-)assign a subdomain: extract factor, then serve solves.
+    Setup(Box<EpochSetup>),
+    /// Solve the local problem against this global-iterate snapshot.
+    Solve { x: Arc<Vec<f64>> },
+    /// End of run.
+    Shutdown,
+}
+
+/// Worker -> leader.
+pub enum ToLeader {
+    /// Assembly (factorization) finished.
+    Ready { worker: usize, assemble_time: Duration },
+    /// One local solve finished.
+    Solution { worker: usize, x_loc: Vec<f64>, solve_time: Duration },
+    /// Unrecoverable worker error.
+    Failed { worker: usize, error: String },
+}

@@ -1,0 +1,40 @@
+//! The L3 coordinator: leader/worker SPMD execution of DD-KF.
+//!
+//! One OS thread per subdomain (the paper's "processing units"); the
+//! leader runs DyDD, distributes local blocks, sequences red-black Schwarz
+//! phases and checks convergence. Workers own their local factorization
+//! and solve against leader-broadcast iterate snapshots.
+//!
+//! Backend selection ([`SolverBackend`]): `Native` (rust Cholesky — true
+//! SPMD scaling, the default for the speedup tables), `Kf` (local VAR-KF),
+//! `Pjrt` (the AOT XLA artifacts; each worker thread owns its own PJRT
+//! engine because the `xla` client is thread-bound).
+
+mod leader;
+mod messages;
+mod worker;
+
+pub use leader::{run_parallel, ParallelOutcome, WorkerPool};
+pub use messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
+
+use crate::ddkf::SchwarzOptions;
+use std::path::PathBuf;
+
+/// Full configuration of a parallel DD-KF run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub schwarz: SchwarzOptions,
+    pub backend: SolverBackend,
+    /// Artifacts directory for the Pjrt backend.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            schwarz: SchwarzOptions::default(),
+            backend: SolverBackend::Native,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}

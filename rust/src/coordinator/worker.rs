@@ -1,0 +1,94 @@
+//! Worker loop: a persistent thread that accepts per-epoch subdomain
+//! assignments (Setup), factors once, then serves Solve requests.
+//!
+//! Workers outlive epochs: for the Pjrt backend the thread-local engine's
+//! executable cache persists across Setup messages, so artifact
+//! compilation is paid once per (bucket, worker), not once per epoch.
+
+use super::messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
+use crate::ddkf::{KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver};
+use crate::runtime::PjrtLocalSolver;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Worker identity + backend choice (fixed for the thread's lifetime).
+pub struct WorkerInit {
+    pub id: usize,
+    pub backend: SolverBackend,
+    pub artifacts_dir: PathBuf,
+}
+
+/// The worker body. All errors are reported to the leader, not panicked.
+pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader>) {
+    let fail = |tx: &Sender<ToLeader>, error: String| {
+        let _ = tx.send(ToLeader::Failed { worker: init.id, error });
+    };
+
+    let mut solver: Box<dyn LocalSolver> = match init.backend {
+        SolverBackend::Native => Box::new(NativeLocalSolver),
+        SolverBackend::Kf => Box::new(KfLocalSolver),
+        SolverBackend::Pjrt => match PjrtLocalSolver::new(init.artifacts_dir.clone()) {
+            Ok(s) => Box::new(s),
+            Err(e) => {
+                fail(&tx, format!("pjrt init: {e}"));
+                return;
+            }
+        },
+    };
+
+    // Current epoch state.
+    let mut epoch: Option<(EpochSetup, LocalFactor, Vec<f64>)> = None;
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Shutdown => break,
+            ToWorker::Setup(setup) => {
+                let t0 = Instant::now();
+                match solver.assemble(&setup.blk, &setup.reg) {
+                    Ok(factor) => {
+                        let reg_rhs = vec![0.0; setup.blk.n_loc()];
+                        epoch = Some((*setup, factor, reg_rhs));
+                        if tx
+                            .send(ToLeader::Ready {
+                                worker: init.id,
+                                assemble_time: t0.elapsed(),
+                            })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        fail(&tx, format!("assemble: {e}"));
+                        return;
+                    }
+                }
+            }
+            ToWorker::Solve { x } => {
+                let Some((setup, factor, reg_rhs)) = epoch.as_mut() else {
+                    fail(&tx, "Solve before Setup".into());
+                    return;
+                };
+                let t0 = Instant::now();
+                let b_eff = setup.blk.b_eff(|c| x[c]);
+                for &gc in &setup.reg_cols {
+                    reg_rhs[gc - setup.blk.col_lo] = setup.mu * x[gc];
+                }
+                match solver.solve(&setup.blk, factor, &b_eff, reg_rhs) {
+                    Ok(x_loc) => {
+                        let _ = tx.send(ToLeader::Solution {
+                            worker: init.id,
+                            x_loc,
+                            solve_time: t0.elapsed(),
+                        });
+                    }
+                    Err(e) => {
+                        fail(&tx, format!("solve: {e}"));
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}

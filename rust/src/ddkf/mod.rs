@@ -1,0 +1,15 @@
+//! DD-KF: the Domain-Decomposition solver for CLS (paper §4).
+//!
+//! The unknown index set is split into contiguous intervals (optionally
+//! overlapping, eqs. 21-22); each subdomain repeatedly solves its local
+//! regularized problem (eqs. 25-27) against the latest neighbour values
+//! (alternating Schwarz, eq. 24), and the global estimate is reconstructed
+//! per eq. 28. With zero overlap this is exact block Gauss–Seidel on the
+//! normal equations and converges to the global CLS solution — the paper's
+//! error_DD-DA ≈ 1e-11 (Table 11).
+
+mod local;
+pub(crate) mod schwarz;
+
+pub use local::{KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver};
+pub use schwarz::{schwarz_solve, SchwarzOptions, SchwarzOutcome, SweepOrder};

@@ -1,0 +1,295 @@
+//! The alternating-Schwarz iteration (eq. 24) over a partitioned CLS
+//! problem — sequential driver (the threaded version lives in
+//! `coordinator`; both share the per-subdomain state here).
+
+use super::local::{LocalFactor, LocalSolver};
+use crate::cls::{ClsProblem, LocalBlock};
+use crate::domain::Partition;
+
+/// Sweep ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepOrder {
+    /// In-order multiplicative Schwarz (the paper's alternating form).
+    Multiplicative,
+    /// Red-black (even subdomains, then odd): each colour class is
+    /// embarrassingly parallel on a chain partition while preserving
+    /// Gauss–Seidel-grade convergence — this is what the coordinator runs.
+    RedBlack,
+}
+
+/// Iteration controls.
+#[derive(Debug, Clone)]
+pub struct SchwarzOptions {
+    /// Overlap s (columns) of eqs. 21-22.
+    pub overlap: usize,
+    /// Regularization weight μ on overlap columns (eqs. 25-26).
+    pub mu: f64,
+    /// Relative convergence tolerance on the global update norm.
+    pub tol: f64,
+    pub max_iters: usize,
+    pub order: SweepOrder,
+}
+
+impl Default for SchwarzOptions {
+    fn default() -> Self {
+        SchwarzOptions {
+            overlap: 0,
+            mu: 0.0,
+            tol: 1e-13,
+            max_iters: 200,
+            order: SweepOrder::Multiplicative,
+        }
+    }
+}
+
+/// Result of a Schwarz solve.
+#[derive(Debug, Clone)]
+pub struct SchwarzOutcome {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub converged: bool,
+    /// Per-iteration global update norms (diagnostics / convergence plots).
+    pub update_norms: Vec<f64>,
+}
+
+/// Per-subdomain persistent state for the iteration.
+pub(crate) struct SubdomainState {
+    pub blk: LocalBlock,
+    pub reg_cols: Vec<usize>, // global columns carrying μ (overlap cols)
+    pub factor: LocalFactor,
+}
+
+pub(crate) fn build_states<S: LocalSolver>(
+    prob: &ClsProblem,
+    part: &Partition,
+    opts: &SchwarzOptions,
+    solver: &mut S,
+) -> anyhow::Result<Vec<SubdomainState>> {
+    let p = part.p();
+    let mut states = Vec::with_capacity(p);
+    for i in 0..p {
+        let blk = prob.local_block(part, i, opts.overlap);
+        let nloc = blk.n_loc();
+        let mut reg = vec![0.0; nloc];
+        let mut reg_cols = Vec::new();
+        if opts.overlap > 0 && opts.mu > 0.0 {
+            // μ on the extension columns (the overlap region I_{i,j}).
+            for (c, r) in reg.iter_mut().enumerate() {
+                let gc = blk.col_lo + c;
+                if gc < blk.own_lo || gc >= blk.own_hi {
+                    *r = opts.mu;
+                    reg_cols.push(gc);
+                }
+            }
+        }
+        let factor = solver.assemble(&blk, &reg)?;
+        states.push(SubdomainState { blk, reg_cols, factor });
+    }
+    Ok(states)
+}
+
+/// Solve one subdomain against the current global iterate and return its
+/// local solution (length n_loc of the extended interval).
+pub(crate) fn local_sweep<S: LocalSolver>(
+    state: &SubdomainState,
+    x_global: &[f64],
+    mu: f64,
+    solver: &mut S,
+) -> anyhow::Result<Vec<f64>> {
+    let blk = &state.blk;
+    let b_eff = blk.b_eff(|c| x_global[c]);
+    // reg_rhs: μ·x_other on overlap columns (the O_{1,2} coupling of
+    // eqs. 25-26 — pulls the local overlap values towards the neighbour's
+    // current estimate), zero elsewhere.
+    let mut reg_rhs = vec![0.0; blk.n_loc()];
+    for &gc in &state.reg_cols {
+        reg_rhs[gc - blk.col_lo] = mu * x_global[gc];
+    }
+    solver.solve(blk, &state.factor, &b_eff, &reg_rhs)
+}
+
+/// Write a local solution into the global iterate. Owned region is copied;
+/// with overlap, the overlap region is blended 50/50 with the incumbent
+/// value (the symmetric special case of eq. 28's μ/2-average).
+pub(crate) fn write_back(blk: &LocalBlock, x_loc: &[f64], x_global: &mut [f64]) {
+    for (c, &v) in x_loc.iter().enumerate() {
+        let gc = blk.col_lo + c;
+        if gc >= blk.own_lo && gc < blk.own_hi {
+            x_global[gc] = v;
+        } else {
+            x_global[gc] = 0.5 * (x_global[gc] + v);
+        }
+    }
+}
+
+/// Sequential DD-KF solve: iterate local solves until the global update
+/// norm drops below tol·(1 + ‖x‖).
+pub fn schwarz_solve<S: LocalSolver>(
+    prob: &ClsProblem,
+    part: &Partition,
+    opts: &SchwarzOptions,
+    solver: &mut S,
+) -> anyhow::Result<SchwarzOutcome> {
+    let n = prob.n();
+    let mut states = build_states(prob, part, opts, solver)?;
+    let mut x = vec![0.0; n];
+    let mut update_norms = Vec::new();
+    let mut converged = false;
+    let mut iters = 0;
+
+    let order: Vec<usize> = match opts.order {
+        SweepOrder::Multiplicative => (0..part.p()).collect(),
+        SweepOrder::RedBlack => {
+            let mut v: Vec<usize> = (0..part.p()).step_by(2).collect();
+            v.extend((1..part.p()).step_by(2));
+            v
+        }
+    };
+
+    while iters < opts.max_iters {
+        let x_prev = x.clone();
+        for &i in &order {
+            let x_loc = local_sweep(&states[i], &x, opts.mu, solver)?;
+            write_back(&states[i].blk, &x_loc, &mut x);
+        }
+        iters += 1;
+        let mut diff = 0.0f64;
+        let mut norm = 0.0f64;
+        for (a, b) in x.iter().zip(&x_prev) {
+            diff += (a - b) * (a - b);
+            norm += a * a;
+        }
+        let rel = diff.sqrt() / (1.0 + norm.sqrt());
+        update_norms.push(rel);
+        // Effective tolerance: tol, floored at the f64 roundoff level of
+        // recomputing local solves at this problem size (below it the
+        // update norm is fp noise and the iteration has converged).
+        let floor = 64.0 * f64::EPSILON * (n as f64).sqrt();
+        if rel < opts.tol.max(floor) {
+            converged = true;
+            break;
+        }
+        // Stall backstop: if the update norm has stopped decreasing for a
+        // full window, we are at the fixed point's noise plateau.
+        if update_norms.len() >= 12 {
+            let w = update_norms.len();
+            let recent = update_norms[w - 6..].iter().cloned().fold(f64::INFINITY, f64::min);
+            let prior =
+                update_norms[w - 12..w - 6].iter().cloned().fold(f64::INFINITY, f64::min);
+            if recent >= prior * 0.95 {
+                converged = rel < 1e-8;
+                break;
+            }
+        }
+    }
+    // Drop factors explicitly (runtime solvers may hold device buffers).
+    states.clear();
+    Ok(SchwarzOutcome { x, iters, converged, update_norms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cls::StateOp;
+    use crate::ddkf::local::{KfLocalSolver, NativeLocalSolver};
+    use crate::domain::generators::{self, ObsLayout};
+    use crate::domain::Mesh1d;
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    fn problem(n: usize, m: usize, seed: u64) -> ClsProblem {
+        let mesh = Mesh1d::new(n);
+        let mut rng = Rng::new(seed);
+        let obs = generators::generate(ObsLayout::Uniform, m, &mut rng);
+        let y0 = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+        ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![4.0; n], obs)
+    }
+
+    #[test]
+    fn converges_to_reference_no_overlap() {
+        // The paper's error_DD-DA ≈ 1e-11 claim (Table 11), in miniature.
+        let prob = problem(64, 50, 1);
+        let want = prob.solve_reference();
+        for p in [2usize, 4, 8] {
+            let part = Partition::uniform(64, p);
+            let out = schwarz_solve(
+                &prob,
+                &part,
+                &SchwarzOptions::default(),
+                &mut NativeLocalSolver,
+            )
+            .unwrap();
+            assert!(out.converged, "p={p} iters={}", out.iters);
+            let err = dist2(&out.x, &want);
+            assert!(err < 1e-10, "p={p}: error_DD-DA = {err:e}");
+        }
+    }
+
+    #[test]
+    fn red_black_matches_multiplicative_fixed_point() {
+        let prob = problem(48, 40, 2);
+        let part = Partition::uniform(48, 4);
+        let mut opts = SchwarzOptions::default();
+        let a = schwarz_solve(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+        opts.order = SweepOrder::RedBlack;
+        let b = schwarz_solve(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+        assert!(a.converged && b.converged);
+        assert!(dist2(&a.x, &b.x) < 1e-9);
+    }
+
+    #[test]
+    fn kf_local_solver_reaches_same_solution() {
+        let prob = problem(40, 32, 3);
+        let part = Partition::uniform(40, 4);
+        let want = prob.solve_reference();
+        let out =
+            schwarz_solve(&prob, &part, &SchwarzOptions::default(), &mut KfLocalSolver).unwrap();
+        assert!(out.converged);
+        assert!(dist2(&out.x, &want) < 1e-9);
+    }
+
+    #[test]
+    fn overlap_with_regularization_converges_close() {
+        let prob = problem(64, 50, 4);
+        let want = prob.solve_reference();
+        let part = Partition::uniform(64, 4);
+        let opts = SchwarzOptions {
+            overlap: 3,
+            mu: 1e-6,
+            tol: 1e-12,
+            max_iters: 300,
+            order: SweepOrder::Multiplicative,
+        };
+        let out = schwarz_solve(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+        assert!(out.converged);
+        // μ > 0 perturbs the fixed point slightly (regularization bias).
+        let err = dist2(&out.x, &want) / dist2(&want, &vec![0.0; 64]);
+        assert!(err < 1e-4, "relative bias {err:e}");
+    }
+
+    #[test]
+    fn update_norms_decrease_geometrically() {
+        let prob = problem(48, 30, 5);
+        let part = Partition::uniform(48, 4);
+        let out =
+            schwarz_solve(&prob, &part, &SchwarzOptions::default(), &mut NativeLocalSolver)
+                .unwrap();
+        let norms = &out.update_norms;
+        assert!(norms.len() >= 3);
+        // Later iterations must contract vs the first.
+        assert!(norms[norms.len() - 2] < norms[0]);
+    }
+
+    #[test]
+    fn unbalanced_partition_still_exact() {
+        // DyDD moves boundaries; correctness must be partition-independent.
+        let prob = problem(60, 45, 6);
+        let want = prob.solve_reference();
+        let part = Partition::from_bounds(60, vec![0, 7, 23, 41, 60]);
+        let out =
+            schwarz_solve(&prob, &part, &SchwarzOptions::default(), &mut NativeLocalSolver)
+                .unwrap();
+        assert!(out.converged);
+        assert!(dist2(&out.x, &want) < 1e-10);
+    }
+}

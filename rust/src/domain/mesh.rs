@@ -1,0 +1,66 @@
+//! 1-D spatial mesh over [0, 1].
+
+/// Uniform 1-D mesh with `n` grid points x_j = j / (n-1).
+///
+/// The CLS unknown vector x ∈ R^n lives on these points; observation
+/// locations are continuous coordinates in [0, 1] mapped to the nearest
+/// grid point for the (point-evaluation) observation operator H_1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mesh1d {
+    n: usize,
+}
+
+impl Mesh1d {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "mesh needs at least 2 points");
+        Mesh1d { n }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn spacing(&self) -> f64 {
+        1.0 / (self.n - 1) as f64
+    }
+
+    /// Coordinate of grid point j.
+    #[inline]
+    pub fn coord(&self, j: usize) -> f64 {
+        debug_assert!(j < self.n);
+        j as f64 * self.spacing()
+    }
+
+    /// Nearest grid point to coordinate x ∈ [0, 1].
+    #[inline]
+    pub fn nearest(&self, x: f64) -> usize {
+        let j = (x.clamp(0.0, 1.0) / self.spacing()).round() as usize;
+        j.min(self.n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let m = Mesh1d::new(101);
+        assert_eq!(m.coord(0), 0.0);
+        assert!((m.coord(100) - 1.0).abs() < 1e-15);
+        for j in [0usize, 1, 50, 99, 100] {
+            assert_eq!(m.nearest(m.coord(j)), j);
+        }
+    }
+
+    #[test]
+    fn nearest_clamps() {
+        let m = Mesh1d::new(11);
+        assert_eq!(m.nearest(-0.3), 0);
+        assert_eq!(m.nearest(1.7), 10);
+        assert_eq!(m.nearest(0.449), 4);
+        assert_eq!(m.nearest(0.451), 5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Spatial domain, partitioning and observations.
+//!
+//! The paper decomposes Ω along space (and time); load is the number of
+//! observations per subdomain (Remark 5). This module provides the 1-D
+//! mesh, contiguous-interval partitions (whose column index sets feed the
+//! DD-CLS decomposition of §4), observation sets with spatial locations,
+//! and the workload census DyDD balances.
+
+pub mod generators;
+pub mod mesh;
+pub mod observations;
+pub mod partition;
+
+pub use generators::ObsLayout;
+pub use mesh::Mesh1d;
+pub use observations::ObservationSet;
+pub use partition::Partition;

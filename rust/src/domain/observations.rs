@@ -1,0 +1,128 @@
+//! Observation sets: spatial locations, data values and error variances.
+//!
+//! Observations are point measurements y_k = u(x_k) + v_k at continuous
+//! locations; the observation operator H_1 maps each to linear
+//! interpolation between its two bracketing grid points (so each row of
+//! H_1 has at most 2 non-zeros — the sparse structure that makes the
+//! per-subdomain row census meaningful, cf. Remark 5).
+
+use super::mesh::Mesh1d;
+use super::partition::Partition;
+
+/// A set of point observations on [0, 1].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObservationSet {
+    /// Locations, kept sorted ascending.
+    pub locs: Vec<f64>,
+    /// Data values y_k (same order as locs).
+    pub values: Vec<f64>,
+    /// Error variances r_k > 0.
+    pub variances: Vec<f64>,
+}
+
+impl ObservationSet {
+    pub fn new(mut triples: Vec<(f64, f64, f64)>) -> Self {
+        triples.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut s = ObservationSet::default();
+        for (l, v, r) in triples {
+            assert!(r > 0.0, "variance must be positive");
+            s.locs.push(l);
+            s.values.push(v);
+            s.variances.push(r);
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.locs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.locs.is_empty()
+    }
+
+    /// Grid index (nearest point) of each observation.
+    pub fn grid_indices(&self, mesh: &Mesh1d) -> Vec<usize> {
+        self.locs.iter().map(|&x| mesh.nearest(x)).collect()
+    }
+
+    /// Observation census per subdomain: l(i) = #observations whose
+    /// location falls in subdomain i — the workload DyDD balances.
+    pub fn census(&self, mesh: &Mesh1d, part: &Partition) -> Vec<usize> {
+        let mut counts = vec![0usize; part.p()];
+        for &x in &self.locs {
+            counts[part.owner(mesh.nearest(x))] += 1;
+        }
+        counts
+    }
+
+    /// Indices (into this set) of observations inside subdomain i.
+    pub fn in_subdomain(&self, mesh: &Mesh1d, part: &Partition, i: usize) -> Vec<usize> {
+        let (lo, hi) = part.interval(i);
+        (0..self.len())
+            .filter(|&k| {
+                let g = mesh.nearest(self.locs[k]);
+                g >= lo && g < hi
+            })
+            .collect()
+    }
+
+    /// Interpolation row of H_1 for observation k: (left grid index,
+    /// weight_left, weight_right). weight_right = 0 at the last grid point.
+    pub fn interp_row(&self, mesh: &Mesh1d, k: usize) -> (usize, f64, f64) {
+        let x = self.locs[k].clamp(0.0, 1.0);
+        let h = mesh.spacing();
+        let j = ((x / h).floor() as usize).min(mesh.n() - 2);
+        let t = (x - mesh.coord(j)) / h;
+        (j, 1.0 - t, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(locs: &[f64]) -> ObservationSet {
+        ObservationSet::new(locs.iter().map(|&l| (l, 1.0, 0.1)).collect())
+    }
+
+    #[test]
+    fn kept_sorted() {
+        let s = set(&[0.9, 0.1, 0.5]);
+        assert_eq!(s.locs, vec![0.1, 0.5, 0.9]);
+    }
+
+    #[test]
+    fn census_counts_by_owner() {
+        let mesh = Mesh1d::new(101);
+        let part = Partition::from_bounds(101, vec![0, 50, 101]);
+        let s = set(&[0.1, 0.2, 0.3, 0.7, 0.9]);
+        assert_eq!(s.census(&mesh, &part), vec![3, 2]);
+    }
+
+    #[test]
+    fn in_subdomain_matches_census() {
+        let mesh = Mesh1d::new(101);
+        let part = Partition::from_bounds(101, vec![0, 30, 70, 101]);
+        let s = set(&[0.05, 0.25, 0.31, 0.5, 0.65, 0.71, 0.99]);
+        let census = s.census(&mesh, &part);
+        for i in 0..3 {
+            assert_eq!(s.in_subdomain(&mesh, &part, i).len(), census[i]);
+        }
+    }
+
+    #[test]
+    fn interp_row_weights_sum_to_one() {
+        let mesh = Mesh1d::new(11);
+        let s = set(&[0.0, 0.234, 0.5, 1.0]);
+        for k in 0..s.len() {
+            let (j, wl, wr) = s.interp_row(&mesh, k);
+            assert!(j + 1 < 11);
+            assert!((wl + wr - 1.0).abs() < 1e-12);
+            assert!(wl >= 0.0 && wr >= 0.0);
+            // Interpolating the linear function f(x) = x recovers the location.
+            let x = wl * mesh.coord(j) + wr * mesh.coord(j + 1);
+            assert!((x - s.locs[k]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Contiguous-interval partition of the unknown index set I = {0, …, n−1}.
+//!
+//! This is the DD step of §4.2: subdomain i owns columns
+//! [bounds[i], bounds[i+1]), optionally extended by `overlap` indices into
+//! each neighbour (the sets I_1, I_2 and I_{1,2} of eqs. 21-22,
+//! generalized to p subdomains on a chain). DyDD's migration step moves
+//! the interior bounds.
+
+use crate::graph::Graph;
+
+/// Partition of {0, …, n−1} into p contiguous, non-empty intervals.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    n: usize,
+    /// p+1 monotone bounds with bounds[0] = 0, bounds[p] = n.
+    bounds: Vec<usize>,
+}
+
+impl Partition {
+    /// Uniform partition (the paper's initial DD: n_loc = n / p).
+    pub fn uniform(n: usize, p: usize) -> Self {
+        assert!(p >= 1 && n >= p, "need n >= p >= 1");
+        let bounds = (0..=p).map(|i| i * n / p).collect();
+        Partition { n, bounds }
+    }
+
+    /// Partition from explicit interior bounds.
+    pub fn from_bounds(n: usize, bounds: Vec<usize>) -> Self {
+        assert!(bounds.len() >= 2);
+        assert_eq!(bounds[0], 0);
+        assert_eq!(*bounds.last().unwrap(), n);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "empty or unordered interval");
+        Partition { n, bounds }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn p(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Column interval [lo, hi) of subdomain i (the index set I_i, eq. 21,
+    /// without overlap).
+    pub fn interval(&self, i: usize) -> (usize, usize) {
+        (self.bounds[i], self.bounds[i + 1])
+    }
+
+    /// Interval extended by `overlap` indices into each neighbour — the
+    /// overlapping sets of eq. 21 with s = overlap.
+    pub fn interval_with_overlap(&self, i: usize, overlap: usize) -> (usize, usize) {
+        let (lo, hi) = self.interval(i);
+        (lo.saturating_sub(overlap), (hi + overlap).min(self.n))
+    }
+
+    pub fn size(&self, i: usize) -> usize {
+        self.bounds[i + 1] - self.bounds[i]
+    }
+
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// Which subdomain owns column j.
+    pub fn owner(&self, j: usize) -> usize {
+        debug_assert!(j < self.n);
+        // bounds is sorted; find the last bound <= j.
+        match self.bounds.binary_search(&j) {
+            Ok(i) => i.min(self.p() - 1),
+            Err(i) => i - 1,
+        }
+    }
+
+    /// The induced adjacency graph: a chain (interval i touches i±1).
+    pub fn induced_graph(&self) -> Graph {
+        Graph::chain(self.p())
+    }
+
+    /// Move the bound between subdomains i and i+1 by `delta` columns
+    /// (positive: i grows rightwards). Clamped so no interval empties;
+    /// returns the applied (possibly clamped) delta.
+    pub fn shift_bound(&mut self, i: usize, delta: isize) -> isize {
+        assert!(i + 1 < self.bounds.len() - 0 && i + 1 <= self.p() - 0);
+        assert!(i < self.p() - 1, "no bound to the right of the last subdomain");
+        let b = self.bounds[i + 1] as isize;
+        let lo = (self.bounds[i] + 1) as isize; // keep interval i non-empty
+        let hi = (self.bounds[i + 2] - 1) as isize; // keep interval i+1 non-empty
+        let nb = (b + delta).clamp(lo, hi);
+        self.bounds[i + 1] = nb as usize;
+        nb - b
+    }
+
+    /// Partition whose interior bounds are chosen so that subdomain i
+    /// contains as close to `targets[i]` of the sorted grid locations as is
+    /// realizable (DyDD's update step in geometric mode: boundaries realize
+    /// a prescribed observation census).
+    ///
+    /// Exactness caveat: several observations can share a grid point; a
+    /// boundary cannot split them, so the realized census can deviate from
+    /// the target by up to the largest grid-point multiplicity. The caller
+    /// reads the realized census back off the returned partition.
+    pub fn from_targets(n: usize, locs_sorted_grid: &[usize], targets: &[usize]) -> Self {
+        let p = targets.len();
+        assert!(p >= 1);
+        assert_eq!(targets.iter().sum::<usize>(), locs_sorted_grid.len());
+        debug_assert!(locs_sorted_grid.windows(2).all(|w| w[0] <= w[1]), "locs not sorted");
+        let m = locs_sorted_grid.len();
+        // count(< b) for a boundary b.
+        let count_below = |b: usize| locs_sorted_grid.partition_point(|&g| g < b);
+
+        let mut bounds = Vec::with_capacity(p + 1);
+        bounds.push(0usize);
+        let mut cum = 0usize;
+        for (i, &t) in targets.iter().enumerate().take(p - 1) {
+            cum += t;
+            let remaining = p - 1 - i; // subdomains still needing >= 1 column
+            let lo = bounds[i] + 1;
+            let hi = n - remaining;
+            let mut b = if cum == 0 {
+                lo
+            } else if cum >= m {
+                hi
+            } else {
+                let u = locs_sorted_grid[cum - 1]; // last obs of subdomain i
+                let v = locs_sorted_grid[cum]; // first obs of subdomain i+1
+                if u < v {
+                    // Any b in (u, v] realizes the cumulative target exactly;
+                    // split the gap in the middle.
+                    u + 1 + (v - 1 - u) / 2
+                } else {
+                    // Tie at grid point u: send the whole tie group to
+                    // whichever side lands closer to the target.
+                    let below = count_below(u); // tie group -> right side
+                    let above = count_below(u + 1); // tie group -> left side
+                    if cum.abs_diff(below) <= cum.abs_diff(above) {
+                        u
+                    } else {
+                        u + 1
+                    }
+                }
+            };
+            b = b.clamp(lo, hi);
+            bounds.push(b);
+        }
+        bounds.push(n);
+        Partition::from_bounds(n, bounds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_covers_exactly() {
+        let part = Partition::uniform(2048, 32);
+        assert_eq!(part.p(), 32);
+        let total: usize = (0..32).map(|i| part.size(i)).sum();
+        assert_eq!(total, 2048);
+        for i in 0..32 {
+            assert_eq!(part.size(i), 64);
+        }
+    }
+
+    #[test]
+    fn owner_consistent_with_intervals() {
+        let part = Partition::from_bounds(10, vec![0, 3, 7, 10]);
+        let owners: Vec<usize> = (0..10).map(|j| part.owner(j)).collect();
+        assert_eq!(owners, [0, 0, 0, 1, 1, 1, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn overlap_extension() {
+        let part = Partition::from_bounds(10, vec![0, 5, 10]);
+        assert_eq!(part.interval_with_overlap(0, 2), (0, 7));
+        assert_eq!(part.interval_with_overlap(1, 2), (3, 10));
+    }
+
+    #[test]
+    fn shift_bound_clamps() {
+        let mut part = Partition::from_bounds(10, vec![0, 5, 10]);
+        assert_eq!(part.shift_bound(0, 3), 3);
+        assert_eq!(part.interval(0), (0, 8));
+        // Can't empty subdomain 1.
+        assert_eq!(part.shift_bound(0, 5), 1);
+        assert_eq!(part.interval(1), (9, 10));
+    }
+
+    #[test]
+    fn from_targets_matches_census() {
+        let locs = vec![1usize, 2, 3, 10, 11, 40, 41, 42, 43, 60];
+        let targets = vec![3usize, 2, 4, 1];
+        let part = Partition::from_targets(64, &locs, &targets);
+        let mut census = vec![0usize; 4];
+        for &l in &locs {
+            census[part.owner(l)] += 1;
+        }
+        assert_eq!(census, targets);
+    }
+}

@@ -1,0 +1,46 @@
+//! DyDD — the paper's dynamic load-balancing framework (§5, Table 13).
+//!
+//! Given a decomposition whose subdomains carry unequal observation counts,
+//! DyDD produces a balanced decomposition in four steps:
+//!
+//! 1. **DD step** (`repair`): if a subdomain is empty, the adjacent
+//!    subdomain with maximum load is decomposed in two and the empty one
+//!    takes half — repeated until every subdomain has data.
+//! 2. **Scheduling step** (`schedule_once` iterated by [`balance`]): a
+//!    diffusion-type schedule from the decomposition-graph Laplacian
+//!    (`L λ = b`, b = load − average); the migration volume across edge
+//!    (i, j) is δ_ij = round(λ_i − λ_j) — the Euclidean-norm-minimizing
+//!    schedule of Hu–Blake–Emerson.
+//! 3. **Migration step**: the δ's are applied across edges (in geometric
+//!    mode, by shifting subdomain boundaries — [`rebalance_partition`]).
+//! 4. **Update step**: subdomain/processor maps are refreshed.
+
+mod balancer;
+mod geometric;
+
+pub use balancer::{balance, repair, schedule_once, BalanceError, DyddOutcome, DyddParams};
+pub use geometric::{rebalance_partition, GeometricOutcome};
+
+/// Load-balance quality: ℰ = min_i l_fin(i) / max_i l_fin(i) (§6).
+/// ℰ = 1 is perfect balance.
+pub fn balance_ratio(loads: &[usize]) -> f64 {
+    let mx = loads.iter().copied().max().unwrap_or(0);
+    let mn = loads.iter().copied().min().unwrap_or(0);
+    if mx == 0 {
+        return 1.0;
+    }
+    mn as f64 / mx as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balance_ratio_cases() {
+        assert_eq!(balance_ratio(&[4, 4, 4]), 1.0);
+        assert_eq!(balance_ratio(&[2, 4]), 0.5);
+        assert_eq!(balance_ratio(&[]), 1.0);
+        assert_eq!(balance_ratio(&[0, 0]), 1.0);
+    }
+}

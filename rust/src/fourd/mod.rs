@@ -1,0 +1,24 @@
+//! 4D-VAR DA (paper §3, Definitions 1-2) with Parallel-in-Time domain
+//! decomposition.
+//!
+//! The unknown is the full space-time trajectory u = (u_0, …, u_{N−1}) ∈
+//! R^{nN} (discretize-then-optimize). The weak-constraint CLS stacks:
+//!
+//! * background rows:       u_0 = u_b              (weights w_b)
+//! * model-constraint rows: u_{l+1} − M u_l = 0    (weights w_m — the
+//!   inverse model-error covariance Q⁻¹; w_m → ∞ recovers the
+//!   strong-constraint 4D-Var of Definition 2)
+//! * observation rows:      H_l u_l = v_l          (weights 1/r)
+//!
+//! Every row is sparse (M is the banded [`StateOp`] stencil; H_l are point
+//! interpolations), so the same local-block / halo machinery as DD-CLS
+//! applies — with the partition taken over the **time-major** index set
+//! `col(l, i) = l·n + i`, contiguous intervals are *time windows*: this is
+//! the paper's space-AND-time decomposition (PinT, §1 item 4), and DyDD
+//! balances observation counts *across time windows*.
+
+mod problem;
+mod solver;
+
+pub use problem::TrajectoryProblem;
+pub use solver::{schwarz_solve_4d, window_census, window_partition};

@@ -1,0 +1,258 @@
+//! Weak-constraint 4D-VAR trajectory CLS assembly.
+
+use crate::cls::{LocalBlock, StateOp};
+use crate::domain::{Mesh1d, ObservationSet};
+use crate::linalg::{Cholesky, Mat};
+
+/// The space-time CLS of §3: unknowns u ∈ R^{nN}, column (l, i) ↦ l·n + i.
+#[derive(Debug, Clone)]
+pub struct TrajectoryProblem {
+    pub mesh: Mesh1d,
+    /// Banded propagator stencil M (the discretized M_{l,l+1} of eq. 1).
+    pub model: StateOp,
+    /// Number of time levels N (≥ 1).
+    pub n_steps: usize,
+    /// Background u_b at t_0 (length n).
+    pub background: Vec<f64>,
+    /// Background weights (R0⁻¹ diagonal, length n).
+    pub w_background: Vec<f64>,
+    /// Model-constraint weight (Q⁻¹ scalar; large = near-strong constraint).
+    pub w_model: f64,
+    /// Observations per time level (length N; empty sets allowed).
+    pub obs: Vec<ObservationSet>,
+}
+
+impl TrajectoryProblem {
+    pub fn new(
+        mesh: Mesh1d,
+        model: StateOp,
+        n_steps: usize,
+        background: Vec<f64>,
+        w_background: Vec<f64>,
+        w_model: f64,
+        obs: Vec<ObservationSet>,
+    ) -> Self {
+        assert!(n_steps >= 1);
+        assert_eq!(background.len(), mesh.n());
+        assert_eq!(w_background.len(), mesh.n());
+        assert_eq!(obs.len(), n_steps);
+        assert!(w_model > 0.0);
+        TrajectoryProblem { mesh, model, n_steps, background, w_background, w_model, obs }
+    }
+
+    pub fn n_space(&self) -> usize {
+        self.mesh.n()
+    }
+
+    /// Total unknowns nN.
+    pub fn n(&self) -> usize {
+        self.mesh.n() * self.n_steps
+    }
+
+    /// Rows: n background + n(N−1) model constraints + Σ_l m_l observations.
+    pub fn m_total(&self) -> usize {
+        let m_obs: usize = self.obs.iter().map(|o| o.len()).sum();
+        self.n_space() + self.n_space() * (self.n_steps - 1) + m_obs
+    }
+
+    /// Column index of unknown (time level l, space point i).
+    #[inline]
+    pub fn col(&self, l: usize, i: usize) -> usize {
+        l * self.n_space() + i
+    }
+
+    /// Sparse row r as (cols, weight, datum) — same contract as
+    /// `ClsProblem::sparse_row`.
+    pub fn sparse_row(&self, r: usize) -> (Vec<(usize, f64)>, f64, f64) {
+        let n = self.n_space();
+        if r < n {
+            // Background: u_0[i] = u_b[i].
+            return (vec![(r, 1.0)], self.w_background[r], self.background[r]);
+        }
+        let r2 = r - n;
+        let n_model = n * (self.n_steps - 1);
+        if r2 < n_model {
+            // Model constraint at level l, point i: u_{l+1}[i] − (M u_l)[i] = 0.
+            let l = r2 / n;
+            let i = r2 % n;
+            let mut cols: Vec<(usize, f64)> =
+                self.model.row(i, n).into_iter().map(|(j, v)| (self.col(l, j), -v)).collect();
+            cols.push((self.col(l + 1, i), 1.0));
+            cols.sort_unstable_by_key(|&(c, _)| c);
+            return (cols, self.w_model, 0.0);
+        }
+        // Observation rows, grouped by time level.
+        let mut k = r2 - n_model;
+        for (l, set) in self.obs.iter().enumerate() {
+            if k < set.len() {
+                let (j, wl, wr) = set.interp_row(&self.mesh, k);
+                let row = if wr == 0.0 {
+                    vec![(self.col(l, j), wl)]
+                } else {
+                    vec![(self.col(l, j), wl), (self.col(l, j + 1), wr)]
+                };
+                return (row, 1.0 / set.variances[k], set.values[k]);
+            }
+            k -= set.len();
+        }
+        panic!("row {r} out of range");
+    }
+
+    /// Dense (A, d, b) — oracle paths only (nN × nN gram!).
+    pub fn dense(&self) -> (Mat, Vec<f64>, Vec<f64>) {
+        let (m, n) = (self.m_total(), self.n());
+        let mut a = Mat::zeros(m, n);
+        let mut d = vec![0.0; m];
+        let mut b = vec![0.0; m];
+        for r in 0..m {
+            let (cols, w, y) = self.sparse_row(r);
+            for (j, v) in cols {
+                a[(r, j)] = v;
+            }
+            d[r] = w;
+            b[r] = y;
+        }
+        (a, d, b)
+    }
+
+    /// Global reference solution (Definition 2's minimizer).
+    pub fn solve_reference(&self) -> Vec<f64> {
+        let (a, d, b) = self.dense();
+        let g = a.weighted_gram(&d);
+        let rhs = a.at_db(&d, &b);
+        Cholesky::new(&g).expect("4D-VAR normal matrix must be SPD").solve(&rhs)
+    }
+
+    /// Extract the local block for the (time-window) column interval
+    /// [lo, hi) — identical semantics to `ClsProblem::local_block`.
+    pub fn local_block(&self, lo: usize, hi: usize) -> LocalBlock {
+        let nloc = hi - lo;
+        let mut rows = Vec::new();
+        let mut a_rows: Vec<(Vec<(usize, f64)>, f64, f64)> = Vec::new();
+        for r in 0..self.m_total() {
+            let (cols, w, y) = self.sparse_row(r);
+            if cols.iter().any(|&(c, _)| c >= lo && c < hi) {
+                rows.push(r);
+                a_rows.push((cols, w, y));
+            }
+        }
+        let m_loc = rows.len();
+        let mut a = Mat::zeros(m_loc, nloc);
+        let mut d = vec![0.0; m_loc];
+        let mut b = vec![0.0; m_loc];
+        let mut halo = Vec::new();
+        for (r_loc, (cols, w, y)) in a_rows.into_iter().enumerate() {
+            d[r_loc] = w;
+            b[r_loc] = y;
+            for (c, v) in cols {
+                if (lo..hi).contains(&c) {
+                    a[(r_loc, c - lo)] = v;
+                } else {
+                    halo.push((r_loc, c, v));
+                }
+            }
+        }
+        LocalBlock {
+            col_lo: lo,
+            col_hi: hi,
+            own_lo: lo,
+            own_hi: hi,
+            a,
+            d,
+            b,
+            halo,
+            global_rows: rows,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::generators;
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    pub fn small(n: usize, steps: usize, seed: u64) -> TrajectoryProblem {
+        let mesh = Mesh1d::new(n);
+        let mut rng = Rng::new(seed);
+        let obs: Vec<ObservationSet> = (0..steps)
+            .map(|_| generators::generate(crate::domain::ObsLayout::Uniform, 6, &mut rng))
+            .collect();
+        let bg = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+        TrajectoryProblem::new(
+            mesh,
+            StateOp::Tridiag { main: 0.9, off: 0.05 },
+            steps,
+            bg,
+            vec![4.0; n],
+            50.0,
+            obs,
+        )
+    }
+
+    #[test]
+    fn row_counts() {
+        let p = small(12, 4, 1);
+        assert_eq!(p.n(), 48);
+        assert_eq!(p.m_total(), 12 + 36 + 24);
+    }
+
+    #[test]
+    fn model_rows_encode_dynamics() {
+        let p = small(8, 3, 2);
+        // First model row (l = 0, i = 0): couples u_1[0] with M-row 0 of u_0.
+        let (cols, w, y) = p.sparse_row(8);
+        assert_eq!(w, 50.0);
+        assert_eq!(y, 0.0);
+        assert!(cols.contains(&(p.col(1, 0), 1.0)));
+        assert!(cols.iter().any(|&(c, v)| c == p.col(0, 0) && v == -0.9));
+    }
+
+    #[test]
+    fn reference_solves_normal_equations() {
+        let p = small(10, 3, 3);
+        let x = p.solve_reference();
+        let (a, d, b) = p.dense();
+        let g = a.weighted_gram(&d);
+        assert!(dist2(&g.matvec(&x), &a.at_db(&d, &b)) < 1e-8);
+    }
+
+    #[test]
+    fn strong_constraint_limit_propagates_model() {
+        // With huge model weight and no observations past t0, the
+        // trajectory is u_{l+1} = M u_l applied to the background fit.
+        let mesh = Mesh1d::new(8);
+        let bg: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let p = TrajectoryProblem::new(
+            mesh,
+            StateOp::Tridiag { main: 0.8, off: 0.1 },
+            3,
+            bg.clone(),
+            vec![1e6; 8],
+            1e8,
+            vec![ObservationSet::default(); 3],
+        );
+        let x = p.solve_reference();
+        let u0 = &x[0..8];
+        let u1 = &x[8..16];
+        let want = p.model.matvec(u0);
+        assert!(dist2(u1, &want) < 1e-4, "{u1:?} vs {want:?}");
+        assert!(dist2(u0, &bg) < 1e-4);
+    }
+
+    #[test]
+    fn local_blocks_cover_all_rows() {
+        let p = small(12, 4, 4);
+        let n = p.n();
+        let mut covered = vec![false; p.m_total()];
+        for w in 0..4 {
+            let blk = p.local_block(w * 12, (w + 1) * 12);
+            for &r in &blk.global_rows {
+                covered[r] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        assert_eq!(n, 48);
+    }
+}

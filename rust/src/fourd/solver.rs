@@ -1,0 +1,201 @@
+//! Parallel-in-Time Schwarz solver for the trajectory CLS: contiguous
+//! time-window column intervals iterated exactly like DD-CLS (§4), with
+//! DyDD balancing observation counts across windows.
+
+use super::problem::TrajectoryProblem;
+use crate::ddkf::{LocalSolver, SchwarzOptions};
+use crate::domain::Partition;
+use crate::dydd::{balance, DyddParams};
+use crate::graph::Graph;
+
+/// Observation census per time window of `part` (a partition of the
+/// space-time index set in time-major order).
+pub fn window_census(prob: &TrajectoryProblem, part: &Partition) -> Vec<usize> {
+    let n = prob.n_space();
+    let mut counts = vec![0usize; part.p()];
+    for (l, set) in prob.obs.iter().enumerate() {
+        // All observations of level l live in the columns of level l; the
+        // window owning column (l, 0) owns them (windows are time-aligned
+        // by construction in window_partition).
+        let w = part.owner(l * n);
+        counts[w] += set.len();
+    }
+    counts
+}
+
+/// Build a time-window partition of the nN unknowns with `windows`
+/// windows whose per-window observation counts are DyDD-balanced.
+///
+/// Windows must be whole numbers of time levels (a window boundary inside
+/// a level would split a state vector), so the migration step moves whole
+/// levels — the paper's "assimilation window" granularity (§7).
+pub fn window_partition(
+    prob: &TrajectoryProblem,
+    windows: usize,
+) -> anyhow::Result<(Partition, Vec<usize>)> {
+    let n = prob.n_space();
+    let steps = prob.n_steps;
+    anyhow::ensure!(windows >= 1 && windows <= steps, "need 1 <= windows <= N");
+    // Initial: uniform in time levels.
+    let counts_per_level: Vec<usize> = prob.obs.iter().map(|o| o.len()).collect();
+    let uniform_bounds: Vec<usize> = (0..=windows).map(|w| w * steps / windows).collect();
+    let l_in: Vec<usize> = (0..windows)
+        .map(|w| counts_per_level[uniform_bounds[w]..uniform_bounds[w + 1]].iter().sum())
+        .collect();
+    // DyDD on the window chain.
+    let out = balance(&Graph::chain(windows), &l_in, &DyddParams::default())?;
+    // Realize targets at level granularity: cumulative-nearest boundaries.
+    let mut bounds = vec![0usize];
+    let mut cum_target = 0usize;
+    let total: usize = counts_per_level.iter().sum();
+    for w in 0..windows - 1 {
+        cum_target += out.l_fin[w];
+        // Find the level boundary whose cumulative count is nearest.
+        let mut cum = 0usize;
+        let mut best = (usize::MAX, bounds[w] + 1);
+        for (l, &c) in counts_per_level.iter().enumerate() {
+            cum += c;
+            let lvl = l + 1;
+            if lvl <= bounds[w] || lvl > steps - (windows - 1 - w) {
+                continue;
+            }
+            let dist = cum.abs_diff(cum_target.min(total));
+            if dist < best.0 {
+                best = (dist, lvl);
+            }
+        }
+        bounds.push(best.1);
+    }
+    bounds.push(steps);
+    let col_bounds: Vec<usize> = bounds.iter().map(|&l| l * n).collect();
+    Ok((Partition::from_bounds(prob.n(), col_bounds), out.l_fin))
+}
+
+/// Multiplicative Schwarz over time windows. Returns (trajectory, iters,
+/// converged).
+pub fn schwarz_solve_4d<S: LocalSolver>(
+    prob: &TrajectoryProblem,
+    part: &Partition,
+    opts: &SchwarzOptions,
+    solver: &mut S,
+) -> anyhow::Result<(Vec<f64>, usize, bool)> {
+    let n = prob.n();
+    let p = part.p();
+    // Assemble per-window blocks + factors.
+    let mut blocks = Vec::with_capacity(p);
+    let mut factors = Vec::with_capacity(p);
+    for w in 0..p {
+        let (lo, hi) = part.interval(w);
+        let blk = prob.local_block(lo, hi);
+        let reg = vec![0.0; blk.n_loc()];
+        let f = solver.assemble(&blk, &reg)?;
+        blocks.push(blk);
+        factors.push(f);
+    }
+    let mut x = vec![0.0; n];
+    let floor = 64.0 * f64::EPSILON * (n as f64).sqrt();
+    let tol = opts.tol.max(floor);
+    for iter in 1..=opts.max_iters {
+        let x_prev = x.clone();
+        for w in 0..p {
+            let blk = &blocks[w];
+            let b_eff = blk.b_eff(|c| x[c]);
+            let zero = vec![0.0; blk.n_loc()];
+            let x_loc = solver.solve(blk, &factors[w], &b_eff, &zero)?;
+            x[blk.col_lo..blk.col_hi].copy_from_slice(&x_loc);
+        }
+        let mut diff = 0.0f64;
+        let mut norm = 0.0f64;
+        for (a, b) in x.iter().zip(&x_prev) {
+            diff += (a - b) * (a - b);
+            norm += a * a;
+        }
+        if diff.sqrt() / (1.0 + norm.sqrt()) < tol {
+            return Ok((x, iter, true));
+        }
+    }
+    Ok((x, opts.max_iters, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cls::StateOp;
+    use crate::ddkf::NativeLocalSolver;
+    use crate::domain::{generators, Mesh1d, ObservationSet};
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    fn problem(n: usize, steps: usize, obs_per_level: &[usize], seed: u64) -> TrajectoryProblem {
+        let mesh = Mesh1d::new(n);
+        let mut rng = Rng::new(seed);
+        let obs: Vec<ObservationSet> = obs_per_level
+            .iter()
+            .map(|&m| generators::generate(crate::domain::ObsLayout::Uniform, m, &mut rng))
+            .collect();
+        let bg = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+        TrajectoryProblem::new(
+            mesh,
+            StateOp::Tridiag { main: 0.9, off: 0.05 },
+            steps,
+            bg,
+            vec![4.0; n],
+            5.0,
+            obs,
+        )
+    }
+
+    #[test]
+    fn pint_schwarz_matches_reference() {
+        let p = problem(10, 6, &[4, 4, 4, 4, 4, 4], 1);
+        let want = p.solve_reference();
+        for windows in [2usize, 3, 6] {
+            let part = Partition::from_bounds(
+                p.n(),
+                (0..=windows).map(|w| w * 6 / windows * 10).collect(),
+            );
+            // Single-level windows couple strongly through the model rows
+            // (every unknown sits next to a window boundary), so the
+            // Schwarz contraction slows — give the sweep a bigger budget.
+            let opts = SchwarzOptions { max_iters: 3000, ..SchwarzOptions::default() };
+            let (x, _iters, conv) =
+                schwarz_solve_4d(&p, &part, &opts, &mut NativeLocalSolver).unwrap();
+            assert!(conv, "windows={windows}");
+            let err = dist2(&x, &want);
+            assert!(err < 1e-7, "windows={windows}: {err:e}");
+        }
+    }
+
+    #[test]
+    fn window_partition_balances_observations() {
+        // Heavily skewed observation counts across 8 levels.
+        let p = problem(8, 8, &[40, 2, 2, 2, 2, 2, 2, 40], 2);
+        let (part, targets) = window_partition(&p, 4).unwrap();
+        assert_eq!(part.p(), 4);
+        let census = window_census(&p, &part);
+        assert_eq!(census.iter().sum::<usize>(), 92);
+        // Boundaries are level-aligned.
+        for &b in part.bounds() {
+            assert_eq!(b % 8, 0);
+        }
+        // Balanced to level granularity: better than the uniform split.
+        let uniform = [44usize, 4, 4, 40];
+        let worst_uniform = *uniform.iter().max().unwrap();
+        assert!(
+            *census.iter().max().unwrap() <= worst_uniform,
+            "census {census:?} targets {targets:?}"
+        );
+    }
+
+    #[test]
+    fn empty_levels_are_fine() {
+        let p = problem(8, 4, &[0, 0, 12, 0], 3);
+        let want = p.solve_reference();
+        let part = Partition::from_bounds(p.n(), vec![0, 16, 32]);
+        let (x, _, conv) =
+            schwarz_solve_4d(&p, &part, &SchwarzOptions::default(), &mut NativeLocalSolver)
+                .unwrap();
+        assert!(conv);
+        assert!(dist2(&x, &want) < 1e-8);
+    }
+}

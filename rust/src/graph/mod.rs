@@ -1,0 +1,208 @@
+//! Decomposition-graph substrate for the DyDD scheduling step.
+//!
+//! Vertices are subdomains; edges connect adjacent subdomains. The
+//! scheduling step (paper §5, Table 13) solves the graph-Laplacian system
+//! `L λ = b` (b = per-vertex load imbalance) and migrates
+//! `δ_{ij} = round(λ_i − λ_j)` observations across each edge — the
+//! diffusion-type schedule of Hu–Blake–Emerson (ref. 18) minimizing the
+//! Euclidean norm of data movement.
+
+mod solver;
+
+pub use solver::{laplacian_solve, laplacian_solve_cg, LaplacianSolveError};
+
+use crate::linalg::Mat;
+use std::collections::BTreeSet;
+
+/// Undirected decomposition graph on `p` vertices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    p: usize,
+    /// Sorted unique edges (i < j).
+    edges: BTreeSet<(usize, usize)>,
+}
+
+impl Graph {
+    pub fn new(p: usize) -> Self {
+        Graph { p, edges: BTreeSet::new() }
+    }
+
+    /// Chain topology: 0-1-2-…-(p-1). Example 4's configuration
+    /// (deg(1) = deg(p) = 1, interior degree 2).
+    pub fn chain(p: usize) -> Self {
+        let mut g = Graph::new(p);
+        for i in 1..p {
+            g.add_edge(i - 1, i);
+        }
+        g
+    }
+
+    /// Star topology: vertex 0 adjacent to all others. Example 3's
+    /// configuration (deg(1) = p−1, deg(i) = 1 otherwise).
+    pub fn star(p: usize) -> Self {
+        let mut g = Graph::new(p);
+        for i in 1..p {
+            g.add_edge(0, i);
+        }
+        g
+    }
+
+    /// The 8-subdomain graph of the paper's Figures 1-4 / eq. (30).
+    pub fn paper_example() -> Self {
+        let mut g = Graph::new(8);
+        // Edges read off the printed Laplacian (1-based in the paper):
+        // 1-2, 1-3, 2-3, 2-4, 3-4, 3-5, 5-6, 6-7, 6-8, 7-8.
+        for (a, b) in [(0, 1), (0, 2), (1, 2), (1, 3), (2, 3), (2, 4), (4, 5), (5, 6), (5, 7), (6, 7)]
+        {
+            g.add_edge(a, b);
+        }
+        g
+    }
+
+    pub fn add_edge(&mut self, a: usize, b: usize) {
+        assert!(a != b, "self loop");
+        assert!(a < self.p && b < self.p, "vertex out of range");
+        self.edges.insert((a.min(b), a.max(b)));
+    }
+
+    pub fn remove_edge(&mut self, a: usize, b: usize) {
+        self.edges.remove(&(a.min(b), a.max(b)));
+    }
+
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.edges.contains(&(a.min(b), a.max(b)))
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.edges.iter().copied()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.edges.iter().filter(|&&(a, b)| a == v || b == v).count()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.p).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    pub fn neighbours(&self, v: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .edges
+            .iter()
+            .filter_map(|&(a, b)| {
+                if a == v {
+                    Some(b)
+                } else if b == v {
+                    Some(a)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Graph Laplacian per eq. (29): L_ii = deg(i), L_ij = −1 on edges.
+    pub fn laplacian(&self) -> Mat {
+        let mut l = Mat::zeros(self.p, self.p);
+        for v in 0..self.p {
+            l[(v, v)] = self.degree(v) as f64;
+        }
+        for &(a, b) in &self.edges {
+            l[(a, b)] = -1.0;
+            l[(b, a)] = -1.0;
+        }
+        l
+    }
+
+    /// Connectivity check (DFS) — DyDD requires a connected decomposition.
+    pub fn is_connected(&self) -> bool {
+        if self.p == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.p];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(v) = stack.pop() {
+            for w in self.neighbours(v) {
+                if !seen[w] {
+                    seen[w] = true;
+                    stack.push(w);
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_and_star_degrees() {
+        let c = Graph::chain(5);
+        assert_eq!(c.degree(0), 1);
+        assert_eq!(c.degree(2), 2);
+        assert_eq!(c.num_edges(), 4);
+        let s = Graph::star(5);
+        assert_eq!(s.degree(0), 4);
+        assert_eq!(s.degree(3), 1);
+        assert!(c.is_connected() && s.is_connected());
+    }
+
+    #[test]
+    fn paper_laplacian_matches_eq30() {
+        // The printed 8x8 Laplacian of eq. (30).
+        #[rustfmt::skip]
+        let want: [[f64; 8]; 8] = [
+            [ 2.0, -1.0, -1.0,  0.0,  0.0,  0.0,  0.0,  0.0],
+            [-1.0,  3.0, -1.0, -1.0,  0.0,  0.0,  0.0,  0.0],
+            [-1.0, -1.0,  4.0, -1.0, -1.0,  0.0,  0.0,  0.0],
+            [ 0.0, -1.0, -1.0,  2.0,  0.0,  0.0,  0.0,  0.0],
+            [ 0.0,  0.0, -1.0,  0.0,  2.0, -1.0,  0.0,  0.0],
+            [ 0.0,  0.0,  0.0,  0.0, -1.0,  3.0, -1.0, -1.0],
+            [ 0.0,  0.0,  0.0,  0.0,  0.0, -1.0,  2.0, -1.0],
+            [ 0.0,  0.0,  0.0,  0.0,  0.0, -1.0, -1.0,  2.0],
+        ];
+        let l = Graph::paper_example().laplacian();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(l[(i, j)], want[i][j], "L[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn laplacian_rows_sum_to_zero() {
+        let g = Graph::paper_example();
+        let l = g.laplacian();
+        for i in 0..g.p() {
+            let s: f64 = (0..g.p()).map(|j| l[(i, j)]).sum();
+            assert_eq!(s, 0.0);
+        }
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn neighbours_sorted() {
+        let g = Graph::paper_example();
+        assert_eq!(g.neighbours(2), vec![0, 1, 3, 4]);
+    }
+}

@@ -1,0 +1,206 @@
+//! Solver for the singular Laplacian system `L λ = b` of the scheduling
+//! step.
+//!
+//! L is symmetric positive semi-definite with kernel = span{1} for a
+//! connected graph; b (the load imbalance) always satisfies 1^T b = 0, so
+//! the system is consistent and the solution is unique up to a constant —
+//! which is irrelevant because only differences λ_i − λ_j are used.
+//!
+//! For the small p of the scheduling step we *ground* one vertex (fix
+//! λ_0 = 0, drop its row/column) and solve the resulting SPD system by
+//! Cholesky; a conjugate-gradient path is provided for large p and as a
+//! cross-check (property tests assert both agree).
+
+use super::Graph;
+use crate::linalg::{Cholesky, Mat};
+
+#[derive(Debug, thiserror::Error)]
+pub enum LaplacianSolveError {
+    #[error("graph is disconnected; Laplacian system is not solvable per-component")]
+    Disconnected,
+    #[error("imbalance does not sum to zero (sum = {0:.3e}); system inconsistent")]
+    Inconsistent(f64),
+    #[error("grounded Laplacian not SPD: {0}")]
+    NotSpd(#[from] crate::linalg::chol::NotSpd),
+}
+
+/// Solve `L λ = b`, returning the mean-zero representative.
+pub fn laplacian_solve(g: &Graph, b: &[f64]) -> Result<Vec<f64>, LaplacianSolveError> {
+    let p = g.p();
+    assert_eq!(b.len(), p);
+    if p == 0 {
+        return Ok(vec![]);
+    }
+    if p == 1 {
+        return Ok(vec![0.0]);
+    }
+    if !g.is_connected() {
+        return Err(LaplacianSolveError::Disconnected);
+    }
+    let s: f64 = b.iter().sum();
+    let scale = b.iter().fold(1.0_f64, |m, x| m.max(x.abs()));
+    if s.abs() > 1e-9 * scale {
+        return Err(LaplacianSolveError::Inconsistent(s));
+    }
+
+    let l = g.laplacian();
+    // Ground vertex 0: solve the (p-1)x(p-1) principal minor.
+    let mut lg = Mat::zeros(p - 1, p - 1);
+    for i in 1..p {
+        for j in 1..p {
+            lg[(i - 1, j - 1)] = l[(i, j)];
+        }
+    }
+    let rhs: Vec<f64> = b[1..].to_vec();
+    let sol = Cholesky::new(&lg)?.solve(&rhs);
+
+    let mut lambda = Vec::with_capacity(p);
+    lambda.push(0.0);
+    lambda.extend(sol);
+    // Shift to mean zero (canonical representative).
+    let mean = lambda.iter().sum::<f64>() / p as f64;
+    for v in &mut lambda {
+        *v -= mean;
+    }
+    Ok(lambda)
+}
+
+/// Conjugate gradient on the full singular system, projected onto the
+/// mean-zero subspace. Used as a cross-check and for very large p.
+pub fn laplacian_solve_cg(
+    g: &Graph,
+    b: &[f64],
+    tol: f64,
+    max_iter: usize,
+) -> Result<Vec<f64>, LaplacianSolveError> {
+    let p = g.p();
+    assert_eq!(b.len(), p);
+    if p <= 1 {
+        return Ok(vec![0.0; p]);
+    }
+    if !g.is_connected() {
+        return Err(LaplacianSolveError::Disconnected);
+    }
+    let project = |v: &mut Vec<f64>| {
+        let m = v.iter().sum::<f64>() / p as f64;
+        for x in v.iter_mut() {
+            *x -= m;
+        }
+    };
+    let matvec = |x: &[f64]| -> Vec<f64> {
+        let mut y: Vec<f64> = (0..p).map(|i| g.degree(i) as f64 * x[i]).collect();
+        for (a, c) in g.edges() {
+            y[a] -= x[c];
+            y[c] -= x[a];
+        }
+        y
+    };
+
+    let mut bb = b.to_vec();
+    project(&mut bb);
+    let mut x = vec![0.0; p];
+    let mut r = bb.clone();
+    let mut d = r.clone();
+    let mut rs: f64 = r.iter().map(|v| v * v).sum();
+    let b_norm = rs.sqrt().max(1e-300);
+    for _ in 0..max_iter {
+        if rs.sqrt() <= tol * b_norm {
+            break;
+        }
+        let ad = matvec(&d);
+        let dad: f64 = d.iter().zip(&ad).map(|(a, b)| a * b).sum();
+        let alpha = rs / dad;
+        for i in 0..p {
+            x[i] += alpha * d[i];
+            r[i] -= alpha * ad[i];
+        }
+        let rs_new: f64 = r.iter().map(|v| v * v).sum();
+        let beta = rs_new / rs;
+        rs = rs_new;
+        for i in 0..p {
+            d[i] = r[i] + beta * d[i];
+        }
+    }
+    project(&mut x);
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    fn residual(g: &Graph, lambda: &[f64], b: &[f64]) -> f64 {
+        let l = g.laplacian();
+        dist2(&l.matvec(lambda), b)
+    }
+
+    fn balanced_b(g: &Graph, rng: &mut Rng) -> Vec<f64> {
+        let p = g.p();
+        let mut b: Vec<f64> = (0..p).map(|_| (rng.below(21) as f64) - 10.0).collect();
+        let mean = b.iter().sum::<f64>() / p as f64;
+        for v in &mut b {
+            *v -= mean;
+        }
+        b
+    }
+
+    #[test]
+    fn paper_example_schedule() {
+        // Loads from Figure 1(b): l = (5,4,6,2,5,3,5,2), average 4.
+        let g = Graph::paper_example();
+        let loads = [5.0, 4.0, 6.0, 2.0, 5.0, 3.0, 5.0, 2.0];
+        let avg = 4.0;
+        let b: Vec<f64> = loads.iter().map(|l| l - avg).collect();
+        let lambda = laplacian_solve(&g, &b).unwrap();
+        assert!(residual(&g, &lambda, &b) < 1e-10);
+        // Diffusion property: total migrated load out of each vertex equals
+        // its surplus: sum_j (λ_i − λ_j) over edges = b_i.
+        for i in 0..8 {
+            let flow: f64 = g.neighbours(i).iter().map(|&j| lambda[i] - lambda[j]).sum();
+            assert!((flow - b[i]).abs() < 1e-10, "vertex {i}");
+        }
+    }
+
+    #[test]
+    fn grounded_and_cg_agree() {
+        let mut rng = Rng::new(10);
+        for p in [2usize, 3, 8, 17] {
+            for g in [Graph::chain(p), Graph::star(p)] {
+                let b = balanced_b(&g, &mut rng);
+                let a = laplacian_solve(&g, &b).unwrap();
+                let c = laplacian_solve_cg(&g, &b, 1e-12, 10 * p).unwrap();
+                assert!(dist2(&a, &c) < 1e-8, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_inconsistent() {
+        let g = Graph::chain(3);
+        assert!(matches!(
+            laplacian_solve(&g, &[1.0, 1.0, 1.0]),
+            Err(LaplacianSolveError::Inconsistent(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_disconnected() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        assert!(matches!(
+            laplacian_solve(&g, &[1.0, -1.0, 2.0, -2.0]),
+            Err(LaplacianSolveError::Disconnected)
+        ));
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        assert_eq!(laplacian_solve(&Graph::new(1), &[0.0]).unwrap(), vec![0.0]);
+        let g = Graph::chain(2);
+        let lam = laplacian_solve(&g, &[3.0, -3.0]).unwrap();
+        assert!((lam[0] - lam[1] - 3.0).abs() < 1e-12);
+    }
+}

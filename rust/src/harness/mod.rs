@@ -1,0 +1,11 @@
+//! Benchmark harness: scenario builders and the regeneration code for
+//! **every table and figure** in the paper's evaluation (§6). Shared by
+//! the `dydd-da table` CLI subcommand, `cargo bench`, and the examples so
+//! all three print identical workloads.
+
+pub mod pipeline;
+pub mod scenarios;
+pub mod tables;
+
+pub use pipeline::{run_experiment, ExperimentReport};
+pub use tables::{all_tables, render_table, TableId};

@@ -1,0 +1,213 @@
+//! The full experiment pipeline: generate workload → DyDD → parallel DD-KF
+//! → sequential-KF baseline → metrics. Produces everything a paper table
+//! row needs.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_parallel, RunConfig};
+use crate::domain::{generators, Mesh1d, Partition};
+use crate::dydd::{rebalance_partition, DyddParams, GeometricOutcome};
+use crate::kf::kf_solve_cls;
+use crate::linalg::mat::dist2;
+use std::time::{Duration, Instant};
+
+/// Everything measured in one experiment run.
+#[derive(Debug, Clone)]
+pub struct ExperimentReport {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub p: usize,
+    /// DyDD record (None when cfg.dydd = false).
+    pub dydd: Option<GeometricOutcome>,
+    /// Parallel DD-KF wall-clock (workers time-share this testbed's cores).
+    pub t_parallel: Duration,
+    /// Simulated-parallel critical path (max assemble + Σ phase maxima) —
+    /// the p-processor wall-clock estimate, see coordinator::ParallelOutcome.
+    pub t_critical: Duration,
+    /// Sequential KF baseline T¹ (None if skipped).
+    pub t_sequential: Option<Duration>,
+    /// error_DD-DA = ‖x̂_KF − x̂_DD-DA‖.
+    pub error_dd_da: Option<f64>,
+    pub iters: usize,
+    pub converged: bool,
+    pub worker_busy: Vec<Duration>,
+}
+
+impl ExperimentReport {
+    /// Wall-clock speedup T¹ / T^p (meaningful only with >= p cores).
+    pub fn speedup(&self) -> Option<f64> {
+        self.t_sequential
+            .map(|t1| t1.as_secs_f64() / self.t_parallel.as_secs_f64().max(1e-12))
+    }
+
+    pub fn efficiency(&self) -> Option<f64> {
+        self.speedup().map(|s| s / self.p as f64)
+    }
+
+    /// Simulated-parallel speedup T¹ / T^p_critical (per-worker times are
+    /// measured individually; the critical path is what p processors would
+    /// take — DESIGN.md §Substitutions).
+    pub fn speedup_sim(&self) -> Option<f64> {
+        self.t_sequential
+            .map(|t1| t1.as_secs_f64() / self.t_critical.as_secs_f64().max(1e-12))
+    }
+
+    pub fn efficiency_sim(&self) -> Option<f64> {
+        self.speedup_sim().map(|s| s / self.p as f64)
+    }
+
+    pub fn balance(&self) -> Option<f64> {
+        self.dydd.as_ref().map(|g| g.balance())
+    }
+}
+
+/// Run the full pipeline for one configuration.
+///
+/// `with_baseline`: also run the sequential KF (T¹) and compute
+/// error_DD-DA; skip for large sweeps where only DyDD timing is studied.
+pub fn run_experiment(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result<ExperimentReport> {
+    let prob = cfg.build_problem();
+    let mesh = Mesh1d::new(cfg.n);
+    let part0 = Partition::uniform(cfg.n, cfg.p);
+
+    // DyDD: rebalance the decomposition to the observation layout.
+    let (part, dydd) = if cfg.dydd {
+        let out = rebalance_partition(&mesh, &part0, &prob.obs, &DyddParams::default())?;
+        (out.partition.clone(), Some(out))
+    } else {
+        (part0, None)
+    };
+
+    // Parallel DD-KF.
+    let run_cfg: RunConfig = cfg.run_config();
+    let t0 = Instant::now();
+    let par = run_parallel(&prob, &part, &run_cfg)?;
+    let t_parallel = t0.elapsed();
+
+    // Baseline + error.
+    let (t_sequential, error_dd_da) = if with_baseline {
+        let t1 = Instant::now();
+        let kf = kf_solve_cls(&prob);
+        let t_seq = t1.elapsed();
+        let err = dist2(&kf.x, &par.x);
+        (Some(t_seq), Some(err))
+    } else {
+        (None, None)
+    };
+
+    Ok(ExperimentReport {
+        name: cfg.name.clone(),
+        n: cfg.n,
+        m: cfg.m,
+        p: cfg.p,
+        dydd,
+        t_parallel,
+        t_critical: par.t_critical,
+        t_sequential,
+        error_dd_da,
+        iters: par.iters,
+        converged: par.converged,
+        worker_busy: par.worker_busy,
+    })
+}
+
+/// Convenience: an experiment with counts placed per an explicit census
+/// (reproduces the paper's l_in exactly in geometric mode).
+pub fn run_with_counts(
+    base: &ExperimentConfig,
+    counts: &[usize],
+    with_baseline: bool,
+) -> anyhow::Result<ExperimentReport> {
+    let mesh = Mesh1d::new(base.n);
+    let part0 = Partition::uniform(base.n, counts.len());
+    let mut rng = crate::util::Rng::new(base.seed);
+    let obs = generators::with_counts(&mesh, &part0, counts, &mut rng);
+    let y0 = (0..base.n)
+        .map(|j| generators::field(j as f64 / (base.n - 1) as f64))
+        .collect();
+    let prob = crate::cls::ClsProblem::new(
+        mesh.clone(),
+        base.state_op.build(),
+        y0,
+        vec![base.state_weight; base.n],
+        obs,
+    );
+
+    let (part, dydd) = if base.dydd {
+        let out = rebalance_partition(&mesh, &part0, &prob.obs, &DyddParams::default())?;
+        (out.partition.clone(), Some(out))
+    } else {
+        (part0, None)
+    };
+
+    let t0 = Instant::now();
+    let par = run_parallel(&prob, &part, &base.run_config())?;
+    let t_parallel = t0.elapsed();
+
+    let (t_sequential, error_dd_da) = if with_baseline {
+        let t1 = Instant::now();
+        let kf = kf_solve_cls(&prob);
+        (Some(t1.elapsed()), Some(dist2(&kf.x, &par.x)))
+    } else {
+        (None, None)
+    };
+
+    Ok(ExperimentReport {
+        name: base.name.clone(),
+        n: base.n,
+        m: counts.iter().sum(),
+        p: counts.len(),
+        dydd,
+        t_parallel,
+        t_critical: par.t_critical,
+        t_sequential,
+        error_dd_da,
+        iters: par.iters,
+        converged: par.converged,
+        worker_busy: par.worker_busy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_pipeline_end_to_end() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 128;
+        cfg.m = 90;
+        cfg.p = 4;
+        cfg.layout = crate::domain::ObsLayout::Cluster;
+        let rep = run_experiment(&cfg, true).unwrap();
+        assert!(rep.converged);
+        let err = rep.error_dd_da.unwrap();
+        assert!(err < 1e-9, "error_DD-DA = {err:e}");
+        assert!(rep.balance().unwrap() > 0.8);
+        assert!(rep.speedup().is_some());
+    }
+
+    #[test]
+    fn counts_pipeline_matches_paper_table2_shape() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 256;
+        cfg.p = 2;
+        let rep = run_with_counts(&cfg, &[600, 0], true).unwrap();
+        let d = rep.dydd.as_ref().unwrap();
+        assert!(d.dydd.l_r.is_some(), "repair must run for the empty subdomain");
+        assert_eq!(d.dydd.l_fin, vec![300, 300]);
+        assert!(rep.error_dd_da.unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn dydd_off_uses_uniform_partition() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 128;
+        cfg.m = 60;
+        cfg.p = 4;
+        cfg.dydd = false;
+        let rep = run_experiment(&cfg, false).unwrap();
+        assert!(rep.dydd.is_none());
+        assert!(rep.converged);
+    }
+}

@@ -1,0 +1,358 @@
+//! Regeneration of every table and figure in the paper's §6.
+//!
+//! `full = true` uses the paper's parameters (n = 2048, m ∈ {1500, 2000,
+//! 1032}); `full = false` scales the solver-bound tables down (n = 256) so
+//! the CLI stays interactive. Timings are for *this* testbed — compare
+//! shapes (who wins, how metrics trend with p), not absolute values.
+
+use super::pipeline::{run_with_counts, ExperimentReport};
+use super::scenarios::{self, Scenario};
+use crate::config::ExperimentConfig;
+use crate::dydd::{balance, balance_ratio, DyddOutcome, DyddParams};
+use crate::util::timer::fmt_secs;
+use crate::util::Table;
+
+/// Every reproducible artifact of §6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableId {
+    T1,
+    T2,
+    T3,
+    T4,
+    T5,
+    T6,
+    T7,
+    T8,
+    T9,
+    T10,
+    T11,
+    T12,
+    Fig5,
+}
+
+impl TableId {
+    pub fn parse(s: &str) -> Option<TableId> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "1" | "t1" => TableId::T1,
+            "2" | "t2" => TableId::T2,
+            "3" | "t3" => TableId::T3,
+            "4" | "t4" => TableId::T4,
+            "5" | "t5" => TableId::T5,
+            "6" | "t6" => TableId::T6,
+            "7" | "t7" => TableId::T7,
+            "8" | "t8" => TableId::T8,
+            "9" | "t9" => TableId::T9,
+            "10" | "t10" => TableId::T10,
+            "11" | "t11" => TableId::T11,
+            "12" | "t12" => TableId::T12,
+            "fig5" | "f5" | "figure5" => TableId::Fig5,
+            _ => return None,
+        })
+    }
+}
+
+pub fn all_tables() -> Vec<TableId> {
+    use TableId::*;
+    vec![T1, T2, T3, T4, T5, T6, T7, T8, T9, T10, T11, T12, Fig5]
+}
+
+fn base_cfg(full: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    if !full {
+        cfg.n = 256;
+    }
+    cfg
+}
+
+/// DyDD-parameter table (Tables 1, 2, 4-7): one row per subdomain.
+fn dydd_param_table(title: &str, sc: &Scenario, out: &DyddOutcome) -> Table {
+    let has_lr = out.l_r.is_some();
+    let headers: Vec<&str> = if has_lr {
+        vec!["p", "i", "deg(i)", "l_in", "l_r", "l_fin", "i_ad"]
+    } else {
+        vec!["p", "i", "deg(i)", "l_in", "l_fin", "i_ad"]
+    };
+    let mut t = Table::new(title, &headers);
+    let p = sc.graph.p();
+    for i in 0..p {
+        let ad: Vec<String> =
+            sc.graph.neighbours(i).iter().map(|j| (j + 1).to_string()).collect();
+        let mut row = vec![
+            if i == 0 { p.to_string() } else { String::new() },
+            (i + 1).to_string(),
+            sc.graph.degree(i).to_string(),
+            out.l_in[i].to_string(),
+        ];
+        if let Some(lr) = &out.l_r {
+            row.push(lr[i].to_string());
+        }
+        row.push(out.l_fin[i].to_string());
+        row.push(format!("[{}]", ad.join(" ")));
+        t.row(&row);
+    }
+    t.footnote = Some(format!(
+        "E = {:.3}  (avg load {:.1})",
+        out.balance(),
+        out.l_fin.iter().sum::<usize>() as f64 / p as f64
+    ));
+    t
+}
+
+/// Timing table (Tables 3, 8): one row per case.
+fn dydd_timing_table(title: &str, cases: &[(usize, DyddOutcome)]) -> Table {
+    let mut t = Table::new(title, &["Case", "T^p_DyDD(m)", "T_r(m)", "Oh_DyDD(m)", "E"]);
+    for (case, out) in cases {
+        t.row(&[
+            case.to_string(),
+            fmt_secs(out.t_dydd.as_secs_f64()),
+            fmt_secs(out.t_repartition.as_secs_f64()),
+            fmt_secs(out.overhead()),
+            format!("{:.3}", out.balance()),
+        ]);
+    }
+    t
+}
+
+fn ddkf_perf_rows(t: &mut Table, rep: &ExperimentReport) {
+    t.row(&[
+        rep.p.to_string(),
+        (rep.n / rep.p).to_string(),
+        fmt_secs(rep.t_parallel.as_secs_f64()),
+        fmt_secs(rep.t_critical.as_secs_f64()),
+        format!("{:.2}", rep.speedup_sim().unwrap_or(f64::NAN)),
+        format!("{:.2}", rep.efficiency_sim().unwrap_or(f64::NAN)),
+    ]);
+}
+
+/// Render one table (prints nothing; caller decides).
+pub fn render_table(id: TableId, full: bool) -> anyhow::Result<Table> {
+    let params = DyddParams::default();
+    Ok(match id {
+        TableId::T1 => {
+            let sc = scenarios::example1(1);
+            let out = balance(&sc.graph, &sc.l_in, &params)?;
+            dydd_param_table("Table 1 — Example 1 Case 1 (both loaded, unbalanced)", &sc, &out)
+        }
+        TableId::T2 => {
+            let sc = scenarios::example1(2);
+            let out = balance(&sc.graph, &sc.l_in, &params)?;
+            dydd_param_table("Table 2 — Example 1 Case 2 (Omega_2 empty)", &sc, &out)
+        }
+        TableId::T3 => {
+            let mut cases = Vec::new();
+            for c in 1..=2 {
+                let sc = scenarios::example1(c);
+                cases.push((c, balance(&sc.graph, &sc.l_in, &params)?));
+            }
+            dydd_timing_table("Table 3 — Example 1 execution times", &cases)
+        }
+        TableId::T4 | TableId::T5 | TableId::T6 | TableId::T7 => {
+            let case = match id {
+                TableId::T4 => 1,
+                TableId::T5 => 2,
+                TableId::T6 => 3,
+                _ => 4,
+            };
+            let sc = scenarios::example2(case);
+            let out = balance(&sc.graph, &sc.l_in, &params)?;
+            let titles = [
+                "Table 4 — Example 2 Case 1 (all loaded)",
+                "Table 5 — Example 2 Case 2 (Omega_2 empty)",
+                "Table 6 — Example 2 Case 3 (Omega_1,2 empty)",
+                "Table 7 — Example 2 Case 4 (Omega_1..3 empty)",
+            ];
+            dydd_param_table(titles[case - 1], &sc, &out)
+        }
+        TableId::T8 => {
+            let mut cases = Vec::new();
+            for c in 1..=4 {
+                let sc = scenarios::example2(c);
+                cases.push((c, balance(&sc.graph, &sc.l_in, &params)?));
+            }
+            dydd_timing_table("Table 8 — Example 2 execution times", &cases)
+        }
+        TableId::T9 => {
+            let mut cfg = base_cfg(full);
+            cfg.backend = crate::coordinator::SolverBackend::Kf;
+            let mut t = Table::new(
+                &format!(
+                    "Table 9 — DD-KF performance, Examples 1-2 (n = {}, m = {})",
+                    cfg.n,
+                    if full { 1500 } else { 1500 / 8 }
+                ),
+                &["p", "n_loc", "T^p_wall", "T^p_DD-DA(sim)", "S^p", "E^p"],
+            );
+            let m = if full { 1500usize } else { 1500 / 8 };
+            for p in [2usize, 4] {
+                cfg.p = p;
+                let counts = split_counts(m, p, &scenarios::example1(1).l_in);
+                let rep = run_with_counts(&cfg, &counts, true)?;
+                if p == 2 {
+                    t.footnote = Some(format!(
+                        "T^1(m,n) = {} (sequential KF)",
+                        fmt_secs(rep.t_sequential.unwrap().as_secs_f64())
+                    ));
+                }
+                ddkf_perf_rows(&mut t, &rep);
+            }
+            t
+        }
+        TableId::T10 => {
+            let mut t = Table::new(
+                "Table 10 — Example 3 (star topology, m = 1032)",
+                &["p", "n_ad", "T^p_DyDD(m)", "l_max", "l_min", "E"],
+            );
+            for p in [2usize, 4, 8, 16, 32] {
+                let sc = scenarios::example3(p);
+                let out = balance(&sc.graph, &sc.l_in, &params)?;
+                let lmax = *out.l_fin.iter().max().unwrap();
+                let lmin = *out.l_fin.iter().min().unwrap();
+                t.row(&[
+                    p.to_string(),
+                    (p - 1).to_string(),
+                    fmt_secs(out.t_dydd.as_secs_f64()),
+                    lmax.to_string(),
+                    lmin.to_string(),
+                    format!("{:.3}", balance_ratio(&out.l_fin)),
+                ]);
+            }
+            t
+        }
+        TableId::T11 => {
+            let mut cfg = base_cfg(full);
+            let m = if full { 1500usize } else { 1500 / 8 };
+            let mut t = Table::new("Table 11 — error_DD-DA (Examples 1-2)", &["p", "error_DD-DA"]);
+            for p in [2usize, 4] {
+                cfg.p = p;
+                let counts = split_counts(m, p, &scenarios::example1(1).l_in);
+                let rep = run_with_counts(&cfg, &counts, true)?;
+                t.row(&[p.to_string(), format!("{:.2e}", rep.error_dd_da.unwrap())]);
+            }
+            t
+        }
+        TableId::T12 => {
+            let mut cfg = base_cfg(full);
+            cfg.backend = crate::coordinator::SolverBackend::Kf;
+            let m = if full { 2000usize } else { 2000 / 8 };
+            let mut t = Table::new(
+                &format!("Table 12 — Example 4 (chain topology, n = {}, m = {m})", cfg.n),
+                &["p", "n_loc", "T^p_DyDD", "T^p_wall", "T^p_DD-DA(sim)", "S^p", "E^p"],
+            );
+            let ps: &[usize] = if full { &[2, 4, 8, 16, 32] } else { &[2, 4, 8] };
+            for &p in ps {
+                cfg.p = p;
+                let sc = scenarios::example4(p);
+                let counts = rescale_counts(&sc.l_in, m);
+                let rep = run_with_counts(&cfg, &counts, true)?;
+                let tdydd =
+                    rep.dydd.as_ref().map(|d| d.dydd.t_dydd.as_secs_f64()).unwrap_or(0.0);
+                if p == ps[0] {
+                    t.footnote = Some(format!(
+                        "T^1(m,n) = {} (sequential KF)",
+                        fmt_secs(rep.t_sequential.unwrap().as_secs_f64())
+                    ));
+                }
+                t.row(&[
+                    p.to_string(),
+                    (cfg.n / p).to_string(),
+                    fmt_secs(tdydd),
+                    fmt_secs(rep.t_parallel.as_secs_f64()),
+                    fmt_secs(rep.t_critical.as_secs_f64()),
+                    format!("{:.2}", rep.speedup_sim().unwrap_or(f64::NAN)),
+                    format!("{:.2}", rep.efficiency_sim().unwrap_or(f64::NAN)),
+                ]);
+            }
+            t
+        }
+        TableId::Fig5 => {
+            let mut cfg = base_cfg(full);
+            let mut t = Table::new(
+                "Figure 5 — error_DD-DA versus p (left: Example 3; right: Example 4)",
+                &["p", "error (ex3, m=1032)", "error (ex4, m=2000)"],
+            );
+            let (m3, m4) = if full { (1032usize, 2000usize) } else { (1032 / 8, 2000 / 8) };
+            let ps: &[usize] = if full { &[2, 4, 8, 16, 32] } else { &[2, 4, 8] };
+            for &p in ps {
+                cfg.p = p;
+                let c3 = rescale_counts(&scenarios::example3(p).l_in, m3);
+                let e3 = run_with_counts(&cfg, &c3, true)?.error_dd_da.unwrap();
+                let c4 = rescale_counts(&scenarios::example4(p).l_in, m4);
+                let e4 = run_with_counts(&cfg, &c4, true)?.error_dd_da.unwrap();
+                t.row(&[p.to_string(), format!("{e3:.2e}"), format!("{e4:.2e}")]);
+            }
+            t.footnote =
+                Some("paper reports ~1e-11; DD is exact so errors are fp-roundoff level".into());
+            t
+        }
+    })
+}
+
+/// Split `m` observations over p subdomains following the *shape* of a
+/// template census (rescaled and adjusted to sum exactly to m).
+fn split_counts(m: usize, p: usize, template: &[usize]) -> Vec<usize> {
+    let shape: Vec<usize> = (0..p).map(|i| template[i % template.len()]).collect();
+    rescale_counts(&shape, m)
+}
+
+fn rescale_counts(shape: &[usize], m: usize) -> Vec<usize> {
+    let total: usize = shape.iter().sum();
+    let mut out: Vec<usize> =
+        shape.iter().map(|&s| s * m / total.max(1)).collect();
+    let mut assigned: usize = out.iter().sum();
+    // Distribute the rounding remainder.
+    let mut i = 0;
+    let len = out.len();
+    while assigned < m {
+        out[i % len] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rescale_sums_exactly() {
+        let c = rescale_counts(&[1, 2, 3, 4], 1500);
+        assert_eq!(c.iter().sum::<usize>(), 1500);
+        let c = rescale_counts(&[5, 0, 0], 100);
+        assert_eq!(c.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn dydd_only_tables_render() {
+        for id in [
+            TableId::T1,
+            TableId::T2,
+            TableId::T3,
+            TableId::T4,
+            TableId::T5,
+            TableId::T6,
+            TableId::T7,
+            TableId::T8,
+            TableId::T10,
+        ] {
+            let t = render_table(id, false).unwrap();
+            assert!(!t.rows.is_empty(), "{id:?}");
+            assert!(!t.render().is_empty());
+        }
+    }
+
+    #[test]
+    fn table1_reaches_750_750() {
+        let t = render_table(TableId::T1, false).unwrap();
+        let s = t.render();
+        assert!(s.contains("750"), "{s}");
+    }
+
+    #[test]
+    fn table_ids_parse() {
+        assert_eq!(TableId::parse("7"), Some(TableId::T7));
+        assert_eq!(TableId::parse("fig5"), Some(TableId::Fig5));
+        assert_eq!(TableId::parse("nope"), None);
+        assert_eq!(all_tables().len(), 13);
+    }
+}

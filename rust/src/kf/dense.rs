@@ -1,0 +1,137 @@
+//! Dense predict/correct Kalman filter for dynamic models (eqs. 5-8) —
+//! the reference filter of the e2e assimilation driver.
+
+use super::sequential::rank1_update;
+use crate::linalg::{Cholesky, Mat};
+
+/// Dense KF state (x, P) over an n-dimensional model.
+#[derive(Debug, Clone)]
+pub struct DenseKf {
+    pub x: Vec<f64>,
+    pub p: Mat,
+}
+
+impl DenseKf {
+    pub fn new(x: Vec<f64>, p: Mat) -> Self {
+        assert_eq!(p.rows(), x.len());
+        assert_eq!(p.cols(), x.len());
+        DenseKf { x, p }
+    }
+
+    /// Initialize from a weighted prior: x = mean, P = diag(1/w).
+    pub fn from_prior(mean: Vec<f64>, weights: &[f64]) -> Self {
+        let p = Mat::diag(&weights.iter().map(|&w| 1.0 / w).collect::<Vec<_>>());
+        DenseKf::new(mean, p)
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Predictor phase (eqs. 5-6): x ← M x, P ← M P Mᵀ + Q (Q diagonal).
+    pub fn predict(&mut self, m: &Mat, qdiag: &[f64]) {
+        assert_eq!(m.rows(), self.n());
+        self.x = m.matvec(&self.x);
+        let mp = m.matmul(&self.p);
+        self.p = mp.matmul(&m.transpose());
+        for (i, &q) in qdiag.iter().enumerate() {
+            self.p[(i, i)] += q;
+        }
+    }
+
+    /// Corrector phase: assimilate one observation row.
+    pub fn correct(&mut self, h: &[f64], rvar: f64, y: f64) {
+        rank1_update(&mut self.x, &mut self.p, h, rvar, y);
+    }
+
+    /// Assimilate a batch of rows sequentially.
+    pub fn correct_batch(&mut self, rows: &[(Vec<f64>, f64, f64)]) {
+        for (h, rvar, y) in rows {
+            self.correct(h, *rvar, *y);
+        }
+    }
+
+    /// Batch correction via the joseph-free information form (oracle for
+    /// tests): posterior = (P⁻¹ + HᵀR⁻¹H)⁻¹, etc.
+    pub fn correct_batch_information(&mut self, rows: &[(Vec<f64>, f64, f64)]) {
+        let n = self.n();
+        let pinv = Cholesky::new(&self.p).expect("P must be SPD").inverse();
+        let mut g = pinv.clone();
+        let mut rhs = pinv.matvec(&self.x);
+        for (h, rvar, y) in rows {
+            let w = 1.0 / rvar;
+            for i in 0..n {
+                if h[i] == 0.0 {
+                    continue;
+                }
+                rhs[i] += w * h[i] * y;
+                for j in 0..n {
+                    g[(i, j)] += w * h[i] * h[j];
+                }
+            }
+        }
+        let chol = Cholesky::new(&g).expect("posterior information must be SPD");
+        self.x = chol.solve(&rhs);
+        self.p = chol.inverse();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    #[test]
+    fn predict_matches_formula() {
+        let mut rng = Rng::new(1);
+        let n = 8;
+        let m = Mat::gaussian(n, n, &mut rng);
+        let mut kf = DenseKf::from_prior(rng.gaussian_vec(n), &vec![2.0; n]);
+        let x0 = kf.x.clone();
+        let p0 = kf.p.clone();
+        let q = vec![0.1; n];
+        kf.predict(&m, &q);
+        assert!(dist2(&kf.x, &m.matvec(&x0)) < 1e-12);
+        let mut want = m.matmul(&p0).matmul(&m.transpose());
+        for i in 0..n {
+            want[(i, i)] += 0.1;
+        }
+        let mut diff = want;
+        diff.scale(-1.0);
+        diff.add_assign(&kf.p);
+        assert!(diff.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn sequential_equals_information_form() {
+        let mut rng = Rng::new(2);
+        let n = 10;
+        let mut a = DenseKf::from_prior(rng.gaussian_vec(n), &vec![1.5; n]);
+        let mut b = a.clone();
+        let rows: Vec<(Vec<f64>, f64, f64)> = (0..12)
+            .map(|_| {
+                let mut h = vec![0.0; n];
+                h[rng.below(n)] = 1.0;
+                (h, 0.05, rng.gaussian())
+            })
+            .collect();
+        a.correct_batch(&rows);
+        b.correct_batch_information(&rows);
+        assert!(dist2(&a.x, &b.x) < 1e-9);
+        let mut diff = a.p.clone();
+        diff.scale(-1.0);
+        diff.add_assign(&b.p);
+        assert!(diff.max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn correcting_reduces_variance() {
+        let mut kf = DenseKf::from_prior(vec![0.0; 4], &vec![1.0; 4]);
+        let before = kf.p[(2, 2)];
+        let mut h = vec![0.0; 4];
+        h[2] = 1.0;
+        kf.correct(&h, 0.1, 1.0);
+        assert!(kf.p[(2, 2)] < before);
+    }
+}

@@ -1,0 +1,13 @@
+//! Kalman Filter solvers (§2.1).
+//!
+//! * [`sequential`] — VAR-KF on a CLS instance: initialize from the state
+//!   system, then assimilate observation rows one at a time by rank-1
+//!   updates. This is the paper's sequential baseline T¹(m, n).
+//! * [`dense`] — textbook dense predict/correct KF for dynamic models
+//!   (the e2e driver's reference filter).
+
+pub mod dense;
+pub mod sequential;
+
+pub use dense::DenseKf;
+pub use sequential::{kf_solve_cls, KfSolution};

@@ -1,0 +1,33 @@
+//! # dydd-da — Parallel Dynamic Domain Decomposition for Data Assimilation
+//!
+//! Rust + JAX + Pallas reproduction of *"Parallel framework for Dynamic
+//! Domain Decomposition of Data Assimilation problems: a case study on
+//! Kalman Filter algorithm"* (D'Amore & Cacciapuoti, CMM 2022,
+//! DOI 10.1002/cmm4.1145).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L3 (this crate)** — the DyDD dynamic load balancer, the DD-KF
+//!   alternating-Schwarz coordinator, and every substrate (linalg, graphs,
+//!   domain partitioning, sequential KF baseline).
+//! * **L2/L1 (build-time python)** — JAX model functions composing Pallas
+//!   kernels, AOT-lowered to HLO-text artifacts executed through PJRT by
+//!   [`runtime`].
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+
+pub mod cls;
+pub mod config;
+pub mod coordinator;
+pub mod covariance;
+pub mod ddkf;
+pub mod domain;
+pub mod dydd;
+pub mod fourd;
+pub mod graph;
+pub mod harness;
+pub mod kf;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,157 @@
+//! Cholesky factorization for SPD systems — the native mirror of the L2
+//! `assemble`/`solve` artifacts (used for oracle paths, no-artifact
+//! fallback, and the tiny per-step solves inside DyDD).
+
+use super::mat::Mat;
+use super::tri;
+
+/// Error for non-SPD inputs.
+#[derive(Debug, thiserror::Error)]
+#[error("matrix not positive definite at pivot {pivot} (value {value:.3e})")]
+pub struct NotSpd {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+/// Lower-triangular Cholesky factor L with A = L L^T.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. O(n^3/3).
+    pub fn new(a: &Mat) -> Result<Self, NotSpd> {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs square input");
+        let n = a.rows();
+        let mut l = a.clone();
+        for j in 0..n {
+            // d = a_jj - sum_k l_jk^2
+            let mut d = l[(j, j)];
+            for k in 0..j {
+                d -= l[(j, k)] * l[(j, k)];
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(NotSpd { pivot: j, value: d });
+            }
+            let djj = d.sqrt();
+            l[(j, j)] = djj;
+            for i in (j + 1)..n {
+                let mut s = l[(i, j)];
+                let (ri, rj) = (i, j);
+                for k in 0..j {
+                    s -= l[(ri, k)] * l[(rj, k)];
+                }
+                l[(i, j)] = s / djj;
+            }
+        }
+        // Zero the strict upper triangle for cleanliness.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                l[(i, j)] = 0.0;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve A x = b via forward + back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = tri::solve_lower(&self.l, b);
+        tri::solve_upper_transposed(&self.l, &y)
+    }
+
+    /// Solve for several right-hand sides (columns of B).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            let x = self.solve(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// A^{-1} (used for P0 = (H0^T R0 H0)^{-1} in the KF init).
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.l.rows()))
+    }
+
+    /// log det A = 2 sum log l_jj.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|j| self.l[(j, j)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let a = Mat::gaussian(n + 4, n, &mut rng);
+        let mut g = a.transpose().matmul(&a);
+        for i in 0..n {
+            g[(i, i)] += 0.5;
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(12, 1);
+        let ch = Cholesky::new(&a).unwrap();
+        let l = ch.factor();
+        let rec = l.matmul(&l.transpose());
+        let mut diff = rec;
+        diff.scale(-1.0);
+        diff.add_assign(&a);
+        assert!(diff.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches_residual() {
+        let a = spd(20, 2);
+        let mut rng = Rng::new(3);
+        let b = rng.gaussian_vec(20);
+        let x = Cholesky::new(&a).unwrap().solve(&b);
+        assert!(dist2(&a.matvec(&x), &b) < 1e-9);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd(8, 4);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        let mut diff = prod;
+        diff.add_assign(&{
+            let mut m = Mat::eye(8);
+            m.scale(-1.0);
+            m
+        });
+        assert!(diff.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn log_det_matches_known() {
+        let a = Mat::diag(&[2.0, 3.0, 4.0]);
+        let ld = Cholesky::new(&a).unwrap().log_det();
+        assert!((ld - (24.0_f64).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,142 @@
+//! LU with partial pivoting — general square solves. Needed for the DyDD
+//! scheduling step: the graph Laplacian system `L λ = b` is symmetric
+//! positive *semi*-definite (singular — the constant vector is in the
+//! kernel), solved on the mean-zero subspace via a grounded formulation
+//! (see graph::solver), which is non-symmetric-safe under LU.
+
+use super::mat::Mat;
+
+/// Error for numerically singular inputs.
+#[derive(Debug, thiserror::Error)]
+#[error("matrix singular at column {col} (pivot {pivot:.3e})")]
+pub struct Singular {
+    pub col: usize,
+    pub pivot: f64,
+}
+
+/// PA = LU factorization.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    lu: Mat,
+    perm: Vec<usize>,
+    sign: f64,
+}
+
+impl Lu {
+    pub fn new(a: &Mat) -> Result<Self, Singular> {
+        assert_eq!(a.rows(), a.cols());
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for col in 0..n {
+            // Partial pivot.
+            let mut pmax = lu[(col, col)].abs();
+            let mut prow = col;
+            for r in (col + 1)..n {
+                let v = lu[(r, col)].abs();
+                if v > pmax {
+                    pmax = v;
+                    prow = r;
+                }
+            }
+            if pmax < 1e-300 {
+                return Err(Singular { col, pivot: pmax });
+            }
+            if prow != col {
+                perm.swap(prow, col);
+                sign = -sign;
+                // Swap full rows.
+                for j in 0..n {
+                    let a = lu[(col, j)];
+                    lu[(col, j)] = lu[(prow, j)];
+                    lu[(prow, j)] = a;
+                }
+            }
+            let piv = lu[(col, col)];
+            for r in (col + 1)..n {
+                let f = lu[(r, col)] / piv;
+                lu[(r, col)] = f;
+                if f == 0.0 {
+                    continue;
+                }
+                for j in (col + 1)..n {
+                    let v = lu[(col, j)];
+                    lu[(r, j)] -= f * v;
+                }
+            }
+        }
+        Ok(Lu { lu, perm, sign })
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // Apply permutation, then Ly = Pb (unit diagonal), then Ux = y.
+        let mut y: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        for i in 0..n {
+            let row = self.lu.row(i);
+            let mut s = y[i];
+            for j in 0..i {
+                s -= row[j] * y[j];
+            }
+            y[i] = s;
+        }
+        for i in (0..n).rev() {
+            let row = self.lu.row(i);
+            let mut s = y[i];
+            for j in (i + 1)..n {
+                s -= row[j] * y[j];
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.lu.rows() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    #[test]
+    fn solve_random() {
+        let mut rng = Rng::new(5);
+        let a = Mat::gaussian(15, 15, &mut rng);
+        let x0 = rng.gaussian_vec(15);
+        let b = a.matvec(&x0);
+        let x = Lu::new(&a).unwrap().solve(&b);
+        assert!(dist2(&x, &x0) < 1e-8);
+    }
+
+    #[test]
+    fn needs_pivoting() {
+        // Zero on the leading diagonal forces a row swap.
+        let a = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let x = Lu::new(&a).unwrap().solve(&[3.0, 7.0]);
+        assert!(dist2(&x, &[7.0, 3.0]) < 1e-14);
+    }
+
+    #[test]
+    fn det_known() {
+        let a = Mat::from_rows(&[vec![2.0, 0.0], vec![0.0, 3.0]]);
+        assert!((Lu::new(&a).unwrap().det() - 6.0).abs() < 1e-12);
+        let b = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert!((Lu::new(&b).unwrap().det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(Lu::new(&a).is_err());
+    }
+}

@@ -1,0 +1,385 @@
+//! Row-major dense matrix with the operations the coordinator needs:
+//! matmul (blocked), matvec, transposes, gram products, norms.
+
+use crate::util::Rng;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(6);
+        for i in 0..show {
+            let cols = self.cols.min(8);
+            let row: Vec<String> =
+                (0..cols).map(|j| format!("{:10.4}", self[(i, j)])).collect();
+            writeln!(f, "  {}{}", row.join(" "), if self.cols > 8 { " ..." } else { "" })?;
+        }
+        if self.rows > show {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat { rows: r, cols: c, data: rows.concat() }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Mat { rows, cols, data: rng.gaussian_vec(rows * cols) }
+    }
+
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Column-range submatrix [c0, c1) — the restriction A|_{I} of Def. 3.
+    pub fn col_slice(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut m = Mat::zeros(self.rows, c1 - c0);
+        for i in 0..self.rows {
+            m.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        m
+    }
+
+    /// Row-range submatrix [r0, r1).
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Gather a row subset (used to build local observation blocks).
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut m = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            m.row_mut(k).copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for j in 0..self.cols {
+                acc += row[j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// y = A^T x.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let xi = x[i];
+            for j in 0..self.cols {
+                y[j] += row[j] * xi;
+            }
+        }
+        y
+    }
+
+    /// C = A * B, blocked i-k-j loop (cache-friendly for row-major).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        const BK: usize = 64;
+        for k0 in (0..self.cols).step_by(BK) {
+            let k1 = (k0 + BK).min(self.cols);
+            for i in 0..self.rows {
+                let arow = self.row(i);
+                let crow_ptr = i * c.cols;
+                for k in k0..k1 {
+                    let aik = arow[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(k);
+                    let crow = &mut c.data[crow_ptr..crow_ptr + b.cols];
+                    for j in 0..b.cols {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// G = A^T diag(d) A — the weighted gram (native oracle for the L1 kernel).
+    pub fn weighted_gram(&self, d: &[f64]) -> Mat {
+        assert_eq!(d.len(), self.rows);
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for i in 0..self.rows {
+            let di = d[i];
+            if di == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for a in 0..n {
+                let v = di * row[a];
+                if v == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[a * n..(a + 1) * n];
+                for bcol in 0..n {
+                    grow[bcol] += v * row[bcol];
+                }
+            }
+        }
+        g
+    }
+
+    /// c = A^T diag(d) r.
+    pub fn at_db(&self, d: &[f64], r: &[f64]) -> Vec<f64> {
+        assert_eq!(d.len(), self.rows);
+        assert_eq!(r.len(), self.rows);
+        let mut c = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let s = d[i] * r[i];
+            if s == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.cols {
+                c[j] += s * row[j];
+            }
+        }
+        c
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0_f64, |m, x| m.max(x.abs()))
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Euclidean norm of a vector.
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Euclidean distance between vectors.
+pub fn dist2(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
+}
+
+/// Dot product.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// y += alpha * x.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::gaussian(7, 5, &mut rng);
+        let i5 = Mat::eye(5);
+        assert!((a.matmul(&i5).fro_norm() - a.fro_norm()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(9, 4, &mut rng);
+        let d: Vec<f64> = (0..9).map(|i| 0.5 + i as f64).collect();
+        let g = a.weighted_gram(&d);
+        let explicit = a.transpose().matmul(&Mat::diag(&d)).matmul(&a);
+        let mut diff = g.clone();
+        diff.scale(-1.0);
+        diff.add_assign(&explicit);
+        assert!(diff.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let mut rng = Rng::new(3);
+        let a = Mat::gaussian(6, 4, &mut rng);
+        let x = rng.gaussian_vec(6);
+        let want = a.transpose().matvec(&x);
+        assert!(dist2(&a.matvec_t(&x), &want) < 1e-12);
+    }
+
+    #[test]
+    fn slices_and_gather() {
+        let a = Mat::from_fn(4, 6, |i, j| (i * 10 + j) as f64);
+        let s = a.col_slice(2, 5);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s[(1, 0)], 12.0);
+        let r = a.gather_rows(&[3, 0]);
+        assert_eq!(r[(0, 5)], 35.0);
+        assert_eq!(r[(1, 0)], 0.0);
+        let rs = a.row_slice(1, 3);
+        assert_eq!(rs.rows(), 2);
+        assert_eq!(rs[(0, 0)], 10.0);
+    }
+
+    #[test]
+    fn at_db_matches_explicit() {
+        let mut rng = Rng::new(4);
+        let a = Mat::gaussian(8, 3, &mut rng);
+        let d = rng.gaussian_vec(8).iter().map(|x| x.abs()).collect::<Vec<_>>();
+        let r = rng.gaussian_vec(8);
+        let dr: Vec<f64> = d.iter().zip(&r).map(|(x, y)| x * y).collect();
+        assert!(dist2(&a.at_db(&d, &r), &a.matvec_t(&dr)) < 1e-12);
+    }
+}

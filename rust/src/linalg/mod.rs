@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate (f64, row-major).
+//!
+//! The coordinator needs native linear algebra for (a) the DyDD scheduling
+//! step's graph-Laplacian solve, (b) oracle/reference paths in tests and
+//! benches, and (c) a no-artifact fallback solver so the library works even
+//! before `make artifacts` has run. Sizes are moderate (<= a few thousand),
+//! so straightforward cache-aware implementations suffice; the heavy
+//! per-subdomain gram/factor work runs through the AOT XLA artifacts.
+
+pub mod chol;
+pub mod lu;
+pub mod mat;
+pub mod tri;
+
+pub use chol::Cholesky;
+pub use lu::Lu;
+pub use mat::Mat;

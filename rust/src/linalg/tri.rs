@@ -1,0 +1,80 @@
+//! Triangular solves (forward/backward substitution).
+
+use super::mat::Mat;
+
+/// Solve L y = b with L lower-triangular (diagonal from L).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let row = l.row(i);
+        let mut s = b[i];
+        for j in 0..i {
+            s -= row[j] * y[j];
+        }
+        y[i] = s / row[i];
+    }
+    y
+}
+
+/// Solve L^T x = y given lower-triangular L (i.e. back substitution on L^T).
+pub fn solve_upper_transposed(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(y.len(), n);
+    let mut x = y.to_vec();
+    for i in (0..n).rev() {
+        // x_i = (y_i - sum_{k>i} l_ki x_k) / l_ii
+        let mut s = x[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve U x = b with U upper-triangular.
+pub fn solve_upper(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let row = u.row(i);
+        let mut s = b[i];
+        for j in (i + 1)..n {
+            s -= row[j] * x[j];
+        }
+        x[i] = s / row[i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::dist2;
+
+    #[test]
+    fn lower_solve() {
+        let l = Mat::from_rows(&[vec![2.0, 0.0], vec![1.0, 3.0]]);
+        let y = solve_lower(&l, &[4.0, 11.0]);
+        assert!(dist2(&y, &[2.0, 3.0]) < 1e-14);
+    }
+
+    #[test]
+    fn upper_solve() {
+        let u = Mat::from_rows(&[vec![2.0, 1.0], vec![0.0, 3.0]]);
+        let x = solve_upper(&u, &[7.0, 9.0]);
+        assert!(dist2(&x, &[2.0, 3.0]) < 1e-14);
+    }
+
+    #[test]
+    fn transposed_roundtrip() {
+        let l = Mat::from_rows(&[vec![1.5, 0.0, 0.0], vec![0.3, 2.0, 0.0], vec![0.1, -1.0, 1.2]]);
+        let x0 = [1.0, -2.0, 0.5];
+        let y = l.transpose().matvec(&x0);
+        let x = solve_upper_transposed(&l, &y);
+        assert!(dist2(&x, &x0) < 1e-12);
+    }
+}

@@ -1,0 +1,253 @@
+//! `dydd-da` — CLI launcher for the DyDD / DD-KF framework.
+//!
+//! Subcommands:
+//!   info                     platform, artifact and build information
+//!   run [--config F] [...]   run one experiment (DyDD + DD-KF + baseline)
+//!   dydd --loads a,b,c ...   run the load balancer on an abstract scenario
+//!   table <1..12|fig5|all>   regenerate the paper's tables/figures
+//!   bench-tables [--full]    regenerate everything (what EXPERIMENTS.md cites)
+
+use dydd_da::config::ExperimentConfig;
+use dydd_da::coordinator::SolverBackend;
+use dydd_da::domain::ObsLayout;
+use dydd_da::dydd::{balance, DyddParams};
+use dydd_da::graph::Graph;
+use dydd_da::harness::{all_tables, render_table, run_experiment, TableId};
+use dydd_da::runtime;
+use dydd_da::util::timer::fmt_secs;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("info") => cmd_info(),
+        Some("run") => cmd_run(&args[1..]),
+        Some("dydd") => cmd_dydd(&args[1..]),
+        Some("table") => cmd_table(&args[1..]),
+        Some("bench-tables") => cmd_bench_tables(&args[1..]),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown subcommand {other:?}\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+dydd-da — Parallel Dynamic Domain Decomposition for Data Assimilation
+
+USAGE:
+  dydd-da info
+  dydd-da run [--config FILE] [--n N] [--m M] [--p P] [--layout L]
+              [--backend native|kf|pjrt] [--overlap S] [--mu MU]
+              [--no-dydd] [--seed SEED] [--no-baseline]
+  dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
+  dydd-da table <1..12|fig5|all> [--full]
+  dydd-da bench-tables [--full]
+
+Layouts: uniform | ramp | cluster | two_clusters | left_packed
+";
+
+/// Tiny flag parser: `--key value` and boolean `--flag`.
+struct Flags<'a> {
+    args: &'a [String],
+}
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&'a str> {
+        self.args
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.args.get(i + 1))
+            .map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.args.iter().any(|a| a == key)
+    }
+
+    fn parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("bad value for {key}: {v:?}")),
+        }
+    }
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("dydd-da {} — DyDD / DD-KF reproduction", env!("CARGO_PKG_VERSION"));
+    let dir = runtime::default_artifacts_dir();
+    println!("artifacts dir : {}", dir.display());
+    if runtime::artifacts_available(&dir) {
+        let man = runtime::Manifest::load(&dir)?;
+        println!("artifacts     : {} entries (manifest ok)", man.artifacts.len());
+        runtime::with_engine(&dir, |eng| {
+            // Touch the PJRT client to report the platform.
+            let meta = eng
+                .manifest()
+                .pick_local_bucket(64, 32)
+                .map(|(a, _)| a.clone())
+                .expect("smallest bucket must exist");
+            eng.executable(&meta)?;
+            println!("pjrt          : CPU client ok, compiled {}", meta.name);
+            Ok(())
+        })?;
+    } else {
+        println!("artifacts     : NOT BUILT (run `make artifacts`) — native backend only");
+    }
+    println!("cores         : {}", std::thread::available_parallelism()?.get());
+    Ok(())
+}
+
+fn parse_layout(s: &str) -> anyhow::Result<ObsLayout> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "uniform" => ObsLayout::Uniform,
+        "ramp" => ObsLayout::Ramp,
+        "cluster" => ObsLayout::Cluster,
+        "two_clusters" => ObsLayout::TwoClusters,
+        "left_packed" => ObsLayout::LeftPacked,
+        other => anyhow::bail!("unknown layout {other:?}"),
+    })
+}
+
+fn cmd_run(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let mut cfg = match f.get("--config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(n) = f.parsed::<usize>("--n")? {
+        cfg.n = n;
+    }
+    if let Some(m) = f.parsed::<usize>("--m")? {
+        cfg.m = m;
+    }
+    if let Some(p) = f.parsed::<usize>("--p")? {
+        cfg.p = p;
+    }
+    if let Some(s) = f.get("--layout") {
+        cfg.layout = parse_layout(s)?;
+    }
+    if let Some(b) = f.get("--backend") {
+        cfg.backend =
+            SolverBackend::parse(b).ok_or_else(|| anyhow::anyhow!("unknown backend {b:?}"))?;
+    }
+    if let Some(s) = f.parsed::<usize>("--overlap")? {
+        cfg.schwarz.overlap = s;
+    }
+    if let Some(mu) = f.parsed::<f64>("--mu")? {
+        cfg.schwarz.mu = mu;
+    }
+    if let Some(seed) = f.parsed::<u64>("--seed")? {
+        cfg.seed = seed;
+    }
+    if f.has("--no-dydd") {
+        cfg.dydd = false;
+    }
+    cfg.validate()?;
+
+    let with_baseline = !f.has("--no-baseline");
+    println!(
+        "run: n={} m={} p={} layout={:?} backend={:?} dydd={}",
+        cfg.n, cfg.m, cfg.p, cfg.layout, cfg.backend, cfg.dydd
+    );
+    let rep = run_experiment(&cfg, with_baseline)?;
+    if let Some(d) = &rep.dydd {
+        println!(
+            "dydd : l_in={:?} -> l_fin={:?}  E={:.3}  T_DyDD={}  T_r={}",
+            d.dydd.l_in,
+            d.census_after,
+            d.balance(),
+            fmt_secs(d.dydd.t_dydd.as_secs_f64()),
+            fmt_secs(d.dydd.t_repartition.as_secs_f64()),
+        );
+    }
+    println!(
+        "ddkf : iters={} converged={} T^p={}",
+        rep.iters,
+        rep.converged,
+        fmt_secs(rep.t_parallel.as_secs_f64())
+    );
+    if let (Some(t1), Some(err)) = (rep.t_sequential, rep.error_dd_da) {
+        println!(
+            "base : T^1={}  S^p={:.2}  E^p={:.2}  error_DD-DA={err:.2e}",
+            fmt_secs(t1.as_secs_f64()),
+            rep.speedup().unwrap(),
+            rep.efficiency().unwrap(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dydd(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let loads: Vec<usize> = f
+        .get("--loads")
+        .ok_or_else(|| anyhow::anyhow!("--loads is required"))?
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --loads: {e}"))?;
+    let p = loads.len();
+    let graph = match f.get("--graph").unwrap_or("chain") {
+        "chain" => Graph::chain(p),
+        "star" => Graph::star(p),
+        "ring" => {
+            let mut g = Graph::chain(p);
+            if p > 2 {
+                g.add_edge(0, p - 1);
+            }
+            g
+        }
+        other => anyhow::bail!("unknown graph {other:?}"),
+    };
+    let out = balance(&graph, &loads, &DyddParams::default())?;
+    println!("l_in  = {:?}", out.l_in);
+    if let Some(lr) = &out.l_r {
+        println!("l_r   = {lr:?}   (after DD repair step)");
+    }
+    println!("l_fin = {:?}", out.l_fin);
+    println!(
+        "E = {:.3}   iters = {}   migrations = {}   T_DyDD = {}",
+        out.balance(),
+        out.iters,
+        out.migrations.len(),
+        fmt_secs(out.t_dydd.as_secs_f64())
+    );
+    Ok(())
+}
+
+fn cmd_table(args: &[String]) -> anyhow::Result<()> {
+    let full = args.iter().any(|a| a == "--full");
+    let which = args.first().ok_or_else(|| anyhow::anyhow!("table id required\n{USAGE}"))?;
+    let ids: Vec<TableId> = if which == "all" {
+        all_tables()
+    } else {
+        vec![TableId::parse(which).ok_or_else(|| anyhow::anyhow!("unknown table {which:?}"))?]
+    };
+    for id in ids {
+        let t = render_table(id, full)?;
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_bench_tables(args: &[String]) -> anyhow::Result<()> {
+    let full = args.iter().any(|a| a == "--full");
+    for id in all_tables() {
+        let t = render_table(id, full)?;
+        println!("{}", t.render());
+    }
+    Ok(())
+}

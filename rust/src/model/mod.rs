@@ -1,0 +1,19 @@
+//! Dynamic models M_{k,k+1} for the e2e assimilation driver (the paper's
+//! eq. 1 discretized to a linear propagator matrix).
+
+mod advection;
+
+pub use advection::{advection_diffusion, AdvectionDiffusion};
+
+use crate::linalg::Mat;
+
+/// A linear dynamic model: x_{k+1} = M x_k (+ w_k).
+pub trait DynamicModel {
+    fn n(&self) -> usize;
+    /// The propagator matrix M_{k,k+1} (time-invariant here).
+    fn matrix(&self) -> &Mat;
+    /// Apply without materializing products elsewhere.
+    fn step(&self, x: &[f64]) -> Vec<f64> {
+        self.matrix().matvec(x)
+    }
+}

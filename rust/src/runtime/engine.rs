@@ -1,0 +1,130 @@
+//! Thread-local PJRT engine: one CPU client + a compile-on-demand cache of
+//! loaded executables per OS thread.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (thread-bound), so the
+//! engine lives in a `thread_local!`. Coordinator workers that opt into the
+//! PJRT backend each get their own engine; single-threaded paths (examples,
+//! benches, tests) share the main thread's engine.
+
+use super::manifest::{ArtifactMeta, Manifest, ManifestError};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A thread's PJRT state.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error(transparent)]
+    Manifest(#[from] ManifestError),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("artifact {0} not found in manifest")]
+    UnknownArtifact(String),
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+impl Engine {
+    pub fn new(dir: &Path) -> Result<Engine, EngineError> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Fetch (compiling on first use) the executable for an artifact.
+    pub fn executable(
+        &self,
+        meta: &ArtifactMeta,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>, EngineError> {
+        if let Some(e) = self.cache.borrow().get(&meta.name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path_of(meta);
+        // HLO *text* interchange: the artifact's 64-bit-id-free round trip
+        // (see python/compile/aot.py).
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on host literals; returns the flattened output
+    /// tuple (every artifact is lowered with return_tuple=True). Accepts
+    /// owned literals or references so epoch-cached operands are not
+    /// re-copied per call.
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>, EngineError> {
+        let exe = self.executable(meta)?;
+        let result = exe.execute::<L>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+thread_local! {
+    static ENGINE: RefCell<Option<(PathBuf, Rc<Engine>)>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's engine for `dir`, creating it on first use.
+pub fn with_engine<T>(
+    dir: &Path,
+    f: impl FnOnce(&Engine) -> Result<T, EngineError>,
+) -> Result<T, EngineError> {
+    ENGINE.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let rebuild = match &*slot {
+            Some((d, _)) => d != dir,
+            None => true,
+        };
+        if rebuild {
+            *slot = Some((dir.to_path_buf(), Rc::new(Engine::new(dir)?)));
+        }
+        let engine = slot.as_ref().unwrap().1.clone();
+        drop(slot); // allow nested with_engine from f
+        f(&engine)
+    })
+}
+
+/// Quick availability probe: manifest readable and non-empty.
+pub fn artifacts_available(dir: &Path) -> bool {
+    Manifest::load(dir).map(|m| !m.artifacts.is_empty()).unwrap_or(false)
+}
+
+/// Build a Literal from an f64 slice with a given 2-D shape.
+pub fn literal_mat(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal, EngineError> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build a rank-1 Literal.
+pub fn literal_vec(data: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Extract an f64 vector from a literal.
+pub fn to_vec_f64(l: &xla::Literal) -> Result<Vec<f64>, EngineError> {
+    Ok(l.to_vec::<f64>()?)
+}

@@ -1,0 +1,217 @@
+//! `artifacts/manifest.json` parsing and shape-bucket selection.
+
+use crate::util::Json;
+use std::path::{Path, PathBuf};
+
+/// Artifact families (mirrors python/compile/shapes.py kinds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Assemble,
+    Solve,
+    KfChunk,
+    KfPredict,
+    ClsFull,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "assemble" => ArtifactKind::Assemble,
+            "solve" => ArtifactKind::Solve,
+            "kf_chunk" => ArtifactKind::KfChunk,
+            "kf_predict" => ArtifactKind::KfPredict,
+            "cls_full" => ArtifactKind::ClsFull,
+            _ => return None,
+        })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: String,
+    /// Row bucket (assemble/solve/cls_full).
+    pub m: usize,
+    /// Column bucket (assemble/solve: nloc; cls_full/kf: n).
+    pub n: usize,
+    /// Scan chunk (kf_chunk only).
+    pub chunk: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Parse(#[from] crate::util::json::JsonError),
+    #[error("manifest malformed: {0}")]
+    Malformed(String),
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|source| ManifestError::Io { path: path.clone(), source })?;
+        let json = Json::parse(&text)?;
+        let dtype = json.get("dtype").and_then(Json::as_str).unwrap_or("?");
+        if dtype != "f64" {
+            return Err(ManifestError::Malformed(format!("expected f64 manifest, got {dtype}")));
+        }
+        let arr = json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Malformed("missing artifacts[]".into()))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Malformed("artifact missing name".into()))?;
+            let kind_s = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Malformed(format!("{name}: missing kind")))?;
+            let Some(kind) = ArtifactKind::parse(kind_s) else {
+                continue; // forward-compat: skip unknown kinds
+            };
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Malformed(format!("{name}: missing file")))?;
+            let get = |k: &str| a.get(k).and_then(Json::as_usize).unwrap_or(0);
+            artifacts.push(ArtifactMeta {
+                name: name.to_string(),
+                kind,
+                file: file.to_string(),
+                m: get("m"),
+                n: if kind == ArtifactKind::Assemble || kind == ArtifactKind::Solve {
+                    get("nloc")
+                } else {
+                    get("n")
+                },
+                chunk: get("chunk"),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    fn find(&self, kind: ArtifactKind, pred: impl Fn(&ArtifactMeta) -> bool) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == kind && pred(a)).collect()
+    }
+
+    /// Smallest (by padded work m·n²) assemble/solve bucket covering
+    /// (m_rows, n_cols). Returns the pair (assemble, solve) — they share
+    /// shape buckets by construction.
+    pub fn pick_local_bucket(
+        &self,
+        m_rows: usize,
+        n_cols: usize,
+    ) -> Option<(&ArtifactMeta, &ArtifactMeta)> {
+        let fits = |a: &&ArtifactMeta| a.m >= m_rows && a.n >= n_cols;
+        let cost = |a: &&ArtifactMeta| a.m as u128 * (a.n as u128).pow(2);
+        let asm = self.find(ArtifactKind::Assemble, |a| fits(&a)).into_iter().min_by_key(cost)?;
+        let sol = self
+            .find(ArtifactKind::Solve, |a| a.m == asm.m && a.n == asm.n)
+            .into_iter()
+            .next()?;
+        Some((asm, sol))
+    }
+
+    /// kf_chunk bucket with exact state dim n (chunk is free choice:
+    /// prefer the largest chunk ≤ remaining rows, else the smallest).
+    pub fn pick_kf_chunk(&self, n: usize, rows_left: usize) -> Option<&ArtifactMeta> {
+        let all = self.find(ArtifactKind::KfChunk, |a| a.n == n);
+        all.iter()
+            .filter(|a| a.chunk <= rows_left.max(1))
+            .max_by_key(|a| a.chunk)
+            .or_else(|| all.iter().min_by_key(|a| a.chunk))
+            .copied()
+    }
+
+    pub fn pick_kf_predict(&self, n: usize) -> Option<&ArtifactMeta> {
+        self.find(ArtifactKind::KfPredict, |a| a.n == n).into_iter().next()
+    }
+
+    /// Smallest cls_full bucket covering (m, n).
+    pub fn pick_cls_full(&self, m_rows: usize, n_cols: usize) -> Option<&ArtifactMeta> {
+        self.find(ArtifactKind::ClsFull, |a| a.m >= m_rows && a.n >= n_cols)
+            .into_iter()
+            .min_by_key(|a| a.m as u128 * (a.n as u128).pow(2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::load(Path::new("artifacts")).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = manifest();
+        assert!(m.artifacts.len() > 100);
+        assert!(m.artifacts.iter().any(|a| a.kind == ArtifactKind::Assemble));
+        assert!(m.artifacts.iter().any(|a| a.kind == ArtifactKind::KfChunk));
+    }
+
+    #[test]
+    fn bucket_choice_is_minimal_cover() {
+        let man = manifest();
+        let (asm, sol) = man.pick_local_bucket(300, 100).unwrap();
+        assert!(asm.m >= 300 && asm.n >= 100);
+        assert_eq!((asm.m, asm.n), (sol.m, sol.n));
+        // No strictly smaller cover exists in the manifest.
+        for a in &man.artifacts {
+            if a.kind == ArtifactKind::Assemble && a.m >= 300 && a.n >= 100 {
+                assert!(
+                    a.m as u128 * (a.n as u128).pow(2) >= asm.m as u128 * (asm.n as u128).pow(2)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_sizes_hit_exact_buckets() {
+        let man = manifest();
+        // The paper's p=2, n=2048, m=2000 configuration.
+        let (asm, _) = man.pick_local_bucket(1024 + 2 + 1000, 1024).unwrap();
+        assert_eq!((asm.m, asm.n), (2048, 1024));
+    }
+
+    #[test]
+    fn oversize_returns_none() {
+        let man = manifest();
+        assert!(man.pick_local_bucket(100_000, 100_000).is_none());
+    }
+
+    #[test]
+    fn kf_buckets() {
+        let man = manifest();
+        let c = man.pick_kf_chunk(256, 1000).unwrap();
+        assert_eq!(c.n, 256);
+        assert!(man.pick_kf_predict(256).is_some());
+        assert!(man.pick_kf_predict(12345).is_none());
+        let f = man.pick_cls_full(300, 128).unwrap();
+        assert!(f.m >= 300 && f.n >= 128);
+    }
+}

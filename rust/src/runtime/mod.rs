@@ -1,0 +1,33 @@
+//! PJRT runtime: load and execute the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` (the L2/L1 layers), entirely from rust.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` and picks shape
+//!   buckets.
+//! * [`engine`] — a thread-local PJRT CPU client + compile-on-demand
+//!   executable cache (the `xla` crate's client is `Rc`-based and therefore
+//!   thread-bound; each coordinator thread that opts into the PJRT backend
+//!   owns an engine).
+//! * [`ops`] — typed wrappers (assemble / solve / kf_chunk / kf_predict /
+//!   cls_full) handling the exact padding conventions shared with
+//!   `python/compile/model.py`.
+//! * [`solver`] — [`PjrtLocalSolver`], the artifact-backed
+//!   [`crate::ddkf::LocalSolver`] used on the Schwarz hot path.
+
+pub mod engine;
+pub mod manifest;
+pub mod ops;
+pub mod solver;
+
+pub use engine::{artifacts_available, with_engine, Engine};
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+pub use ops::{assemble, cls_full, kf_chunk, kf_predict, prepare_operands, solve_rhs};
+pub use solver::PjrtLocalSolver;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$DYDD_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("DYDD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

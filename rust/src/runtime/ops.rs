@@ -1,0 +1,179 @@
+//! Typed artifact invocations with the padding conventions shared with
+//! python/compile/model.py:
+//!
+//! * rows: padded rows carry d = 0 (assemble/solve/cls_full) or
+//!   h = 0, rvar = 1, y = 0 (kf_chunk) — exact no-ops;
+//! * columns: padded columns carry diag_reg = 1 and reg_rhs = 0, giving
+//!   exactly-zero padded solution entries.
+
+use super::engine::{literal_mat, literal_vec, to_vec_f64, Engine, EngineError};
+use super::manifest::ArtifactMeta;
+use crate::linalg::Mat;
+
+/// Pad a dense (m x n) block into a (bm x bn) row-major buffer.
+pub fn pad_mat(a: &Mat, bm: usize, bn: usize) -> Vec<f64> {
+    assert!(a.rows() <= bm && a.cols() <= bn, "block larger than bucket");
+    let mut out = vec![0.0; bm * bn];
+    for i in 0..a.rows() {
+        out[i * bn..i * bn + a.cols()].copy_from_slice(a.row(i));
+    }
+    out
+}
+
+/// Pad a vector with a fill value.
+pub fn pad_vec(v: &[f64], len: usize, fill: f64) -> Vec<f64> {
+    assert!(v.len() <= len);
+    let mut out = vec![fill; len];
+    out[..v.len()].copy_from_slice(v);
+    out
+}
+
+/// Padded operand literals for one subdomain, built once per DyDD epoch
+/// and reused across every Schwarz iteration (the §Perf literal cache:
+/// re-padding + re-uploading A each iteration doubled the solve cost).
+pub struct PreparedOperands {
+    pub a_lit: xla::Literal,
+    pub d_lit: xla::Literal,
+    pub bm: usize,
+    pub bn: usize,
+}
+
+/// Build the padded (A, d) literals for a (meta.m, meta.n) bucket.
+pub fn prepare_operands(
+    meta: &ArtifactMeta,
+    a: &Mat,
+    d: &[f64],
+) -> Result<PreparedOperands, EngineError> {
+    let (bm, bn) = (meta.m, meta.n);
+    let a_pad = pad_mat(a, bm, bn);
+    let d_pad = pad_vec(d, bm, 0.0);
+    Ok(PreparedOperands {
+        a_lit: literal_mat(&a_pad, bm, bn)?,
+        d_lit: literal_vec(&d_pad),
+        bm,
+        bn,
+    })
+}
+
+/// assemble: G = AᵀDA + diag(reg) on the (meta.m, meta.n) bucket (the L1
+/// Pallas gram kernel). Returns the dense bucket-sized normal matrix; the
+/// caller factors it natively (see model.assemble_fn for the rationale).
+pub fn assemble(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    ops: &PreparedOperands,
+    reg: &[f64],
+) -> Result<Vec<f64>, EngineError> {
+    let reg_pad = pad_vec(reg, meta.n, 1.0); // unit reg on padded columns
+    let reg_lit = literal_vec(&reg_pad);
+    let out = engine.execute(meta, &[&ops.a_lit, &ops.d_lit, &reg_lit])?;
+    to_vec_f64(&out[0])
+}
+
+/// solve artifact: c = AᵀD b_eff + reg_rhs (the L1 at_db kernel),
+/// truncated to n_cols. The caller back-substitutes against its factor.
+pub fn solve_rhs(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    ops: &PreparedOperands,
+    b_eff: &[f64],
+    reg_rhs: &[f64],
+    n_cols: usize,
+) -> Result<Vec<f64>, EngineError> {
+    let b_lit = literal_vec(&pad_vec(b_eff, meta.m, 0.0));
+    let rhs_lit = literal_vec(&pad_vec(reg_rhs, meta.n, 0.0));
+    let out = engine.execute(meta, &[&ops.a_lit, &ops.d_lit, &b_lit, &rhs_lit])?;
+    let mut c = to_vec_f64(&out[0])?;
+    c.truncate(n_cols);
+    Ok(c)
+}
+
+/// kf_chunk: sequential rank-1 assimilation of up to `meta.chunk` rows.
+/// `rows` are (h, rvar, y) triples with h of length meta.n.
+pub fn kf_chunk(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    x: &[f64],
+    p: &Mat,
+    rows: &[(Vec<f64>, f64, f64)],
+) -> Result<(Vec<f64>, Mat), EngineError> {
+    let (n, c) = (meta.n, meta.chunk);
+    assert!(rows.len() <= c);
+    assert_eq!(x.len(), n);
+    let mut h_flat = vec![0.0; c * n];
+    let mut rvars = vec![1.0; c];
+    let mut ys = vec![0.0; c];
+    for (k, (h, rvar, y)) in rows.iter().enumerate() {
+        h_flat[k * n..(k + 1) * n].copy_from_slice(h);
+        rvars[k] = *rvar;
+        ys[k] = *y;
+    }
+    let out = engine.execute(
+        meta,
+        &[
+            literal_vec(x),
+            literal_mat(p.as_slice(), n, n)?,
+            literal_mat(&h_flat, c, n)?,
+            literal_vec(&rvars),
+            literal_vec(&ys),
+        ],
+    )?;
+    let x_new = to_vec_f64(&out[0])?;
+    let p_new = Mat::from_vec(n, n, to_vec_f64(&out[1])?);
+    Ok((x_new, p_new))
+}
+
+/// kf_predict: x' = M x, P' = M P Mᵀ + diag(q).
+pub fn kf_predict(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    x: &[f64],
+    p: &Mat,
+    mmat: &Mat,
+    qdiag: &[f64],
+) -> Result<(Vec<f64>, Mat), EngineError> {
+    let n = meta.n;
+    let out = engine.execute(
+        meta,
+        &[
+            literal_vec(x),
+            literal_mat(p.as_slice(), n, n)?,
+            literal_mat(mmat.as_slice(), n, n)?,
+            literal_vec(qdiag),
+        ],
+    )?;
+    let x_new = to_vec_f64(&out[0])?;
+    let p_new = Mat::from_vec(n, n, to_vec_f64(&out[1])?);
+    Ok((x_new, p_new))
+}
+
+/// cls_full: global reference solve on a (meta.m, meta.n) bucket.
+pub fn cls_full(
+    engine: &Engine,
+    meta: &ArtifactMeta,
+    a: &Mat,
+    d: &[f64],
+    b: &[f64],
+    n_cols: usize,
+) -> Result<Vec<f64>, EngineError> {
+    let (bm, bn) = (meta.m, meta.n);
+    let a_pad = pad_mat(a, bm, bn);
+    let d_pad = pad_vec(d, bm, 0.0);
+    let b_pad = pad_vec(b, bm, 0.0);
+    let mut reg = vec![0.0; bn];
+    for r in reg.iter_mut().skip(n_cols) {
+        *r = 1.0;
+    }
+    let out = engine.execute(
+        meta,
+        &[
+            literal_mat(&a_pad, bm, bn)?,
+            literal_vec(&d_pad),
+            literal_vec(&b_pad),
+            literal_vec(&reg),
+        ],
+    )?;
+    let mut x = to_vec_f64(&out[0])?;
+    x.truncate(n_cols);
+    Ok(x)
+}

@@ -1,0 +1,146 @@
+//! [`PjrtLocalSolver`] — the artifact-backed local solver for the Schwarz
+//! hot path: `assemble` factors each subdomain's normal matrix once per
+//! DyDD epoch through the L2/L1 `assemble` artifact; every Schwarz
+//! iteration then runs the `solve` artifact.
+
+use super::engine::{with_engine, EngineError};
+use super::manifest::ArtifactMeta;
+use super::ops;
+use crate::cls::LocalBlock;
+use crate::ddkf::{LocalFactor, LocalSolver};
+use crate::linalg::Mat;
+use std::path::PathBuf;
+
+/// Per-subdomain stored state between assemble and solve.
+struct Stored {
+    solve_meta: ArtifactMeta,
+    /// Padded operand literals, built once per epoch (§Perf literal cache).
+    operands: ops::PreparedOperands,
+    /// Native Cholesky of the artifact-produced normal matrix (bucket
+    /// padding gives unit diagonal entries on padded columns, so the
+    /// bucket-sized factor is SPD and the padded solution entries are 0).
+    chol: crate::linalg::Cholesky,
+}
+
+/// Artifact-backed [`LocalSolver`].
+pub struct PjrtLocalSolver {
+    dir: PathBuf,
+    stored: Vec<Stored>,
+}
+
+impl PjrtLocalSolver {
+    /// Create a solver reading artifacts from `dir`. Fails fast if the
+    /// manifest is unreadable.
+    pub fn new(dir: PathBuf) -> Result<Self, EngineError> {
+        with_engine(&dir, |_| Ok(()))?;
+        Ok(PjrtLocalSolver { dir, stored: Vec::new() })
+    }
+
+    /// Artifacts from the default directory (`$DYDD_ARTIFACTS`|`artifacts`).
+    pub fn from_default_dir() -> Result<Self, EngineError> {
+        Self::new(super::default_artifacts_dir())
+    }
+}
+
+impl LocalSolver for PjrtLocalSolver {
+    fn assemble(&mut self, blk: &LocalBlock, reg: &[f64]) -> anyhow::Result<LocalFactor> {
+        let (m_loc, n_loc) = (blk.m_loc(), blk.n_loc());
+        let stored = with_engine(&self.dir, |eng| {
+            let (asm, sol) = eng
+                .manifest()
+                .pick_local_bucket(m_loc, n_loc)
+                .map(|(a, s)| (a.clone(), s.clone()))
+                .ok_or_else(|| {
+                    EngineError::UnknownArtifact(format!("no bucket for ({m_loc}, {n_loc})"))
+                })?;
+            let operands = ops::prepare_operands(&asm, &blk.a, &blk.d)?;
+            // L1 Pallas gram through the artifact; O(n³)-once factorization
+            // natively (the target XLA runtime's Cholesky expander is a
+            // scalar loop — EXPERIMENTS.md §Perf).
+            let g_flat = ops::assemble(eng, &asm, &operands, reg)?;
+            Ok((sol, operands, g_flat))
+        })?;
+        let (solve_meta, operands, g_flat) = stored;
+        let bn = operands.bn;
+        let g = Mat::from_vec(bn, bn, g_flat);
+        let chol = crate::linalg::Cholesky::new(&g)
+            .map_err(|e| anyhow::anyhow!("local normal matrix not SPD: {e}"))?;
+        self.stored.push(Stored { solve_meta, operands, chol });
+        Ok(LocalFactor::Opaque(self.stored.len() - 1))
+    }
+
+    fn solve(
+        &mut self,
+        blk: &LocalBlock,
+        factor: &LocalFactor,
+        b_eff: &[f64],
+        reg_rhs: &[f64],
+    ) -> anyhow::Result<Vec<f64>> {
+        let LocalFactor::Opaque(idx) = factor else {
+            anyhow::bail!("factor/solver mismatch");
+        };
+        let st = &self.stored[*idx];
+        // L1 at_db kernel through the artifact (bucket-padded rhs)...
+        let c = with_engine(&self.dir, |eng| {
+            ops::solve_rhs(eng, &st.solve_meta, &st.operands, b_eff, reg_rhs, st.operands.bn)
+        })?;
+        // ...then O(n²) back-substitution natively; truncate the padding.
+        let mut x = st.chol.solve(&c);
+        x.truncate(blk.n_loc());
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cls::{ClsProblem, StateOp};
+    use crate::ddkf::{schwarz_solve, NativeLocalSolver, SchwarzOptions};
+    use crate::domain::generators::{self, ObsLayout};
+    use crate::domain::{Mesh1d, Partition};
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    fn problem(n: usize, m: usize, seed: u64) -> ClsProblem {
+        let mesh = Mesh1d::new(n);
+        let mut rng = Rng::new(seed);
+        let obs = generators::generate(ObsLayout::Uniform, m, &mut rng);
+        let y0 = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+        ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![4.0; n], obs)
+    }
+
+    #[test]
+    fn pjrt_solver_matches_native_local_solve() {
+        let prob = problem(64, 40, 1);
+        let part = Partition::uniform(64, 2);
+        let blk = prob.local_block(&part, 0, 0);
+        let reg = vec![0.0; blk.n_loc()];
+        let zero = vec![0.0; blk.n_loc()];
+        let be = blk.b_eff(|_| 0.0);
+
+        let mut native = NativeLocalSolver;
+        let fn_ = native.assemble(&blk, &reg).unwrap();
+        let want = native.solve(&blk, &fn_, &be, &zero).unwrap();
+
+        let mut pjrt = PjrtLocalSolver::from_default_dir().expect("make artifacts first");
+        let fp = pjrt.assemble(&blk, &reg).unwrap();
+        let got = pjrt.solve(&blk, &fp, &be, &zero).unwrap();
+
+        let err = dist2(&got, &want);
+        assert!(err < 1e-9, "pjrt vs native: {err:e}");
+    }
+
+    #[test]
+    fn full_schwarz_through_artifacts_matches_reference() {
+        // The end-to-end L3->L2->L1 numeric path: Schwarz with every local
+        // solve running through the AOT artifacts.
+        let prob = problem(96, 70, 2);
+        let part = Partition::uniform(96, 3);
+        let want = prob.solve_reference();
+        let mut pjrt = PjrtLocalSolver::from_default_dir().expect("make artifacts first");
+        let out = schwarz_solve(&prob, &part, &SchwarzOptions::default(), &mut pjrt).unwrap();
+        assert!(out.converged, "iters={}", out.iters);
+        let err = dist2(&out.x, &want);
+        assert!(err < 1e-9, "error_DD-DA = {err:e}");
+    }
+}

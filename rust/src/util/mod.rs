@@ -1,0 +1,13 @@
+//! Small self-contained utilities: JSON parsing (no serde in this
+//! environment), deterministic RNG, wall-clock timing, and ASCII table
+//! rendering for the benchmark harness.
+
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use table::Table;
+pub use timer::{Stopwatch, TimingStats};

@@ -1,0 +1,159 @@
+//! Wall-clock timing with summary statistics — the measurement substrate
+//! for the benchmark harness (criterion is unavailable offline, so benches
+//! use `harness = false` and these helpers).
+
+use std::time::{Duration, Instant};
+
+/// A running stopwatch with named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, laps: Vec::new(), last: now }
+    }
+
+    /// Record time since the previous lap (or start) under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        Instant::now() - self.start
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    /// Sum of laps with the given name (hot loops lap repeatedly).
+    pub fn lap_total(&self, name: &str) -> Duration {
+        self.laps.iter().filter(|(n, _)| n == name).map(|(_, d)| *d).sum()
+    }
+}
+
+/// Mean / stddev / min / max over repeated timed runs.
+#[derive(Debug, Clone, Default)]
+pub struct TimingStats {
+    samples: Vec<f64>, // seconds
+}
+
+impl TimingStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    /// Time one closure invocation and record it; returns the closure output.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn median(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let mid = s.len() / 2;
+        if s.len() % 2 == 0 {
+            (s[mid - 1] + s[mid]) / 2.0
+        } else {
+            s[mid]
+        }
+    }
+}
+
+/// Format seconds in engineering style: "4.11e-2 s" like the paper's tables.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "-".to_string();
+    }
+    if s == 0.0 {
+        return "0".to_string();
+    }
+    format!("{s:.2e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        sw.lap("b");
+        assert!(sw.lap_total("a") >= Duration::from_millis(4));
+        assert_eq!(sw.laps().len(), 3);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let mut st = TimingStats::default();
+        for ms in [10.0_f64, 20.0, 30.0] {
+            st.record(Duration::from_secs_f64(ms / 1000.0));
+        }
+        assert_eq!(st.n(), 3);
+        assert!((st.mean() - 0.02).abs() < 1e-12);
+        assert!((st.median() - 0.02).abs() < 1e-12);
+        assert!((st.min() - 0.01).abs() < 1e-12);
+        assert!((st.max() - 0.03).abs() < 1e-12);
+        assert!(st.stddev() > 0.0);
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_secs(0.0411), "4.11e-2");
+        assert_eq!(fmt_secs(0.0), "0");
+    }
+}

@@ -1,0 +1,132 @@
+//! Runtime integration tests exercising the full L3 → L2 → L1 path on real
+//! AOT artifacts (requires `make artifacts`).
+
+use dydd_da::cls::{ClsProblem, StateOp};
+use dydd_da::coordinator::{run_parallel, RunConfig, SolverBackend};
+use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
+use dydd_da::kf::DenseKf;
+use dydd_da::linalg::mat::dist2;
+use dydd_da::linalg::Mat;
+use dydd_da::runtime;
+use dydd_da::util::Rng;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = runtime::default_artifacts_dir();
+    assert!(
+        runtime::artifacts_available(&dir),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+#[test]
+fn pjrt_backend_parallel_run_matches_reference() {
+    let dir = artifacts();
+    let mesh = Mesh1d::new(128);
+    let mut rng = Rng::new(21);
+    let obs = generators::generate(ObsLayout::Cluster, 90, &mut rng);
+    let y0 = (0..128).map(|j| generators::field(j as f64 / 127.0)).collect();
+    let prob =
+        ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![4.0; 128], obs);
+    let part = Partition::uniform(128, 4);
+    let cfg = RunConfig {
+        backend: SolverBackend::Pjrt,
+        artifacts_dir: dir,
+        ..RunConfig::default()
+    };
+    let out = run_parallel(&prob, &part, &cfg).unwrap();
+    assert!(out.converged);
+    let err = dist2(&out.x, &prob.solve_reference());
+    assert!(err < 1e-9, "error through artifacts: {err:e}");
+}
+
+#[test]
+fn kf_chunk_artifact_matches_native_dense_kf() {
+    let dir = artifacts();
+    let n = 64;
+    let mut rng = Rng::new(22);
+    let mut native = DenseKf::from_prior(rng.gaussian_vec(n), &vec![2.0; n]);
+    let mut via_artifact = native.clone();
+    let rows: Vec<(Vec<f64>, f64, f64)> = (0..16)
+        .map(|_| {
+            let mut h = vec![0.0; n];
+            h[rng.below(n)] = 1.0;
+            h[rng.below(n)] += 0.5;
+            (h, 0.04, rng.gaussian())
+        })
+        .collect();
+
+    native.correct_batch(&rows);
+
+    runtime::with_engine(&dir, |eng| {
+        let meta = eng.manifest().pick_kf_chunk(n, rows.len()).unwrap().clone();
+        let (x, p) = runtime::kf_chunk(eng, &meta, &via_artifact.x, &via_artifact.p, &rows)?;
+        via_artifact.x = x;
+        via_artifact.p = p;
+        Ok(())
+    })
+    .unwrap();
+
+    assert!(dist2(&native.x, &via_artifact.x) < 1e-10);
+    let mut diff = native.p.clone();
+    diff.scale(-1.0);
+    diff.add_assign(&via_artifact.p);
+    assert!(diff.max_abs() < 1e-10);
+}
+
+#[test]
+fn kf_predict_artifact_matches_native() {
+    let dir = artifacts();
+    let n = 64;
+    let mut rng = Rng::new(23);
+    let mmat = Mat::gaussian(n, n, &mut rng);
+    let q = vec![0.01; n];
+    let mut native = DenseKf::from_prior(rng.gaussian_vec(n), &vec![1.0; n]);
+    let mut via = native.clone();
+    native.predict(&mmat, &q);
+    runtime::with_engine(&dir, |eng| {
+        let meta = eng.manifest().pick_kf_predict(n).unwrap().clone();
+        let (x, p) = runtime::kf_predict(eng, &meta, &via.x, &via.p, &mmat, &q)?;
+        via.x = x;
+        via.p = p;
+        Ok(())
+    })
+    .unwrap();
+    assert!(dist2(&native.x, &via.x) < 1e-10);
+}
+
+#[test]
+fn cls_full_artifact_matches_reference_with_padding() {
+    let dir = artifacts();
+    let mesh = Mesh1d::new(100); // deliberately not a bucket size
+    let mut rng = Rng::new(24);
+    let obs = generators::generate(ObsLayout::Uniform, 70, &mut rng);
+    let y0 = (0..100).map(|j| generators::field(j as f64 / 99.0)).collect();
+    let prob =
+        ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![4.0; 100], obs);
+    let (a, d, b) = prob.dense();
+    let want = prob.solve_reference();
+    let got = runtime::with_engine(&dir, |eng| {
+        let meta = eng.manifest().pick_cls_full(a.rows(), a.cols()).unwrap().clone();
+        runtime::cls_full(eng, &meta, &a, &d, &b, 100)
+    })
+    .unwrap();
+    assert!(dist2(&got, &want) < 1e-9);
+}
+
+#[test]
+fn engine_caches_compilations() {
+    let dir = artifacts();
+    runtime::with_engine(&dir, |eng| {
+        let meta = eng.manifest().pick_kf_predict(64).unwrap().clone();
+        let before = eng.compiled_count();
+        eng.executable(&meta)?;
+        let after_first = eng.compiled_count();
+        eng.executable(&meta)?;
+        let after_second = eng.compiled_count();
+        assert!(after_first >= before);
+        assert_eq!(after_first, after_second, "second fetch must hit the cache");
+        Ok(())
+    })
+    .unwrap();
+}

@@ -1,0 +1,144 @@
+//! Cross-module integration tests: the full pipeline (generator → DyDD →
+//! coordinator → baselines), config loading, and paper-scenario outcomes.
+
+use dydd_da::cls::{ClsProblem, StateOp};
+use dydd_da::config::ExperimentConfig;
+use dydd_da::coordinator::{run_parallel, RunConfig, SolverBackend};
+use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
+use dydd_da::dydd::{balance, rebalance_partition, DyddParams};
+use dydd_da::harness::{render_table, run_experiment, TableId};
+use dydd_da::kf::kf_solve_cls;
+use dydd_da::linalg::mat::dist2;
+use dydd_da::util::Rng;
+
+fn problem(n: usize, m: usize, layout: ObsLayout, seed: u64) -> ClsProblem {
+    let mesh = Mesh1d::new(n);
+    let mut rng = Rng::new(seed);
+    let obs = generators::generate(layout, m, &mut rng);
+    let y0 = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+    ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![4.0; n], obs)
+}
+
+#[test]
+fn dd_kf_equals_kf_across_layouts_and_p() {
+    // Table 11 / Figure 5 claim: error_DD-DA at fp-roundoff level for any
+    // decomposition and observation layout.
+    for layout in [ObsLayout::Uniform, ObsLayout::Cluster, ObsLayout::Ramp] {
+        let prob = problem(160, 120, layout, 11);
+        let kf = kf_solve_cls(&prob);
+        for p in [2usize, 4, 5, 8] {
+            let part = Partition::uniform(160, p);
+            let out = run_parallel(&prob, &part, &RunConfig::default()).unwrap();
+            assert!(out.converged, "{layout:?} p={p}");
+            let err = dist2(&out.x, &kf.x);
+            assert!(err < 5e-10, "{layout:?} p={p}: error_DD-DA = {err:e}");
+        }
+    }
+}
+
+#[test]
+fn dydd_then_solve_is_identical_to_static_solve() {
+    // Load balancing must not change the solution, only the partition.
+    let prob = problem(192, 150, ObsLayout::LeftPacked, 12);
+    let mesh = Mesh1d::new(192);
+    let part0 = Partition::uniform(192, 4);
+    let reb = rebalance_partition(&mesh, &part0, &prob.obs, &DyddParams::default()).unwrap();
+    let cfg = RunConfig::default();
+    let a = run_parallel(&prob, &part0, &cfg).unwrap();
+    let b = run_parallel(&prob, &reb.partition, &cfg).unwrap();
+    assert!(a.converged && b.converged);
+    assert!(dist2(&a.x, &b.x) < 1e-9);
+    // ...while drastically improving balance.
+    let before = prob.obs.census(&mesh, &part0);
+    assert!(dydd_da::dydd::balance_ratio(&before) < 0.1);
+    assert!(reb.balance() > 0.8);
+}
+
+#[test]
+fn all_backends_agree() {
+    let prob = problem(128, 100, ObsLayout::TwoClusters, 13);
+    let part = Partition::uniform(128, 4);
+    let mut solutions = Vec::new();
+    for backend in [SolverBackend::Native, SolverBackend::Kf] {
+        let cfg = RunConfig { backend, ..RunConfig::default() };
+        let out = run_parallel(&prob, &part, &cfg).unwrap();
+        assert!(out.converged, "{backend:?}");
+        solutions.push(out.x);
+    }
+    assert!(dist2(&solutions[0], &solutions[1]) < 1e-8);
+}
+
+#[test]
+fn experiment_from_config_file_runs() {
+    let toml = r#"
+name = "it-config"
+[problem]
+n = 128
+m = 90
+p = 4
+layout = "cluster"
+seed = 3
+[run]
+dydd = true
+"#;
+    let cfg = ExperimentConfig::from_toml_str(toml).unwrap();
+    let rep = run_experiment(&cfg, true).unwrap();
+    assert!(rep.converged);
+    assert!(rep.error_dd_da.unwrap() < 1e-9);
+}
+
+#[test]
+fn paper_dydd_tables_reach_printed_l_fin() {
+    // Tables 1/2: l_fin = 750/750. Tables 4-7: l_fin = 375 x4.
+    for (id, expect) in [
+        (TableId::T1, "750"),
+        (TableId::T2, "750"),
+        (TableId::T4, "375"),
+        (TableId::T5, "375"),
+        (TableId::T6, "375"),
+        (TableId::T7, "375"),
+    ] {
+        let t = render_table(id, false).unwrap();
+        assert!(t.render().contains(expect), "{id:?} missing {expect}:\n{}", t.render());
+    }
+}
+
+#[test]
+fn dydd_abstract_scenarios_from_the_paper_tables() {
+    use dydd_da::graph::Graph;
+    // Table 10 star scenarios preserve totals and balance bound.
+    for p in [2usize, 4, 8, 16, 32] {
+        let g = Graph::star(p);
+        let mut l = vec![4usize; p];
+        l[0] = 1032 - 4 * (p - 1);
+        let out = balance(&g, &l, &DyddParams::default()).unwrap();
+        assert_eq!(out.l_fin.iter().sum::<usize>(), 1032);
+        let lmax = *out.l_fin.iter().max().unwrap();
+        let lmin = *out.l_fin.iter().min().unwrap();
+        assert!(lmax - lmin <= 1, "p={p}: {:?}", out.l_fin);
+    }
+}
+
+#[test]
+fn overlap_regularized_runs_remain_accurate() {
+    let prob = problem(144, 100, ObsLayout::Uniform, 14);
+    let want = prob.solve_reference();
+    let part = Partition::uniform(144, 4);
+    let mut cfg = RunConfig::default();
+    cfg.schwarz.overlap = 3;
+    cfg.schwarz.mu = 1e-8;
+    cfg.schwarz.max_iters = 400;
+    let out = run_parallel(&prob, &part, &cfg).unwrap();
+    assert!(out.converged);
+    let rel = dist2(&out.x, &want) / dist2(&want, &vec![0.0; 144]);
+    assert!(rel < 1e-5, "relative bias {rel:e}");
+}
+
+#[test]
+fn quick_tables_all_render() {
+    for id in dydd_da::harness::all_tables() {
+        // Solver-bound tables in quick mode only (keeps CI fast).
+        let t = render_table(id, false).unwrap();
+        assert!(!t.rows.is_empty(), "{id:?}");
+    }
+}

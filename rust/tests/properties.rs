@@ -1,0 +1,260 @@
+//! Property-based tests over randomized inputs (hand-rolled generator
+//! sweep — proptest is unavailable in this offline build; each property
+//! runs against many seeded random cases and prints the failing seed).
+
+use dydd_da::cls::{ClsProblem, StateOp};
+use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
+use dydd_da::dydd::{balance, balance_ratio, rebalance_partition, DyddParams};
+use dydd_da::graph::{laplacian_solve, laplacian_solve_cg, Graph};
+use dydd_da::linalg::mat::dist2;
+use dydd_da::linalg::{Cholesky, Mat};
+use dydd_da::util::Rng;
+
+const CASES: u64 = 60;
+
+/// Random connected graph: chain + random extra edges.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let p = 2 + rng.below(14);
+    let mut g = Graph::chain(p);
+    for _ in 0..rng.below(p) {
+        let a = rng.below(p);
+        let b = rng.below(p);
+        if a != b {
+            g.add_edge(a, b);
+        }
+    }
+    g
+}
+
+#[test]
+fn prop_migration_conserves_total_load() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng);
+        let l_in: Vec<usize> = (0..g.p()).map(|_| rng.below(500)).collect();
+        if l_in.iter().sum::<usize>() == 0 {
+            continue;
+        }
+        let out = balance(&g, &l_in, &DyddParams::default()).unwrap();
+        assert_eq!(
+            out.l_fin.iter().sum::<usize>(),
+            l_in.iter().sum::<usize>(),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_balance_reaches_max_min_gap_one() {
+    // The polish phase guarantees the best integral balance on any
+    // connected graph.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let g = random_graph(&mut rng);
+        let l_in: Vec<usize> = (0..g.p()).map(|_| rng.below(400)).collect();
+        if l_in.iter().sum::<usize>() == 0 {
+            continue;
+        }
+        let out = balance(&g, &l_in, &DyddParams::default()).unwrap();
+        let mx = *out.l_fin.iter().max().unwrap();
+        let mn = *out.l_fin.iter().min().unwrap();
+        assert!(mx - mn <= 1, "seed {seed}: {:?}", out.l_fin);
+    }
+}
+
+#[test]
+fn prop_migrations_follow_graph_edges() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let g = random_graph(&mut rng);
+        let l_in: Vec<usize> = (0..g.p()).map(|_| rng.below(300)).collect();
+        if l_in.iter().sum::<usize>() == 0 {
+            continue;
+        }
+        let out = balance(&g, &l_in, &DyddParams::default()).unwrap();
+        for (i, j, _) in &out.migrations {
+            assert!(g.has_edge(*i, *j), "seed {seed}: migration across non-edge ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn prop_laplacian_is_psd_with_zero_row_sums() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let g = random_graph(&mut rng);
+        let l = g.laplacian();
+        let p = g.p();
+        for i in 0..p {
+            let s: f64 = (0..p).map(|j| l[(i, j)]).sum();
+            assert_eq!(s, 0.0, "seed {seed} row {i}");
+        }
+        // PSD: x^T L x = Σ_edges (x_i − x_j)² >= 0 for random x.
+        for _ in 0..5 {
+            let x = rng.gaussian_vec(p);
+            let q: f64 = x
+                .iter()
+                .enumerate()
+                .map(|(i, xi)| xi * l.row(i).iter().zip(&x).map(|(a, b)| a * b).sum::<f64>())
+                .sum();
+            assert!(q >= -1e-9, "seed {seed}: x^T L x = {q}");
+        }
+    }
+}
+
+#[test]
+fn prop_grounded_solver_agrees_with_cg() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let g = random_graph(&mut rng);
+        let p = g.p();
+        let mut b: Vec<f64> = (0..p).map(|_| rng.below(41) as f64 - 20.0).collect();
+        let mean = b.iter().sum::<f64>() / p as f64;
+        for v in &mut b {
+            *v -= mean;
+        }
+        let a = laplacian_solve(&g, &b).unwrap();
+        let c = laplacian_solve_cg(&g, &b, 1e-12, 50 * p).unwrap();
+        assert!(dist2(&a, &c) < 1e-7, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_partition_covers_domain_without_gaps() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let n = 32 + rng.below(1000);
+        let p = 1 + rng.below(8.min(n / 4));
+        let part = Partition::uniform(n, p);
+        let mut covered = vec![false; n];
+        for i in 0..p {
+            let (lo, hi) = part.interval(i);
+            assert!(lo < hi, "seed {seed}: empty interval");
+            for c in covered.iter_mut().take(hi).skip(lo) {
+                assert!(!*c, "seed {seed}: overlap without request");
+                *c = true;
+            }
+        }
+        assert!(covered.into_iter().all(|c| c), "seed {seed}: gap");
+        // owner() is the inverse of interval().
+        for _ in 0..20 {
+            let j = rng.below(n);
+            let o = part.owner(j);
+            let (lo, hi) = part.interval(o);
+            assert!((lo..hi).contains(&j), "seed {seed} col {j}");
+        }
+    }
+}
+
+#[test]
+fn prop_geometric_rebalance_census_is_realizable_optimum() {
+    for seed in 0..30 {
+        let mut rng = Rng::new(6000 + seed);
+        let n = 256 + rng.below(512);
+        let p = 2 + rng.below(6);
+        let m = 100 + rng.below(400);
+        let layout = match rng.below(4) {
+            0 => ObsLayout::Uniform,
+            1 => ObsLayout::Cluster,
+            2 => ObsLayout::Ramp,
+            _ => ObsLayout::TwoClusters,
+        };
+        let mesh = Mesh1d::new(n);
+        let part = Partition::uniform(n, p);
+        let obs = generators::generate(layout, m, &mut rng);
+        let out = rebalance_partition(&mesh, &part, &obs, &DyddParams::default()).unwrap();
+        // Total conserved and balance never degrades vs the input census.
+        assert_eq!(out.census_after.iter().sum::<usize>(), m, "seed {seed}");
+        let before = balance_ratio(&obs.census(&mesh, &part));
+        assert!(
+            out.balance() >= before - 1e-12,
+            "seed {seed}: {before} -> {}",
+            out.balance()
+        );
+    }
+}
+
+#[test]
+fn prop_local_blocks_reconstruct_global_gram() {
+    // Summing every block's AᵀDA (scattered to global indices) must equal
+    // the global normal matrix: the decomposition loses nothing.
+    for seed in 0..20 {
+        let mut rng = Rng::new(7000 + seed);
+        let n = 24 + rng.below(40);
+        let m = 10 + rng.below(40);
+        let p = 2 + rng.below(3.min(n / 8));
+        let mesh = Mesh1d::new(n);
+        let obs = generators::generate(ObsLayout::Uniform, m, &mut rng);
+        let y0 = rng.gaussian_vec(n);
+        let prob =
+            ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.2 }, y0, vec![2.0; n], obs);
+        let part = Partition::uniform(n, p);
+        let (a, d, _) = prob.dense();
+        let g_global = a.weighted_gram(&d);
+        // Block-diagonal part assembled from local blocks:
+        let mut g_blocks = Mat::zeros(n, n);
+        for i in 0..p {
+            let blk = prob.local_block(&part, i, 0);
+            let g_loc = blk.a.weighted_gram(&blk.d);
+            for r in 0..blk.n_loc() {
+                for c in 0..blk.n_loc() {
+                    g_blocks[(blk.col_lo + r, blk.col_lo + c)] += g_loc[(r, c)];
+                }
+            }
+        }
+        // They agree exactly on the block diagonal.
+        for i in 0..p {
+            let (lo, hi) = part.interval(i);
+            for r in lo..hi {
+                for c in lo..hi {
+                    let diff = (g_global[(r, c)] - g_blocks[(r, c)]).abs();
+                    assert!(diff < 1e-10, "seed {seed} ({r},{c}): {diff}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cholesky_solve_residual_small() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8000 + seed);
+        let n = 4 + rng.below(40);
+        let a = Mat::gaussian(n + 6, n, &mut rng);
+        let mut g = a.transpose().matmul(&a);
+        for i in 0..n {
+            g[(i, i)] += 0.1;
+        }
+        let b = rng.gaussian_vec(n);
+        let x = Cholesky::new(&g).unwrap().solve(&b);
+        let r = dist2(&g.matvec(&x), &b);
+        assert!(r < 1e-7 * (1.0 + dist2(&b, &vec![0.0; n])), "seed {seed}: {r:e}");
+    }
+}
+
+#[test]
+fn prop_schwarz_fixed_point_is_global_solution() {
+    // Any converged Schwarz run (s = 0) equals the global CLS solution.
+    for seed in 0..12 {
+        let mut rng = Rng::new(9000 + seed);
+        let n = 48 + rng.below(80);
+        let m = 30 + rng.below(60);
+        let p = 2 + rng.below(4);
+        let mesh = Mesh1d::new(n);
+        let obs = generators::generate(ObsLayout::Uniform, m, &mut rng);
+        let y0 = rng.gaussian_vec(n);
+        let prob =
+            ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![3.0; n], obs);
+        let part = Partition::uniform(n, p);
+        let out = dydd_da::ddkf::schwarz_solve(
+            &prob,
+            &part,
+            &dydd_da::ddkf::SchwarzOptions::default(),
+            &mut dydd_da::ddkf::NativeLocalSolver,
+        )
+        .unwrap();
+        assert!(out.converged, "seed {seed}");
+        let err = dist2(&out.x, &prob.solve_reference());
+        assert!(err < 1e-8, "seed {seed}: {err:e}");
+    }
+}
