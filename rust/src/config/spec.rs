@@ -5,6 +5,7 @@ use super::toml::{parse_toml, TomlError, TomlValue};
 use crate::coordinator::SolverBackend;
 use crate::ddkf::{SchwarzOptions, SweepOrder};
 use crate::domain::ObsLayout;
+use crate::domain2d::ObsLayout2d;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -28,13 +29,21 @@ impl StateOpConfig {
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub name: String,
-    /// Mesh size n.
+    /// Spatial dimension: 1 (interval decomposition, the paper's CLS
+    /// solver path) or 2 (box-grid DyDD on [0, 1]²).
+    pub dim: usize,
+    /// Mesh size n (per axis when dim = 2: the grid is n × n).
     pub n: usize,
     /// Observation count m.
     pub m: usize,
-    /// Subdomain / worker count p.
+    /// Subdomain / worker count p (dim = 1).
     pub p: usize,
+    /// Box grid extents (dim = 2): px × py boxes.
+    pub px: usize,
+    pub py: usize,
     pub layout: ObsLayout,
+    /// 2-D observation layout (dim = 2).
+    pub layout2d: ObsLayout2d,
     pub state_op: StateOpConfig,
     /// State weight (R0 diagonal).
     pub state_weight: f64,
@@ -50,10 +59,14 @@ impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
             name: "default".into(),
+            dim: 1,
             n: 2048,
             m: 1500,
             p: 4,
+            px: 2,
+            py: 2,
             layout: ObsLayout::Uniform,
+            layout2d: ObsLayout2d::Uniform2d,
             state_op: StateOpConfig::Tridiag { main: 1.0, off: 0.15 },
             state_weight: 4.0,
             seed: 42,
@@ -105,17 +118,20 @@ impl ExperimentConfig {
     fn from_table(t: &BTreeMap<String, TomlValue>) -> Result<Self, ValidationError> {
         let mut cfg = ExperimentConfig::default();
         let bad = |k: &str| ValidationError::Invalid(format!("bad value for {k}"));
+        // The layout name is dimension-sensitive; resolve it after all keys
+        // (including `dim`) are known.
+        let mut layout_name: Option<String> = None;
         for (k, v) in t {
             match k.as_str() {
                 "name" => cfg.name = v.as_str().ok_or_else(|| bad(k))?.to_string(),
                 "problem.n" => cfg.n = v.as_usize().ok_or_else(|| bad(k))?,
                 "problem.m" => cfg.m = v.as_usize().ok_or_else(|| bad(k))?,
                 "problem.p" => cfg.p = v.as_usize().ok_or_else(|| bad(k))?,
+                "problem.dim" => cfg.dim = v.as_usize().ok_or_else(|| bad(k))?,
+                "problem.px" => cfg.px = v.as_usize().ok_or_else(|| bad(k))?,
+                "problem.py" => cfg.py = v.as_usize().ok_or_else(|| bad(k))?,
                 "problem.layout" => {
-                    cfg.layout = v
-                        .as_str()
-                        .and_then(layout_from_str)
-                        .ok_or_else(|| bad(k))?
+                    layout_name = Some(v.as_str().ok_or_else(|| bad(k))?.to_string());
                 }
                 "problem.seed" => cfg.seed = v.as_int().ok_or_else(|| bad(k))? as u64,
                 "problem.state_weight" => {
@@ -174,6 +190,23 @@ impl ExperimentConfig {
                 }
             }
         }
+        // Resolve the layout against the final dimension so a wrong-
+        // dimension name errors loudly instead of silently running the
+        // default layout.
+        if let Some(s) = layout_name {
+            match cfg.dim {
+                2 => {
+                    cfg.layout2d = ObsLayout2d::parse(&s).ok_or_else(|| {
+                        ValidationError::Invalid(format!("layout {s:?} is not a 2-D layout"))
+                    })?
+                }
+                _ => {
+                    cfg.layout = layout_from_str(&s).ok_or_else(|| {
+                        ValidationError::Invalid(format!("layout {s:?} is not a 1-D layout"))
+                    })?
+                }
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -183,7 +216,20 @@ impl ExperimentConfig {
         if self.n < 4 {
             return fail(format!("n = {} too small", self.n));
         }
-        if self.p == 0 || self.p > self.n / 2 {
+        if !(1..=2).contains(&self.dim) {
+            return fail(format!("dim = {} unsupported (1 or 2)", self.dim));
+        }
+        if self.dim == 2 {
+            if self.px == 0 || self.px > self.n / 2 {
+                return fail(format!("px = {} out of range for n = {}", self.px, self.n));
+            }
+            if self.py == 0 || self.py > self.n / 2 {
+                return fail(format!("py = {} out of range for n = {}", self.py, self.n));
+            }
+        }
+        // p is the 1-D subdomain count; the 2-D path uses px × py instead,
+        // so don't reject a 2-D config over a field it never reads.
+        if self.dim == 1 && (self.p == 0 || self.p > self.n / 2) {
             return fail(format!("p = {} out of range for n = {}", self.p, self.n));
         }
         if self.m == 0 {
@@ -268,6 +314,62 @@ dydd = true
     #[test]
     fn unknown_key_rejected() {
         assert!(ExperimentConfig::from_toml_str("nonsense = 1").is_err());
+    }
+
+    #[test]
+    fn dim2_keys_roundtrip() {
+        let text = r#"
+name = "blob2d"
+[problem]
+dim = 2
+n = 256
+m = 2000
+px = 4
+py = 4
+layout = "gaussian_blob"
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.dim, 2);
+        assert_eq!((cfg.px, cfg.py), (4, 4));
+        assert_eq!(cfg.layout2d, ObsLayout2d::GaussianBlob);
+        // The 1-D layout stays at its default when a 2-D name is given.
+        assert_eq!(cfg.layout, ObsLayout::Uniform);
+    }
+
+    #[test]
+    fn wrong_dimension_layout_name_errors() {
+        // A 1-D name under dim = 2 (and vice versa) must fail loudly, not
+        // silently run the default layout.
+        let err = ExperimentConfig::from_toml_str(
+            "[problem]\ndim = 2\nlayout = \"cluster\"",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not a 2-D layout"), "{err}");
+        let err =
+            ExperimentConfig::from_toml_str("[problem]\nlayout = \"ring\"").unwrap_err();
+        assert!(err.to_string().contains("not a 1-D layout"), "{err}");
+    }
+
+    #[test]
+    fn dim2_validation_catches_bad_grid() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.px = 0;
+        assert!(cfg.validate().is_err());
+        cfg.px = 4;
+        cfg.py = cfg.n; // absurd
+        assert!(cfg.validate().is_err());
+        cfg.py = 4;
+        assert!(cfg.validate().is_ok());
+        cfg.dim = 3;
+        assert!(cfg.validate().is_err());
+        // A small-n 2-D config must not be rejected over the unused 1-D p.
+        let mut small = ExperimentConfig::default();
+        small.dim = 2;
+        small.n = 6;
+        small.px = 2;
+        small.py = 2;
+        assert!(small.validate().is_ok(), "{:?}", small.validate());
     }
 
     #[test]

@@ -20,7 +20,14 @@ impl Partition {
     /// Uniform partition (the paper's initial DD: n_loc = n / p).
     pub fn uniform(n: usize, p: usize) -> Self {
         assert!(p >= 1 && n >= p, "need n >= p >= 1");
-        let bounds = (0..=p).map(|i| i * n / p).collect();
+        let bounds: Vec<usize> = (0..=p).map(|i| i * n / p).collect();
+        // ⌊(i+1)n/p⌋ − ⌊in/p⌋ >= 1 whenever n >= p, but guard loudly
+        // against any rounding scheme ever producing a zero-width interval
+        // (an empty subdomain would silently break owner()/DyDD).
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "uniform({n}, {p}) produced an empty interval: {bounds:?}"
+        );
         Partition { n, bounds }
     }
 
@@ -81,7 +88,6 @@ impl Partition {
     /// (positive: i grows rightwards). Clamped so no interval empties;
     /// returns the applied (possibly clamped) delta.
     pub fn shift_bound(&mut self, i: usize, delta: isize) -> isize {
-        assert!(i + 1 < self.bounds.len() - 0 && i + 1 <= self.p() - 0);
         assert!(i < self.p() - 1, "no bound to the right of the last subdomain");
         let b = self.bounds[i + 1] as isize;
         let lo = (self.bounds[i] + 1) as isize; // keep interval i non-empty
@@ -160,6 +166,21 @@ mod tests {
         assert_eq!(total, 2048);
         for i in 0..32 {
             assert_eq!(part.size(i), 64);
+        }
+    }
+
+    #[test]
+    fn uniform_never_empty_when_n_barely_exceeds_p() {
+        // Regression for the rounding hazard: n slightly >= p is where
+        // i*n/p is most likely to collide for adjacent i.
+        for p in [1usize, 2, 3, 7, 31, 64, 101] {
+            for n in p..p + 4 {
+                let part = Partition::uniform(n, p);
+                for i in 0..p {
+                    assert!(part.size(i) >= 1, "uniform({n}, {p}) emptied interval {i}");
+                }
+                assert_eq!((0..p).map(|i| part.size(i)).sum::<usize>(), n);
+            }
         }
     }
 

@@ -1,0 +1,226 @@
+//! 2-D observation-layout generators: the scenario catalogue for box-grid
+//! DyDD (nonuniform, general-sparse observation distributions over [0, 1]²
+//! — the regime the paper's load balancer targets).
+
+use super::mesh::Mesh2d;
+use super::observations::ObservationSet2d;
+use super::partition::BoxPartition;
+use crate::util::Rng;
+
+/// Named 2-D observation layouts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObsLayout2d {
+    /// i.i.d. uniform over [0, 1]².
+    Uniform2d,
+    /// A single Gaussian blob (mean (0.3, 0.35), sigma 0.08) — separable,
+    /// heavily clustered.
+    GaussianBlob,
+    /// A band around the main diagonal y ≈ x (non-separable: marginals are
+    /// uniform but the joint density concentrates on diagonal boxes).
+    DiagonalBand,
+    /// A ring of radius 0.3 around the domain centre (non-separable,
+    /// non-convex support).
+    Ring,
+    /// Everything in the lower-left quadrant [0, 0.5)² (worst case: ¾ of a
+    /// 2 × 2 box grid starts empty — exercises the DD repair step).
+    Quadrant,
+}
+
+impl ObsLayout2d {
+    /// All layouts (for sweeps and property tests).
+    pub const ALL: [ObsLayout2d; 5] = [
+        ObsLayout2d::Uniform2d,
+        ObsLayout2d::GaussianBlob,
+        ObsLayout2d::DiagonalBand,
+        ObsLayout2d::Ring,
+        ObsLayout2d::Quadrant,
+    ];
+
+    /// Parse a CLI / config name.
+    pub fn parse(s: &str) -> Option<ObsLayout2d> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "uniform2d" | "uniform_2d" => ObsLayout2d::Uniform2d,
+            "gaussian_blob" | "gaussianblob" | "blob" => ObsLayout2d::GaussianBlob,
+            "diagonal_band" | "diagonalband" | "band" => ObsLayout2d::DiagonalBand,
+            "ring" => ObsLayout2d::Ring,
+            "quadrant" => ObsLayout2d::Quadrant,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObsLayout2d::Uniform2d => "uniform2d",
+            ObsLayout2d::GaussianBlob => "gaussian_blob",
+            ObsLayout2d::DiagonalBand => "diagonal_band",
+            ObsLayout2d::Ring => "ring",
+            ObsLayout2d::Quadrant => "quadrant",
+        }
+    }
+}
+
+/// Generate `m` observations with the given layout. Values are synthetic
+/// measurements of a smooth field with N(0, 0.05²) noise, variance 0.01
+/// (matching the 1-D generators).
+pub fn generate(layout: ObsLayout2d, m: usize, rng: &mut Rng) -> ObservationSet2d {
+    let mut tuples = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (x, y) = sample_loc(layout, rng);
+        let truth = field2(x, y);
+        tuples.push((x, y, truth + rng.gaussian_with(0.0, 0.05), 0.01));
+    }
+    ObservationSet2d::new(tuples)
+}
+
+fn sample_loc(layout: ObsLayout2d, rng: &mut Rng) -> (f64, f64) {
+    match layout {
+        ObsLayout2d::Uniform2d => (rng.uniform(), rng.uniform()),
+        ObsLayout2d::GaussianBlob => (
+            clamp01(rng.gaussian_with(0.3, 0.08)),
+            clamp01(rng.gaussian_with(0.35, 0.08)),
+        ),
+        ObsLayout2d::DiagonalBand => {
+            let t = rng.uniform();
+            (t, clamp01(t + rng.gaussian_with(0.0, 0.05)))
+        }
+        ObsLayout2d::Ring => {
+            let theta = 2.0 * std::f64::consts::PI * rng.uniform();
+            let r = rng.gaussian_with(0.3, 0.03);
+            (
+                clamp01(0.5 + r * theta.cos()),
+                clamp01(0.5 + r * theta.sin()),
+            )
+        }
+        ObsLayout2d::Quadrant => (0.5 * rng.uniform(), 0.5 * rng.uniform()),
+    }
+}
+
+fn clamp01(x: f64) -> f64 {
+    x.clamp(0.0, 1.0 - 1e-12)
+}
+
+/// The smooth synthetic truth field sampled by observations (2-D analogue
+/// of the 1-D `generators::field`).
+pub fn field2(x: f64, y: f64) -> f64 {
+    use std::f64::consts::PI;
+    (2.0 * PI * x).sin() * (2.0 * PI * y).cos() + 0.5 * (3.0 * PI * (x + y)).cos()
+}
+
+/// Generate observations whose per-box census is exactly `counts` under
+/// the given partition (the 2-D analogue of `generators::with_counts`,
+/// reproducing prescribed l_in vectors for tests and tables).
+///
+/// Observations are placed uniformly at random strictly inside each box's
+/// spatial extent so nearest-point rounding cannot spill into a neighbour.
+pub fn with_counts(
+    mesh: &Mesh2d,
+    part: &BoxPartition,
+    counts: &[usize],
+    rng: &mut Rng,
+) -> ObservationSet2d {
+    assert_eq!(counts.len(), part.p());
+    let (hx, hy) = (mesh.spacing_x(), mesh.spacing_y());
+    // Sampling interval staying > h/2 inside the box's outermost grid
+    // points; a width-1 box degenerates to its single grid coordinate
+    // (which `nearest` maps back to that point exactly).
+    let axis_range = |lo: usize, hi: usize, h: f64, n: usize| -> (f64, f64) {
+        if hi - lo == 1 {
+            let c = lo as f64 * h;
+            return (c, c);
+        }
+        let a = lo as f64 * h + 0.501 * h * (lo > 0) as u8 as f64;
+        let b = (hi - 1) as f64 * h - 0.501 * h * (hi < n) as u8 as f64;
+        (a, b)
+    };
+    let mut tuples = Vec::with_capacity(counts.iter().sum());
+    for (b, &c) in counts.iter().enumerate() {
+        let r = part.rect(b);
+        let (x0, x1) = axis_range(r.x0, r.x1, hx, mesh.nx());
+        let (y0, y1) = axis_range(r.y0, r.y1, hy, mesh.ny());
+        for _ in 0..c {
+            let x = rng.range(x0, x1.max(x0 + 1e-12));
+            let y = rng.range(y0, y1.max(y0 + 1e-12));
+            tuples.push((x, y, field2(x, y) + rng.gaussian_with(0.0, 0.05), 0.01));
+        }
+    }
+    ObservationSet2d::new(tuples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_stay_in_domain() {
+        let mut rng = Rng::new(2);
+        for layout in ObsLayout2d::ALL {
+            let obs = generate(layout, 400, &mut rng);
+            assert_eq!(obs.len(), 400);
+            assert!(obs.xs.iter().all(|&x| (0.0..=1.0).contains(&x)), "{layout:?}");
+            assert!(obs.ys.iter().all(|&y| (0.0..=1.0).contains(&y)), "{layout:?}");
+        }
+    }
+
+    #[test]
+    fn quadrant_empties_three_quarters() {
+        let mesh = Mesh2d::square(64);
+        let part = BoxPartition::uniform(64, 64, 2, 2);
+        let mut rng = Rng::new(3);
+        let obs = generate(ObsLayout2d::Quadrant, 300, &mut rng);
+        let census = obs.census(&mesh, &part);
+        assert_eq!(census[0], 300, "{census:?}");
+        assert_eq!(census[1] + census[2] + census[3], 0, "{census:?}");
+    }
+
+    #[test]
+    fn blob_is_clustered() {
+        let mesh = Mesh2d::square(64);
+        let part = BoxPartition::uniform(64, 64, 4, 4);
+        let mut rng = Rng::new(4);
+        let obs = generate(ObsLayout2d::GaussianBlob, 1000, &mut rng);
+        let census = obs.census(&mesh, &part);
+        // Heavily imbalanced: some box far from the blob is (near-)empty.
+        let mx = *census.iter().max().unwrap();
+        let mn = *census.iter().min().unwrap();
+        assert!(mx > 10 * (mn + 1), "{census:?}");
+    }
+
+    #[test]
+    fn with_counts_reproduces_census() {
+        let mesh = Mesh2d::square(48);
+        let part = BoxPartition::uniform(48, 48, 2, 3);
+        let mut rng = Rng::new(42);
+        let counts = [10usize, 0, 40, 25, 5, 120];
+        let obs = with_counts(&mesh, &part, &counts, &mut rng);
+        assert_eq!(obs.len(), 200);
+        assert_eq!(obs.census(&mesh, &part), counts.to_vec());
+    }
+
+    #[test]
+    fn with_counts_exact_even_for_width_one_boxes() {
+        // Regression: a width-1 interior box has no "strictly inside"
+        // interval; observations must land on its single grid line, not
+        // spill into the neighbour.
+        let mesh = Mesh2d::square(16);
+        // Column 1 is one grid line wide; box (1, 0) is additionally one
+        // grid line tall.
+        let part = BoxPartition::from_bounds(
+            16,
+            16,
+            vec![0, 3, 4, 16],
+            vec![vec![0, 8, 16], vec![0, 1, 16], vec![0, 8, 16]],
+        );
+        let mut rng = Rng::new(9);
+        let counts = vec![5usize; part.p()];
+        let obs = with_counts(&mesh, &part, &counts, &mut rng);
+        assert_eq!(obs.census(&mesh, &part), counts);
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for layout in ObsLayout2d::ALL {
+            assert_eq!(ObsLayout2d::parse(layout.name()), Some(layout));
+        }
+        assert_eq!(ObsLayout2d::parse("nope"), None);
+    }
+}

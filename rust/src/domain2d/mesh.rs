@@ -1,0 +1,116 @@
+//! Tensor-product 2-D mesh over [0, 1]².
+
+/// Uniform tensor-product grid with `nx × ny` points
+/// (x_i, y_j) = (i / (nx−1), j / (ny−1)).
+///
+/// The flattened unknown vector uses row-major index `iy * nx + ix`;
+/// observation locations are continuous coordinates mapped to the nearest
+/// grid point for the census / point-evaluation operator (the 2-D analogue
+/// of [`crate::domain::Mesh1d`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mesh2d {
+    nx: usize,
+    ny: usize,
+}
+
+impl Mesh2d {
+    pub fn new(nx: usize, ny: usize) -> Self {
+        assert!(nx >= 2 && ny >= 2, "mesh needs at least 2 points per axis");
+        Mesh2d { nx, ny }
+    }
+
+    /// Square grid shorthand.
+    pub fn square(n: usize) -> Self {
+        Mesh2d::new(n, n)
+    }
+
+    #[inline]
+    pub fn nx(&self) -> usize {
+        self.nx
+    }
+
+    #[inline]
+    pub fn ny(&self) -> usize {
+        self.ny
+    }
+
+    /// Total number of grid points (the flattened unknown dimension).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    #[inline]
+    pub fn spacing_x(&self) -> f64 {
+        1.0 / (self.nx - 1) as f64
+    }
+
+    #[inline]
+    pub fn spacing_y(&self) -> f64 {
+        1.0 / (self.ny - 1) as f64
+    }
+
+    /// Coordinates of grid point (ix, iy).
+    #[inline]
+    pub fn coord(&self, ix: usize, iy: usize) -> (f64, f64) {
+        debug_assert!(ix < self.nx && iy < self.ny);
+        (ix as f64 * self.spacing_x(), iy as f64 * self.spacing_y())
+    }
+
+    /// Nearest grid point to (x, y) ∈ [0, 1]².
+    #[inline]
+    pub fn nearest(&self, x: f64, y: f64) -> (usize, usize) {
+        let ix = (x.clamp(0.0, 1.0) / self.spacing_x()).round() as usize;
+        let iy = (y.clamp(0.0, 1.0) / self.spacing_y()).round() as usize;
+        (ix.min(self.nx - 1), iy.min(self.ny - 1))
+    }
+
+    /// Flattened (row-major) index of grid point (ix, iy).
+    #[inline]
+    pub fn index(&self, ix: usize, iy: usize) -> usize {
+        debug_assert!(ix < self.nx && iy < self.ny);
+        iy * self.nx + ix
+    }
+
+    /// Inverse of [`Mesh2d::index`].
+    #[inline]
+    pub fn unindex(&self, j: usize) -> (usize, usize) {
+        debug_assert!(j < self.n());
+        (j % self.nx, j / self.nx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let m = Mesh2d::new(33, 17);
+        assert_eq!(m.n(), 33 * 17);
+        for (ix, iy) in [(0usize, 0usize), (32, 16), (10, 3), (5, 16)] {
+            let (x, y) = m.coord(ix, iy);
+            assert_eq!(m.nearest(x, y), (ix, iy));
+            assert_eq!(m.unindex(m.index(ix, iy)), (ix, iy));
+        }
+        let (x, y) = m.coord(32, 16);
+        assert!((x - 1.0).abs() < 1e-15 && (y - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn nearest_clamps() {
+        let m = Mesh2d::square(11);
+        assert_eq!(m.nearest(-0.5, 0.0), (0, 0));
+        assert_eq!(m.nearest(2.0, 1.3), (10, 10));
+        assert_eq!(m.nearest(0.449, 0.451), (4, 5));
+    }
+
+    #[test]
+    fn index_is_row_major() {
+        let m = Mesh2d::new(8, 4);
+        assert_eq!(m.index(0, 0), 0);
+        assert_eq!(m.index(7, 0), 7);
+        assert_eq!(m.index(0, 1), 8);
+        assert_eq!(m.index(7, 3), 31);
+    }
+}

@@ -1,0 +1,22 @@
+//! 2-D spatial domain, box partitioning and observations.
+//!
+//! The paper validates DyDD on decomposition graphs beyond a 1-D chain
+//! (star, ring — §6), and the companion space-time DD works (arXiv
+//! 2312.00007, 2205.06649) target multi-dimensional physical domains. This
+//! module is the 2-D generalization of [`crate::domain`]: a tensor-product
+//! [`Mesh2d`] on [0, 1]², a [`BoxPartition`] into a `px × py` grid of
+//! axis-aligned boxes with per-box overlap halos (eqs. 21-22 per axis), 2-D
+//! observation sets with clustered / banded / ring layouts, a per-box
+//! observation census, and the 4-connected decomposition [`crate::graph::Graph`]
+//! the DyDD Laplacian scheduler consumes unchanged. The geometric migration
+//! step lives in [`crate::dydd::rebalance_partition2d`].
+
+pub mod generators;
+pub mod mesh;
+pub mod observations;
+pub mod partition;
+
+pub use generators::ObsLayout2d;
+pub use mesh::Mesh2d;
+pub use observations::ObservationSet2d;
+pub use partition::{BoxPartition, BoxRect};

@@ -1,0 +1,165 @@
+//! 2-D observation sets: locations in [0, 1]², data values and error
+//! variances, plus the per-box census DyDD balances (Remark 5 generalized
+//! to box decompositions).
+
+use super::mesh::Mesh2d;
+use super::partition::BoxPartition;
+
+/// A set of point observations on [0, 1]².
+///
+/// Kept sorted by (x, y) lexicographically so the x grid indices are
+/// non-decreasing — the property the geometric migration's axis sweeps
+/// rely on (cf. [`crate::domain::ObservationSet`] in 1-D).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObservationSet2d {
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    /// Data values y_k (same order as locations).
+    pub values: Vec<f64>,
+    /// Error variances r_k > 0.
+    pub variances: Vec<f64>,
+}
+
+impl ObservationSet2d {
+    /// Build from (x, y, value, variance) tuples.
+    pub fn new(mut tuples: Vec<(f64, f64, f64, f64)>) -> Self {
+        tuples.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        let mut s = ObservationSet2d::default();
+        for (x, y, v, r) in tuples {
+            assert!(r > 0.0, "variance must be positive");
+            s.xs.push(x);
+            s.ys.push(y);
+            s.values.push(v);
+            s.variances.push(r);
+        }
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Nearest-grid-point indices of every observation; the x components
+    /// are non-decreasing because locations are sorted by x.
+    pub fn grid_indices(&self, mesh: &Mesh2d) -> Vec<(usize, usize)> {
+        self.xs
+            .iter()
+            .zip(&self.ys)
+            .map(|(&x, &y)| mesh.nearest(x, y))
+            .collect()
+    }
+
+    /// Observation census per box: l(b) = #observations whose nearest grid
+    /// point lies in box b — the workload DyDD balances.
+    pub fn census(&self, mesh: &Mesh2d, part: &BoxPartition) -> Vec<usize> {
+        let mut counts = vec![0usize; part.p()];
+        for (&x, &y) in self.xs.iter().zip(&self.ys) {
+            let (ix, iy) = mesh.nearest(x, y);
+            counts[part.owner(ix, iy)] += 1;
+        }
+        counts
+    }
+
+    /// Indices (into this set) of observations inside box `b`.
+    pub fn in_box(&self, mesh: &Mesh2d, part: &BoxPartition, b: usize) -> Vec<usize> {
+        let r = part.rect(b);
+        (0..self.len())
+            .filter(|&k| {
+                let (ix, iy) = mesh.nearest(self.xs[k], self.ys[k]);
+                r.contains(ix, iy)
+            })
+            .collect()
+    }
+
+    /// Bilinear-interpolation row of the 2-D observation operator for
+    /// observation k: the flattened indices of the 4 bracketing grid points
+    /// and their weights (≤ 4 non-zeros per row — the sparse structure that
+    /// keeps the per-box row census meaningful).
+    pub fn interp_row(&self, mesh: &Mesh2d, k: usize) -> [(usize, f64); 4] {
+        let x = self.xs[k].clamp(0.0, 1.0);
+        let y = self.ys[k].clamp(0.0, 1.0);
+        let (hx, hy) = (mesh.spacing_x(), mesh.spacing_y());
+        let ix = ((x / hx).floor() as usize).min(mesh.nx() - 2);
+        let iy = ((y / hy).floor() as usize).min(mesh.ny() - 2);
+        let tx = (x - ix as f64 * hx) / hx;
+        let ty = (y - iy as f64 * hy) / hy;
+        [
+            (mesh.index(ix, iy), (1.0 - tx) * (1.0 - ty)),
+            (mesh.index(ix + 1, iy), tx * (1.0 - ty)),
+            (mesh.index(ix, iy + 1), (1.0 - tx) * ty),
+            (mesh.index(ix + 1, iy + 1), tx * ty),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(locs: &[(f64, f64)]) -> ObservationSet2d {
+        ObservationSet2d::new(locs.iter().map(|&(x, y)| (x, y, 1.0, 0.1)).collect())
+    }
+
+    #[test]
+    fn kept_sorted_by_x_then_y() {
+        let s = set(&[(0.9, 0.1), (0.1, 0.8), (0.1, 0.2), (0.5, 0.5)]);
+        assert_eq!(s.xs, vec![0.1, 0.1, 0.5, 0.9]);
+        assert_eq!(s.ys, vec![0.2, 0.8, 0.5, 0.1]);
+    }
+
+    #[test]
+    fn census_counts_by_owner() {
+        let mesh = Mesh2d::square(101);
+        let part = BoxPartition::uniform(101, 101, 2, 2);
+        // One obs per quadrant + two more in the upper-right.
+        let s = set(&[(0.2, 0.2), (0.8, 0.2), (0.2, 0.8), (0.8, 0.8), (0.9, 0.9), (0.7, 0.6)]);
+        let census = s.census(&mesh, &part);
+        assert_eq!(census.iter().sum::<usize>(), 6);
+        assert_eq!(census, vec![1, 1, 1, 3]);
+    }
+
+    #[test]
+    fn in_box_matches_census() {
+        let mesh = Mesh2d::square(64);
+        let part = BoxPartition::uniform(64, 64, 3, 2);
+        let s = set(&[
+            (0.05, 0.9),
+            (0.3, 0.3),
+            (0.34, 0.8),
+            (0.5, 0.5),
+            (0.66, 0.1),
+            (0.71, 0.9),
+            (0.99, 0.01),
+        ]);
+        let census = s.census(&mesh, &part);
+        for b in 0..part.p() {
+            assert_eq!(s.in_box(&mesh, &part, b).len(), census[b], "box {b}");
+        }
+    }
+
+    #[test]
+    fn interp_row_weights_sum_to_one_and_recover_location() {
+        let mesh = Mesh2d::new(11, 17);
+        let s = set(&[(0.0, 0.0), (0.234, 0.77), (0.5, 0.5), (1.0, 1.0)]);
+        for k in 0..s.len() {
+            let row = s.interp_row(&mesh, k);
+            let wsum: f64 = row.iter().map(|&(_, w)| w).sum();
+            assert!((wsum - 1.0).abs() < 1e-12);
+            assert!(row.iter().all(|&(_, w)| (0.0..=1.0).contains(&w)));
+            // Interpolating f(x, y) = x and f(x, y) = y recovers the location.
+            let (mut xr, mut yr) = (0.0, 0.0);
+            for &(j, w) in &row {
+                let (ix, iy) = mesh.unindex(j);
+                let (cx, cy) = mesh.coord(ix, iy);
+                xr += w * cx;
+                yr += w * cy;
+            }
+            assert!((xr - s.xs[k]).abs() < 1e-12, "k={k}");
+            assert!((yr - s.ys[k]).abs() < 1e-12, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Box partition of the 2-D index set {0..nx} × {0..ny} into a `px × py`
+//! logical grid of axis-aligned boxes.
+//!
+//! This is the 2-D generalization of the contiguous-interval
+//! [`crate::domain::Partition`] (eqs. 21-22): box (bx, by) owns the grid
+//! rectangle [xbounds[bx], xbounds[bx+1]) × [ybounds[bx][by],
+//! ybounds[bx][by+1]), optionally extended by an `overlap` halo on every
+//! side. Column (x) bounds are global; the y-bounds are *per column* so
+//! DyDD's geometric migration can realize an arbitrary per-box observation
+//! census exactly (a pure tensor-product split can only balance separable
+//! densities). With identical y-bounds in every column this degenerates to
+//! the classic tensor-product decomposition.
+
+use crate::graph::Graph;
+
+/// Grid-index rectangle [x0, x1) × [y0, y1) owned by one box.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoxRect {
+    pub x0: usize,
+    pub x1: usize,
+    pub y0: usize,
+    pub y1: usize,
+}
+
+impl BoxRect {
+    /// Number of grid points inside.
+    pub fn area(&self) -> usize {
+        (self.x1 - self.x0) * (self.y1 - self.y0)
+    }
+
+    pub fn contains(&self, ix: usize, iy: usize) -> bool {
+        (self.x0..self.x1).contains(&ix) && (self.y0..self.y1).contains(&iy)
+    }
+}
+
+/// Partition of an `nx × ny` grid into `px × py` non-empty boxes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BoxPartition {
+    nx: usize,
+    ny: usize,
+    /// px+1 monotone global column bounds, xbounds[0] = 0, last = nx.
+    xbounds: Vec<usize>,
+    /// Per column: py+1 monotone bounds, ybounds[c][0] = 0, last = ny.
+    ybounds: Vec<Vec<usize>>,
+}
+
+impl BoxPartition {
+    /// Uniform `px × py` box grid (the initial DD).
+    pub fn uniform(nx: usize, ny: usize, px: usize, py: usize) -> Self {
+        assert!(px >= 1 && nx >= px, "need nx >= px >= 1");
+        assert!(py >= 1 && ny >= py, "need ny >= py >= 1");
+        let xbounds: Vec<usize> = (0..=px).map(|i| i * nx / px).collect();
+        let ycol: Vec<usize> = (0..=py).map(|j| j * ny / py).collect();
+        BoxPartition::from_bounds(nx, ny, xbounds, vec![ycol; px])
+    }
+
+    /// Partition from explicit bounds; validates every box is non-empty.
+    pub fn from_bounds(
+        nx: usize,
+        ny: usize,
+        xbounds: Vec<usize>,
+        ybounds: Vec<Vec<usize>>,
+    ) -> Self {
+        assert!(xbounds.len() >= 2);
+        assert_eq!(xbounds[0], 0);
+        assert_eq!(*xbounds.last().unwrap(), nx);
+        assert!(
+            xbounds.windows(2).all(|w| w[0] < w[1]),
+            "empty or unordered column interval: {xbounds:?}"
+        );
+        let px = xbounds.len() - 1;
+        assert_eq!(ybounds.len(), px, "one y-bound vector per column");
+        let py = ybounds[0].len() - 1;
+        for (c, yb) in ybounds.iter().enumerate() {
+            assert_eq!(yb.len(), py + 1, "column {c}: inconsistent py");
+            assert_eq!(yb[0], 0);
+            assert_eq!(*yb.last().unwrap(), ny);
+            assert!(
+                yb.windows(2).all(|w| w[0] < w[1]),
+                "column {c}: empty or unordered row interval: {yb:?}"
+            );
+        }
+        BoxPartition { nx, ny, xbounds, ybounds }
+    }
+
+    #[inline]
+    pub fn nx(&self) -> usize {
+        self.nx
+    }
+
+    #[inline]
+    pub fn ny(&self) -> usize {
+        self.ny
+    }
+
+    #[inline]
+    pub fn px(&self) -> usize {
+        self.xbounds.len() - 1
+    }
+
+    #[inline]
+    pub fn py(&self) -> usize {
+        self.ybounds[0].len() - 1
+    }
+
+    /// Number of boxes (subdomains).
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.px() * self.py()
+    }
+
+    /// Box id of logical grid cell (bx, by) — row-major over the box grid.
+    #[inline]
+    pub fn box_id(&self, bx: usize, by: usize) -> usize {
+        debug_assert!(bx < self.px() && by < self.py());
+        by * self.px() + bx
+    }
+
+    /// Inverse of [`BoxPartition::box_id`].
+    #[inline]
+    pub fn box_coords(&self, b: usize) -> (usize, usize) {
+        debug_assert!(b < self.p());
+        (b % self.px(), b / self.px())
+    }
+
+    pub fn xbounds(&self) -> &[usize] {
+        &self.xbounds
+    }
+
+    pub fn ybounds(&self, column: usize) -> &[usize] {
+        &self.ybounds[column]
+    }
+
+    /// Owned rectangle of box `b` (no overlap).
+    pub fn rect(&self, b: usize) -> BoxRect {
+        let (bx, by) = self.box_coords(b);
+        BoxRect {
+            x0: self.xbounds[bx],
+            x1: self.xbounds[bx + 1],
+            y0: self.ybounds[bx][by],
+            y1: self.ybounds[bx][by + 1],
+        }
+    }
+
+    /// Rectangle extended by an `overlap` halo on each side, clamped to the
+    /// grid — the 2-D analogue of the overlapping index sets of eq. 21.
+    pub fn rect_with_overlap(&self, b: usize, overlap: usize) -> BoxRect {
+        let r = self.rect(b);
+        BoxRect {
+            x0: r.x0.saturating_sub(overlap),
+            x1: (r.x1 + overlap).min(self.nx),
+            y0: r.y0.saturating_sub(overlap),
+            y1: (r.y1 + overlap).min(self.ny),
+        }
+    }
+
+    /// Grid points owned by box `b`.
+    pub fn size(&self, b: usize) -> usize {
+        self.rect(b).area()
+    }
+
+    /// Which box owns grid point (ix, iy).
+    pub fn owner(&self, ix: usize, iy: usize) -> usize {
+        debug_assert!(ix < self.nx && iy < self.ny);
+        let bx = match self.xbounds.binary_search(&ix) {
+            Ok(i) => i.min(self.px() - 1),
+            Err(i) => i - 1,
+        };
+        let yb = &self.ybounds[bx];
+        let by = match yb.binary_search(&iy) {
+            Ok(i) => i.min(self.py() - 1),
+            Err(i) => i - 1,
+        };
+        self.box_id(bx, by)
+    }
+
+    /// The decomposition graph DyDD schedules on: the 4-connected box grid
+    /// ((bx, by) ~ (bx±1, by) and (bx, by±1)) — the non-chain topology the
+    /// Laplacian scheduler was built for.
+    pub fn induced_graph(&self) -> Graph {
+        let (px, py) = (self.px(), self.py());
+        let mut g = Graph::new(px * py);
+        for by in 0..py {
+            for bx in 0..px {
+                if bx + 1 < px {
+                    g.add_edge(self.box_id(bx, by), self.box_id(bx + 1, by));
+                }
+                if by + 1 < py {
+                    g.add_edge(self.box_id(bx, by), self.box_id(bx, by + 1));
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_covers_exactly() {
+        let part = BoxPartition::uniform(64, 48, 4, 3);
+        assert_eq!(part.p(), 12);
+        let total: usize = (0..12).map(|b| part.size(b)).sum();
+        assert_eq!(total, 64 * 48);
+        assert_eq!(part.size(0), 16 * 16);
+    }
+
+    #[test]
+    fn owner_matches_rect() {
+        let part = BoxPartition::uniform(32, 32, 4, 4);
+        for iy in 0..32 {
+            for ix in 0..32 {
+                let b = part.owner(ix, iy);
+                assert!(part.rect(b).contains(ix, iy), "({ix},{iy}) -> box {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_column_ybounds_respected() {
+        // Column 0 splits y at 3, column 1 at 7 (a "sawtooth" partition).
+        let part = BoxPartition::from_bounds(
+            10,
+            10,
+            vec![0, 5, 10],
+            vec![vec![0, 3, 10], vec![0, 7, 10]],
+        );
+        assert_eq!(part.owner(0, 2), part.box_id(0, 0));
+        assert_eq!(part.owner(0, 3), part.box_id(0, 1));
+        assert_eq!(part.owner(9, 6), part.box_id(1, 0));
+        assert_eq!(part.owner(9, 7), part.box_id(1, 1));
+    }
+
+    #[test]
+    fn grid_graph_is_4_connected() {
+        let part = BoxPartition::uniform(32, 32, 3, 4);
+        let g = part.induced_graph();
+        assert_eq!(g.p(), 12);
+        // Grid edge count: py*(px-1) + px*(py-1).
+        assert_eq!(g.num_edges(), 4 * 2 + 3 * 3);
+        assert!(g.is_connected());
+        // Corner degree 2, edge degree 3, interior degree 4.
+        assert_eq!(g.degree(part.box_id(0, 0)), 2);
+        assert_eq!(g.degree(part.box_id(1, 0)), 3);
+        assert_eq!(g.degree(part.box_id(1, 1)), 4);
+    }
+
+    #[test]
+    fn overlap_halo_clamps() {
+        let part = BoxPartition::uniform(40, 40, 4, 4);
+        let r = part.rect_with_overlap(part.box_id(0, 0), 3);
+        assert_eq!((r.x0, r.y0), (0, 0));
+        assert_eq!((r.x1, r.y1), (13, 13));
+        let inner = part.rect_with_overlap(part.box_id(1, 1), 2);
+        assert_eq!((inner.x0, inner.x1, inner.y0, inner.y1), (8, 22, 8, 22));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty or unordered")]
+    fn empty_box_rejected() {
+        BoxPartition::from_bounds(8, 8, vec![0, 4, 4, 8], vec![vec![0, 8]; 3]);
+    }
+
+    #[test]
+    fn degenerate_single_box() {
+        let part = BoxPartition::uniform(16, 16, 1, 1);
+        assert_eq!(part.p(), 1);
+        assert_eq!(part.size(0), 256);
+        assert_eq!(part.induced_graph().num_edges(), 0);
+    }
+}

@@ -17,17 +17,26 @@
 
 mod balancer;
 mod geometric;
+mod geometric2d;
 
 pub use balancer::{balance, repair, schedule_once, BalanceError, DyddOutcome, DyddParams};
 pub use geometric::{rebalance_partition, GeometricOutcome};
+pub use geometric2d::{rebalance_partition2d, GeometricOutcome2d};
 
 /// Load-balance quality: ℰ = min_i l_fin(i) / max_i l_fin(i) (§6).
 /// ℰ = 1 is perfect balance.
+///
+/// Degenerate cases: an *empty* slice (no subdomains) is vacuously
+/// balanced (ℰ = 1); a non-empty all-zero census means every subdomain is
+/// starved, which is the worst balance, not the best — ℰ = 0.
 pub fn balance_ratio(loads: &[usize]) -> f64 {
-    let mx = loads.iter().copied().max().unwrap_or(0);
-    let mn = loads.iter().copied().min().unwrap_or(0);
-    if mx == 0 {
+    if loads.is_empty() {
         return 1.0;
+    }
+    let mx = loads.iter().copied().max().unwrap();
+    let mn = loads.iter().copied().min().unwrap();
+    if mx == 0 {
+        return 0.0;
     }
     mn as f64 / mx as f64
 }
@@ -40,7 +49,25 @@ mod tests {
     fn balance_ratio_cases() {
         assert_eq!(balance_ratio(&[4, 4, 4]), 1.0);
         assert_eq!(balance_ratio(&[2, 4]), 0.5);
+    }
+
+    #[test]
+    fn balance_ratio_empty_slice_is_vacuously_balanced() {
         assert_eq!(balance_ratio(&[]), 1.0);
-        assert_eq!(balance_ratio(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn balance_ratio_all_zero_is_worst_not_best() {
+        assert_eq!(balance_ratio(&[0]), 0.0);
+        assert_eq!(balance_ratio(&[0, 0]), 0.0);
+        assert_eq!(balance_ratio(&[0, 0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn balance_ratio_single_subdomain() {
+        // One loaded subdomain is perfectly balanced with itself.
+        assert_eq!(balance_ratio(&[17]), 1.0);
+        // A single empty subdomain carries no data at all.
+        assert_eq!(balance_ratio(&[0]), 0.0);
     }
 }

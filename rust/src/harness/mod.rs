@@ -8,4 +8,5 @@ pub mod scenarios;
 pub mod tables;
 
 pub use pipeline::{run_experiment, ExperimentReport};
+pub use scenarios::{grid2d, Scenario2d};
 pub use tables::{all_tables, render_table, TableId};

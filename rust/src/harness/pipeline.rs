@@ -66,6 +66,11 @@ impl ExperimentReport {
 /// `with_baseline`: also run the sequential KF (T¹) and compute
 /// error_DD-DA; skip for large sweeps where only DyDD timing is studied.
 pub fn run_experiment(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result<ExperimentReport> {
+    anyhow::ensure!(
+        cfg.dim == 1,
+        "run_experiment drives the 1-D DD-KF pipeline; for dim = 2 use the \
+         box-grid DyDD path (dydd::rebalance_partition2d / CLI --dim 2)"
+    );
     let prob = cfg.build_problem();
     let mesh = Mesh1d::new(cfg.n);
     let part0 = Partition::uniform(cfg.n, cfg.p);
@@ -118,6 +123,7 @@ pub fn run_with_counts(
     counts: &[usize],
     with_baseline: bool,
 ) -> anyhow::Result<ExperimentReport> {
+    anyhow::ensure!(base.dim == 1, "run_with_counts drives the 1-D DD-KF pipeline");
     let mesh = Mesh1d::new(base.n);
     let part0 = Partition::uniform(base.n, counts.len());
     let mut rng = crate::util::Rng::new(base.seed);

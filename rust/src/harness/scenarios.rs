@@ -1,15 +1,19 @@
-//! The paper's exact evaluation scenarios (§6, Examples 1-4).
+//! The paper's exact evaluation scenarios (§6, Examples 1-4) plus the 2-D
+//! box-grid scenarios introduced by the `domain2d` subsystem.
 //!
 //! Every table lists the initial per-subdomain observation counts; these
 //! builders reproduce them verbatim and attach the decomposition graph
 //! the example prescribes.
 
+use crate::config::ExperimentConfig;
+use crate::domain2d::{generators as gen2d, BoxPartition, Mesh2d, ObsLayout2d, ObservationSet2d};
 use crate::graph::Graph;
+use crate::util::Rng;
 
 /// An abstract DyDD scenario: graph + initial loads.
 #[derive(Debug, Clone)]
 pub struct Scenario {
-    pub name: &'static str,
+    pub name: String,
     pub graph: Graph,
     pub l_in: Vec<usize>,
 }
@@ -19,8 +23,8 @@ pub struct Scenario {
 pub fn example1(case: usize) -> Scenario {
     let graph = Graph::chain(2);
     match case {
-        1 => Scenario { name: "ex1-case1", graph, l_in: vec![1000, 500] },
-        2 => Scenario { name: "ex1-case2", graph, l_in: vec![1500, 0] },
+        1 => Scenario { name: "ex1-case1".into(), graph, l_in: vec![1000, 500] },
+        2 => Scenario { name: "ex1-case2".into(), graph, l_in: vec![1500, 0] },
         _ => panic!("example 1 has cases 1-2"),
     }
 }
@@ -42,7 +46,7 @@ pub fn example2(case: usize) -> Scenario {
         4 => vec![0, 0, 0, 1500],
         _ => panic!("example 2 has cases 1-4"),
     };
-    Scenario { name: "ex2", graph, l_in }
+    Scenario { name: "ex2".into(), graph, l_in }
 }
 
 /// Example 3 (m = 1032): star topology — Ω₁ adjacent to all others
@@ -59,7 +63,7 @@ pub fn example3(p: usize) -> Scenario {
         *li = leaf;
     }
     l_in[0] = m - leaf * (p - 1);
-    Scenario { name: "ex3-star", graph: Graph::star(p), l_in }
+    Scenario { name: "ex3-star".into(), graph: Graph::star(p), l_in }
 }
 
 /// Example 4 (m = 2000): chain topology — deg(1) = deg(p) = 1, interior
@@ -76,7 +80,79 @@ pub fn example4(p: usize) -> Scenario {
         assigned += share;
     }
     l_in[p - 1] = m - assigned;
-    Scenario { name: "ex4-chain", graph: Graph::chain(p), l_in }
+    Scenario { name: "ex4-chain".into(), graph: Graph::chain(p), l_in }
+}
+
+/// A concrete 2-D DyDD scenario: mesh + box partition + observations.
+///
+/// Unlike the abstract [`Scenario`] (graph + loads read off a table), a 2-D
+/// scenario carries the full geometry so both the abstract balancer and the
+/// geometric migration ([`crate::dydd::rebalance_partition2d`]) can run on it.
+#[derive(Debug, Clone)]
+pub struct Scenario2d {
+    pub name: String,
+    pub mesh: Mesh2d,
+    pub part: BoxPartition,
+    pub obs: ObservationSet2d,
+}
+
+impl Scenario2d {
+    /// Initial per-box observation census (the l_in the tables report).
+    pub fn census(&self) -> Vec<usize> {
+        self.obs.census(&self.mesh, &self.part)
+    }
+
+    /// The 4-connected decomposition graph of the box grid.
+    pub fn graph(&self) -> Graph {
+        self.part.induced_graph()
+    }
+
+    /// The abstract (graph, loads) view for the table renderers.
+    pub fn abstract_loads(&self) -> Scenario {
+        Scenario { name: self.name.clone(), graph: self.graph(), l_in: self.census() }
+    }
+}
+
+/// Build a 2-D scenario: `m` observations of `layout` on an `n × n` grid
+/// decomposed into `px × py` uniform boxes.
+pub fn grid2d(
+    n: usize,
+    px: usize,
+    py: usize,
+    m: usize,
+    layout: ObsLayout2d,
+    seed: u64,
+) -> Scenario2d {
+    let mesh = Mesh2d::square(n);
+    let part = BoxPartition::uniform(n, n, px, py);
+    let mut rng = Rng::new(seed);
+    let obs = gen2d::generate(layout, m, &mut rng);
+    Scenario2d {
+        name: format!("grid2d-{}-{px}x{py}", layout.name()),
+        mesh,
+        part,
+        obs,
+    }
+}
+
+/// The 2-D scenario an [`ExperimentConfig`] with `dim = 2` describes.
+pub fn from_config(cfg: &ExperimentConfig) -> Scenario2d {
+    grid2d(cfg.n, cfg.px, cfg.py, cfg.m, cfg.layout2d, cfg.seed)
+}
+
+/// Render a per-box census as a py × px text grid (row by = 0 at the
+/// bottom, matching the spatial layout). Shared by the CLI and examples.
+pub fn render_census_grid(census: &[usize], px: usize, py: usize) -> String {
+    assert_eq!(census.len(), px * py);
+    let mut out = String::new();
+    for by in (0..py).rev() {
+        out.push_str("    ");
+        for bx in 0..px {
+            out.push_str(&format!("{:>6}", census[by * px + bx]));
+        }
+        out.push('\n');
+    }
+    out
 }
 
 #[cfg(test)]
@@ -118,5 +194,31 @@ mod tests {
         assert_eq!(example2(1).l_in, vec![150, 300, 450, 600]);
         assert_eq!(example2(2).l_in, vec![450, 0, 450, 600]);
         assert_eq!(example2(4).l_in, vec![0, 0, 0, 1500]);
+    }
+
+    #[test]
+    fn grid2d_scenario_is_consistent() {
+        let sc = grid2d(128, 4, 3, 500, ObsLayout2d::Uniform2d, 5);
+        assert_eq!(sc.census().iter().sum::<usize>(), 500);
+        let g = sc.graph();
+        assert_eq!(g.p(), 12);
+        assert!(g.is_connected());
+        let a = sc.abstract_loads();
+        assert_eq!(a.l_in, sc.census());
+    }
+
+    #[test]
+    fn grid2d_from_config_uses_2d_fields() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.n = 128;
+        cfg.m = 300;
+        cfg.px = 2;
+        cfg.py = 3;
+        cfg.layout2d = ObsLayout2d::Quadrant;
+        let sc = from_config(&cfg);
+        assert_eq!(sc.part.px(), 2);
+        assert_eq!(sc.part.py(), 3);
+        assert_eq!(sc.obs.len(), 300);
     }
 }

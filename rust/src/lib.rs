@@ -8,7 +8,11 @@
 //! Three layers (see DESIGN.md):
 //! * **L3 (this crate)** — the DyDD dynamic load balancer, the DD-KF
 //!   alternating-Schwarz coordinator, and every substrate (linalg, graphs,
-//!   domain partitioning, sequential KF baseline).
+//!   domain partitioning, sequential KF baseline). Spatial decompositions
+//!   come in two flavours: [`domain`] (1-D chain of intervals) and
+//!   [`domain2d`] (a `px × py` box grid on [0, 1]² whose 4-connected
+//!   decomposition graph feeds the same Laplacian scheduler, rebalanced
+//!   geometrically by [`dydd::rebalance_partition2d`]).
 //! * **L2/L1 (build-time python)** — JAX model functions composing Pallas
 //!   kernels, AOT-lowered to HLO-text artifacts executed through PJRT by
 //!   [`runtime`].
@@ -22,6 +26,7 @@ pub mod coordinator;
 pub mod covariance;
 pub mod ddkf;
 pub mod domain;
+pub mod domain2d;
 pub mod dydd;
 pub mod fourd;
 pub mod graph;

@@ -2,17 +2,20 @@
 //!
 //! Subcommands:
 //!   info                     platform, artifact and build information
-//!   run [--config F] [...]   run one experiment (DyDD + DD-KF + baseline)
+//!   run [--config F] [...]   run one experiment (DyDD + DD-KF + baseline;
+//!                            --dim 2 runs box-grid DyDD on [0,1]²)
 //!   dydd --loads a,b,c ...   run the load balancer on an abstract scenario
+//!   dydd --dim 2 [...]       geometric DyDD on a px × py box grid
 //!   table <1..12|fig5|all>   regenerate the paper's tables/figures
 //!   bench-tables [--full]    regenerate everything (what EXPERIMENTS.md cites)
 
 use dydd_da::config::ExperimentConfig;
 use dydd_da::coordinator::SolverBackend;
 use dydd_da::domain::ObsLayout;
-use dydd_da::dydd::{balance, DyddParams};
+use dydd_da::domain2d::ObsLayout2d;
+use dydd_da::dydd::{balance, balance_ratio, rebalance_partition2d, DyddParams};
 use dydd_da::graph::Graph;
-use dydd_da::harness::{all_tables, render_table, run_experiment, TableId};
+use dydd_da::harness::{all_tables, render_table, run_experiment, scenarios, TableId};
 use dydd_da::runtime;
 use dydd_da::util::timer::fmt_secs;
 use std::path::Path;
@@ -47,13 +50,17 @@ dydd-da — Parallel Dynamic Domain Decomposition for Data Assimilation
 USAGE:
   dydd-da info
   dydd-da run [--config FILE] [--n N] [--m M] [--p P] [--layout L]
+              [--dim 1|2] [--px PX] [--py PY]
               [--backend native|kf|pjrt] [--overlap S] [--mu MU]
               [--no-dydd] [--seed SEED] [--no-baseline]
   dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
+  dydd-da dydd --dim 2 [--px PX] [--py PY] [--layout L2] [--n N] [--m M]
+              [--seed SEED]
   dydd-da table <1..12|fig5|all> [--full]
   dydd-da bench-tables [--full]
 
-Layouts: uniform | ramp | cluster | two_clusters | left_packed
+1-D layouts: uniform | ramp | cluster | two_clusters | left_packed
+2-D layouts: uniform2d | gaussian_blob | diagonal_band | ring | quadrant
 ";
 
 /// Tiny flag parser: `--key value` and boolean `--flag`.
@@ -89,6 +96,10 @@ fn cmd_info() -> anyhow::Result<()> {
     println!("dydd-da {} — DyDD / DD-KF reproduction", env!("CARGO_PKG_VERSION"));
     let dir = runtime::default_artifacts_dir();
     println!("artifacts dir : {}", dir.display());
+    println!(
+        "pjrt feature  : {}",
+        if runtime::pjrt_enabled() { "enabled" } else { "disabled (stub backend)" }
+    );
     if runtime::artifacts_available(&dir) {
         let man = runtime::Manifest::load(&dir)?;
         println!("artifacts     : {} entries (manifest ok)", man.artifacts.len());
@@ -103,8 +114,10 @@ fn cmd_info() -> anyhow::Result<()> {
             println!("pjrt          : CPU client ok, compiled {}", meta.name);
             Ok(())
         })?;
-    } else {
+    } else if runtime::pjrt_enabled() {
         println!("artifacts     : NOT BUILT (run `make artifacts`) — native backend only");
+    } else {
+        println!("artifacts     : unavailable without the `pjrt` feature — native backend only");
     }
     println!("cores         : {}", std::thread::available_parallelism()?.get());
     Ok(())
@@ -127,6 +140,20 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         Some(path) => ExperimentConfig::from_file(Path::new(path))?,
         None => ExperimentConfig::default(),
     };
+    let config_dim = cfg.dim;
+    if let Some(d) = f.parsed::<usize>("--dim")? {
+        cfg.dim = d;
+        // Changing the dimension orphans the config file's layout choice
+        // (1-D and 2-D layouts live in separate fields); be loud about
+        // falling back to the default rather than silently swapping it.
+        if d != config_dim && f.get("--layout").is_none() {
+            eprintln!(
+                "warning: --dim {d} overrides the config's dimension; no --layout given, \
+                 using the default ({})",
+                if d == 2 { "uniform2d" } else { "uniform" }
+            );
+        }
+    }
     if let Some(n) = f.parsed::<usize>("--n")? {
         cfg.n = n;
     }
@@ -136,8 +163,19 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     if let Some(p) = f.parsed::<usize>("--p")? {
         cfg.p = p;
     }
+    if let Some(px) = f.parsed::<usize>("--px")? {
+        cfg.px = px;
+    }
+    if let Some(py) = f.parsed::<usize>("--py")? {
+        cfg.py = py;
+    }
     if let Some(s) = f.get("--layout") {
-        cfg.layout = parse_layout(s)?;
+        if cfg.dim == 2 {
+            cfg.layout2d = ObsLayout2d::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown 2-D layout {s:?}"))?;
+        } else {
+            cfg.layout = parse_layout(s)?;
+        }
     }
     if let Some(b) = f.get("--backend") {
         cfg.backend =
@@ -156,6 +194,34 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         cfg.dydd = false;
     }
     cfg.validate()?;
+
+    if cfg.dim == 2 {
+        // The DD-KF solver pipeline is 1-D; dim = 2 runs the DyDD
+        // subsystem on the box grid (census → schedule → edge shifting).
+        for flag in ["--p", "--backend", "--overlap", "--mu", "--no-baseline"] {
+            if f.has(flag) {
+                eprintln!("warning: {flag} has no effect with --dim 2 (DyDD-only path)");
+            }
+        }
+        let sc = scenarios::from_config(&cfg);
+        println!(
+            "run: dim=2 n={}x{} m={} grid={}x{} layout={} dydd={}",
+            cfg.n,
+            cfg.n,
+            cfg.m,
+            cfg.px,
+            cfg.py,
+            cfg.layout2d.name(),
+            cfg.dydd
+        );
+        if !cfg.dydd {
+            let l_in = sc.census();
+            println!("l_in  (E = {:.3}):", balance_ratio(&l_in));
+            print!("{}", census_grid(&l_in, cfg.px, cfg.py));
+            return Ok(());
+        }
+        return run_dydd_2d(&sc);
+    }
 
     let with_baseline = !f.has("--no-baseline");
     println!(
@@ -190,8 +256,62 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+use dydd_da::harness::scenarios::render_census_grid as census_grid;
+
+/// Run geometric DyDD on a 2-D scenario and report the paper's metrics.
+fn run_dydd_2d(sc: &scenarios::Scenario2d) -> anyhow::Result<()> {
+    let (px, py) = (sc.part.px(), sc.part.py());
+    let l_in = sc.census();
+    println!("l_in  (E = {:.3}):", balance_ratio(&l_in));
+    print!("{}", census_grid(&l_in, px, py));
+    let out = rebalance_partition2d(&sc.mesh, &sc.part, &sc.obs, &DyddParams::default())?;
+    if let Some(lr) = &out.dydd.l_r {
+        println!("l_r   (after DD repair step):");
+        print!("{}", census_grid(lr, px, py));
+    }
+    println!("l_fin (realized census after edge shifting):");
+    print!("{}", census_grid(&out.census_after, px, py));
+    println!(
+        "E = {:.3}   iters = {}   migrations = {}   T_DyDD = {}   T_r = {}",
+        out.balance(),
+        out.dydd.iters,
+        out.dydd.migrations.len(),
+        fmt_secs(out.dydd.t_dydd.as_secs_f64()),
+        fmt_secs(out.dydd.t_repartition.as_secs_f64()),
+    );
+    Ok(())
+}
+
 fn cmd_dydd(args: &[String]) -> anyhow::Result<()> {
     let f = Flags { args };
+    if f.parsed::<usize>("--dim")? == Some(2) {
+        for flag in ["--loads", "--graph"] {
+            if f.has(flag) {
+                eprintln!(
+                    "warning: {flag} has no effect with --dim 2 (the box grid defines \
+                     the graph and the generated layout defines the loads)"
+                );
+            }
+        }
+        let px = f.parsed::<usize>("--px")?.unwrap_or(4);
+        let py = f.parsed::<usize>("--py")?.unwrap_or(4);
+        let n = f.parsed::<usize>("--n")?.unwrap_or(512);
+        let m = f.parsed::<usize>("--m")?.unwrap_or(2000);
+        let seed = f.parsed::<u64>("--seed")?.unwrap_or(42);
+        let layout = match f.get("--layout") {
+            Some(s) => ObsLayout2d::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown 2-D layout {s:?}"))?,
+            None => ObsLayout2d::Uniform2d,
+        };
+        anyhow::ensure!(px >= 1 && py >= 1, "need px >= 1 and py >= 1");
+        anyhow::ensure!(n >= px.max(py) * 2, "grid {n} too coarse for {px}x{py} boxes");
+        let sc = scenarios::grid2d(n, px, py, m, layout, seed);
+        println!(
+            "dydd: dim=2 n={n}x{n} m={m} grid={px}x{py} layout={} seed={seed}",
+            layout.name()
+        );
+        return run_dydd_2d(&sc);
+    }
     let loads: Vec<usize> = f
         .get("--loads")
         .ok_or_else(|| anyhow::anyhow!("--loads is required"))?

@@ -7,6 +7,8 @@
 //! benches, tests) share the main thread's engine.
 
 use super::manifest::{ArtifactMeta, Manifest, ManifestError};
+#[cfg(not(feature = "pjrt"))]
+use super::stub as xla;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -108,9 +110,12 @@ pub fn with_engine<T>(
     })
 }
 
-/// Quick availability probe: manifest readable and non-empty.
+/// Quick availability probe: manifest readable and non-empty, AND the
+/// binary can actually execute artifacts (with the stub backend this is
+/// always false, so bench/test callers skip the PJRT paths cleanly).
 pub fn artifacts_available(dir: &Path) -> bool {
-    Manifest::load(dir).map(|m| !m.artifacts.is_empty()).unwrap_or(false)
+    super::pjrt_enabled()
+        && Manifest::load(dir).map(|m| !m.artifacts.is_empty()).unwrap_or(false)
 }
 
 /// Build a Literal from an f64 slice with a given 2-D shape.

@@ -18,12 +18,31 @@ pub mod manifest;
 pub mod ops;
 pub mod solver;
 
+/// Pure-Rust stand-in for the `xla` crate when the `pjrt` feature is off
+/// (the default offline build). See [`stub`] for what stays functional.
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the vendored `xla` crate: add it to \
+     rust/Cargo.toml [dependencies] and delete this guard (rust/README.md \
+     has the recipe). The default build uses the pure-Rust stub backend."
+);
+
 pub use engine::{artifacts_available, with_engine, Engine};
 pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
 pub use ops::{assemble, cls_full, kf_chunk, kf_predict, prepare_operands, solve_rhs};
 pub use solver::PjrtLocalSolver;
 
 use std::path::PathBuf;
+
+/// Whether this binary was built with the real PJRT engine. With the stub
+/// backend every engine construction fails at run time with a clear
+/// "pjrt disabled" error, and artifact probing reports unavailable.
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 /// Default artifacts directory: `$DYDD_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {

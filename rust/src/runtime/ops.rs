@@ -8,6 +8,8 @@
 
 use super::engine::{literal_mat, literal_vec, to_vec_f64, Engine, EngineError};
 use super::manifest::ArtifactMeta;
+#[cfg(not(feature = "pjrt"))]
+use super::stub as xla;
 use crate::linalg::Mat;
 
 /// Pad a dense (m x n) block into a (bm x bn) row-major buffer.

@@ -1,0 +1,149 @@
+//! Pure-Rust stand-in for the `xla` crate surface the engine uses, compiled
+//! when the `pjrt` feature is off (the default: this build is fully offline
+//! and the PJRT/XLA toolchain is not vendored).
+//!
+//! Host-side literal plumbing ([`Literal`]) is fully functional so padding
+//! and operand-preparation code paths stay testable; anything that would
+//! need the real PJRT runtime ([`PjRtClient::cpu`]) fails with a clear
+//! "pjrt disabled" error, which the coordinator surfaces as a worker
+//! failure and the CLI as a backend-unavailable message.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` for the `From` impl in the engine.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    fn disabled() -> Error {
+        Error(
+            "PJRT backend disabled: dydd-da was built without the `pjrt` feature \
+             (see rust/README.md)"
+                .to_string(),
+        )
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Conversion target for [`Literal::to_vec`] (the stub only carries f64,
+/// matching the f64-only artifact manifest).
+pub trait NativeType: Copy {
+    fn from_f64(v: f64) -> Self;
+}
+
+impl NativeType for f64 {
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+}
+
+/// Host literal: flat f64 buffer + dims. Fully functional (no runtime
+/// needed) so `prepare_operands` and the padding helpers keep working.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f64]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let count: i64 = dims.iter().product();
+        if count != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&v| T::from_f64(v)).collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error::disabled())
+    }
+}
+
+/// Parsed HLO module placeholder (never constructed: reading an artifact
+/// requires the runtime that is compiled out).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(Error::disabled())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub client: construction always fails, so every downstream path
+/// (executable cache, execute) is unreachable but still type-checks.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::disabled())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::disabled())
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::disabled())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::disabled())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_disabled() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -4,7 +4,10 @@
 
 use dydd_da::cls::{ClsProblem, StateOp};
 use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
-use dydd_da::dydd::{balance, balance_ratio, rebalance_partition, DyddParams};
+use dydd_da::domain2d::{generators as gen2d, BoxPartition, Mesh2d, ObsLayout2d};
+use dydd_da::dydd::{
+    balance, balance_ratio, rebalance_partition, rebalance_partition2d, DyddOutcome, DyddParams,
+};
 use dydd_da::graph::{laplacian_solve, laplacian_solve_cg, Graph};
 use dydd_da::linalg::mat::dist2;
 use dydd_da::linalg::{Cholesky, Mat};
@@ -171,6 +174,124 @@ fn prop_geometric_rebalance_census_is_realizable_optimum() {
             "seed {seed}: {before} -> {}",
             out.balance()
         );
+    }
+}
+
+/// Replay the recorded migrations (δ_ij, in application order) from the
+/// post-repair loads; the result must reproduce l_fin *exactly* — the
+/// geometric migration is bookkeeping-faithful to the schedule.
+fn replay_schedule(out: &DyddOutcome) -> Vec<i64> {
+    let start = out.l_r.as_ref().unwrap_or(&out.l_in);
+    let mut loads: Vec<i64> = start.iter().map(|&l| l as i64).collect();
+    for &(i, j, delta) in &out.migrations {
+        loads[i] -= delta;
+        loads[j] += delta;
+    }
+    loads
+}
+
+/// Largest multiplicity of a value in a slice (grid-line tie groups bound
+/// how far a realized census can deviate from the scheduled one).
+fn max_multiplicity(vals: &[usize]) -> usize {
+    let mut sorted = vals.to_vec();
+    sorted.sort_unstable();
+    let (mut best, mut run) = (1usize, 1usize);
+    for w in sorted.windows(2) {
+        run = if w[0] == w[1] { run + 1 } else { 1 };
+        best = best.max(run);
+    }
+    best
+}
+
+#[test]
+fn prop_1d_migration_conserves_and_realizes_schedule() {
+    // Satellite coverage: after rebalance_partition, (a) the total
+    // observation count is preserved, (b) replaying the scheduled δ_ij
+    // reproduces l_fin exactly, and (c) the realized census matches l_fin
+    // within grid-point tie groups — across ALL layouts and seeds.
+    let layouts = [
+        ObsLayout::Uniform,
+        ObsLayout::Ramp,
+        ObsLayout::Cluster,
+        ObsLayout::TwoClusters,
+        ObsLayout::LeftPacked,
+    ];
+    for layout in layouts {
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(40_000 + seed);
+            let n = 1024;
+            let p = 2 + (seed as usize % 5);
+            let m = 200 + rng.below(400);
+            let mesh = Mesh1d::new(n);
+            let part = Partition::uniform(n, p);
+            let obs = generators::generate(layout, m, &mut rng);
+            let out = rebalance_partition(&mesh, &part, &obs, &DyddParams::default()).unwrap();
+            let tag = format!("{layout:?} seed {seed}");
+            // (a) conservation.
+            assert_eq!(out.census_after.iter().sum::<usize>(), m, "{tag}");
+            assert_eq!(out.dydd.l_fin.iter().sum::<usize>(), m, "{tag}");
+            // (b) schedule bookkeeping.
+            let replayed = replay_schedule(&out.dydd);
+            let want: Vec<i64> = out.dydd.l_fin.iter().map(|&l| l as i64).collect();
+            assert_eq!(replayed, want, "{tag}: migrations do not realize l_fin");
+            // (c) realized census within rounding (tie groups).
+            let bound = 2 * max_multiplicity(&obs.grid_indices(&mesh));
+            for (i, (got, target)) in
+                out.census_after.iter().zip(&out.dydd.l_fin).enumerate()
+            {
+                assert!(
+                    got.abs_diff(*target) <= bound,
+                    "{tag} subdomain {i}: census {got} vs schedule {target} (bound {bound})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_2d_migration_conserves_and_realizes_schedule() {
+    // The same three guarantees for the 2-D box-grid migration, across all
+    // 2-D layouts, seeds and grid shapes (including single-row/-column).
+    for layout in ObsLayout2d::ALL {
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(50_000 + seed);
+            let n = 256;
+            let (px, py) = match seed % 4 {
+                0 => (2usize, 2usize),
+                1 => (4, 3),
+                2 => (1, 5),
+                _ => (5, 1),
+            };
+            let m = 300 + rng.below(500);
+            let mesh = Mesh2d::square(n);
+            let part = BoxPartition::uniform(n, n, px, py);
+            let obs = gen2d::generate(layout, m, &mut rng);
+            let out =
+                rebalance_partition2d(&mesh, &part, &obs, &DyddParams::default()).unwrap();
+            let tag = format!("{layout:?} seed {seed} {px}x{py}");
+            assert_eq!(out.census_after.iter().sum::<usize>(), m, "{tag}");
+            assert_eq!(out.dydd.l_fin.iter().sum::<usize>(), m, "{tag}");
+            let replayed = replay_schedule(&out.dydd);
+            let want: Vec<i64> = out.dydd.l_fin.iter().map(|&l| l as i64).collect();
+            assert_eq!(replayed, want, "{tag}: migrations do not realize l_fin");
+            let grid = obs.grid_indices(&mesh);
+            let gx: Vec<usize> = grid.iter().map(|&(ix, _)| ix).collect();
+            let gy: Vec<usize> = grid.iter().map(|&(_, iy)| iy).collect();
+            let bound = 2 * (max_multiplicity(&gx) + max_multiplicity(&gy) + 1);
+            for (b, (got, target)) in
+                out.census_after.iter().zip(&out.dydd.l_fin).enumerate()
+            {
+                assert!(
+                    got.abs_diff(*target) <= bound,
+                    "{tag} box {b}: census {got} vs schedule {target} (bound {bound})"
+                );
+            }
+            // Migrations only cross 4-connected box-grid edges.
+            let g = part.induced_graph();
+            for (i, j, _) in &out.dydd.migrations {
+                assert!(g.has_edge(*i, *j), "{tag}: migration across non-edge ({i},{j})");
+            }
+        }
     }
 }
 
