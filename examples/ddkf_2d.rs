@@ -1,0 +1,69 @@
+//! 2-D DD-KF walkthrough: the full pipeline (workload → geometric DyDD →
+//! parallel box-grid DD-KF → sequential-KF baseline) on [0, 1]².
+//!
+//!   cargo run --release --example ddkf_2d
+//!
+//! For each scenario the pipeline runs twice — once on the uniform box
+//! grid and once after DyDD rebalancing — and reports the paper's
+//! end-to-end metrics: error_DD-DA vs the sequential KF, the simulated
+//! p-processor critical path T^p_crit, S^p_sim, and the balance ratio ℰ
+//! before/after migration.
+
+use dydd_da::config::ExperimentConfig;
+use dydd_da::domain2d::ObsLayout2d;
+use dydd_da::harness::run_experiment2d;
+use dydd_da::util::timer::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    for (title, layout, px, py) in [
+        ("Gaussian blob, 2x2 boxes", ObsLayout2d::GaussianBlob, 2usize, 2usize),
+        ("Diagonal band, 2x2 boxes", ObsLayout2d::DiagonalBand, 2, 2),
+        ("Ring, 4x4 boxes", ObsLayout2d::Ring, 4, 4),
+    ] {
+        println!("== {title} ==");
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = layout.name().into();
+        cfg.dim = 2;
+        cfg.n = 24; // 24 x 24 grid = 576 unknowns
+        cfg.m = 400;
+        cfg.px = px;
+        cfg.py = py;
+        cfg.layout2d = layout;
+        cfg.seed = 42;
+
+        cfg.dydd = false;
+        let uniform = run_experiment2d(&cfg, true)?;
+        cfg.dydd = true;
+        let balanced = run_experiment2d(&cfg, true)?;
+
+        let e_before = balanced.balance_before().unwrap();
+        let e_after = balanced.balance().unwrap();
+        for (tag, rep) in [("uniform ", &uniform), ("balanced", &balanced)] {
+            println!(
+                "  {tag}: iters={:>3} converged={} error_DD-DA={:.2e} \
+                 T^p_crit={} S^p_sim={:.2}",
+                rep.iters,
+                rep.converged,
+                rep.error_dd_da.unwrap(),
+                fmt_secs(rep.t_critical.as_secs_f64()),
+                rep.speedup_sim().unwrap(),
+            );
+        }
+        println!("  DyDD: E = {e_before:.3} -> {e_after:.3}");
+
+        // The paper's headline claims, asserted so CI smoke-tests the
+        // whole 2-D path: fp-level error_DD-DA and non-degraded balance.
+        for rep in [&uniform, &balanced] {
+            let err = rep.error_dd_da.unwrap();
+            assert!(rep.converged, "{title}: solve did not converge");
+            assert!(err <= 1e-8, "{title}: error_DD-DA = {err:e}");
+        }
+        assert!(
+            e_after >= e_before,
+            "{title}: DyDD degraded balance ({e_before:.3} -> {e_after:.3})"
+        );
+        println!();
+    }
+    println!("ddkf_2d OK");
+    Ok(())
+}

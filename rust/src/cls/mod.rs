@@ -10,7 +10,9 @@
 //! x̂ = (AᵀRA)⁻¹ AᵀRb (eqs. 18-19).
 
 mod problem;
+mod problem2d;
 mod state_op;
 
 pub use problem::{ClsProblem, LocalBlock};
-pub use state_op::StateOp;
+pub use problem2d::ClsProblem2d;
+pub use state_op::{StateOp, StateOp2d};

@@ -103,7 +103,6 @@ impl ClsProblem {
         let (lo, hi) = part.interval_with_overlap(i, overlap);
         let (own_lo, own_hi) = part.interval(i);
         let n = self.n();
-        let nloc = hi - lo;
         let bw = self.state.bandwidth();
 
         let mut rows: Vec<usize> = Vec::new();
@@ -111,6 +110,7 @@ impl ClsProblem {
         let s_lo = lo.saturating_sub(bw);
         let s_hi = (hi + bw).min(n);
         rows.extend(s_lo..s_hi);
+        let obs_row_start = rows.len();
         // Observation rows with interpolation support in [lo, hi).
         for k in 0..self.obs.len() {
             let (j, _, wr) = self.obs.interp_row(&self.mesh, k);
@@ -120,63 +120,83 @@ impl ClsProblem {
             }
         }
 
-        let m_loc = rows.len();
-        let mut a = Mat::zeros(m_loc, nloc);
-        let mut d = vec![0.0; m_loc];
-        let mut b = vec![0.0; m_loc];
-        let mut halo: Vec<(usize, usize, f64)> = Vec::new();
-        for (r_loc, &r) in rows.iter().enumerate() {
-            let (cols, w, y) = self.sparse_row(r);
-            d[r_loc] = w;
-            b[r_loc] = y;
-            for (j, v) in cols {
-                if (lo..hi).contains(&j) {
-                    a[(r_loc, j - lo)] = v;
-                } else {
-                    halo.push((r_loc, j, v));
-                }
-            }
-        }
+        let cols: Vec<usize> = (lo..hi).collect();
+        let owned: Vec<bool> = cols.iter().map(|&c| (own_lo..own_hi).contains(&c)).collect();
+        let (a, d, b, halo) = restrict_rows(&rows, &cols, |r| self.sparse_row(r));
 
-        LocalBlock {
-            col_lo: lo,
-            col_hi: hi,
-            own_lo,
-            own_hi,
-            a,
-            d,
-            b,
-            halo,
-            global_rows: rows,
-        }
+        LocalBlock { cols, owned, a, d, b, halo, global_rows: rows, obs_row_start }
     }
 }
 
-/// The restriction of the CLS system to one subdomain's columns.
+/// Restrict sparse rows to an explicit (strictly increasing) column set:
+/// returns the dense local matrix, weights, data, and halo couplings for
+/// every coefficient at a column outside the set. Shared by the 1-D
+/// interval and 2-D box extractions.
+pub(crate) fn restrict_rows(
+    rows: &[usize],
+    cols: &[usize],
+    sparse_row: impl Fn(usize) -> (Vec<(usize, f64)>, f64, f64),
+) -> (Mat, Vec<f64>, Vec<f64>, Vec<(usize, usize, f64)>) {
+    let (m_loc, nloc) = (rows.len(), cols.len());
+    let mut a = Mat::zeros(m_loc, nloc);
+    let mut d = vec![0.0; m_loc];
+    let mut b = vec![0.0; m_loc];
+    let mut halo: Vec<(usize, usize, f64)> = Vec::new();
+    for (r_loc, &r) in rows.iter().enumerate() {
+        let (row, w, y) = sparse_row(r);
+        d[r_loc] = w;
+        b[r_loc] = y;
+        for (j, v) in row {
+            if v == 0.0 {
+                continue;
+            }
+            match cols.binary_search(&j) {
+                Ok(c) => a[(r_loc, c)] = v,
+                Err(_) => halo.push((r_loc, j, v)),
+            }
+        }
+    }
+    (a, d, b, halo)
+}
+
+/// The restriction of a CLS system to one subdomain's columns.
+///
+/// The column set is an arbitrary strictly increasing list of global
+/// indices — a contiguous interval in 1-D, the flattened halo-extended
+/// rectangle of a [`crate::domain2d::BoxPartition`] box in 2-D. `owned`
+/// marks the subdomain's own region; the rest is the overlap extension
+/// into neighbours (eqs. 21-22).
 #[derive(Debug, Clone)]
 pub struct LocalBlock {
-    /// Extended (with overlap) column interval [col_lo, col_hi).
-    pub col_lo: usize,
-    pub col_hi: usize,
-    /// Owned (no-overlap) interval [own_lo, own_hi) ⊆ [col_lo, col_hi).
-    pub own_lo: usize,
-    pub own_hi: usize,
+    /// Global column of each local column (strictly increasing).
+    pub cols: Vec<usize>,
+    /// owned[c]: local column c lies in the subdomain's own region (not
+    /// in the overlap extension into a neighbour).
+    pub owned: Vec<bool>,
     /// m_loc x n_loc restricted matrix A|_{I_i}.
     pub a: Mat,
     /// Row weights (R diagonal).
     pub d: Vec<f64>,
     /// Row data b.
     pub b: Vec<f64>,
-    /// Halo couplings: (local row, global column outside the interval,
+    /// Halo couplings: (local row, global column outside the column set,
     /// coefficient).
     pub halo: Vec<(usize, usize, f64)>,
     /// Global row index of each local row (diagnostics/tests).
     pub global_rows: Vec<usize>,
+    /// Local row index where observation rows begin; state/model rows are
+    /// always pushed first (row provenance for the KF local solver).
+    pub obs_row_start: usize,
 }
 
 impl LocalBlock {
     pub fn n_loc(&self) -> usize {
-        self.col_hi - self.col_lo
+        self.cols.len()
+    }
+
+    /// Local index of global column `gc`, if the block carries it.
+    pub fn local_col(&self, gc: usize) -> Option<usize> {
+        self.cols.binary_search(&gc).ok()
     }
 
     pub fn m_loc(&self) -> usize {
@@ -270,12 +290,11 @@ mod tests {
         let x_global = rng.gaussian_vec(30);
         for i in 0..3 {
             let blk = p.local_block(&part, i, 0);
-            let (lo, hi) = (blk.col_lo, blk.col_hi);
             let be = blk.b_eff(|c| x_global[c]);
             for (r_loc, &r) in blk.global_rows.iter().enumerate() {
                 let mut want = b[r];
                 for c in 0..30 {
-                    if !(lo..hi).contains(&c) {
+                    if blk.local_col(c).is_none() {
                         want -= a[(r, c)] * x_global[c];
                     }
                 }
@@ -289,8 +308,14 @@ mod tests {
         let p = small_problem(30, 10, 6);
         let part = Partition::uniform(30, 3);
         let blk = p.local_block(&part, 1, 2);
-        assert_eq!((blk.col_lo, blk.col_hi), (8, 22));
-        assert_eq!((blk.own_lo, blk.own_hi), (10, 20));
+        assert_eq!(blk.cols, (8..22).collect::<Vec<_>>());
+        // Owned region [10, 20); the 2-column extensions are not owned.
+        let owned: Vec<usize> =
+            (0..blk.n_loc()).filter(|&c| blk.owned[c]).map(|c| blk.cols[c]).collect();
+        assert_eq!(owned, (10..20).collect::<Vec<_>>());
+        // State rows come first; obs rows follow.
+        assert!(blk.global_rows[..blk.obs_row_start].iter().all(|&r| r < 30));
+        assert!(blk.global_rows[blk.obs_row_start..].iter().all(|&r| r >= 30));
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! 2-D CLS problem assembly and box-local-block extraction — the DD-CLS
+//! restriction of Definition 3 / eq. 23 on a tensor-product grid, with
+//! bilinear-interpolation observation rows and a 5-point Laplacian
+//! smoothness block (the overlapping restriction/extension operators of
+//! the space-time DD-KF line of work, arXiv:2312.00007 / 1807.07103).
+
+use super::problem::{restrict_rows, LocalBlock};
+use super::state_op::StateOp2d;
+use crate::domain2d::{BoxPartition, Mesh2d, ObservationSet2d};
+use crate::linalg::{Cholesky, Mat};
+
+/// A full 2-D CLS instance: state system (H0, y0, w0) on the flattened
+/// `nx × ny` grid plus point observations with bilinear operator rows.
+///
+/// Weight convention matches [`super::ClsProblem`]: `w0` and the
+/// observation weights are inverse variances.
+#[derive(Debug, Clone)]
+pub struct ClsProblem2d {
+    pub mesh: Mesh2d,
+    pub state: StateOp2d,
+    /// Background data y0 (length nx·ny, row-major).
+    pub y0: Vec<f64>,
+    /// State weights R0 diagonal (length nx·ny).
+    pub w0: Vec<f64>,
+    pub obs: ObservationSet2d,
+}
+
+impl ClsProblem2d {
+    pub fn new(
+        mesh: Mesh2d,
+        state: StateOp2d,
+        y0: Vec<f64>,
+        w0: Vec<f64>,
+        obs: ObservationSet2d,
+    ) -> Self {
+        assert_eq!(y0.len(), mesh.n());
+        assert_eq!(w0.len(), mesh.n());
+        assert!(w0.iter().all(|&w| w > 0.0), "state weights must be positive");
+        ClsProblem2d { mesh, state, y0, w0, obs }
+    }
+
+    /// Flattened unknown dimension nx·ny.
+    pub fn n(&self) -> usize {
+        self.mesh.n()
+    }
+
+    /// m0: state rows (one per grid point).
+    pub fn m0(&self) -> usize {
+        self.mesh.n()
+    }
+
+    /// m1: observation rows.
+    pub fn m1(&self) -> usize {
+        self.obs.len()
+    }
+
+    pub fn m_total(&self) -> usize {
+        self.m0() + self.m1()
+    }
+
+    /// Sparse row r of the stacked system A = [H0; H1] as (col, coef)
+    /// pairs (ascending columns, zero bilinear weights dropped), plus its
+    /// weight and datum.
+    pub fn sparse_row(&self, r: usize) -> (Vec<(usize, f64)>, f64, f64) {
+        let n = self.n();
+        if r < n {
+            let (ix, iy) = self.mesh.unindex(r);
+            (self.state.row(ix, iy, &self.mesh), self.w0[r], self.y0[r])
+        } else {
+            let k = r - n;
+            let row: Vec<(usize, f64)> = self
+                .obs
+                .interp_row(&self.mesh, k)
+                .into_iter()
+                .filter(|&(_, w)| w != 0.0)
+                .collect();
+            (row, 1.0 / self.obs.variances[k], self.obs.values[k])
+        }
+    }
+
+    /// Dense (A, d, b) — reference/oracle paths only.
+    pub fn dense(&self) -> (Mat, Vec<f64>, Vec<f64>) {
+        let (m, n) = (self.m_total(), self.n());
+        let mut a = Mat::zeros(m, n);
+        let mut d = vec![0.0; m];
+        let mut b = vec![0.0; m];
+        for r in 0..m {
+            let (cols, w, y) = self.sparse_row(r);
+            for (j, v) in cols {
+                a[(r, j)] = v;
+            }
+            d[r] = w;
+            b[r] = y;
+        }
+        (a, d, b)
+    }
+
+    /// Global normal-equations solution (eq. 19) — the reference every
+    /// decomposed 2-D path is compared against. O(n³) dense; small grids.
+    pub fn solve_reference(&self) -> Vec<f64> {
+        let (a, d, b) = self.dense();
+        let g = a.weighted_gram(&d);
+        let rhs = a.at_db(&d, &b);
+        Cholesky::new(&g).expect("2-D CLS normal matrix must be SPD").solve(&rhs)
+    }
+
+    /// Extract the local block of box `b` of `part`, extended by an
+    /// `overlap` halo on every side (eqs. 21-22 per axis).
+    ///
+    /// Included rows: state rows whose stencil support intersects the
+    /// extended rectangle (the cross-shaped expansion by the stencil
+    /// bandwidth — corner-diagonal points carry no 5-point support) and
+    /// observation rows with at least one non-zero bilinear weight inside.
+    /// Out-of-rectangle coefficients become halo couplings for
+    /// b_eff = b − A_other·x_other (eq. 24).
+    pub fn local_block(&self, part: &BoxPartition, b: usize, overlap: usize) -> LocalBlock {
+        let ext = part.rect_with_overlap(b, overlap);
+        let own = part.rect(b);
+        let (nx, ny) = (self.mesh.nx(), self.mesh.ny());
+        let n = self.n();
+
+        let mut cols = Vec::with_capacity((ext.x1 - ext.x0) * (ext.y1 - ext.y0));
+        let mut owned = Vec::with_capacity(cols.capacity());
+        for iy in ext.y0..ext.y1 {
+            for ix in ext.x0..ext.x1 {
+                cols.push(self.mesh.index(ix, iy));
+                owned.push(own.contains(ix, iy));
+            }
+        }
+
+        // State rows: cross-shaped expansion of the rectangle by the
+        // stencil bandwidth (ascending flattened ids: outer loop is iy).
+        let bw = self.state.bandwidth();
+        let mut rows: Vec<usize> = Vec::new();
+        for iy in ext.y0.saturating_sub(bw)..(ext.y1 + bw).min(ny) {
+            let (xa, xb) = if (ext.y0..ext.y1).contains(&iy) {
+                (ext.x0.saturating_sub(bw), (ext.x1 + bw).min(nx))
+            } else {
+                (ext.x0, ext.x1)
+            };
+            for ix in xa..xb {
+                rows.push(self.mesh.index(ix, iy));
+            }
+        }
+        let obs_row_start = rows.len();
+        for k in 0..self.obs.len() {
+            let support = self.obs.interp_row(&self.mesh, k);
+            if support.iter().any(|&(j, w)| {
+                let (ix, iy) = self.mesh.unindex(j);
+                w != 0.0 && ext.contains(ix, iy)
+            }) {
+                rows.push(n + k);
+            }
+        }
+
+        let (a, d, bb, halo) = restrict_rows(&rows, &cols, |r| self.sparse_row(r));
+        LocalBlock { cols, owned, a, d, b: bb, halo, global_rows: rows, obs_row_start }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain2d::generators::{self, ObsLayout2d};
+    use crate::linalg::mat::dist2;
+    use crate::util::Rng;
+
+    pub fn small_problem2d(n: usize, m: usize, seed: u64) -> ClsProblem2d {
+        let mesh = Mesh2d::square(n);
+        let mut rng = Rng::new(seed);
+        let obs = generators::generate(ObsLayout2d::Uniform2d, m, &mut rng);
+        let y0 = generators::background_field(&mesh);
+        let w0 = vec![4.0; mesh.n()];
+        ClsProblem2d::new(mesh, StateOp2d::FivePoint { main: 1.0, off: 0.12 }, y0, w0, obs)
+    }
+
+    #[test]
+    fn dense_shapes_and_reference() {
+        let p = small_problem2d(8, 20, 1);
+        let (a, d, b) = p.dense();
+        assert_eq!(a.rows(), 64 + 20);
+        assert_eq!(a.cols(), 64);
+        assert_eq!(d.len(), 84);
+        assert_eq!(b.len(), 84);
+        let x = p.solve_reference();
+        let g = a.weighted_gram(&d);
+        let rhs = a.at_db(&d, &b);
+        assert!(dist2(&g.matvec(&x), &rhs) < 1e-9);
+    }
+
+    #[test]
+    fn local_blocks_cover_all_rows_with_support() {
+        let p = small_problem2d(12, 30, 2);
+        let part = BoxPartition::uniform(12, 12, 2, 2);
+        let mut covered = vec![false; p.m_total()];
+        for b in 0..4 {
+            let blk = p.local_block(&part, b, 0);
+            assert_eq!(blk.n_loc(), 36);
+            assert_eq!(blk.owned.iter().filter(|&&o| o).count(), 36);
+            for &r in &blk.global_rows {
+                covered[r] = true;
+            }
+            // Every local row has at least one non-zero in-block coef.
+            for r_loc in 0..blk.m_loc() {
+                let nz = (0..blk.n_loc()).any(|c| blk.a[(r_loc, c)] != 0.0);
+                assert!(nz, "row {r_loc} of block {b} is all-zero");
+            }
+            // Provenance split: state rows first, obs rows after.
+            assert!(blk.global_rows[..blk.obs_row_start].iter().all(|&r| r < p.n()));
+            assert!(blk.global_rows[blk.obs_row_start..].iter().all(|&r| r >= p.n()));
+        }
+        assert!(covered.iter().all(|&c| c), "some row belongs to no block");
+    }
+
+    #[test]
+    fn halo_matches_dense_coupling() {
+        let p = small_problem2d(10, 25, 3);
+        let part = BoxPartition::uniform(10, 10, 2, 2);
+        let (a, _d, b) = p.dense();
+        let mut rng = Rng::new(5);
+        let x_global = rng.gaussian_vec(100);
+        for bx in 0..4 {
+            let blk = p.local_block(&part, bx, 1);
+            let be = blk.b_eff(|c| x_global[c]);
+            for (r_loc, &r) in blk.global_rows.iter().enumerate() {
+                let mut want = b[r];
+                for c in 0..100 {
+                    if blk.local_col(c).is_none() {
+                        want -= a[(r, c)] * x_global[c];
+                    }
+                }
+                assert!((be[r_loc] - want).abs() < 1e-12, "box {bx} row {r_loc}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_extends_rectangle() {
+        let p = small_problem2d(12, 10, 4);
+        let part = BoxPartition::uniform(12, 12, 2, 2);
+        // Interior corner box (1, 1) extended by 2 into both neighbours.
+        let blk = p.local_block(&part, part.box_id(1, 1), 2);
+        assert_eq!(blk.n_loc(), 8 * 8);
+        let n_owned = blk.owned.iter().filter(|&&o| o).count();
+        assert_eq!(n_owned, 36);
+        // Non-owned columns are exactly the halo ring inside [4, 12)².
+        for (c, &gc) in blk.cols.iter().enumerate() {
+            let (ix, iy) = p.mesh.unindex(gc);
+            assert_eq!(blk.owned[c], ix >= 6 && iy >= 6, "({ix},{iy})");
+            assert!(ix >= 4 && iy >= 4);
+        }
+    }
+
+    #[test]
+    fn blocks_reconstruct_global_gram_diagonal() {
+        // Zero overlap: summing every block's AᵀDA scattered to global
+        // indices reproduces the global normal matrix on owned pairs.
+        let p = small_problem2d(10, 22, 6);
+        let part = BoxPartition::uniform(10, 10, 2, 2);
+        let (a, d, _) = p.dense();
+        let g_global = a.weighted_gram(&d);
+        for b in 0..4 {
+            let blk = p.local_block(&part, b, 0);
+            let g_loc = blk.a.weighted_gram(&blk.d);
+            for r in 0..blk.n_loc() {
+                for c in 0..blk.n_loc() {
+                    let diff = (g_global[(blk.cols[r], blk.cols[c])] - g_loc[(r, c)]).abs();
+                    assert!(diff < 1e-10, "box {b} ({r},{c}): {diff}");
+                }
+            }
+        }
+    }
+}

@@ -68,6 +68,59 @@ impl StateOp {
     }
 }
 
+/// Structured 2-D state operators on a tensor-product [`Mesh2d`] — the
+/// dimension-2 analogue of [`StateOp`] over the flattened (row-major)
+/// unknown vector.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StateOp2d {
+    /// H0 = I: pure background term.
+    Identity,
+    /// 5-point Laplacian smoothness stencil: row (ix, iy) carries `main`
+    /// at the centre and `off` at the 4 axis neighbours (truncated at the
+    /// boundary) — the discretization of a 2-D diffusion constraint and
+    /// the tensor generalization of [`StateOp::Tridiag`].
+    FivePoint { main: f64, off: f64 },
+}
+
+use crate::domain2d::Mesh2d;
+
+impl StateOp2d {
+    /// Non-zero entries (flattened col, val) of the row at grid point
+    /// (ix, iy), ascending by column.
+    pub fn row(&self, ix: usize, iy: usize, mesh: &Mesh2d) -> Vec<(usize, f64)> {
+        debug_assert!(ix < mesh.nx() && iy < mesh.ny());
+        match *self {
+            StateOp2d::Identity => vec![(mesh.index(ix, iy), 1.0)],
+            StateOp2d::FivePoint { main, off } => {
+                let mut r = Vec::with_capacity(5);
+                if iy > 0 {
+                    r.push((mesh.index(ix, iy - 1), off));
+                }
+                if ix > 0 {
+                    r.push((mesh.index(ix - 1, iy), off));
+                }
+                r.push((mesh.index(ix, iy), main));
+                if ix + 1 < mesh.nx() {
+                    r.push((mesh.index(ix + 1, iy), off));
+                }
+                if iy + 1 < mesh.ny() {
+                    r.push((mesh.index(ix, iy + 1), off));
+                }
+                r
+            }
+        }
+    }
+
+    /// Stencil half-width along each axis (the cross-shaped support used
+    /// by local-block row selection).
+    pub fn bandwidth(&self) -> usize {
+        match self {
+            StateOp2d::Identity => 0,
+            StateOp2d::FivePoint { .. } => 1,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +149,27 @@ mod tests {
         let x = rng.gaussian_vec(16);
         let want = op.to_dense(16).matvec(&x);
         assert!(dist2(&op.matvec(&x), &want) < 1e-14);
+    }
+
+    #[test]
+    fn five_point_truncates_at_boundaries() {
+        let mesh = Mesh2d::new(4, 3);
+        let op = StateOp2d::FivePoint { main: 4.0, off: -1.0 };
+        // Interior point (1, 1) = flat 5: full 5-point cross.
+        assert_eq!(
+            op.row(1, 1, &mesh),
+            vec![(1, -1.0), (4, -1.0), (5, 4.0), (6, -1.0), (9, -1.0)]
+        );
+        // Corner (0, 0): only right + up neighbours survive.
+        assert_eq!(op.row(0, 0, &mesh), vec![(0, 4.0), (1, -1.0), (4, -1.0)]);
+        // Columns are strictly ascending for every grid point.
+        for iy in 0..3 {
+            for ix in 0..4 {
+                let r = op.row(ix, iy, &mesh);
+                assert!(r.windows(2).all(|w| w[0].0 < w[1].0), "({ix},{iy})");
+            }
+        }
+        assert_eq!(op.bandwidth(), 1);
+        assert_eq!(StateOp2d::Identity.row(2, 1, &mesh), vec![(6, 1.0)]);
     }
 }

@@ -244,11 +244,18 @@ impl ExperimentConfig {
         if self.schwarz.mu < 0.0 {
             return fail("mu must be >= 0".into());
         }
-        if self.schwarz.overlap > self.n / (2 * self.p).max(1) {
+        if self.dim == 1 && self.schwarz.overlap > self.n / (2 * self.p).max(1) {
             return fail(format!(
                 "overlap {} exceeds half a subdomain (n/p = {})",
                 self.schwarz.overlap,
                 self.n / self.p
+            ));
+        }
+        if self.dim == 2 && self.schwarz.overlap > self.n / (2 * self.px.max(self.py)).max(1) {
+            return fail(format!(
+                "overlap {} exceeds half a box (n/max(px,py) = {})",
+                self.schwarz.overlap,
+                self.n / self.px.max(self.py)
             ));
         }
         Ok(())
@@ -270,6 +277,26 @@ impl ExperimentConfig {
             vec![self.state_weight; self.n],
             obs,
         )
+    }
+
+    /// Build the 2-D CLS problem instance a `dim = 2` config describes:
+    /// an n × n grid, the 5-point analogue of the configured state
+    /// operator, and observations of the configured 2-D layout.
+    pub fn build_problem2d(&self) -> crate::cls::ClsProblem2d {
+        use crate::domain2d::{generators as gen2d, Mesh2d};
+        assert_eq!(self.dim, 2, "build_problem2d requires dim = 2");
+        let mesh = Mesh2d::square(self.n);
+        let mut rng = crate::util::Rng::new(self.seed);
+        let obs = gen2d::generate(self.layout2d, self.m, &mut rng);
+        let y0 = gen2d::background_field(&mesh);
+        let state = match self.state_op {
+            StateOpConfig::Identity => crate::cls::StateOp2d::Identity,
+            StateOpConfig::Tridiag { main, off } => {
+                crate::cls::StateOp2d::FivePoint { main, off }
+            }
+        };
+        let n = mesh.n();
+        crate::cls::ClsProblem2d::new(mesh, state, y0, vec![self.state_weight; n], obs)
     }
 
     /// The coordinator RunConfig slice of this experiment.
@@ -396,5 +423,31 @@ layout = "gaussian_blob"
         let prob = cfg.build_problem();
         assert_eq!(prob.n(), 128);
         assert_eq!(prob.m1(), 64);
+    }
+
+    #[test]
+    fn build_problem2d_matches_config() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.n = 24;
+        cfg.m = 80;
+        cfg.layout2d = ObsLayout2d::Ring;
+        let prob = cfg.build_problem2d();
+        assert_eq!(prob.n(), 24 * 24);
+        assert_eq!(prob.m1(), 80);
+        assert_eq!(prob.state, crate::cls::StateOp2d::FivePoint { main: 1.0, off: 0.15 });
+    }
+
+    #[test]
+    fn dim2_overlap_validated_against_box_width() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.n = 24;
+        cfg.px = 4;
+        cfg.py = 4;
+        cfg.schwarz.overlap = 2;
+        assert!(cfg.validate().is_ok());
+        cfg.schwarz.overlap = 4; // > n / (2·max(px, py)) = 3
+        assert!(cfg.validate().is_err());
     }
 }

@@ -33,7 +33,7 @@ pub struct EpochSetup {
     pub blk: LocalBlock,
     /// Diagonal regularization (μ on overlap columns, 0 elsewhere).
     pub reg: Vec<f64>,
-    /// Global columns carrying μ (for reg_rhs = μ·x_other).
+    /// Local column indices carrying μ (for reg_rhs = μ·x_other).
     pub reg_cols: Vec<usize>,
     pub mu: f64,
 }

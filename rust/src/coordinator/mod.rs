@@ -1,9 +1,11 @@
 //! The L3 coordinator: leader/worker SPMD execution of DD-KF.
 //!
 //! One OS thread per subdomain (the paper's "processing units"); the
-//! leader runs DyDD, distributes local blocks, sequences red-black Schwarz
-//! phases and checks convergence. Workers own their local factorization
-//! and solve against leader-broadcast iterate snapshots.
+//! leader runs DyDD, distributes local blocks, sequences coloured Schwarz
+//! phases (red-black on chains/uniform box grids, derived from the
+//! blocks' coupling graph in general) and checks convergence. Workers own
+//! their local factorization and solve against leader-broadcast iterate
+//! snapshots.
 //!
 //! Backend selection ([`SolverBackend`]): `Native` (rust Cholesky — true
 //! SPMD scaling, the default for the speedup tables), `Kf` (local VAR-KF),
@@ -14,7 +16,7 @@ mod leader;
 mod messages;
 mod worker;
 
-pub use leader::{run_parallel, ParallelOutcome, WorkerPool};
+pub use leader::{run_parallel, run_parallel2d, ParallelOutcome, WorkerPool};
 pub use messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
 
 use crate::ddkf::SchwarzOptions;

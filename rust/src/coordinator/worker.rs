@@ -72,8 +72,8 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                 };
                 let t0 = Instant::now();
                 let b_eff = setup.blk.b_eff(|c| x[c]);
-                for &gc in &setup.reg_cols {
-                    reg_rhs[gc - setup.blk.col_lo] = setup.mu * x[gc];
+                for &lc in &setup.reg_cols {
+                    reg_rhs[lc] = setup.mu * x[setup.blk.cols[lc]];
                 }
                 match solver.solve(&setup.blk, factor, &b_eff, reg_rhs) {
                     Ok(x_loc) => {

@@ -149,32 +149,11 @@ impl LocalSolver for KfLocalSolver {
 
 impl KfLocalSolver {
     fn is_obs_row(&self, blk: &LocalBlock, r_loc: usize) -> bool {
-        // Global rows >= n are observation rows; n is not stored on the
-        // block, but state rows always come first in global_rows and are
-        // strictly increasing grid indices, while obs rows follow.
-        // Robust rule: compare against the first obs row position.
-        let rows = &blk.global_rows;
-        debug_assert!(!rows.is_empty());
-        // State rows were pushed first and are < n <= first obs row id.
-        if r_loc + 1 < rows.len() {
-            // rows is sorted ascending within each provenance group.
-        }
-        rows[r_loc] >= self.n_guess(blk)
-    }
-
-    fn n_guess(&self, blk: &LocalBlock) -> usize {
-        // The state-row group of global_rows is a contiguous ascending run
-        // starting at its first element; the first jump beyond +1 marks the
-        // obs group (obs ids are n + k >= n > any state id).
-        let rows = &blk.global_rows;
-        let mut prev = rows[0];
-        for &r in &rows[1..] {
-            if r != prev + 1 {
-                return r; // first obs row id — everything >= it is obs
-            }
-            prev = r;
-        }
-        usize::MAX // no obs rows in this block
+        // Blocks record row provenance explicitly: state/model rows are
+        // pushed first, observation rows from `obs_row_start` on. (The old
+        // contiguous-run heuristic broke on 2-D blocks, whose state rows
+        // jump between mesh rows.)
+        r_loc >= blk.obs_row_start
     }
 }
 

@@ -8,8 +8,17 @@
 //! normal equations and converges to the global CLS solution — the paper's
 //! error_DD-DA ≈ 1e-11 (Table 11).
 
+//!
+//! The iteration is dimension-agnostic: it sees only [`crate::cls::LocalBlock`]s
+//! and a sweep order, so the same driver runs 1-D interval partitions
+//! ([`schwarz_solve`]) and 2-D box partitions ([`schwarz_solve2d`], with
+//! true checkerboard red-black colouring of the box grid).
+
 mod local;
 pub(crate) mod schwarz;
 
 pub use local::{KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver};
-pub use schwarz::{schwarz_solve, SchwarzOptions, SchwarzOutcome, SweepOrder};
+pub use schwarz::{
+    box_grid_order, coupling_phases, schwarz_solve, schwarz_solve2d, write_back,
+    ConvergenceCheck, OverlapAccumulator, SchwarzOptions, SchwarzOutcome, SweepOrder, Verdict,
+};

@@ -1,26 +1,32 @@
 //! The alternating-Schwarz iteration (eq. 24) over a partitioned CLS
 //! problem — sequential driver (the threaded version lives in
-//! `coordinator`; both share the per-subdomain state here).
+//! `coordinator`; both share the per-subdomain state, write-back and
+//! convergence logic here). Works for 1-D interval partitions and 2-D box
+//! partitions alike: the iteration only sees [`LocalBlock`]s and a sweep
+//! order.
 
 use super::local::{LocalFactor, LocalSolver};
-use crate::cls::{ClsProblem, LocalBlock};
+use crate::cls::{ClsProblem, ClsProblem2d, LocalBlock};
 use crate::domain::Partition;
+use crate::domain2d::BoxPartition;
 
 /// Sweep ordering.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SweepOrder {
     /// In-order multiplicative Schwarz (the paper's alternating form).
     Multiplicative,
-    /// Red-black (even subdomains, then odd): each colour class is
-    /// embarrassingly parallel on a chain partition while preserving
+    /// Red-black colouring: each colour class is embarrassingly parallel
+    /// (no two same-colour subdomains are adjacent) while preserving
     /// Gauss–Seidel-grade convergence — this is what the coordinator runs.
+    /// On a 1-D chain the classes are the even/odd intervals; on a 2-D box
+    /// grid they are the true checkerboard classes (bx + by) mod 2.
     RedBlack,
 }
 
 /// Iteration controls.
 #[derive(Debug, Clone)]
 pub struct SchwarzOptions {
-    /// Overlap s (columns) of eqs. 21-22.
+    /// Overlap s (columns / halo width) of eqs. 21-22.
     pub overlap: usize,
     /// Regularization weight μ on overlap columns (eqs. 25-26).
     pub mu: f64,
@@ -47,41 +53,180 @@ impl Default for SchwarzOptions {
 pub struct SchwarzOutcome {
     pub x: Vec<f64>,
     pub iters: usize,
+    /// The update norm dropped below the effective tolerance
+    /// (`tol` floored at the fp-noise level — see [`ConvergenceCheck`]).
     pub converged: bool,
+    /// Plateau diagnosis: the iteration exited on the stall backstop (the
+    /// update norm stopped decreasing for a full window) *without*
+    /// reaching the requested tolerance. Reported separately from
+    /// `converged` so a run requested at tol = 1e-12 never claims
+    /// convergence it did not achieve.
+    pub stalled: bool,
     /// Per-iteration global update norms (diagnostics / convergence plots).
     pub update_norms: Vec<f64>,
+}
+
+/// Convergence verdict for one iteration's update norm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Continue,
+    Converged,
+    /// The update norm plateaued while still above the effective
+    /// tolerance: the iteration is at its fixed point's noise floor but
+    /// the requested tolerance was not met.
+    Stalled,
+}
+
+/// Shared convergence + stall-backstop state for Schwarz drivers.
+///
+/// The effective tolerance is `tol.max(floor)` where `floor` is the f64
+/// roundoff level of recomputing local solves at this problem size; both
+/// the regular check *and the stall backstop* gate on it, so a plateau
+/// above the requested tolerance reports [`Verdict::Stalled`], never a
+/// false `Converged`.
+#[derive(Debug, Clone)]
+pub struct ConvergenceCheck {
+    tol_eff: f64,
+    norms: Vec<f64>,
+}
+
+impl ConvergenceCheck {
+    pub fn new(tol: f64, n: usize) -> Self {
+        let floor = 64.0 * f64::EPSILON * (n as f64).sqrt();
+        ConvergenceCheck { tol_eff: tol.max(floor), norms: Vec::new() }
+    }
+
+    /// Effective tolerance actually used (requested tol, fp-noise floored).
+    pub fn tol_eff(&self) -> f64 {
+        self.tol_eff
+    }
+
+    /// Record one iteration's relative update norm and judge it.
+    pub fn push(&mut self, rel: f64) -> Verdict {
+        self.norms.push(rel);
+        if rel < self.tol_eff {
+            return Verdict::Converged;
+        }
+        // Stall backstop: if the update norm has stopped decreasing for a
+        // full window, we are at the fixed point's noise plateau.
+        if self.norms.len() >= 12 {
+            let w = self.norms.len();
+            let recent = self.norms[w - 6..].iter().cloned().fold(f64::INFINITY, f64::min);
+            let prior =
+                self.norms[w - 12..w - 6].iter().cloned().fold(f64::INFINITY, f64::min);
+            if recent >= prior * 0.95 {
+                return Verdict::Stalled;
+            }
+        }
+        Verdict::Continue
+    }
+
+    pub fn into_norms(self) -> Vec<f64> {
+        self.norms
+    }
+}
+
+/// Relative update norm ‖x − x_prev‖ / (1 + ‖x‖).
+pub(crate) fn rel_update(x: &[f64], x_prev: &[f64]) -> f64 {
+    let mut diff = 0.0f64;
+    let mut norm = 0.0f64;
+    for (a, b) in x.iter().zip(x_prev) {
+        diff += (a - b) * (a - b);
+        norm += a * a;
+    }
+    diff.sqrt() / (1.0 + norm.sqrt())
+}
+
+/// Per-sweep overlap accumulator implementing eq. 28's reconstruction:
+/// owned columns are written through directly; overlap columns accumulate
+/// every contributing subdomain's estimate and are averaged together with
+/// the owner's value once the sweep is complete.
+///
+/// This makes the reconstruction *sweep-order invariant*: owned regions
+/// are disjoint (direct writes commute) and the per-column sums commute,
+/// unlike the old incumbent-blend which averaged against whatever value —
+/// including the zero initial guess — happened to be in place.
+#[derive(Debug, Clone)]
+pub struct OverlapAccumulator {
+    sum: Vec<f64>,
+    count: Vec<u32>,
+    touched: Vec<usize>,
+}
+
+impl OverlapAccumulator {
+    pub fn new(n: usize) -> Self {
+        OverlapAccumulator { sum: vec![0.0; n], count: vec![0; n], touched: Vec::new() }
+    }
+
+    /// Average accumulated overlap contributions into the global iterate:
+    /// x[c] ← (x_owner[c] + Σ contributions) / (1 + #contributors).
+    /// Resets the accumulator for the next sweep.
+    pub fn finalize(&mut self, x_global: &mut [f64]) {
+        for &gc in &self.touched {
+            x_global[gc] =
+                (x_global[gc] + self.sum[gc]) / (1.0 + self.count[gc] as f64);
+            self.sum[gc] = 0.0;
+            self.count[gc] = 0;
+        }
+        self.touched.clear();
+    }
+}
+
+/// Write a local solution into the global iterate: owned columns directly,
+/// overlap columns into the accumulator (averaged at sweep end by
+/// [`OverlapAccumulator::finalize`] — eq. 28).
+pub fn write_back(
+    blk: &LocalBlock,
+    x_loc: &[f64],
+    x_global: &mut [f64],
+    acc: &mut OverlapAccumulator,
+) {
+    for (c, &v) in x_loc.iter().enumerate() {
+        let gc = blk.cols[c];
+        if blk.owned[c] {
+            x_global[gc] = v;
+        } else {
+            if acc.count[gc] == 0 {
+                acc.touched.push(gc);
+            }
+            acc.sum[gc] += v;
+            acc.count[gc] += 1;
+        }
+    }
 }
 
 /// Per-subdomain persistent state for the iteration.
 pub(crate) struct SubdomainState {
     pub blk: LocalBlock,
-    pub reg_cols: Vec<usize>, // global columns carrying μ (overlap cols)
+    /// Local columns carrying the μ regularization (overlap columns).
+    pub reg_cols: Vec<usize>,
     pub factor: LocalFactor,
 }
 
+/// μ regularization diagonal + regularized local columns for one block.
+pub(crate) fn overlap_reg(blk: &LocalBlock, opts: &SchwarzOptions) -> (Vec<f64>, Vec<usize>) {
+    let mut reg = vec![0.0; blk.n_loc()];
+    let mut reg_cols = Vec::new();
+    if opts.overlap > 0 && opts.mu > 0.0 {
+        // μ on the extension columns (the overlap region I_{i,j}).
+        for (c, r) in reg.iter_mut().enumerate() {
+            if !blk.owned[c] {
+                *r = opts.mu;
+                reg_cols.push(c);
+            }
+        }
+    }
+    (reg, reg_cols)
+}
+
 pub(crate) fn build_states<S: LocalSolver>(
-    prob: &ClsProblem,
-    part: &Partition,
+    blocks: Vec<LocalBlock>,
     opts: &SchwarzOptions,
     solver: &mut S,
 ) -> anyhow::Result<Vec<SubdomainState>> {
-    let p = part.p();
-    let mut states = Vec::with_capacity(p);
-    for i in 0..p {
-        let blk = prob.local_block(part, i, opts.overlap);
-        let nloc = blk.n_loc();
-        let mut reg = vec![0.0; nloc];
-        let mut reg_cols = Vec::new();
-        if opts.overlap > 0 && opts.mu > 0.0 {
-            // μ on the extension columns (the overlap region I_{i,j}).
-            for (c, r) in reg.iter_mut().enumerate() {
-                let gc = blk.col_lo + c;
-                if gc < blk.own_lo || gc >= blk.own_hi {
-                    *r = opts.mu;
-                    reg_cols.push(gc);
-                }
-            }
-        }
+    let mut states = Vec::with_capacity(blocks.len());
+    for blk in blocks {
+        let (reg, reg_cols) = overlap_reg(&blk, opts);
         let factor = solver.assemble(&blk, &reg)?;
         states.push(SubdomainState { blk, reg_cols, factor });
     }
@@ -89,7 +234,7 @@ pub(crate) fn build_states<S: LocalSolver>(
 }
 
 /// Solve one subdomain against the current global iterate and return its
-/// local solution (length n_loc of the extended interval).
+/// local solution (length n_loc of the extended column set).
 pub(crate) fn local_sweep<S: LocalSolver>(
     state: &SubdomainState,
     x_global: &[f64],
@@ -102,98 +247,188 @@ pub(crate) fn local_sweep<S: LocalSolver>(
     // eqs. 25-26 — pulls the local overlap values towards the neighbour's
     // current estimate), zero elsewhere.
     let mut reg_rhs = vec![0.0; blk.n_loc()];
-    for &gc in &state.reg_cols {
-        reg_rhs[gc - blk.col_lo] = mu * x_global[gc];
+    for &lc in &state.reg_cols {
+        reg_rhs[lc] = mu * x_global[blk.cols[lc]];
     }
     solver.solve(blk, &state.factor, &b_eff, &reg_rhs)
 }
 
-/// Write a local solution into the global iterate. Owned region is copied;
-/// with overlap, the overlap region is blended 50/50 with the incumbent
-/// value (the symmetric special case of eq. 28's μ/2-average).
-pub(crate) fn write_back(blk: &LocalBlock, x_loc: &[f64], x_global: &mut [f64]) {
-    for (c, &v) in x_loc.iter().enumerate() {
-        let gc = blk.col_lo + c;
-        if gc >= blk.own_lo && gc < blk.own_hi {
-            x_global[gc] = v;
-        } else {
-            x_global[gc] = 0.5 * (x_global[gc] + v);
+/// Core sequential iteration over pre-built subdomain states; `order` is
+/// one full sweep (every subdomain exactly once). Shared by the 1-D and
+/// 2-D entry points.
+fn schwarz_iterate<S: LocalSolver>(
+    states: &[SubdomainState],
+    n: usize,
+    order: &[usize],
+    opts: &SchwarzOptions,
+    solver: &mut S,
+) -> anyhow::Result<SchwarzOutcome> {
+    let mut x = vec![0.0; n];
+    let mut acc = OverlapAccumulator::new(n);
+    let mut check = ConvergenceCheck::new(opts.tol, n);
+    let mut converged = false;
+    let mut stalled = false;
+    let mut iters = 0;
+
+    while iters < opts.max_iters {
+        let x_prev = x.clone();
+        for &i in order {
+            let x_loc = local_sweep(&states[i], &x, opts.mu, solver)?;
+            write_back(&states[i].blk, &x_loc, &mut x, &mut acc);
+        }
+        acc.finalize(&mut x);
+        iters += 1;
+        match check.push(rel_update(&x, &x_prev)) {
+            Verdict::Converged => {
+                converged = true;
+                break;
+            }
+            Verdict::Stalled => {
+                stalled = true;
+                break;
+            }
+            Verdict::Continue => {}
+        }
+    }
+    Ok(SchwarzOutcome { x, iters, converged, stalled, update_norms: check.into_norms() })
+}
+
+/// Partition subdomains into phases by greedy-colouring their *actual
+/// coupling graph*: block i couples to block j when one of i's halo
+/// columns (read by b_eff) or overlap-extension columns (read by the μ
+/// reg_rhs, averaged at write-back) is owned by j. Blocks in one phase
+/// share no coupling, so they can solve concurrently against the same
+/// snapshot with full Gauss–Seidel freshness.
+///
+/// On a uniform box grid with interior observations the greedy colouring
+/// (id order = row-major) reproduces the checkerboard (bx + by) mod 2;
+/// it stays *valid* where the checkerboard does not — DyDD-rebalanced
+/// partitions with per-column y-bounds (boxes abut diagonally-offset
+/// neighbours of the same checkerboard colour), observations straddling
+/// box corners, and width-1 boxes whose stencil reaches next-nearest
+/// subdomains.
+pub fn coupling_phases(
+    blocks: &[LocalBlock],
+    owner_of: impl Fn(usize) -> usize,
+) -> Vec<Vec<usize>> {
+    let p = blocks.len();
+    let mut adj = vec![std::collections::BTreeSet::<usize>::new(); p];
+    let couple = |i: usize, gc: usize, adj: &mut Vec<std::collections::BTreeSet<usize>>| {
+        let j = owner_of(gc);
+        if j != i {
+            adj[i].insert(j);
+            adj[j].insert(i);
+        }
+    };
+    for (i, blk) in blocks.iter().enumerate() {
+        for gc in blk.halo_cols() {
+            couple(i, gc, &mut adj);
+        }
+        for (c, &gc) in blk.cols.iter().enumerate() {
+            if !blk.owned[c] {
+                couple(i, gc, &mut adj);
+            }
+        }
+    }
+    let mut colour = vec![usize::MAX; p];
+    let mut n_colours = 0usize;
+    for i in 0..p {
+        let mut c = 0usize;
+        while adj[i].iter().any(|&j| colour[j] == c) {
+            c += 1;
+        }
+        colour[i] = c;
+        n_colours = n_colours.max(c + 1);
+    }
+    let mut phases = vec![Vec::new(); n_colours];
+    for (i, &c) in colour.iter().enumerate() {
+        phases[c].push(i);
+    }
+    phases
+}
+
+/// 1-D chain sweep order for `p` subdomains.
+fn chain_order(p: usize, order: SweepOrder) -> Vec<usize> {
+    match order {
+        SweepOrder::Multiplicative => (0..p).collect(),
+        SweepOrder::RedBlack => {
+            let mut v: Vec<usize> = (0..p).step_by(2).collect();
+            v.extend((1..p).step_by(2));
+            v
         }
     }
 }
 
-/// Sequential DD-KF solve: iterate local solves until the global update
-/// norm drops below tol·(1 + ‖x‖).
+/// Checkerboard sweep order over a box grid: colour (bx + by) mod 2 = 0
+/// first, then 1 — a 2-colouring of the *logical* 4-connected box grid.
+/// This is a sequential sweep order only (Gauss–Seidel is correct in any
+/// order); the parallel coordinator derives its concurrent phases from
+/// the blocks' actual coupling graph via [`coupling_phases`], which also
+/// stays valid on rebalanced partitions where logical checkerboard
+/// colours can geometrically abut.
+pub fn box_grid_order(part: &BoxPartition, order: SweepOrder) -> Vec<usize> {
+    match order {
+        SweepOrder::Multiplicative => (0..part.p()).collect(),
+        SweepOrder::RedBlack => {
+            let mut v: Vec<usize> = Vec::with_capacity(part.p());
+            for colour in 0..2 {
+                for b in 0..part.p() {
+                    let (bx, by) = part.box_coords(b);
+                    if (bx + by) % 2 == colour {
+                        v.push(b);
+                    }
+                }
+            }
+            v
+        }
+    }
+}
+
+/// Sequential 1-D DD-KF solve: iterate local solves until the global
+/// update norm drops below tol·(1 + ‖x‖).
 pub fn schwarz_solve<S: LocalSolver>(
     prob: &ClsProblem,
     part: &Partition,
     opts: &SchwarzOptions,
     solver: &mut S,
 ) -> anyhow::Result<SchwarzOutcome> {
-    let n = prob.n();
-    let mut states = build_states(prob, part, opts, solver)?;
-    let mut x = vec![0.0; n];
-    let mut update_norms = Vec::new();
-    let mut converged = false;
-    let mut iters = 0;
-
-    let order: Vec<usize> = match opts.order {
-        SweepOrder::Multiplicative => (0..part.p()).collect(),
-        SweepOrder::RedBlack => {
-            let mut v: Vec<usize> = (0..part.p()).step_by(2).collect();
-            v.extend((1..part.p()).step_by(2));
-            v
-        }
-    };
-
-    while iters < opts.max_iters {
-        let x_prev = x.clone();
-        for &i in &order {
-            let x_loc = local_sweep(&states[i], &x, opts.mu, solver)?;
-            write_back(&states[i].blk, &x_loc, &mut x);
-        }
-        iters += 1;
-        let mut diff = 0.0f64;
-        let mut norm = 0.0f64;
-        for (a, b) in x.iter().zip(&x_prev) {
-            diff += (a - b) * (a - b);
-            norm += a * a;
-        }
-        let rel = diff.sqrt() / (1.0 + norm.sqrt());
-        update_norms.push(rel);
-        // Effective tolerance: tol, floored at the f64 roundoff level of
-        // recomputing local solves at this problem size (below it the
-        // update norm is fp noise and the iteration has converged).
-        let floor = 64.0 * f64::EPSILON * (n as f64).sqrt();
-        if rel < opts.tol.max(floor) {
-            converged = true;
-            break;
-        }
-        // Stall backstop: if the update norm has stopped decreasing for a
-        // full window, we are at the fixed point's noise plateau.
-        if update_norms.len() >= 12 {
-            let w = update_norms.len();
-            let recent = update_norms[w - 6..].iter().cloned().fold(f64::INFINITY, f64::min);
-            let prior =
-                update_norms[w - 12..w - 6].iter().cloned().fold(f64::INFINITY, f64::min);
-            if recent >= prior * 0.95 {
-                converged = rel < 1e-8;
-                break;
-            }
-        }
-    }
+    let blocks: Vec<LocalBlock> =
+        (0..part.p()).map(|i| prob.local_block(part, i, opts.overlap)).collect();
+    let order = chain_order(part.p(), opts.order);
+    let mut states = build_states(blocks, opts, solver)?;
+    let out = schwarz_iterate(&states, prob.n(), &order, opts, solver);
     // Drop factors explicitly (runtime solvers may hold device buffers).
     states.clear();
-    Ok(SchwarzOutcome { x, iters, converged, update_norms })
+    out
+}
+
+/// Sequential 2-D DD-KF solve over a box partition — identical iteration,
+/// with local blocks on halo-extended rectangles and the checkerboard
+/// sweep order.
+pub fn schwarz_solve2d<S: LocalSolver>(
+    prob: &ClsProblem2d,
+    part: &BoxPartition,
+    opts: &SchwarzOptions,
+    solver: &mut S,
+) -> anyhow::Result<SchwarzOutcome> {
+    let blocks: Vec<LocalBlock> =
+        (0..part.p()).map(|b| prob.local_block(part, b, opts.overlap)).collect();
+    let order = box_grid_order(part, opts.order);
+    let mut states = build_states(blocks, opts, solver)?;
+    let out = schwarz_iterate(&states, prob.n(), &order, opts, solver);
+    states.clear();
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cls::StateOp;
+    use crate::cls::{StateOp, StateOp2d};
     use crate::ddkf::local::{KfLocalSolver, NativeLocalSolver};
     use crate::domain::generators::{self, ObsLayout};
     use crate::domain::Mesh1d;
+    use crate::domain2d::generators as gen2d;
+    use crate::domain2d::{Mesh2d, ObsLayout2d};
     use crate::linalg::mat::dist2;
     use crate::util::Rng;
 
@@ -203,6 +438,15 @@ mod tests {
         let obs = generators::generate(ObsLayout::Uniform, m, &mut rng);
         let y0 = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
         ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![4.0; n], obs)
+    }
+
+    fn problem2d(n: usize, m: usize, layout: ObsLayout2d, seed: u64) -> ClsProblem2d {
+        let mesh = Mesh2d::square(n);
+        let mut rng = Rng::new(seed);
+        let obs = gen2d::generate(layout, m, &mut rng);
+        let y0 = gen2d::background_field(&mesh);
+        let w0 = vec![4.0; mesh.n()];
+        ClsProblem2d::new(mesh, StateOp2d::FivePoint { main: 1.0, off: 0.12 }, y0, w0, obs)
     }
 
     #[test]
@@ -238,6 +482,30 @@ mod tests {
     }
 
     #[test]
+    fn overlap_orders_reach_same_fixed_point() {
+        // The write_back acceptance criterion: with a genuinely
+        // overlapping partition, Multiplicative and RedBlack must converge
+        // to the same solution — the old incumbent-blend write-back made
+        // the fixed point depend on sweep order.
+        let prob = problem(64, 50, 7);
+        let part = Partition::from_bounds(64, vec![0, 14, 33, 47, 64]);
+        let base = SchwarzOptions {
+            overlap: 3,
+            mu: 1e-5,
+            tol: 1e-13,
+            max_iters: 500,
+            order: SweepOrder::Multiplicative,
+        };
+        let a = schwarz_solve(&prob, &part, &base, &mut NativeLocalSolver).unwrap();
+        let rb = SchwarzOptions { order: SweepOrder::RedBlack, ..base };
+        let b = schwarz_solve(&prob, &part, &rb, &mut NativeLocalSolver).unwrap();
+        assert!(a.converged || a.stalled, "multiplicative diverged");
+        assert!(b.converged || b.stalled, "red-black diverged");
+        let gap = dist2(&a.x, &b.x);
+        assert!(gap < 1e-10, "order-dependent fixed point: gap = {gap:e}");
+    }
+
+    #[test]
     fn kf_local_solver_reaches_same_solution() {
         let prob = problem(40, 32, 3);
         let part = Partition::uniform(40, 4);
@@ -261,7 +529,7 @@ mod tests {
             order: SweepOrder::Multiplicative,
         };
         let out = schwarz_solve(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
-        assert!(out.converged);
+        assert!(out.converged || out.stalled);
         // μ > 0 perturbs the fixed point slightly (regularization bias).
         let err = dist2(&out.x, &want) / dist2(&want, &vec![0.0; 64]);
         assert!(err < 1e-4, "relative bias {err:e}");
@@ -291,5 +559,188 @@ mod tests {
                 .unwrap();
         assert!(out.converged);
         assert!(dist2(&out.x, &want) < 1e-10);
+    }
+
+    #[test]
+    fn schwarz_2d_matches_reference_no_overlap() {
+        // The 2-D tentpole in miniature: box Gauss–Seidel on the flattened
+        // grid equals the global CLS solution.
+        let prob = problem2d(14, 60, ObsLayout2d::Uniform2d, 8);
+        let want = prob.solve_reference();
+        for (px, py) in [(2usize, 2usize), (3, 2), (1, 3)] {
+            let part = crate::domain2d::BoxPartition::uniform(14, 14, px, py);
+            let out = schwarz_solve2d(
+                &prob,
+                &part,
+                &SchwarzOptions::default(),
+                &mut NativeLocalSolver,
+            )
+            .unwrap();
+            assert!(out.converged, "{px}x{py}: iters={}", out.iters);
+            let err = dist2(&out.x, &want);
+            assert!(err < 1e-9, "{px}x{py}: error_DD-DA = {err:e}");
+        }
+    }
+
+    #[test]
+    fn schwarz_2d_red_black_matches_multiplicative() {
+        let prob = problem2d(12, 50, ObsLayout2d::GaussianBlob, 9);
+        let part = crate::domain2d::BoxPartition::uniform(12, 12, 2, 2);
+        let mut opts = SchwarzOptions::default();
+        let a = schwarz_solve2d(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+        opts.order = SweepOrder::RedBlack;
+        let b = schwarz_solve2d(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+        assert!(a.converged && b.converged);
+        assert!(dist2(&a.x, &b.x) < 1e-9);
+    }
+
+    #[test]
+    fn schwarz_2d_overlap_orders_agree() {
+        let prob = problem2d(12, 60, ObsLayout2d::DiagonalBand, 10);
+        let part = crate::domain2d::BoxPartition::uniform(12, 12, 2, 2);
+        let base = SchwarzOptions {
+            overlap: 2,
+            mu: 1e-5,
+            tol: 1e-13,
+            max_iters: 500,
+            order: SweepOrder::Multiplicative,
+        };
+        let a = schwarz_solve2d(&prob, &part, &base, &mut NativeLocalSolver).unwrap();
+        let rb = SchwarzOptions { order: SweepOrder::RedBlack, ..base };
+        let b = schwarz_solve2d(&prob, &part, &rb, &mut NativeLocalSolver).unwrap();
+        assert!(a.converged || a.stalled);
+        assert!(b.converged || b.stalled);
+        let gap = dist2(&a.x, &b.x);
+        assert!(gap < 1e-10, "order-dependent 2-D fixed point: gap = {gap:e}");
+    }
+
+    #[test]
+    fn box_grid_order_is_checkerboard() {
+        let part = crate::domain2d::BoxPartition::uniform(16, 16, 3, 3);
+        let order = box_grid_order(&part, SweepOrder::RedBlack);
+        assert_eq!(order.len(), 9);
+        // First 5 boxes have even colour, last 4 odd; no same-colour pair
+        // is adjacent in the 4-connected graph.
+        let g = part.induced_graph();
+        let colour =
+            |b: usize| -> usize { (part.box_coords(b).0 + part.box_coords(b).1) % 2 };
+        assert!(order[..5].iter().all(|&b| colour(b) == 0));
+        assert!(order[5..].iter().all(|&b| colour(b) == 1));
+        for a in 0..9 {
+            for b in 0..9 {
+                if g.has_edge(a, b) {
+                    assert_ne!(colour(a), colour(b), "edge ({a},{b}) same colour");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coupling_phases_valid_on_sawtooth_partition() {
+        // Regression: on a DyDD-style partition with per-column y-bounds,
+        // the logical checkerboard is NOT a valid colouring — box (0,0)
+        // (colour 0) geometrically abuts box (1,1) (also colour 0). The
+        // coupling-graph phases must never place coupled blocks together.
+        let prob = problem2d(12, 60, ObsLayout2d::Uniform2d, 13);
+        let part = crate::domain2d::BoxPartition::from_bounds(
+            12,
+            12,
+            vec![0, 6, 12],
+            vec![vec![0, 10, 12], vec![0, 5, 12]],
+        );
+        let blocks: Vec<LocalBlock> =
+            (0..part.p()).map(|b| prob.local_block(&part, b, 0)).collect();
+        let owner = |gc: usize| {
+            let (ix, iy) = prob.mesh.unindex(gc);
+            part.owner(ix, iy)
+        };
+        let phases = coupling_phases(&blocks, owner);
+        // Every block appears exactly once.
+        let mut seen: Vec<usize> = phases.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..part.p()).collect::<Vec<_>>());
+        // No block's coupling (halo column owner) sits in its own phase.
+        for phase in &phases {
+            for &i in phase {
+                for gc in blocks[i].halo_cols() {
+                    let j = owner(gc);
+                    assert!(
+                        j == i || !phase.contains(&j),
+                        "blocks {i} and {j} coupled but share a phase {phases:?}"
+                    );
+                }
+            }
+        }
+        // The sawtooth makes (0,0)=box 0 couple to (1,1)=box 3 — the
+        // checkerboard would have put them in one phase.
+        assert!(
+            blocks[0].halo_cols().iter().any(|&gc| owner(gc) == 3),
+            "test premise: sawtooth must couple box 0 to box 3"
+        );
+    }
+
+    #[test]
+    fn backstop_respects_requested_tolerance() {
+        // Regression for the convergence-flag bug: a plateau above the
+        // requested tolerance must report Stalled, not Converged — the old
+        // backstop hardcoded `rel < 1e-8` regardless of opts.tol.
+        let mut check = ConvergenceCheck::new(1e-12, 64);
+        let mut verdicts = Vec::new();
+        // Norm sequence decreasing to a plateau at ~1e-9 (> tol_eff).
+        for i in 0..40 {
+            let rel = (1e-2 * 0.5f64.powi(i)).max(1e-9);
+            let v = check.push(rel);
+            verdicts.push(v);
+            if v != Verdict::Continue {
+                break;
+            }
+        }
+        assert_eq!(*verdicts.last().unwrap(), Verdict::Stalled);
+        assert!(!verdicts.contains(&Verdict::Converged));
+
+        // The same plateau with tol = 1e-8 converges (plateau < tol_eff).
+        let mut check = ConvergenceCheck::new(1e-8, 64);
+        let mut last = Verdict::Continue;
+        for i in 0..40 {
+            last = check.push((1e-2 * 0.5f64.powi(i)).max(1e-9));
+            if last != Verdict::Continue {
+                break;
+            }
+        }
+        assert_eq!(last, Verdict::Converged);
+    }
+
+    #[test]
+    fn tol_floors_at_fp_noise() {
+        // Requesting tol below the fp floor converges via the floor (the
+        // update norm is noise there), and the floor scales with √n.
+        let check = ConvergenceCheck::new(1e-30, 64);
+        assert!(check.tol_eff() > 1e-30);
+        assert!(check.tol_eff() < 1e-10);
+    }
+
+    #[test]
+    fn write_back_is_sweep_order_invariant() {
+        // Apply the same local solutions in two different orders: the
+        // reconstruction after finalize must be identical (eq. 28).
+        let prob = problem(40, 25, 11);
+        let part = Partition::uniform(40, 4);
+        let blocks: Vec<LocalBlock> =
+            (0..4).map(|i| prob.local_block(&part, i, 3)).collect();
+        let mut rng = Rng::new(12);
+        let sols: Vec<Vec<f64>> =
+            blocks.iter().map(|b| rng.gaussian_vec(b.n_loc())).collect();
+        let mut xa = rng.gaussian_vec(40);
+        let mut xb = xa.clone();
+        let mut acc = OverlapAccumulator::new(40);
+        for i in [0usize, 1, 2, 3] {
+            write_back(&blocks[i], &sols[i], &mut xa, &mut acc);
+        }
+        acc.finalize(&mut xa);
+        for i in [3usize, 1, 0, 2] {
+            write_back(&blocks[i], &sols[i], &mut xb, &mut acc);
+        }
+        acc.finalize(&mut xb);
+        assert!(dist2(&xa, &xb) < 1e-12, "write-back depends on sweep order");
     }
 }

@@ -106,6 +106,18 @@ pub fn field2(x: f64, y: f64) -> f64 {
     (2.0 * PI * x).sin() * (2.0 * PI * y).cos() + 0.5 * (3.0 * PI * (x + y)).cos()
 }
 
+/// [`field2`] evaluated at every grid point in flattened (row-major)
+/// order — the background y0 of a 2-D CLS problem.
+pub fn background_field(mesh: &Mesh2d) -> Vec<f64> {
+    (0..mesh.n())
+        .map(|j| {
+            let (ix, iy) = mesh.unindex(j);
+            let (x, y) = mesh.coord(ix, iy);
+            field2(x, y)
+        })
+        .collect()
+}
+
 /// Generate observations whose per-box census is exactly `counts` under
 /// the given partition (the 2-D analogue of `generators::with_counts`,
 /// reproducing prescribed l_in vectors for tests and tables).

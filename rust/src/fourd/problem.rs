@@ -127,6 +127,8 @@ impl TrajectoryProblem {
     /// [lo, hi) — identical semantics to `ClsProblem::local_block`.
     pub fn local_block(&self, lo: usize, hi: usize) -> LocalBlock {
         let nloc = hi - lo;
+        // One sparse_row pass: keep each included row's coefficients so the
+        // restriction below does not recompute (and re-sort) them.
         let mut rows = Vec::new();
         let mut a_rows: Vec<(Vec<(usize, f64)>, f64, f64)> = Vec::new();
         for r in 0..self.m_total() {
@@ -136,6 +138,10 @@ impl TrajectoryProblem {
                 a_rows.push((cols, w, y));
             }
         }
+        // Background + model rows occupy global ids < n (= n_space·N);
+        // observation rows follow — rows is ascending, so the provenance
+        // split is a partition point.
+        let obs_row_start = rows.partition_point(|&r| r < self.n());
         let m_loc = rows.len();
         let mut a = Mat::zeros(m_loc, nloc);
         let mut d = vec![0.0; m_loc];
@@ -147,22 +153,14 @@ impl TrajectoryProblem {
             for (c, v) in cols {
                 if (lo..hi).contains(&c) {
                     a[(r_loc, c - lo)] = v;
-                } else {
+                } else if v != 0.0 {
                     halo.push((r_loc, c, v));
                 }
             }
         }
-        LocalBlock {
-            col_lo: lo,
-            col_hi: hi,
-            own_lo: lo,
-            own_hi: hi,
-            a,
-            d,
-            b,
-            halo,
-            global_rows: rows,
-        }
+        let cols: Vec<usize> = (lo..hi).collect();
+        let owned = vec![true; nloc];
+        LocalBlock { cols, owned, a, d, b, halo, global_rows: rows, obs_row_start }
     }
 }
 

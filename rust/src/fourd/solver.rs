@@ -102,7 +102,9 @@ pub fn schwarz_solve_4d<S: LocalSolver>(
             let b_eff = blk.b_eff(|c| x[c]);
             let zero = vec![0.0; blk.n_loc()];
             let x_loc = solver.solve(blk, &factors[w], &b_eff, &zero)?;
-            x[blk.col_lo..blk.col_hi].copy_from_slice(&x_loc);
+            for (c, &v) in x_loc.iter().enumerate() {
+                x[blk.cols[c]] = v;
+            }
         }
         let mut diff = 0.0f64;
         let mut norm = 0.0f64;

@@ -7,6 +7,6 @@ pub mod pipeline;
 pub mod scenarios;
 pub mod tables;
 
-pub use pipeline::{run_experiment, ExperimentReport};
+pub use pipeline::{run_experiment, run_experiment2d, ExperimentReport};
 pub use scenarios::{grid2d, Scenario2d};
 pub use tables::{all_tables, render_table, TableId};

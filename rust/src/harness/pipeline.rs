@@ -3,10 +3,14 @@
 //! row needs.
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{run_parallel, RunConfig};
+use crate::coordinator::{run_parallel, run_parallel2d, RunConfig};
 use crate::domain::{generators, Mesh1d, Partition};
-use crate::dydd::{rebalance_partition, DyddParams, GeometricOutcome};
-use crate::kf::kf_solve_cls;
+use crate::domain2d::BoxPartition;
+use crate::dydd::{
+    balance_ratio, rebalance_partition, rebalance_partition2d, DyddParams, GeometricOutcome,
+    GeometricOutcome2d,
+};
+use crate::kf::{kf_solve_cls, kf_solve_cls2d};
 use crate::linalg::mat::dist2;
 use std::time::{Duration, Instant};
 
@@ -14,22 +18,30 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone)]
 pub struct ExperimentReport {
     pub name: String,
+    /// Total unknowns (grid points; nx·ny for the 2-D path).
     pub n: usize,
     pub m: usize,
     pub p: usize,
-    /// DyDD record (None when cfg.dydd = false).
+    /// 1-D DyDD record (None when cfg.dydd = false or dim = 2).
     pub dydd: Option<GeometricOutcome>,
+    /// 2-D DyDD record (None when cfg.dydd = false or dim = 1).
+    pub dydd2d: Option<GeometricOutcome2d>,
     /// Parallel DD-KF wall-clock (workers time-share this testbed's cores).
     pub t_parallel: Duration,
     /// Simulated-parallel critical path (max assemble + Σ phase maxima) —
     /// the p-processor wall-clock estimate, see coordinator::ParallelOutcome.
     pub t_critical: Duration,
+    /// Fraction of t_critical lost to phase imbalance (T^p_oh / T^p on the
+    /// simulated clock).
+    pub overhead_fraction: f64,
     /// Sequential KF baseline T¹ (None if skipped).
     pub t_sequential: Option<Duration>,
     /// error_DD-DA = ‖x̂_KF − x̂_DD-DA‖.
     pub error_dd_da: Option<f64>,
     pub iters: usize,
     pub converged: bool,
+    /// Plateau diagnosis from the Schwarz stall backstop.
+    pub stalled: bool,
     pub worker_busy: Vec<Duration>,
 }
 
@@ -56,8 +68,20 @@ impl ExperimentReport {
         self.speedup_sim().map(|s| s / self.p as f64)
     }
 
+    /// Realized balance ratio ℰ after DyDD (whichever dimension ran).
     pub fn balance(&self) -> Option<f64> {
-        self.dydd.as_ref().map(|g| g.balance())
+        self.dydd
+            .as_ref()
+            .map(|g| g.balance())
+            .or_else(|| self.dydd2d.as_ref().map(|g| g.balance()))
+    }
+
+    /// Balance ratio ℰ of the *initial* census (before DyDD migration).
+    pub fn balance_before(&self) -> Option<f64> {
+        self.dydd
+            .as_ref()
+            .map(|g| balance_ratio(&g.dydd.l_in))
+            .or_else(|| self.dydd2d.as_ref().map(|g| balance_ratio(&g.dydd.l_in)))
     }
 }
 
@@ -68,8 +92,7 @@ impl ExperimentReport {
 pub fn run_experiment(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result<ExperimentReport> {
     anyhow::ensure!(
         cfg.dim == 1,
-        "run_experiment drives the 1-D DD-KF pipeline; for dim = 2 use the \
-         box-grid DyDD path (dydd::rebalance_partition2d / CLI --dim 2)"
+        "run_experiment drives the 1-D DD-KF pipeline; for dim = 2 use run_experiment2d"
     );
     let prob = cfg.build_problem();
     let mesh = Mesh1d::new(cfg.n);
@@ -106,12 +129,72 @@ pub fn run_experiment(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Re
         m: cfg.m,
         p: cfg.p,
         dydd,
+        dydd2d: None,
         t_parallel,
         t_critical: par.t_critical,
+        overhead_fraction: par.overhead_fraction(),
         t_sequential,
         error_dd_da,
         iters: par.iters,
         converged: par.converged,
+        stalled: par.stalled,
+        worker_busy: par.worker_busy,
+    })
+}
+
+/// Run the full 2-D pipeline for one `dim = 2` configuration: generate the
+/// box-grid workload, optionally rebalance it with geometric DyDD, run the
+/// parallel DD-KF solve over the (rebalanced) box partition, and compare
+/// against the sequential 2-D KF baseline — the same report a 1-D run
+/// produces, closing the paper's end-to-end metrics in 2-D.
+pub fn run_experiment2d(
+    cfg: &ExperimentConfig,
+    with_baseline: bool,
+) -> anyhow::Result<ExperimentReport> {
+    anyhow::ensure!(cfg.dim == 2, "run_experiment2d requires dim = 2");
+    let prob = cfg.build_problem2d();
+    let part0 = BoxPartition::uniform(cfg.n, cfg.n, cfg.px, cfg.py);
+
+    // DyDD: rebalance the box decomposition to the observation layout.
+    let (part, dydd2d) = if cfg.dydd {
+        let out = rebalance_partition2d(&prob.mesh, &part0, &prob.obs, &DyddParams::default())?;
+        (out.partition.clone(), Some(out))
+    } else {
+        (part0, None)
+    };
+
+    // Parallel DD-KF over the box grid (checkerboard phases).
+    let run_cfg: RunConfig = cfg.run_config();
+    let t0 = Instant::now();
+    let par = run_parallel2d(&prob, &part, &run_cfg)?;
+    let t_parallel = t0.elapsed();
+
+    // Baseline + error.
+    let (t_sequential, error_dd_da) = if with_baseline {
+        let t1 = Instant::now();
+        let kf = kf_solve_cls2d(&prob);
+        let t_seq = t1.elapsed();
+        let err = dist2(&kf.x, &par.x);
+        (Some(t_seq), Some(err))
+    } else {
+        (None, None)
+    };
+
+    Ok(ExperimentReport {
+        name: cfg.name.clone(),
+        n: prob.n(),
+        m: cfg.m,
+        p: cfg.px * cfg.py,
+        dydd: None,
+        dydd2d,
+        t_parallel,
+        t_critical: par.t_critical,
+        overhead_fraction: par.overhead_fraction(),
+        t_sequential,
+        error_dd_da,
+        iters: par.iters,
+        converged: par.converged,
+        stalled: par.stalled,
         worker_busy: par.worker_busy,
     })
 }
@@ -164,12 +247,15 @@ pub fn run_with_counts(
         m: counts.iter().sum(),
         p: counts.len(),
         dydd,
+        dydd2d: None,
         t_parallel,
         t_critical: par.t_critical,
+        overhead_fraction: par.overhead_fraction(),
         t_sequential,
         error_dd_da,
         iters: par.iters,
         converged: par.converged,
+        stalled: par.stalled,
         worker_busy: par.worker_busy,
     })
 }
@@ -202,6 +288,45 @@ mod tests {
         let d = rep.dydd.as_ref().unwrap();
         assert!(d.dydd.l_r.is_some(), "repair must run for the empty subdomain");
         assert_eq!(d.dydd.l_fin, vec![300, 300]);
+        assert!(rep.error_dd_da.unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn small_2d_pipeline_end_to_end() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.n = 16;
+        cfg.m = 140;
+        cfg.px = 2;
+        cfg.py = 2;
+        cfg.layout2d = crate::domain2d::ObsLayout2d::GaussianBlob;
+        let rep = run_experiment2d(&cfg, true).unwrap();
+        assert!(rep.converged);
+        assert_eq!(rep.n, 256);
+        assert_eq!(rep.p, 4);
+        let err = rep.error_dd_da.unwrap();
+        assert!(err < 1e-9, "error_DD-DA = {err:e}");
+        // DyDD must improve the blob's balance.
+        let before = rep.balance_before().unwrap();
+        let after = rep.balance().unwrap();
+        assert!(after >= before, "balance degraded: {before} -> {after}");
+        assert!(rep.speedup_sim().is_some());
+        assert!((0.0..=1.0).contains(&rep.overhead_fraction));
+    }
+
+    #[test]
+    fn pipeline_2d_without_dydd_still_solves() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.n = 14;
+        cfg.m = 90;
+        cfg.px = 2;
+        cfg.py = 2;
+        cfg.dydd = false;
+        cfg.layout2d = crate::domain2d::ObsLayout2d::Quadrant;
+        let rep = run_experiment2d(&cfg, true).unwrap();
+        assert!(rep.dydd2d.is_none());
+        assert!(rep.converged);
         assert!(rep.error_dd_da.unwrap() < 1e-9);
     }
 

@@ -10,4 +10,4 @@ pub mod dense;
 pub mod sequential;
 
 pub use dense::DenseKf;
-pub use sequential::{kf_solve_cls, KfSolution};
+pub use sequential::{kf_solve_cls, kf_solve_cls2d, kf_solve_rows, KfSolution};

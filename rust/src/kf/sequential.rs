@@ -14,7 +14,7 @@
 //! exactly (the KF ↔ variational equivalence of §2) — asserted to ~1e-11
 //! by tests, matching the paper's Table 11.
 
-use crate::cls::ClsProblem;
+use crate::cls::{ClsProblem, ClsProblem2d};
 use crate::linalg::{Cholesky, Mat};
 
 /// KF estimate and covariance.
@@ -26,14 +26,21 @@ pub struct KfSolution {
     pub updates: usize,
 }
 
-/// Run sequential KF over a CLS problem (native path).
-pub fn kf_solve_cls(prob: &ClsProblem) -> KfSolution {
-    let n = prob.n();
+/// Run sequential VAR-KF over any stacked sparse-row system: rows
+/// 0..m0 are the state prior, rows m0..m0+m1 are observations assimilated
+/// one at a time. Dimension-agnostic — the 1-D and 2-D CLS problems both
+/// provide the same `(cols, weight, datum)` row contract.
+pub fn kf_solve_rows(
+    n: usize,
+    m0: usize,
+    m1: usize,
+    sparse_row: impl Fn(usize) -> (Vec<(usize, f64)>, f64, f64),
+) -> KfSolution {
     // Prior from the state system.
     let mut g0 = Mat::zeros(n, n);
     let mut rhs = vec![0.0; n];
-    for r in 0..prob.m0() {
-        let (cols, w, y) = prob.sparse_row(r);
+    for r in 0..m0 {
+        let (cols, w, y) = sparse_row(r);
         for &(ja, va) in &cols {
             rhs[ja] += w * va * y;
             for &(jb, vb) in &cols {
@@ -47,8 +54,8 @@ pub fn kf_solve_cls(prob: &ClsProblem) -> KfSolution {
 
     // Assimilate observations one at a time.
     let mut h = vec![0.0; n];
-    for k in 0..prob.m1() {
-        let (cols, w, y) = prob.sparse_row(prob.m0() + k);
+    for k in 0..m1 {
+        let (cols, w, y) = sparse_row(m0 + k);
         for &(j, v) in &cols {
             h[j] = v;
         }
@@ -57,7 +64,18 @@ pub fn kf_solve_cls(prob: &ClsProblem) -> KfSolution {
             h[j] = 0.0;
         }
     }
-    KfSolution { x, p, updates: prob.m1() }
+    KfSolution { x, p, updates: m1 }
+}
+
+/// Run sequential KF over a 1-D CLS problem (native path).
+pub fn kf_solve_cls(prob: &ClsProblem) -> KfSolution {
+    kf_solve_rows(prob.n(), prob.m0(), prob.m1(), |r| prob.sparse_row(r))
+}
+
+/// Run sequential KF over a 2-D CLS problem — the T¹ baseline of the
+/// box-grid pipeline.
+pub fn kf_solve_cls2d(prob: &ClsProblem2d) -> KfSolution {
+    kf_solve_rows(prob.n(), prob.m0(), prob.m1(), |r| prob.sparse_row(r))
 }
 
 /// One Corrector-phase update with observation row h, variance rvar, datum y.
@@ -160,6 +178,29 @@ mod tests {
         prob2.obs = crate::domain::ObservationSet::new(triples);
         let b = kf_solve_cls(&prob2);
         assert!(dist2(&a.x, &b.x) < 1e-9);
+    }
+
+    #[test]
+    fn kf2d_equals_cls_reference() {
+        // The KF ↔ variational equivalence holds unchanged on the 2-D CLS
+        // with bilinear observation rows and a 5-point state block.
+        use crate::cls::StateOp2d;
+        use crate::domain2d::{generators as gen2d, Mesh2d, ObsLayout2d};
+        let mesh = Mesh2d::square(10);
+        let mut rng = Rng::new(4);
+        let obs = gen2d::generate(ObsLayout2d::Uniform2d, 40, &mut rng);
+        let y0 = gen2d::background_field(&mesh);
+        let prob = ClsProblem2d::new(
+            mesh,
+            StateOp2d::FivePoint { main: 1.0, off: 0.12 },
+            y0,
+            vec![4.0; 100],
+            obs,
+        );
+        let kf = kf_solve_cls2d(&prob);
+        let want = prob.solve_reference();
+        let err = dist2(&kf.x, &want);
+        assert!(err < 1e-10, "error_KF-CLS (2-D) = {err:e}");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   info                     platform, artifact and build information
 //!   run [--config F] [...]   run one experiment (DyDD + DD-KF + baseline;
-//!                            --dim 2 runs box-grid DyDD on [0,1]²)
+//!                            --dim 2 runs the full pipeline on a px × py
+//!                            box grid over [0,1]²)
 //!   dydd --loads a,b,c ...   run the load balancer on an abstract scenario
 //!   dydd --dim 2 [...]       geometric DyDD on a px × py box grid
 //!   table <1..12|fig5|all>   regenerate the paper's tables/figures
@@ -15,7 +16,10 @@ use dydd_da::domain::ObsLayout;
 use dydd_da::domain2d::ObsLayout2d;
 use dydd_da::dydd::{balance, balance_ratio, rebalance_partition2d, DyddParams};
 use dydd_da::graph::Graph;
-use dydd_da::harness::{all_tables, render_table, run_experiment, scenarios, TableId};
+use dydd_da::harness::{
+    all_tables, render_table, run_experiment, run_experiment2d, scenarios, ExperimentReport,
+    TableId,
+};
 use dydd_da::runtime;
 use dydd_da::util::timer::fmt_secs;
 use std::path::Path;
@@ -154,6 +158,21 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
             );
         }
     }
+    // The default n = 2048 is a 1-D interval size; as a 2-D grid it means
+    // 2048² unknowns, far past the dense local solvers. Pick a pipeline-
+    // sized grid unless the user chose one explicitly — a config file's n
+    // is honoured only when the config itself declares dim = 2 (a 1-D
+    // config's n overridden by --dim 2 would be a multi-terabyte grid).
+    if cfg.dim == 2 && f.get("--n").is_none() && config_dim != 2 {
+        if f.get("--config").is_some() {
+            eprintln!(
+                "warning: --dim 2 overrides a dim-1 config; its n = {} is a 1-D size, \
+                 using the 2-D default n = 40 (pass --n to choose the grid)",
+                cfg.n
+            );
+        }
+        cfg.n = 40;
+    }
     if let Some(n) = f.parsed::<usize>("--n")? {
         cfg.n = n;
     }
@@ -195,35 +214,41 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     }
     cfg.validate()?;
 
+    let with_baseline = !f.has("--no-baseline");
+
     if cfg.dim == 2 {
-        // The DD-KF solver pipeline is 1-D; dim = 2 runs the DyDD
-        // subsystem on the box grid (census → schedule → edge shifting).
-        for flag in ["--p", "--backend", "--overlap", "--mu", "--no-baseline"] {
-            if f.has(flag) {
-                eprintln!("warning: {flag} has no effect with --dim 2 (DyDD-only path)");
-            }
+        // Full 2-D pipeline: DyDD on the box grid, then the parallel DD-KF
+        // solve over the rebalanced boxes, then the sequential-KF baseline.
+        if f.has("--p") {
+            eprintln!("warning: --p has no effect with --dim 2; use --px / --py");
         }
-        let sc = scenarios::from_config(&cfg);
         println!(
-            "run: dim=2 n={}x{} m={} grid={}x{} layout={} dydd={}",
+            "run: dim=2 n={}x{} m={} grid={}x{} layout={} backend={:?} dydd={}",
             cfg.n,
             cfg.n,
             cfg.m,
             cfg.px,
             cfg.py,
             cfg.layout2d.name(),
+            cfg.backend,
             cfg.dydd
         );
-        if !cfg.dydd {
-            let l_in = sc.census();
-            println!("l_in  (E = {:.3}):", balance_ratio(&l_in));
-            print!("{}", census_grid(&l_in, cfg.px, cfg.py));
-            return Ok(());
+        let rep = run_experiment2d(&cfg, with_baseline)?;
+        if let Some(d) = &rep.dydd2d {
+            println!("l_in  (E = {:.3}):", balance_ratio(&d.dydd.l_in));
+            print!("{}", census_grid(&d.dydd.l_in, cfg.px, cfg.py));
+            println!("l_fin (E = {:.3}):", d.balance());
+            print!("{}", census_grid(&d.census_after, cfg.px, cfg.py));
+            println!(
+                "dydd : T_DyDD={}  T_r={}",
+                fmt_secs(d.dydd.t_dydd.as_secs_f64()),
+                fmt_secs(d.dydd.t_repartition.as_secs_f64()),
+            );
         }
-        return run_dydd_2d(&sc);
+        print_solve_report(&rep);
+        return Ok(());
     }
 
-    let with_baseline = !f.has("--no-baseline");
     println!(
         "run: n={} m={} p={} layout={:?} backend={:?} dydd={}",
         cfg.n, cfg.m, cfg.p, cfg.layout, cfg.backend, cfg.dydd
@@ -239,21 +264,32 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
             fmt_secs(d.dydd.t_repartition.as_secs_f64()),
         );
     }
+    print_solve_report(&rep);
+    Ok(())
+}
+
+/// The DD-KF + baseline lines shared by the 1-D and 2-D run paths.
+fn print_solve_report(rep: &ExperimentReport) {
     println!(
-        "ddkf : iters={} converged={} T^p={}",
+        "ddkf : iters={} converged={}{} T^p={}  T^p_crit={}  T_oh/T^p_crit={:.3}",
         rep.iters,
         rep.converged,
-        fmt_secs(rep.t_parallel.as_secs_f64())
+        if rep.stalled { " (stalled)" } else { "" },
+        fmt_secs(rep.t_parallel.as_secs_f64()),
+        fmt_secs(rep.t_critical.as_secs_f64()),
+        rep.overhead_fraction,
     );
     if let (Some(t1), Some(err)) = (rep.t_sequential, rep.error_dd_da) {
         println!(
-            "base : T^1={}  S^p={:.2}  E^p={:.2}  error_DD-DA={err:.2e}",
+            "base : T^1={}  S^p={:.2}  E^p={:.2}  S^p_sim={:.2}  E^p_sim={:.2}  \
+             error_DD-DA={err:.2e}",
             fmt_secs(t1.as_secs_f64()),
             rep.speedup().unwrap(),
             rep.efficiency().unwrap(),
+            rep.speedup_sim().unwrap(),
+            rep.efficiency_sim().unwrap(),
         );
     }
-    Ok(())
 }
 
 use dydd_da::harness::scenarios::render_census_grid as census_grid;

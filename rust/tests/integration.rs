@@ -129,9 +129,47 @@ fn overlap_regularized_runs_remain_accurate() {
     cfg.schwarz.mu = 1e-8;
     cfg.schwarz.max_iters = 400;
     let out = run_parallel(&prob, &part, &cfg).unwrap();
-    assert!(out.converged);
+    // The honest backstop may report a plateau above the 1e-13 default
+    // tolerance instead of claiming convergence; accuracy is what matters.
+    assert!(out.converged || out.stalled);
     let rel = dist2(&out.x, &want) / dist2(&want, &vec![0.0; 144]);
     assert!(rel < 1e-5, "relative bias {rel:e}");
+}
+
+#[test]
+fn dd_kf_2d_equals_kf2d_and_dydd_preserves_solution() {
+    // The 2-D tentpole end-to-end: box-grid DD-KF equals the sequential
+    // 2-D KF, before and after geometric DyDD rebalancing.
+    use dydd_da::coordinator::run_parallel2d;
+    use dydd_da::domain2d::{BoxPartition, ObsLayout2d};
+    use dydd_da::dydd::rebalance_partition2d;
+    use dydd_da::kf::kf_solve_cls2d;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.dim = 2;
+    cfg.n = 16;
+    cfg.m = 150;
+    cfg.px = 2;
+    cfg.py = 2;
+    cfg.layout2d = ObsLayout2d::GaussianBlob;
+    let prob = cfg.build_problem2d();
+    let kf = kf_solve_cls2d(&prob);
+
+    let part0 = BoxPartition::uniform(16, 16, 2, 2);
+    let run_cfg = RunConfig::default();
+    let a = run_parallel2d(&prob, &part0, &run_cfg).unwrap();
+    assert!(a.converged);
+    let err0 = dist2(&a.x, &kf.x);
+    assert!(err0 < 1e-9, "uniform boxes: error_DD-DA = {err0:e}");
+
+    let reb =
+        rebalance_partition2d(&prob.mesh, &part0, &prob.obs, &DyddParams::default()).unwrap();
+    let b = run_parallel2d(&prob, &reb.partition, &run_cfg).unwrap();
+    assert!(b.converged);
+    let err1 = dist2(&b.x, &kf.x);
+    assert!(err1 < 1e-9, "rebalanced boxes: error_DD-DA = {err1:e}");
+    // Rebalancing changes the partition, not the solution.
+    assert!(dist2(&a.x, &b.x) < 1e-9);
 }
 
 #[test]

@@ -319,7 +319,7 @@ fn prop_local_blocks_reconstruct_global_gram() {
             let g_loc = blk.a.weighted_gram(&blk.d);
             for r in 0..blk.n_loc() {
                 for c in 0..blk.n_loc() {
-                    g_blocks[(blk.col_lo + r, blk.col_lo + c)] += g_loc[(r, c)];
+                    g_blocks[(blk.cols[r], blk.cols[c])] += g_loc[(r, c)];
                 }
             }
         }
@@ -350,6 +350,153 @@ fn prop_cholesky_solve_residual_small() {
         let x = Cholesky::new(&g).unwrap().solve(&b);
         let r = dist2(&g.matvec(&x), &b);
         assert!(r < 1e-7 * (1.0 + dist2(&b, &vec![0.0; n])), "seed {seed}: {r:e}");
+    }
+}
+
+#[test]
+fn prop_write_back_reconstruction_is_sweep_order_invariant() {
+    // Satellite coverage for the eq.-28 write-back fix: applying the same
+    // set of local solutions in ANY subdomain order (then finalizing the
+    // overlap average) must reconstruct the same global iterate — in 1-D
+    // with overlapping intervals and in 2-D with halo-extended boxes.
+    use dydd_da::ddkf::{write_back, OverlapAccumulator};
+
+    // 1-D: random partitions, overlaps and shuffled orders.
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(60_000 + seed);
+        let n = 40 + rng.below(60);
+        let p = 2 + rng.below(4);
+        let m = 20 + rng.below(30);
+        let mesh = Mesh1d::new(n);
+        let obs = generators::generate(ObsLayout::Uniform, m, &mut rng);
+        let y0 = rng.gaussian_vec(n);
+        let prob =
+            ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![3.0; n], obs);
+        let part = Partition::uniform(n, p);
+        let overlap = 1 + rng.below(3);
+        let blocks: Vec<_> = (0..p).map(|i| prob.local_block(&part, i, overlap)).collect();
+        let sols: Vec<Vec<f64>> = blocks.iter().map(|b| rng.gaussian_vec(b.n_loc())).collect();
+        let x0 = rng.gaussian_vec(n);
+
+        let mut acc = OverlapAccumulator::new(n);
+        let mut results: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..3 {
+            let mut order: Vec<usize> = (0..p).collect();
+            rng.shuffle(&mut order);
+            let mut x = x0.clone();
+            for &i in &order {
+                write_back(&blocks[i], &sols[i], &mut x, &mut acc);
+            }
+            acc.finalize(&mut x);
+            results.push(x);
+        }
+        for r in &results[1..] {
+            let gap = dist2(r, &results[0]);
+            assert!(gap < 1e-12, "seed {seed}: order-dependent ({gap:e})");
+        }
+    }
+
+    // 2-D: halo-extended boxes (up to 4 contributors per overlap column).
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(61_000 + seed);
+        let n = 12 + rng.below(6);
+        let mesh = Mesh2d::square(n);
+        let part = BoxPartition::uniform(n, n, 2, 2);
+        let obs = gen2d::generate(ObsLayout2d::Uniform2d, 30, &mut rng);
+        let y0 = gen2d::background_field(&mesh);
+        let prob = dydd_da::cls::ClsProblem2d::new(
+            mesh.clone(),
+            dydd_da::cls::StateOp2d::FivePoint { main: 1.0, off: 0.1 },
+            y0,
+            vec![2.0; mesh.n()],
+            obs,
+        );
+        let blocks: Vec<_> = (0..4).map(|b| prob.local_block(&part, b, 2)).collect();
+        let sols: Vec<Vec<f64>> = blocks.iter().map(|b| rng.gaussian_vec(b.n_loc())).collect();
+        let x0 = rng.gaussian_vec(mesh.n());
+        let mut acc = OverlapAccumulator::new(mesh.n());
+        let mut results: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..3 {
+            let mut order: Vec<usize> = (0..4).collect();
+            rng.shuffle(&mut order);
+            let mut x = x0.clone();
+            for &i in &order {
+                write_back(&blocks[i], &sols[i], &mut x, &mut acc);
+            }
+            acc.finalize(&mut x);
+            results.push(x);
+        }
+        for r in &results[1..] {
+            let gap = dist2(r, &results[0]);
+            assert!(gap < 1e-12, "2-D seed {seed}: order-dependent ({gap:e})");
+        }
+    }
+}
+
+#[test]
+fn prop_2d_schwarz_zero_overlap_matches_sequential_kf_all_layouts() {
+    // Satellite coverage: across ALL five 2-D layouts, the parallel-order
+    // (red-black) 2-D Schwarz solve with zero overlap matches the
+    // sequential KF solution to <= 1e-9 — the paper's error_DD-DA bound
+    // applied to the box-grid pipeline.
+    use dydd_da::ddkf::{schwarz_solve2d, NativeLocalSolver, SchwarzOptions, SweepOrder};
+    for layout in ObsLayout2d::ALL {
+        let mut rng = Rng::new(70_000);
+        let n = 16;
+        let mesh = Mesh2d::square(n);
+        let part = BoxPartition::uniform(n, n, 2, 2);
+        let obs = gen2d::generate(layout, 120, &mut rng);
+        let y0 = gen2d::background_field(&mesh);
+        let prob = dydd_da::cls::ClsProblem2d::new(
+            mesh.clone(),
+            dydd_da::cls::StateOp2d::FivePoint { main: 1.0, off: 0.12 },
+            y0,
+            vec![4.0; mesh.n()],
+            obs,
+        );
+        let kf = dydd_da::kf::kf_solve_cls2d(&prob);
+        let opts = SchwarzOptions { order: SweepOrder::RedBlack, ..SchwarzOptions::default() };
+        let out = schwarz_solve2d(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+        assert!(out.converged, "{layout:?}: iters={}", out.iters);
+        let err = dist2(&out.x, &kf.x);
+        assert!(err < 1e-9, "{layout:?}: error_DD-DA = {err:e}");
+    }
+}
+
+#[test]
+fn prop_stall_backstop_never_overrides_requested_tolerance() {
+    // Regression for the convergence-flag bug: feed ConvergenceCheck norm
+    // sequences that plateau at random levels; it must report Converged
+    // only when the plateau is below the effective tolerance.
+    use dydd_da::ddkf::{ConvergenceCheck, Verdict};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(80_000 + seed);
+        let plateau = 10f64.powf(-(3.0 + 9.0 * rng.uniform())); // 1e-3..1e-12
+        let tol = 10f64.powf(-(6.0 + 7.0 * rng.uniform())); // 1e-6..1e-13
+        let n = 16 + rng.below(4000);
+        let mut check = ConvergenceCheck::new(tol, n);
+        let tol_eff = check.tol_eff();
+        let mut verdict = Verdict::Continue;
+        for i in 0..200 {
+            let rel = (1e-1 * 0.4f64.powi(i)).max(plateau);
+            verdict = check.push(rel);
+            if verdict != Verdict::Continue {
+                break;
+            }
+        }
+        match verdict {
+            // rel >= plateau throughout, so Converged implies the plateau
+            // really is below the effective tolerance.
+            Verdict::Converged => assert!(
+                plateau < tol_eff,
+                "seed {seed}: converged with plateau {plateau:e} >= tol_eff {tol_eff:e}"
+            ),
+            Verdict::Stalled => assert!(
+                plateau >= tol_eff,
+                "seed {seed}: stalled although plateau {plateau:e} < tol_eff {tol_eff:e}"
+            ),
+            Verdict::Continue => panic!("seed {seed}: no verdict after 200 iters"),
+        }
     }
 }
 
