@@ -1,0 +1,325 @@
+"""Census/trigger simulator for the multi-cycle DyDD acceptance scenario.
+
+No Rust toolchain is available in the authoring container, so the
+acceptance-test constants (drift path, blob width, tau, grid sizes) in
+`rust/tests/integration.rs::cycle_policies_acceptance_*` and
+`examples/dydd_cycles.rs` were tuned with this exact-arithmetic port and
+cross-checked across seeds. Keep it in sync with the Rust side when
+changing the TranslatingBlob constants or `harness::cycles::cycle_rng`.
+
+Run:  python3 python/tools/cycle_census_sim.py
+
+Mirrors the planned Rust implementation exactly where it matters for the
+census/trigger arithmetic:
+  - SplitMix64 Rng (integer-exact port)
+  - stratified TranslatingBlob drift generator (1D and 2D)
+  - mesh nearest-point census
+  - Partition::from_targets (1D) and the 2D x-sweep/y-sweep realization
+  - threshold policy decisions
+
+l_fin targets are exactly m/p when p | m (balance() + polish guarantee
+max-min<=1 and conservation => all equal), so balance() itself is not
+ported.
+"""
+import math
+
+M64 = (1 << 64) - 1
+
+
+class Rng:
+    def __init__(self, seed):
+        self.s = seed & M64
+
+    def next_u64(self):
+        self.s = (self.s + 0x9E3779B97F4A7C15) & M64
+        z = self.s
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return z ^ (z >> 31)
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+# Acklam inverse normal CDF
+A = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+     1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+B = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+     6.680131188771972e+01, -1.328068155288572e+01]
+C = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+     -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+D = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+     3.754408661907416e+00]
+
+
+def norm_quantile(p):
+    p = min(max(p, 1e-300), 1.0 - 1e-16)
+    if p < 0.02425:
+        q = math.sqrt(-2.0 * math.log(p))
+        return (((((C[0]*q+C[1])*q+C[2])*q+C[3])*q+C[4])*q+C[5]) / \
+               ((((D[0]*q+D[1])*q+D[2])*q+D[3])*q+1.0)
+    elif p <= 1.0 - 0.02425:
+        q = p - 0.5
+        r = q*q
+        return (((((A[0]*r+A[1])*r+A[2])*r+A[3])*r+A[4])*r+A[5])*q / \
+               (((((B[0]*r+B[1])*r+B[2])*r+B[3])*r+B[4])*r+1.0)
+    else:
+        q = math.sqrt(-2.0 * math.log(1.0 - p))
+        return -(((((C[0]*q+C[1])*q+C[2])*q+C[3])*q+C[4])*q+C[5]) / \
+               ((((D[0]*q+D[1])*q+D[2])*q+D[3])*q+1.0)
+
+
+def clamp01(x):
+    return min(max(x, 0.0), 1.0 - 1e-12)
+
+
+# ---------------- 1D ----------------
+
+def drift_blob_1d(m, t, rng, mu0, path, sigma):
+    mu = mu0 + path * t
+    m_u = m // 2
+    m_b = m - m_u
+    xs = []
+    for i in range(m_u):
+        xs.append((i + rng.uniform()) / m_u)
+    for i in range(m_b):
+        u = (i + rng.uniform()) / m_b
+        xs.append(clamp01(mu + sigma * norm_quantile(u)))
+    return xs
+
+
+def nearest(x, n):
+    # round half away from zero? Rust f64::round rounds half away from zero;
+    # python round() is banker's. Use floor(x*(n-1)+0.5).
+    j = int(math.floor(min(max(x, 0.0), 1.0) * (n - 1) + 0.5))
+    return min(j, n - 1)
+
+
+def census_1d(xs, n, bounds):
+    p = len(bounds) - 1
+    c = [0] * p
+    for x in xs:
+        g = nearest(x, n)
+        # owner
+        lo = 0
+        for i in range(p):
+            if bounds[i] <= g < bounds[i + 1]:
+                c[i] += 1
+                break
+        else:
+            c[p - 1] += 1
+    return c
+
+
+def from_targets(n, grid_sorted, targets):
+    p = len(targets)
+    m = len(grid_sorted)
+    assert sum(targets) == m
+
+    def count_below(b):
+        # partition_point: first index with g >= b
+        import bisect
+        return bisect.bisect_left(grid_sorted, b)
+
+    bounds = [0]
+    cum = 0
+    for i, t in enumerate(targets[:p - 1]):
+        cum += t
+        remaining = p - 1 - i
+        lo = bounds[i] + 1
+        hi = n - remaining
+        if cum == 0:
+            b = lo
+        elif cum >= m:
+            b = hi
+        else:
+            u = grid_sorted[cum - 1]
+            v = grid_sorted[cum]
+            if u < v:
+                b = u + 1 + (v - 1 - u) // 2
+            else:
+                below = count_below(u)
+                above = count_below(u + 1)
+                if abs(cum - below) <= abs(cum - above):
+                    b = u
+                else:
+                    b = u + 1
+        b = min(max(b, lo), hi)
+        bounds.append(b)
+    bounds.append(n)
+    return bounds
+
+
+def balance_ratio(c):
+    if not c:
+        return 1.0
+    mx = max(c)
+    if mx == 0:
+        return 0.0
+    return min(c) / mx
+
+
+def cycle_rng(seed, k):
+    """Port of harness::cycles::cycle_rng — Rng::new(seed).fork(k)."""
+    base = Rng(seed)
+    return Rng(base.next_u64() ^ ((k * 0x9E3779B97F4A7C15) & M64))
+
+
+def simulate_1d(n, p, m, K, tau, seed, mu0, path, sigma, policy):
+    bounds = [i * n // p for i in range(p + 1)]
+    rows = []
+    for k in range(K):
+        t = 0.0 if K <= 1 else k / (K - 1)
+        rng = cycle_rng(seed, k)
+        xs = drift_blob_1d(m, t, rng, mu0, path, sigma)
+        cen = census_1d(xs, n, bounds)
+        bal_before = balance_ratio(cen)
+        if policy == 'never':
+            reb = False
+        elif policy == 'every':
+            reb = True
+        else:
+            reb = bal_before < tau
+        if reb:
+            grid = sorted(nearest(x, n) for x in xs)
+            targets = [m // p] * p
+            for i in range(m % p):
+                targets[i] += 1
+            bounds = from_targets(n, grid, targets)
+            cen = census_1d(xs, n, bounds)
+        bal_after = balance_ratio(cen)
+        rows.append((k, round(bal_before, 3), round(bal_after, 3), reb))
+    return rows
+
+
+# ---------------- 2D ----------------
+
+GOLDEN = 0.6180339887498949
+
+
+def drift_blob_2d(m, t, rng, c0, path, sigma):
+    cx = c0[0] + path[0] * t
+    cy = c0[1] + path[1] * t
+    m_u = m // 2
+    m_b = m - m_u
+    pts = []
+    for i in range(m_u):
+        x = (i + rng.uniform()) / m_u
+        y = (i * GOLDEN + rng.uniform() / m_u) % 1.0
+        pts.append((x, y))
+    for i in range(m_b):
+        u = (i + rng.uniform()) / m_b
+        r = sigma * math.sqrt(-2.0 * math.log(1.0 - u))
+        th = 2.0 * math.pi * ((i * GOLDEN + (rng.uniform() - 0.5) / m_b) % 1.0)
+        pts.append((clamp01(cx + r * math.cos(th)), clamp01(cy + r * math.sin(th))))
+    return pts
+
+
+def census_2d(pts, n, xbounds, ybounds):
+    px = len(xbounds) - 1
+    py = len(ybounds[0]) - 1
+    c = [0] * (px * py)
+    for (x, y) in pts:
+        ix = nearest(x, n)
+        iy = nearest(y, n)
+        bx = 0
+        for i in range(px):
+            if xbounds[i] <= ix < xbounds[i + 1]:
+                bx = i
+                break
+        else:
+            bx = px - 1
+        yb = ybounds[bx]
+        by = 0
+        for j in range(py):
+            if yb[j] <= iy < yb[j + 1]:
+                by = j
+                break
+        else:
+            by = py - 1
+        c[by * px + bx] += 1
+    return c
+
+
+def apportion(template, m):
+    p = len(template)
+    total = sum(template)
+    if total == 0:
+        out = [m // p] * p
+        for i in range(m % p):
+            out[i] += 1
+        return out
+    out = [t * m // total for t in template]
+    assigned = sum(out)
+    rem = sorted(((t * m) % total, i) for i, t in enumerate(template))
+    rem = sorted(rem, key=lambda x: (-x[0], x[1]))
+    for _, i in rem[:m - assigned]:
+        out[i] += 1
+    return out
+
+
+def rebalance_2d(pts, n, px, py, targets):
+    # grid indices sorted by (x, y) float coords like ObservationSet2d
+    pts_sorted = sorted(pts, key=lambda q: (q[0], q[1]))
+    grid = [(nearest(x, n), nearest(y, n)) for (x, y) in pts_sorted]
+    gx = [g[0] for g in grid]
+    # NOTE: gx may not be perfectly non-decreasing when two x coords on
+    # opposite sides of a midpoint round differently -- actually sorting by
+    # float x and rounding preserves non-decreasing gx. fine.
+    col_targets = [sum(targets[by * px + bx] for by in range(py)) for bx in range(px)]
+    gx_sorted = sorted(gx)
+    xbounds = from_targets(n, gx_sorted, col_targets)
+    import bisect
+    ybounds = []
+    for bx in range(px):
+        lo, hi = xbounds[bx], xbounds[bx + 1]
+        a = bisect.bisect_left(gx, lo)
+        b = bisect.bisect_left(gx, hi)
+        ys = sorted(g[1] for g in grid[a:b])
+        template = [targets[by * px + bx] for by in range(py)]
+        row_targets = apportion(template, len(ys))
+        col_bounds = from_targets(n, ys, row_targets)
+        ybounds.append(col_bounds)
+    return xbounds, ybounds
+
+
+def simulate_2d(n, px, py, m, K, tau, seed, c0, path, sigma, policy):
+    xbounds = [i * n // px for i in range(px + 1)]
+    ycol = [j * n // py for j in range(py + 1)]
+    ybounds = [list(ycol) for _ in range(px)]
+    p = px * py
+    rows = []
+    for k in range(K):
+        t = 0.0 if K <= 1 else k / (K - 1)
+        rng = cycle_rng(seed, k)
+        pts = drift_blob_2d(m, t, rng, c0, path, sigma)
+        cen = census_2d(pts, n, xbounds, ybounds)
+        bal_before = balance_ratio(cen)
+        if policy == 'never':
+            reb = False
+        elif policy == 'every':
+            reb = True
+        else:
+            reb = bal_before < tau
+        if reb:
+            targets = [m // p] * p
+            for i in range(m % p):
+                targets[i] += 1
+            xbounds, ybounds = rebalance_2d(pts, n, px, py, targets)
+            cen = census_2d(pts, n, xbounds, ybounds)
+        bal_after = balance_ratio(cen)
+        rows.append((k, round(bal_before, 3), round(bal_after, 3), reb))
+    return rows
+
+
+if __name__ == '__main__':
+    # The shipped acceptance-scenario constants (see DriftLayout::TranslatingBlob).
+    n, p, m, K = 512, 4, 800, 8
+    tau = 0.9
+    mu0, path, sigma = 0.28, 0.06, 0.16
+    for seed in [42, 7, 123]:
+        print(f"--- 1D seed={seed} n={n} p={p} m={m} tau={tau} mu0={mu0} path={path} sigma={sigma}")
+        for pol in ['threshold', 'every', 'never']:
+            rows = simulate_1d(n, p, m, K, tau, seed, mu0, path, sigma, pol)
+            rebs = sum(1 for r in rows if r[3])
+            print(f"  {pol:10s} rebs={rebs} end={rows[-1][2]:.3f} rows={rows}")

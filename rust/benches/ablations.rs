@@ -7,16 +7,21 @@
 //!  A3. Sweep order: multiplicative vs red-black (iterations to converge).
 //!  A4. Overlap/μ: iterations and solution bias vs (s, μ).
 //!  A5. Backend: native vs local-KF vs PJRT artifacts on one problem.
+//!  A6. Rebalance policy: never / every-cycle / threshold on the K-cycle
+//!      drifting-blob scenario (also emits `BENCH_cycles.json`).
 
 use dydd_da::cls::{ClsProblem, StateOp};
+use dydd_da::config::ExperimentConfig;
 use dydd_da::coordinator::{run_parallel, RunConfig, SolverBackend};
 use dydd_da::ddkf::{schwarz_solve, NativeLocalSolver, SchwarzOptions, SweepOrder};
-use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
-use dydd_da::dydd::{balance_ratio, rebalance_partition, DyddParams};
+use dydd_da::domain::{generators, DriftLayout, Mesh1d, ObsLayout, Partition};
+use dydd_da::dydd::{balance_ratio, rebalance_partition, DyddParams, RebalancePolicy};
+use dydd_da::harness::run_cycles;
 use dydd_da::linalg::mat::dist2;
 use dydd_da::runtime;
 use dydd_da::util::timer::fmt_secs;
-use dydd_da::util::{Rng, Table};
+use dydd_da::util::{Json, Rng, Table};
+use std::collections::BTreeMap;
 
 fn problem(n: usize, m: usize, layout: ObsLayout, seed: u64) -> ClsProblem {
     let mesh = Mesh1d::new(n);
@@ -141,6 +146,72 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
+
+    // ---------- A6: rebalance policy over assimilation cycles ----------
+    let mut t = Table::new(
+        "A6 — rebalance policy on the K=8 drifting blob (n=512, m=800, p=4)",
+        &["policy", "rebalances", "E_final", "E_mean", "cycles/sec", "reb overhead", "moved"],
+    );
+    let mut policy_rows: Vec<Json> = Vec::new();
+    for policy in [
+        RebalancePolicy::Never,
+        RebalancePolicy::EveryCycle,
+        RebalancePolicy::Threshold(0.9),
+    ] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("bench-cycles-{}", policy.name());
+        cfg.n = 512;
+        cfg.m = 800;
+        cfg.p = 4;
+        cfg.cycles = 8;
+        cfg.seed = 42;
+        cfg.drift = DriftLayout::TranslatingBlob;
+        cfg.cycle_policy = policy;
+        let t0 = std::time::Instant::now();
+        let rep = run_cycles(&cfg, false)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let cycles_per_sec = cfg.cycles as f64 / wall.max(1e-9);
+        let overhead = rep.rebalance_overhead_fraction();
+        t.row(&[
+            policy.name(),
+            format!("{}/{}", rep.rebalances(), cfg.cycles),
+            format!("{:.3}", rep.final_balance()),
+            format!("{:.3}", rep.mean_balance()),
+            format!("{cycles_per_sec:.2}"),
+            format!("{overhead:.3}"),
+            rep.total_migration_volume().to_string(),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("policy".into(), Json::Str(policy.name()));
+        row.insert("rebalances".into(), Json::Num(rep.rebalances() as f64));
+        row.insert("e_final".into(), Json::Num(rep.final_balance()));
+        row.insert("e_mean".into(), Json::Num(rep.mean_balance()));
+        row.insert("cycles_per_sec".into(), Json::Num(cycles_per_sec));
+        row.insert("rebalance_overhead_fraction".into(), Json::Num(overhead));
+        row.insert(
+            "migration_volume".into(),
+            Json::Num(rep.total_migration_volume() as f64),
+        );
+        policy_rows.push(Json::Obj(row));
+    }
+    println!("{}", t.render());
+
+    // Machine-readable trajectory point for the BENCH log.
+    let mut scenario = BTreeMap::new();
+    scenario.insert("dim".into(), Json::Num(1.0));
+    scenario.insert("n".into(), Json::Num(512.0));
+    scenario.insert("m".into(), Json::Num(800.0));
+    scenario.insert("p".into(), Json::Num(4.0));
+    scenario.insert("cycles".into(), Json::Num(8.0));
+    scenario.insert("seed".into(), Json::Num(42.0));
+    scenario.insert("drift".into(), Json::Str("translating_blob".into()));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("cycles".into()));
+    doc.insert("scenario".into(), Json::Obj(scenario));
+    doc.insert("policies".into(), Json::Arr(policy_rows));
+    let path = "BENCH_cycles.json";
+    std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
+    println!("wrote {path}");
 
     Ok(())
 }

@@ -4,8 +4,9 @@
 use super::toml::{parse_toml, TomlError, TomlValue};
 use crate::coordinator::SolverBackend;
 use crate::ddkf::{SchwarzOptions, SweepOrder};
-use crate::domain::ObsLayout;
-use crate::domain2d::ObsLayout2d;
+use crate::domain::{DriftLayout, ObsLayout};
+use crate::domain2d::{DriftLayout2d, ObsLayout2d};
+use crate::dydd::RebalancePolicy;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -53,6 +54,16 @@ pub struct ExperimentConfig {
     pub artifacts_dir: PathBuf,
     /// Run DyDD before solving.
     pub dydd: bool,
+    /// Assimilation cycles K for the multi-cycle driver (`cycle`
+    /// subcommand / `harness::run_cycles`); single-shot runs ignore it.
+    pub cycles: usize,
+    /// When the cycle driver re-runs DyDD (`run.dydd = false` forces
+    /// Never).
+    pub cycle_policy: RebalancePolicy,
+    /// Drifting observation generator for 1-D cycle runs.
+    pub drift: DriftLayout,
+    /// Drifting observation generator for 2-D cycle runs.
+    pub drift2d: DriftLayout2d,
 }
 
 impl Default for ExperimentConfig {
@@ -74,6 +85,10 @@ impl Default for ExperimentConfig {
             backend: SolverBackend::Native,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             dydd: true,
+            cycles: 8,
+            cycle_policy: RebalancePolicy::Threshold(RebalancePolicy::DEFAULT_TAU),
+            drift: DriftLayout::TranslatingBlob,
+            drift2d: DriftLayout2d::TranslatingBlob,
         }
     }
 }
@@ -93,14 +108,7 @@ pub enum ValidationError {
 }
 
 fn layout_from_str(s: &str) -> Option<ObsLayout> {
-    Some(match s.to_ascii_lowercase().as_str() {
-        "uniform" => ObsLayout::Uniform,
-        "ramp" => ObsLayout::Ramp,
-        "cluster" => ObsLayout::Cluster,
-        "two_clusters" | "twoclusters" => ObsLayout::TwoClusters,
-        "left_packed" | "leftpacked" => ObsLayout::LeftPacked,
-        _ => return None,
-    })
+    crate::domain::generators::layout_from_name(s)
 }
 
 impl ExperimentConfig {
@@ -118,9 +126,12 @@ impl ExperimentConfig {
     fn from_table(t: &BTreeMap<String, TomlValue>) -> Result<Self, ValidationError> {
         let mut cfg = ExperimentConfig::default();
         let bad = |k: &str| ValidationError::Invalid(format!("bad value for {k}"));
-        // The layout name is dimension-sensitive; resolve it after all keys
-        // (including `dim`) are known.
+        // Layout and drift names are dimension-sensitive; resolve them
+        // after all keys (including `dim`) are known. The threshold τ is
+        // policy-sensitive in the same way.
         let mut layout_name: Option<String> = None;
+        let mut drift_name: Option<String> = None;
+        let mut cycle_tau: Option<f64> = None;
         for (k, v) in t {
             match k.as_str() {
                 "name" => cfg.name = v.as_str().ok_or_else(|| bad(k))?.to_string(),
@@ -185,6 +196,17 @@ impl ExperimentConfig {
                     cfg.artifacts_dir = PathBuf::from(v.as_str().ok_or_else(|| bad(k))?)
                 }
                 "run.dydd" => cfg.dydd = v.as_bool().ok_or_else(|| bad(k))?,
+                "cycle.count" => cfg.cycles = v.as_usize().ok_or_else(|| bad(k))?,
+                "cycle.policy" => {
+                    cfg.cycle_policy = v
+                        .as_str()
+                        .and_then(RebalancePolicy::parse)
+                        .ok_or_else(|| bad(k))?
+                }
+                "cycle.tau" => cycle_tau = Some(v.as_float().ok_or_else(|| bad(k))?),
+                "cycle.drift" => {
+                    drift_name = Some(v.as_str().ok_or_else(|| bad(k))?.to_string());
+                }
                 other => {
                     return Err(ValidationError::Invalid(format!("unknown key {other:?}")))
                 }
@@ -206,6 +228,33 @@ impl ExperimentConfig {
                     })?
                 }
             }
+        }
+        if let Some(s) = drift_name {
+            match cfg.dim {
+                2 => {
+                    cfg.drift2d = DriftLayout2d::parse(&s).ok_or_else(|| {
+                        ValidationError::Invalid(format!("drift {s:?} is not a 2-D drift layout"))
+                    })?
+                }
+                _ => {
+                    cfg.drift = DriftLayout::parse(&s).ok_or_else(|| {
+                        ValidationError::Invalid(format!("drift {s:?} is not a 1-D drift layout"))
+                    })?
+                }
+            }
+        }
+        if let Some(tau) = cycle_tau {
+            if !(tau > 0.0 && tau <= 1.0) {
+                return Err(ValidationError::Invalid(format!(
+                    "cycle.tau = {tau} out of (0, 1]"
+                )));
+            }
+            if !matches!(cfg.cycle_policy, RebalancePolicy::Threshold(_)) {
+                return Err(ValidationError::Invalid(
+                    "cycle.tau is only meaningful with cycle.policy = \"threshold\"".into(),
+                ));
+            }
+            cfg.cycle_policy = cfg.cycle_policy.with_tau(tau);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -257,6 +306,14 @@ impl ExperimentConfig {
                 self.schwarz.overlap,
                 self.n / self.px.max(self.py)
             ));
+        }
+        if self.cycles == 0 {
+            return fail("cycle.count = 0: nothing to assimilate".into());
+        }
+        if let RebalancePolicy::Threshold(tau) = self.cycle_policy {
+            if !(tau > 0.0 && tau <= 1.0) {
+                return fail(format!("threshold tau = {tau} out of (0, 1]"));
+            }
         }
         Ok(())
     }
@@ -436,6 +493,61 @@ layout = "gaussian_blob"
         assert_eq!(prob.n(), 24 * 24);
         assert_eq!(prob.m1(), 80);
         assert_eq!(prob.state, crate::cls::StateOp2d::FivePoint { main: 1.0, off: 0.15 });
+    }
+
+    #[test]
+    fn cycle_section_roundtrips() {
+        let text = r#"
+name = "cycling"
+[problem]
+n = 512
+m = 800
+p = 4
+[cycle]
+count = 8
+policy = "threshold"
+tau = 0.85
+drift = "translating_blob"
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.cycles, 8);
+        assert_eq!(cfg.cycle_policy, RebalancePolicy::Threshold(0.85));
+        assert_eq!(cfg.drift, DriftLayout::TranslatingBlob);
+    }
+
+    #[test]
+    fn cycle_drift_is_dimension_sensitive() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[problem]\ndim = 2\n[cycle]\ndrift = \"rotating_band\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.drift2d, DriftLayout2d::RotatingBand);
+        // 1-D default untouched when a 2-D drift name is set.
+        assert_eq!(cfg.drift, DriftLayout::TranslatingBlob);
+        let cfg =
+            ExperimentConfig::from_toml_str("[cycle]\ndrift = \"stationary:cluster\"").unwrap();
+        assert_eq!(cfg.drift, DriftLayout::Stationary(ObsLayout::Cluster));
+        let err = ExperimentConfig::from_toml_str(
+            "[problem]\ndim = 2\n[cycle]\ndrift = \"stationary:cluster\"",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not a 2-D drift"), "{err}");
+    }
+
+    #[test]
+    fn cycle_section_rejects_bad_values() {
+        assert!(ExperimentConfig::from_toml_str("[cycle]\ncount = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[cycle]\ntau = 1.5").is_err());
+        // tau without a threshold policy is a configuration mistake.
+        assert!(ExperimentConfig::from_toml_str(
+            "[cycle]\npolicy = \"never\"\ntau = 0.5"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str("[cycle]\npolicy = \"sometimes\"").is_err());
+        // threshold:τ inline form works too.
+        let cfg =
+            ExperimentConfig::from_toml_str("[cycle]\npolicy = \"threshold:0.7\"").unwrap();
+        assert_eq!(cfg.cycle_policy, RebalancePolicy::Threshold(0.7));
     }
 
     #[test]

@@ -71,6 +71,35 @@ pub struct WorkerPool {
     backend: SolverBackend,
 }
 
+/// Local blocks of a 1-D problem over `part` (one per subdomain).
+pub fn blocks1d(prob: &ClsProblem, part: &Partition, overlap: usize) -> Vec<LocalBlock> {
+    (0..part.p()).map(|i| prob.local_block(part, i, overlap)).collect()
+}
+
+/// Phase colouring of 1-D blocks over `part`. Shared by
+/// [`WorkerPool::solve`] and the cycle driver (which caches the result
+/// across cycles) so the two paths can never diverge.
+pub fn phases1d(blocks: &[LocalBlock], part: &Partition) -> Vec<Vec<usize>> {
+    coupling_phases(blocks, |gc| part.owner(gc))
+}
+
+/// Local blocks of a 2-D problem over a box partition (one per box).
+pub fn blocks2d(prob: &ClsProblem2d, part: &BoxPartition, overlap: usize) -> Vec<LocalBlock> {
+    (0..part.p()).map(|b| prob.local_block(part, b, overlap)).collect()
+}
+
+/// Phase colouring of 2-D blocks over a box partition (see [`phases1d`]).
+pub fn phases2d(
+    blocks: &[LocalBlock],
+    prob: &ClsProblem2d,
+    part: &BoxPartition,
+) -> Vec<Vec<usize>> {
+    coupling_phases(blocks, |gc| {
+        let (ix, iy) = prob.mesh.unindex(gc);
+        part.owner(ix, iy)
+    })
+}
+
 impl WorkerPool {
     pub fn new(p: usize, backend: SolverBackend, artifacts_dir: PathBuf) -> Self {
         let (to_leader, from_workers) = mpsc::channel::<ToLeader>();
@@ -105,10 +134,8 @@ impl WorkerPool {
         part: &Partition,
         opts: &SchwarzOptions,
     ) -> anyhow::Result<ParallelOutcome> {
-        let p = part.p();
-        let blocks: Vec<LocalBlock> =
-            (0..p).map(|i| prob.local_block(part, i, opts.overlap)).collect();
-        let phases = coupling_phases(&blocks, |gc| part.owner(gc));
+        let blocks = blocks1d(prob, part, opts.overlap);
+        let phases = phases1d(&blocks, part);
         self.solve_blocks(prob.n(), blocks, &phases, opts)
     }
 
@@ -124,13 +151,8 @@ impl WorkerPool {
         part: &BoxPartition,
         opts: &SchwarzOptions,
     ) -> anyhow::Result<ParallelOutcome> {
-        let p = part.p();
-        let blocks: Vec<LocalBlock> =
-            (0..p).map(|b| prob.local_block(part, b, opts.overlap)).collect();
-        let phases = coupling_phases(&blocks, |gc| {
-            let (ix, iy) = prob.mesh.unindex(gc);
-            part.owner(ix, iy)
-        });
+        let blocks = blocks2d(prob, part, opts.overlap);
+        let phases = phases2d(&blocks, prob, part);
         self.solve_blocks(prob.n(), blocks, &phases, opts)
     }
 

@@ -16,7 +16,10 @@ mod leader;
 mod messages;
 mod worker;
 
-pub use leader::{run_parallel, run_parallel2d, ParallelOutcome, WorkerPool};
+pub use leader::{
+    blocks1d, blocks2d, phases1d, phases2d, run_parallel, run_parallel2d, ParallelOutcome,
+    WorkerPool,
+};
 pub use messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
 
 use crate::ddkf::SchwarzOptions;

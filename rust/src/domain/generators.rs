@@ -103,6 +103,151 @@ pub fn drifting_cluster(m: usize, t01: f64, rng: &mut Rng) -> ObservationSet {
     ObservationSet::new(triples)
 }
 
+/// Time-dependent observation layouts for multi-cycle assimilation: the
+/// phase t ∈ [0, 1] sweeps the layout across the assimilation window, so
+/// successive cycles see a *drifting* observation distribution — the
+/// scenario DyDD's adaptive re-partitioning exists for.
+///
+/// The moving layouts use jittered-stratified (inverse-CDF) sampling
+/// rather than i.i.d. draws: per-subdomain censuses then deviate from
+/// their expectation by O(1) instead of O(√m), so the balance-decay
+/// signal a threshold policy watches is not drowned in resampling noise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftLayout {
+    /// Re-sample the same static layout every cycle (control case for the
+    /// never-rebalance equivalence tests).
+    Stationary(ObsLayout),
+    /// 50/50 mixture of a uniform background and a Gaussian blob
+    /// (σ = 0.16) whose centre translates 0.28 → 0.34 across the window.
+    TranslatingBlob,
+    /// Uniform band of width 0.3 whose centre sweeps cyclically around
+    /// the periodic domain (the 1-D "rotation": positions wrap mod 1).
+    RotatingBand,
+    /// Two Gaussian clusters at 0.22 / 0.75 (σ = 0.06): the first
+    /// vanishes while the second appears (mixture weight 1−t / t).
+    AppearingCluster,
+}
+
+/// Blob parameters shared with the tuning analysis: centre path and width
+/// chosen so a K = 8 threshold-policy run re-triggers DyDD roughly every
+/// other cycle at τ = 0.9.
+const BLOB_MU0: f64 = 0.28;
+const BLOB_PATH: f64 = 0.06;
+const BLOB_SIGMA: f64 = 0.16;
+
+impl DriftLayout {
+    /// The genuinely moving layouts (for sweeps and property tests).
+    pub const ALL_MOVING: [DriftLayout; 3] = [
+        DriftLayout::TranslatingBlob,
+        DriftLayout::RotatingBand,
+        DriftLayout::AppearingCluster,
+    ];
+
+    /// Parse a CLI / config name; `stationary:<layout>` wraps a static
+    /// 1-D layout.
+    pub fn parse(s: &str) -> Option<DriftLayout> {
+        let lower = s.to_ascii_lowercase();
+        Some(match lower.as_str() {
+            "translating_blob" | "translatingblob" => DriftLayout::TranslatingBlob,
+            "rotating_band" | "rotatingband" => DriftLayout::RotatingBand,
+            "appearing_cluster" | "appearingcluster" => DriftLayout::AppearingCluster,
+            _ => {
+                let inner = lower.strip_prefix("stationary:")?;
+                DriftLayout::Stationary(layout_from_name(inner)?)
+            }
+        })
+    }
+
+    /// Canonical config-file name (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            DriftLayout::Stationary(inner) => format!("stationary:{}", layout_name(*inner)),
+            DriftLayout::TranslatingBlob => "translating_blob".into(),
+            DriftLayout::RotatingBand => "rotating_band".into(),
+            DriftLayout::AppearingCluster => "appearing_cluster".into(),
+        }
+    }
+}
+
+/// Canonical 1-D layout names shared by the config parser and the drift
+/// family's `stationary:` prefix.
+pub fn layout_from_name(s: &str) -> Option<ObsLayout> {
+    Some(match s.to_ascii_lowercase().as_str() {
+        "uniform" => ObsLayout::Uniform,
+        "ramp" => ObsLayout::Ramp,
+        "cluster" => ObsLayout::Cluster,
+        "two_clusters" | "twoclusters" => ObsLayout::TwoClusters,
+        "left_packed" | "leftpacked" => ObsLayout::LeftPacked,
+        _ => return None,
+    })
+}
+
+pub fn layout_name(layout: ObsLayout) -> &'static str {
+    match layout {
+        ObsLayout::Uniform => "uniform",
+        ObsLayout::Ramp => "ramp",
+        ObsLayout::Cluster => "cluster",
+        ObsLayout::TwoClusters => "two_clusters",
+        ObsLayout::LeftPacked => "left_packed",
+    }
+}
+
+/// Generate `m` observations of a drifting layout at phase `t01 ∈ [0, 1]`.
+///
+/// Locations are drawn first (stratified, one jitter uniform per point),
+/// then values — callers replaying the census only need the location
+/// stream.
+pub fn generate_drift(
+    layout: DriftLayout,
+    m: usize,
+    t01: f64,
+    rng: &mut Rng,
+) -> ObservationSet {
+    assert!(m > 0, "m = 0: nothing to generate");
+    let t = t01.clamp(0.0, 1.0);
+    if let DriftLayout::Stationary(inner) = layout {
+        return generate(inner, m, rng);
+    }
+    let mut xs: Vec<f64> = Vec::with_capacity(m);
+    match layout {
+        DriftLayout::Stationary(_) => unreachable!(),
+        DriftLayout::TranslatingBlob => {
+            let mu = BLOB_MU0 + BLOB_PATH * t;
+            let m_u = m / 2;
+            let m_b = m - m_u;
+            for i in 0..m_u {
+                xs.push((i as f64 + rng.uniform()) / m_u as f64);
+            }
+            for i in 0..m_b {
+                let u = (i as f64 + rng.uniform()) / m_b as f64;
+                xs.push(clamp01(mu + BLOB_SIGMA * crate::util::norm_quantile(u)));
+            }
+        }
+        DriftLayout::RotatingBand => {
+            let c = 0.1 + 0.8 * t;
+            for i in 0..m {
+                let u = (i as f64 + rng.uniform()) / m as f64;
+                xs.push((c - 0.15 + 0.3 * u).rem_euclid(1.0).min(1.0 - 1e-12));
+            }
+        }
+        DriftLayout::AppearingCluster => {
+            let m2 = ((t * m as f64).round() as usize).min(m);
+            let m1 = m - m2;
+            for (count, mu) in [(m1, 0.22), (m2, 0.75)] {
+                for i in 0..count {
+                    let u = (i as f64 + rng.uniform()) / count as f64;
+                    xs.push(clamp01(mu + 0.06 * crate::util::norm_quantile(u)));
+                }
+            }
+        }
+    }
+    let triples = xs
+        .into_iter()
+        .map(|x| (x, field(x) + rng.gaussian_with(0.0, 0.05), 0.01))
+        .collect();
+    ObservationSet::new(triples)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +307,74 @@ mod tests {
         let late = drifting_cluster(200, 1.0, &mut rng);
         let mean = |o: &ObservationSet| o.locs.iter().sum::<f64>() / o.len() as f64;
         assert!(mean(&late) - mean(&early) > 0.5);
+    }
+
+    #[test]
+    fn drift_layouts_stay_in_domain_at_all_phases() {
+        let mut rng = Rng::new(5);
+        for layout in DriftLayout::ALL_MOVING {
+            for t in [0.0, 0.3, 0.5, 1.0] {
+                let obs = generate_drift(layout, 300, t, &mut rng);
+                assert_eq!(obs.len(), 300, "{layout:?} t={t}");
+                assert!(
+                    obs.locs.iter().all(|&x| (0.0..=1.0).contains(&x)),
+                    "{layout:?} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stationary_drift_is_exactly_the_static_generator() {
+        for layout in [ObsLayout::Uniform, ObsLayout::Cluster, ObsLayout::LeftPacked] {
+            let a = generate_drift(DriftLayout::Stationary(layout), 150, 0.7, &mut Rng::new(8));
+            let b = generate(layout, 150, &mut Rng::new(8));
+            assert_eq!(a, b, "{layout:?}");
+        }
+    }
+
+    #[test]
+    fn translating_blob_mean_moves_with_phase() {
+        let mean = |o: &ObservationSet| o.locs.iter().sum::<f64>() / o.len() as f64;
+        let early = generate_drift(DriftLayout::TranslatingBlob, 2000, 0.0, &mut Rng::new(9));
+        let late = generate_drift(DriftLayout::TranslatingBlob, 2000, 1.0, &mut Rng::new(9));
+        // Half the mass is the blob, so the overall mean moves by ~path/2.
+        let shift = mean(&late) - mean(&early);
+        assert!(shift > 0.02 && shift < 0.06, "shift = {shift}");
+    }
+
+    #[test]
+    fn appearing_cluster_transfers_mass() {
+        let right = |o: &ObservationSet| o.locs.iter().filter(|&&x| x > 0.5).count();
+        let start = generate_drift(DriftLayout::AppearingCluster, 400, 0.0, &mut Rng::new(10));
+        let end = generate_drift(DriftLayout::AppearingCluster, 400, 1.0, &mut Rng::new(10));
+        assert!(right(&start) < 10, "t=0 should sit at 0.22: {}", right(&start));
+        assert!(right(&end) > 390, "t=1 should sit at 0.75: {}", right(&end));
+    }
+
+    #[test]
+    fn rotating_band_wraps_around_the_domain() {
+        // Early phase: band centred at 0.1 straddles 0 — mass near both
+        // edges, none in the middle.
+        let obs = generate_drift(DriftLayout::RotatingBand, 500, 0.0, &mut Rng::new(11));
+        let middle = obs.locs.iter().filter(|&&x| (0.4..0.6).contains(&x)).count();
+        let edges = obs.locs.iter().filter(|&&x| !(0.25..0.95).contains(&x)).count();
+        assert_eq!(middle, 0, "band at c=0.1 must not reach the middle");
+        assert_eq!(edges, 500);
+    }
+
+    #[test]
+    fn drift_parse_roundtrips() {
+        let all = [
+            DriftLayout::TranslatingBlob,
+            DriftLayout::RotatingBand,
+            DriftLayout::AppearingCluster,
+            DriftLayout::Stationary(ObsLayout::TwoClusters),
+        ];
+        for layout in all {
+            assert_eq!(DriftLayout::parse(&layout.name()), Some(layout));
+        }
+        assert_eq!(DriftLayout::parse("stationary:nope"), None);
+        assert_eq!(DriftLayout::parse("wobbling"), None);
     }
 }

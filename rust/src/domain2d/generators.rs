@@ -118,6 +118,145 @@ pub fn background_field(mesh: &Mesh2d) -> Vec<f64> {
         .collect()
 }
 
+/// Time-dependent 2-D observation layouts for multi-cycle assimilation:
+/// phase t ∈ [0, 1] sweeps the layout over the assimilation window (the
+/// 2-D counterpart of [`crate::domain::generators::DriftLayout`]).
+///
+/// The moving layouts use jittered low-discrepancy sampling (stratified
+/// inverse-CDF radii with golden-angle spirals, Kronecker background
+/// lattices) so per-box censuses carry O(1) sampling noise — the balance
+/// decay a threshold rebalance policy watches is the drift signal itself.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftLayout2d {
+    /// Re-sample the same static layout every cycle.
+    Stationary(ObsLayout2d),
+    /// 50/50 mixture of a uniform background and an isotropic Gaussian
+    /// blob (σ = 0.16) translating (0.30, 0.35) → (0.36, 0.40).
+    TranslatingBlob,
+    /// A band through the domain centre rotating from horizontal (t = 0)
+    /// to vertical (t = 1).
+    RotatingBand,
+    /// Cluster at (0.25, 0.25) vanishing while (0.75, 0.75) appears.
+    AppearingCluster,
+}
+
+/// Blob parameters (shared with the tuning analysis, see the 1-D family).
+const BLOB2_C0: (f64, f64) = (0.30, 0.35);
+const BLOB2_PATH: (f64, f64) = (0.06, 0.05);
+const BLOB2_SIGMA: f64 = 0.16;
+/// Golden-ratio conjugate for the Kronecker / sunflower sequences.
+const GOLDEN: f64 = 0.618_033_988_749_894_9;
+
+impl DriftLayout2d {
+    /// The genuinely moving layouts (for sweeps and property tests).
+    pub const ALL_MOVING: [DriftLayout2d; 3] = [
+        DriftLayout2d::TranslatingBlob,
+        DriftLayout2d::RotatingBand,
+        DriftLayout2d::AppearingCluster,
+    ];
+
+    /// Parse a CLI / config name; `stationary:<layout>` wraps a static
+    /// 2-D layout.
+    pub fn parse(s: &str) -> Option<DriftLayout2d> {
+        let lower = s.to_ascii_lowercase();
+        Some(match lower.as_str() {
+            "translating_blob" | "translatingblob" => DriftLayout2d::TranslatingBlob,
+            "rotating_band" | "rotatingband" => DriftLayout2d::RotatingBand,
+            "appearing_cluster" | "appearingcluster" => DriftLayout2d::AppearingCluster,
+            _ => {
+                let inner = lower.strip_prefix("stationary:")?;
+                DriftLayout2d::Stationary(ObsLayout2d::parse(inner)?)
+            }
+        })
+    }
+
+    /// Canonical config-file name (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            DriftLayout2d::Stationary(inner) => format!("stationary:{}", inner.name()),
+            DriftLayout2d::TranslatingBlob => "translating_blob".into(),
+            DriftLayout2d::RotatingBand => "rotating_band".into(),
+            DriftLayout2d::AppearingCluster => "appearing_cluster".into(),
+        }
+    }
+}
+
+/// A sunflower-sampled isotropic Gaussian cluster: stratified Rayleigh
+/// radii paired with golden-angle directions.
+fn sunflower_cluster(
+    pts: &mut Vec<(f64, f64)>,
+    count: usize,
+    cx: f64,
+    cy: f64,
+    sigma: f64,
+    rng: &mut Rng,
+) {
+    for i in 0..count {
+        let u = (i as f64 + rng.uniform()) / count as f64;
+        let r = sigma * (-2.0 * (1.0 - u).ln()).sqrt();
+        let theta = 2.0
+            * std::f64::consts::PI
+            * (i as f64 * GOLDEN + (rng.uniform() - 0.5) / count as f64).rem_euclid(1.0);
+        pts.push((clamp01(cx + r * theta.cos()), clamp01(cy + r * theta.sin())));
+    }
+}
+
+/// Generate `m` observations of a drifting 2-D layout at phase
+/// `t01 ∈ [0, 1]`. Locations are drawn first (jitter uniforms only), then
+/// values, so census replays only need the location stream.
+pub fn generate_drift2d(
+    layout: DriftLayout2d,
+    m: usize,
+    t01: f64,
+    rng: &mut Rng,
+) -> ObservationSet2d {
+    assert!(m > 0, "m = 0: nothing to generate");
+    let t = t01.clamp(0.0, 1.0);
+    if let DriftLayout2d::Stationary(inner) = layout {
+        return generate(inner, m, rng);
+    }
+    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(m);
+    match layout {
+        DriftLayout2d::Stationary(_) => unreachable!(),
+        DriftLayout2d::TranslatingBlob => {
+            let cx = BLOB2_C0.0 + BLOB2_PATH.0 * t;
+            let cy = BLOB2_C0.1 + BLOB2_PATH.1 * t;
+            let m_u = m / 2;
+            let m_b = m - m_u;
+            // Background: jittered rank-1 (Kronecker) lattice.
+            for i in 0..m_u {
+                let x = (i as f64 + rng.uniform()) / m_u as f64;
+                let y = (i as f64 * GOLDEN + rng.uniform() / m_u as f64).rem_euclid(1.0);
+                pts.push((x, y.min(1.0 - 1e-12)));
+            }
+            sunflower_cluster(&mut pts, m_b, cx, cy, BLOB2_SIGMA, rng);
+        }
+        DriftLayout2d::RotatingBand => {
+            let theta = std::f64::consts::PI * 0.5 * t;
+            let (sin_t, cos_t) = theta.sin_cos();
+            for i in 0..m {
+                let s = -0.45 + 0.9 * (i as f64 + rng.uniform()) / m as f64;
+                let w = 0.08 * (rng.uniform() - 0.5);
+                pts.push((
+                    clamp01(0.5 + s * cos_t - w * sin_t),
+                    clamp01(0.5 + s * sin_t + w * cos_t),
+                ));
+            }
+        }
+        DriftLayout2d::AppearingCluster => {
+            let m2 = ((t * m as f64).round() as usize).min(m);
+            let m1 = m - m2;
+            sunflower_cluster(&mut pts, m1, 0.25, 0.25, 0.07, rng);
+            sunflower_cluster(&mut pts, m2, 0.75, 0.75, 0.07, rng);
+        }
+    }
+    let tuples = pts
+        .into_iter()
+        .map(|(x, y)| (x, y, field2(x, y) + rng.gaussian_with(0.0, 0.05), 0.01))
+        .collect();
+    ObservationSet2d::new(tuples)
+}
+
 /// Generate observations whose per-box census is exactly `counts` under
 /// the given partition (the 2-D analogue of `generators::with_counts`,
 /// reproducing prescribed l_in vectors for tests and tables).
@@ -234,5 +373,77 @@ mod tests {
             assert_eq!(ObsLayout2d::parse(layout.name()), Some(layout));
         }
         assert_eq!(ObsLayout2d::parse("nope"), None);
+    }
+
+    #[test]
+    fn drift2d_layouts_stay_in_domain_at_all_phases() {
+        let mut rng = Rng::new(6);
+        for layout in DriftLayout2d::ALL_MOVING {
+            for t in [0.0, 0.4, 1.0] {
+                let obs = generate_drift2d(layout, 250, t, &mut rng);
+                assert_eq!(obs.len(), 250, "{layout:?} t={t}");
+                assert!(obs.xs.iter().all(|&x| (0.0..=1.0).contains(&x)), "{layout:?}");
+                assert!(obs.ys.iter().all(|&y| (0.0..=1.0).contains(&y)), "{layout:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stationary_drift2d_is_exactly_the_static_generator() {
+        for layout in [ObsLayout2d::Uniform2d, ObsLayout2d::Ring] {
+            let a = generate_drift2d(DriftLayout2d::Stationary(layout), 120, 0.3, &mut Rng::new(7));
+            let b = generate(layout, 120, &mut Rng::new(7));
+            assert_eq!(a, b, "{layout:?}");
+        }
+    }
+
+    #[test]
+    fn rotating_band2d_turns_from_horizontal_to_vertical() {
+        let spread = |v: &[f64]| {
+            let mean = v.iter().sum::<f64>() / v.len() as f64;
+            v.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / v.len() as f64
+        };
+        let h = generate_drift2d(DriftLayout2d::RotatingBand, 600, 0.0, &mut Rng::new(8));
+        let v = generate_drift2d(DriftLayout2d::RotatingBand, 600, 1.0, &mut Rng::new(8));
+        // Horizontal band: wide in x, narrow in y; vertical is the reverse.
+        assert!(spread(&h.xs) > 10.0 * spread(&h.ys), "t=0 not horizontal");
+        assert!(spread(&v.ys) > 10.0 * spread(&v.xs), "t=1 not vertical");
+    }
+
+    #[test]
+    fn appearing_cluster2d_transfers_mass() {
+        let upper = |o: &ObservationSet2d| {
+            o.xs.iter().zip(&o.ys).filter(|&(&x, &y)| x > 0.5 && y > 0.5).count()
+        };
+        let start = generate_drift2d(DriftLayout2d::AppearingCluster, 300, 0.0, &mut Rng::new(9));
+        let end = generate_drift2d(DriftLayout2d::AppearingCluster, 300, 1.0, &mut Rng::new(9));
+        assert!(upper(&start) < 5, "t=0: {}", upper(&start));
+        assert!(upper(&end) > 290, "t=1: {}", upper(&end));
+    }
+
+    #[test]
+    fn translating_blob2d_centroid_moves() {
+        let centroid = |o: &ObservationSet2d| {
+            let n = o.len() as f64;
+            (o.xs.iter().sum::<f64>() / n, o.ys.iter().sum::<f64>() / n)
+        };
+        let a = centroid(&generate_drift2d(DriftLayout2d::TranslatingBlob, 3000, 0.0, &mut Rng::new(10)));
+        let b = centroid(&generate_drift2d(DriftLayout2d::TranslatingBlob, 3000, 1.0, &mut Rng::new(10)));
+        // Half the mass is the blob: centroid moves by ~path/2 per axis.
+        assert!(b.0 - a.0 > 0.015 && b.1 - a.1 > 0.012, "{a:?} -> {b:?}");
+    }
+
+    #[test]
+    fn drift2d_parse_roundtrips() {
+        let all = [
+            DriftLayout2d::TranslatingBlob,
+            DriftLayout2d::RotatingBand,
+            DriftLayout2d::AppearingCluster,
+            DriftLayout2d::Stationary(ObsLayout2d::Quadrant),
+        ];
+        for layout in all {
+            assert_eq!(DriftLayout2d::parse(&layout.name()), Some(layout));
+        }
+        assert_eq!(DriftLayout2d::parse("stationary:nope"), None);
     }
 }

@@ -16,7 +16,7 @@ pub mod mesh;
 pub mod observations;
 pub mod partition;
 
-pub use generators::ObsLayout2d;
+pub use generators::{DriftLayout2d, ObsLayout2d};
 pub use mesh::Mesh2d;
 pub use observations::ObservationSet2d;
 pub use partition::{BoxPartition, BoxRect};

@@ -53,6 +53,13 @@ impl DyddOutcome {
         }
         self.t_repartition.as_secs_f64() / self.t_dydd.as_secs_f64()
     }
+
+    /// Total migration volume Σ|δ| over the applied schedule — the number
+    /// of observation moves the migration step performed (the per-cycle
+    /// communication cost a cycling report tracks).
+    pub fn migration_volume(&self) -> u64 {
+        self.migrations.iter().map(|&(_, _, d)| d.unsigned_abs()).sum()
+    }
 }
 
 #[derive(Debug, thiserror::Error)]

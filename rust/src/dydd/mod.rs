@@ -18,10 +18,12 @@
 mod balancer;
 mod geometric;
 mod geometric2d;
+mod policy;
 
 pub use balancer::{balance, repair, schedule_once, BalanceError, DyddOutcome, DyddParams};
 pub use geometric::{rebalance_partition, GeometricOutcome};
 pub use geometric2d::{rebalance_partition2d, GeometricOutcome2d};
+pub use policy::RebalancePolicy;
 
 /// Load-balance quality: ℰ = min_i l_fin(i) / max_i l_fin(i) (§6).
 /// ℰ = 1 is perfect balance.

@@ -1,0 +1,108 @@
+//! Rebalance policies for multi-cycle assimilation: *when* to re-run DyDD.
+//!
+//! The paper's framework re-defines subdomain boundaries "as the
+//! observation distribution changes" — across successive assimilation
+//! cycles, not just once before a single solve. A [`RebalancePolicy`]
+//! decides, at the start of each cycle, whether the incumbent partition is
+//! still good enough or DyDD should migrate boundaries again (warm-started
+//! from the incumbent decomposition). The trade-off it encodes is the
+//! paper's T_DyDD overhead versus the load-imbalance overhead T^p_oh.
+
+/// When the cycle driver re-runs DyDD.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RebalancePolicy {
+    /// Never rebalance: the initial (uniform) partition is kept for all
+    /// cycles — the static-DD baseline the paper argues against.
+    Never,
+    /// Rebalance before every cycle regardless of the incumbent balance —
+    /// maximal quality, maximal T_DyDD overhead.
+    EveryCycle,
+    /// Rebalance only when the balance ratio ℰ of the *current* cycle's
+    /// census under the incumbent partition drops below τ ∈ (0, 1].
+    Threshold(f64),
+}
+
+impl RebalancePolicy {
+    /// The default trigger level: re-run DyDD once the incumbent partition
+    /// loses more than 10% of perfect balance.
+    pub const DEFAULT_TAU: f64 = 0.9;
+
+    /// Decide whether this cycle rebalances, given ℰ of the new census
+    /// under the incumbent partition.
+    pub fn should_rebalance(&self, balance_before: f64) -> bool {
+        match *self {
+            RebalancePolicy::Never => false,
+            RebalancePolicy::EveryCycle => true,
+            RebalancePolicy::Threshold(tau) => balance_before < tau,
+        }
+    }
+
+    /// Parse a CLI / config name: `never`, `every_cycle` (or `every`),
+    /// `threshold` (τ = [`Self::DEFAULT_TAU`]) or `threshold:0.85`.
+    pub fn parse(s: &str) -> Option<RebalancePolicy> {
+        let lower = s.to_ascii_lowercase();
+        Some(match lower.as_str() {
+            "never" => RebalancePolicy::Never,
+            "every_cycle" | "everycycle" | "every" => RebalancePolicy::EveryCycle,
+            "threshold" => RebalancePolicy::Threshold(Self::DEFAULT_TAU),
+            _ => {
+                let tau = lower.strip_prefix("threshold:")?.parse::<f64>().ok()?;
+                if !(tau > 0.0 && tau <= 1.0) {
+                    return None;
+                }
+                RebalancePolicy::Threshold(tau)
+            }
+        })
+    }
+
+    /// The canonical config-file name (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> String {
+        match *self {
+            RebalancePolicy::Never => "never".into(),
+            RebalancePolicy::EveryCycle => "every_cycle".into(),
+            RebalancePolicy::Threshold(tau) => format!("threshold:{tau}"),
+        }
+    }
+
+    /// Replace the threshold τ (no-op for the other policies).
+    pub fn with_tau(self, tau: f64) -> RebalancePolicy {
+        match self {
+            RebalancePolicy::Threshold(_) => RebalancePolicy::Threshold(tau),
+            other => other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_match_semantics() {
+        assert!(!RebalancePolicy::Never.should_rebalance(0.0));
+        assert!(RebalancePolicy::EveryCycle.should_rebalance(1.0));
+        let t = RebalancePolicy::Threshold(0.8);
+        assert!(t.should_rebalance(0.79));
+        assert!(!t.should_rebalance(0.8));
+        assert!(!t.should_rebalance(0.95));
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        for p in [
+            RebalancePolicy::Never,
+            RebalancePolicy::EveryCycle,
+            RebalancePolicy::Threshold(0.75),
+        ] {
+            assert_eq!(RebalancePolicy::parse(&p.name()), Some(p));
+        }
+        assert_eq!(
+            RebalancePolicy::parse("threshold"),
+            Some(RebalancePolicy::Threshold(RebalancePolicy::DEFAULT_TAU))
+        );
+        assert_eq!(RebalancePolicy::parse("every"), Some(RebalancePolicy::EveryCycle));
+        assert_eq!(RebalancePolicy::parse("threshold:0"), None);
+        assert_eq!(RebalancePolicy::parse("threshold:1.5"), None);
+        assert_eq!(RebalancePolicy::parse("sometimes"), None);
+    }
+}

@@ -1,0 +1,503 @@
+//! Multi-cycle assimilation driver: advance the analysis through K
+//! assimilation cycles while the observation distribution drifts, with a
+//! [`RebalancePolicy`] deciding per cycle whether DyDD re-defines the
+//! decomposition — the paper's *dynamic* in Dynamic Domain Decomposition.
+//!
+//! Each cycle
+//!   1. draws the cycle's observations from a drifting generator at phase
+//!      t = k/(K−1),
+//!   2. computes the census balance ℰ under the *incumbent* partition and
+//!      asks the policy whether to re-run DyDD (warm-started from that
+//!      partition — boundaries migrate from where they are, not from the
+//!      uniform initial decomposition),
+//!   3. solves the cycle's CLS with the persistent [`WorkerPool`] (blocks
+//!      are re-extracted every cycle because the data changed; the phase
+//!      colouring is recomputed only when the partition actually moved),
+//!   4. feeds the DD-KF analysis forward as the next cycle's background.
+//!
+//! The per-cycle records are what the `cycle` CLI subcommand and the
+//! `cycles` bench report: balance before/after, rebalances triggered,
+//! migration volume, and the simulated-parallel critical path.
+
+use crate::cls::{ClsProblem, ClsProblem2d};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{blocks1d, blocks2d, phases1d, phases2d, WorkerPool};
+use crate::domain::{generators, DriftLayout, Mesh1d, ObservationSet, Partition};
+use crate::domain2d::{generators as gen2d, BoxPartition, DriftLayout2d, ObservationSet2d};
+use crate::dydd::{balance_ratio, GeometricOutcome, GeometricOutcome2d, RebalancePolicy};
+use crate::harness::pipeline::{maybe_rebalance, maybe_rebalance2d};
+use crate::kf::{kf_solve_cls, kf_solve_cls2d};
+use crate::linalg::mat::dist2;
+use std::time::{Duration, Instant};
+
+/// Phase t ∈ [0, 1] of cycle `k` in a K-cycle run (single-cycle runs sit
+/// at t = 0).
+pub fn cycle_phase(k: usize, cycles: usize) -> f64 {
+    if cycles <= 1 {
+        0.0
+    } else {
+        k as f64 / (cycles - 1) as f64
+    }
+}
+
+/// Deterministic per-cycle RNG stream, regenerable for any cycle in
+/// isolation (the property the chained-by-hand equivalence tests rely
+/// on). Uses [`crate::util::Rng::fork`] rather than `seed + k·γ`: with
+/// the latter, cycle k+1's SplitMix64 stream would be cycle k's shifted
+/// by one draw — fully correlated sampling jitter across cycles.
+fn cycle_rng(seed: u64, k: usize) -> crate::util::Rng {
+    crate::util::Rng::new(seed).fork(k as u64)
+}
+
+/// The observations cycle `k` of a K-cycle 1-D run assimilates.
+pub fn cycle_observations(
+    drift: DriftLayout,
+    m: usize,
+    seed: u64,
+    k: usize,
+    cycles: usize,
+) -> ObservationSet {
+    generators::generate_drift(drift, m, cycle_phase(k, cycles), &mut cycle_rng(seed, k))
+}
+
+/// The observations cycle `k` of a K-cycle 2-D run assimilates.
+pub fn cycle_observations2d(
+    drift: DriftLayout2d,
+    m: usize,
+    seed: u64,
+    k: usize,
+    cycles: usize,
+) -> ObservationSet2d {
+    gen2d::generate_drift2d(drift, m, cycle_phase(k, cycles), &mut cycle_rng(seed, k))
+}
+
+/// Everything one assimilation cycle reports (a row of the cycle table).
+#[derive(Debug, Clone)]
+pub struct CycleRecord {
+    pub cycle: usize,
+    pub m: usize,
+    /// ℰ of the cycle's census under the incumbent partition, before any
+    /// rebalance — what the threshold policy decides on.
+    pub balance_before: f64,
+    /// ℰ of the census under the partition the solve actually used.
+    pub balance_after: f64,
+    /// Whether the policy triggered DyDD this cycle.
+    pub rebalanced: bool,
+    /// Σ|δ| over the applied migration schedule (0 without a rebalance).
+    pub migration_volume: u64,
+    /// Whether the solve partition differs from the previous cycle's
+    /// (a triggered rebalance can still reproduce the incumbent bounds).
+    pub partition_changed: bool,
+    /// 1-D DyDD record for this cycle (None when not rebalanced / dim 2).
+    pub dydd: Option<GeometricOutcome>,
+    /// 2-D DyDD record for this cycle (None when not rebalanced / dim 1).
+    pub dydd2d: Option<GeometricOutcome2d>,
+    /// T_DyDD spent this cycle (zero without a rebalance).
+    pub t_dydd: Duration,
+    /// Simulated-parallel critical path of this cycle's DD-KF solve.
+    pub t_critical: Duration,
+    pub iters: usize,
+    pub converged: bool,
+    pub stalled: bool,
+    /// ‖x̂_KF − x̂_DD-DA‖ on this cycle's problem (None without baseline).
+    pub error_dd_da: Option<f64>,
+}
+
+/// Report of a K-cycle assimilation run.
+#[derive(Debug, Clone)]
+pub struct CycleReport {
+    pub name: String,
+    /// Total unknowns (nx·ny for the 2-D path).
+    pub n: usize,
+    pub p: usize,
+    pub policy: RebalancePolicy,
+    pub records: Vec<CycleRecord>,
+    /// Final analysis state after the last cycle.
+    pub x: Vec<f64>,
+}
+
+impl CycleReport {
+    /// Number of cycles that triggered DyDD.
+    pub fn rebalances(&self) -> usize {
+        self.records.iter().filter(|r| r.rebalanced).count()
+    }
+
+    /// End-of-run balance: ℰ of the final cycle's solve partition.
+    pub fn final_balance(&self) -> f64 {
+        self.records.last().map(|r| r.balance_after).unwrap_or(1.0)
+    }
+
+    /// Mean per-cycle solve balance.
+    pub fn mean_balance(&self) -> f64 {
+        if self.records.is_empty() {
+            return 1.0;
+        }
+        self.records.iter().map(|r| r.balance_after).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// Worst per-cycle solve balance.
+    pub fn worst_balance(&self) -> f64 {
+        self.records.iter().map(|r| r.balance_after).fold(1.0, f64::min)
+    }
+
+    /// Total observations migrated across all rebalances.
+    pub fn total_migration_volume(&self) -> u64 {
+        self.records.iter().map(|r| r.migration_volume).sum()
+    }
+
+    /// Fraction of the simulated-parallel run spent rebalancing:
+    /// ΣT_DyDD / (ΣT_DyDD + ΣT^p_critical) — the cost side of the policy
+    /// trade-off (the benefit side is the balance the records show).
+    pub fn rebalance_overhead_fraction(&self) -> f64 {
+        let dydd: f64 = self.records.iter().map(|r| r.t_dydd.as_secs_f64()).sum();
+        let solve: f64 = self.records.iter().map(|r| r.t_critical.as_secs_f64()).sum();
+        if dydd + solve == 0.0 {
+            return 0.0;
+        }
+        dydd / (dydd + solve)
+    }
+
+    pub fn all_converged(&self) -> bool {
+        self.records.iter().all(|r| r.converged)
+    }
+}
+
+/// Per-cycle rows of a [`CycleReport`] — shared by the `cycle` CLI
+/// subcommand, `examples/dydd_cycles.rs` and the `cycles` bench.
+pub fn render_cycle_table(rep: &CycleReport) -> crate::util::Table {
+    use crate::util::timer::fmt_secs;
+    let mut t = crate::util::Table::new(
+        &format!("{} — per-cycle report (p = {}, policy {})", rep.name, rep.p, rep.policy.name()),
+        &["cycle", "m", "E_before", "E_after", "reb", "moved", "iters", "T^p_crit", "err_DD-DA"],
+    );
+    for r in &rep.records {
+        t.row(&[
+            r.cycle.to_string(),
+            r.m.to_string(),
+            format!("{:.3}", r.balance_before),
+            format!("{:.3}", r.balance_after),
+            if r.rebalanced { "yes".into() } else { "-".to_string() },
+            r.migration_volume.to_string(),
+            r.iters.to_string(),
+            fmt_secs(r.t_critical.as_secs_f64()),
+            r.error_dd_da.map(|e| format!("{e:.1e}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+/// The acceptance criteria of the policy comparison on a drifting
+/// scenario, held in one place so `examples/dydd_cycles.rs` (the CI smoke
+/// test) and the integration tests cannot drift apart: `Threshold` must
+/// trigger strictly fewer rebalances than `EveryCycle` yet end within 10%
+/// of its balance (both absolutely and relatively), and `Never` must end
+/// measurably worse.
+pub fn check_policy_acceptance(
+    never: &CycleReport,
+    every: &CycleReport,
+    threshold: &CycleReport,
+) -> anyhow::Result<()> {
+    for rep in [never, every, threshold] {
+        anyhow::ensure!(rep.all_converged(), "{}: a cycle failed to converge", rep.name);
+    }
+    anyhow::ensure!(
+        threshold.rebalances() < every.rebalances(),
+        "threshold must trigger strictly fewer rebalances ({} vs {})",
+        threshold.rebalances(),
+        every.rebalances()
+    );
+    let (e_thr, e_evr, e_nvr) =
+        (threshold.final_balance(), every.final_balance(), never.final_balance());
+    anyhow::ensure!(
+        e_evr - e_thr <= 0.1 && e_thr >= 0.9 * e_evr,
+        "threshold end balance {e_thr:.3} not within 10% of every-cycle {e_evr:.3}"
+    );
+    anyhow::ensure!(
+        e_nvr < e_thr - 0.2,
+        "never-rebalance must end measurably worse ({e_nvr:.3} vs {e_thr:.3})"
+    );
+    Ok(())
+}
+
+/// The policy a config actually runs: `run.dydd = false` forces Never
+/// regardless of the `[cycle]` section (DyDD compiled out of the run).
+fn effective_policy(cfg: &ExperimentConfig) -> RebalancePolicy {
+    if cfg.dydd {
+        cfg.cycle_policy
+    } else {
+        RebalancePolicy::Never
+    }
+}
+
+/// Run K assimilation cycles of the 1-D pipeline (see module docs).
+///
+/// `with_baseline`: also run the sequential KF on every cycle's problem
+/// (same chained background) and record per-cycle error_DD-DA.
+pub fn run_cycles(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result<CycleReport> {
+    anyhow::ensure!(cfg.dim == 1, "run_cycles drives the 1-D pipeline; use run_cycles2d");
+    let policy = effective_policy(cfg);
+    let mesh = Mesh1d::new(cfg.n);
+    let mut part = Partition::uniform(cfg.n, cfg.p);
+    let mut pool = WorkerPool::new(cfg.p, cfg.backend, cfg.artifacts_dir.clone());
+    let mut y0: Vec<f64> = (0..cfg.n)
+        .map(|j| generators::field(j as f64 / (cfg.n - 1) as f64))
+        .collect();
+    let mut phases_cache: Option<(Partition, Vec<Vec<usize>>)> = None;
+    let mut records = Vec::with_capacity(cfg.cycles);
+
+    for k in 0..cfg.cycles {
+        let obs = cycle_observations(cfg.drift, cfg.m, cfg.seed, k, cfg.cycles);
+        let balance_before = balance_ratio(&obs.census(&mesh, &part));
+        let rebalanced = policy.should_rebalance(balance_before);
+
+        // Warm start: DyDD migrates from the incumbent bounds.
+        let t0 = Instant::now();
+        let (new_part, dydd) = maybe_rebalance(&mesh, &part, &obs, rebalanced)?;
+        let t_dydd = if rebalanced { t0.elapsed() } else { Duration::ZERO };
+        let partition_changed = new_part != part;
+        part = new_part;
+        let balance_after = balance_ratio(&obs.census(&mesh, &part));
+        let migration_volume = dydd.as_ref().map(|g| g.dydd.migration_volume()).unwrap_or(0);
+
+        // Solve this cycle's CLS on the persistent pool. Blocks carry the
+        // cycle's data so they are re-extracted every cycle; the phase
+        // colouring depends only on the partition geometry and is reused
+        // verbatim while the partition stands still.
+        let prob = ClsProblem::new(
+            mesh.clone(),
+            cfg.state_op.build(),
+            y0.clone(),
+            vec![cfg.state_weight; cfg.n],
+            obs,
+        );
+        let blocks = blocks1d(&prob, &part, cfg.schwarz.overlap);
+        let phases = match &phases_cache {
+            Some((cached_part, phases)) if *cached_part == part => phases.clone(),
+            _ => {
+                let phases = phases1d(&blocks, &part);
+                phases_cache = Some((part.clone(), phases.clone()));
+                phases
+            }
+        };
+        let par = pool.solve_blocks(cfg.n, blocks, &phases, &cfg.schwarz)?;
+
+        let error_dd_da = if with_baseline {
+            Some(dist2(&kf_solve_cls(&prob).x, &par.x))
+        } else {
+            None
+        };
+
+        records.push(CycleRecord {
+            cycle: k,
+            m: cfg.m,
+            balance_before,
+            balance_after,
+            rebalanced,
+            migration_volume,
+            partition_changed,
+            dydd,
+            dydd2d: None,
+            t_dydd,
+            t_critical: par.t_critical,
+            iters: par.iters,
+            converged: par.converged,
+            stalled: par.stalled,
+            error_dd_da,
+        });
+
+        // Feed the analysis forward as the next cycle's background.
+        y0 = par.x;
+    }
+
+    Ok(CycleReport { name: cfg.name.clone(), n: cfg.n, p: cfg.p, policy, records, x: y0 })
+}
+
+/// Run K assimilation cycles of the 2-D box-grid pipeline.
+pub fn run_cycles2d(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result<CycleReport> {
+    anyhow::ensure!(cfg.dim == 2, "run_cycles2d requires dim = 2");
+    let policy = effective_policy(cfg);
+    let mesh = crate::domain2d::Mesh2d::square(cfg.n);
+    let n = mesh.n();
+    let p = cfg.px * cfg.py;
+    let mut part = BoxPartition::uniform(cfg.n, cfg.n, cfg.px, cfg.py);
+    let mut pool = WorkerPool::new(p, cfg.backend, cfg.artifacts_dir.clone());
+    let mut y0 = gen2d::background_field(&mesh);
+    let mut phases_cache: Option<(BoxPartition, Vec<Vec<usize>>)> = None;
+    let mut records = Vec::with_capacity(cfg.cycles);
+
+    let state = match cfg.state_op {
+        crate::config::StateOpConfig::Identity => crate::cls::StateOp2d::Identity,
+        crate::config::StateOpConfig::Tridiag { main, off } => {
+            crate::cls::StateOp2d::FivePoint { main, off }
+        }
+    };
+
+    for k in 0..cfg.cycles {
+        let obs = cycle_observations2d(cfg.drift2d, cfg.m, cfg.seed, k, cfg.cycles);
+        let balance_before = balance_ratio(&obs.census(&mesh, &part));
+        let rebalanced = policy.should_rebalance(balance_before);
+
+        let t0 = Instant::now();
+        let (new_part, dydd2d) = maybe_rebalance2d(&mesh, &part, &obs, rebalanced)?;
+        let t_dydd = if rebalanced { t0.elapsed() } else { Duration::ZERO };
+        let partition_changed = new_part != part;
+        part = new_part;
+        let balance_after = balance_ratio(&obs.census(&mesh, &part));
+        let migration_volume = dydd2d.as_ref().map(|g| g.dydd.migration_volume()).unwrap_or(0);
+
+        let prob =
+            ClsProblem2d::new(mesh.clone(), state, y0.clone(), vec![cfg.state_weight; n], obs);
+        let blocks = blocks2d(&prob, &part, cfg.schwarz.overlap);
+        let phases = match &phases_cache {
+            Some((cached_part, phases)) if *cached_part == part => phases.clone(),
+            _ => {
+                let phases = phases2d(&blocks, &prob, &part);
+                phases_cache = Some((part.clone(), phases.clone()));
+                phases
+            }
+        };
+        let par = pool.solve_blocks(n, blocks, &phases, &cfg.schwarz)?;
+
+        let error_dd_da = if with_baseline {
+            Some(dist2(&kf_solve_cls2d(&prob).x, &par.x))
+        } else {
+            None
+        };
+
+        records.push(CycleRecord {
+            cycle: k,
+            m: cfg.m,
+            balance_before,
+            balance_after,
+            rebalanced,
+            migration_volume,
+            partition_changed,
+            dydd: None,
+            dydd2d,
+            t_dydd,
+            t_critical: par.t_critical,
+            iters: par.iters,
+            converged: par.converged,
+            stalled: par.stalled,
+            error_dd_da,
+        });
+
+        y0 = par.x;
+    }
+
+    Ok(CycleReport { name: cfg.name.clone(), n, p, policy, records, x: y0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::ObsLayout;
+    use crate::domain2d::ObsLayout2d;
+
+    fn cycle_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 128;
+        cfg.m = 90;
+        cfg.p = 4;
+        cfg.cycles = 3;
+        cfg.drift = DriftLayout::TranslatingBlob;
+        cfg.cycle_policy = RebalancePolicy::EveryCycle;
+        cfg
+    }
+
+    #[test]
+    fn cycles_converge_and_feed_forward() {
+        let cfg = cycle_cfg();
+        let rep = run_cycles(&cfg, true).unwrap();
+        assert_eq!(rep.records.len(), 3);
+        assert!(rep.all_converged());
+        assert_eq!(rep.rebalances(), 3);
+        for r in &rep.records {
+            assert!(r.error_dd_da.unwrap() < 1e-9, "cycle {}: {:?}", r.cycle, r.error_dd_da);
+            assert!(r.balance_after > 0.6, "cycle {}: E = {}", r.cycle, r.balance_after);
+        }
+        assert_eq!(rep.x.len(), 128);
+    }
+
+    #[test]
+    fn never_policy_keeps_uniform_partition() {
+        let mut cfg = cycle_cfg();
+        cfg.cycle_policy = RebalancePolicy::Never;
+        let rep = run_cycles(&cfg, false).unwrap();
+        assert_eq!(rep.rebalances(), 0);
+        assert_eq!(rep.total_migration_volume(), 0);
+        assert!(rep.records.iter().all(|r| !r.partition_changed));
+        assert!(rep.all_converged());
+    }
+
+    #[test]
+    fn dydd_off_forces_never_policy() {
+        let mut cfg = cycle_cfg();
+        cfg.dydd = false;
+        cfg.cycle_policy = RebalancePolicy::EveryCycle;
+        let rep = run_cycles(&cfg, false).unwrap();
+        assert_eq!(rep.policy, RebalancePolicy::Never);
+        assert_eq!(rep.rebalances(), 0);
+    }
+
+    #[test]
+    fn threshold_policy_skips_balanced_cycles() {
+        // A stationary uniform layout stays balanced: the threshold policy
+        // must trigger at most on the first cycle.
+        let mut cfg = cycle_cfg();
+        cfg.drift = DriftLayout::Stationary(ObsLayout::Uniform);
+        cfg.m = 400;
+        cfg.cycle_policy = RebalancePolicy::Threshold(0.5);
+        let rep = run_cycles(&cfg, false).unwrap();
+        assert!(rep.rebalances() <= 1, "rebalances = {}", rep.rebalances());
+        assert!(rep.all_converged());
+    }
+
+    #[test]
+    fn cycles2d_converge_with_every_cycle_policy() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.n = 14;
+        cfg.m = 120;
+        cfg.px = 2;
+        cfg.py = 2;
+        cfg.cycles = 3;
+        cfg.drift2d = DriftLayout2d::AppearingCluster;
+        cfg.cycle_policy = RebalancePolicy::EveryCycle;
+        let rep = run_cycles2d(&cfg, true).unwrap();
+        assert_eq!(rep.records.len(), 3);
+        assert_eq!(rep.p, 4);
+        assert_eq!(rep.n, 196);
+        assert!(rep.all_converged());
+        assert_eq!(rep.rebalances(), 3);
+        for r in &rep.records {
+            assert!(r.error_dd_da.unwrap() < 1e-9, "cycle {}", r.cycle);
+            assert!(r.dydd2d.is_some());
+        }
+    }
+
+    #[test]
+    fn stationary2d_never_policy_is_static() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.n = 12;
+        cfg.m = 80;
+        cfg.px = 2;
+        cfg.py = 2;
+        cfg.cycles = 2;
+        cfg.drift2d = DriftLayout2d::Stationary(ObsLayout2d::Uniform2d);
+        cfg.cycle_policy = RebalancePolicy::Never;
+        let rep = run_cycles2d(&cfg, false).unwrap();
+        assert_eq!(rep.rebalances(), 0);
+        assert!(rep.records.iter().all(|r| !r.partition_changed));
+        assert!(rep.all_converged());
+    }
+
+    #[test]
+    fn phase_endpoints() {
+        assert_eq!(cycle_phase(0, 8), 0.0);
+        assert_eq!(cycle_phase(7, 8), 1.0);
+        assert_eq!(cycle_phase(0, 1), 0.0);
+        assert!((cycle_phase(2, 5) - 0.5).abs() < 1e-15);
+    }
+}

@@ -3,10 +3,12 @@
 //! the `dydd-da table` CLI subcommand, `cargo bench`, and the examples so
 //! all three print identical workloads.
 
+pub mod cycles;
 pub mod pipeline;
 pub mod scenarios;
 pub mod tables;
 
+pub use cycles::{run_cycles, run_cycles2d, CycleRecord, CycleReport};
 pub use pipeline::{run_experiment, run_experiment2d, ExperimentReport};
 pub use scenarios::{grid2d, Scenario2d};
 pub use tables::{all_tables, render_table, TableId};

@@ -4,8 +4,8 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{run_parallel, run_parallel2d, RunConfig};
-use crate::domain::{generators, Mesh1d, Partition};
-use crate::domain2d::BoxPartition;
+use crate::domain::{generators, Mesh1d, ObservationSet, Partition};
+use crate::domain2d::{BoxPartition, Mesh2d, ObservationSet2d};
 use crate::dydd::{
     balance_ratio, rebalance_partition, rebalance_partition2d, DyddParams, GeometricOutcome,
     GeometricOutcome2d,
@@ -13,6 +13,39 @@ use crate::dydd::{
 use crate::kf::{kf_solve_cls, kf_solve_cls2d};
 use crate::linalg::mat::dist2;
 use std::time::{Duration, Instant};
+
+/// The DyDD gate every 1-D pipeline entry point shares (single-shot runs
+/// and the per-cycle decisions of [`super::cycles`]): rebalance `part` to
+/// the observation layout when `enabled`, else keep the incumbent
+/// partition.
+pub fn maybe_rebalance(
+    mesh: &Mesh1d,
+    part: &Partition,
+    obs: &ObservationSet,
+    enabled: bool,
+) -> anyhow::Result<(Partition, Option<GeometricOutcome>)> {
+    if enabled {
+        let out = rebalance_partition(mesh, part, obs, &DyddParams::default())?;
+        Ok((out.partition.clone(), Some(out)))
+    } else {
+        Ok((part.clone(), None))
+    }
+}
+
+/// 2-D counterpart of [`maybe_rebalance`] on box partitions.
+pub fn maybe_rebalance2d(
+    mesh: &Mesh2d,
+    part: &BoxPartition,
+    obs: &ObservationSet2d,
+    enabled: bool,
+) -> anyhow::Result<(BoxPartition, Option<GeometricOutcome2d>)> {
+    if enabled {
+        let out = rebalance_partition2d(mesh, part, obs, &DyddParams::default())?;
+        Ok((out.partition.clone(), Some(out)))
+    } else {
+        Ok((part.clone(), None))
+    }
+}
 
 /// Everything measured in one experiment run.
 #[derive(Debug, Clone)]
@@ -99,12 +132,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Re
     let part0 = Partition::uniform(cfg.n, cfg.p);
 
     // DyDD: rebalance the decomposition to the observation layout.
-    let (part, dydd) = if cfg.dydd {
-        let out = rebalance_partition(&mesh, &part0, &prob.obs, &DyddParams::default())?;
-        (out.partition.clone(), Some(out))
-    } else {
-        (part0, None)
-    };
+    let (part, dydd) = maybe_rebalance(&mesh, &part0, &prob.obs, cfg.dydd)?;
 
     // Parallel DD-KF.
     let run_cfg: RunConfig = cfg.run_config();
@@ -156,12 +184,7 @@ pub fn run_experiment2d(
     let part0 = BoxPartition::uniform(cfg.n, cfg.n, cfg.px, cfg.py);
 
     // DyDD: rebalance the box decomposition to the observation layout.
-    let (part, dydd2d) = if cfg.dydd {
-        let out = rebalance_partition2d(&prob.mesh, &part0, &prob.obs, &DyddParams::default())?;
-        (out.partition.clone(), Some(out))
-    } else {
-        (part0, None)
-    };
+    let (part, dydd2d) = maybe_rebalance2d(&prob.mesh, &part0, &prob.obs, cfg.dydd)?;
 
     // Parallel DD-KF over the box grid (checkerboard phases).
     let run_cfg: RunConfig = cfg.run_config();
@@ -222,12 +245,7 @@ pub fn run_with_counts(
         obs,
     );
 
-    let (part, dydd) = if base.dydd {
-        let out = rebalance_partition(&mesh, &part0, &prob.obs, &DyddParams::default())?;
-        (out.partition.clone(), Some(out))
-    } else {
-        (part0, None)
-    };
+    let (part, dydd) = maybe_rebalance(&mesh, &part0, &prob.obs, base.dydd)?;
 
     let t0 = Instant::now();
     let par = run_parallel(&prob, &part, &base.run_config())?;

@@ -12,7 +12,10 @@
 //!   come in two flavours: [`domain`] (1-D chain of intervals) and
 //!   [`domain2d`] (a `px × py` box grid on [0, 1]² whose 4-connected
 //!   decomposition graph feeds the same Laplacian scheduler, rebalanced
-//!   geometrically by [`dydd::rebalance_partition2d`]).
+//!   geometrically by [`dydd::rebalance_partition2d`]). Multi-cycle
+//!   assimilation — drifting observations, per-cycle
+//!   [`dydd::RebalancePolicy`] decisions, analysis fed forward as the next
+//!   background — lives in [`harness::cycles`].
 //! * **L2/L1 (build-time python)** — JAX model functions composing Pallas
 //!   kernels, AOT-lowered to HLO-text artifacts executed through PJRT by
 //!   [`runtime`].

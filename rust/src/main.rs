@@ -5,6 +5,8 @@
 //!   run [--config F] [...]   run one experiment (DyDD + DD-KF + baseline;
 //!                            --dim 2 runs the full pipeline on a px × py
 //!                            box grid over [0,1]²)
+//!   cycle [...]              multi-cycle assimilation with drifting
+//!                            observations and a DyDD rebalance policy
 //!   dydd --loads a,b,c ...   run the load balancer on an abstract scenario
 //!   dydd --dim 2 [...]       geometric DyDD on a px × py box grid
 //!   table <1..12|fig5|all>   regenerate the paper's tables/figures
@@ -12,13 +14,14 @@
 
 use dydd_da::config::ExperimentConfig;
 use dydd_da::coordinator::SolverBackend;
-use dydd_da::domain::ObsLayout;
-use dydd_da::domain2d::ObsLayout2d;
-use dydd_da::dydd::{balance, balance_ratio, rebalance_partition2d, DyddParams};
+use dydd_da::domain::{DriftLayout, ObsLayout};
+use dydd_da::domain2d::{DriftLayout2d, ObsLayout2d};
+use dydd_da::dydd::{balance, balance_ratio, rebalance_partition2d, DyddParams, RebalancePolicy};
 use dydd_da::graph::Graph;
+use dydd_da::harness::cycles::render_cycle_table;
 use dydd_da::harness::{
-    all_tables, render_table, run_experiment, run_experiment2d, scenarios, ExperimentReport,
-    TableId,
+    all_tables, render_table, run_cycles, run_cycles2d, run_experiment, run_experiment2d,
+    scenarios, ExperimentReport, TableId,
 };
 use dydd_da::runtime;
 use dydd_da::util::timer::fmt_secs;
@@ -30,6 +33,7 @@ fn main() -> ExitCode {
     let result = match args.first().map(String::as_str) {
         Some("info") => cmd_info(),
         Some("run") => cmd_run(&args[1..]),
+        Some("cycle") => cmd_cycle(&args[1..]),
         Some("dydd") => cmd_dydd(&args[1..]),
         Some("table") => cmd_table(&args[1..]),
         Some("bench-tables") => cmd_bench_tables(&args[1..]),
@@ -57,6 +61,10 @@ USAGE:
               [--dim 1|2] [--px PX] [--py PY]
               [--backend native|kf|pjrt] [--overlap S] [--mu MU]
               [--no-dydd] [--seed SEED] [--no-baseline]
+  dydd-da cycle [--config FILE] [--dim 1|2] [--n N] [--m M] [--p P]
+              [--px PX] [--py PY] [--cycles K]
+              [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
+              [--drift D] [--seed SEED] [--no-dydd] [--no-baseline]
   dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
   dydd-da dydd --dim 2 [--px PX] [--py PY] [--layout L2] [--n N] [--m M]
               [--seed SEED]
@@ -65,6 +73,8 @@ USAGE:
 
 1-D layouts: uniform | ramp | cluster | two_clusters | left_packed
 2-D layouts: uniform2d | gaussian_blob | diagonal_band | ring | quadrant
+drifts (1-D and 2-D): translating_blob | rotating_band | appearing_cluster
+                      | stationary:<layout>
 ";
 
 /// Tiny flag parser: `--key value` and boolean `--flag`.
@@ -265,6 +275,115 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         );
     }
     print_solve_report(&rep);
+    Ok(())
+}
+
+/// Multi-cycle assimilation: drifting observations, per-cycle DyDD policy
+/// decisions, one persistent worker pool.
+fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let mut cfg = match f.get("--config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    let config_dim = cfg.dim;
+    if let Some(d) = f.parsed::<usize>("--dim")? {
+        cfg.dim = d;
+    }
+    // Same guard as `run`: a 1-D config's n is not a 2-D grid axis.
+    if cfg.dim == 2 && f.get("--n").is_none() && config_dim != 2 {
+        cfg.n = 48;
+    }
+    if let Some(n) = f.parsed::<usize>("--n")? {
+        cfg.n = n;
+    }
+    if let Some(m) = f.parsed::<usize>("--m")? {
+        cfg.m = m;
+    }
+    if let Some(p) = f.parsed::<usize>("--p")? {
+        cfg.p = p;
+    }
+    if let Some(px) = f.parsed::<usize>("--px")? {
+        cfg.px = px;
+    }
+    if let Some(py) = f.parsed::<usize>("--py")? {
+        cfg.py = py;
+    }
+    if let Some(k) = f.parsed::<usize>("--cycles")? {
+        cfg.cycles = k;
+    }
+    if let Some(s) = f.get("--policy") {
+        cfg.cycle_policy = RebalancePolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy {s:?}"))?;
+    }
+    if let Some(tau) = f.parsed::<f64>("--tau")? {
+        anyhow::ensure!(
+            matches!(cfg.cycle_policy, RebalancePolicy::Threshold(_)),
+            "--tau only applies to --policy threshold"
+        );
+        cfg.cycle_policy = cfg.cycle_policy.with_tau(tau);
+    }
+    if let Some(s) = f.get("--drift") {
+        if cfg.dim == 2 {
+            cfg.drift2d = DriftLayout2d::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown 2-D drift layout {s:?}"))?;
+        } else {
+            cfg.drift = DriftLayout::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown 1-D drift layout {s:?}"))?;
+        }
+    }
+    if let Some(b) = f.get("--backend") {
+        cfg.backend =
+            SolverBackend::parse(b).ok_or_else(|| anyhow::anyhow!("unknown backend {b:?}"))?;
+    }
+    if let Some(seed) = f.parsed::<u64>("--seed")? {
+        cfg.seed = seed;
+    }
+    if f.has("--no-dydd") {
+        cfg.dydd = false;
+    }
+    cfg.validate()?;
+    let with_baseline = !f.has("--no-baseline");
+
+    let drift_name = if cfg.dim == 2 { cfg.drift2d.name() } else { cfg.drift.name() };
+    // `--no-dydd` forces the Never policy inside the driver; print what
+    // will actually run, not the configured policy.
+    let effective = if cfg.dydd { cfg.cycle_policy } else { RebalancePolicy::Never };
+    println!(
+        "cycle: dim={} n={} m={} {} K={} policy={} drift={} seed={}",
+        cfg.dim,
+        cfg.n,
+        cfg.m,
+        if cfg.dim == 2 {
+            format!("grid={}x{}", cfg.px, cfg.py)
+        } else {
+            format!("p={}", cfg.p)
+        },
+        cfg.cycles,
+        effective.name(),
+        drift_name,
+        cfg.seed,
+    );
+    let rep = if cfg.dim == 2 {
+        run_cycles2d(&cfg, with_baseline)?
+    } else {
+        run_cycles(&cfg, with_baseline)?
+    };
+    print!("{}", render_cycle_table(&rep).render());
+    println!(
+        "summary: rebalances={}/{}  E_final={:.3}  E_mean={:.3}  E_worst={:.3}  \
+         moved={}  T_DyDD/(T_DyDD+T^p)={:.3}",
+        rep.rebalances(),
+        rep.records.len(),
+        rep.final_balance(),
+        rep.mean_balance(),
+        rep.worst_balance(),
+        rep.total_migration_volume(),
+        rep.rebalance_overhead_fraction(),
+    );
+    if !rep.all_converged() {
+        eprintln!("warning: at least one cycle did not reach the Schwarz tolerance");
+    }
     Ok(())
 }
 

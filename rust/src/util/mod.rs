@@ -4,10 +4,12 @@
 
 pub mod json;
 pub mod rng;
+pub mod stats;
 pub mod table;
 pub mod timer;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use stats::norm_quantile;
 pub use table::Table;
 pub use timer::{Stopwatch, TimingStats};

@@ -180,3 +180,132 @@ fn quick_tables_all_render() {
         assert!(!t.rows.is_empty(), "{id:?}");
     }
 }
+
+/// Acceptance scenario of the multi-cycle driver (1-D): on the
+/// translating-blob workload, `Threshold` keeps the end-of-run balance
+/// within 10% of `EveryCycle` while triggering strictly fewer rebalances,
+/// and `Never` ends measurably worse.
+#[test]
+fn cycle_policies_acceptance_drifting_blob_1d() {
+    use dydd_da::domain::DriftLayout;
+    use dydd_da::dydd::RebalancePolicy;
+    use dydd_da::harness::cycles::check_policy_acceptance;
+    use dydd_da::harness::run_cycles;
+
+    let run = |policy: RebalancePolicy| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 512;
+        cfg.m = 800;
+        cfg.p = 4;
+        cfg.cycles = 8;
+        cfg.seed = 42;
+        cfg.drift = DriftLayout::TranslatingBlob;
+        cfg.cycle_policy = policy;
+        run_cycles(&cfg, false).unwrap()
+    };
+    let nvr = run(RebalancePolicy::Never);
+    let evr = run(RebalancePolicy::EveryCycle);
+    let thr = run(RebalancePolicy::Threshold(0.9));
+
+    check_policy_acceptance(&nvr, &evr, &thr).unwrap();
+    assert_eq!(nvr.rebalances(), 0);
+    assert_eq!(evr.rebalances(), 8);
+    assert!(thr.rebalances() >= 2, "drift must re-trigger DyDD at least once after cycle 0");
+    // The static partition's balance is visibly degraded in every cycle's
+    // row, while the threshold policy holds balance at or above τ.
+    assert!(nvr.worst_balance() < 0.5);
+    assert!(thr.records.iter().all(|r| r.balance_after >= 0.85), "{:?}", thr.records);
+}
+
+/// The same acceptance scenario on the 2-D box grid.
+#[test]
+fn cycle_policies_acceptance_drifting_blob_2d() {
+    use dydd_da::domain2d::DriftLayout2d;
+    use dydd_da::dydd::RebalancePolicy;
+    use dydd_da::harness::cycles::check_policy_acceptance;
+    use dydd_da::harness::run_cycles2d;
+
+    let run = |policy: RebalancePolicy| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 2;
+        cfg.n = 48;
+        cfg.m = 800;
+        cfg.px = 2;
+        cfg.py = 2;
+        cfg.cycles = 8;
+        cfg.seed = 42;
+        cfg.drift2d = DriftLayout2d::TranslatingBlob;
+        cfg.cycle_policy = policy;
+        run_cycles2d(&cfg, false).unwrap()
+    };
+    let nvr = run(RebalancePolicy::Never);
+    let evr = run(RebalancePolicy::EveryCycle);
+    let thr = run(RebalancePolicy::Threshold(0.9));
+
+    check_policy_acceptance(&nvr, &evr, &thr).unwrap();
+    assert_eq!(nvr.rebalances(), 0);
+    assert_eq!(evr.rebalances(), 8);
+    assert!(thr.rebalances() >= 2);
+}
+
+/// Satellite regression: the PinT 4D-VAR Schwarz solver agrees with the
+/// sequential KF run over the stacked space-time system to 1e-9, including
+/// on a DyDD-rebalanced time-window partition (`window_partition` balances
+/// per-window observation counts through the abstract DyDD machinery).
+#[test]
+fn pint_4d_schwarz_matches_sequential_kf_on_stacked_trajectory() {
+    use dydd_da::cls::StateOp as Op;
+    use dydd_da::ddkf::{NativeLocalSolver, SchwarzOptions};
+    use dydd_da::domain::ObservationSet;
+    use dydd_da::fourd::{schwarz_solve_4d, window_census, window_partition, TrajectoryProblem};
+    use dydd_da::kf::kf_solve_rows;
+
+    let n_space = 10usize;
+    let steps = 6usize;
+    // Heavily skewed per-level counts: DyDD must move window boundaries.
+    let counts = [40usize, 2, 2, 2, 2, 40];
+    let mesh = Mesh1d::new(n_space);
+    let mut rng = Rng::new(11);
+    let obs: Vec<ObservationSet> = counts
+        .iter()
+        .map(|&m| generators::generate(ObsLayout::Uniform, m, &mut rng))
+        .collect();
+    let bg = (0..n_space)
+        .map(|j| generators::field(j as f64 / (n_space - 1) as f64))
+        .collect();
+    let prob = TrajectoryProblem::new(
+        mesh,
+        Op::Tridiag { main: 0.9, off: 0.05 },
+        steps,
+        bg,
+        vec![4.0; n_space],
+        5.0,
+        obs,
+    );
+
+    // Sequential KF over the stacked trajectory system: prior = background
+    // + model-constraint rows, then one rank-1 update per observation.
+    let m_obs: usize = counts.iter().sum();
+    let kf = kf_solve_rows(prob.n(), prob.n(), m_obs, |r| prob.sparse_row(r));
+    let want = prob.solve_reference();
+    let err_kf = dist2(&kf.x, &want);
+    assert!(err_kf < 1e-9, "stacked KF vs 4D-VAR reference: {err_kf:e}");
+
+    for windows in [2usize, 3] {
+        let (part, targets) = window_partition(&prob, windows).unwrap();
+        // Window bounds stay level-aligned and the census is balanced
+        // against the uniform split.
+        for &b in part.bounds() {
+            assert_eq!(b % n_space, 0, "windows={windows}: bound inside a level");
+        }
+        let census = window_census(&prob, &part);
+        assert_eq!(census.iter().sum::<usize>(), m_obs);
+        assert_eq!(targets.iter().sum::<usize>(), m_obs);
+        let opts = SchwarzOptions { max_iters: 5000, ..SchwarzOptions::default() };
+        let (x, _iters, converged) =
+            schwarz_solve_4d(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+        assert!(converged, "windows={windows}");
+        let err = dist2(&x, &kf.x);
+        assert!(err < 1e-9, "windows={windows}: PinT Schwarz vs sequential KF = {err:e}");
+    }
+}

@@ -526,3 +526,227 @@ fn prop_schwarz_fixed_point_is_global_solution() {
         assert!(err < 1e-8, "seed {seed}: {err:e}");
     }
 }
+
+/// Satellite property: with `RebalancePolicy::Never` and a stationary
+/// generator, a K-cycle run is *identical* (bitwise) to K independent
+/// single-cycle runs chained by hand — the driver adds orchestration, not
+/// arithmetic. Checked for all 1-D layouts × partition sizes × seeds.
+#[test]
+fn prop_never_policy_cycles_equal_hand_chained_runs_1d() {
+    use dydd_da::config::ExperimentConfig;
+    use dydd_da::coordinator::run_parallel;
+    use dydd_da::domain::DriftLayout;
+    use dydd_da::dydd::RebalancePolicy;
+    use dydd_da::harness::cycles::cycle_observations;
+    use dydd_da::harness::run_cycles;
+
+    let layouts = [
+        ObsLayout::Uniform,
+        ObsLayout::Ramp,
+        ObsLayout::Cluster,
+        ObsLayout::TwoClusters,
+        ObsLayout::LeftPacked,
+    ];
+    for layout in layouts {
+        for seed in [3u64, 91] {
+            let (n, m, k_cycles) = (96usize, 70usize, 3usize);
+            let p = if seed % 2 == 0 { 4 } else { 2 };
+            let mut cfg = ExperimentConfig::default();
+            cfg.n = n;
+            cfg.m = m;
+            cfg.p = p;
+            cfg.seed = seed;
+            cfg.cycles = k_cycles;
+            cfg.drift = DriftLayout::Stationary(layout);
+            cfg.cycle_policy = RebalancePolicy::Never;
+            let rep = run_cycles(&cfg, false).unwrap();
+            assert!(rep.all_converged(), "{layout:?} seed {seed}");
+
+            // Chain K single-cycle solves by hand: same partition, same
+            // per-cycle observations, analysis fed forward as background.
+            let mesh = Mesh1d::new(n);
+            let part = Partition::uniform(n, p);
+            let mut y0: Vec<f64> = (0..n)
+                .map(|j| generators::field(j as f64 / (n - 1) as f64))
+                .collect();
+            let mut x_hand = y0.clone();
+            for k in 0..k_cycles {
+                let obs =
+                    cycle_observations(DriftLayout::Stationary(layout), m, seed, k, k_cycles);
+                let prob = ClsProblem::new(
+                    mesh.clone(),
+                    cfg.state_op.build(),
+                    y0.clone(),
+                    vec![cfg.state_weight; n],
+                    obs,
+                );
+                let par = run_parallel(&prob, &part, &cfg.run_config()).unwrap();
+                assert!(par.converged, "{layout:?} seed {seed} cycle {k}");
+                x_hand = par.x;
+                y0 = x_hand.clone();
+            }
+            assert_eq!(
+                rep.x, x_hand,
+                "{layout:?} seed {seed}: K-cycle driver deviates from hand-chained runs"
+            );
+        }
+    }
+}
+
+/// 2-D counterpart: `Never` + stationary ≡ hand-chained box-grid runs,
+/// for all 2-D layouts × seeds.
+#[test]
+fn prop_never_policy_cycles_equal_hand_chained_runs_2d() {
+    use dydd_da::cls::{ClsProblem2d, StateOp2d};
+    use dydd_da::config::ExperimentConfig;
+    use dydd_da::coordinator::run_parallel2d;
+    use dydd_da::domain2d::DriftLayout2d;
+    use dydd_da::dydd::RebalancePolicy;
+    use dydd_da::harness::cycles::cycle_observations2d;
+    use dydd_da::harness::run_cycles2d;
+
+    for layout in ObsLayout2d::ALL {
+        for seed in [5u64, 77] {
+            let (n, m, k_cycles) = (12usize, 60usize, 2usize);
+            let mut cfg = ExperimentConfig::default();
+            cfg.dim = 2;
+            cfg.n = n;
+            cfg.m = m;
+            cfg.px = 2;
+            cfg.py = 2;
+            cfg.seed = seed;
+            cfg.cycles = k_cycles;
+            cfg.drift2d = DriftLayout2d::Stationary(layout);
+            cfg.cycle_policy = RebalancePolicy::Never;
+            let rep = run_cycles2d(&cfg, false).unwrap();
+            assert!(rep.all_converged(), "{layout:?} seed {seed}");
+
+            let mesh = Mesh2d::square(n);
+            let part = BoxPartition::uniform(n, n, 2, 2);
+            let mut y0 = gen2d::background_field(&mesh);
+            let mut x_hand = y0.clone();
+            for k in 0..k_cycles {
+                let obs = cycle_observations2d(
+                    DriftLayout2d::Stationary(layout),
+                    m,
+                    seed,
+                    k,
+                    k_cycles,
+                );
+                let prob = ClsProblem2d::new(
+                    mesh.clone(),
+                    StateOp2d::FivePoint { main: 1.0, off: 0.15 },
+                    y0.clone(),
+                    vec![cfg.state_weight; mesh.n()],
+                    obs,
+                );
+                let par = run_parallel2d(&prob, &part, &cfg.run_config()).unwrap();
+                assert!(par.converged, "{layout:?} seed {seed} cycle {k}");
+                x_hand = par.x;
+                y0 = x_hand.clone();
+            }
+            assert_eq!(
+                rep.x, x_hand,
+                "{layout:?} seed {seed}: 2-D K-cycle driver deviates from hand-chained runs"
+            );
+        }
+    }
+}
+
+/// Satellite property: every per-cycle rebalance of the cycle driver
+/// conserves the observation count, keeps the DD-repair invariants, and
+/// its migration schedule replays exactly to the scheduled census — for
+/// all drifting generators × seeds (1-D).
+#[test]
+fn prop_cycle_rebalances_conserve_and_replay_1d() {
+    use dydd_da::config::ExperimentConfig;
+    use dydd_da::domain::DriftLayout;
+    use dydd_da::dydd::RebalancePolicy;
+    use dydd_da::harness::run_cycles;
+
+    for drift in DriftLayout::ALL_MOVING {
+        for seed in [1u64, 29, 404] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.n = 256;
+            cfg.m = 240;
+            cfg.p = 4;
+            cfg.seed = seed;
+            cfg.cycles = 4;
+            cfg.drift = drift;
+            cfg.cycle_policy = RebalancePolicy::EveryCycle;
+            let rep = run_cycles(&cfg, false).unwrap();
+            let tag = format!("{drift:?} seed {seed}");
+            assert_eq!(rep.rebalances(), 4, "{tag}");
+            for r in &rep.records {
+                let out = r.dydd.as_ref().expect("every-cycle policy must rebalance");
+                // Conservation through repair, scheduling and realization.
+                assert_eq!(out.dydd.l_in.iter().sum::<usize>(), cfg.m, "{tag}");
+                assert_eq!(out.dydd.l_fin.iter().sum::<usize>(), cfg.m, "{tag}");
+                assert_eq!(out.census_after.iter().sum::<usize>(), cfg.m, "{tag}");
+                // DD (repair) invariant: an empty subdomain in l_in means
+                // the repair step ran and recorded l_r.
+                if out.dydd.l_in.iter().any(|&l| l == 0) {
+                    let l_r = out.dydd.l_r.as_ref().expect("repair must run on empties");
+                    assert_eq!(l_r.iter().sum::<usize>(), cfg.m, "{tag}");
+                }
+                // Schedule replay reproduces the final census exactly.
+                let replayed = replay_schedule(&out.dydd);
+                let want: Vec<i64> = out.dydd.l_fin.iter().map(|&l| l as i64).collect();
+                assert_eq!(replayed, want, "{tag} cycle {}", r.cycle);
+                // The partition stays a valid decomposition.
+                assert_eq!(out.partition.p(), cfg.p, "{tag}");
+                assert_eq!(out.partition.bounds()[0], 0, "{tag}");
+                assert_eq!(*out.partition.bounds().last().unwrap(), cfg.n, "{tag}");
+                assert_eq!(r.migration_volume, out.dydd.migration_volume(), "{tag}");
+            }
+        }
+    }
+}
+
+/// 2-D counterpart on the box grid, plus the edge-locality invariant
+/// (migrations only cross 4-connected box-grid edges).
+#[test]
+fn prop_cycle_rebalances_conserve_and_replay_2d() {
+    use dydd_da::config::ExperimentConfig;
+    use dydd_da::domain2d::DriftLayout2d;
+    use dydd_da::dydd::RebalancePolicy;
+    use dydd_da::harness::run_cycles2d;
+
+    for drift in DriftLayout2d::ALL_MOVING {
+        for seed in [13u64, 88] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.dim = 2;
+            cfg.n = 16;
+            cfg.m = 160;
+            cfg.px = 2;
+            cfg.py = 2;
+            cfg.seed = seed;
+            cfg.cycles = 3;
+            cfg.drift2d = drift;
+            cfg.cycle_policy = RebalancePolicy::EveryCycle;
+            let rep = run_cycles2d(&cfg, false).unwrap();
+            let tag = format!("{drift:?} seed {seed}");
+            assert_eq!(rep.rebalances(), 3, "{tag}");
+            let grid_graph = BoxPartition::uniform(16, 16, 2, 2).induced_graph();
+            for r in &rep.records {
+                let out = r.dydd2d.as_ref().expect("every-cycle policy must rebalance");
+                assert_eq!(out.dydd.l_in.iter().sum::<usize>(), cfg.m, "{tag}");
+                assert_eq!(out.dydd.l_fin.iter().sum::<usize>(), cfg.m, "{tag}");
+                assert_eq!(out.census_after.iter().sum::<usize>(), cfg.m, "{tag}");
+                if out.dydd.l_in.iter().any(|&l| l == 0) {
+                    assert!(out.dydd.l_r.is_some(), "{tag}: repair must run on empties");
+                }
+                let replayed = replay_schedule(&out.dydd);
+                let want: Vec<i64> = out.dydd.l_fin.iter().map(|&l| l as i64).collect();
+                assert_eq!(replayed, want, "{tag} cycle {}", r.cycle);
+                for (i, j, _) in &out.dydd.migrations {
+                    assert!(
+                        grid_graph.has_edge(*i, *j),
+                        "{tag}: migration across non-edge ({i},{j})"
+                    );
+                }
+                assert_eq!(out.partition.p(), 4, "{tag}");
+            }
+        }
+    }
+}
