@@ -6,15 +6,20 @@
 //!  A2. Repair (DD step) on/off for empty-subdomain scenarios.
 //!  A3. Sweep order: multiplicative vs red-black (iterations to converge).
 //!  A4. Overlap/μ: iterations and solution bias vs (s, μ).
-//!  A5. Backend: native vs local-KF vs PJRT artifacts on one problem.
+//!  A5. Backend: native vs local-KF vs CG vs PJRT artifacts on one problem.
 //!  A6. Rebalance policy: never / every-cycle / threshold on the K-cycle
 //!      drifting-blob scenario (also emits `BENCH_cycles.json`).
+//!  A7. Sparse CG vs dense local assemble+solve over a 2-D grid sweep
+//!      (emits `BENCH_sparse.json`).
 
-use dydd_da::cls::{ClsProblem, StateOp};
+use dydd_da::cls::{ClsProblem, ClsProblem2d, StateOp, StateOp2d};
 use dydd_da::config::ExperimentConfig;
 use dydd_da::coordinator::{run_parallel, RunConfig, SolverBackend};
-use dydd_da::ddkf::{schwarz_solve, NativeLocalSolver, SchwarzOptions, SweepOrder};
+use dydd_da::ddkf::{
+    schwarz_solve, LocalSolver, NativeLocalSolver, SchwarzOptions, SparseCg, SweepOrder,
+};
 use dydd_da::domain::{generators, DriftLayout, Mesh1d, ObsLayout, Partition};
+use dydd_da::domain2d::{generators as gen2d, BoxPartition, Mesh2d, ObsLayout2d};
 use dydd_da::dydd::{balance_ratio, rebalance_partition, DyddParams, RebalancePolicy};
 use dydd_da::harness::run_cycles;
 use dydd_da::linalg::mat::dist2;
@@ -132,7 +137,7 @@ fn main() -> anyhow::Result<()> {
     let prob5 = problem(256, 180, ObsLayout::Uniform, 34);
     let want5 = prob5.solve_reference();
     let part5 = Partition::uniform(256, 4);
-    let mut backends = vec![SolverBackend::Native, SolverBackend::Kf];
+    let mut backends = vec![SolverBackend::Native, SolverBackend::Kf, SolverBackend::Cg];
     if runtime::artifacts_available(&runtime::default_artifacts_dir()) {
         backends.push(SolverBackend::Pjrt);
     }
@@ -210,6 +215,91 @@ fn main() -> anyhow::Result<()> {
     doc.insert("scenario".into(), Json::Obj(scenario));
     doc.insert("policies".into(), Json::Arr(policy_rows));
     let path = "BENCH_cycles.json";
+    std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
+    println!("wrote {path}");
+
+    // ---------- A7: sparse CG vs dense local assemble+solve ----------
+    let mut t = Table::new(
+        "A7 — local backend scaling on 2-D blocks (2x2 boxes, gaussian_blob, \
+         assemble + 10 solves)",
+        &["grid", "n_loc", "m_loc", "dense (s)", "cg (s)", "speedup", "err"],
+    );
+    const SOLVES: usize = 10;
+    let mut sparse_rows: Vec<Json> = Vec::new();
+    for n in [32usize, 64, 96, 128] {
+        let mesh = Mesh2d::square(n);
+        let mut rng = Rng::new(77);
+        let obs = gen2d::generate(ObsLayout2d::GaussianBlob, (n * n) / 8, &mut rng);
+        let y0 = gen2d::background_field(&mesh);
+        let nn = mesh.n();
+        let prob = ClsProblem2d::new(
+            mesh,
+            StateOp2d::FivePoint { main: 1.0, off: 0.12 },
+            y0,
+            vec![4.0; nn],
+            obs,
+        );
+        let part = BoxPartition::uniform(n, n, 2, 2);
+        let blk = prob.local_block(&part, 0, 0);
+        let reg = vec![0.0; blk.n_loc()];
+        let zero = vec![0.0; blk.n_loc()];
+        let be = blk.b_eff(|_| 0.0);
+        // Distinct rhs per timed solve (both backends see the same
+        // sequence): CG warm-starts from the previous solution — its
+        // production behaviour — so an identical repeated rhs would make
+        // solves 2..K near-free and inflate the reported speedup.
+        let bes: Vec<Vec<f64>> = (0..SOLVES)
+            .map(|k| {
+                let mut r = Rng::new(1000 + k as u64);
+                be.iter().map(|v| v + 0.01 * r.gaussian()).collect()
+            })
+            .collect();
+
+        let mut native = NativeLocalSolver;
+        let t0 = std::time::Instant::now();
+        let fd = native.assemble(&blk, &reg)?;
+        for bek in bes.iter().take(SOLVES - 1) {
+            native.solve(&blk, &fd, bek, &zero)?;
+        }
+        let x_dense = native.solve(&blk, &fd, &bes[SOLVES - 1], &zero)?;
+        let t_dense = t0.elapsed().as_secs_f64();
+
+        let mut cg = SparseCg::default();
+        let t0 = std::time::Instant::now();
+        let fc = cg.assemble(&blk, &reg)?;
+        for bek in bes.iter().take(SOLVES - 1) {
+            cg.solve(&blk, &fc, bek, &zero)?;
+        }
+        let x_cg = cg.solve(&blk, &fc, &bes[SOLVES - 1], &zero)?;
+        let t_cg = t0.elapsed().as_secs_f64();
+
+        let err = dist2(&x_dense, &x_cg);
+        let speedup = t_dense / t_cg.max(1e-9);
+        t.row(&[
+            format!("{n}x{n}"),
+            blk.n_loc().to_string(),
+            blk.m_loc().to_string(),
+            format!("{t_dense:.3}"),
+            format!("{t_cg:.3}"),
+            format!("{speedup:.1}x"),
+            format!("{err:.1e}"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("grid".into(), Json::Num(n as f64));
+        row.insert("n_loc".into(), Json::Num(blk.n_loc() as f64));
+        row.insert("m_loc".into(), Json::Num(blk.m_loc() as f64));
+        row.insert("t_dense_s".into(), Json::Num(t_dense));
+        row.insert("t_cg_s".into(), Json::Num(t_cg));
+        row.insert("speedup".into(), Json::Num(speedup));
+        row.insert("err_dense_vs_cg".into(), Json::Num(err));
+        sparse_rows.push(Json::Obj(row));
+    }
+    println!("{}", t.render());
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("sparse".into()));
+    doc.insert("solves_per_backend".into(), Json::Num(SOLVES as f64));
+    doc.insert("rows".into(), Json::Arr(sparse_rows));
+    let path = "BENCH_sparse.json";
     std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
     println!("wrote {path}");
 

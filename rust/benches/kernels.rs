@@ -4,7 +4,7 @@
 //! log in EXPERIMENTS.md.
 
 use dydd_da::cls::{ClsProblem, StateOp};
-use dydd_da::ddkf::{LocalSolver, NativeLocalSolver};
+use dydd_da::ddkf::{LocalSolver, NativeLocalSolver, SparseCg};
 use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
 use dydd_da::graph::{laplacian_solve, Graph};
 use dydd_da::kf::sequential::rank1_update;
@@ -27,8 +27,61 @@ fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
     );
 }
 
+/// Pre-rewrite reference kernel: plain i-j-k matmul (strided B columns).
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut acc = 0.0;
+            for k in 0..a.cols() {
+                acc += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = acc;
+        }
+    }
+    c
+}
+
+/// Pre-rewrite reference kernel: full (both-triangle) gram accumulation.
+fn naive_weighted_gram(a: &Mat, d: &[f64]) -> Mat {
+    let n = a.cols();
+    let mut g = Mat::zeros(n, n);
+    for i in 0..a.rows() {
+        let di = d[i];
+        for x in 0..n {
+            for y in 0..n {
+                g[(x, y)] += di * a[(i, x)] * a[(i, y)];
+            }
+        }
+    }
+    g
+}
+
 fn main() {
     let mut rng = Rng::new(1);
+
+    // Regression guard for the matmul / weighted_gram inner-loop rewrite:
+    // on small sizes the optimized kernels must match the naive reference
+    // to roundoff and not be slower (watch the printed pairs).
+    println!("-- cache-layout guard: optimized vs naive (small sizes) --");
+    for n in [32usize, 64, 128] {
+        let a = Mat::gaussian(2 * n, n, &mut rng);
+        let b = Mat::gaussian(n, n, &mut rng);
+        let d: Vec<f64> = (0..2 * n).map(|_| rng.uniform() + 0.5).collect();
+        let mut diff = a.matmul(&b);
+        diff.scale(-1.0);
+        diff.add_assign(&naive_matmul(&a, &b));
+        assert!(diff.max_abs() < 1e-10, "matmul rewrite mismatch at n={n}");
+        let mut gdiff = a.weighted_gram(&d);
+        gdiff.scale(-1.0);
+        gdiff.add_assign(&naive_weighted_gram(&a, &d));
+        assert!(gdiff.max_abs() < 1e-10, "gram rewrite mismatch at n={n}");
+        bench(&format!("matmul blocked ikj      n={n}"), 10, || a.matmul(&b));
+        bench(&format!("matmul naive ijk        n={n}"), 10, || naive_matmul(&a, &b));
+        bench(&format!("weighted_gram sym       n={n}"), 10, || a.weighted_gram(&d));
+        bench(&format!("weighted_gram naive     n={n}"), 10, || naive_weighted_gram(&a, &d));
+    }
+    println!();
 
     println!("-- linalg substrate --");
     for n in [128usize, 256, 512] {
@@ -96,6 +149,25 @@ fn main() {
         let f = native.assemble(&blk, &reg).unwrap();
         bench(&format!("native solve    ({},{})", blk.m_loc(), blk.n_loc()), 10, || {
             native.solve(&blk, &f, &be, &zero).unwrap()
+        });
+
+        let mut cg = SparseCg::default();
+        bench(&format!("cg     assemble ({},{})", blk.m_loc(), blk.n_loc()), 5, || {
+            cg.assemble(&blk, &reg).unwrap()
+        });
+        let fc = cg.assemble(&blk, &reg).unwrap();
+        // Rotate the rhs between calls: CG warm-starts from its previous
+        // solution, so repeating one rhs would time a no-op solve.
+        let bes: Vec<Vec<f64>> = (0..4)
+            .map(|k| {
+                let mut r = Rng::new(900 + k as u64);
+                be.iter().map(|v| v + 0.01 * r.gaussian()).collect()
+            })
+            .collect();
+        let mut k = 0usize;
+        bench(&format!("cg     solve    ({},{})", blk.m_loc(), blk.n_loc()), 10, || {
+            k += 1;
+            cg.solve(&blk, &fc, &bes[k % bes.len()], &zero).unwrap()
         });
 
         if have_artifacts {

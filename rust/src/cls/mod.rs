@@ -8,11 +8,18 @@
 //!
 //! with weights R = diag(R0, R1) and solution
 //! x̂ = (AᵀRA)⁻¹ AᵀRb (eqs. 18-19).
+//!
+//! Every problem family (1-D, 2-D box grid, 4-D trajectory) exposes its
+//! rows through the shared [`RowProvider`] sparse-row contract, and local
+//! blocks keep the restricted rows in CSR form ([`LocalBlock::a`]) so the
+//! sparsity survives from problem definition to worker solve.
 
 mod problem;
 mod problem2d;
+pub(crate) mod provider;
 mod state_op;
 
 pub use problem::{ClsProblem, LocalBlock};
 pub use problem2d::ClsProblem2d;
+pub use provider::{RowProvider, SparseRow};
 pub use state_op::{StateOp, StateOp2d};

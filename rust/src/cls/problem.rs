@@ -1,9 +1,10 @@
 //! CLS problem assembly and local-block extraction (the DD-CLS restriction
 //! A|_{I_i} of Definition 3 / eq. 23, exploiting row sparsity).
 
+use super::provider::{restrict_rows, RowProvider, SparseRow};
 use super::state_op::StateOp;
 use crate::domain::{Mesh1d, ObservationSet, Partition};
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::{CsrMatrix, Mat};
 
 /// A full CLS instance: state system (H0, y0, w0) + observations.
 ///
@@ -66,30 +67,17 @@ impl ClsProblem {
         }
     }
 
-    /// Dense (A, d, b) — reference/oracle paths only.
+    /// Dense (A, d, b) — reference/oracle paths only (shared
+    /// [`RowProvider`] implementation).
     pub fn dense(&self) -> (Mat, Vec<f64>, Vec<f64>) {
-        let (m, n) = (self.m_total(), self.n());
-        let mut a = Mat::zeros(m, n);
-        let mut d = vec![0.0; m];
-        let mut b = vec![0.0; m];
-        for r in 0..m {
-            let (cols, w, y) = self.sparse_row(r);
-            for (j, v) in cols {
-                a[(r, j)] = v;
-            }
-            d[r] = w;
-            b[r] = y;
-        }
-        (a, d, b)
+        RowProvider::dense(self)
     }
 
     /// Global normal-equations solution x̂ = (AᵀRA)⁻¹AᵀRb (eq. 19) —
-    /// the reference every decomposed path is compared against.
+    /// the reference every decomposed path is compared against (shared
+    /// [`RowProvider`] implementation).
     pub fn solve_reference(&self) -> Vec<f64> {
-        let (a, d, b) = self.dense();
-        let g = a.weighted_gram(&d);
-        let rhs = a.at_db(&d, &b);
-        Cholesky::new(&g).expect("CLS normal matrix must be SPD").solve(&rhs)
+        RowProvider::solve_reference(self)
     }
 
     /// Extract the local block for subdomain `i` of `part`, extended by
@@ -128,35 +116,22 @@ impl ClsProblem {
     }
 }
 
-/// Restrict sparse rows to an explicit (strictly increasing) column set:
-/// returns the dense local matrix, weights, data, and halo couplings for
-/// every coefficient at a column outside the set. Shared by the 1-D
-/// interval and 2-D box extractions.
-pub(crate) fn restrict_rows(
-    rows: &[usize],
-    cols: &[usize],
-    sparse_row: impl Fn(usize) -> (Vec<(usize, f64)>, f64, f64),
-) -> (Mat, Vec<f64>, Vec<f64>, Vec<(usize, usize, f64)>) {
-    let (m_loc, nloc) = (rows.len(), cols.len());
-    let mut a = Mat::zeros(m_loc, nloc);
-    let mut d = vec![0.0; m_loc];
-    let mut b = vec![0.0; m_loc];
-    let mut halo: Vec<(usize, usize, f64)> = Vec::new();
-    for (r_loc, &r) in rows.iter().enumerate() {
-        let (row, w, y) = sparse_row(r);
-        d[r_loc] = w;
-        b[r_loc] = y;
-        for (j, v) in row {
-            if v == 0.0 {
-                continue;
-            }
-            match cols.binary_search(&j) {
-                Ok(c) => a[(r_loc, c)] = v,
-                Err(_) => halo.push((r_loc, j, v)),
-            }
-        }
+impl RowProvider for ClsProblem {
+    fn num_cols(&self) -> usize {
+        self.n()
     }
-    (a, d, b, halo)
+
+    fn num_rows(&self) -> usize {
+        self.m_total()
+    }
+
+    fn provider_row(&self, r: usize) -> SparseRow {
+        self.sparse_row(r)
+    }
+
+    fn kind(&self) -> &'static str {
+        "CLS"
+    }
 }
 
 /// The restriction of a CLS system to one subdomain's columns.
@@ -173,8 +148,11 @@ pub struct LocalBlock {
     /// owned[c]: local column c lies in the subdomain's own region (not
     /// in the overlap extension into a neighbour).
     pub owned: Vec<bool>,
-    /// m_loc x n_loc restricted matrix A|_{I_i}.
-    pub a: Mat,
+    /// m_loc x n_loc restricted matrix A|_{I_i}, kept in CSR form so the
+    /// problem-level sparsity survives all the way into the worker solve;
+    /// dense consumers derive a [`Mat`] on demand via
+    /// [`LocalBlock::dense_a`].
+    pub a: CsrMatrix,
     /// Row weights (R diagonal).
     pub d: Vec<f64>,
     /// Row data b.
@@ -201,6 +179,13 @@ impl LocalBlock {
 
     pub fn m_loc(&self) -> usize {
         self.a.rows()
+    }
+
+    /// Dense materialization of the restricted matrix — oracle paths and
+    /// the artifact operand padding only; the native/CG solve paths stay
+    /// on the CSR form.
+    pub fn dense_a(&self) -> Mat {
+        self.a.to_dense()
     }
 
     /// Distinct global columns referenced by halo couplings — the values a
@@ -272,8 +257,8 @@ mod tests {
             }
             // Every local row must have at least one non-zero in-block coef.
             for r_loc in 0..blk.m_loc() {
-                let nz = (0..blk.n_loc()).any(|c| blk.a[(r_loc, c)] != 0.0);
-                assert!(nz, "row {r_loc} of block {i} is all-zero");
+                let (cols, _) = blk.a.row(r_loc);
+                assert!(!cols.is_empty(), "row {r_loc} of block {i} is all-zero");
             }
         }
         assert!(covered.iter().all(|&c| c), "some row belongs to no block");

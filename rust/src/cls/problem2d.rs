@@ -4,10 +4,11 @@
 //! smoothness block (the overlapping restriction/extension operators of
 //! the space-time DD-KF line of work, arXiv:2312.00007 / 1807.07103).
 
-use super::problem::{restrict_rows, LocalBlock};
+use super::problem::LocalBlock;
+use super::provider::{restrict_rows, RowProvider, SparseRow};
 use super::state_op::StateOp2d;
 use crate::domain2d::{BoxPartition, Mesh2d, ObservationSet2d};
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::Mat;
 
 /// A full 2-D CLS instance: state system (H0, y0, w0) on the flattened
 /// `nx × ny` grid plus point observations with bilinear operator rows.
@@ -78,30 +79,17 @@ impl ClsProblem2d {
         }
     }
 
-    /// Dense (A, d, b) — reference/oracle paths only.
+    /// Dense (A, d, b) — reference/oracle paths only (shared
+    /// [`RowProvider`] implementation).
     pub fn dense(&self) -> (Mat, Vec<f64>, Vec<f64>) {
-        let (m, n) = (self.m_total(), self.n());
-        let mut a = Mat::zeros(m, n);
-        let mut d = vec![0.0; m];
-        let mut b = vec![0.0; m];
-        for r in 0..m {
-            let (cols, w, y) = self.sparse_row(r);
-            for (j, v) in cols {
-                a[(r, j)] = v;
-            }
-            d[r] = w;
-            b[r] = y;
-        }
-        (a, d, b)
+        RowProvider::dense(self)
     }
 
     /// Global normal-equations solution (eq. 19) — the reference every
-    /// decomposed 2-D path is compared against. O(n³) dense; small grids.
+    /// decomposed 2-D path is compared against. O(n³) dense; small grids
+    /// (shared [`RowProvider`] implementation).
     pub fn solve_reference(&self) -> Vec<f64> {
-        let (a, d, b) = self.dense();
-        let g = a.weighted_gram(&d);
-        let rhs = a.at_db(&d, &b);
-        Cholesky::new(&g).expect("2-D CLS normal matrix must be SPD").solve(&rhs)
+        RowProvider::solve_reference(self)
     }
 
     /// Extract the local block of box `b` of `part`, extended by an
@@ -158,6 +146,24 @@ impl ClsProblem2d {
     }
 }
 
+impl RowProvider for ClsProblem2d {
+    fn num_cols(&self) -> usize {
+        self.n()
+    }
+
+    fn num_rows(&self) -> usize {
+        self.m_total()
+    }
+
+    fn provider_row(&self, r: usize) -> SparseRow {
+        self.sparse_row(r)
+    }
+
+    fn kind(&self) -> &'static str {
+        "2-D CLS"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,8 +208,8 @@ mod tests {
             }
             // Every local row has at least one non-zero in-block coef.
             for r_loc in 0..blk.m_loc() {
-                let nz = (0..blk.n_loc()).any(|c| blk.a[(r_loc, c)] != 0.0);
-                assert!(nz, "row {r_loc} of block {b} is all-zero");
+                let (cols, _) = blk.a.row(r_loc);
+                assert!(!cols.is_empty(), "row {r_loc} of block {b} is all-zero");
             }
             // Provenance split: state rows first, obs rows after.
             assert!(blk.global_rows[..blk.obs_row_start].iter().all(|&r| r < p.n()));

@@ -24,6 +24,16 @@ impl StateOpConfig {
             StateOpConfig::Tridiag { main, off } => crate::cls::StateOp::Tridiag { main, off },
         }
     }
+
+    /// The 2-D analogue: `Tridiag` maps to the 5-point stencil with the
+    /// same coefficients. One mapping shared by the single-shot and
+    /// multi-cycle 2-D pipelines so they can never diverge.
+    pub fn build2d(&self) -> crate::cls::StateOp2d {
+        match *self {
+            StateOpConfig::Identity => crate::cls::StateOp2d::Identity,
+            StateOpConfig::Tridiag { main, off } => crate::cls::StateOp2d::FivePoint { main, off },
+        }
+    }
 }
 
 /// A full experiment description.
@@ -346,12 +356,7 @@ impl ExperimentConfig {
         let mut rng = crate::util::Rng::new(self.seed);
         let obs = gen2d::generate(self.layout2d, self.m, &mut rng);
         let y0 = gen2d::background_field(&mesh);
-        let state = match self.state_op {
-            StateOpConfig::Identity => crate::cls::StateOp2d::Identity,
-            StateOpConfig::Tridiag { main, off } => {
-                crate::cls::StateOp2d::FivePoint { main, off }
-            }
-        };
+        let state = self.state_op.build2d();
         let n = mesh.n();
         crate::cls::ClsProblem2d::new(mesh, state, y0, vec![self.state_weight; n], obs)
     }
@@ -398,6 +403,13 @@ dydd = true
     #[test]
     fn unknown_key_rejected() {
         assert!(ExperimentConfig::from_toml_str("nonsense = 1").is_err());
+    }
+
+    #[test]
+    fn cg_backend_parses_from_toml() {
+        let cfg = ExperimentConfig::from_toml_str("[run]\nbackend = \"cg\"").unwrap();
+        assert_eq!(cfg.backend, SolverBackend::Cg);
+        assert!(ExperimentConfig::from_toml_str("[run]\nbackend = \"lobpcg\"").is_err());
     }
 
     #[test]

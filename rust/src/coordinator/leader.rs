@@ -195,7 +195,7 @@ impl WorkerPool {
             let (reg, reg_cols) = overlap_reg(&blk, opts);
             // Geometry-only copy for leader-side write-back.
             let mut geom = blk.clone();
-            geom.a = crate::linalg::Mat::zeros(0, 0);
+            geom.a = crate::linalg::CsrMatrix::zeros(0, 0);
             geom.d.clear();
             geom.b.clear();
             geom.halo.clear();
@@ -380,6 +380,16 @@ mod tests {
         let cfg = RunConfig { backend: SolverBackend::Kf, ..RunConfig::default() };
         let out = run_parallel(&prob, &part, &cfg).unwrap();
         assert!(out.converged);
+        assert!(dist2(&out.x, &prob.solve_reference()) < 1e-8);
+    }
+
+    #[test]
+    fn cg_backend_agrees() {
+        let prob = problem(64, 40, 11);
+        let part = Partition::uniform(64, 4);
+        let cfg = RunConfig { backend: SolverBackend::Cg, ..RunConfig::default() };
+        let out = run_parallel(&prob, &part, &cfg).unwrap();
+        assert!(out.converged || out.stalled);
         assert!(dist2(&out.x, &prob.solve_reference()) < 1e-8);
     }
 

@@ -15,6 +15,10 @@ pub enum SolverBackend {
     /// engine's compile cache persists for the worker's lifetime, so
     /// pooled workers amortize compilation across epochs).
     Pjrt,
+    /// Jacobi-preconditioned CG on the regularized normal equations,
+    /// matrix-free over the block's CSR rows — no dense n×n allocation on
+    /// the local-solve path; the backend for large grids.
+    Cg,
 }
 
 impl SolverBackend {
@@ -23,6 +27,7 @@ impl SolverBackend {
             "native" => SolverBackend::Native,
             "kf" => SolverBackend::Kf,
             "pjrt" | "xla" => SolverBackend::Pjrt,
+            "cg" | "sparse" => SolverBackend::Cg,
             _ => return None,
         })
     }

@@ -9,6 +9,8 @@
 //!
 //! Backend selection ([`SolverBackend`]): `Native` (rust Cholesky — true
 //! SPMD scaling, the default for the speedup tables), `Kf` (local VAR-KF),
+//! `Cg` (matrix-free Jacobi-PCG over the CSR local blocks — the
+//! large-grid backend; no dense n×n allocation on the local-solve path),
 //! `Pjrt` (the AOT XLA artifacts; each worker thread owns its own PJRT
 //! engine because the `xla` client is thread-bound).
 

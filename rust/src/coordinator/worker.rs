@@ -6,7 +6,7 @@
 //! compilation is paid once per (bucket, worker), not once per epoch.
 
 use super::messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
-use crate::ddkf::{KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver};
+use crate::ddkf::{KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver, SparseCg};
 use crate::runtime::PjrtLocalSolver;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
@@ -28,6 +28,7 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
     let mut solver: Box<dyn LocalSolver> = match init.backend {
         SolverBackend::Native => Box::new(NativeLocalSolver),
         SolverBackend::Kf => Box::new(KfLocalSolver),
+        SolverBackend::Cg => Box::new(SparseCg::default()),
         SolverBackend::Pjrt => match PjrtLocalSolver::new(init.artifacts_dir.clone()) {
             Ok(s) => Box::new(s),
             Err(e) => {

@@ -1,8 +1,9 @@
 //! Weak-constraint 4D-VAR trajectory CLS assembly.
 
-use crate::cls::{LocalBlock, StateOp};
+use crate::cls::provider::restrict_rows_cached;
+use crate::cls::{LocalBlock, RowProvider, SparseRow, StateOp};
 use crate::domain::{Mesh1d, ObservationSet};
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::Mat;
 
 /// The space-time CLS of §3: unknowns u ∈ R^{nN}, column (l, i) ↦ l·n + i.
 #[derive(Debug, Clone)]
@@ -98,39 +99,25 @@ impl TrajectoryProblem {
         panic!("row {r} out of range");
     }
 
-    /// Dense (A, d, b) — oracle paths only (nN × nN gram!).
+    /// Dense (A, d, b) — oracle paths only (nN × nN gram!); shared
+    /// [`RowProvider`] implementation.
     pub fn dense(&self) -> (Mat, Vec<f64>, Vec<f64>) {
-        let (m, n) = (self.m_total(), self.n());
-        let mut a = Mat::zeros(m, n);
-        let mut d = vec![0.0; m];
-        let mut b = vec![0.0; m];
-        for r in 0..m {
-            let (cols, w, y) = self.sparse_row(r);
-            for (j, v) in cols {
-                a[(r, j)] = v;
-            }
-            d[r] = w;
-            b[r] = y;
-        }
-        (a, d, b)
+        RowProvider::dense(self)
     }
 
-    /// Global reference solution (Definition 2's minimizer).
+    /// Global reference solution (Definition 2's minimizer) — shared
+    /// [`RowProvider`] implementation.
     pub fn solve_reference(&self) -> Vec<f64> {
-        let (a, d, b) = self.dense();
-        let g = a.weighted_gram(&d);
-        let rhs = a.at_db(&d, &b);
-        Cholesky::new(&g).expect("4D-VAR normal matrix must be SPD").solve(&rhs)
+        RowProvider::solve_reference(self)
     }
 
     /// Extract the local block for the (time-window) column interval
     /// [lo, hi) — identical semantics to `ClsProblem::local_block`.
     pub fn local_block(&self, lo: usize, hi: usize) -> LocalBlock {
-        let nloc = hi - lo;
         // One sparse_row pass: keep each included row's coefficients so the
-        // restriction below does not recompute (and re-sort) them.
+        // shared restriction core does not recompute (and re-sort) them.
         let mut rows = Vec::new();
-        let mut a_rows: Vec<(Vec<(usize, f64)>, f64, f64)> = Vec::new();
+        let mut a_rows: Vec<SparseRow> = Vec::new();
         for r in 0..self.m_total() {
             let (cols, w, y) = self.sparse_row(r);
             if cols.iter().any(|&(c, _)| c >= lo && c < hi) {
@@ -142,25 +129,28 @@ impl TrajectoryProblem {
         // observation rows follow — rows is ascending, so the provenance
         // split is a partition point.
         let obs_row_start = rows.partition_point(|&r| r < self.n());
-        let m_loc = rows.len();
-        let mut a = Mat::zeros(m_loc, nloc);
-        let mut d = vec![0.0; m_loc];
-        let mut b = vec![0.0; m_loc];
-        let mut halo = Vec::new();
-        for (r_loc, (cols, w, y)) in a_rows.into_iter().enumerate() {
-            d[r_loc] = w;
-            b[r_loc] = y;
-            for (c, v) in cols {
-                if (lo..hi).contains(&c) {
-                    a[(r_loc, c - lo)] = v;
-                } else if v != 0.0 {
-                    halo.push((r_loc, c, v));
-                }
-            }
-        }
         let cols: Vec<usize> = (lo..hi).collect();
-        let owned = vec![true; nloc];
+        let (a, d, b, halo) = restrict_rows_cached(&a_rows, &cols);
+        let owned = vec![true; cols.len()];
         LocalBlock { cols, owned, a, d, b, halo, global_rows: rows, obs_row_start }
+    }
+}
+
+impl RowProvider for TrajectoryProblem {
+    fn num_cols(&self) -> usize {
+        self.n()
+    }
+
+    fn num_rows(&self) -> usize {
+        self.m_total()
+    }
+
+    fn provider_row(&self, r: usize) -> SparseRow {
+        self.sparse_row(r)
+    }
+
+    fn kind(&self) -> &'static str {
+        "4D-VAR"
     }
 }
 

@@ -325,12 +325,7 @@ pub fn run_cycles2d(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Resu
     let mut phases_cache: Option<(BoxPartition, Vec<Vec<usize>>)> = None;
     let mut records = Vec::with_capacity(cfg.cycles);
 
-    let state = match cfg.state_op {
-        crate::config::StateOpConfig::Identity => crate::cls::StateOp2d::Identity,
-        crate::config::StateOpConfig::Tridiag { main, off } => {
-            crate::cls::StateOp2d::FivePoint { main, off }
-        }
-    };
+    let state = cfg.state_op.build2d();
 
     for k in 0..cfg.cycles {
         let obs = cycle_observations2d(cfg.drift2d, cfg.m, cfg.seed, k, cfg.cycles);
@@ -345,8 +340,13 @@ pub fn run_cycles2d(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Resu
         let balance_after = balance_ratio(&obs.census(&mesh, &part));
         let migration_volume = dydd2d.as_ref().map(|g| g.dydd.migration_volume()).unwrap_or(0);
 
-        let prob =
-            ClsProblem2d::new(mesh.clone(), state, y0.clone(), vec![cfg.state_weight; n], obs);
+        let prob = ClsProblem2d::new(
+            mesh.clone(),
+            state.clone(),
+            y0.clone(),
+            vec![cfg.state_weight; n],
+            obs,
+        );
         let blocks = blocks2d(&prob, &part, cfg.schwarz.overlap);
         let phases = match &phases_cache {
             Some((cached_part, phases)) if *cached_part == part => phases.clone(),

@@ -181,7 +181,10 @@ impl Mat {
         y
     }
 
-    /// C = A * B, blocked i-k-j loop (cache-friendly for row-major).
+    /// C = A * B, blocked i-k-j loop: the inner loop walks row k of the
+    /// transposed operand B contiguously (row-major cache lines), with the
+    /// C row slice hoisted out of the k loop so the inner loop is a pure
+    /// zipped axpy with no per-k re-borrow or bounds checks.
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let mut c = Mat::zeros(self.rows, b.cols);
@@ -189,17 +192,16 @@ impl Mat {
         for k0 in (0..self.cols).step_by(BK) {
             let k1 = (k0 + BK).min(self.cols);
             for i in 0..self.rows {
-                let arow = self.row(i);
-                let crow_ptr = i * c.cols;
+                let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
                 for k in k0..k1 {
                     let aik = arow[k];
                     if aik == 0.0 {
                         continue;
                     }
-                    let brow = b.row(k);
-                    let crow = &mut c.data[crow_ptr..crow_ptr + b.cols];
-                    for j in 0..b.cols {
-                        crow[j] += aik * brow[j];
+                    let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+                    for (cj, bj) in crow.iter_mut().zip(brow) {
+                        *cj += aik * bj;
                     }
                 }
             }
@@ -207,7 +209,11 @@ impl Mat {
         c
     }
 
-    /// G = A^T diag(d) A — the weighted gram (native oracle for the L1 kernel).
+    /// G = A^T diag(d) A — the weighted gram (native oracle for the L1
+    /// kernel). Accumulates the upper triangle only (both `row[a..]` and
+    /// the G row tail are walked contiguously) and mirrors it afterwards —
+    /// half the flops of the full accumulation, and the result is exactly
+    /// symmetric by construction.
     pub fn weighted_gram(&self, d: &[f64]) -> Mat {
         assert_eq!(d.len(), self.rows);
         let n = self.cols;
@@ -223,10 +229,15 @@ impl Mat {
                 if v == 0.0 {
                     continue;
                 }
-                let grow = &mut g.data[a * n..(a + 1) * n];
-                for bcol in 0..n {
-                    grow[bcol] += v * row[bcol];
+                let grow = &mut g.data[a * n + a..(a + 1) * n];
+                for (gv, rv) in grow.iter_mut().zip(&row[a..]) {
+                    *gv += v * rv;
                 }
+            }
+        }
+        for a in 0..n {
+            for b in (a + 1)..n {
+                g.data[b * n + a] = g.data[a * n + b];
             }
         }
         g

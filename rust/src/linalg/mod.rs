@@ -10,8 +10,10 @@
 pub mod chol;
 pub mod lu;
 pub mod mat;
+pub mod sparse;
 pub mod tri;
 
 pub use chol::Cholesky;
 pub use lu::Lu;
 pub use mat::Mat;
+pub use sparse::CsrMatrix;

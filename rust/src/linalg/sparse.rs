@@ -1,0 +1,481 @@
+//! Sparse (CSR) linear algebra for the local-solve hot path.
+//!
+//! The CLS problems expose their rows sparsely (`sparse_row`: a stencil
+//! touches ≤ 5 columns, a bilinear observation ≤ 4), and the DD restriction
+//! preserves that structure. This module keeps it all the way into the
+//! worker solve: a [`CsrMatrix`] built from `(col, coeff)` row iterators,
+//! `spmv`/`spmv_t`, and a matrix-free weighted normal-equations operator
+//! `x ↦ AᵀD(Ax) + reg⊙x` that never forms the Gram matrix — the substrate
+//! of the `SparseCg` backend that unlocks grids the dense O(m·n²) assembly
+//! + O(n³) factorization path cannot touch.
+
+use super::mat::{axpy, dot, norm2, Mat};
+use std::fmt;
+
+/// Compressed-sparse-row f64 matrix. Per row, column indices are strictly
+/// ascending (duplicates are coalesced and explicit zeros dropped at
+/// construction).
+#[derive(Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row r occupies `indices[indptr[r]..indptr[r+1]]` / same in `values`.
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl fmt::Debug for CsrMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CsrMatrix {}x{} ({} nnz)", self.rows, self.cols, self.nnz())
+    }
+}
+
+impl CsrMatrix {
+    /// An all-zero (structurally empty) matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CsrMatrix {
+            rows,
+            cols,
+            indptr: vec![0; rows + 1],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Build from per-row `(col, coeff)` lists — the `sparse_row` contract.
+    /// Entries may arrive unsorted and may repeat a column; duplicates are
+    /// summed and zero coefficients dropped.
+    pub fn from_rows(cols: usize, rows: &[Vec<(usize, f64)>]) -> Self {
+        let mut m = CsrMatrix {
+            rows: rows.len(),
+            cols,
+            indptr: Vec::with_capacity(rows.len() + 1),
+            indices: Vec::new(),
+            values: Vec::new(),
+        };
+        m.indptr.push(0);
+        let mut buf: Vec<(usize, f64)> = Vec::new();
+        for row in rows {
+            buf.clear();
+            buf.extend_from_slice(row);
+            buf.sort_unstable_by_key(|&(c, _)| c);
+            let mut k = 0;
+            while k < buf.len() {
+                let c = buf[k].0;
+                assert!(c < cols, "column {c} out of range for {cols} columns");
+                let mut v = 0.0;
+                while k < buf.len() && buf[k].0 == c {
+                    v += buf[k].1;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    m.indices.push(c);
+                    m.values.push(v);
+                }
+            }
+            m.indptr.push(m.indices.len());
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Structural non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Row r as parallel (column indices, values) slices.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Entry (r, c), zero when not stored.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&c) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Dense materialization — oracle and artifact-padding paths only.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (k, &c) in cols.iter().enumerate() {
+                m[(r, c)] = vals[k];
+            }
+        }
+        m
+    }
+
+    /// y = A x.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0;
+            for (k, &c) in cols.iter().enumerate() {
+                acc += vals[k] * x[c];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// y = Aᵀ x.
+    pub fn spmv_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(r);
+            for (k, &c) in cols.iter().enumerate() {
+                y[c] += vals[k] * xr;
+            }
+        }
+        y
+    }
+
+    /// c = Aᵀ diag(d) r — same contract as [`Mat::at_db`], one CSR pass.
+    pub fn at_db(&self, d: &[f64], r: &[f64]) -> Vec<f64> {
+        assert_eq!(d.len(), self.rows);
+        assert_eq!(r.len(), self.rows);
+        let mut c = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let s = d[i] * r[i];
+            if s == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(i);
+            for (k, &j) in cols.iter().enumerate() {
+                c[j] += s * vals[k];
+            }
+        }
+        c
+    }
+
+    /// G = AᵀDA as a dense matrix, assembled sparsely: O(Σ_r nnz_r²)
+    /// instead of the dense O(m·n²) — the factorizing backends still need
+    /// the dense Gram, but no longer pay dense assembly for it.
+    pub fn weighted_gram(&self, d: &[f64]) -> Mat {
+        assert_eq!(d.len(), self.rows);
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for r in 0..self.rows {
+            let dr = d[r];
+            if dr == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(r);
+            for (i, &ca) in cols.iter().enumerate() {
+                let v = dr * vals[i];
+                for (j, &cb) in cols.iter().enumerate() {
+                    g[(ca, cb)] += v * vals[j];
+                }
+            }
+        }
+        g
+    }
+
+    /// diag(AᵀDA) in one CSR pass — the Jacobi preconditioner of the CG
+    /// backend, computed without ever forming G.
+    pub fn weighted_gram_diag(&self, d: &[f64]) -> Vec<f64> {
+        assert_eq!(d.len(), self.rows);
+        let mut diag = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let dr = d[r];
+            if dr == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(r);
+            for (k, &c) in cols.iter().enumerate() {
+                diag[c] += dr * vals[k] * vals[k];
+            }
+        }
+        diag
+    }
+
+    /// The regularized weighted normal-equations operator applied
+    /// matrix-free: y = AᵀD(Ax) + reg⊙x. Never forms the Gram matrix —
+    /// O(nnz) per application.
+    pub fn normal_apply(&self, d: &[f64], reg: &[f64], x: &[f64]) -> Vec<f64> {
+        assert_eq!(reg.len(), self.cols);
+        let mut t = self.spmv(x);
+        for (ti, di) in t.iter_mut().zip(d) {
+            *ti *= di;
+        }
+        let mut y = self.spmv_t(&t);
+        for (yi, (ri, xi)) in y.iter_mut().zip(reg.iter().zip(x)) {
+            *yi += ri * xi;
+        }
+        y
+    }
+}
+
+/// Result of a [`pcg`] run.
+#[derive(Debug, Clone)]
+pub struct PcgOutcome {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    /// ‖r‖/‖rhs‖ reached the requested tolerance.
+    pub converged: bool,
+    /// Final relative residual (recurrence residual).
+    pub rel_residual: f64,
+}
+
+/// Jacobi-preconditioned conjugate gradient on an SPD operator.
+///
+/// `apply` is one operator application (e.g. [`CsrMatrix::normal_apply`]),
+/// `diag_inv` the inverse operator diagonal, `x0` an optional warm start
+/// (any start converges to the same solution; a good one — e.g. the
+/// previous Schwarz sweep's local solution — just gets there in far fewer
+/// iterations). Iterates until ‖r‖ ≤ `tol`·‖rhs‖, the iteration budget
+/// runs out, or the residual stagnates at its fp noise floor (a 120-
+/// iteration window without a 0.1% improvement on the best residual —
+/// wide enough that the transient plateaus of a non-monotone CG residual
+/// history don't trip it mid-convergence, and a true floor still exits
+/// long before a large `max_iters` budget is burned).
+pub fn pcg(
+    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    rhs: &[f64],
+    diag_inv: &[f64],
+    x0: Option<&[f64]>,
+    tol: f64,
+    max_iters: usize,
+) -> PcgOutcome {
+    let n = rhs.len();
+    assert_eq!(diag_inv.len(), n);
+    let rhs_norm = norm2(rhs);
+    if rhs_norm == 0.0 {
+        return PcgOutcome { x: vec![0.0; n], iters: 0, converged: true, rel_residual: 0.0 };
+    }
+    let (mut x, mut r) = match x0 {
+        Some(x0) => {
+            assert_eq!(x0.len(), n);
+            let gx = apply(x0);
+            let r: Vec<f64> = rhs.iter().zip(&gx).map(|(bi, gi)| bi - gi).collect();
+            (x0.to_vec(), r)
+        }
+        None => (vec![0.0; n], rhs.to_vec()),
+    };
+    let mut z: Vec<f64> = r.iter().zip(diag_inv).map(|(ri, mi)| ri * mi).collect();
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut best = f64::INFINITY;
+    let mut since_best = 0usize;
+    let mut iters = 0usize;
+    loop {
+        let rel = norm2(&r) / rhs_norm;
+        if rel <= tol || iters >= max_iters {
+            break;
+        }
+        if rel < best * 0.999 {
+            best = rel;
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if since_best >= 120 {
+                break;
+            }
+        }
+        let q = apply(&p);
+        let pq = dot(&p, &q);
+        if pq <= 0.0 {
+            // Curvature breakdown: operator not SPD at working precision.
+            break;
+        }
+        let alpha = rz / pq;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &q, &mut r);
+        for (zi, (ri, mi)) in z.iter_mut().zip(r.iter().zip(diag_inv)) {
+            *zi = ri * mi;
+        }
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        for (pi, zi) in p.iter_mut().zip(&z) {
+            *pi = zi + beta * *pi;
+        }
+        rz = rz_new;
+        iters += 1;
+    }
+    let rel_residual = norm2(&r) / rhs_norm;
+    PcgOutcome { x, iters, converged: rel_residual <= tol, rel_residual }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::dist2;
+    use crate::linalg::Cholesky;
+    use crate::util::Rng;
+
+    /// Random sparse rows (≤ k nnz each) over `cols` columns.
+    fn random_rows(m: usize, cols: usize, k: usize, rng: &mut Rng) -> Vec<Vec<(usize, f64)>> {
+        (0..m)
+            .map(|_| {
+                let nnz = rng.below(k + 1);
+                (0..nnz).map(|_| (rng.below(cols), rng.gaussian())).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spmv_and_spmv_t_match_dense_oracle() {
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(100 + seed);
+            let (m, n) = (5 + rng.below(20), 4 + rng.below(16));
+            let rows = random_rows(m, n, 4, &mut rng);
+            let a = CsrMatrix::from_rows(n, &rows);
+            let dense = a.to_dense();
+            let x = rng.gaussian_vec(n);
+            let y = rng.gaussian_vec(m);
+            assert!(dist2(&a.spmv(&x), &dense.matvec(&x)) < 1e-12, "seed {seed}");
+            assert!(dist2(&a.spmv_t(&y), &dense.matvec_t(&y)) < 1e-12, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let rows = vec![vec![], vec![(1, 2.0)], vec![], vec![(0, -1.0), (2, 3.0)]];
+        let a = CsrMatrix::from_rows(3, &rows);
+        assert_eq!(a.rows(), 4);
+        assert_eq!(a.nnz(), 3);
+        let (c0, _) = a.row(0);
+        assert!(c0.is_empty());
+        assert_eq!(a.spmv(&[1.0, 1.0, 1.0]), vec![0.0, 2.0, 0.0, 2.0]);
+        assert_eq!(a.spmv_t(&[1.0, 1.0, 1.0, 1.0]), vec![-1.0, 2.0, 3.0]);
+        // A fully empty matrix round-trips.
+        let z = CsrMatrix::zeros(2, 3);
+        assert_eq!(z.spmv(&[1.0; 3]), vec![0.0; 2]);
+        assert_eq!(z.to_dense().max_abs(), 0.0);
+    }
+
+    #[test]
+    fn duplicate_columns_coalesce_and_zeros_drop() {
+        let rows = vec![
+            vec![(2, 1.0), (0, 3.0), (2, 0.5)],  // unsorted + duplicate
+            vec![(1, 4.0), (1, -4.0)],           // cancels to zero
+            vec![(0, 0.0)],                      // explicit zero
+        ];
+        let a = CsrMatrix::from_rows(3, &rows);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get(0, 2), 1.5);
+        assert_eq!(a.get(0, 0), 3.0);
+        assert_eq!(a.get(1, 1), 0.0);
+        assert_eq!(a.get(2, 0), 0.0);
+        let (cols, _) = a.row(0);
+        assert_eq!(cols, &[0, 2]);
+    }
+
+    #[test]
+    fn at_db_gram_and_diag_match_dense() {
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(200 + seed);
+            let (m, n) = (8 + rng.below(16), 4 + rng.below(10));
+            let rows = random_rows(m, n, 5, &mut rng);
+            let a = CsrMatrix::from_rows(n, &rows);
+            let dense = a.to_dense();
+            let d: Vec<f64> = (0..m).map(|_| rng.uniform() + 0.1).collect();
+            let r = rng.gaussian_vec(m);
+            assert!(dist2(&a.at_db(&d, &r), &dense.at_db(&d, &r)) < 1e-11, "seed {seed}");
+            let g_sparse = a.weighted_gram(&d);
+            let g_dense = dense.weighted_gram(&d);
+            let mut diff = g_sparse.clone();
+            diff.scale(-1.0);
+            diff.add_assign(&g_dense);
+            assert!(diff.max_abs() < 1e-11, "seed {seed}");
+            let diag = a.weighted_gram_diag(&d);
+            for j in 0..n {
+                assert!((diag[j] - g_dense[(j, j)]).abs() < 1e-11, "seed {seed} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn normal_apply_matches_gram_matvec() {
+        let mut rng = Rng::new(300);
+        let rows = random_rows(20, 8, 4, &mut rng);
+        let a = CsrMatrix::from_rows(8, &rows);
+        let d: Vec<f64> = (0..20).map(|_| rng.uniform() + 0.1).collect();
+        let reg: Vec<f64> = (0..8).map(|_| rng.uniform()).collect();
+        let x = rng.gaussian_vec(8);
+        let mut g = a.weighted_gram(&d);
+        for (j, &r) in reg.iter().enumerate() {
+            g[(j, j)] += r;
+        }
+        assert!(dist2(&a.normal_apply(&d, &reg, &x), &g.matvec(&x)) < 1e-11);
+    }
+
+    #[test]
+    fn pcg_solves_regularized_normal_equations() {
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(400 + seed);
+            let (m, n) = (30, 12);
+            let rows = random_rows(m, n, 5, &mut rng);
+            let a = CsrMatrix::from_rows(n, &rows);
+            let d: Vec<f64> = (0..m).map(|_| rng.uniform() + 0.5).collect();
+            // Uniform regularization keeps G SPD even if a column is empty.
+            let reg = vec![0.7; n];
+            let rhs = rng.gaussian_vec(n);
+            let mut g = a.weighted_gram(&d);
+            for j in 0..n {
+                g[(j, j)] += reg[j];
+            }
+            let want = Cholesky::new(&g).unwrap().solve(&rhs);
+            let mut diag_inv = a.weighted_gram_diag(&d);
+            for (v, r) in diag_inv.iter_mut().zip(&reg) {
+                *v = 1.0 / (*v + r);
+            }
+            let out = pcg(
+                |x: &[f64]| a.normal_apply(&d, &reg, x),
+                &rhs,
+                &diag_inv,
+                None,
+                1e-13,
+                10 * n + 200,
+            );
+            assert!(out.rel_residual < 1e-10, "seed {seed}: rel={:e}", out.rel_residual);
+            let err = dist2(&out.x, &want);
+            assert!(err < 1e-9, "seed {seed}: CG vs Cholesky = {err:e}");
+
+            // Warm-starting from the exact solution converges immediately
+            // (and from any start, to the same solution).
+            let warm = pcg(
+                |x: &[f64]| a.normal_apply(&d, &reg, x),
+                &rhs,
+                &diag_inv,
+                Some(&want),
+                1e-13,
+                10 * n + 200,
+            );
+            assert!(warm.iters <= 5, "seed {seed}: warm start took {} iters", warm.iters);
+            assert!(dist2(&warm.x, &want) < 1e-9, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn pcg_zero_rhs_returns_zero() {
+        let out = pcg(|x: &[f64]| x.to_vec(), &[0.0; 4], &[1.0; 4], None, 1e-12, 100);
+        assert!(out.converged);
+        assert_eq!(out.x, vec![0.0; 4]);
+        assert_eq!(out.iters, 0);
+    }
+}

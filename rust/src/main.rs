@@ -59,10 +59,10 @@ USAGE:
   dydd-da info
   dydd-da run [--config FILE] [--n N] [--m M] [--p P] [--layout L]
               [--dim 1|2] [--px PX] [--py PY]
-              [--backend native|kf|pjrt] [--overlap S] [--mu MU]
+              [--backend native|kf|pjrt|cg] [--overlap S] [--mu MU]
               [--no-dydd] [--seed SEED] [--no-baseline]
   dydd-da cycle [--config FILE] [--dim 1|2] [--n N] [--m M] [--p P]
-              [--px PX] [--py PY] [--cycles K]
+              [--px PX] [--py PY] [--cycles K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
               [--drift D] [--seed SEED] [--no-dydd] [--no-baseline]
   dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
@@ -75,7 +75,33 @@ USAGE:
 2-D layouts: uniform2d | gaussian_blob | diagonal_band | ring | quadrant
 drifts (1-D and 2-D): translating_blob | rotating_band | appearing_cluster
                       | stationary:<layout>
+backends: native (Cholesky) | kf (local VAR-KF) | pjrt (XLA artifacts)
+          | cg (sparse matrix-free PCG — use for large grids, e.g.
+          `run --dim 2 --n 128 --backend cg`)
 ";
+
+/// The sequential-KF baseline keeps a dense n × n covariance and pays
+/// O(n²) per observation; past this many unknowns it is skipped (the CG
+/// backend exists precisely for problems that big).
+const MAX_BASELINE_UNKNOWNS: usize = 10_000;
+
+/// Decide whether the T¹ baseline runs: the user's `--no-baseline` wins,
+/// then the dense-feasibility cutoff (with a loud note so a silently
+/// missing error_DD-DA column is never a mystery).
+fn baseline_enabled(no_baseline_flag: bool, unknowns: usize) -> bool {
+    if no_baseline_flag {
+        return false;
+    }
+    if unknowns > MAX_BASELINE_UNKNOWNS {
+        eprintln!(
+            "note: {unknowns} unknowns exceeds the dense sequential-KF baseline budget \
+             ({MAX_BASELINE_UNKNOWNS}); skipping T¹/error_DD-DA (pass --n small enough, \
+             or trust the Schwarz convergence report)"
+        );
+        return false;
+    }
+    true
+}
 
 /// Tiny flag parser: `--key value` and boolean `--flag`.
 struct Flags<'a> {
@@ -224,7 +250,8 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     }
     cfg.validate()?;
 
-    let with_baseline = !f.has("--no-baseline");
+    let unknowns = if cfg.dim == 2 { cfg.n * cfg.n } else { cfg.n };
+    let with_baseline = baseline_enabled(f.has("--no-baseline"), unknowns);
 
     if cfg.dim == 2 {
         // Full 2-D pipeline: DyDD on the box grid, then the parallel DD-KF
@@ -290,8 +317,16 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
     if let Some(d) = f.parsed::<usize>("--dim")? {
         cfg.dim = d;
     }
-    // Same guard as `run`: a 1-D config's n is not a 2-D grid axis.
+    // Same guard as `run`: a 1-D config's n is not a 2-D grid axis — and
+    // the same loud note, so the substituted grid size is never a mystery.
     if cfg.dim == 2 && f.get("--n").is_none() && config_dim != 2 {
+        if f.get("--config").is_some() {
+            eprintln!(
+                "warning: --dim 2 overrides a dim-1 config; its n = {} is a 1-D size, \
+                 using the 2-D cycle default n = 48 (pass --n to choose the grid)",
+                cfg.n
+            );
+        }
         cfg.n = 48;
     }
     if let Some(n) = f.parsed::<usize>("--n")? {
@@ -343,7 +378,8 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
         cfg.dydd = false;
     }
     cfg.validate()?;
-    let with_baseline = !f.has("--no-baseline");
+    let unknowns = if cfg.dim == 2 { cfg.n * cfg.n } else { cfg.n };
+    let with_baseline = baseline_enabled(f.has("--no-baseline"), unknowns);
 
     let drift_name = if cfg.dim == 2 { cfg.drift2d.name() } else { cfg.drift.name() };
     // `--no-dydd` forces the Never policy inside the driver; print what

@@ -45,6 +45,9 @@ impl PjrtLocalSolver {
 impl LocalSolver for PjrtLocalSolver {
     fn assemble(&mut self, blk: &LocalBlock, reg: &[f64]) -> anyhow::Result<LocalFactor> {
         let (m_loc, n_loc) = (blk.m_loc(), blk.n_loc());
+        // The artifact operands are dense bucket-padded literals; derive
+        // the dense view from the block's CSR rows once per epoch.
+        let a_dense = blk.dense_a();
         let stored = with_engine(&self.dir, |eng| {
             let (asm, sol) = eng
                 .manifest()
@@ -53,7 +56,7 @@ impl LocalSolver for PjrtLocalSolver {
                 .ok_or_else(|| {
                     EngineError::UnknownArtifact(format!("no bucket for ({m_loc}, {n_loc})"))
                 })?;
-            let operands = ops::prepare_operands(&asm, &blk.a, &blk.d)?;
+            let operands = ops::prepare_operands(&asm, &a_dense, &blk.d)?;
             // L1 Pallas gram through the artifact; O(n³)-once factorization
             // natively (the target XLA runtime's Cholesky expander is a
             // scalar loop — EXPERIMENTS.md §Perf).

@@ -750,3 +750,140 @@ fn prop_cycle_rebalances_conserve_and_replay_2d() {
         }
     }
 }
+
+/// Tentpole property: the matrix-free `SparseCg` backend reaches the same
+/// Schwarz fixed point as the dense-factorizing `NativeLocalSolver` on the
+/// *full* 1-D solve, for every observation layout × 3 seeds.
+#[test]
+fn prop_sparse_cg_matches_native_schwarz_1d_all_layouts() {
+    use dydd_da::ddkf::{schwarz_solve, NativeLocalSolver, SchwarzOptions, SparseCg};
+
+    let layouts = [
+        ObsLayout::Uniform,
+        ObsLayout::Ramp,
+        ObsLayout::Cluster,
+        ObsLayout::TwoClusters,
+        ObsLayout::LeftPacked,
+    ];
+    for layout in layouts {
+        for seed in [1u64, 2, 3] {
+            let (n, m, p) = (64usize, 48usize, 4usize);
+            let mesh = Mesh1d::new(n);
+            let mut rng = Rng::new(11_000 + seed);
+            let obs = generators::generate(layout, m, &mut rng);
+            let y0 = rng.gaussian_vec(n);
+            let prob = ClsProblem::new(
+                mesh,
+                StateOp::Tridiag { main: 1.0, off: 0.15 },
+                y0,
+                vec![4.0; n],
+                obs,
+            );
+            let part = Partition::uniform(n, p);
+            let opts = SchwarzOptions::default();
+            let a = schwarz_solve(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+            let b = schwarz_solve(&prob, &part, &opts, &mut SparseCg::default()).unwrap();
+            assert!(a.converged || a.stalled, "{layout:?} seed {seed}: native diverged");
+            assert!(b.converged || b.stalled, "{layout:?} seed {seed}: cg diverged");
+            let gap = dist2(&a.x, &b.x);
+            assert!(gap <= 1e-8, "{layout:?} seed {seed}: CG vs native = {gap:e}");
+        }
+    }
+}
+
+/// Same property on the 2-D box-grid solve, for every 2-D layout × 3
+/// seeds — plus an overlap/μ sub-case so the regularized CG path (reg in
+/// the operator diagonal, μ·x_other in the rhs) is exercised end-to-end.
+#[test]
+fn prop_sparse_cg_matches_native_schwarz_2d_all_layouts() {
+    use dydd_da::cls::{ClsProblem2d, StateOp2d};
+    use dydd_da::ddkf::{schwarz_solve2d, NativeLocalSolver, SchwarzOptions, SparseCg};
+
+    for layout in ObsLayout2d::ALL {
+        for seed in [1u64, 2, 3] {
+            let (n, m) = (12usize, 50usize);
+            let mesh = Mesh2d::square(n);
+            let mut rng = Rng::new(12_000 + seed);
+            let obs = gen2d::generate(layout, m, &mut rng);
+            let y0 = gen2d::background_field(&mesh);
+            let nn = mesh.n();
+            let prob = ClsProblem2d::new(
+                mesh,
+                StateOp2d::FivePoint { main: 1.0, off: 0.12 },
+                y0,
+                vec![4.0; nn],
+                obs,
+            );
+            let part = BoxPartition::uniform(n, n, 2, 2);
+            let opts = SchwarzOptions::default();
+            let a = schwarz_solve2d(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+            let b = schwarz_solve2d(&prob, &part, &opts, &mut SparseCg::default()).unwrap();
+            assert!(a.converged || a.stalled, "{layout:?} seed {seed}: native diverged");
+            assert!(b.converged || b.stalled, "{layout:?} seed {seed}: cg diverged");
+            let gap = dist2(&a.x, &b.x);
+            assert!(gap <= 1e-8, "{layout:?} seed {seed}: CG vs native = {gap:e}");
+
+            // Overlap + μ regularization: same fixed point for both
+            // backends (the μ bias is identical, so the gap stays tiny).
+            let opts = SchwarzOptions {
+                overlap: 1,
+                mu: 1e-6,
+                max_iters: 400,
+                ..SchwarzOptions::default()
+            };
+            let a = schwarz_solve2d(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+            let b = schwarz_solve2d(&prob, &part, &opts, &mut SparseCg::default()).unwrap();
+            let gap = dist2(&a.x, &b.x);
+            assert!(gap <= 1e-8, "{layout:?} seed {seed} (overlap): {gap:e}");
+        }
+    }
+}
+
+/// The CSR restriction is lossless: scattering every block's CSR rows back
+/// to global coordinates (in-set entries + halo couplings) reproduces the
+/// dense restriction of A exactly, row by row.
+#[test]
+fn prop_csr_local_blocks_match_dense_rows() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(13_000 + seed);
+        let n = 24 + rng.below(40);
+        let m = 10 + rng.below(40);
+        let p = 2 + rng.below(3);
+        let mesh = Mesh1d::new(n);
+        let obs = generators::generate(ObsLayout::Uniform, m, &mut rng);
+        let y0 = rng.gaussian_vec(n);
+        let prob =
+            ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.2 }, y0, vec![2.0; n], obs);
+        let part = Partition::uniform(n, p);
+        let (a, d, b) = prob.dense();
+        for i in 0..p {
+            let blk = prob.local_block(&part, i, 1);
+            let dense_local = blk.dense_a();
+            for (r_loc, &r) in blk.global_rows.iter().enumerate() {
+                assert!((blk.d[r_loc] - d[r]).abs() < 1e-15, "seed {seed}");
+                assert!((blk.b[r_loc] - b[r]).abs() < 1e-15, "seed {seed}");
+                // In-set entries match the dense row...
+                for (c_loc, &gc) in blk.cols.iter().enumerate() {
+                    assert!(
+                        (dense_local[(r_loc, c_loc)] - a[(r, gc)]).abs() < 1e-15,
+                        "seed {seed} block {i} row {r_loc} col {c_loc}"
+                    );
+                }
+                // ...and every out-of-set non-zero appears as a halo term.
+                let mut halo_row: Vec<(usize, f64)> = blk
+                    .halo
+                    .iter()
+                    .filter(|&&(rl, _, _)| rl == r_loc)
+                    .map(|&(_, gc, v)| (gc, v))
+                    .collect();
+                halo_row.sort_unstable_by_key(|&(gc, _)| gc);
+                let mut want: Vec<(usize, f64)> = (0..n)
+                    .filter(|&gc| blk.local_col(gc).is_none() && a[(r, gc)] != 0.0)
+                    .map(|gc| (gc, a[(r, gc)]))
+                    .collect();
+                want.sort_unstable_by_key(|&(gc, _)| gc);
+                assert_eq!(halo_row, want, "seed {seed} block {i} row {r_loc}");
+            }
+        }
+    }
+}
