@@ -11,7 +11,7 @@
 
 use dydd_da::config::ExperimentConfig;
 use dydd_da::domain2d::ObsLayout2d;
-use dydd_da::harness::run_experiment2d;
+use dydd_da::harness::run_experiment;
 use dydd_da::util::timer::fmt_secs;
 
 fn main() -> anyhow::Result<()> {
@@ -32,9 +32,9 @@ fn main() -> anyhow::Result<()> {
         cfg.seed = 42;
 
         cfg.dydd = false;
-        let uniform = run_experiment2d(&cfg, true)?;
+        let uniform = run_experiment(&cfg, true)?;
         cfg.dydd = true;
-        let balanced = run_experiment2d(&cfg, true)?;
+        let balanced = run_experiment(&cfg, true)?;
 
         let e_before = balanced.balance_before().unwrap();
         let e_after = balanced.balance().unwrap();

@@ -7,14 +7,16 @@
 //! band (non-separable — per-column y-bounds are what balance it), and a
 //! quadrant layout whose ¾-empty grid exercises the DD repair step.
 
+use dydd_da::decomp::BoxGeometry;
 use dydd_da::domain2d::ObsLayout2d;
-use dydd_da::dydd::{balance_ratio, rebalance_partition2d, DyddParams};
+use dydd_da::dydd::{balance_ratio, rebalance, DyddParams};
 use dydd_da::harness::scenarios::{self, render_census_grid};
 use dydd_da::util::timer::fmt_secs;
 
-fn show_grid(label: &str, census: &[usize], px: usize, py: usize) {
+fn show_grid(label: &str, census: &[usize], px: usize, py: usize) -> anyhow::Result<()> {
     println!("{label} (E = {:.3}):", balance_ratio(census));
-    print!("{}", render_census_grid(census, px, py));
+    print!("{}", render_census_grid(census, px, py)?);
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -24,15 +26,16 @@ fn main() -> anyhow::Result<()> {
         ("Quadrant (3/4 empty), 2x2 boxes", ObsLayout2d::Quadrant, 2, 2, 600),
     ] {
         println!("== {title} ==");
-        let sc = scenarios::grid2d(512, px, py, m, layout, 42);
+        let sc = scenarios::grid2d(512, px, py, m, layout, 42)?;
         let l_in = sc.census();
-        show_grid("l_in ", &l_in, px, py);
-        let out = rebalance_partition2d(&sc.mesh, &sc.part, &sc.obs, &DyddParams::default())?;
+        show_grid("l_in ", &l_in, px, py)?;
+        let geom = BoxGeometry::new(512, px, py);
+        let out = rebalance(&geom, &sc.part, &sc.obs, &DyddParams::default())?;
         if let Some(lr) = &out.dydd.l_r {
-            show_grid("l_r  ", lr, px, py);
+            show_grid("l_r  ", lr, px, py)?;
             println!("    (DD repair step split max-load neighbours of empty boxes)");
         }
-        show_grid("l_fin", &out.census_after, px, py);
+        show_grid("l_fin", &out.census_after, px, py)?;
         println!(
             "    {} scheduling iterations, {} migrations, T_DyDD = {}, T_r = {}",
             out.dydd.iters,

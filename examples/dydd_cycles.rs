@@ -24,7 +24,7 @@ use dydd_da::domain::DriftLayout;
 use dydd_da::domain2d::DriftLayout2d;
 use dydd_da::dydd::RebalancePolicy;
 use dydd_da::harness::cycles::{check_policy_acceptance, render_cycle_table};
-use dydd_da::harness::{run_cycles, run_cycles2d, CycleReport};
+use dydd_da::harness::{run_cycles, CycleReport};
 
 const POLICIES: [RebalancePolicy; 3] = [
     RebalancePolicy::Never,
@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
         // The sequential-KF baseline on 2304 unknowns x 8 cycles is the
         // only expensive part; the per-cycle solver agreement is already
         // asserted by the test suite, so the smoke test skips it.
-        let rep = run_cycles2d(&cfg, false)?;
+        let rep = run_cycles(&cfg, false)?;
         summarize(&rep);
         reports2d.push(rep);
     }

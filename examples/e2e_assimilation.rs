@@ -20,7 +20,8 @@ use dydd_da::cls::{ClsProblem, StateOp};
 use dydd_da::coordinator::{SolverBackend, WorkerPool};
 use dydd_da::ddkf::SchwarzOptions;
 use dydd_da::domain::{generators, Mesh1d, ObservationSet, Partition};
-use dydd_da::dydd::{rebalance_partition, DyddParams};
+use dydd_da::decomp::IntervalGeometry;
+use dydd_da::dydd::{rebalance, DyddParams};
 use dydd_da::kf::DenseKf;
 use dydd_da::linalg::Mat;
 use dydd_da::model::{advection_diffusion, DynamicModel};
@@ -193,22 +194,23 @@ fn main() -> anyhow::Result<()> {
             )
         };
         let part0 = Partition::uniform(n, p);
+        let geom = IntervalGeometry::new(n, p);
 
         // dynamic: DyDD every cycle.
         let prob_dd = mk_problem(&backgrounds[0]);
         let t0 = Instant::now();
-        let reb = rebalance_partition(&mesh, &part0, &prob_dd.obs, &DyddParams::default())?;
+        let reb = rebalance(&geom, &part0, &prob_dd.obs, &DyddParams::default())?;
         t_dydd += t0.elapsed();
         min_balance = min_balance.min(reb.balance());
         let t0 = Instant::now();
-        let sol = pool_dd.solve(&prob_dd, &reb.partition, &opts)?;
+        let sol = pool_dd.solve_on(&geom, &prob_dd, &reb.partition, &opts)?;
         t_dd += t0.elapsed();
         anyhow::ensure!(sol.converged, "DD analysis diverged at cycle {cycle}");
         x_dd = sol.x;
 
         // static control: uniform partition (no DyDD).
         let prob_st = mk_problem(&backgrounds[1]);
-        let sol_st = pool_static.solve(&prob_st, &part0, &opts)?;
+        let sol_st = pool_static.solve_on(&geom, &prob_st, &part0, &opts)?;
         x_static = sol_st.x;
         let census = obs.census(&mesh, &part0);
         worst_static_imbalance =

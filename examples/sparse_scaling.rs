@@ -15,10 +15,10 @@
 
 use dydd_da::cls::RowProvider;
 use dydd_da::config::ExperimentConfig;
-use dydd_da::coordinator::{run_parallel2d, SolverBackend};
+use dydd_da::coordinator::{run_parallel, SolverBackend};
 use dydd_da::domain2d::{BoxPartition, ObsLayout2d};
-use dydd_da::harness::pipeline::maybe_rebalance2d;
-use dydd_da::harness::run_experiment2d;
+use dydd_da::harness::pipeline::maybe_rebalance;
+use dydd_da::harness::run_experiment;
 use dydd_da::util::timer::fmt_secs;
 
 fn blob_config(n: usize, m: usize) -> ExperimentConfig {
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     // --- 32×32 probe: CG vs the sequential-KF reference -----------------
     println!("== 32x32 probe (CG vs sequential-KF reference) ==");
     let cfg = blob_config(32, 600);
-    let rep = run_experiment2d(&cfg, true)?;
+    let rep = run_experiment(&cfg, true)?;
     let err = rep.error_dd_da.expect("probe runs the baseline");
     println!(
         "  iters={} converged={}{} error_DD-DA={err:.2e} E={:.3}",
@@ -55,12 +55,13 @@ fn main() -> anyhow::Result<()> {
     println!("== 128x128 gaussian_blob (16 384 unknowns, CG backend) ==");
     let cfg = blob_config(128, 3000);
     let prob = cfg.build_problem2d();
+    let geom = cfg.box_geometry();
     let part0 = BoxPartition::uniform(cfg.n, cfg.n, cfg.px, cfg.py);
-    let (part, dydd) = maybe_rebalance2d(&prob.mesh, &part0, &prob.obs, true)?;
+    let (part, dydd) = maybe_rebalance(&geom, &part0, &prob.obs, true)?;
     if let Some(d) = &dydd {
         println!("  DyDD: E = {:.3} (migrations applied)", d.balance());
     }
-    let out = run_parallel2d(&prob, &part, &cfg.run_config())?;
+    let out = run_parallel(&geom, &prob, &part, &cfg.run_config())?;
     println!(
         "  iters={} converged={}{} T^p_crit={}",
         out.iters,

@@ -18,9 +18,10 @@ use dydd_da::coordinator::{run_parallel, RunConfig, SolverBackend};
 use dydd_da::ddkf::{
     schwarz_solve, LocalSolver, NativeLocalSolver, SchwarzOptions, SparseCg, SweepOrder,
 };
+use dydd_da::decomp::IntervalGeometry;
 use dydd_da::domain::{generators, DriftLayout, Mesh1d, ObsLayout, Partition};
 use dydd_da::domain2d::{generators as gen2d, BoxPartition, Mesh2d, ObsLayout2d};
-use dydd_da::dydd::{balance_ratio, rebalance_partition, DyddParams, RebalancePolicy};
+use dydd_da::dydd::{balance_ratio, rebalance, DyddParams, RebalancePolicy};
 use dydd_da::harness::run_cycles;
 use dydd_da::linalg::mat::dist2;
 use dydd_da::runtime;
@@ -48,13 +49,14 @@ fn main() -> anyhow::Result<()> {
     let prob = problem(n, 400, ObsLayout::Cluster, 31);
     let mesh = Mesh1d::new(n);
     let part0 = Partition::uniform(n, p);
+    let geom = IntervalGeometry::new(n, p);
     for dydd in [false, true] {
         let part = if dydd {
-            rebalance_partition(&mesh, &part0, &prob.obs, &DyddParams::default())?.partition
+            rebalance(&geom, &part0, &prob.obs, &DyddParams::default())?.partition
         } else {
             part0.clone()
         };
-        let out = run_parallel(&prob, &part, &RunConfig::default())?;
+        let out = run_parallel(&geom, &prob, &part, &RunConfig::default())?;
         let census = prob.obs.census(&mesh, &part);
         let busy_max = out.worker_busy.iter().max().unwrap().as_secs_f64();
         let busy_min =
@@ -143,7 +145,7 @@ fn main() -> anyhow::Result<()> {
     }
     for backend in backends {
         let cfg = RunConfig { backend, ..RunConfig::default() };
-        let out = run_parallel(&prob5, &part5, &cfg)?;
+        let out = run_parallel(&IntervalGeometry::new(256, 4), &prob5, &part5, &cfg)?;
         t.row(&[
             format!("{backend:?}"),
             fmt_secs(out.t_total.as_secs_f64()),
@@ -212,6 +214,9 @@ fn main() -> anyhow::Result<()> {
     scenario.insert("drift".into(), Json::Str("translating_blob".into()));
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("cycles".into()));
+    // Distinguishes a real run from the committed seed baseline (whose
+    // timing fields are null).
+    doc.insert("measured".into(), Json::Bool(true));
     doc.insert("scenario".into(), Json::Obj(scenario));
     doc.insert("policies".into(), Json::Arr(policy_rows));
     let path = "BENCH_cycles.json";
@@ -297,6 +302,7 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.render());
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("sparse".into()));
+    doc.insert("measured".into(), Json::Bool(true));
     doc.insert("solves_per_backend".into(), Json::Num(SOLVES as f64));
     doc.insert("rows".into(), Json::Arr(sparse_rows));
     let path = "BENCH_sparse.json";

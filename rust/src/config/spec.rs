@@ -4,6 +4,8 @@
 use super::toml::{parse_toml, TomlError, TomlValue};
 use crate::coordinator::SolverBackend;
 use crate::ddkf::{SchwarzOptions, SweepOrder};
+use crate::decomp::registry::{self, DriftSpec, LayoutSpec};
+use crate::decomp::{BoxGeometry, IntervalGeometry, WindowGeometry};
 use crate::domain::{DriftLayout, ObsLayout};
 use crate::domain2d::{DriftLayout2d, ObsLayout2d};
 use crate::dydd::RebalancePolicy;
@@ -40,15 +42,23 @@ impl StateOpConfig {
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub name: String,
-    /// Spatial dimension: 1 (interval decomposition, the paper's CLS
-    /// solver path) or 2 (box-grid DyDD on [0, 1]²).
+    /// Decomposition dimension: 1 (interval decomposition, the paper's
+    /// CLS solver path), 2 (box-grid DyDD on [0, 1]²) or 4 (space-time
+    /// windows over the stacked trajectory — PinT).
     pub dim: usize,
-    /// Mesh size n (per axis when dim = 2: the grid is n × n).
+    /// Mesh size n (per axis when dim = 2: the grid is n × n; the
+    /// *spatial* mesh when dim = 4: the trajectory has n × steps
+    /// unknowns).
     pub n: usize,
-    /// Observation count m.
+    /// Observation count m (total across time levels when dim = 4).
     pub m: usize,
-    /// Subdomain / worker count p (dim = 1).
+    /// Subdomain / worker count p (dim = 1); the time-window count when
+    /// dim = 4.
     pub p: usize,
+    /// Time levels N of the dim-4 trajectory (ignored otherwise).
+    pub steps: usize,
+    /// Model-constraint weight (Q⁻¹ scalar) of the dim-4 trajectory CLS.
+    pub model_weight: f64,
     /// Box grid extents (dim = 2): px × py boxes.
     pub px: usize,
     pub py: usize,
@@ -84,6 +94,8 @@ impl Default for ExperimentConfig {
             n: 2048,
             m: 1500,
             p: 4,
+            steps: 8,
+            model_weight: 5.0,
             px: 2,
             py: 2,
             layout: ObsLayout::Uniform,
@@ -117,10 +129,6 @@ pub enum ValidationError {
     Invalid(String),
 }
 
-fn layout_from_str(s: &str) -> Option<ObsLayout> {
-    crate::domain::generators::layout_from_name(s)
-}
-
 impl ExperimentConfig {
     pub fn from_toml_str(text: &str) -> Result<Self, ValidationError> {
         let t = parse_toml(text)?;
@@ -151,6 +159,10 @@ impl ExperimentConfig {
                 "problem.dim" => cfg.dim = v.as_usize().ok_or_else(|| bad(k))?,
                 "problem.px" => cfg.px = v.as_usize().ok_or_else(|| bad(k))?,
                 "problem.py" => cfg.py = v.as_usize().ok_or_else(|| bad(k))?,
+                "problem.steps" => cfg.steps = v.as_usize().ok_or_else(|| bad(k))?,
+                "problem.model_weight" => {
+                    cfg.model_weight = v.as_float().ok_or_else(|| bad(k))?
+                }
                 "problem.layout" => {
                     layout_name = Some(v.as_str().ok_or_else(|| bad(k))?.to_string());
                 }
@@ -222,35 +234,25 @@ impl ExperimentConfig {
                 }
             }
         }
-        // Resolve the layout against the final dimension so a wrong-
-        // dimension name errors loudly instead of silently running the
-        // default layout.
+        // Resolve layout and drift names against the final dimension
+        // through the shared geometry registry, so a wrong-dimension name
+        // errors loudly (with the valid names listed) instead of silently
+        // running the default layout — one validation path shared with the
+        // CLI.
         if let Some(s) = layout_name {
-            match cfg.dim {
-                2 => {
-                    cfg.layout2d = ObsLayout2d::parse(&s).ok_or_else(|| {
-                        ValidationError::Invalid(format!("layout {s:?} is not a 2-D layout"))
-                    })?
-                }
-                _ => {
-                    cfg.layout = layout_from_str(&s).ok_or_else(|| {
-                        ValidationError::Invalid(format!("layout {s:?} is not a 1-D layout"))
-                    })?
-                }
+            match registry::parse_layout(cfg.dim, &s)
+                .map_err(|e| ValidationError::Invalid(e.to_string()))?
+            {
+                LayoutSpec::D1(l) => cfg.layout = l,
+                LayoutSpec::D2(l) => cfg.layout2d = l,
             }
         }
         if let Some(s) = drift_name {
-            match cfg.dim {
-                2 => {
-                    cfg.drift2d = DriftLayout2d::parse(&s).ok_or_else(|| {
-                        ValidationError::Invalid(format!("drift {s:?} is not a 2-D drift layout"))
-                    })?
-                }
-                _ => {
-                    cfg.drift = DriftLayout::parse(&s).ok_or_else(|| {
-                        ValidationError::Invalid(format!("drift {s:?} is not a 1-D drift layout"))
-                    })?
-                }
+            match registry::parse_drift(cfg.dim, &s)
+                .map_err(|e| ValidationError::Invalid(e.to_string()))?
+            {
+                DriftSpec::D1(d) => cfg.drift = d,
+                DriftSpec::D2(d) => cfg.drift2d = d,
             }
         }
         if let Some(tau) = cycle_tau {
@@ -275,8 +277,26 @@ impl ExperimentConfig {
         if self.n < 4 {
             return fail(format!("n = {} too small", self.n));
         }
-        if !(1..=2).contains(&self.dim) {
-            return fail(format!("dim = {} unsupported (1 or 2)", self.dim));
+        if !registry::DIMS.contains(&self.dim) {
+            return fail(format!(
+                "dim = {} has no registered geometry (valid: 1, 2, 4)",
+                self.dim
+            ));
+        }
+        if self.dim == 4 {
+            if self.steps == 0 {
+                return fail("steps = 0: the trajectory needs at least one time level".into());
+            }
+            if self.p == 0 || self.p > self.steps {
+                return fail(format!(
+                    "p = {} time windows cannot decompose steps = {} time levels \
+                     (need 1 <= p <= steps; pass --steps/--p or [problem] steps)",
+                    self.p, self.steps
+                ));
+            }
+            if self.model_weight <= 0.0 {
+                return fail("model_weight must be positive".into());
+            }
         }
         if self.dim == 2 {
             if self.px == 0 || self.px > self.n / 2 {
@@ -308,6 +328,12 @@ impl ExperimentConfig {
                 "overlap {} exceeds half a subdomain (n/p = {})",
                 self.schwarz.overlap,
                 self.n / self.p
+            ));
+        }
+        if self.dim == 4 && self.schwarz.overlap > self.n / 2 {
+            return fail(format!(
+                "overlap {} exceeds half a time level (n = {})",
+                self.schwarz.overlap, self.n
             ));
         }
         if self.dim == 2 && self.schwarz.overlap > self.n / (2 * self.px.max(self.py)).max(1) {
@@ -367,6 +393,49 @@ impl ExperimentConfig {
             schwarz: self.schwarz.clone(),
             backend: self.backend,
             artifacts_dir: self.artifacts_dir.clone(),
+        }
+    }
+
+    /// The 1-D interval geometry (dim = 1) this config describes.
+    pub fn interval_geometry(&self) -> IntervalGeometry {
+        IntervalGeometry {
+            mesh: crate::domain::Mesh1d::new(self.n),
+            p: self.p,
+            state: self.state_op.build(),
+            state_weight: self.state_weight,
+            layout: self.layout,
+            drift: self.drift,
+        }
+    }
+
+    /// The 2-D box-grid geometry (dim = 2) this config describes.
+    pub fn box_geometry(&self) -> BoxGeometry {
+        BoxGeometry {
+            mesh: crate::domain2d::Mesh2d::square(self.n),
+            px: self.px,
+            py: self.py,
+            state: self.state_op.build2d(),
+            state_weight: self.state_weight,
+            layout: self.layout2d,
+            drift: self.drift2d,
+        }
+    }
+
+    /// The 4-D space-time window geometry (dim = 4) this config describes:
+    /// an `n`-point spatial mesh × `steps` time levels decomposed into `p`
+    /// time windows, with the 1-D layout as the per-level spatial
+    /// distribution and the 1-D drift moving the observation density over
+    /// the time axis.
+    pub fn window_geometry(&self) -> WindowGeometry {
+        WindowGeometry {
+            mesh: crate::domain::Mesh1d::new(self.n),
+            steps: self.steps,
+            windows: self.p,
+            state: self.state_op.build(),
+            state_weight: self.state_weight,
+            model_weight: self.model_weight,
+            layout: self.layout,
+            drift: self.drift,
         }
     }
 }
@@ -466,6 +535,50 @@ layout = "gaussian_blob"
         small.px = 2;
         small.py = 2;
         assert!(small.validate().is_ok(), "{:?}", small.validate());
+    }
+
+    #[test]
+    fn dim4_keys_roundtrip_and_build_geometry() {
+        let text = r#"
+name = "pint"
+[problem]
+dim = 4
+n = 12
+steps = 16
+p = 4
+m = 320
+layout = "cluster"
+model_weight = 2.5
+[cycle]
+drift = "rotating_band"
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.dim, 4);
+        assert_eq!((cfg.n, cfg.steps, cfg.p), (12, 16, 4));
+        assert_eq!(cfg.model_weight, 2.5);
+        // dim 4 resolves 1-D layout/drift names (spatial per level / time
+        // axis respectively).
+        assert_eq!(cfg.layout, ObsLayout::Cluster);
+        assert_eq!(cfg.drift, DriftLayout::RotatingBand);
+        let geom = cfg.window_geometry();
+        assert_eq!(geom.steps, 16);
+        assert_eq!(geom.windows, 4);
+        assert_eq!(geom.model_weight, 2.5);
+    }
+
+    #[test]
+    fn dim4_validation_catches_window_overflow() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 4;
+        cfg.n = 12;
+        cfg.steps = 4;
+        cfg.p = 8; // more windows than levels
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("time windows"), "{err}");
+        cfg.p = 4;
+        assert!(cfg.validate().is_ok());
+        cfg.steps = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

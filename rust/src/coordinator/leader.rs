@@ -4,11 +4,10 @@
 use super::messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
 use super::worker::{worker_main, WorkerInit};
 use super::RunConfig;
-use crate::cls::{ClsProblem, ClsProblem2d, LocalBlock};
-use crate::ddkf::schwarz::{coupling_phases, overlap_reg, rel_update, write_back};
+use crate::cls::LocalBlock;
+use crate::ddkf::schwarz::{overlap_reg, rel_update, write_back};
 use crate::ddkf::{ConvergenceCheck, OverlapAccumulator, SchwarzOptions, Verdict};
-use crate::domain::Partition;
-use crate::domain2d::BoxPartition;
+use crate::decomp::{blocks_of, phases_of, Geometry};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -71,35 +70,6 @@ pub struct WorkerPool {
     backend: SolverBackend,
 }
 
-/// Local blocks of a 1-D problem over `part` (one per subdomain).
-pub fn blocks1d(prob: &ClsProblem, part: &Partition, overlap: usize) -> Vec<LocalBlock> {
-    (0..part.p()).map(|i| prob.local_block(part, i, overlap)).collect()
-}
-
-/// Phase colouring of 1-D blocks over `part`. Shared by
-/// [`WorkerPool::solve`] and the cycle driver (which caches the result
-/// across cycles) so the two paths can never diverge.
-pub fn phases1d(blocks: &[LocalBlock], part: &Partition) -> Vec<Vec<usize>> {
-    coupling_phases(blocks, |gc| part.owner(gc))
-}
-
-/// Local blocks of a 2-D problem over a box partition (one per box).
-pub fn blocks2d(prob: &ClsProblem2d, part: &BoxPartition, overlap: usize) -> Vec<LocalBlock> {
-    (0..part.p()).map(|b| prob.local_block(part, b, overlap)).collect()
-}
-
-/// Phase colouring of 2-D blocks over a box partition (see [`phases1d`]).
-pub fn phases2d(
-    blocks: &[LocalBlock],
-    prob: &ClsProblem2d,
-    part: &BoxPartition,
-) -> Vec<Vec<usize>> {
-    coupling_phases(blocks, |gc| {
-        let (ix, iy) = prob.mesh.unindex(gc);
-        part.owner(ix, iy)
-    })
-}
-
 impl WorkerPool {
     pub fn new(p: usize, backend: SolverBackend, artifacts_dir: PathBuf) -> Self {
         let (to_leader, from_workers) = mpsc::channel::<ToLeader>();
@@ -124,36 +94,25 @@ impl WorkerPool {
         self.backend
     }
 
-    /// Solve one 1-D CLS problem over `part` (one DyDD epoch). Phases are
-    /// derived from the blocks' coupling graph — the even/odd interval
-    /// classes of the chain for ordinary partitions, more phases only when
-    /// narrow subdomains genuinely couple further.
-    pub fn solve(
+    /// Solve one CLS problem over `part` on any [`Geometry`] (one DyDD
+    /// epoch). Phases are derived from the blocks' actual coupling graph
+    /// via [`phases_of`] — the even/odd interval classes on a 1-D chain
+    /// and on time-window chains, checkerboard-like on a uniform box grid,
+    /// and still valid where logical colourings break (DyDD-rebalanced
+    /// box partitions whose per-column y-bounds make
+    /// same-checkerboard-colour boxes abut, narrow subdomains whose
+    /// stencil reaches next-nearest neighbours): no two subdomains in a
+    /// phase couple, so each phase is embarrassingly parallel.
+    pub fn solve_on<G: Geometry>(
         &mut self,
-        prob: &ClsProblem,
-        part: &Partition,
+        geom: &G,
+        prob: &G::Problem,
+        part: &G::Part,
         opts: &SchwarzOptions,
     ) -> anyhow::Result<ParallelOutcome> {
-        let blocks = blocks1d(prob, part, opts.overlap);
-        let phases = phases1d(&blocks, part);
-        self.solve_blocks(prob.n(), blocks, &phases, opts)
-    }
-
-    /// Solve one 2-D CLS problem over a box partition. Phases colour the
-    /// blocks' actual coupling graph (checkerboard-like on a uniform box
-    /// grid, and still valid on DyDD-rebalanced partitions whose
-    /// per-column y-bounds make same-checkerboard-colour boxes abut):
-    /// no two subdomains in a phase couple, so each phase is
-    /// embarrassingly parallel.
-    pub fn solve2d(
-        &mut self,
-        prob: &ClsProblem2d,
-        part: &BoxPartition,
-        opts: &SchwarzOptions,
-    ) -> anyhow::Result<ParallelOutcome> {
-        let blocks = blocks2d(prob, part, opts.overlap);
-        let phases = phases2d(&blocks, prob, part);
-        self.solve_blocks(prob.n(), blocks, &phases, opts)
+        let blocks = blocks_of(geom, prob, part, opts.overlap);
+        let phases = phases_of(geom, &blocks, part);
+        self.solve_blocks(geom.n_unknowns(), blocks, &phases, opts)
     }
 
     /// Core leader loop over pre-extracted local blocks and an explicit
@@ -306,36 +265,34 @@ impl Drop for WorkerPool {
     }
 }
 
-/// One-shot convenience: spin up a pool, solve, tear down.
-pub fn run_parallel(
-    prob: &ClsProblem,
-    part: &Partition,
+/// One-shot convenience on any [`Geometry`]: spin up a pool sized to the
+/// partition, solve, tear down.
+pub fn run_parallel<G: Geometry>(
+    geom: &G,
+    prob: &G::Problem,
+    part: &G::Part,
     cfg: &RunConfig,
 ) -> anyhow::Result<ParallelOutcome> {
-    let mut pool = WorkerPool::new(part.p(), cfg.backend, cfg.artifacts_dir.clone());
-    pool.solve(prob, part, &cfg.schwarz)
-}
-
-/// One-shot convenience for the 2-D box-grid pipeline.
-pub fn run_parallel2d(
-    prob: &ClsProblem2d,
-    part: &BoxPartition,
-    cfg: &RunConfig,
-) -> anyhow::Result<ParallelOutcome> {
-    let mut pool = WorkerPool::new(part.p(), cfg.backend, cfg.artifacts_dir.clone());
-    pool.solve2d(prob, part, &cfg.schwarz)
+    let mut pool = WorkerPool::new(geom.parts_of(part), cfg.backend, cfg.artifacts_dir.clone());
+    pool.solve_on(geom, prob, part, &cfg.schwarz)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cls::StateOp;
+    use crate::cls::{ClsProblem, ClsProblem2d, StateOp};
     use crate::coordinator::SolverBackend;
     use crate::ddkf::{schwarz_solve, NativeLocalSolver, SchwarzOptions};
+    use crate::decomp::{BoxGeometry, IntervalGeometry};
     use crate::domain::generators::{self, ObsLayout};
-    use crate::domain::Mesh1d;
+    use crate::domain::{Mesh1d, Partition};
+    use crate::domain2d::BoxPartition;
     use crate::linalg::mat::dist2;
     use crate::util::Rng;
+
+    fn g1(n: usize, p: usize) -> IntervalGeometry {
+        IntervalGeometry::new(n, p)
+    }
 
     fn problem(n: usize, m: usize, seed: u64) -> ClsProblem {
         let mesh = Mesh1d::new(n);
@@ -350,7 +307,7 @@ mod tests {
         let prob = problem(96, 60, 1);
         let part = Partition::uniform(96, 4);
         let cfg = RunConfig::default();
-        let par = run_parallel(&prob, &part, &cfg).unwrap();
+        let par = run_parallel(&g1(96, 4), &prob, &part, &cfg).unwrap();
         let opts = SchwarzOptions {
             order: crate::ddkf::SweepOrder::RedBlack,
             ..SchwarzOptions::default()
@@ -366,7 +323,7 @@ mod tests {
         let want = prob.solve_reference();
         for p in [2usize, 4, 8] {
             let part = Partition::uniform(128, p);
-            let out = run_parallel(&prob, &part, &RunConfig::default()).unwrap();
+            let out = run_parallel(&g1(128, p), &prob, &part, &RunConfig::default()).unwrap();
             assert!(out.converged, "p={p}");
             let err = dist2(&out.x, &want);
             assert!(err < 1e-9, "p={p}: error_DD-DA = {err:e}");
@@ -378,7 +335,7 @@ mod tests {
         let prob = problem(64, 40, 3);
         let part = Partition::uniform(64, 4);
         let cfg = RunConfig { backend: SolverBackend::Kf, ..RunConfig::default() };
-        let out = run_parallel(&prob, &part, &cfg).unwrap();
+        let out = run_parallel(&g1(64, 4), &prob, &part, &cfg).unwrap();
         assert!(out.converged);
         assert!(dist2(&out.x, &prob.solve_reference()) < 1e-8);
     }
@@ -388,7 +345,7 @@ mod tests {
         let prob = problem(64, 40, 11);
         let part = Partition::uniform(64, 4);
         let cfg = RunConfig { backend: SolverBackend::Cg, ..RunConfig::default() };
-        let out = run_parallel(&prob, &part, &cfg).unwrap();
+        let out = run_parallel(&g1(64, 4), &prob, &part, &cfg).unwrap();
         assert!(out.converged || out.stalled);
         assert!(dist2(&out.x, &prob.solve_reference()) < 1e-8);
     }
@@ -397,7 +354,7 @@ mod tests {
     fn single_subdomain_degenerates_to_direct_solve() {
         let prob = problem(48, 30, 4);
         let part = Partition::uniform(48, 1);
-        let out = run_parallel(&prob, &part, &RunConfig::default()).unwrap();
+        let out = run_parallel(&g1(48, 1), &prob, &part, &RunConfig::default()).unwrap();
         assert!(out.converged);
         assert!(out.iters <= 2);
         assert!(dist2(&out.x, &prob.solve_reference()) < 1e-10);
@@ -411,14 +368,14 @@ mod tests {
         for seed in [5u64, 6, 7] {
             let prob = problem(64, 40, seed);
             let part = Partition::uniform(64, 4);
-            let out = pool.solve(&prob, &part, &opts).unwrap();
+            let out = pool.solve_on(&g1(64, 4), &prob, &part, &opts).unwrap();
             assert!(out.converged);
             assert!(dist2(&out.x, &prob.solve_reference()) < 1e-9, "seed {seed}");
         }
         // Partition can change between epochs too.
         let prob = problem(64, 40, 8);
         let part = Partition::from_bounds(64, vec![0, 10, 30, 50, 64]);
-        let out = pool.solve(&prob, &part, &opts).unwrap();
+        let out = pool.solve_on(&g1(64, 4), &prob, &part, &opts).unwrap();
         assert!(out.converged);
     }
 
@@ -427,7 +384,7 @@ mod tests {
         let mut pool = WorkerPool::new(2, SolverBackend::Native, "artifacts".into());
         let prob = problem(32, 20, 9);
         let part = Partition::uniform(32, 4);
-        assert!(pool.solve(&prob, &part, &SchwarzOptions::default()).is_err());
+        assert!(pool.solve_on(&g1(32, 4), &prob, &part, &SchwarzOptions::default()).is_err());
     }
 
     #[test]
@@ -450,7 +407,7 @@ mod tests {
     fn worker_busy_reported_for_all() {
         let prob = problem(64, 48, 5);
         let part = Partition::uniform(64, 4);
-        let out = run_parallel(&prob, &part, &RunConfig::default()).unwrap();
+        let out = run_parallel(&g1(64, 4), &prob, &part, &RunConfig::default()).unwrap();
         assert_eq!(out.worker_busy.len(), 4);
         assert!(out.worker_busy.iter().all(|d| *d > Duration::ZERO));
         assert!((0.0..=1.0).contains(&out.overhead_fraction()));
@@ -496,7 +453,7 @@ mod tests {
         let prob = problem2d(14, 70, 6);
         let part = BoxPartition::uniform(14, 14, 2, 2);
         let cfg = RunConfig::default();
-        let par = run_parallel2d(&prob, &part, &cfg).unwrap();
+        let par = run_parallel(&BoxGeometry::new(14, 2, 2), &prob, &part, &cfg).unwrap();
         assert!(par.converged, "iters={}", par.iters);
         let opts = SchwarzOptions {
             order: crate::ddkf::SweepOrder::RedBlack,
@@ -523,7 +480,7 @@ mod tests {
             },
             ..RunConfig::default()
         };
-        let out = run_parallel2d(&prob, &part, &cfg).unwrap();
+        let out = run_parallel(&BoxGeometry::new(12, 2, 2), &prob, &part, &cfg).unwrap();
         assert!(out.converged || out.stalled);
         let want = prob.solve_reference();
         let err = dist2(&out.x, &want) / dist2(&want, &vec![0.0; prob.n()]);

@@ -5,7 +5,10 @@
 //! phases (red-black on chains/uniform box grids, derived from the
 //! blocks' coupling graph in general) and checks convergence. Workers own
 //! their local factorization and solve against leader-broadcast iterate
-//! snapshots.
+//! snapshots. The leader is dimension-generic: [`WorkerPool::solve_on`]
+//! and [`run_parallel`] take any [`crate::decomp::Geometry`], so 1-D
+//! chains, 2-D box grids and 4-D space-time windows all run through one
+//! code path ([`WorkerPool::solve_blocks`]).
 //!
 //! Backend selection ([`SolverBackend`]): `Native` (rust Cholesky — true
 //! SPMD scaling, the default for the speedup tables), `Kf` (local VAR-KF),
@@ -18,10 +21,7 @@ mod leader;
 mod messages;
 mod worker;
 
-pub use leader::{
-    blocks1d, blocks2d, phases1d, phases2d, run_parallel, run_parallel2d, ParallelOutcome,
-    WorkerPool,
-};
+pub use leader::{run_parallel, ParallelOutcome, WorkerPool};
 pub use messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
 
 use crate::ddkf::SchwarzOptions;

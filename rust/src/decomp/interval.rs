@@ -1,0 +1,166 @@
+//! 1-D interval geometry: contiguous column intervals on a [`Mesh1d`]
+//! chain — the paper's original DD-CLS configuration (§4.2).
+
+use super::{cycle_phase, cycle_rng, Geometry};
+use crate::cls::{ClsProblem, LocalBlock, StateOp};
+use crate::domain::{generators, DriftLayout, Mesh1d, ObsLayout, ObservationSet, Partition};
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// Chain-of-intervals decomposition of `[0, 1]` with `p` subdomains, plus
+/// the scenario knobs the harness drivers read (state operator, layout,
+/// drift family). [`IntervalGeometry::new`] fills paper-default knobs;
+/// override the public fields for custom scenarios.
+#[derive(Debug, Clone)]
+pub struct IntervalGeometry {
+    pub mesh: Mesh1d,
+    /// Subdomain count of the initial decomposition.
+    pub p: usize,
+    /// State operator H0 of problems this geometry builds.
+    pub state: StateOp,
+    /// State weight (R0 diagonal) of problems this geometry builds.
+    pub state_weight: f64,
+    /// Static observation layout ([`Geometry::static_obs`]).
+    pub layout: ObsLayout,
+    /// Drifting generator for cycle runs ([`Geometry::cycle_obs`]).
+    pub drift: DriftLayout,
+}
+
+impl IntervalGeometry {
+    /// Geometry over an `n`-point mesh split into `p` intervals, with the
+    /// default scenario knobs (tridiagonal H0, uniform observations,
+    /// translating-blob drift).
+    pub fn new(n: usize, p: usize) -> Self {
+        IntervalGeometry {
+            mesh: Mesh1d::new(n),
+            p,
+            state: StateOp::Tridiag { main: 1.0, off: 0.15 },
+            state_weight: 4.0,
+            layout: ObsLayout::Uniform,
+            drift: DriftLayout::TranslatingBlob,
+        }
+    }
+}
+
+impl Geometry for IntervalGeometry {
+    type Part = Partition;
+    type Obs = ObservationSet;
+    type Problem = ClsProblem;
+
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn n_unknowns(&self) -> usize {
+        self.mesh.n()
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn parts_of(&self, part: &Partition) -> usize {
+        part.p()
+    }
+
+    fn part_sizes(&self, part: &Partition) -> Vec<usize> {
+        (0..part.p()).map(|i| part.size(i)).collect()
+    }
+
+    fn initial_partition(&self) -> Partition {
+        Partition::uniform(self.mesh.n(), self.p)
+    }
+
+    fn census(&self, part: &Partition, obs: &ObservationSet) -> Vec<usize> {
+        obs.census(&self.mesh, part)
+    }
+
+    fn coupling_graph(&self, part: &Partition) -> Graph {
+        part.induced_graph()
+    }
+
+    fn realize_schedule(
+        &self,
+        _part: &Partition,
+        obs: &ObservationSet,
+        l_fin: &[usize],
+    ) -> Partition {
+        // On a chain the diffusion schedule is realizable exactly by
+        // boundary shifts: observations are sorted by location and split at
+        // the cumulative targets (up to grid-point tie groups — see
+        // `Partition::from_targets`).
+        let grid = obs.grid_indices(&self.mesh); // sorted because locs are sorted
+        Partition::from_targets(self.mesh.n(), &grid, l_fin)
+    }
+
+    fn owner_of_col(&self, part: &Partition, gc: usize) -> usize {
+        part.owner(gc)
+    }
+
+    fn local_block(
+        &self,
+        prob: &ClsProblem,
+        part: &Partition,
+        i: usize,
+        overlap: usize,
+    ) -> LocalBlock {
+        prob.local_block(part, i, overlap)
+    }
+
+    fn obs_of<'a>(&self, prob: &'a ClsProblem) -> &'a ObservationSet {
+        &prob.obs
+    }
+
+    fn static_obs(&self, m: usize, rng: &mut Rng) -> ObservationSet {
+        generators::generate(self.layout, m, rng)
+    }
+
+    fn cycle_obs(&self, m: usize, seed: u64, k: usize, cycles: usize) -> ObservationSet {
+        generators::generate_drift(self.drift, m, cycle_phase(k, cycles), &mut cycle_rng(seed, k))
+    }
+
+    fn background(&self) -> Vec<f64> {
+        generators::background_field(&self.mesh)
+    }
+
+    fn make_problem(&self, y0: Vec<f64>, obs: ObservationSet) -> ClsProblem {
+        let n = self.mesh.n();
+        ClsProblem::new(self.mesh.clone(), self.state.clone(), y0, vec![self.state_weight; n], obs)
+    }
+
+    fn solve_baseline(&self, prob: &ClsProblem) -> Vec<f64> {
+        crate::kf::kf_solve_cls(prob).x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_partition_is_uniform() {
+        let g = IntervalGeometry::new(128, 4);
+        let part = g.initial_partition();
+        assert_eq!(g.parts_of(&part), 4);
+        assert_eq!(g.part_sizes(&part), vec![32; 4]);
+        assert_eq!(g.n_unknowns(), 128);
+    }
+
+    #[test]
+    fn census_and_graph_match_domain_layer() {
+        let g = IntervalGeometry::new(256, 4);
+        let part = g.initial_partition();
+        let mut rng = Rng::new(3);
+        let obs = g.static_obs(120, &mut rng);
+        assert_eq!(g.census(&part, &obs), obs.census(&g.mesh, &part));
+        assert_eq!(g.coupling_graph(&part), Graph::chain(4));
+    }
+
+    #[test]
+    fn owner_tracks_partition() {
+        let g = IntervalGeometry::new(64, 2);
+        let part = Partition::from_bounds(64, vec![0, 20, 64]);
+        assert_eq!(g.owner_of_col(&part, 19), 0);
+        assert_eq!(g.owner_of_col(&part, 20), 1);
+    }
+}

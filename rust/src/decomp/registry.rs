@@ -1,0 +1,110 @@
+//! Dimension-aware name registry for observation layouts and drift
+//! families — the single place where `--layout` / `--drift` / TOML names
+//! are validated, shared by the config parser and the CLI so the two can
+//! never diverge.
+//!
+//! Dimension 4 (space-time windows) reuses the 1-D name families: the
+//! layout is the *spatial* distribution per level, the drift moves the
+//! observation density over the *time axis*.
+
+use crate::domain::{generators, DriftLayout, ObsLayout};
+use crate::domain2d::{DriftLayout2d, ObsLayout2d};
+
+/// Decomposition dimensions with a registered [`crate::decomp::Geometry`].
+pub const DIMS: [usize; 3] = [1, 2, 4];
+
+/// A dimension-resolved layout name.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayoutSpec {
+    /// 1-D layout (also the spatial layout of dim-4 scenarios).
+    D1(ObsLayout),
+    /// 2-D layout.
+    D2(ObsLayout2d),
+}
+
+/// A dimension-resolved drift name.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftSpec {
+    /// 1-D drift (also the time-axis drift of dim-4 scenarios).
+    D1(DriftLayout),
+    /// 2-D drift.
+    D2(DriftLayout2d),
+}
+
+const NAMES_1D: &str = "uniform | ramp | cluster | two_clusters | left_packed";
+const NAMES_2D: &str = "uniform2d | gaussian_blob | diagonal_band | ring | quadrant";
+const DRIFTS: &str = "translating_blob | rotating_band | appearing_cluster | stationary:<layout>";
+
+/// Parse a layout name against the dimension it will run in; a
+/// wrong-dimension name errors loudly instead of silently running the
+/// default layout.
+pub fn parse_layout(dim: usize, s: &str) -> anyhow::Result<LayoutSpec> {
+    match dim {
+        2 => ObsLayout2d::parse(s).map(LayoutSpec::D2).ok_or_else(|| {
+            anyhow::anyhow!("layout {s:?} is not a 2-D layout (valid: {NAMES_2D})")
+        }),
+        1 | 4 => generators::layout_from_name(s).map(LayoutSpec::D1).ok_or_else(|| {
+            anyhow::anyhow!(
+                "layout {s:?} is not a 1-D layout (valid: {NAMES_1D}{})",
+                if dim == 4 { "; dim 4 uses 1-D spatial layouts per time level" } else { "" }
+            )
+        }),
+        other => anyhow::bail!("dim = {other} unsupported (valid: 1, 2, 4)"),
+    }
+}
+
+/// Parse a drift name against the dimension it will run in (same error
+/// discipline as [`parse_layout`]).
+pub fn parse_drift(dim: usize, s: &str) -> anyhow::Result<DriftSpec> {
+    match dim {
+        2 => DriftLayout2d::parse(s).map(DriftSpec::D2).ok_or_else(|| {
+            anyhow::anyhow!(
+                "drift {s:?} is not a 2-D drift layout (valid: {DRIFTS} with a 2-D layout)"
+            )
+        }),
+        1 | 4 => DriftLayout::parse(s).map(DriftSpec::D1).ok_or_else(|| {
+            anyhow::anyhow!(
+                "drift {s:?} is not a 1-D drift layout (valid: {DRIFTS}{})",
+                if dim == 4 { "; dim 4 drifts the density over the time axis" } else { "" }
+            )
+        }),
+        other => anyhow::bail!("dim = {other} unsupported (valid: 1, 2, 4)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_resolve_per_dimension() {
+        assert_eq!(parse_layout(1, "cluster").unwrap(), LayoutSpec::D1(ObsLayout::Cluster));
+        assert_eq!(parse_layout(4, "ramp").unwrap(), LayoutSpec::D1(ObsLayout::Ramp));
+        assert_eq!(parse_layout(2, "ring").unwrap(), LayoutSpec::D2(ObsLayout2d::Ring));
+        let err = parse_layout(2, "cluster").unwrap_err();
+        assert!(err.to_string().contains("not a 2-D layout"), "{err}");
+        let err = parse_layout(1, "ring").unwrap_err();
+        assert!(err.to_string().contains("not a 1-D layout"), "{err}");
+        assert!(parse_layout(3, "uniform").is_err());
+    }
+
+    #[test]
+    fn drifts_resolve_per_dimension() {
+        assert_eq!(
+            parse_drift(1, "rotating_band").unwrap(),
+            DriftSpec::D1(DriftLayout::RotatingBand)
+        );
+        assert_eq!(
+            parse_drift(4, "stationary:uniform").unwrap(),
+            DriftSpec::D1(DriftLayout::Stationary(ObsLayout::Uniform))
+        );
+        assert_eq!(
+            parse_drift(2, "stationary:quadrant").unwrap(),
+            DriftSpec::D2(DriftLayout2d::Stationary(ObsLayout2d::Quadrant))
+        );
+        let err = parse_drift(2, "stationary:cluster").unwrap_err();
+        assert!(err.to_string().contains("not a 2-D drift"), "{err}");
+        let err = parse_drift(1, "stationary:ring").unwrap_err();
+        assert!(err.to_string().contains("not a 1-D drift"), "{err}");
+    }
+}

@@ -1,0 +1,337 @@
+//! 4-D space-time window geometry: contiguous *time windows* over the
+//! stacked trajectory unknowns u = (u_0, …, u_{N−1}) ∈ R^{nN} — the
+//! Parallel-in-Time decomposition of the weak-constraint 4D-Var CLS
+//! (paper §3 and §7; "Space-Time Decomposition of Kalman Filter",
+//! arXiv:2205.06649 treats space and space-time under one formalism,
+//! which is exactly what this impl plugs into the generic core).
+//!
+//! Windows must be whole numbers of time levels (a boundary inside a
+//! level would split a state vector), so the Migration step moves whole
+//! levels — the paper's "assimilation window" granularity. DyDD balances
+//! *observation counts across time windows*; drift for cycle runs is a
+//! 1-D drift layout interpreted over the **time axis** (the observation
+//! density wanders across levels as the cycles advance).
+
+use super::{cycle_phase, cycle_rng, Geometry};
+use crate::cls::{LocalBlock, StateOp};
+use crate::domain::{generators, DriftLayout, Mesh1d, ObsLayout, ObservationSet, Partition};
+use crate::fourd::TrajectoryProblem;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// Space-time decomposition of an `n`-point spatial mesh × `steps` time
+/// levels into `windows` contiguous time windows, plus the scenario knobs
+/// the harness drivers read. [`WindowGeometry::new`] fills paper-default
+/// knobs; override the public fields for custom scenarios.
+#[derive(Debug, Clone)]
+pub struct WindowGeometry {
+    pub mesh: Mesh1d,
+    /// Time levels N of the trajectory.
+    pub steps: usize,
+    /// Window count of the initial decomposition.
+    pub windows: usize,
+    /// Propagator stencil M of problems this geometry builds.
+    pub state: StateOp,
+    /// Background weight (R0⁻¹ diagonal) of problems this geometry builds.
+    pub state_weight: f64,
+    /// Model-constraint weight (Q⁻¹ scalar) of problems this geometry
+    /// builds.
+    pub model_weight: f64,
+    /// Spatial layout of per-level observations ([`Geometry::static_obs`]).
+    pub layout: ObsLayout,
+    /// Drift of the observation density over the *time axis* for cycle
+    /// runs ([`Geometry::cycle_obs`]).
+    pub drift: DriftLayout,
+}
+
+impl WindowGeometry {
+    /// Geometry over an `n`-point spatial mesh × `steps` levels split into
+    /// `windows` time windows, with the default scenario knobs (tridiag
+    /// propagator, uniform spatial observations, translating-blob drift
+    /// over the time axis).
+    pub fn new(n: usize, steps: usize, windows: usize) -> Self {
+        assert!(steps >= 1, "need at least one time level");
+        assert!(
+            (1..=steps).contains(&windows),
+            "need 1 <= windows <= steps (= {steps}); got {windows}"
+        );
+        WindowGeometry {
+            mesh: Mesh1d::new(n),
+            steps,
+            windows,
+            state: StateOp::Tridiag { main: 0.9, off: 0.05 },
+            state_weight: 4.0,
+            model_weight: 5.0,
+            layout: ObsLayout::Uniform,
+            drift: DriftLayout::TranslatingBlob,
+        }
+    }
+
+    /// Spatial unknowns per level.
+    pub fn n_space(&self) -> usize {
+        self.mesh.n()
+    }
+
+    /// Bin drifting "time positions" in [0, 1] into per-level observation
+    /// counts — how a 1-D drift layout becomes a drifting density over the
+    /// time axis.
+    fn level_counts(&self, positions: &ObservationSet) -> Vec<usize> {
+        let mut counts = vec![0usize; self.steps];
+        for &x in &positions.locs {
+            let l = ((x * self.steps as f64) as usize).min(self.steps - 1);
+            counts[l] += 1;
+        }
+        counts
+    }
+
+    /// Per-level observation sets with the given counts, spatial locations
+    /// drawn from the configured layout.
+    fn level_sets(&self, counts: &[usize], rng: &mut Rng) -> Vec<ObservationSet> {
+        counts.iter().map(|&c| generators::generate(self.layout, c, rng)).collect()
+    }
+}
+
+impl Geometry for WindowGeometry {
+    type Part = Partition;
+    type Obs = Vec<ObservationSet>;
+    type Problem = TrajectoryProblem;
+
+    fn dim(&self) -> usize {
+        4
+    }
+
+    fn n_unknowns(&self) -> usize {
+        self.mesh.n() * self.steps
+    }
+
+    fn p(&self) -> usize {
+        self.windows
+    }
+
+    fn parts_of(&self, part: &Partition) -> usize {
+        part.p()
+    }
+
+    fn part_sizes(&self, part: &Partition) -> Vec<usize> {
+        (0..part.p()).map(|w| part.size(w)).collect()
+    }
+
+    fn initial_partition(&self) -> Partition {
+        let n = self.mesh.n();
+        let bounds: Vec<usize> =
+            (0..=self.windows).map(|w| w * self.steps / self.windows * n).collect();
+        Partition::from_bounds(self.n_unknowns(), bounds)
+    }
+
+    /// Observation census per time window: all observations of level l
+    /// live in the columns of level l, so the window owning column (l, 0)
+    /// owns them (windows are level-aligned by construction).
+    fn census(&self, part: &Partition, obs: &Vec<ObservationSet>) -> Vec<usize> {
+        let n = self.mesh.n();
+        let mut counts = vec![0usize; part.p()];
+        for (l, set) in obs.iter().enumerate() {
+            counts[part.owner(l * n)] += set.len();
+        }
+        counts
+    }
+
+    fn coupling_graph(&self, part: &Partition) -> Graph {
+        // Time windows couple through the model-constraint rows of their
+        // boundary levels: a chain.
+        Graph::chain(part.p())
+    }
+
+    /// Realize targets at level granularity: cumulative-nearest level
+    /// boundaries (a window boundary inside a level would split a state
+    /// vector, so the Migration step moves whole levels).
+    fn realize_schedule(
+        &self,
+        part: &Partition,
+        obs: &Vec<ObservationSet>,
+        l_fin: &[usize],
+    ) -> Partition {
+        let n = self.mesh.n();
+        let steps = self.steps;
+        let windows = part.p();
+        debug_assert_eq!(l_fin.len(), windows);
+        let counts_per_level: Vec<usize> = obs.iter().map(|o| o.len()).collect();
+        let total: usize = counts_per_level.iter().sum();
+        let mut bounds = vec![0usize];
+        let mut cum_target = 0usize;
+        for w in 0..windows - 1 {
+            cum_target += l_fin[w];
+            // Find the level boundary whose cumulative count is nearest,
+            // keeping at least one level per remaining window.
+            let mut cum = 0usize;
+            let mut best = (usize::MAX, bounds[w] + 1);
+            for (l, &c) in counts_per_level.iter().enumerate() {
+                cum += c;
+                let lvl = l + 1;
+                if lvl <= bounds[w] || lvl > steps - (windows - 1 - w) {
+                    continue;
+                }
+                let dist = cum.abs_diff(cum_target.min(total));
+                if dist < best.0 {
+                    best = (dist, lvl);
+                }
+            }
+            bounds.push(best.1);
+        }
+        bounds.push(steps);
+        let col_bounds: Vec<usize> = bounds.iter().map(|&l| l * n).collect();
+        Partition::from_bounds(self.n_unknowns(), col_bounds)
+    }
+
+    fn owner_of_col(&self, part: &Partition, gc: usize) -> usize {
+        part.owner(gc)
+    }
+
+    fn local_block(
+        &self,
+        prob: &TrajectoryProblem,
+        part: &Partition,
+        w: usize,
+        overlap: usize,
+    ) -> LocalBlock {
+        let (own_lo, own_hi) = part.interval(w);
+        let (lo, hi) = part.interval_with_overlap(w, overlap);
+        prob.local_block_overlap(lo, hi, own_lo, own_hi)
+    }
+
+    fn obs_of<'a>(&self, prob: &'a TrajectoryProblem) -> &'a Vec<ObservationSet> {
+        &prob.obs
+    }
+
+    /// `m` observations spread evenly over the levels (remainder to the
+    /// earliest levels), spatial locations from the configured layout.
+    fn static_obs(&self, m: usize, rng: &mut Rng) -> Vec<ObservationSet> {
+        let counts: Vec<usize> = (0..self.steps)
+            .map(|l| m / self.steps + usize::from(l < m % self.steps))
+            .collect();
+        self.level_sets(&counts, rng)
+    }
+
+    /// Drifting space-time workload: the drift layout draws `m` time
+    /// positions at phase t = k/(K−1) (the observation density over the
+    /// time axis), which are binned into per-level counts; each level then
+    /// draws its spatial locations from the static layout. Same stream
+    /// discipline as 1-D/2-D: one [`cycle_rng`] stream per cycle.
+    fn cycle_obs(&self, m: usize, seed: u64, k: usize, cycles: usize) -> Vec<ObservationSet> {
+        let mut rng = cycle_rng(seed, k);
+        let positions =
+            generators::generate_drift(self.drift, m, cycle_phase(k, cycles), &mut rng);
+        let counts = self.level_counts(&positions);
+        self.level_sets(&counts, &mut rng)
+    }
+
+    fn background(&self) -> Vec<f64> {
+        generators::background_field(&self.mesh)
+    }
+
+    fn make_problem(&self, y0: Vec<f64>, obs: Vec<ObservationSet>) -> TrajectoryProblem {
+        let n = self.mesh.n();
+        TrajectoryProblem::new(
+            self.mesh.clone(),
+            self.state.clone(),
+            self.steps,
+            y0,
+            vec![self.state_weight; n],
+            self.model_weight,
+            obs,
+        )
+    }
+
+    /// Sequential VAR-KF over the stacked space-time system: prior =
+    /// background + model-constraint rows, then one rank-1 update per
+    /// observation (the baseline the 4-D regression tests compare to).
+    fn solve_baseline(&self, prob: &TrajectoryProblem) -> Vec<f64> {
+        let m_obs: usize = prob.obs.iter().map(|o| o.len()).sum();
+        crate::kf::kf_solve_rows(prob.n(), prob.n(), m_obs, |r| prob.sparse_row(r)).x
+    }
+
+    /// The forecast becomes the next background: the last time level's
+    /// analysis state.
+    fn next_background(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.mesh.n();
+        debug_assert_eq!(x.len(), n * self.steps);
+        x[(self.steps - 1) * n..].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_partition_is_level_aligned() {
+        let g = WindowGeometry::new(10, 6, 4);
+        let part = g.initial_partition();
+        assert_eq!(g.parts_of(&part), 4);
+        assert_eq!(g.n_unknowns(), 60);
+        for &b in part.bounds() {
+            assert_eq!(b % 10, 0, "bound {b} inside a level");
+        }
+        assert_eq!(g.part_sizes(&part).iter().sum::<usize>(), 60);
+    }
+
+    #[test]
+    fn census_counts_per_window() {
+        let g = WindowGeometry::new(8, 4, 2);
+        let part = g.initial_partition();
+        let mut rng = Rng::new(1);
+        let obs = g.static_obs(10, &mut rng);
+        let census = g.census(&part, &obs);
+        assert_eq!(census.iter().sum::<usize>(), 10);
+        // static_obs splits 10 = 3+3+2+2 over 4 levels -> windows of 2
+        // levels get 6 and 4.
+        assert_eq!(census, vec![6, 4]);
+    }
+
+    #[test]
+    fn realize_schedule_moves_whole_levels() {
+        let g = WindowGeometry::new(8, 8, 4);
+        let part = g.initial_partition();
+        // Heavily skewed per-level counts.
+        let mut rng = Rng::new(2);
+        let counts = [40usize, 2, 2, 2, 2, 2, 2, 40];
+        let obs: Vec<ObservationSet> =
+            counts.iter().map(|&c| generators::generate(ObsLayout::Uniform, c, &mut rng)).collect();
+        let out = crate::dydd::rebalance(&g, &part, &obs, &crate::dydd::DyddParams::default())
+            .unwrap();
+        for &b in out.partition.bounds() {
+            assert_eq!(b % 8, 0, "bound {b} inside a level");
+        }
+        assert_eq!(out.census_after.iter().sum::<usize>(), 92);
+        // Balanced to level granularity: better than the uniform split's
+        // worst window (44).
+        assert!(*out.census_after.iter().max().unwrap() <= 44, "{:?}", out.census_after);
+    }
+
+    #[test]
+    fn cycle_obs_density_drifts_over_the_time_axis() {
+        let g = WindowGeometry::new(12, 16, 4);
+        let early = g.cycle_obs(320, 42, 0, 8);
+        let late = g.cycle_obs(320, 42, 7, 8);
+        assert_eq!(early.iter().map(|o| o.len()).sum::<usize>(), 320);
+        assert_eq!(late.iter().map(|o| o.len()).sum::<usize>(), 320);
+        // The blob's mass moves to later levels as the phase advances.
+        let centroid = |sets: &[ObservationSet]| -> f64 {
+            let total: usize = sets.iter().map(|o| o.len()).sum();
+            sets.iter().enumerate().map(|(l, o)| l as f64 * o.len() as f64).sum::<f64>()
+                / total as f64
+        };
+        assert!(centroid(&late) > centroid(&early), "density did not drift");
+        // Deterministic per (seed, k).
+        let replay = g.cycle_obs(320, 42, 7, 8);
+        let lens: Vec<usize> = late.iter().map(|o| o.len()).collect();
+        let lens2: Vec<usize> = replay.iter().map(|o| o.len()).collect();
+        assert_eq!(lens, lens2);
+    }
+
+    #[test]
+    fn next_background_is_the_last_level() {
+        let g = WindowGeometry::new(4, 3, 2);
+        let x: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        assert_eq!(g.next_background(&x), vec![8.0, 9.0, 10.0, 11.0]);
+    }
+}

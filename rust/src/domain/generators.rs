@@ -61,6 +61,13 @@ pub fn field(x: f64) -> f64 {
     (2.0 * std::f64::consts::PI * x).sin() + 0.5 * (6.0 * std::f64::consts::PI * x).cos()
 }
 
+/// [`field`] evaluated at every grid point — the background y0 of a 1-D
+/// CLS problem (the 1-D analogue of `domain2d::generators::background_field`).
+pub fn background_field(mesh: &Mesh1d) -> Vec<f64> {
+    let n = mesh.n();
+    (0..n).map(|j| field(j as f64 / (n - 1) as f64)).collect()
+}
+
 /// Generate observations whose per-subdomain census is exactly `counts`
 /// under the given partition (reproduces the paper's l_in vectors).
 ///

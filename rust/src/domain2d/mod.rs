@@ -9,7 +9,8 @@
 //! observation sets with clustered / banded / ring layouts, a per-box
 //! observation census, and the 4-connected decomposition [`crate::graph::Graph`]
 //! the DyDD Laplacian scheduler consumes unchanged. The geometric migration
-//! step lives in [`crate::dydd::rebalance_partition2d`].
+//! step lives in the geometry-generic [`crate::dydd::rebalance()`] through
+//! [`crate::decomp::BoxGeometry`].
 
 pub mod generators;
 pub mod mesh;

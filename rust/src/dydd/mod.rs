@@ -12,18 +12,18 @@
 //!    (i, j) is δ_ij = round(λ_i − λ_j) — the Euclidean-norm-minimizing
 //!    schedule of Hu–Blake–Emerson.
 //! 3. **Migration step**: the δ's are applied across edges (in geometric
-//!    mode, by shifting subdomain boundaries — [`rebalance_partition`]).
+//!    mode, by shifting subdomain boundaries — the geometry-generic
+//!    [`rebalance()`], one implementation for every
+//!    [`crate::decomp::Geometry`]).
 //! 4. **Update step**: subdomain/processor maps are refreshed.
 
 mod balancer;
-mod geometric;
-mod geometric2d;
 mod policy;
+mod rebalance;
 
 pub use balancer::{balance, repair, schedule_once, BalanceError, DyddOutcome, DyddParams};
-pub use geometric::{rebalance_partition, GeometricOutcome};
-pub use geometric2d::{rebalance_partition2d, GeometricOutcome2d};
 pub use policy::RebalancePolicy;
+pub use rebalance::{rebalance, GeometricOutcome, RebalanceRecord};
 
 /// Load-balance quality: ℰ = min_i l_fin(i) / max_i l_fin(i) (§6).
 /// ℰ = 1 is perfect balance.

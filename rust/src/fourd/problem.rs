@@ -114,6 +114,21 @@ impl TrajectoryProblem {
     /// Extract the local block for the (time-window) column interval
     /// [lo, hi) — identical semantics to `ClsProblem::local_block`.
     pub fn local_block(&self, lo: usize, hi: usize) -> LocalBlock {
+        self.local_block_overlap(lo, hi, lo, hi)
+    }
+
+    /// Local block over the extended column interval [lo, hi) whose owned
+    /// region is [own_lo, own_hi) — the overlap-extended restriction of
+    /// eqs. 21-22 on the space-time column set (columns outside the owned
+    /// window are the overlap extension into neighbouring windows).
+    pub fn local_block_overlap(
+        &self,
+        lo: usize,
+        hi: usize,
+        own_lo: usize,
+        own_hi: usize,
+    ) -> LocalBlock {
+        debug_assert!(lo <= own_lo && own_lo < own_hi && own_hi <= hi);
         // One sparse_row pass: keep each included row's coefficients so the
         // shared restriction core does not recompute (and re-sort) them.
         let mut rows = Vec::new();
@@ -130,8 +145,8 @@ impl TrajectoryProblem {
         // split is a partition point.
         let obs_row_start = rows.partition_point(|&r| r < self.n());
         let cols: Vec<usize> = (lo..hi).collect();
+        let owned: Vec<bool> = cols.iter().map(|&c| (own_lo..own_hi).contains(&c)).collect();
         let (a, d, b, halo) = restrict_rows_cached(&a_rows, &cols);
-        let owned = vec![true; cols.len()];
         LocalBlock { cols, owned, a, d, b, halo, global_rows: rows, obs_row_start }
     }
 }

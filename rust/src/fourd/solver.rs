@@ -4,9 +4,9 @@
 
 use super::problem::TrajectoryProblem;
 use crate::ddkf::{LocalSolver, SchwarzOptions};
+use crate::decomp::{Geometry, WindowGeometry};
 use crate::domain::Partition;
-use crate::dydd::{balance, DyddParams};
-use crate::graph::Graph;
+use crate::dydd::{rebalance, DyddParams};
 
 /// Observation census per time window of `part` (a partition of the
 /// space-time index set in time-major order).
@@ -24,7 +24,9 @@ pub fn window_census(prob: &TrajectoryProblem, part: &Partition) -> Vec<usize> {
 }
 
 /// Build a time-window partition of the nN unknowns with `windows`
-/// windows whose per-window observation counts are DyDD-balanced.
+/// windows whose per-window observation counts are DyDD-balanced — a thin
+/// wrapper over the geometry-generic [`rebalance`] on a
+/// [`WindowGeometry`].
 ///
 /// Windows must be whole numbers of time levels (a window boundary inside
 /// a level would split a state vector), so the migration step moves whole
@@ -33,42 +35,15 @@ pub fn window_partition(
     prob: &TrajectoryProblem,
     windows: usize,
 ) -> anyhow::Result<(Partition, Vec<usize>)> {
-    let n = prob.n_space();
-    let steps = prob.n_steps;
-    anyhow::ensure!(windows >= 1 && windows <= steps, "need 1 <= windows <= N");
-    // Initial: uniform in time levels.
-    let counts_per_level: Vec<usize> = prob.obs.iter().map(|o| o.len()).collect();
-    let uniform_bounds: Vec<usize> = (0..=windows).map(|w| w * steps / windows).collect();
-    let l_in: Vec<usize> = (0..windows)
-        .map(|w| counts_per_level[uniform_bounds[w]..uniform_bounds[w + 1]].iter().sum())
-        .collect();
-    // DyDD on the window chain.
-    let out = balance(&Graph::chain(windows), &l_in, &DyddParams::default())?;
-    // Realize targets at level granularity: cumulative-nearest boundaries.
-    let mut bounds = vec![0usize];
-    let mut cum_target = 0usize;
-    let total: usize = counts_per_level.iter().sum();
-    for w in 0..windows - 1 {
-        cum_target += out.l_fin[w];
-        // Find the level boundary whose cumulative count is nearest.
-        let mut cum = 0usize;
-        let mut best = (usize::MAX, bounds[w] + 1);
-        for (l, &c) in counts_per_level.iter().enumerate() {
-            cum += c;
-            let lvl = l + 1;
-            if lvl <= bounds[w] || lvl > steps - (windows - 1 - w) {
-                continue;
-            }
-            let dist = cum.abs_diff(cum_target.min(total));
-            if dist < best.0 {
-                best = (dist, lvl);
-            }
-        }
-        bounds.push(best.1);
-    }
-    bounds.push(steps);
-    let col_bounds: Vec<usize> = bounds.iter().map(|&l| l * n).collect();
-    Ok((Partition::from_bounds(prob.n(), col_bounds), out.l_fin))
+    anyhow::ensure!(
+        windows >= 1 && windows <= prob.n_steps,
+        "need 1 <= windows <= N (= {} time levels); got {windows}",
+        prob.n_steps
+    );
+    let geom = WindowGeometry::new(prob.n_space(), prob.n_steps, windows);
+    let part0 = geom.initial_partition();
+    let out = rebalance(&geom, &part0, &prob.obs, &DyddParams::default())?;
+    Ok((out.partition, out.dydd.l_fin))
 }
 
 /// Multiplicative Schwarz over time windows. Returns (trajectory, iters,

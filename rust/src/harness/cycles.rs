@@ -2,10 +2,13 @@
 //! assimilation cycles while the observation distribution drifts, with a
 //! [`RebalancePolicy`] deciding per cycle whether DyDD re-defines the
 //! decomposition — the paper's *dynamic* in Dynamic Domain Decomposition.
+//! One geometry-generic driver ([`run_cycles_on`]) serves 1-D intervals,
+//! 2-D box grids and 4-D space-time windows; [`run_cycles`] dispatches on
+//! the config's `dim`.
 //!
 //! Each cycle
-//!   1. draws the cycle's observations from a drifting generator at phase
-//!      t = k/(K−1),
+//!   1. draws the cycle's observations from the geometry's drifting
+//!      generator at phase t = k/(K−1),
 //!   2. computes the census balance ℰ under the *incumbent* partition and
 //!      asks the policy whether to re-run DyDD (warm-started from that
 //!      partition — boundaries migrate from where they are, not from the
@@ -13,43 +16,31 @@
 //!   3. solves the cycle's CLS with the persistent [`WorkerPool`] (blocks
 //!      are re-extracted every cycle because the data changed; the phase
 //!      colouring is recomputed only when the partition actually moved),
-//!   4. feeds the DD-KF analysis forward as the next cycle's background.
+//!   4. feeds the DD-KF analysis forward as the next cycle's background
+//!      ([`crate::decomp::Geometry::next_background`] — the identity in
+//!      1-D/2-D, the last time level's state for space-time windows, so
+//!      `cycle --dim 4` chains forecast → background like an operational
+//!      4D-Var window cascade).
 //!
 //! The per-cycle records are what the `cycle` CLI subcommand and the
 //! `cycles` bench report: balance before/after, rebalances triggered,
 //! migration volume, and the simulated-parallel critical path.
 
-use crate::cls::{ClsProblem, ClsProblem2d};
 use crate::config::ExperimentConfig;
-use crate::coordinator::{blocks1d, blocks2d, phases1d, phases2d, WorkerPool};
-use crate::domain::{generators, DriftLayout, Mesh1d, ObservationSet, Partition};
-use crate::domain2d::{generators as gen2d, BoxPartition, DriftLayout2d, ObservationSet2d};
-use crate::dydd::{balance_ratio, GeometricOutcome, GeometricOutcome2d, RebalancePolicy};
-use crate::harness::pipeline::{maybe_rebalance, maybe_rebalance2d};
-use crate::kf::{kf_solve_cls, kf_solve_cls2d};
+use crate::coordinator::WorkerPool;
+use crate::decomp::{blocks_of, phases_of, Geometry};
+use crate::domain::{generators, DriftLayout, ObservationSet};
+use crate::domain2d::{generators as gen2d, DriftLayout2d, ObservationSet2d};
+use crate::dydd::{balance_ratio, RebalancePolicy, RebalanceRecord};
+use crate::harness::pipeline::maybe_rebalance;
 use crate::linalg::mat::dist2;
 use std::time::{Duration, Instant};
 
-/// Phase t ∈ [0, 1] of cycle `k` in a K-cycle run (single-cycle runs sit
-/// at t = 0).
-pub fn cycle_phase(k: usize, cycles: usize) -> f64 {
-    if cycles <= 1 {
-        0.0
-    } else {
-        k as f64 / (cycles - 1) as f64
-    }
-}
+pub use crate::decomp::cycle_phase;
 
-/// Deterministic per-cycle RNG stream, regenerable for any cycle in
-/// isolation (the property the chained-by-hand equivalence tests rely
-/// on). Uses [`crate::util::Rng::fork`] rather than `seed + k·γ`: with
-/// the latter, cycle k+1's SplitMix64 stream would be cycle k's shifted
-/// by one draw — fully correlated sampling jitter across cycles.
-fn cycle_rng(seed: u64, k: usize) -> crate::util::Rng {
-    crate::util::Rng::new(seed).fork(k as u64)
-}
-
-/// The observations cycle `k` of a K-cycle 1-D run assimilates.
+/// The observations cycle `k` of a K-cycle 1-D run assimilates
+/// (convenience wrapper over the geometry hook, kept for tests and
+/// hand-chained comparisons).
 pub fn cycle_observations(
     drift: DriftLayout,
     m: usize,
@@ -57,7 +48,12 @@ pub fn cycle_observations(
     k: usize,
     cycles: usize,
 ) -> ObservationSet {
-    generators::generate_drift(drift, m, cycle_phase(k, cycles), &mut cycle_rng(seed, k))
+    generators::generate_drift(
+        drift,
+        m,
+        cycle_phase(k, cycles),
+        &mut crate::decomp::cycle_rng(seed, k),
+    )
 }
 
 /// The observations cycle `k` of a K-cycle 2-D run assimilates.
@@ -68,7 +64,12 @@ pub fn cycle_observations2d(
     k: usize,
     cycles: usize,
 ) -> ObservationSet2d {
-    gen2d::generate_drift2d(drift, m, cycle_phase(k, cycles), &mut cycle_rng(seed, k))
+    gen2d::generate_drift2d(
+        drift,
+        m,
+        cycle_phase(k, cycles),
+        &mut crate::decomp::cycle_rng(seed, k),
+    )
 }
 
 /// Everything one assimilation cycle reports (a row of the cycle table).
@@ -88,10 +89,9 @@ pub struct CycleRecord {
     /// Whether the solve partition differs from the previous cycle's
     /// (a triggered rebalance can still reproduce the incumbent bounds).
     pub partition_changed: bool,
-    /// 1-D DyDD record for this cycle (None when not rebalanced / dim 2).
-    pub dydd: Option<GeometricOutcome>,
-    /// 2-D DyDD record for this cycle (None when not rebalanced / dim 1).
-    pub dydd2d: Option<GeometricOutcome2d>,
+    /// DyDD record for this cycle (None when not rebalanced) —
+    /// partition-erased, the same shape for every geometry.
+    pub dydd: Option<RebalanceRecord>,
     /// T_DyDD spent this cycle (zero without a rebalance).
     pub t_dydd: Duration,
     /// Simulated-parallel critical path of this cycle's DD-KF solve.
@@ -107,12 +107,13 @@ pub struct CycleRecord {
 #[derive(Debug, Clone)]
 pub struct CycleReport {
     pub name: String,
-    /// Total unknowns (nx·ny for the 2-D path).
+    /// Total unknowns (nx·ny in 2-D, n·N in 4-D).
     pub n: usize,
     pub p: usize,
     pub policy: RebalancePolicy,
     pub records: Vec<CycleRecord>,
-    /// Final analysis state after the last cycle.
+    /// Final analysis state after the last cycle (the full space-time
+    /// trajectory for dim-4 runs).
     pub x: Vec<f64>,
 }
 
@@ -229,60 +230,70 @@ fn effective_policy(cfg: &ExperimentConfig) -> RebalancePolicy {
     }
 }
 
-/// Run K assimilation cycles of the 1-D pipeline (see module docs).
+/// Run K assimilation cycles, dispatching to the geometry the config's
+/// `dim` names (see module docs).
 ///
 /// `with_baseline`: also run the sequential KF on every cycle's problem
 /// (same chained background) and record per-cycle error_DD-DA.
 pub fn run_cycles(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result<CycleReport> {
-    anyhow::ensure!(cfg.dim == 1, "run_cycles drives the 1-D pipeline; use run_cycles2d");
+    use crate::harness::pipeline::{resolve_geometry, ResolvedGeometry};
+    let (geom, cfg) = resolve_geometry(cfg)?;
+    match geom {
+        ResolvedGeometry::D1(g) => run_cycles_on(&g, &cfg, with_baseline),
+        ResolvedGeometry::D2(g) => run_cycles_on(&g, &cfg, with_baseline),
+        ResolvedGeometry::D4(g) => run_cycles_on(&g, &cfg, with_baseline),
+    }
+}
+
+/// The geometry-generic K-cycle driver (see module docs for the per-cycle
+/// sequence).
+pub fn run_cycles_on<G: Geometry>(
+    geom: &G,
+    cfg: &ExperimentConfig,
+    with_baseline: bool,
+) -> anyhow::Result<CycleReport> {
     let policy = effective_policy(cfg);
-    let mesh = Mesh1d::new(cfg.n);
-    let mut part = Partition::uniform(cfg.n, cfg.p);
-    let mut pool = WorkerPool::new(cfg.p, cfg.backend, cfg.artifacts_dir.clone());
-    let mut y0: Vec<f64> = (0..cfg.n)
-        .map(|j| generators::field(j as f64 / (cfg.n - 1) as f64))
-        .collect();
-    let mut phases_cache: Option<(Partition, Vec<Vec<usize>>)> = None;
+    let n = geom.n_unknowns();
+    let p = geom.p();
+    let mut part = geom.initial_partition();
+    let mut pool = WorkerPool::new(p, cfg.backend, cfg.artifacts_dir.clone());
+    let mut y0 = geom.background();
+    let mut x_final: Vec<f64> = Vec::new();
+    let mut phases_cache: Option<(G::Part, Vec<Vec<usize>>)> = None;
     let mut records = Vec::with_capacity(cfg.cycles);
 
     for k in 0..cfg.cycles {
-        let obs = cycle_observations(cfg.drift, cfg.m, cfg.seed, k, cfg.cycles);
-        let balance_before = balance_ratio(&obs.census(&mesh, &part));
+        let obs = geom.cycle_obs(cfg.m, cfg.seed, k, cfg.cycles);
+        let balance_before = balance_ratio(&geom.census(&part, &obs));
         let rebalanced = policy.should_rebalance(balance_before);
 
         // Warm start: DyDD migrates from the incumbent bounds.
         let t0 = Instant::now();
-        let (new_part, dydd) = maybe_rebalance(&mesh, &part, &obs, rebalanced)?;
+        let (new_part, dydd) = maybe_rebalance(geom, &part, &obs, rebalanced)?;
         let t_dydd = if rebalanced { t0.elapsed() } else { Duration::ZERO };
         let partition_changed = new_part != part;
         part = new_part;
-        let balance_after = balance_ratio(&obs.census(&mesh, &part));
+        let balance_after = balance_ratio(&geom.census(&part, &obs));
         let migration_volume = dydd.as_ref().map(|g| g.dydd.migration_volume()).unwrap_or(0);
 
         // Solve this cycle's CLS on the persistent pool. Blocks carry the
         // cycle's data so they are re-extracted every cycle; the phase
         // colouring depends only on the partition geometry and is reused
         // verbatim while the partition stands still.
-        let prob = ClsProblem::new(
-            mesh.clone(),
-            cfg.state_op.build(),
-            y0.clone(),
-            vec![cfg.state_weight; cfg.n],
-            obs,
-        );
-        let blocks = blocks1d(&prob, &part, cfg.schwarz.overlap);
+        let prob = geom.make_problem(y0.clone(), obs);
+        let blocks = blocks_of(geom, &prob, &part, cfg.schwarz.overlap);
         let phases = match &phases_cache {
             Some((cached_part, phases)) if *cached_part == part => phases.clone(),
             _ => {
-                let phases = phases1d(&blocks, &part);
+                let phases = phases_of(geom, &blocks, &part);
                 phases_cache = Some((part.clone(), phases.clone()));
                 phases
             }
         };
-        let par = pool.solve_blocks(cfg.n, blocks, &phases, &cfg.schwarz)?;
+        let par = pool.solve_blocks(n, blocks, &phases, &cfg.schwarz)?;
 
         let error_dd_da = if with_baseline {
-            Some(dist2(&kf_solve_cls(&prob).x, &par.x))
+            Some(dist2(&geom.solve_baseline(&prob), &par.x))
         } else {
             None
         };
@@ -296,7 +307,6 @@ pub fn run_cycles(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result
             migration_volume,
             partition_changed,
             dydd,
-            dydd2d: None,
             t_dydd,
             t_critical: par.t_critical,
             iters: par.iters,
@@ -306,86 +316,11 @@ pub fn run_cycles(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result
         });
 
         // Feed the analysis forward as the next cycle's background.
-        y0 = par.x;
+        y0 = geom.next_background(&par.x);
+        x_final = par.x;
     }
 
-    Ok(CycleReport { name: cfg.name.clone(), n: cfg.n, p: cfg.p, policy, records, x: y0 })
-}
-
-/// Run K assimilation cycles of the 2-D box-grid pipeline.
-pub fn run_cycles2d(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result<CycleReport> {
-    anyhow::ensure!(cfg.dim == 2, "run_cycles2d requires dim = 2");
-    let policy = effective_policy(cfg);
-    let mesh = crate::domain2d::Mesh2d::square(cfg.n);
-    let n = mesh.n();
-    let p = cfg.px * cfg.py;
-    let mut part = BoxPartition::uniform(cfg.n, cfg.n, cfg.px, cfg.py);
-    let mut pool = WorkerPool::new(p, cfg.backend, cfg.artifacts_dir.clone());
-    let mut y0 = gen2d::background_field(&mesh);
-    let mut phases_cache: Option<(BoxPartition, Vec<Vec<usize>>)> = None;
-    let mut records = Vec::with_capacity(cfg.cycles);
-
-    let state = cfg.state_op.build2d();
-
-    for k in 0..cfg.cycles {
-        let obs = cycle_observations2d(cfg.drift2d, cfg.m, cfg.seed, k, cfg.cycles);
-        let balance_before = balance_ratio(&obs.census(&mesh, &part));
-        let rebalanced = policy.should_rebalance(balance_before);
-
-        let t0 = Instant::now();
-        let (new_part, dydd2d) = maybe_rebalance2d(&mesh, &part, &obs, rebalanced)?;
-        let t_dydd = if rebalanced { t0.elapsed() } else { Duration::ZERO };
-        let partition_changed = new_part != part;
-        part = new_part;
-        let balance_after = balance_ratio(&obs.census(&mesh, &part));
-        let migration_volume = dydd2d.as_ref().map(|g| g.dydd.migration_volume()).unwrap_or(0);
-
-        let prob = ClsProblem2d::new(
-            mesh.clone(),
-            state.clone(),
-            y0.clone(),
-            vec![cfg.state_weight; n],
-            obs,
-        );
-        let blocks = blocks2d(&prob, &part, cfg.schwarz.overlap);
-        let phases = match &phases_cache {
-            Some((cached_part, phases)) if *cached_part == part => phases.clone(),
-            _ => {
-                let phases = phases2d(&blocks, &prob, &part);
-                phases_cache = Some((part.clone(), phases.clone()));
-                phases
-            }
-        };
-        let par = pool.solve_blocks(n, blocks, &phases, &cfg.schwarz)?;
-
-        let error_dd_da = if with_baseline {
-            Some(dist2(&kf_solve_cls2d(&prob).x, &par.x))
-        } else {
-            None
-        };
-
-        records.push(CycleRecord {
-            cycle: k,
-            m: cfg.m,
-            balance_before,
-            balance_after,
-            rebalanced,
-            migration_volume,
-            partition_changed,
-            dydd: None,
-            dydd2d,
-            t_dydd,
-            t_critical: par.t_critical,
-            iters: par.iters,
-            converged: par.converged,
-            stalled: par.stalled,
-            error_dd_da,
-        });
-
-        y0 = par.x;
-    }
-
-    Ok(CycleReport { name: cfg.name.clone(), n, p, policy, records, x: y0 })
+    Ok(CycleReport { name: cfg.name.clone(), n, p, policy, records, x: x_final })
 }
 
 #[cfg(test)]
@@ -464,7 +399,7 @@ mod tests {
         cfg.cycles = 3;
         cfg.drift2d = DriftLayout2d::AppearingCluster;
         cfg.cycle_policy = RebalancePolicy::EveryCycle;
-        let rep = run_cycles2d(&cfg, true).unwrap();
+        let rep = run_cycles(&cfg, true).unwrap();
         assert_eq!(rep.records.len(), 3);
         assert_eq!(rep.p, 4);
         assert_eq!(rep.n, 196);
@@ -472,7 +407,7 @@ mod tests {
         assert_eq!(rep.rebalances(), 3);
         for r in &rep.records {
             assert!(r.error_dd_da.unwrap() < 1e-9, "cycle {}", r.cycle);
-            assert!(r.dydd2d.is_some());
+            assert!(r.dydd.is_some());
         }
     }
 
@@ -487,10 +422,37 @@ mod tests {
         cfg.cycles = 2;
         cfg.drift2d = DriftLayout2d::Stationary(ObsLayout2d::Uniform2d);
         cfg.cycle_policy = RebalancePolicy::Never;
-        let rep = run_cycles2d(&cfg, false).unwrap();
+        let rep = run_cycles(&cfg, false).unwrap();
         assert_eq!(rep.rebalances(), 0);
         assert!(rep.records.iter().all(|r| !r.partition_changed));
         assert!(rep.all_converged());
+    }
+
+    #[test]
+    fn cycles4d_feed_the_forecast_forward() {
+        // The tentpole capability: multi-cycle assimilation on space-time
+        // windows with adaptive DyDD re-triggering.
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 4;
+        cfg.n = 8;
+        cfg.steps = 8;
+        cfg.p = 4;
+        cfg.m = 96;
+        cfg.cycles = 3;
+        cfg.drift = DriftLayout::TranslatingBlob;
+        cfg.cycle_policy = RebalancePolicy::EveryCycle;
+        let rep = run_cycles(&cfg, true).unwrap();
+        assert_eq!(rep.records.len(), 3);
+        assert_eq!(rep.p, 4);
+        assert_eq!(rep.n, 64);
+        assert!(rep.all_converged());
+        assert_eq!(rep.rebalances(), 3);
+        for r in &rep.records {
+            assert!(r.error_dd_da.unwrap() < 1e-8, "cycle {}", r.cycle);
+            assert!(r.dydd.is_some());
+        }
+        // The report carries the full final space-time trajectory.
+        assert_eq!(rep.x.len(), 64);
     }
 
     #[test]

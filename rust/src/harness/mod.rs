@@ -8,7 +8,7 @@ pub mod pipeline;
 pub mod scenarios;
 pub mod tables;
 
-pub use cycles::{run_cycles, run_cycles2d, CycleRecord, CycleReport};
-pub use pipeline::{run_experiment, run_experiment2d, ExperimentReport};
+pub use cycles::{run_cycles, run_cycles_on, CycleRecord, CycleReport};
+pub use pipeline::{run_experiment, run_experiment_on, ExperimentReport};
 pub use scenarios::{grid2d, Scenario2d};
 pub use tables::{all_tables, render_table, TableId};

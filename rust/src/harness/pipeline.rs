@@ -1,47 +1,36 @@
 //! The full experiment pipeline: generate workload → DyDD → parallel DD-KF
 //! → sequential-KF baseline → metrics. Produces everything a paper table
-//! row needs.
+//! row needs. One geometry-generic driver ([`run_experiment_on`]) serves
+//! 1-D intervals, 2-D box grids and 4-D space-time windows;
+//! [`run_experiment`] dispatches on the config's `dim`.
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{run_parallel, run_parallel2d, RunConfig};
-use crate::domain::{generators, Mesh1d, ObservationSet, Partition};
-use crate::domain2d::{BoxPartition, Mesh2d, ObservationSet2d};
-use crate::dydd::{
-    balance_ratio, rebalance_partition, rebalance_partition2d, DyddParams, GeometricOutcome,
-    GeometricOutcome2d,
-};
-use crate::kf::{kf_solve_cls, kf_solve_cls2d};
+use crate::coordinator::{run_parallel, RunConfig};
+use crate::decomp::Geometry;
+use crate::domain::{generators, Mesh1d, Partition};
+use crate::dydd::{balance_ratio, rebalance, DyddParams, RebalanceRecord};
 use crate::linalg::mat::dist2;
 use std::time::{Duration, Instant};
 
-/// The DyDD gate every 1-D pipeline entry point shares (single-shot runs
-/// and the per-cycle decisions of [`super::cycles`]): rebalance `part` to
-/// the observation layout when `enabled`, else keep the incumbent
-/// partition.
-pub fn maybe_rebalance(
-    mesh: &Mesh1d,
-    part: &Partition,
-    obs: &ObservationSet,
+/// The DyDD gate every pipeline entry point shares (single-shot runs and
+/// the per-cycle decisions of [`super::cycles`]): rebalance `part` to the
+/// observation layout when `enabled`, else keep the incumbent partition.
+/// Returns the partition the solve should use plus the partition-erased
+/// record reports carry.
+pub fn maybe_rebalance<G: Geometry>(
+    geom: &G,
+    part: &G::Part,
+    obs: &G::Obs,
     enabled: bool,
-) -> anyhow::Result<(Partition, Option<GeometricOutcome>)> {
+) -> anyhow::Result<(G::Part, Option<RebalanceRecord>)> {
     if enabled {
-        let out = rebalance_partition(mesh, part, obs, &DyddParams::default())?;
-        Ok((out.partition.clone(), Some(out)))
-    } else {
-        Ok((part.clone(), None))
-    }
-}
-
-/// 2-D counterpart of [`maybe_rebalance`] on box partitions.
-pub fn maybe_rebalance2d(
-    mesh: &Mesh2d,
-    part: &BoxPartition,
-    obs: &ObservationSet2d,
-    enabled: bool,
-) -> anyhow::Result<(BoxPartition, Option<GeometricOutcome2d>)> {
-    if enabled {
-        let out = rebalance_partition2d(mesh, part, obs, &DyddParams::default())?;
-        Ok((out.partition.clone(), Some(out)))
+        let out = rebalance(geom, part, obs, &DyddParams::default())?;
+        let record = RebalanceRecord {
+            dydd: out.dydd,
+            census_after: out.census_after,
+            sizes: geom.part_sizes(&out.partition),
+        };
+        Ok((out.partition, Some(record)))
     } else {
         Ok((part.clone(), None))
     }
@@ -51,14 +40,13 @@ pub fn maybe_rebalance2d(
 #[derive(Debug, Clone)]
 pub struct ExperimentReport {
     pub name: String,
-    /// Total unknowns (grid points; nx·ny for the 2-D path).
+    /// Total unknowns (grid points; nx·ny in 2-D; n·N in 4-D).
     pub n: usize,
     pub m: usize,
     pub p: usize,
-    /// 1-D DyDD record (None when cfg.dydd = false or dim = 2).
-    pub dydd: Option<GeometricOutcome>,
-    /// 2-D DyDD record (None when cfg.dydd = false or dim = 1).
-    pub dydd2d: Option<GeometricOutcome2d>,
+    /// DyDD record (None when cfg.dydd = false) — partition-erased, the
+    /// same shape for every geometry.
+    pub dydd: Option<RebalanceRecord>,
     /// Parallel DD-KF wall-clock (workers time-share this testbed's cores).
     pub t_parallel: Duration,
     /// Simulated-parallel critical path (max assemble + Σ phase maxima) —
@@ -101,63 +89,124 @@ impl ExperimentReport {
         self.speedup_sim().map(|s| s / self.p as f64)
     }
 
-    /// Realized balance ratio ℰ after DyDD (whichever dimension ran).
+    /// Realized balance ratio ℰ after DyDD.
     pub fn balance(&self) -> Option<f64> {
-        self.dydd
-            .as_ref()
-            .map(|g| g.balance())
-            .or_else(|| self.dydd2d.as_ref().map(|g| g.balance()))
+        self.dydd.as_ref().map(|g| g.balance())
     }
 
     /// Balance ratio ℰ of the *initial* census (before DyDD migration).
     pub fn balance_before(&self) -> Option<f64> {
-        self.dydd
-            .as_ref()
-            .map(|g| balance_ratio(&g.dydd.l_in))
-            .or_else(|| self.dydd2d.as_ref().map(|g| balance_ratio(&g.dydd.l_in)))
+        self.dydd.as_ref().map(|g| balance_ratio(&g.dydd.l_in))
     }
 }
 
-/// Run the full pipeline for one configuration.
+/// Run the full pipeline for one configuration, dispatching to the
+/// geometry the config's `dim` names (1 → intervals, 2 → box grid,
+/// 4 → space-time windows).
 ///
 /// `with_baseline`: also run the sequential KF (T¹) and compute
 /// error_DD-DA; skip for large sweeps where only DyDD timing is studied.
-pub fn run_experiment(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result<ExperimentReport> {
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    with_baseline: bool,
+) -> anyhow::Result<ExperimentReport> {
+    let (geom, cfg) = resolve_geometry(cfg)?;
+    match geom {
+        ResolvedGeometry::D1(g) => run_experiment_on(&g, &cfg, with_baseline),
+        ResolvedGeometry::D2(g) => run_experiment_on(&g, &cfg, with_baseline),
+        ResolvedGeometry::D4(g) => run_experiment_on(&g, &cfg, with_baseline),
+    }
+}
+
+/// The geometry a config's `dim` names.
+pub(crate) enum ResolvedGeometry {
+    D1(crate::decomp::IntervalGeometry),
+    D2(crate::decomp::BoxGeometry),
+    D4(crate::decomp::WindowGeometry),
+}
+
+/// Resolve a config's `dim` to its geometry plus the (possibly adjusted)
+/// config the drivers should run with. This is the single place
+/// dim-specific driver policy lives — the dim-4 shape check and iteration
+/// default below, and any future geometry registration — so
+/// [`run_experiment`] and [`super::cycles::run_cycles`] can never drift
+/// apart.
+pub(crate) fn resolve_geometry(
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<(ResolvedGeometry, ExperimentConfig)> {
+    match cfg.dim {
+        1 => Ok((ResolvedGeometry::D1(cfg.interval_geometry()), cfg.clone())),
+        2 => Ok((ResolvedGeometry::D2(cfg.box_geometry()), cfg.clone())),
+        4 => {
+            ensure_window_shape(cfg)?;
+            // Space-time windows close to one level per window contract
+            // slowly (every unknown sits next to a window boundary), so
+            // the *stock* Schwarz iteration default is too small for
+            // dim 4: raise it to 1000 — but only when the config still
+            // carries the untouched default, so an explicitly configured
+            // budget (lower or higher) stays the user's call.
+            let mut cfg = cfg.clone();
+            if cfg.schwarz.max_iters == crate::ddkf::SchwarzOptions::default().max_iters {
+                cfg.schwarz.max_iters = 1000;
+            }
+            Ok((ResolvedGeometry::D4(cfg.window_geometry()), cfg))
+        }
+        d => anyhow::bail!("dim = {d} has no registered geometry (valid: 1, 2, 4)"),
+    }
+}
+
+/// Actionable shape check for dim-4 configs reaching the drivers without
+/// `ExperimentConfig::validate` (library callers).
+fn ensure_window_shape(cfg: &ExperimentConfig) -> anyhow::Result<()> {
     anyhow::ensure!(
-        cfg.dim == 1,
-        "run_experiment drives the 1-D DD-KF pipeline; for dim = 2 use run_experiment2d"
+        cfg.steps >= 1 && cfg.p >= 1 && cfg.p <= cfg.steps,
+        "dim 4 needs 1 <= p (= time windows, got {}) <= steps (= {} time levels); \
+         set [problem] steps / --steps or lower --p",
+        cfg.p,
+        cfg.steps
     );
-    let prob = cfg.build_problem();
-    let mesh = Mesh1d::new(cfg.n);
-    let part0 = Partition::uniform(cfg.n, cfg.p);
+    Ok(())
+}
+
+/// The geometry-generic pipeline core: generate the workload, optionally
+/// rebalance with DyDD, run the parallel DD-KF solve over the (rebalanced)
+/// partition, and compare against the sequential-KF baseline — the same
+/// report for every geometry.
+pub fn run_experiment_on<G: Geometry>(
+    geom: &G,
+    cfg: &ExperimentConfig,
+    with_baseline: bool,
+) -> anyhow::Result<ExperimentReport> {
+    let mut rng = crate::util::Rng::new(cfg.seed);
+    let obs = geom.static_obs(cfg.m, &mut rng);
+    let prob = geom.make_problem(geom.background(), obs);
+    let part0 = geom.initial_partition();
 
     // DyDD: rebalance the decomposition to the observation layout.
-    let (part, dydd) = maybe_rebalance(&mesh, &part0, &prob.obs, cfg.dydd)?;
+    let (part, dydd) = maybe_rebalance(geom, &part0, geom.obs_of(&prob), cfg.dydd)?;
 
     // Parallel DD-KF.
     let run_cfg: RunConfig = cfg.run_config();
     let t0 = Instant::now();
-    let par = run_parallel(&prob, &part, &run_cfg)?;
+    let par = run_parallel(geom, &prob, &part, &run_cfg)?;
     let t_parallel = t0.elapsed();
 
     // Baseline + error.
     let (t_sequential, error_dd_da) = if with_baseline {
         let t1 = Instant::now();
-        let kf = kf_solve_cls(&prob);
+        let xref = geom.solve_baseline(&prob);
         let t_seq = t1.elapsed();
-        let err = dist2(&kf.x, &par.x);
-        (Some(t_seq), Some(err))
+        (Some(t_seq), Some(dist2(&xref, &par.x)))
     } else {
         (None, None)
     };
 
     Ok(ExperimentReport {
         name: cfg.name.clone(),
-        n: cfg.n,
+        n: geom.n_unknowns(),
         m: cfg.m,
-        p: cfg.p,
+        p: geom.p(),
         dydd,
-        dydd2d: None,
         t_parallel,
         t_critical: par.t_critical,
         overhead_fraction: par.overhead_fraction(),
@@ -170,59 +219,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Re
     })
 }
 
-/// Run the full 2-D pipeline for one `dim = 2` configuration: generate the
-/// box-grid workload, optionally rebalance it with geometric DyDD, run the
-/// parallel DD-KF solve over the (rebalanced) box partition, and compare
-/// against the sequential 2-D KF baseline — the same report a 1-D run
-/// produces, closing the paper's end-to-end metrics in 2-D.
-pub fn run_experiment2d(
-    cfg: &ExperimentConfig,
-    with_baseline: bool,
-) -> anyhow::Result<ExperimentReport> {
-    anyhow::ensure!(cfg.dim == 2, "run_experiment2d requires dim = 2");
-    let prob = cfg.build_problem2d();
-    let part0 = BoxPartition::uniform(cfg.n, cfg.n, cfg.px, cfg.py);
-
-    // DyDD: rebalance the box decomposition to the observation layout.
-    let (part, dydd2d) = maybe_rebalance2d(&prob.mesh, &part0, &prob.obs, cfg.dydd)?;
-
-    // Parallel DD-KF over the box grid (checkerboard phases).
-    let run_cfg: RunConfig = cfg.run_config();
-    let t0 = Instant::now();
-    let par = run_parallel2d(&prob, &part, &run_cfg)?;
-    let t_parallel = t0.elapsed();
-
-    // Baseline + error.
-    let (t_sequential, error_dd_da) = if with_baseline {
-        let t1 = Instant::now();
-        let kf = kf_solve_cls2d(&prob);
-        let t_seq = t1.elapsed();
-        let err = dist2(&kf.x, &par.x);
-        (Some(t_seq), Some(err))
-    } else {
-        (None, None)
-    };
-
-    Ok(ExperimentReport {
-        name: cfg.name.clone(),
-        n: prob.n(),
-        m: cfg.m,
-        p: cfg.px * cfg.py,
-        dydd: None,
-        dydd2d,
-        t_parallel,
-        t_critical: par.t_critical,
-        overhead_fraction: par.overhead_fraction(),
-        t_sequential,
-        error_dd_da,
-        iters: par.iters,
-        converged: par.converged,
-        stalled: par.stalled,
-        worker_busy: par.worker_busy,
-    })
-}
-
-/// Convenience: an experiment with counts placed per an explicit census
+/// Convenience: a 1-D experiment with counts placed per an explicit census
 /// (reproduces the paper's l_in exactly in geometric mode).
 pub fn run_with_counts(
     base: &ExperimentConfig,
@@ -230,31 +227,24 @@ pub fn run_with_counts(
     with_baseline: bool,
 ) -> anyhow::Result<ExperimentReport> {
     anyhow::ensure!(base.dim == 1, "run_with_counts drives the 1-D DD-KF pipeline");
+    let mut geom = base.interval_geometry();
+    geom.p = counts.len();
     let mesh = Mesh1d::new(base.n);
     let part0 = Partition::uniform(base.n, counts.len());
     let mut rng = crate::util::Rng::new(base.seed);
     let obs = generators::with_counts(&mesh, &part0, counts, &mut rng);
-    let y0 = (0..base.n)
-        .map(|j| generators::field(j as f64 / (base.n - 1) as f64))
-        .collect();
-    let prob = crate::cls::ClsProblem::new(
-        mesh.clone(),
-        base.state_op.build(),
-        y0,
-        vec![base.state_weight; base.n],
-        obs,
-    );
+    let prob = geom.make_problem(geom.background(), obs);
 
-    let (part, dydd) = maybe_rebalance(&mesh, &part0, &prob.obs, base.dydd)?;
+    let (part, dydd) = maybe_rebalance(&geom, &part0, geom.obs_of(&prob), base.dydd)?;
 
     let t0 = Instant::now();
-    let par = run_parallel(&prob, &part, &base.run_config())?;
+    let par = run_parallel(&geom, &prob, &part, &base.run_config())?;
     let t_parallel = t0.elapsed();
 
     let (t_sequential, error_dd_da) = if with_baseline {
         let t1 = Instant::now();
-        let kf = kf_solve_cls(&prob);
-        (Some(t1.elapsed()), Some(dist2(&kf.x, &par.x)))
+        let xref = geom.solve_baseline(&prob);
+        (Some(t1.elapsed()), Some(dist2(&xref, &par.x)))
     } else {
         (None, None)
     };
@@ -265,7 +255,6 @@ pub fn run_with_counts(
         m: counts.iter().sum(),
         p: counts.len(),
         dydd,
-        dydd2d: None,
         t_parallel,
         t_critical: par.t_critical,
         overhead_fraction: par.overhead_fraction(),
@@ -318,7 +307,7 @@ mod tests {
         cfg.px = 2;
         cfg.py = 2;
         cfg.layout2d = crate::domain2d::ObsLayout2d::GaussianBlob;
-        let rep = run_experiment2d(&cfg, true).unwrap();
+        let rep = run_experiment(&cfg, true).unwrap();
         assert!(rep.converged);
         assert_eq!(rep.n, 256);
         assert_eq!(rep.p, 4);
@@ -342,10 +331,29 @@ mod tests {
         cfg.py = 2;
         cfg.dydd = false;
         cfg.layout2d = crate::domain2d::ObsLayout2d::Quadrant;
-        let rep = run_experiment2d(&cfg, true).unwrap();
-        assert!(rep.dydd2d.is_none());
+        let rep = run_experiment(&cfg, true).unwrap();
+        assert!(rep.dydd.is_none());
         assert!(rep.converged);
         assert!(rep.error_dd_da.unwrap() < 1e-9);
+    }
+
+    #[test]
+    fn small_4d_pipeline_end_to_end() {
+        // The new capability in miniature: space-time windows through the
+        // full DyDD → parallel DD-KF → sequential-KF pipeline.
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 4;
+        cfg.n = 10;
+        cfg.steps = 6;
+        cfg.m = 120;
+        cfg.p = 3;
+        let rep = run_experiment(&cfg, true).unwrap();
+        assert_eq!(rep.n, 60);
+        assert_eq!(rep.p, 3);
+        assert!(rep.converged, "iters = {}", rep.iters);
+        let err = rep.error_dd_da.unwrap();
+        assert!(err < 1e-8, "error_DD-DA = {err:e}");
+        assert!(rep.dydd.is_some());
     }
 
     #[test]
@@ -358,5 +366,12 @@ mod tests {
         let rep = run_experiment(&cfg, false).unwrap();
         assert!(rep.dydd.is_none());
         assert!(rep.converged);
+    }
+
+    #[test]
+    fn unregistered_dim_is_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 3;
+        assert!(run_experiment(&cfg, false).is_err());
     }
 }

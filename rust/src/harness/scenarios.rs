@@ -87,7 +87,8 @@ pub fn example4(p: usize) -> Scenario {
 ///
 /// Unlike the abstract [`Scenario`] (graph + loads read off a table), a 2-D
 /// scenario carries the full geometry so both the abstract balancer and the
-/// geometric migration ([`crate::dydd::rebalance_partition2d`]) can run on it.
+/// geometric migration ([`crate::dydd::rebalance()`] over
+/// [`crate::decomp::BoxGeometry`]) can run on it.
 #[derive(Debug, Clone)]
 pub struct Scenario2d {
     pub name: String,
@@ -122,28 +123,44 @@ pub fn grid2d(
     m: usize,
     layout: ObsLayout2d,
     seed: u64,
-) -> Scenario2d {
+) -> anyhow::Result<Scenario2d> {
+    anyhow::ensure!(px >= 1 && py >= 1, "need px >= 1 and py >= 1 (got {px}x{py})");
+    anyhow::ensure!(
+        n >= 2 * px.max(py),
+        "grid n = {n} too coarse for {px}x{py} boxes: each box needs >= 2 grid lines \
+         per axis (pass a larger --n or fewer boxes)"
+    );
     let mesh = Mesh2d::square(n);
     let part = BoxPartition::uniform(n, n, px, py);
     let mut rng = Rng::new(seed);
     let obs = gen2d::generate(layout, m, &mut rng);
-    Scenario2d {
+    Ok(Scenario2d {
         name: format!("grid2d-{}-{px}x{py}", layout.name()),
         mesh,
         part,
         obs,
-    }
+    })
 }
 
 /// The 2-D scenario an [`ExperimentConfig`] with `dim = 2` describes.
-pub fn from_config(cfg: &ExperimentConfig) -> Scenario2d {
+pub fn from_config(cfg: &ExperimentConfig) -> anyhow::Result<Scenario2d> {
     grid2d(cfg.n, cfg.px, cfg.py, cfg.m, cfg.layout2d, cfg.seed)
 }
 
 /// Render a per-box census as a py × px text grid (row by = 0 at the
 /// bottom, matching the spatial layout). Shared by the CLI and examples.
-pub fn render_census_grid(census: &[usize], px: usize, py: usize) -> String {
-    assert_eq!(census.len(), px * py);
+///
+/// Errors (instead of panicking) when the census length does not match
+/// the grid shape — the symptom of mismatched `--px`/`--py` vs the worker
+/// count that produced the census.
+pub fn render_census_grid(census: &[usize], px: usize, py: usize) -> anyhow::Result<String> {
+    anyhow::ensure!(
+        census.len() == px * py,
+        "census has {} entries but the box grid is {px}x{py} = {} boxes — \
+         do --px/--py match the decomposition that produced this census?",
+        census.len(),
+        px * py
+    );
     let mut out = String::new();
     for by in (0..py).rev() {
         out.push_str("    ");
@@ -152,7 +169,7 @@ pub fn render_census_grid(census: &[usize], px: usize, py: usize) -> String {
         }
         out.push('\n');
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -198,13 +215,28 @@ mod tests {
 
     #[test]
     fn grid2d_scenario_is_consistent() {
-        let sc = grid2d(128, 4, 3, 500, ObsLayout2d::Uniform2d, 5);
+        let sc = grid2d(128, 4, 3, 500, ObsLayout2d::Uniform2d, 5).unwrap();
         assert_eq!(sc.census().iter().sum::<usize>(), 500);
         let g = sc.graph();
         assert_eq!(g.p(), 12);
         assert!(g.is_connected());
         let a = sc.abstract_loads();
         assert_eq!(a.l_in, sc.census());
+    }
+
+    #[test]
+    fn grid2d_rejects_impossible_shapes() {
+        let err = grid2d(8, 16, 1, 10, ObsLayout2d::Uniform2d, 1).unwrap_err();
+        assert!(err.to_string().contains("too coarse"), "{err}");
+        assert!(grid2d(8, 0, 1, 10, ObsLayout2d::Uniform2d, 1).is_err());
+    }
+
+    #[test]
+    fn census_grid_errors_on_shape_mismatch() {
+        let err = render_census_grid(&[1, 2, 3], 2, 2).unwrap_err();
+        assert!(err.to_string().contains("--px/--py"), "{err}");
+        let ok = render_census_grid(&[1, 2, 3, 4], 2, 2).unwrap();
+        assert!(ok.contains('3'));
     }
 
     #[test]
@@ -216,7 +248,7 @@ mod tests {
         cfg.px = 2;
         cfg.py = 3;
         cfg.layout2d = ObsLayout2d::Quadrant;
-        let sc = from_config(&cfg);
+        let sc = from_config(&cfg).unwrap();
         assert_eq!(sc.part.px(), 2);
         assert_eq!(sc.part.py(), 3);
         assert_eq!(sc.obs.len(), 300);

@@ -8,14 +8,18 @@
 //! Three layers (see DESIGN.md):
 //! * **L3 (this crate)** — the DyDD dynamic load balancer, the DD-KF
 //!   alternating-Schwarz coordinator, and every substrate (linalg, graphs,
-//!   domain partitioning, sequential KF baseline). Spatial decompositions
-//!   come in two flavours: [`domain`] (1-D chain of intervals) and
-//!   [`domain2d`] (a `px × py` box grid on [0, 1]² whose 4-connected
-//!   decomposition graph feeds the same Laplacian scheduler, rebalanced
-//!   geometrically by [`dydd::rebalance_partition2d`]). Multi-cycle
-//!   assimilation — drifting observations, per-cycle
-//!   [`dydd::RebalancePolicy`] decisions, analysis fed forward as the next
-//!   background — lives in [`harness::cycles`].
+//!   domain partitioning, sequential KF baseline). Decompositions are
+//!   dimension-generic: the [`decomp::Geometry`] trait is the one surface
+//!   DyDD ([`dydd::rebalance()`]), the coordinator and the harness drivers
+//!   are written against, with three registered geometries —
+//!   [`decomp::IntervalGeometry`] (1-D chain over [`domain`]),
+//!   [`decomp::BoxGeometry`] (a `px × py` box grid on [0, 1]² over
+//!   [`domain2d`], 4-connected decomposition graph) and
+//!   [`decomp::WindowGeometry`] (4-D space-time windows over the stacked
+//!   [`fourd`] trajectory). Multi-cycle assimilation — drifting
+//!   observations, per-cycle [`dydd::RebalancePolicy`] decisions, analysis
+//!   fed forward as the next background — lives in [`harness::cycles`] and
+//!   runs on every geometry, including space-time windows.
 //! * **L2/L1 (build-time python)** — JAX model functions composing Pallas
 //!   kernels, AOT-lowered to HLO-text artifacts executed through PJRT by
 //!   [`runtime`].
@@ -28,6 +32,7 @@ pub mod config;
 pub mod coordinator;
 pub mod covariance;
 pub mod ddkf;
+pub mod decomp;
 pub mod domain;
 pub mod domain2d;
 pub mod dydd;

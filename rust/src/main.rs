@@ -4,9 +4,11 @@
 //!   info                     platform, artifact and build information
 //!   run [--config F] [...]   run one experiment (DyDD + DD-KF + baseline;
 //!                            --dim 2 runs the full pipeline on a px × py
-//!                            box grid over [0,1]²)
+//!                            box grid over [0,1]²; --dim 4 on space-time
+//!                            windows of an n × steps trajectory)
 //!   cycle [...]              multi-cycle assimilation with drifting
 //!                            observations and a DyDD rebalance policy
+//!                            (any dim, including 4-D space-time windows)
 //!   dydd --loads a,b,c ...   run the load balancer on an abstract scenario
 //!   dydd --dim 2 [...]       geometric DyDD on a px × py box grid
 //!   table <1..12|fig5|all>   regenerate the paper's tables/figures
@@ -14,14 +16,13 @@
 
 use dydd_da::config::ExperimentConfig;
 use dydd_da::coordinator::SolverBackend;
-use dydd_da::domain::{DriftLayout, ObsLayout};
-use dydd_da::domain2d::{DriftLayout2d, ObsLayout2d};
-use dydd_da::dydd::{balance, balance_ratio, rebalance_partition2d, DyddParams, RebalancePolicy};
+use dydd_da::decomp::registry::{self, DriftSpec, LayoutSpec};
+use dydd_da::decomp::BoxGeometry;
+use dydd_da::dydd::{balance, balance_ratio, rebalance, DyddParams, RebalancePolicy};
 use dydd_da::graph::Graph;
 use dydd_da::harness::cycles::render_cycle_table;
 use dydd_da::harness::{
-    all_tables, render_table, run_cycles, run_cycles2d, run_experiment, run_experiment2d,
-    scenarios, ExperimentReport, TableId,
+    all_tables, render_table, run_cycles, run_experiment, scenarios, ExperimentReport, TableId,
 };
 use dydd_da::runtime;
 use dydd_da::util::timer::fmt_secs;
@@ -58,11 +59,11 @@ dydd-da — Parallel Dynamic Domain Decomposition for Data Assimilation
 USAGE:
   dydd-da info
   dydd-da run [--config FILE] [--n N] [--m M] [--p P] [--layout L]
-              [--dim 1|2] [--px PX] [--py PY]
+              [--dim 1|2|4] [--px PX] [--py PY] [--steps N_T]
               [--backend native|kf|pjrt|cg] [--overlap S] [--mu MU]
               [--no-dydd] [--seed SEED] [--no-baseline]
-  dydd-da cycle [--config FILE] [--dim 1|2] [--n N] [--m M] [--p P]
-              [--px PX] [--py PY] [--cycles K] [--backend B]
+  dydd-da cycle [--config FILE] [--dim 1|2|4] [--n N] [--m M] [--p P]
+              [--px PX] [--py PY] [--steps N_T] [--cycles K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
               [--drift D] [--seed SEED] [--no-dydd] [--no-baseline]
   dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
@@ -75,6 +76,9 @@ USAGE:
 2-D layouts: uniform2d | gaussian_blob | diagonal_band | ring | quadrant
 drifts (1-D and 2-D): translating_blob | rotating_band | appearing_cluster
                       | stationary:<layout>
+dim 4 (space-time): p = time windows over an n x steps trajectory; 1-D
+                    layouts give the per-level spatial distribution and
+                    1-D drifts move the density over the time axis
 backends: native (Cholesky) | kf (local VAR-KF) | pjrt (XLA artifacts)
           | cg (sparse matrix-free PCG — use for large grids, e.g.
           `run --dim 2 --n 128 --backend cg`)
@@ -157,21 +161,12 @@ fn cmd_info() -> anyhow::Result<()> {
     } else if runtime::pjrt_enabled() {
         println!("artifacts     : NOT BUILT (run `make artifacts`) — native backend only");
     } else {
-        println!("artifacts     : unavailable without the `pjrt` feature — native backend only");
+        println!(
+            "artifacts     : unavailable without the `pjrt-xla` feature — native backend only"
+        );
     }
     println!("cores         : {}", std::thread::available_parallelism()?.get());
     Ok(())
-}
-
-fn parse_layout(s: &str) -> anyhow::Result<ObsLayout> {
-    Ok(match s.to_ascii_lowercase().as_str() {
-        "uniform" => ObsLayout::Uniform,
-        "ramp" => ObsLayout::Ramp,
-        "cluster" => ObsLayout::Cluster,
-        "two_clusters" => ObsLayout::TwoClusters,
-        "left_packed" => ObsLayout::LeftPacked,
-        other => anyhow::bail!("unknown layout {other:?}"),
-    })
 }
 
 fn cmd_run(args: &[String]) -> anyhow::Result<()> {
@@ -183,13 +178,15 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     let config_dim = cfg.dim;
     if let Some(d) = f.parsed::<usize>("--dim")? {
         cfg.dim = d;
-        // Changing the dimension orphans the config file's layout choice
-        // (1-D and 2-D layouts live in separate fields); be loud about
-        // falling back to the default rather than silently swapping it.
-        if d != config_dim && f.get("--layout").is_none() {
+        // Crossing the 1-D/2-D layout-family boundary orphans the config
+        // file's layout choice (1-D/4-D and 2-D layouts live in separate
+        // fields); be loud about falling back to the default rather than
+        // silently swapping it. A 1 <-> 4 switch keeps cfg.layout, so no
+        // warning there.
+        if (d == 2) != (config_dim == 2) && f.get("--layout").is_none() {
             eprintln!(
-                "warning: --dim {d} overrides the config's dimension; no --layout given, \
-                 using the default ({})",
+                "warning: --dim {d} overrides the config's dim = {config_dim}; no --layout \
+                 given, using the default ({})",
                 if d == 2 { "uniform2d" } else { "uniform" }
             );
         }
@@ -202,12 +199,24 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     if cfg.dim == 2 && f.get("--n").is_none() && config_dim != 2 {
         if f.get("--config").is_some() {
             eprintln!(
-                "warning: --dim 2 overrides a dim-1 config; its n = {} is a 1-D size, \
-                 using the 2-D default n = 40 (pass --n to choose the grid)",
+                "warning: --dim 2 overrides a dim-{config_dim} config; its n = {} is not a \
+                 2-D grid axis, using the 2-D default n = 40 (pass --n to choose the grid)",
                 cfg.n
             );
         }
         cfg.n = 40;
+    }
+    // Same reasoning for dim 4: the 1-D default n = 2048 would mean a
+    // 2048 x steps trajectory with dense local window solves.
+    if cfg.dim == 4 && f.get("--n").is_none() && config_dim != 4 {
+        if f.get("--config").is_some() {
+            eprintln!(
+                "warning: --dim 4 overrides a dim-{config_dim} config; its n = {} is not a \
+                 spatial trajectory size, using the 4-D default n = 24 (pass --n to choose)",
+                cfg.n
+            );
+        }
+        cfg.n = 24;
     }
     if let Some(n) = f.parsed::<usize>("--n")? {
         cfg.n = n;
@@ -224,12 +233,13 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     if let Some(py) = f.parsed::<usize>("--py")? {
         cfg.py = py;
     }
+    if let Some(steps) = f.parsed::<usize>("--steps")? {
+        cfg.steps = steps;
+    }
     if let Some(s) = f.get("--layout") {
-        if cfg.dim == 2 {
-            cfg.layout2d = ObsLayout2d::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown 2-D layout {s:?}"))?;
-        } else {
-            cfg.layout = parse_layout(s)?;
+        match registry::parse_layout(cfg.dim, s)? {
+            LayoutSpec::D1(l) => cfg.layout = l,
+            LayoutSpec::D2(l) => cfg.layout2d = l,
         }
     }
     if let Some(b) = f.get("--backend") {
@@ -250,7 +260,11 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     }
     cfg.validate()?;
 
-    let unknowns = if cfg.dim == 2 { cfg.n * cfg.n } else { cfg.n };
+    let unknowns = match cfg.dim {
+        2 => cfg.n * cfg.n,
+        4 => cfg.n * cfg.steps,
+        _ => cfg.n,
+    };
     let with_baseline = baseline_enabled(f.has("--no-baseline"), unknowns);
 
     if cfg.dim == 2 {
@@ -270,12 +284,12 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
             cfg.backend,
             cfg.dydd
         );
-        let rep = run_experiment2d(&cfg, with_baseline)?;
-        if let Some(d) = &rep.dydd2d {
+        let rep = run_experiment(&cfg, with_baseline)?;
+        if let Some(d) = &rep.dydd {
             println!("l_in  (E = {:.3}):", balance_ratio(&d.dydd.l_in));
-            print!("{}", census_grid(&d.dydd.l_in, cfg.px, cfg.py));
+            print!("{}", census_grid(&d.dydd.l_in, cfg.px, cfg.py)?);
             println!("l_fin (E = {:.3}):", d.balance());
-            print!("{}", census_grid(&d.census_after, cfg.px, cfg.py));
+            print!("{}", census_grid(&d.census_after, cfg.px, cfg.py)?);
             println!(
                 "dydd : T_DyDD={}  T_r={}",
                 fmt_secs(d.dydd.t_dydd.as_secs_f64()),
@@ -286,10 +300,25 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
 
-    println!(
-        "run: n={} m={} p={} layout={:?} backend={:?} dydd={}",
-        cfg.n, cfg.m, cfg.p, cfg.layout, cfg.backend, cfg.dydd
-    );
+    if cfg.dim == 4 {
+        println!(
+            "run: dim=4 n={} steps={} (nN={}) m={} windows={} layout={:?} drift-axis=time \
+             backend={:?} dydd={}",
+            cfg.n,
+            cfg.steps,
+            cfg.n * cfg.steps,
+            cfg.m,
+            cfg.p,
+            cfg.layout,
+            cfg.backend,
+            cfg.dydd
+        );
+    } else {
+        println!(
+            "run: n={} m={} p={} layout={:?} backend={:?} dydd={}",
+            cfg.n, cfg.m, cfg.p, cfg.layout, cfg.backend, cfg.dydd
+        );
+    }
     let rep = run_experiment(&cfg, with_baseline)?;
     if let Some(d) = &rep.dydd {
         println!(
@@ -322,12 +351,22 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
     if cfg.dim == 2 && f.get("--n").is_none() && config_dim != 2 {
         if f.get("--config").is_some() {
             eprintln!(
-                "warning: --dim 2 overrides a dim-1 config; its n = {} is a 1-D size, \
-                 using the 2-D cycle default n = 48 (pass --n to choose the grid)",
+                "warning: --dim 2 overrides a dim-{config_dim} config; its n = {} is not a \
+                 2-D grid axis, using the 2-D cycle default n = 48 (pass --n to choose)",
                 cfg.n
             );
         }
         cfg.n = 48;
+    }
+    if cfg.dim == 4 && f.get("--n").is_none() && config_dim != 4 {
+        if f.get("--config").is_some() {
+            eprintln!(
+                "warning: --dim 4 overrides a dim-{config_dim} config; its n = {} is not a \
+                 spatial trajectory size, using the 4-D cycle default n = 16 (pass --n)",
+                cfg.n
+            );
+        }
+        cfg.n = 16;
     }
     if let Some(n) = f.parsed::<usize>("--n")? {
         cfg.n = n;
@@ -344,6 +383,9 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
     if let Some(py) = f.parsed::<usize>("--py")? {
         cfg.py = py;
     }
+    if let Some(steps) = f.parsed::<usize>("--steps")? {
+        cfg.steps = steps;
+    }
     if let Some(k) = f.parsed::<usize>("--cycles")? {
         cfg.cycles = k;
     }
@@ -359,12 +401,9 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
         cfg.cycle_policy = cfg.cycle_policy.with_tau(tau);
     }
     if let Some(s) = f.get("--drift") {
-        if cfg.dim == 2 {
-            cfg.drift2d = DriftLayout2d::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown 2-D drift layout {s:?}"))?;
-        } else {
-            cfg.drift = DriftLayout::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown 1-D drift layout {s:?}"))?;
+        match registry::parse_drift(cfg.dim, s)? {
+            DriftSpec::D1(d) => cfg.drift = d,
+            DriftSpec::D2(d) => cfg.drift2d = d,
         }
     }
     if let Some(b) = f.get("--backend") {
@@ -378,7 +417,11 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
         cfg.dydd = false;
     }
     cfg.validate()?;
-    let unknowns = if cfg.dim == 2 { cfg.n * cfg.n } else { cfg.n };
+    let unknowns = match cfg.dim {
+        2 => cfg.n * cfg.n,
+        4 => cfg.n * cfg.steps,
+        _ => cfg.n,
+    };
     let with_baseline = baseline_enabled(f.has("--no-baseline"), unknowns);
 
     let drift_name = if cfg.dim == 2 { cfg.drift2d.name() } else { cfg.drift.name() };
@@ -390,21 +433,17 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
         cfg.dim,
         cfg.n,
         cfg.m,
-        if cfg.dim == 2 {
-            format!("grid={}x{}", cfg.px, cfg.py)
-        } else {
-            format!("p={}", cfg.p)
+        match cfg.dim {
+            2 => format!("grid={}x{}", cfg.px, cfg.py),
+            4 => format!("steps={} windows={}", cfg.steps, cfg.p),
+            _ => format!("p={}", cfg.p),
         },
         cfg.cycles,
         effective.name(),
         drift_name,
         cfg.seed,
     );
-    let rep = if cfg.dim == 2 {
-        run_cycles2d(&cfg, with_baseline)?
-    } else {
-        run_cycles(&cfg, with_baseline)?
-    };
+    let rep = run_cycles(&cfg, with_baseline)?;
     print!("{}", render_cycle_table(&rep).render());
     println!(
         "summary: rebalances={}/{}  E_final={:.3}  E_mean={:.3}  E_worst={:.3}  \
@@ -454,14 +493,18 @@ fn run_dydd_2d(sc: &scenarios::Scenario2d) -> anyhow::Result<()> {
     let (px, py) = (sc.part.px(), sc.part.py());
     let l_in = sc.census();
     println!("l_in  (E = {:.3}):", balance_ratio(&l_in));
-    print!("{}", census_grid(&l_in, px, py));
-    let out = rebalance_partition2d(&sc.mesh, &sc.part, &sc.obs, &DyddParams::default())?;
+    print!("{}", census_grid(&l_in, px, py)?);
+    // Only the decomposition core of the geometry is exercised here (the
+    // scenario already carries its observations), so the default scenario
+    // knobs are fine.
+    let geom = BoxGeometry::new(sc.mesh.nx(), px, py);
+    let out = rebalance(&geom, &sc.part, &sc.obs, &DyddParams::default())?;
     if let Some(lr) = &out.dydd.l_r {
         println!("l_r   (after DD repair step):");
-        print!("{}", census_grid(lr, px, py));
+        print!("{}", census_grid(lr, px, py)?);
     }
     println!("l_fin (realized census after edge shifting):");
-    print!("{}", census_grid(&out.census_after, px, py));
+    print!("{}", census_grid(&out.census_after, px, py)?);
     println!(
         "E = {:.3}   iters = {}   migrations = {}   T_DyDD = {}   T_r = {}",
         out.balance(),
@@ -490,13 +533,13 @@ fn cmd_dydd(args: &[String]) -> anyhow::Result<()> {
         let m = f.parsed::<usize>("--m")?.unwrap_or(2000);
         let seed = f.parsed::<u64>("--seed")?.unwrap_or(42);
         let layout = match f.get("--layout") {
-            Some(s) => ObsLayout2d::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown 2-D layout {s:?}"))?,
-            None => ObsLayout2d::Uniform2d,
+            Some(s) => match registry::parse_layout(2, s)? {
+                LayoutSpec::D2(l) => l,
+                LayoutSpec::D1(_) => unreachable!("dim 2 resolves 2-D layouts"),
+            },
+            None => dydd_da::domain2d::ObsLayout2d::Uniform2d,
         };
-        anyhow::ensure!(px >= 1 && py >= 1, "need px >= 1 and py >= 1");
-        anyhow::ensure!(n >= px.max(py) * 2, "grid {n} too coarse for {px}x{py} boxes");
-        let sc = scenarios::grid2d(n, px, py, m, layout, seed);
+        let sc = scenarios::grid2d(n, px, py, m, layout, seed)?;
         println!(
             "dydd: dim=2 n={n}x{n} m={m} grid={px}x{py} layout={} seed={seed}",
             layout.name()

@@ -7,7 +7,7 @@
 //! benches, tests) share the main thread's engine.
 
 use super::manifest::{ArtifactMeta, Manifest, ManifestError};
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-xla"))]
 use super::stub as xla;
 use std::cell::RefCell;
 use std::collections::HashMap;

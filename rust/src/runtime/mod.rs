@@ -18,16 +18,21 @@ pub mod manifest;
 pub mod ops;
 pub mod solver;
 
-/// Pure-Rust stand-in for the `xla` crate when the `pjrt` feature is off
-/// (the default offline build). See [`stub`] for what stays functional.
-#[cfg(not(feature = "pjrt"))]
+/// Pure-Rust stand-in for the `xla` crate surface, compiled whenever the
+/// real client is not vendored (everything except `pjrt-xla` builds). The
+/// `pjrt` feature alone is the *stub build* of the PJRT plumbing: it
+/// compiles the full runtime surface against this stand-in so the feature
+/// matrix stays green offline, while engine construction still fails at
+/// run time with a clear "pjrt disabled" error.
+#[cfg(not(feature = "pjrt-xla"))]
 pub mod stub;
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 compile_error!(
-    "the `pjrt` feature requires the vendored `xla` crate: add it to \
+    "the `pjrt-xla` feature requires the vendored `xla` crate: add it to \
      rust/Cargo.toml [dependencies] and delete this guard (rust/README.md \
-     has the recipe). The default build uses the pure-Rust stub backend."
+     has the recipe). Builds without it use the pure-Rust stub backend \
+     (with or without the `pjrt` feature)."
 );
 
 pub use engine::{artifacts_available, with_engine, Engine};
@@ -41,7 +46,7 @@ use std::path::PathBuf;
 /// backend every engine construction fails at run time with a clear
 /// "pjrt disabled" error, and artifact probing reports unavailable.
 pub const fn pjrt_enabled() -> bool {
-    cfg!(feature = "pjrt")
+    cfg!(feature = "pjrt-xla")
 }
 
 /// Default artifacts directory: `$DYDD_ARTIFACTS` or `./artifacts`.

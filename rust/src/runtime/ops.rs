@@ -8,7 +8,7 @@
 
 use super::engine::{literal_mat, literal_vec, to_vec_f64, Engine, EngineError};
 use super::manifest::ArtifactMeta;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-xla"))]
 use super::stub as xla;
 use crate::linalg::Mat;
 

@@ -1,6 +1,7 @@
 //! Pure-Rust stand-in for the `xla` crate surface the engine uses, compiled
-//! when the `pjrt` feature is off (the default: this build is fully offline
-//! and the PJRT/XLA toolchain is not vendored).
+//! whenever the `pjrt-xla` feature is off (the default: this build is fully
+//! offline and the PJRT/XLA toolchain is not vendored; the `pjrt` feature
+//! alone is a stub build of the same surface).
 //!
 //! Host-side literal plumbing ([`Literal`]) is fully functional so padding
 //! and operand-preparation code paths stay testable; anything that would
@@ -18,8 +19,8 @@ pub struct Error(pub String);
 impl Error {
     fn disabled() -> Error {
         Error(
-            "PJRT backend disabled: dydd-da was built without the `pjrt` feature \
-             (see rust/README.md)"
+            "PJRT backend disabled: dydd-da was built without the `pjrt-xla` \
+             feature (see rust/README.md)"
                 .to_string(),
         )
     }

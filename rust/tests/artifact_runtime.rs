@@ -3,6 +3,7 @@
 
 use dydd_da::cls::{ClsProblem, StateOp};
 use dydd_da::coordinator::{run_parallel, RunConfig, SolverBackend};
+use dydd_da::decomp::IntervalGeometry;
 use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
 use dydd_da::kf::DenseKf;
 use dydd_da::linalg::mat::dist2;
@@ -10,7 +11,7 @@ use dydd_da::linalg::Mat;
 use dydd_da::runtime;
 use dydd_da::util::Rng;
 
-/// These tests need both the `pjrt` feature and the on-disk artifacts
+/// These tests need both the `pjrt-xla` feature and the on-disk artifacts
 /// (`make artifacts`); in the default offline build they skip. Each test
 /// early-returns through the macro so the tier-1 run stays green.
 fn artifacts() -> Option<std::path::PathBuf> {
@@ -45,7 +46,7 @@ fn pjrt_backend_parallel_run_matches_reference() {
         artifacts_dir: dir,
         ..RunConfig::default()
     };
-    let out = run_parallel(&prob, &part, &cfg).unwrap();
+    let out = run_parallel(&IntervalGeometry::new(128, 4), &prob, &part, &cfg).unwrap();
     assert!(out.converged);
     let err = dist2(&out.x, &prob.solve_reference());
     assert!(err < 1e-9, "error through artifacts: {err:e}");

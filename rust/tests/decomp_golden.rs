@@ -1,0 +1,550 @@
+//! Golden refactor-equivalence tests: the generic [`Geometry`] path must
+//! reproduce the pre-refactor per-dimension implementations *bitwise*.
+//!
+//! The oracles below are frozen copies of the deleted
+//! `dydd::geometric::rebalance_partition` / `dydd::geometric2d::
+//! rebalance_partition2d` / `fourd::window_partition` realization logic
+//! (and of the old hand-written experiment/cycle drivers). Any behavioural
+//! drift in the generic core — censuses, schedule targets, realized
+//! partitions, report numbers — fails here with the exact divergence.
+
+use dydd_da::cls::{ClsProblem, LocalBlock};
+use dydd_da::config::ExperimentConfig;
+use dydd_da::coordinator::{run_parallel, WorkerPool};
+use dydd_da::ddkf::coupling_phases;
+use dydd_da::decomp::{self, BoxGeometry, Geometry, IntervalGeometry, WindowGeometry};
+use dydd_da::domain::{generators, DriftLayout, Mesh1d, ObsLayout, ObservationSet, Partition};
+use dydd_da::domain2d::{
+    generators as gen2d, BoxPartition, DriftLayout2d, Mesh2d, ObsLayout2d, ObservationSet2d,
+};
+use dydd_da::dydd::{balance, balance_ratio, rebalance, DyddParams, RebalancePolicy};
+use dydd_da::fourd::{schwarz_solve_4d, window_census, window_partition, TrajectoryProblem};
+use dydd_da::harness::cycles::{cycle_observations, cycle_observations2d};
+use dydd_da::harness::{run_cycles, run_experiment};
+use dydd_da::kf::{kf_solve_cls, kf_solve_rows};
+use dydd_da::linalg::mat::dist2;
+use dydd_da::util::Rng;
+
+const LAYOUTS_1D: [ObsLayout; 5] = [
+    ObsLayout::Uniform,
+    ObsLayout::Ramp,
+    ObsLayout::Cluster,
+    ObsLayout::TwoClusters,
+    ObsLayout::LeftPacked,
+];
+
+// ---------------------------------------------------------------------
+// Frozen pre-refactor oracles
+// ---------------------------------------------------------------------
+
+/// Frozen `dydd::geometric::rebalance_partition` (1-D realization).
+fn oracle_rebalance_1d(
+    mesh: &Mesh1d,
+    part: &Partition,
+    obs: &ObservationSet,
+    params: &DyddParams,
+) -> (Vec<usize>, Partition, Vec<usize>) {
+    let census = obs.census(mesh, part);
+    let g = part.induced_graph();
+    let outcome = balance(&g, &census, params).unwrap();
+    let grid = obs.grid_indices(mesh);
+    let partition = Partition::from_targets(mesh.n(), &grid, &outcome.l_fin);
+    let census_after = obs.census(mesh, &partition);
+    (outcome.l_fin, partition, census_after)
+}
+
+/// Frozen largest-remainder apportionment of the deleted `geometric2d`.
+fn oracle_apportion(template: &[usize], m: usize) -> Vec<usize> {
+    let p = template.len();
+    let total: usize = template.iter().sum();
+    if total == 0 {
+        let mut out = vec![m / p; p];
+        for slot in out.iter_mut().take(m % p) {
+            *slot += 1;
+        }
+        return out;
+    }
+    let mut out: Vec<usize> = template.iter().map(|&t| t * m / total).collect();
+    let assigned: usize = out.iter().sum();
+    let mut rem: Vec<(usize, usize)> =
+        template.iter().enumerate().map(|(i, &t)| ((t * m) % total, i)).collect();
+    rem.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, i) in rem.iter().take(m - assigned) {
+        out[i] += 1;
+    }
+    out
+}
+
+/// Frozen `dydd::geometric2d::rebalance_partition2d` (x sweep + per-column
+/// y sweep).
+fn oracle_rebalance_2d(
+    mesh: &Mesh2d,
+    part: &BoxPartition,
+    obs: &ObservationSet2d,
+    params: &DyddParams,
+) -> (Vec<usize>, BoxPartition, Vec<usize>) {
+    let grid = obs.grid_indices(mesh);
+    let census_of = |p: &BoxPartition| {
+        let mut c = vec![0usize; p.p()];
+        for &(ix, iy) in &grid {
+            c[p.owner(ix, iy)] += 1;
+        }
+        c
+    };
+    let census = census_of(part);
+    let g = part.induced_graph();
+    let outcome = balance(&g, &census, params).unwrap();
+
+    let (px, py) = (part.px(), part.py());
+    let col_targets: Vec<usize> = (0..px)
+        .map(|bx| (0..py).map(|by| outcome.l_fin[part.box_id(bx, by)]).sum())
+        .collect();
+    let gx: Vec<usize> = grid.iter().map(|&(ix, _)| ix).collect();
+    let xbounds = Partition::from_targets(mesh.nx(), &gx, &col_targets).bounds().to_vec();
+
+    let mut ybounds = Vec::with_capacity(px);
+    for bx in 0..px {
+        let (lo, hi) = (xbounds[bx], xbounds[bx + 1]);
+        let a = gx.partition_point(|&g| g < lo);
+        let b = gx.partition_point(|&g| g < hi);
+        let mut ys: Vec<usize> = grid[a..b].iter().map(|&(_, iy)| iy).collect();
+        ys.sort_unstable();
+        let template: Vec<usize> =
+            (0..py).map(|by| outcome.l_fin[part.box_id(bx, by)]).collect();
+        let row_targets = oracle_apportion(&template, ys.len());
+        let col_bounds = Partition::from_targets(mesh.ny(), &ys, &row_targets).bounds().to_vec();
+        ybounds.push(col_bounds);
+    }
+
+    let partition = BoxPartition::from_bounds(mesh.nx(), mesh.ny(), xbounds, ybounds);
+    let census_after = census_of(&partition);
+    (outcome.l_fin, partition, census_after)
+}
+
+/// Frozen pre-refactor `fourd::window_partition` (uniform level split +
+/// cumulative-nearest level realization).
+fn oracle_window_partition(prob: &TrajectoryProblem, windows: usize) -> (Partition, Vec<usize>) {
+    let n = prob.n_space();
+    let steps = prob.n_steps;
+    let counts_per_level: Vec<usize> = prob.obs.iter().map(|o| o.len()).collect();
+    let uniform_bounds: Vec<usize> = (0..=windows).map(|w| w * steps / windows).collect();
+    let l_in: Vec<usize> = (0..windows)
+        .map(|w| counts_per_level[uniform_bounds[w]..uniform_bounds[w + 1]].iter().sum())
+        .collect();
+    let out = balance(&dydd_da::graph::Graph::chain(windows), &l_in, &DyddParams::default())
+        .unwrap();
+    let mut bounds = vec![0usize];
+    let mut cum_target = 0usize;
+    let total: usize = counts_per_level.iter().sum();
+    for w in 0..windows - 1 {
+        cum_target += out.l_fin[w];
+        let mut cum = 0usize;
+        let mut best = (usize::MAX, bounds[w] + 1);
+        for (l, &c) in counts_per_level.iter().enumerate() {
+            cum += c;
+            let lvl = l + 1;
+            if lvl <= bounds[w] || lvl > steps - (windows - 1 - w) {
+                continue;
+            }
+            let dist = cum.abs_diff(cum_target.min(total));
+            if dist < best.0 {
+                best = (dist, lvl);
+            }
+        }
+        bounds.push(best.1);
+    }
+    bounds.push(steps);
+    let col_bounds: Vec<usize> = bounds.iter().map(|&l| l * n).collect();
+    (Partition::from_bounds(prob.n(), col_bounds), out.l_fin)
+}
+
+// ---------------------------------------------------------------------
+// Rebalance equivalence: generic path ≡ frozen oracles, bitwise
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_1d_rebalance_matches_pre_refactor_oracle() {
+    for layout in LAYOUTS_1D {
+        for seed in [1u64, 2, 3] {
+            let n = 1024;
+            let p = 2 + (seed as usize % 5);
+            let mesh = Mesh1d::new(n);
+            let part = Partition::uniform(n, p);
+            let mut rng = Rng::new(90_000 + seed);
+            let obs = generators::generate(layout, 200 + 40 * seed as usize, &mut rng);
+            let (l_fin, want_part, want_census) =
+                oracle_rebalance_1d(&mesh, &part, &obs, &DyddParams::default());
+            let got = rebalance(&IntervalGeometry::new(n, p), &part, &obs, &DyddParams::default())
+                .unwrap();
+            let tag = format!("{layout:?} seed {seed}");
+            assert_eq!(got.dydd.l_fin, l_fin, "{tag}: schedule targets diverged");
+            assert_eq!(got.partition, want_part, "{tag}: realized partition diverged");
+            assert_eq!(got.census_after, want_census, "{tag}: realized census diverged");
+        }
+    }
+}
+
+#[test]
+fn golden_2d_rebalance_matches_pre_refactor_oracle() {
+    for layout in ObsLayout2d::ALL {
+        for seed in [1u64, 2, 3] {
+            let n = 256;
+            let (px, py) = match seed % 3 {
+                0 => (2usize, 2usize),
+                1 => (4, 3),
+                _ => (3, 4),
+            };
+            let mesh = Mesh2d::square(n);
+            let part = BoxPartition::uniform(n, n, px, py);
+            let mut rng = Rng::new(91_000 + seed);
+            let obs = gen2d::generate(layout, 300 + 50 * seed as usize, &mut rng);
+            let (l_fin, want_part, want_census) =
+                oracle_rebalance_2d(&mesh, &part, &obs, &DyddParams::default());
+            let got =
+                rebalance(&BoxGeometry::new(n, px, py), &part, &obs, &DyddParams::default())
+                    .unwrap();
+            let tag = format!("{layout:?} seed {seed} {px}x{py}");
+            assert_eq!(got.dydd.l_fin, l_fin, "{tag}: schedule targets diverged");
+            assert_eq!(got.partition, want_part, "{tag}: realized partition diverged");
+            assert_eq!(got.census_after, want_census, "{tag}: realized census diverged");
+        }
+    }
+}
+
+#[test]
+fn golden_window_partition_matches_pre_refactor_oracle() {
+    let mesh = Mesh1d::new(10);
+    for (counts, windows) in [
+        (vec![40usize, 2, 2, 2, 2, 40], 2usize),
+        (vec![40, 2, 2, 2, 2, 40], 3),
+        (vec![5, 5, 5, 5, 5, 5, 5, 5], 4),
+        (vec![0, 0, 30, 0, 10, 0, 0, 20], 3),
+    ] {
+        let mut rng = Rng::new(17);
+        let obs: Vec<ObservationSet> = counts
+            .iter()
+            .map(|&m| generators::generate(ObsLayout::Uniform, m, &mut rng))
+            .collect();
+        let bg = generators::background_field(&mesh);
+        let prob = TrajectoryProblem::new(
+            mesh.clone(),
+            dydd_da::cls::StateOp::Tridiag { main: 0.9, off: 0.05 },
+            counts.len(),
+            bg,
+            vec![4.0; 10],
+            5.0,
+            obs,
+        );
+        let (want_part, want_lfin) = oracle_window_partition(&prob, windows);
+        let (got_part, got_lfin) = window_partition(&prob, windows).unwrap();
+        assert_eq!(got_part, want_part, "counts {counts:?} windows {windows}");
+        assert_eq!(got_lfin, want_lfin, "counts {counts:?} windows {windows}");
+        // And the generic census agrees with the fourd helper.
+        let geom = WindowGeometry::new(10, counts.len(), windows);
+        assert_eq!(geom.census(&got_part, &prob.obs), window_census(&prob, &got_part));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Experiment-report equivalence: generic driver ≡ hand-rolled old driver
+// ---------------------------------------------------------------------
+
+/// Frozen pre-refactor 1-D `run_experiment` body (build problem → DyDD →
+/// run_parallel → sequential KF), using only surviving public pieces.
+fn oracle_experiment_1d(cfg: &ExperimentConfig) -> (Vec<usize>, Vec<usize>, f64, usize) {
+    let mesh = Mesh1d::new(cfg.n);
+    let mut rng = Rng::new(cfg.seed);
+    let obs = generators::generate(cfg.layout, cfg.m, &mut rng);
+    let y0 = generators::background_field(&mesh);
+    let prob = ClsProblem::new(
+        mesh.clone(),
+        cfg.state_op.build(),
+        y0,
+        vec![cfg.state_weight; cfg.n],
+        obs,
+    );
+    let part0 = Partition::uniform(cfg.n, cfg.p);
+    let (l_in, part, census_after) = {
+        let (_, part, census_after) =
+            oracle_rebalance_1d(&mesh, &part0, &prob.obs, &DyddParams::default());
+        (prob.obs.census(&mesh, &part0), part, census_after)
+    };
+    let par =
+        run_parallel(&IntervalGeometry::new(cfg.n, cfg.p), &prob, &part, &cfg.run_config())
+            .unwrap();
+    let kf = kf_solve_cls(&prob);
+    (l_in, census_after, dist2(&kf.x, &par.x), par.iters)
+}
+
+#[test]
+fn golden_experiment_report_matches_hand_rolled_1d() {
+    for layout in [ObsLayout::Cluster, ObsLayout::Ramp, ObsLayout::LeftPacked] {
+        for seed in [11u64, 29] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.n = 128;
+            cfg.m = 90;
+            cfg.p = 4;
+            cfg.seed = seed;
+            cfg.layout = layout;
+            let (l_in, census_after, err, iters) = oracle_experiment_1d(&cfg);
+            let rep = run_experiment(&cfg, true).unwrap();
+            let tag = format!("{layout:?} seed {seed}");
+            let d = rep.dydd.as_ref().expect("dydd ran");
+            assert_eq!(d.dydd.l_in, l_in, "{tag}: initial census diverged");
+            assert_eq!(d.census_after, census_after, "{tag}: realized census diverged");
+            assert_eq!(rep.iters, iters, "{tag}: iteration count diverged");
+            // Same inputs through the same (deterministic, zero-overlap)
+            // solver: the error metric must agree bitwise.
+            assert_eq!(rep.error_dd_da.unwrap().to_bits(), err.to_bits(), "{tag}");
+        }
+    }
+}
+
+/// Frozen pre-refactor 2-D cycle-driver body for the Never-policy case
+/// (the pre-refactor `run_cycles2d` orchestration: per-cycle drift,
+/// persistent pool, blocks + coupling phases, analysis fed forward).
+fn oracle_cycles_2d_never(cfg: &ExperimentConfig) -> Vec<f64> {
+    let mesh = Mesh2d::square(cfg.n);
+    let part = BoxPartition::uniform(cfg.n, cfg.n, cfg.px, cfg.py);
+    let mut pool =
+        WorkerPool::new(cfg.px * cfg.py, cfg.backend, cfg.artifacts_dir.clone());
+    let mut y0 = gen2d::background_field(&mesh);
+    let state = cfg.state_op.build2d();
+    for k in 0..cfg.cycles {
+        let obs = cycle_observations2d(cfg.drift2d, cfg.m, cfg.seed, k, cfg.cycles);
+        let prob = dydd_da::cls::ClsProblem2d::new(
+            mesh.clone(),
+            state.clone(),
+            y0.clone(),
+            vec![cfg.state_weight; mesh.n()],
+            obs,
+        );
+        let blocks: Vec<LocalBlock> =
+            (0..part.p()).map(|b| prob.local_block(&part, b, cfg.schwarz.overlap)).collect();
+        let phases = coupling_phases(&blocks, |gc| {
+            let (ix, iy) = prob.mesh.unindex(gc);
+            part.owner(ix, iy)
+        });
+        let par = pool.solve_blocks(mesh.n(), blocks, &phases, &cfg.schwarz).unwrap();
+        assert!(par.converged, "oracle cycle {k}");
+        y0 = par.x;
+    }
+    y0
+}
+
+#[test]
+fn golden_cycle_report_matches_hand_rolled_2d() {
+    for layout in [ObsLayout2d::GaussianBlob, ObsLayout2d::Ring] {
+        for seed in [5u64, 77] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.dim = 2;
+            cfg.n = 12;
+            cfg.m = 60;
+            cfg.px = 2;
+            cfg.py = 2;
+            cfg.seed = seed;
+            cfg.cycles = 2;
+            cfg.drift2d = DriftLayout2d::Stationary(layout);
+            cfg.cycle_policy = RebalancePolicy::Never;
+            let want = oracle_cycles_2d_never(&cfg);
+            let rep = run_cycles(&cfg, false).unwrap();
+            assert!(rep.all_converged(), "{layout:?} seed {seed}");
+            assert_eq!(
+                rep.x, want,
+                "{layout:?} seed {seed}: generic cycle driver deviates from the \
+                 pre-refactor orchestration"
+            );
+        }
+    }
+}
+
+/// The 1-D counterpart, with the EveryCycle policy so the per-cycle DyDD
+/// migration (warm-started from the incumbent partition) is part of the
+/// replayed orchestration.
+fn oracle_cycles_1d_every(cfg: &ExperimentConfig) -> (Vec<f64>, Vec<Vec<usize>>) {
+    let mesh = Mesh1d::new(cfg.n);
+    let mut part = Partition::uniform(cfg.n, cfg.p);
+    let mut pool = WorkerPool::new(cfg.p, cfg.backend, cfg.artifacts_dir.clone());
+    let mut y0 = generators::background_field(&mesh);
+    let mut censuses = Vec::new();
+    for k in 0..cfg.cycles {
+        let obs = cycle_observations(cfg.drift, cfg.m, cfg.seed, k, cfg.cycles);
+        let (_, new_part, census_after) =
+            oracle_rebalance_1d(&mesh, &part, &obs, &DyddParams::default());
+        part = new_part;
+        censuses.push(census_after);
+        let prob = ClsProblem::new(
+            mesh.clone(),
+            cfg.state_op.build(),
+            y0.clone(),
+            vec![cfg.state_weight; cfg.n],
+            obs,
+        );
+        let blocks: Vec<LocalBlock> =
+            (0..part.p()).map(|i| prob.local_block(&part, i, cfg.schwarz.overlap)).collect();
+        let phases = coupling_phases(&blocks, |gc| part.owner(gc));
+        let par = pool.solve_blocks(cfg.n, blocks, &phases, &cfg.schwarz).unwrap();
+        assert!(par.converged, "oracle cycle {k}");
+        y0 = par.x;
+    }
+    (y0, censuses)
+}
+
+#[test]
+fn golden_cycle_report_matches_hand_rolled_1d_with_dydd() {
+    for drift in DriftLayout::ALL_MOVING {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 128;
+        cfg.m = 90;
+        cfg.p = 4;
+        cfg.seed = 23;
+        cfg.cycles = 3;
+        cfg.drift = drift;
+        cfg.cycle_policy = RebalancePolicy::EveryCycle;
+        let (want_x, want_censuses) = oracle_cycles_1d_every(&cfg);
+        let rep = run_cycles(&cfg, false).unwrap();
+        assert!(rep.all_converged(), "{drift:?}");
+        assert_eq!(rep.x, want_x, "{drift:?}: final analysis diverged");
+        for (r, want) in rep.records.iter().zip(&want_censuses) {
+            let d = r.dydd.as_ref().expect("every-cycle rebalances");
+            assert_eq!(&d.census_after, want, "{drift:?} cycle {}", r.cycle);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4-D regression re-run through WindowGeometry
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_window_geometry_parallel_path_matches_sequential_kf() {
+    // The pre-existing regression (schwarz_solve_4d ≡ stacked sequential
+    // KF ≤ 1e-9, including DyDD-rebalanced windows) re-run through the
+    // generic WindowGeometry + WorkerPool path.
+    let n_space = 10usize;
+    let steps = 6usize;
+    let counts = [40usize, 2, 2, 2, 2, 40];
+    let mesh = Mesh1d::new(n_space);
+    let mut rng = Rng::new(11);
+    let obs: Vec<ObservationSet> = counts
+        .iter()
+        .map(|&m| generators::generate(ObsLayout::Uniform, m, &mut rng))
+        .collect();
+    let bg = generators::background_field(&mesh);
+    let prob = TrajectoryProblem::new(
+        mesh,
+        dydd_da::cls::StateOp::Tridiag { main: 0.9, off: 0.05 },
+        steps,
+        bg,
+        vec![4.0; n_space],
+        5.0,
+        obs,
+    );
+    let m_obs: usize = counts.iter().sum();
+    let kf = kf_solve_rows(prob.n(), prob.n(), m_obs, |r| prob.sparse_row(r));
+
+    for windows in [2usize, 3] {
+        let geom = WindowGeometry::new(n_space, steps, windows);
+        // DyDD-rebalanced windows through the generic path ≡ the fourd
+        // wrapper.
+        let reb =
+            rebalance(&geom, &geom.initial_partition(), &prob.obs, &DyddParams::default())
+                .unwrap();
+        let (want_part, _) = window_partition(&prob, windows).unwrap();
+        assert_eq!(reb.partition, want_part, "windows={windows}");
+
+        // Sequential multiplicative Schwarz (the original solver).
+        let opts = dydd_da::ddkf::SchwarzOptions {
+            max_iters: 5000,
+            ..dydd_da::ddkf::SchwarzOptions::default()
+        };
+        let (x_seq, _, conv) =
+            schwarz_solve_4d(&prob, &reb.partition, &opts, &mut dydd_da::ddkf::NativeLocalSolver)
+                .unwrap();
+        assert!(conv, "windows={windows}");
+        assert!(dist2(&x_seq, &kf.x) < 1e-9, "windows={windows}: sequential");
+
+        // Parallel coordinator path over the same geometry.
+        let mut run_cfg = dydd_da::coordinator::RunConfig::default();
+        run_cfg.schwarz.max_iters = 5000;
+        let par = run_parallel(&geom, &prob, &reb.partition, &run_cfg).unwrap();
+        assert!(par.converged, "windows={windows}: parallel path");
+        let err = dist2(&par.x, &kf.x);
+        assert!(err < 1e-9, "windows={windows}: parallel vs sequential KF = {err:e}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Generic block/phase helpers ≡ the per-dimension derivations they replaced
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_blocks_and_phases_match_per_dimension_derivations() {
+    // 1-D: blocks_of/phases_of ≡ prob.local_block + coupling_phases over
+    // part.owner (the deleted coordinator::{blocks1d, phases1d}).
+    let mut rng = Rng::new(33);
+    let obs = generators::generate(ObsLayout::TwoClusters, 60, &mut rng);
+    let mesh = Mesh1d::new(96);
+    let prob = ClsProblem::new(
+        mesh.clone(),
+        dydd_da::cls::StateOp::Tridiag { main: 1.0, off: 0.15 },
+        generators::background_field(&mesh),
+        vec![4.0; 96],
+        obs,
+    );
+    let part = Partition::from_bounds(96, vec![0, 20, 47, 70, 96]);
+    let geom = IntervalGeometry::new(96, 4);
+    let blocks = decomp::blocks_of(&geom, &prob, &part, 2);
+    let want: Vec<LocalBlock> = (0..4).map(|i| prob.local_block(&part, i, 2)).collect();
+    for (g, w) in blocks.iter().zip(&want) {
+        assert_eq!(g.cols, w.cols);
+        assert_eq!(g.owned, w.owned);
+        assert_eq!(g.global_rows, w.global_rows);
+        assert_eq!(g.halo, w.halo);
+    }
+    let phases = decomp::phases_of(&geom, &blocks, &part);
+    assert_eq!(phases, coupling_phases(&want, |gc| part.owner(gc)));
+
+    // 2-D: ≡ coupling_phases over mesh.unindex + part.owner (the deleted
+    // coordinator::{blocks2d, phases2d}).
+    let mut rng = Rng::new(34);
+    let obs = gen2d::generate(ObsLayout2d::DiagonalBand, 70, &mut rng);
+    let mesh2 = Mesh2d::square(14);
+    let prob2 = dydd_da::cls::ClsProblem2d::new(
+        mesh2.clone(),
+        dydd_da::cls::StateOp2d::FivePoint { main: 1.0, off: 0.12 },
+        gen2d::background_field(&mesh2),
+        vec![4.0; mesh2.n()],
+        obs,
+    );
+    let part2 = BoxPartition::uniform(14, 14, 2, 2);
+    let geom2 = BoxGeometry::new(14, 2, 2);
+    let blocks2 = decomp::blocks_of(&geom2, &prob2, &part2, 1);
+    let want2: Vec<LocalBlock> = (0..4).map(|b| prob2.local_block(&part2, b, 1)).collect();
+    for (g, w) in blocks2.iter().zip(&want2) {
+        assert_eq!(g.cols, w.cols);
+        assert_eq!(g.owned, w.owned);
+        assert_eq!(g.global_rows, w.global_rows);
+    }
+    let phases2 = decomp::phases_of(&geom2, &blocks2, &part2);
+    let want_phases2 = coupling_phases(&want2, |gc| {
+        let (ix, iy) = prob2.mesh.unindex(gc);
+        part2.owner(ix, iy)
+    });
+    assert_eq!(phases2, want_phases2);
+}
+
+#[test]
+fn golden_balance_before_matches_census_ratio() {
+    // ExperimentReport::balance_before must still be the ℰ of the l_in
+    // census, as the pre-refactor per-dimension reports computed it.
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 128;
+    cfg.m = 80;
+    cfg.p = 4;
+    cfg.layout = ObsLayout::Cluster;
+    let rep = run_experiment(&cfg, false).unwrap();
+    let d = rep.dydd.as_ref().unwrap();
+    assert_eq!(rep.balance_before().unwrap(), balance_ratio(&d.dydd.l_in));
+    assert_eq!(rep.balance().unwrap(), balance_ratio(&d.census_after));
+}

@@ -4,8 +4,9 @@
 use dydd_da::cls::{ClsProblem, StateOp};
 use dydd_da::config::ExperimentConfig;
 use dydd_da::coordinator::{run_parallel, RunConfig, SolverBackend};
+use dydd_da::decomp::{BoxGeometry, IntervalGeometry};
 use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
-use dydd_da::dydd::{balance, rebalance_partition, DyddParams};
+use dydd_da::dydd::{balance, rebalance, DyddParams};
 use dydd_da::harness::{render_table, run_experiment, TableId};
 use dydd_da::kf::kf_solve_cls;
 use dydd_da::linalg::mat::dist2;
@@ -28,7 +29,9 @@ fn dd_kf_equals_kf_across_layouts_and_p() {
         let kf = kf_solve_cls(&prob);
         for p in [2usize, 4, 5, 8] {
             let part = Partition::uniform(160, p);
-            let out = run_parallel(&prob, &part, &RunConfig::default()).unwrap();
+            let out =
+                run_parallel(&IntervalGeometry::new(160, p), &prob, &part, &RunConfig::default())
+                    .unwrap();
             assert!(out.converged, "{layout:?} p={p}");
             let err = dist2(&out.x, &kf.x);
             assert!(err < 5e-10, "{layout:?} p={p}: error_DD-DA = {err:e}");
@@ -40,12 +43,13 @@ fn dd_kf_equals_kf_across_layouts_and_p() {
 fn dydd_then_solve_is_identical_to_static_solve() {
     // Load balancing must not change the solution, only the partition.
     let prob = problem(192, 150, ObsLayout::LeftPacked, 12);
+    let geom = IntervalGeometry::new(192, 4);
     let mesh = Mesh1d::new(192);
     let part0 = Partition::uniform(192, 4);
-    let reb = rebalance_partition(&mesh, &part0, &prob.obs, &DyddParams::default()).unwrap();
+    let reb = rebalance(&geom, &part0, &prob.obs, &DyddParams::default()).unwrap();
     let cfg = RunConfig::default();
-    let a = run_parallel(&prob, &part0, &cfg).unwrap();
-    let b = run_parallel(&prob, &reb.partition, &cfg).unwrap();
+    let a = run_parallel(&geom, &prob, &part0, &cfg).unwrap();
+    let b = run_parallel(&geom, &prob, &reb.partition, &cfg).unwrap();
     assert!(a.converged && b.converged);
     assert!(dist2(&a.x, &b.x) < 1e-9);
     // ...while drastically improving balance.
@@ -61,7 +65,7 @@ fn all_backends_agree() {
     let mut solutions = Vec::new();
     for backend in [SolverBackend::Native, SolverBackend::Kf, SolverBackend::Cg] {
         let cfg = RunConfig { backend, ..RunConfig::default() };
-        let out = run_parallel(&prob, &part, &cfg).unwrap();
+        let out = run_parallel(&IntervalGeometry::new(128, 4), &prob, &part, &cfg).unwrap();
         // Only the CG backend may legitimately plateau at its inner
         // tolerance's fp floor; the direct backends must strictly converge.
         if backend == SolverBackend::Cg {
@@ -90,12 +94,12 @@ fn cg_backend_full_2d_pipeline_matches_native() {
     cfg.py = 2;
     cfg.layout2d = dydd_da::domain2d::ObsLayout2d::GaussianBlob;
     cfg.backend = SolverBackend::Cg;
-    let rep_cg = dydd_da::harness::run_experiment2d(&cfg, true).unwrap();
+    let rep_cg = dydd_da::harness::run_experiment(&cfg, true).unwrap();
     assert!(rep_cg.converged || rep_cg.stalled);
     let err = rep_cg.error_dd_da.unwrap();
     assert!(err < 1e-8, "CG pipeline vs sequential KF: {err:e}");
     cfg.backend = SolverBackend::Native;
-    let rep_native = dydd_da::harness::run_experiment2d(&cfg, true).unwrap();
+    let rep_native = dydd_da::harness::run_experiment(&cfg, true).unwrap();
     let err_native = rep_native.error_dd_da.unwrap();
     assert!(err_native < 1e-8, "native pipeline vs sequential KF: {err_native:e}");
 }
@@ -160,7 +164,7 @@ fn overlap_regularized_runs_remain_accurate() {
     cfg.schwarz.overlap = 3;
     cfg.schwarz.mu = 1e-8;
     cfg.schwarz.max_iters = 400;
-    let out = run_parallel(&prob, &part, &cfg).unwrap();
+    let out = run_parallel(&IntervalGeometry::new(144, 4), &prob, &part, &cfg).unwrap();
     // The honest backstop may report a plateau above the 1e-13 default
     // tolerance instead of claiming convergence; accuracy is what matters.
     assert!(out.converged || out.stalled);
@@ -172,9 +176,7 @@ fn overlap_regularized_runs_remain_accurate() {
 fn dd_kf_2d_equals_kf2d_and_dydd_preserves_solution() {
     // The 2-D tentpole end-to-end: box-grid DD-KF equals the sequential
     // 2-D KF, before and after geometric DyDD rebalancing.
-    use dydd_da::coordinator::run_parallel2d;
     use dydd_da::domain2d::{BoxPartition, ObsLayout2d};
-    use dydd_da::dydd::rebalance_partition2d;
     use dydd_da::kf::kf_solve_cls2d;
 
     let mut cfg = ExperimentConfig::default();
@@ -187,16 +189,16 @@ fn dd_kf_2d_equals_kf2d_and_dydd_preserves_solution() {
     let prob = cfg.build_problem2d();
     let kf = kf_solve_cls2d(&prob);
 
+    let geom = BoxGeometry::new(16, 2, 2);
     let part0 = BoxPartition::uniform(16, 16, 2, 2);
     let run_cfg = RunConfig::default();
-    let a = run_parallel2d(&prob, &part0, &run_cfg).unwrap();
+    let a = run_parallel(&geom, &prob, &part0, &run_cfg).unwrap();
     assert!(a.converged);
     let err0 = dist2(&a.x, &kf.x);
     assert!(err0 < 1e-9, "uniform boxes: error_DD-DA = {err0:e}");
 
-    let reb =
-        rebalance_partition2d(&prob.mesh, &part0, &prob.obs, &DyddParams::default()).unwrap();
-    let b = run_parallel2d(&prob, &reb.partition, &run_cfg).unwrap();
+    let reb = rebalance(&geom, &part0, &prob.obs, &DyddParams::default()).unwrap();
+    let b = run_parallel(&geom, &prob, &reb.partition, &run_cfg).unwrap();
     assert!(b.converged);
     let err1 = dist2(&b.x, &kf.x);
     assert!(err1 < 1e-9, "rebalanced boxes: error_DD-DA = {err1:e}");
@@ -255,7 +257,7 @@ fn cycle_policies_acceptance_drifting_blob_2d() {
     use dydd_da::domain2d::DriftLayout2d;
     use dydd_da::dydd::RebalancePolicy;
     use dydd_da::harness::cycles::check_policy_acceptance;
-    use dydd_da::harness::run_cycles2d;
+    use dydd_da::harness::run_cycles;
 
     let run = |policy: RebalancePolicy| {
         let mut cfg = ExperimentConfig::default();
@@ -268,7 +270,7 @@ fn cycle_policies_acceptance_drifting_blob_2d() {
         cfg.seed = 42;
         cfg.drift2d = DriftLayout2d::TranslatingBlob;
         cfg.cycle_policy = policy;
-        run_cycles2d(&cfg, false).unwrap()
+        run_cycles(&cfg, false).unwrap()
     };
     let nvr = run(RebalancePolicy::Never);
     let evr = run(RebalancePolicy::EveryCycle);

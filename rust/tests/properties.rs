@@ -5,9 +5,8 @@
 use dydd_da::cls::{ClsProblem, StateOp};
 use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
 use dydd_da::domain2d::{generators as gen2d, BoxPartition, Mesh2d, ObsLayout2d};
-use dydd_da::dydd::{
-    balance, balance_ratio, rebalance_partition, rebalance_partition2d, DyddOutcome, DyddParams,
-};
+use dydd_da::decomp::{BoxGeometry, IntervalGeometry};
+use dydd_da::dydd::{balance, balance_ratio, rebalance, DyddOutcome, DyddParams};
 use dydd_da::graph::{laplacian_solve, laplacian_solve_cg, Graph};
 use dydd_da::linalg::mat::dist2;
 use dydd_da::linalg::{Cholesky, Mat};
@@ -165,7 +164,8 @@ fn prop_geometric_rebalance_census_is_realizable_optimum() {
         let mesh = Mesh1d::new(n);
         let part = Partition::uniform(n, p);
         let obs = generators::generate(layout, m, &mut rng);
-        let out = rebalance_partition(&mesh, &part, &obs, &DyddParams::default()).unwrap();
+        let out = rebalance(&IntervalGeometry::new(n, p), &part, &obs, &DyddParams::default())
+            .unwrap();
         // Total conserved and balance never degrades vs the input census.
         assert_eq!(out.census_after.iter().sum::<usize>(), m, "seed {seed}");
         let before = balance_ratio(&obs.census(&mesh, &part));
@@ -205,7 +205,7 @@ fn max_multiplicity(vals: &[usize]) -> usize {
 
 #[test]
 fn prop_1d_migration_conserves_and_realizes_schedule() {
-    // Satellite coverage: after rebalance_partition, (a) the total
+    // Satellite coverage: after a geometric rebalance, (a) the total
     // observation count is preserved, (b) replaying the scheduled δ_ij
     // reproduces l_fin exactly, and (c) the realized census matches l_fin
     // within grid-point tie groups — across ALL layouts and seeds.
@@ -225,7 +225,9 @@ fn prop_1d_migration_conserves_and_realizes_schedule() {
             let mesh = Mesh1d::new(n);
             let part = Partition::uniform(n, p);
             let obs = generators::generate(layout, m, &mut rng);
-            let out = rebalance_partition(&mesh, &part, &obs, &DyddParams::default()).unwrap();
+            let out =
+                rebalance(&IntervalGeometry::new(n, p), &part, &obs, &DyddParams::default())
+                    .unwrap();
             let tag = format!("{layout:?} seed {seed}");
             // (a) conservation.
             assert_eq!(out.census_after.iter().sum::<usize>(), m, "{tag}");
@@ -267,7 +269,8 @@ fn prop_2d_migration_conserves_and_realizes_schedule() {
             let part = BoxPartition::uniform(n, n, px, py);
             let obs = gen2d::generate(layout, m, &mut rng);
             let out =
-                rebalance_partition2d(&mesh, &part, &obs, &DyddParams::default()).unwrap();
+                rebalance(&BoxGeometry::new(n, px, py), &part, &obs, &DyddParams::default())
+                    .unwrap();
             let tag = format!("{layout:?} seed {seed} {px}x{py}");
             assert_eq!(out.census_after.iter().sum::<usize>(), m, "{tag}");
             assert_eq!(out.dydd.l_fin.iter().sum::<usize>(), m, "{tag}");
@@ -580,7 +583,9 @@ fn prop_never_policy_cycles_equal_hand_chained_runs_1d() {
                     vec![cfg.state_weight; n],
                     obs,
                 );
-                let par = run_parallel(&prob, &part, &cfg.run_config()).unwrap();
+                let par =
+                    run_parallel(&IntervalGeometry::new(n, p), &prob, &part, &cfg.run_config())
+                        .unwrap();
                 assert!(par.converged, "{layout:?} seed {seed} cycle {k}");
                 x_hand = par.x;
                 y0 = x_hand.clone();
@@ -599,11 +604,11 @@ fn prop_never_policy_cycles_equal_hand_chained_runs_1d() {
 fn prop_never_policy_cycles_equal_hand_chained_runs_2d() {
     use dydd_da::cls::{ClsProblem2d, StateOp2d};
     use dydd_da::config::ExperimentConfig;
-    use dydd_da::coordinator::run_parallel2d;
+    use dydd_da::coordinator::run_parallel;
     use dydd_da::domain2d::DriftLayout2d;
     use dydd_da::dydd::RebalancePolicy;
     use dydd_da::harness::cycles::cycle_observations2d;
-    use dydd_da::harness::run_cycles2d;
+    use dydd_da::harness::run_cycles;
 
     for layout in ObsLayout2d::ALL {
         for seed in [5u64, 77] {
@@ -618,7 +623,7 @@ fn prop_never_policy_cycles_equal_hand_chained_runs_2d() {
             cfg.cycles = k_cycles;
             cfg.drift2d = DriftLayout2d::Stationary(layout);
             cfg.cycle_policy = RebalancePolicy::Never;
-            let rep = run_cycles2d(&cfg, false).unwrap();
+            let rep = run_cycles(&cfg, false).unwrap();
             assert!(rep.all_converged(), "{layout:?} seed {seed}");
 
             let mesh = Mesh2d::square(n);
@@ -640,7 +645,9 @@ fn prop_never_policy_cycles_equal_hand_chained_runs_2d() {
                     vec![cfg.state_weight; mesh.n()],
                     obs,
                 );
-                let par = run_parallel2d(&prob, &part, &cfg.run_config()).unwrap();
+                let par =
+                    run_parallel(&BoxGeometry::new(n, 2, 2), &prob, &part, &cfg.run_config())
+                        .unwrap();
                 assert!(par.converged, "{layout:?} seed {seed} cycle {k}");
                 x_hand = par.x;
                 y0 = x_hand.clone();
@@ -693,10 +700,11 @@ fn prop_cycle_rebalances_conserve_and_replay_1d() {
                 let replayed = replay_schedule(&out.dydd);
                 let want: Vec<i64> = out.dydd.l_fin.iter().map(|&l| l as i64).collect();
                 assert_eq!(replayed, want, "{tag} cycle {}", r.cycle);
-                // The partition stays a valid decomposition.
-                assert_eq!(out.partition.p(), cfg.p, "{tag}");
-                assert_eq!(out.partition.bounds()[0], 0, "{tag}");
-                assert_eq!(*out.partition.bounds().last().unwrap(), cfg.n, "{tag}");
+                // The partition stays a valid decomposition (sizes cover
+                // the mesh exactly with one slot per subdomain).
+                assert_eq!(out.sizes.len(), cfg.p, "{tag}");
+                assert_eq!(out.sizes.iter().sum::<usize>(), cfg.n, "{tag}");
+                assert!(out.sizes.iter().all(|&s| s >= 1), "{tag}");
                 assert_eq!(r.migration_volume, out.dydd.migration_volume(), "{tag}");
             }
         }
@@ -710,7 +718,7 @@ fn prop_cycle_rebalances_conserve_and_replay_2d() {
     use dydd_da::config::ExperimentConfig;
     use dydd_da::domain2d::DriftLayout2d;
     use dydd_da::dydd::RebalancePolicy;
-    use dydd_da::harness::run_cycles2d;
+    use dydd_da::harness::run_cycles;
 
     for drift in DriftLayout2d::ALL_MOVING {
         for seed in [13u64, 88] {
@@ -724,12 +732,12 @@ fn prop_cycle_rebalances_conserve_and_replay_2d() {
             cfg.cycles = 3;
             cfg.drift2d = drift;
             cfg.cycle_policy = RebalancePolicy::EveryCycle;
-            let rep = run_cycles2d(&cfg, false).unwrap();
+            let rep = run_cycles(&cfg, false).unwrap();
             let tag = format!("{drift:?} seed {seed}");
             assert_eq!(rep.rebalances(), 3, "{tag}");
             let grid_graph = BoxPartition::uniform(16, 16, 2, 2).induced_graph();
             for r in &rep.records {
-                let out = r.dydd2d.as_ref().expect("every-cycle policy must rebalance");
+                let out = r.dydd.as_ref().expect("every-cycle policy must rebalance");
                 assert_eq!(out.dydd.l_in.iter().sum::<usize>(), cfg.m, "{tag}");
                 assert_eq!(out.dydd.l_fin.iter().sum::<usize>(), cfg.m, "{tag}");
                 assert_eq!(out.census_after.iter().sum::<usize>(), cfg.m, "{tag}");
@@ -745,7 +753,8 @@ fn prop_cycle_rebalances_conserve_and_replay_2d() {
                         "{tag}: migration across non-edge ({i},{j})"
                     );
                 }
-                assert_eq!(out.partition.p(), 4, "{tag}");
+                assert_eq!(out.sizes.len(), 4, "{tag}");
+                assert_eq!(out.sizes.iter().sum::<usize>(), 16 * 16, "{tag}");
             }
         }
     }
