@@ -1,0 +1,453 @@
+"""Changelog/incremental-census replay for the streaming engine (`stream`).
+
+No Rust toolchain is available in the authoring container, so the
+streaming subsystem's core claim — the incremental census folded over an
+observation changelog is **bitwise identical** to a full recount after
+every tick, across native per-row drift streams, replayed per-cycle
+generators, and threshold-policy rebalances — is cross-checked here with
+an exact-arithmetic port. Keep in sync with:
+
+  - rust/src/domain/generators.rs      (StreamDrift + generate_drift)
+  - rust/src/domain2d/generators.rs    (StreamDrift2d + generate_drift2d)
+  - rust/src/stream/changelog.rs       (ObsDelta / RecordStore / IncrementalCensus)
+  - rust/src/stream/source.rs          (DriftSource row diff, ReplaySource multiset diff)
+  - rust/tests/stream.rs               (the in-language property tests this mirrors)
+
+Run:  python3 python/tools/stream_census_sim.py
+
+Mirrors the Rust arithmetic exactly where it matters for the census:
+  - SplitMix64 Rng / Acklam norm_quantile / nearest-point census
+    (imported from cycle_census_sim, the established ports)
+  - StreamDrift / StreamDrift2d per-row position formulas: jitter drawn
+    once at construction, positions re-evaluated per phase, so a
+    row-aligned diff yields sparse `moved` deltas
+  - ReplaySource's multiset diff of consecutive per-cycle record sets
+    (full remove/add churn — the parity path for the cycle driver)
+  - IncrementalCensus: +-1 per delta entry under the incumbent
+    partition, underflow-checked, rebased on partition change
+
+Values/noise are irrelevant to the census and drawn *after* positions on
+the Rust side, so the position stream alone replays the arithmetic.
+"""
+import math
+import struct
+from collections import Counter
+
+from cycle_census_sim import (
+    Rng, norm_quantile, clamp01, nearest, census_1d, census_2d,
+    from_targets, balance_ratio, cycle_rng, drift_blob_1d, drift_blob_2d,
+    rebalance_2d, GOLDEN,
+)
+
+TAU = 0.9
+
+
+def rem_euclid(v, w):
+    """Exact port of Rust f64::rem_euclid for w > 0."""
+    r = math.fmod(v, w)
+    if r < 0.0:
+        r += w
+    return r
+
+
+def round_half_away(v):
+    """Rust f64::round for v >= 0."""
+    return int(math.floor(v + 0.5))
+
+
+# ---------------- native per-row streams (StreamDrift ports) ----------------
+
+class StreamDrift1d:
+    """Port of domain::generators::StreamDrift (moving layouts only)."""
+
+    def __init__(self, layout, m, seed):
+        self.layout = layout
+        self.m = m
+        rng = Rng(seed)
+        self.u = [rng.uniform() for _ in range(m)]
+
+    def positions(self, t):
+        t = min(max(t, 0.0), 1.0)
+        m = self.m
+        out = []
+        for i in range(m):
+            if self.layout == 'translating_blob':
+                m_u = m // 2
+                if i < m_u:
+                    x = (i + self.u[i]) / m_u
+                else:
+                    j, m_b = i - m_u, m - m_u
+                    q = norm_quantile((j + self.u[i]) / m_b)
+                    x = clamp01(0.28 + 0.06 * t + 0.16 * q)
+            elif self.layout == 'rotating_band':
+                c = 0.1 + 0.8 * t
+                u = (i + self.u[i]) / m
+                x = min(rem_euclid(c - 0.15 + 0.3 * u, 1.0), 1.0 - 1e-12)
+            elif self.layout == 'appearing_cluster':
+                m2 = min(round_half_away(t * m), m)
+                mu = 0.75 if i < m2 else 0.22
+                x = clamp01(mu + 0.06 * norm_quantile((i + self.u[i]) / m))
+            else:
+                raise ValueError(self.layout)
+            out.append(x)
+        return out
+
+
+class StreamDrift2d:
+    """Port of domain2d::generators::StreamDrift2d (moving layouts only)."""
+
+    def __init__(self, layout, m, seed):
+        self.layout = layout
+        self.m = m
+        rng = Rng(seed)
+        self.u = [rng.uniform() for _ in range(m)]
+        self.u2 = [rng.uniform() for _ in range(m)]
+
+    def positions(self, t):
+        t = min(max(t, 0.0), 1.0)
+        m = self.m
+        out = []
+        for i in range(m):
+            if self.layout == 'translating_blob':
+                m_u = m // 2
+                if i < m_u:
+                    x = (i + self.u[i]) / m_u
+                    y = min(rem_euclid(i * GOLDEN + self.u2[i] / m_u, 1.0), 1.0 - 1e-12)
+                else:
+                    j, m_b = i - m_u, m - m_u
+                    q = (j + self.u[i]) / m_b
+                    r = 0.16 * math.sqrt(-2.0 * math.log(1.0 - q))
+                    th = 2.0 * math.pi * rem_euclid(j * GOLDEN + (self.u2[i] - 0.5) / m_b, 1.0)
+                    cx, cy = 0.30 + 0.06 * t, 0.35 + 0.05 * t
+                    x = clamp01(cx + r * math.cos(th))
+                    y = clamp01(cy + r * math.sin(th))
+            elif self.layout == 'rotating_band':
+                th = math.pi * 0.5 * t
+                sin_t, cos_t = math.sin(th), math.cos(th)
+                s = -0.45 + 0.9 * (i + self.u[i]) / m
+                w = 0.08 * (self.u2[i] - 0.5)
+                x = clamp01(0.5 + s * cos_t - w * sin_t)
+                y = clamp01(0.5 + s * sin_t + w * cos_t)
+            elif self.layout == 'appearing_cluster':
+                m2 = min(round_half_away(t * m), m)
+                cx, cy = (0.75, 0.75) if i < m2 else (0.25, 0.25)
+                q = (i + self.u[i]) / m
+                r = 0.07 * math.sqrt(-2.0 * math.log(1.0 - q))
+                th = 2.0 * math.pi * rem_euclid(i * GOLDEN + (self.u2[i] - 0.5) / m, 1.0)
+                x = clamp01(cx + r * math.cos(th))
+                y = clamp01(cy + r * math.sin(th))
+            else:
+                raise ValueError(self.layout)
+            out.append((x, y))
+        return out
+
+
+# ---------------- per-cycle generators (ReplaySource feed) ----------------
+
+def gen_cycle_1d(layout, m, t, rng):
+    """Positions of generate_drift(layout, m, t) — locations are drawn
+    before values on the Rust side, so the first draws replay exactly."""
+    if layout == 'translating_blob':
+        return drift_blob_1d(m, t, rng, 0.28, 0.06, 0.16)
+    if layout == 'rotating_band':
+        c = 0.1 + 0.8 * t
+        return [min(rem_euclid(c - 0.15 + 0.3 * ((i + rng.uniform()) / m), 1.0), 1.0 - 1e-12)
+                for i in range(m)]
+    if layout == 'appearing_cluster':
+        m2 = min(round_half_away(t * m), m)
+        xs = []
+        for count, mu in [(m - m2, 0.22), (m2, 0.75)]:
+            for i in range(count):
+                u = (i + rng.uniform()) / count
+                xs.append(clamp01(mu + 0.06 * norm_quantile(u)))
+        return xs
+    raise ValueError(layout)
+
+
+def sunflower(pts, count, cx, cy, sigma, rng):
+    for i in range(count):
+        u = (i + rng.uniform()) / count
+        r = sigma * math.sqrt(-2.0 * math.log(1.0 - u))
+        th = 2.0 * math.pi * rem_euclid(i * GOLDEN + (rng.uniform() - 0.5) / count, 1.0)
+        pts.append((clamp01(cx + r * math.cos(th)), clamp01(cy + r * math.sin(th))))
+
+
+def gen_cycle_2d(layout, m, t, rng):
+    """Positions of generate_drift2d(layout, m, t)."""
+    if layout == 'translating_blob':
+        return drift_blob_2d(m, t, rng, (0.30, 0.35), (0.06, 0.05), 0.16)
+    if layout == 'rotating_band':
+        th = math.pi * 0.5 * t
+        sin_t, cos_t = math.sin(th), math.cos(th)
+        pts = []
+        for i in range(m):
+            s = -0.45 + 0.9 * (i + rng.uniform()) / m
+            w = 0.08 * (rng.uniform() - 0.5)
+            pts.append((clamp01(0.5 + s * cos_t - w * sin_t),
+                        clamp01(0.5 + s * sin_t + w * cos_t)))
+        return pts
+    if layout == 'appearing_cluster':
+        m2 = min(round_half_away(t * m), m)
+        pts = []
+        sunflower(pts, m - m2, 0.25, 0.25, 0.07, rng)
+        sunflower(pts, m2, 0.75, 0.75, 0.07, rng)
+        return pts
+    raise ValueError(layout)
+
+
+# ---------------- changelog / store / census (stream::changelog port) ----------------
+
+def key(rec):
+    """Bit-pattern record key (the census-relevant projection of rec_key):
+    distinguishes -0.0/0.0 the way the Rust f64_key ordering does."""
+    if isinstance(rec, tuple):
+        return struct.pack('<' + 'd' * len(rec), *rec)
+    return struct.pack('<d', rec)
+
+
+def row_diff(prev, cur, tick):
+    """DriftSource: row-aligned diff of consecutive native snapshots."""
+    if prev is None:
+        return {'added': list(cur), 'removed': [], 'moved': []}
+    assert len(prev) == len(cur)
+    moved = [(a, b) for a, b in zip(prev, cur) if key(a) != key(b)]
+    return {'added': [], 'removed': [], 'moved': moved}
+
+
+def multiset_diff(prev, cur, tick):
+    """ReplaySource: multiset diff of consecutive per-cycle record sets."""
+    if prev is None:
+        return {'added': list(cur), 'removed': [], 'moved': []}
+    pc, cc = Counter(key(r) for r in prev), Counter(key(r) for r in cur)
+    of = {}
+    for r in prev:
+        of.setdefault(key(r), r)
+    for r in cur:
+        of.setdefault(key(r), r)
+    added, removed = [], []
+    for k, c in cc.items():
+        for _ in range(c - pc.get(k, 0)):
+            added.append(of[k])
+    for k, c in pc.items():
+        for _ in range(c - cc.get(k, 0)):
+            removed.append(of[k])
+    return {'added': added, 'removed': removed, 'moved': []}
+
+
+class RecordStore:
+    """Multiset of standing records keyed by bit pattern."""
+
+    def __init__(self):
+        self.counts = Counter()
+        self.of = {}
+
+    def add(self, rec):
+        k = key(rec)
+        self.counts[k] += 1
+        self.of[k] = rec
+
+    def remove(self, rec):
+        k = key(rec)
+        assert self.counts.get(k, 0) > 0, 'store underflow: removed a record not present'
+        self.counts[k] -= 1
+        if self.counts[k] == 0:
+            del self.counts[k]
+            del self.of[k]
+
+    def apply(self, delta):
+        for r in delta['added']:
+            self.add(r)
+        for r in delta['removed']:
+            self.remove(r)
+        for old, new in delta['moved']:
+            self.remove(old)
+            self.add(new)
+
+    def records(self):
+        return [self.of[k] for k, c in self.counts.items() for _ in range(c)]
+
+
+class IncrementalCensus:
+    """O(|delta|) census fold — must equal a full recount bitwise."""
+
+    def __init__(self, p):
+        self.c = [0] * p
+
+    def apply(self, delta, owner):
+        for r in delta['added']:
+            self.c[owner(r)] += 1
+        for r in delta['removed']:
+            i = owner(r)
+            assert self.c[i] > 0, 'census underflow'
+            self.c[i] -= 1
+        for old, new in delta['moved']:
+            i = owner(old)
+            assert self.c[i] > 0, 'census underflow (moved)'
+            self.c[i] -= 1
+            self.c[owner(new)] += 1
+
+    def rebase(self, counts):
+        self.c = list(counts)
+
+
+# ---------------- owners (census arithmetic projections) ----------------
+
+def owner_1d(x, n, bounds):
+    g = nearest(x, n)
+    p = len(bounds) - 1
+    for i in range(p):
+        if bounds[i] <= g < bounds[i + 1]:
+            return i
+    return p - 1
+
+
+def owner_2d(pt, n, xbounds, ybounds):
+    x, y = pt
+    px = len(xbounds) - 1
+    py = len(ybounds[0]) - 1
+    ix, iy = nearest(x, n), nearest(y, n)
+    bx = px - 1
+    for i in range(px):
+        if xbounds[i] <= ix < xbounds[i + 1]:
+            bx = i
+            break
+    yb = ybounds[bx]
+    by = py - 1
+    for j in range(py):
+        if yb[j] <= iy < yb[j + 1]:
+            by = j
+            break
+    return by * px + bx
+
+
+# ---------------- engine tick loops ----------------
+
+def split_targets(m, p):
+    targets = [m // p] * p
+    for i in range(m % p):
+        targets[i] += 1
+    return targets
+
+
+def run_stream_1d(layout, mode, n, p, m, K, seed, policy):
+    """The serve tick loop, census arithmetic only: ingest delta, fold the
+    incremental census, assert it equals a full recount bitwise, apply the
+    rebalance policy (rebase on partition change)."""
+    bounds = [i * n // p for i in range(p + 1)]
+    store = RecordStore()
+    census = IncrementalCensus(p)
+    stream = StreamDrift1d(layout, m, seed) if mode == 'native' else None
+    prev = None
+    churn = rebs = 0
+    for k in range(K):
+        t = 0.0 if K <= 1 else k / (K - 1)
+        if mode == 'native':
+            cur = stream.positions(t)
+            delta = row_diff(prev, cur, k)
+        else:
+            cur = gen_cycle_1d(layout, m, t, cycle_rng(seed, k))
+            delta = multiset_diff(prev, cur, k)
+        churn += len(delta['added']) + len(delta['removed']) + len(delta['moved'])
+        store.apply(delta)
+        census.apply(delta, lambda x: owner_1d(x, n, bounds))
+        xs = store.records()
+        # Tentpole invariant: incremental fold == full recount, bitwise.
+        full = census_1d(xs, n, bounds)
+        assert census.c == full, \
+            f'{layout}/{mode} seed={seed} tick={k}: incremental {census.c} != recount {full}'
+        # Store rebuild invariant: standing multiset == the snapshot.
+        assert store.counts == Counter(key(x) for x in cur), \
+            f'{layout}/{mode} seed={seed} tick={k}: store diverged from snapshot'
+        bal = balance_ratio(census.c)
+        reb = {'never': False, 'every': True, 'threshold': bal < TAU}[policy]
+        if reb:
+            rebs += 1
+            grid = sorted(nearest(x, n) for x in xs)
+            bounds = from_targets(n, grid, split_targets(len(xs), p))
+            census.rebase(census_1d(xs, n, bounds))
+        prev = cur
+    return churn, rebs
+
+
+def run_stream_2d(layout, mode, n, px, py, m, K, seed, policy):
+    xbounds = [i * n // px for i in range(px + 1)]
+    ycol = [j * n // py for j in range(py + 1)]
+    ybounds = [list(ycol) for _ in range(px)]
+    p = px * py
+    store = RecordStore()
+    census = IncrementalCensus(p)
+    stream = StreamDrift2d(layout, m, seed) if mode == 'native' else None
+    prev = None
+    churn = rebs = 0
+    for k in range(K):
+        t = 0.0 if K <= 1 else k / (K - 1)
+        if mode == 'native':
+            cur = stream.positions(t)
+            delta = row_diff(prev, cur, k)
+        else:
+            cur = gen_cycle_2d(layout, m, t, cycle_rng(seed, k))
+            delta = multiset_diff(prev, cur, k)
+        churn += len(delta['added']) + len(delta['removed']) + len(delta['moved'])
+        store.apply(delta)
+        census.apply(delta, lambda q: owner_2d(q, n, xbounds, ybounds))
+        pts = store.records()
+        full = census_2d(pts, n, xbounds, ybounds)
+        assert census.c == full, \
+            f'2d {layout}/{mode} seed={seed} tick={k}: incremental {census.c} != recount {full}'
+        assert store.counts == Counter(key(q) for q in cur), \
+            f'2d {layout}/{mode} seed={seed} tick={k}: store diverged from snapshot'
+        bal = balance_ratio(census.c)
+        reb = {'never': False, 'every': True, 'threshold': bal < TAU}[policy]
+        if reb:
+            rebs += 1
+            xbounds, ybounds = rebalance_2d(pts, n, px, py, split_targets(len(pts), p))
+            census.rebase(census_2d(pts, n, xbounds, ybounds))
+        prev = cur
+    return churn, rebs
+
+
+LAYOUTS = ['translating_blob', 'rotating_band', 'appearing_cluster']
+
+
+def main():
+    ticks_checked = 0
+
+    # 1-D: the BENCH_stream / stream_serve scenario shape, every moving
+    # layout, both delta paths, all three policies.
+    n, p, m, K = 512, 4, 800, 8
+    for layout in LAYOUTS:
+        for mode in ['native', 'replay']:
+            for seed in [42, 7, 123]:
+                for policy in ['threshold', 'every', 'never']:
+                    churn, rebs = run_stream_1d(layout, mode, n, p, m, K, seed, policy)
+                    ticks_checked += K
+                    if policy == 'threshold':
+                        print(f'1d {layout:17s} {mode:6s} seed={seed:<3d} '
+                              f'|delta|/tick={churn / K:6.1f}  rebalances={rebs}')
+            # Native streams with t-independent rows must be sparse: warm
+            # churn strictly below a full re-materialization (the
+            # O(|delta|) point of the path). rotating_band moves every row
+            # each tick, so it is exempt.
+            if mode == 'native' and layout != 'rotating_band':
+                churn, _ = run_stream_1d(layout, mode, n, p, m, K, 42, 'threshold')
+                warm = (churn - m) / (K - 1)
+                assert warm < m, f'{layout}: native warm churn {warm} not sparse'
+
+    # 2-D boxes: same invariants through the x-sweep/y-sweep realization.
+    n2, px, py, m2, K2 = 96, 2, 2, 400, 6
+    for layout in LAYOUTS:
+        for mode in ['native', 'replay']:
+            for seed in [42, 7]:
+                for policy in ['threshold', 'every']:
+                    churn, rebs = run_stream_2d(layout, mode, n2, px, py, m2, K2, seed, policy)
+                    ticks_checked += K2
+                    if policy == 'threshold':
+                        print(f'2d {layout:17s} {mode:6s} seed={seed:<3d} '
+                              f'|delta|/tick={churn / K2:6.1f}  rebalances={rebs}')
+
+    print(f'\nOK: incremental census == full recount (bitwise) on every one of '
+          f'{ticks_checked} ticks')
+
+
+if __name__ == '__main__':
+    main()

@@ -11,6 +11,9 @@
 //!      drifting-blob scenario (also emits `BENCH_cycles.json`).
 //!  A7. Sparse CG vs dense local assemble+solve over a 2-D grid sweep
 //!      (emits `BENCH_sparse.json`).
+//!  A8. Streaming engine: incremental dirty-block ticks vs forced cold
+//!      re-extraction on the K=16 drifting blob (emits
+//!      `BENCH_stream.json`).
 
 use dydd_da::cls::{ClsProblem, ClsProblem2d, StateOp, StateOp2d};
 use dydd_da::config::ExperimentConfig;
@@ -25,6 +28,7 @@ use dydd_da::dydd::{balance_ratio, rebalance, DyddParams, RebalancePolicy};
 use dydd_da::harness::run_cycles;
 use dydd_da::linalg::mat::dist2;
 use dydd_da::runtime;
+use dydd_da::stream::{run_stream, DriftSource, StreamOptions};
 use dydd_da::util::timer::fmt_secs;
 use dydd_da::util::{Json, Rng, Table};
 use std::collections::BTreeMap;
@@ -306,6 +310,71 @@ fn main() -> anyhow::Result<()> {
     doc.insert("solves_per_backend".into(), Json::Num(SOLVES as f64));
     doc.insert("rows".into(), Json::Arr(sparse_rows));
     let path = "BENCH_sparse.json";
+    std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
+    println!("wrote {path}");
+
+    // ---------- A8: streaming incremental vs cold per-tick solves ----------
+    let mut t = Table::new(
+        "A8 — streaming engine: incremental (dirty-block) ticks vs forced \
+         cold re-extraction (n=512, m=800, p=8, K=16 drifting blob)",
+        &["mode", "factorizations", "cache_hit_mean", "warm tick wall (mean)"],
+    );
+    let mut sgeom = IntervalGeometry::new(512, 8);
+    sgeom.drift = DriftLayout::TranslatingBlob;
+    let run_mode = |force_cold: bool| -> anyhow::Result<dydd_da::stream::StreamReport> {
+        let opts = StreamOptions { force_cold, ..StreamOptions::default() };
+        let mut src = DriftSource::new(&sgeom, 800, 42, 16)
+            .expect("1-D drifts have a native stream");
+        run_stream(&sgeom, &mut src, &opts, |_| {})
+    };
+    let warm = run_mode(false)?;
+    let cold = run_mode(true)?;
+    assert!(warm.all_converged() && cold.all_converged());
+    for (name, rep) in [("incremental", &warm), ("cold", &cold)] {
+        t.row(&[
+            name.to_string(),
+            rep.total_factorizations().to_string(),
+            format!("{:.3}", rep.mean_cache_hit_rate()),
+            fmt_secs(rep.mean_warm_tick_wall()),
+        ]);
+    }
+    println!("{}", t.render());
+    let warm_mean = warm.mean_warm_tick_wall();
+    let cold_mean = cold.mean_warm_tick_wall();
+    // Dirty fraction over warm ticks: how much of the decomposition the
+    // drifting blob actually touches per tick.
+    let dirty_fraction = {
+        let w = &warm.records[1..];
+        w.iter().map(|r| r.dirty_blocks as f64 / r.p as f64).sum::<f64>() / w.len() as f64
+    };
+    let mut scenario = BTreeMap::new();
+    scenario.insert("dim".into(), Json::Num(1.0));
+    scenario.insert("n".into(), Json::Num(512.0));
+    scenario.insert("m".into(), Json::Num(800.0));
+    scenario.insert("p".into(), Json::Num(8.0));
+    scenario.insert("ticks".into(), Json::Num(16.0));
+    scenario.insert("seed".into(), Json::Num(42.0));
+    scenario.insert("drift".into(), Json::Str("translating_blob".into()));
+    scenario.insert("source".into(), Json::Str("drift".into()));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("stream".into()));
+    doc.insert("measured".into(), Json::Bool(true));
+    doc.insert("scenario".into(), Json::Obj(scenario));
+    doc.insert("warm_tick_mean_s".into(), Json::Num(warm_mean));
+    doc.insert("cold_tick_mean_s".into(), Json::Num(cold_mean));
+    doc.insert("speedup".into(), Json::Num(cold_mean / warm_mean.max(1e-12)));
+    doc.insert("dirty_block_fraction".into(), Json::Num(dirty_fraction));
+    doc.insert("cache_hit_rate".into(), Json::Num(warm.mean_cache_hit_rate()));
+    doc.insert(
+        "factorizations_incremental".into(),
+        Json::Num(warm.total_factorizations() as f64),
+    );
+    doc.insert(
+        "factorizations_cold".into(),
+        Json::Num(cold.total_factorizations() as f64),
+    );
+    doc.insert("err_incremental_vs_cold".into(), Json::Num(dist2(&warm.x, &cold.x)));
+    let path = "BENCH_stream.json";
     std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
     println!("wrote {path}");
 

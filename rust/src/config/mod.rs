@@ -5,5 +5,5 @@
 mod spec;
 mod toml;
 
-pub use spec::{ExperimentConfig, StateOpConfig, ValidationError};
+pub use spec::{ExperimentConfig, StateOpConfig, StreamSourceConfig, ValidationError};
 pub use toml::{parse_toml, TomlError, TomlValue};

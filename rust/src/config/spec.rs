@@ -84,6 +84,40 @@ pub struct ExperimentConfig {
     pub drift: DriftLayout,
     /// Drifting observation generator for 2-D cycle runs.
     pub drift2d: DriftLayout2d,
+    /// Tick count K for the streaming engine (`serve` subcommand).
+    pub ticks: usize,
+    /// Where `serve` reads observation deltas from.
+    pub stream_source: StreamSourceConfig,
+    /// Feed each tick's analysis forward as the next background.
+    pub stream_feed_forward: bool,
+    /// Warm-start retained blocks from the cached solution.
+    pub stream_warm_start: bool,
+    /// Diagnostic: disable the incremental path (every tick cold-solves).
+    pub stream_force_cold: bool,
+}
+
+/// Delta source for the streaming engine's `serve` loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamSourceConfig {
+    /// The geometry's native per-tick record emitter (sparse deltas from
+    /// persistent row identities); falls back to `Replay` when the
+    /// geometry has none.
+    Drift,
+    /// Replay `cycle_obs` per tick and diff consecutive sets.
+    Replay,
+    /// JSONL delta lines on stdin.
+    Stdin,
+}
+
+impl StreamSourceConfig {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "drift" => Some(StreamSourceConfig::Drift),
+            "replay" => Some(StreamSourceConfig::Replay),
+            "-" | "stdin" => Some(StreamSourceConfig::Stdin),
+            _ => None,
+        }
+    }
 }
 
 impl Default for ExperimentConfig {
@@ -111,6 +145,11 @@ impl Default for ExperimentConfig {
             cycle_policy: RebalancePolicy::Threshold(RebalancePolicy::DEFAULT_TAU),
             drift: DriftLayout::TranslatingBlob,
             drift2d: DriftLayout2d::TranslatingBlob,
+            ticks: 16,
+            stream_source: StreamSourceConfig::Drift,
+            stream_feed_forward: true,
+            stream_warm_start: true,
+            stream_force_cold: false,
         }
     }
 }
@@ -229,6 +268,22 @@ impl ExperimentConfig {
                 "cycle.drift" => {
                     drift_name = Some(v.as_str().ok_or_else(|| bad(k))?.to_string());
                 }
+                "stream.ticks" => cfg.ticks = v.as_usize().ok_or_else(|| bad(k))?,
+                "stream.source" => {
+                    cfg.stream_source = v
+                        .as_str()
+                        .and_then(StreamSourceConfig::parse)
+                        .ok_or_else(|| bad(k))?
+                }
+                "stream.feed_forward" => {
+                    cfg.stream_feed_forward = v.as_bool().ok_or_else(|| bad(k))?
+                }
+                "stream.warm_start" => {
+                    cfg.stream_warm_start = v.as_bool().ok_or_else(|| bad(k))?
+                }
+                "stream.force_cold" => {
+                    cfg.stream_force_cold = v.as_bool().ok_or_else(|| bad(k))?
+                }
                 other => {
                     return Err(ValidationError::Invalid(format!("unknown key {other:?}")))
                 }
@@ -345,6 +400,9 @@ impl ExperimentConfig {
         }
         if self.cycles == 0 {
             return fail("cycle.count = 0: nothing to assimilate".into());
+        }
+        if self.ticks == 0 {
+            return fail("stream.ticks = 0: nothing to serve".into());
         }
         if let RebalancePolicy::Threshold(tau) = self.cycle_policy {
             if !(tau > 0.0 && tau <= 1.0) {
@@ -657,6 +715,36 @@ drift = "translating_blob"
         )
         .unwrap_err();
         assert!(err.to_string().contains("not a 2-D drift"), "{err}");
+    }
+
+    #[test]
+    fn stream_section_roundtrips() {
+        let text = r#"
+name = "serving"
+[problem]
+n = 512
+m = 800
+p = 8
+[stream]
+ticks = 24
+source = "replay"
+feed_forward = false
+warm_start = false
+force_cold = true
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.ticks, 24);
+        assert_eq!(cfg.stream_source, StreamSourceConfig::Replay);
+        assert!(!cfg.stream_feed_forward);
+        assert!(!cfg.stream_warm_start);
+        assert!(cfg.stream_force_cold);
+        // Defaults: native drift source, feed-forward warm serving.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.stream_source, StreamSourceConfig::Drift);
+        assert!(d.stream_feed_forward && d.stream_warm_start && !d.stream_force_cold);
+        assert!(ExperimentConfig::from_toml_str("[stream]\nticks = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("[stream]\nsource = \"carrier\"").is_err());
+        assert_eq!(StreamSourceConfig::parse("-"), Some(StreamSourceConfig::Stdin));
     }
 
     #[test]

@@ -7,12 +7,67 @@ use super::RunConfig;
 use crate::cls::LocalBlock;
 use crate::ddkf::schwarz::{overlap_reg, rel_update, write_back};
 use crate::ddkf::{ConvergenceCheck, OverlapAccumulator, SchwarzOptions, Verdict};
-use crate::decomp::{blocks_of, phases_of, Geometry};
+use crate::decomp::{blocks_of, phases_of, BlockEpoch, Geometry};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// What each block needs this epoch — the streaming dirty-block protocol.
+///
+/// `Extract` is the cold path (fresh restriction + factorization).
+/// `RefreshB` keeps the cached factor and replaces only the right-hand
+/// side (the background changed but no observation row did — local
+/// factors depend on (A, d, reg), never on b). `Retain` reuses the cached
+/// block verbatim.
+pub enum BlockTask {
+    Extract(LocalBlock),
+    RefreshB(Vec<f64>),
+    Retain,
+}
+
+/// How the pool serviced one epoch's blocks (the cache/dirty counters the
+/// streaming acceptance tests assert on).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SolveCounters {
+    /// Blocks freshly extracted and factored (the dirty set).
+    pub extracted: usize,
+    /// Blocks whose right-hand side was refreshed (factor reused).
+    pub refreshed: usize,
+    /// Blocks reused verbatim.
+    pub retained: usize,
+}
+
+impl SolveCounters {
+    pub fn p(&self) -> usize {
+        self.extracted + self.refreshed + self.retained
+    }
+
+    /// Local factorizations this epoch (exactly the extracted blocks).
+    pub fn factorizations(&self) -> usize {
+        self.extracted
+    }
+
+    /// Fraction of blocks whose factor came from the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.p() == 0 {
+            0.0
+        } else {
+            (self.p() - self.extracted) as f64 / self.p() as f64
+        }
+    }
+}
+
+/// Leader-side cache entry for one block: the write-back geometry (with
+/// the right-hand side kept, so `RefreshB` payloads can be computed
+/// incrementally), the epoch it was extracted under, and the last local
+/// solution (the warm-start seed).
+struct CachedBlock {
+    geom: LocalBlock,
+    epoch: BlockEpoch,
+    x_loc: Option<Vec<f64>>,
+}
 
 /// Metrics + solution of a parallel run.
 #[derive(Debug, Clone)]
@@ -68,6 +123,8 @@ pub struct WorkerPool {
     from_workers: mpsc::Receiver<ToLeader>,
     handles: Vec<JoinHandle<()>>,
     backend: SolverBackend,
+    /// Per-block cache the incremental protocol consults (all backends).
+    cached: Vec<Option<CachedBlock>>,
 }
 
 impl WorkerPool {
@@ -83,7 +140,8 @@ impl WorkerPool {
                 WorkerInit { id, backend, artifacts_dir: artifacts_dir.clone() };
             handles.push(std::thread::spawn(move || worker_main(init, rx, leader_tx)));
         }
-        WorkerPool { to_workers, from_workers, handles, backend }
+        let cached = (0..p).map(|_| None).collect();
+        WorkerPool { to_workers, from_workers, handles, backend, cached }
     }
 
     pub fn p(&self) -> usize {
@@ -92,6 +150,13 @@ impl WorkerPool {
 
     pub fn backend(&self) -> SolverBackend {
         self.backend
+    }
+
+    /// The cached write-back geometry of block `i` (right-hand side kept),
+    /// if one is standing — what incremental callers read to compute a
+    /// `RefreshB` payload without re-extracting the block.
+    pub fn cached_block(&self, i: usize) -> Option<&LocalBlock> {
+        self.cached.get(i).and_then(|c| c.as_ref()).map(|c| &c.geom)
     }
 
     /// Solve one CLS problem over `part` on any [`Geometry`] (one DyDD
@@ -128,11 +193,40 @@ impl WorkerPool {
         opts: &SchwarzOptions,
     ) -> anyhow::Result<ParallelOutcome> {
         let p = blocks.len();
+        let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
+        let epochs = vec![BlockEpoch::default(); p];
+        let (out, _) = self.solve_blocks_incremental(n, tasks, &epochs, phases, opts, false)?;
+        Ok(out)
+    }
+
+    /// The incremental leader loop: each block arrives as a [`BlockTask`]
+    /// — freshly extracted, right-hand-side-refreshed, or retained from
+    /// the pool's cache. `epochs[i]` is block `i`'s expected identity;
+    /// `RefreshB`/`Retain` are rejected if the cache disagrees (a desync
+    /// between the caller's epoch tracker and the pool would otherwise
+    /// silently solve against stale data).
+    ///
+    /// With `warm_start` the iterate starts from the cached local
+    /// solutions of non-extracted blocks (scattered over their owned
+    /// columns) instead of zero — the generalization of the `SparseCg`
+    /// warm start to every backend. Leave it off for paths that must be
+    /// bitwise-identical to a cold solve.
+    pub fn solve_blocks_incremental(
+        &mut self,
+        n: usize,
+        tasks: Vec<BlockTask>,
+        epochs: &[BlockEpoch],
+        phases: &[Vec<usize>],
+        opts: &SchwarzOptions,
+        warm_start: bool,
+    ) -> anyhow::Result<(ParallelOutcome, SolveCounters)> {
+        let p = tasks.len();
         anyhow::ensure!(
             p == self.p(),
             "partition has {p} subdomains but pool has {} workers",
             self.p()
         );
+        anyhow::ensure!(epochs.len() == p, "{} epochs for {p} blocks", epochs.len());
         // Every subdomain must appear in exactly one phase — a duplicate
         // would silently skip another block and converge to garbage.
         let mut seen = vec![false; p];
@@ -148,23 +242,64 @@ impl WorkerPool {
         );
         let t_start = Instant::now();
 
-        // Epoch setup: distribute local blocks.
-        let mut geoms = Vec::with_capacity(p);
-        for (i, blk) in blocks.into_iter().enumerate() {
-            let (reg, reg_cols) = overlap_reg(&blk, opts);
-            // Geometry-only copy for leader-side write-back.
-            let mut geom = blk.clone();
-            geom.a = crate::linalg::CsrMatrix::zeros(0, 0);
-            geom.d.clear();
-            geom.b.clear();
-            geom.halo.clear();
-            geoms.push(geom);
-            self.to_workers[i].send(ToWorker::Setup(Box::new(EpochSetup {
-                blk,
-                reg,
-                reg_cols,
-                mu: opts.mu,
-            })))?;
+        // Epoch setup: distribute fresh blocks, refresh or retain cached
+        // ones. Workers acknowledge every task with Ready.
+        let mut counters = SolveCounters::default();
+        for (i, task) in tasks.into_iter().enumerate() {
+            match task {
+                BlockTask::Extract(blk) => {
+                    counters.extracted += 1;
+                    let (reg, reg_cols) = overlap_reg(&blk, opts);
+                    // Leader-side copy for write-back and RefreshB: matrix
+                    // payloads dropped, the right-hand side kept so later
+                    // epochs can refresh it in place.
+                    let mut geom = blk.clone();
+                    geom.a = crate::linalg::CsrMatrix::zeros(0, 0);
+                    geom.d.clear();
+                    geom.halo.clear();
+                    self.cached[i] =
+                        Some(CachedBlock { geom, epoch: epochs[i], x_loc: None });
+                    self.to_workers[i].send(ToWorker::Setup(Box::new(EpochSetup {
+                        blk,
+                        reg,
+                        reg_cols,
+                        mu: opts.mu,
+                    })))?;
+                }
+                BlockTask::RefreshB(b) => {
+                    counters.refreshed += 1;
+                    let cb = self.cached[i]
+                        .as_mut()
+                        .ok_or_else(|| anyhow::anyhow!("RefreshB for uncached block {i}"))?;
+                    anyhow::ensure!(
+                        cb.epoch == epochs[i],
+                        "RefreshB for block {i}: cached epoch {:?} != expected {:?}",
+                        cb.epoch,
+                        epochs[i]
+                    );
+                    anyhow::ensure!(
+                        b.len() == cb.geom.b.len(),
+                        "RefreshB for block {i}: {} data for {} rows",
+                        b.len(),
+                        cb.geom.b.len()
+                    );
+                    cb.geom.b.clone_from(&b);
+                    self.to_workers[i].send(ToWorker::RefreshB { b })?;
+                }
+                BlockTask::Retain => {
+                    counters.retained += 1;
+                    let cb = self.cached[i]
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("Retain for uncached block {i}"))?;
+                    anyhow::ensure!(
+                        cb.epoch == epochs[i],
+                        "Retain for block {i}: cached epoch {:?} != expected {:?}",
+                        cb.epoch,
+                        epochs[i]
+                    );
+                    self.to_workers[i].send(ToWorker::Retain)?;
+                }
+            }
         }
 
         let mut t_assemble_max = Duration::ZERO;
@@ -183,6 +318,19 @@ impl WorkerPool {
         }
 
         let mut x = vec![0.0; n];
+        if warm_start {
+            // Seed from the cached solutions of blocks that were not
+            // re-extracted (their owned columns still hold last epoch's
+            // analysis — the right starting iterate under a small delta).
+            for cb in self.cached.iter().flatten() {
+                let Some(x_loc) = cb.x_loc.as_ref() else { continue };
+                for (lc, &gc) in cb.geom.cols.iter().enumerate() {
+                    if cb.geom.owned[lc] {
+                        x[gc] = x_loc[lc];
+                    }
+                }
+            }
+        }
         let mut acc = OverlapAccumulator::new(n);
         let mut check = ConvergenceCheck::new(opts.tol, n);
         let mut worker_busy = vec![Duration::ZERO; p];
@@ -210,7 +358,13 @@ impl WorkerPool {
                             worker_busy[worker] += solve_time;
                             phase_max = phase_max.max(solve_time);
                             phase_sum += solve_time;
-                            write_back(&geoms[worker], &x_loc, &mut x, &mut acc);
+                            let cb = self.cached[worker]
+                                .as_mut()
+                                .expect("solving block is always cached");
+                            write_back(&cb.geom, &x_loc, &mut x, &mut acc);
+                            // Keep the latest local solution as the next
+                            // epoch's warm-start seed.
+                            cb.x_loc = Some(x_loc);
                         }
                         ToLeader::Failed { worker, error } => {
                             anyhow::bail!("worker {worker} failed: {error}")
@@ -239,7 +393,7 @@ impl WorkerPool {
             }
         }
 
-        Ok(ParallelOutcome {
+        let outcome = ParallelOutcome {
             x,
             iters,
             converged,
@@ -250,7 +404,8 @@ impl WorkerPool {
             t_critical,
             t_imbalance,
             update_norms: check.into_norms(),
-        })
+        };
+        Ok((outcome, counters))
     }
 }
 
@@ -377,6 +532,99 @@ mod tests {
         let part = Partition::from_bounds(64, vec![0, 10, 30, 50, 64]);
         let out = pool.solve_on(&g1(64, 4), &prob, &part, &opts).unwrap();
         assert!(out.converged);
+    }
+
+    #[test]
+    fn refresh_b_matches_fresh_extraction_bitwise() {
+        use crate::decomp::{phases_of, BlockEpoch};
+        let geom = g1(64, 4);
+        let mut rng = Rng::new(12);
+        let obs = generators::generate(ObsLayout::Uniform, 40, &mut rng);
+        let y0b: Vec<f64> = (0..64).map(|j| (j as f64 * 0.07).cos()).collect();
+        let mk = |y0: Vec<f64>| {
+            ClsProblem::new(
+                Mesh1d::new(64),
+                StateOp::Tridiag { main: 1.0, off: 0.15 },
+                y0,
+                vec![4.0; 64],
+                obs.clone(),
+            )
+        };
+        let pa = mk((0..64).map(|j| (j as f64 * 0.1).sin()).collect());
+        let pb = mk(y0b.clone());
+        let part = Partition::uniform(64, 4);
+        let opts = SchwarzOptions::default();
+        let epochs = vec![BlockEpoch::default(); 4];
+
+        let mut pool = WorkerPool::new(4, SolverBackend::Native, "artifacts".into());
+        let blocks: Vec<crate::cls::LocalBlock> =
+            (0..4).map(|i| pa.local_block(&part, i, 0)).collect();
+        let phases = phases_of(&geom, &blocks, &part);
+        let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
+        pool.solve_blocks_incremental(64, tasks, &epochs, &phases, &opts, false).unwrap();
+
+        // Second epoch: only the background changed — refresh the cached
+        // right-hand sides' state rows in place.
+        let tasks: Vec<BlockTask> = (0..4)
+            .map(|i| {
+                let cb = pool.cached_block(i).unwrap();
+                let mut b = cb.b.clone();
+                for (r_loc, &r) in cb.global_rows[..cb.obs_row_start].iter().enumerate() {
+                    b[r_loc] = y0b[r];
+                }
+                BlockTask::RefreshB(b)
+            })
+            .collect();
+        let (warm, counters) =
+            pool.solve_blocks_incremental(64, tasks, &epochs, &phases, &opts, false).unwrap();
+        assert_eq!(counters, SolveCounters { extracted: 0, refreshed: 4, retained: 0 });
+        assert_eq!(counters.factorizations(), 0);
+        assert_eq!(counters.cache_hit_rate(), 1.0);
+
+        // Cold reference: a fresh pool extracting the y0b problem.
+        let mut cold_pool = WorkerPool::new(4, SolverBackend::Native, "artifacts".into());
+        let blocks: Vec<crate::cls::LocalBlock> =
+            (0..4).map(|i| pb.local_block(&part, i, 0)).collect();
+        let cold = cold_pool.solve_blocks(64, blocks, &phases, &opts).unwrap();
+        assert_eq!(warm.x, cold.x, "RefreshB must be bitwise-identical to re-extraction");
+
+        // Third epoch: nothing changed — all Retain, same analysis bitwise.
+        let tasks: Vec<BlockTask> = (0..4).map(|_| BlockTask::Retain).collect();
+        let (retained, counters) =
+            pool.solve_blocks_incremental(64, tasks, &epochs, &phases, &opts, false).unwrap();
+        assert_eq!(counters, SolveCounters { extracted: 0, refreshed: 0, retained: 4 });
+        assert_eq!(retained.x, cold.x);
+    }
+
+    #[test]
+    fn incremental_rejects_epoch_desync_and_uncached_blocks() {
+        use crate::decomp::{phases_of, BlockEpoch};
+        let geom = g1(32, 2);
+        let prob = problem(32, 20, 14);
+        let part = Partition::uniform(32, 2);
+        let opts = SchwarzOptions::default();
+        let mut pool = WorkerPool::new(2, SolverBackend::Native, "artifacts".into());
+        let phases = {
+            let blocks: Vec<crate::cls::LocalBlock> =
+                (0..2).map(|i| prob.local_block(&part, i, 0)).collect();
+            phases_of(&geom, &blocks, &part)
+        };
+        // Retain before anything was ever extracted: rejected.
+        let tasks: Vec<BlockTask> = (0..2).map(|_| BlockTask::Retain).collect();
+        let epochs = vec![BlockEpoch::default(); 2];
+        assert!(pool
+            .solve_blocks_incremental(32, tasks, &epochs, &phases, &opts, false)
+            .is_err());
+        // Extract, then Retain under a bumped epoch: rejected (desync).
+        let blocks: Vec<crate::cls::LocalBlock> =
+            (0..2).map(|i| prob.local_block(&part, i, 0)).collect();
+        let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
+        pool.solve_blocks_incremental(32, tasks, &epochs, &phases, &opts, false).unwrap();
+        let bumped = vec![BlockEpoch { partition: 1, data: 0 }; 2];
+        let tasks: Vec<BlockTask> = (0..2).map(|_| BlockTask::Retain).collect();
+        assert!(pool
+            .solve_blocks_incremental(32, tasks, &bumped, &phases, &opts, false)
+            .is_err());
     }
 
     #[test]

@@ -47,6 +47,14 @@ pub struct EpochSetup {
 pub enum ToWorker {
     /// (Re-)assign a subdomain: extract factor, then serve solves.
     Setup(Box<EpochSetup>),
+    /// Replace the standing block's right-hand side only — the background
+    /// changed but no observation row did. The local factor depends only
+    /// on (A, d, reg), never on b, so it is kept verbatim (no
+    /// re-factorization).
+    RefreshB { b: Vec<f64> },
+    /// Keep the standing block untouched (nothing changed for it since the
+    /// last epoch) — a pure cache hit.
+    Retain,
     /// Solve the local problem against this global-iterate snapshot.
     Solve { x: Arc<Vec<f64>> },
     /// End of run.

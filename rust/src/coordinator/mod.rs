@@ -21,7 +21,7 @@ mod leader;
 mod messages;
 mod worker;
 
-pub use leader::{run_parallel, ParallelOutcome, WorkerPool};
+pub use leader::{run_parallel, BlockTask, ParallelOutcome, SolveCounters, WorkerPool};
 pub use messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
 
 use crate::ddkf::SchwarzOptions;

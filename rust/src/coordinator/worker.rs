@@ -66,6 +66,42 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                     }
                 }
             }
+            ToWorker::RefreshB { b } => {
+                let t0 = Instant::now();
+                let Some((setup, _factor, _reg_rhs)) = epoch.as_mut() else {
+                    fail(&tx, "RefreshB before Setup".into());
+                    return;
+                };
+                if b.len() != setup.blk.b.len() {
+                    fail(
+                        &tx,
+                        format!("RefreshB length {} != block rows {}", b.len(), setup.blk.b.len()),
+                    );
+                    return;
+                }
+                setup.blk.b = b;
+                if tx
+                    .send(ToLeader::Ready { worker: init.id, assemble_time: t0.elapsed() })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            ToWorker::Retain => {
+                if epoch.is_none() {
+                    fail(&tx, "Retain before Setup".into());
+                    return;
+                }
+                if tx
+                    .send(ToLeader::Ready {
+                        worker: init.id,
+                        assemble_time: std::time::Duration::ZERO,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+            }
             ToWorker::Solve { x } => {
                 let Some((setup, factor, reg_rhs)) = epoch.as_mut() else {
                     fail(&tx, "Solve before Setup".into());

@@ -2,14 +2,15 @@
 //! [0, 1]² with per-column y-bounds (what makes non-separable censuses
 //! realizable by the Migration step).
 
-use super::{cycle_phase, cycle_rng, Geometry};
+use super::{cycle_phase, cycle_rng, f64_key, Geometry, RecordGeometry};
 use crate::cls::{ClsProblem2d, LocalBlock, StateOp2d};
 use crate::domain::Partition;
 use crate::domain2d::{
-    generators as gen2d, BoxPartition, DriftLayout2d, Mesh2d, ObsLayout2d, ObservationSet2d,
+    generators as gen2d, interp_at2, BoxPartition, DriftLayout2d, Mesh2d, ObsLayout2d,
+    ObservationSet2d, StreamDrift2d,
 };
 use crate::graph::Graph;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// Box-grid decomposition of an `n × n` grid into `px × py` boxes, plus
 /// the scenario knobs the harness drivers read. [`BoxGeometry::new`] fills
@@ -218,6 +219,75 @@ impl Geometry for BoxGeometry {
 
     fn solve_baseline(&self, prob: &ClsProblem2d) -> Vec<f64> {
         crate::kf::kf_solve_cls2d(prob).x
+    }
+}
+
+impl RecordGeometry for BoxGeometry {
+    /// (x, y, value, variance).
+    type Rec = (f64, f64, f64, f64);
+
+    fn obs_records(&self, obs: &ObservationSet2d) -> Vec<Self::Rec> {
+        (0..obs.len()).map(|k| (obs.xs[k], obs.ys[k], obs.values[k], obs.variances[k])).collect()
+    }
+
+    fn obs_from_records(&self, recs: Vec<Self::Rec>) -> ObservationSet2d {
+        ObservationSet2d::new(recs)
+    }
+
+    fn rec_owner(&self, part: &BoxPartition, rec: &Self::Rec) -> usize {
+        let (ix, iy) = self.mesh.nearest(rec.0, rec.1);
+        part.owner(ix, iy)
+    }
+
+    fn rec_in_block(
+        &self,
+        part: &BoxPartition,
+        b: usize,
+        overlap: usize,
+        rec: &Self::Rec,
+    ) -> bool {
+        // Mirrors `ClsProblem2d::local_block`'s observation-row predicate.
+        let ext = part.rect_with_overlap(b, overlap);
+        interp_at2(&self.mesh, rec.0, rec.1).iter().any(|&(j, w)| {
+            let (ix, iy) = self.mesh.unindex(j);
+            w != 0.0 && ext.contains(ix, iy)
+        })
+    }
+
+    fn rec_key(&self, rec: &Self::Rec) -> [u64; 4] {
+        [f64_key(rec.0), f64_key(rec.1), f64_key(rec.2), f64_key(rec.3)]
+    }
+
+    fn rec_to_json(&self, rec: &Self::Rec) -> Json {
+        Json::Arr(vec![Json::Num(rec.0), Json::Num(rec.1), Json::Num(rec.2), Json::Num(rec.3)])
+    }
+
+    fn rec_from_json(&self, j: &Json) -> Option<Self::Rec> {
+        let a = j.as_arr()?;
+        if a.len() != 4 {
+            return None;
+        }
+        let (x, y, v, r) = (
+            super::epoch::num_at(a, 0)?,
+            super::epoch::num_at(a, 1)?,
+            super::epoch::num_at(a, 2)?,
+            super::epoch::num_at(a, 3)?,
+        );
+        (r > 0.0).then_some((x, y, v, r))
+    }
+
+    fn state_row_datum(&self, prob: &ClsProblem2d, r: usize) -> f64 {
+        debug_assert!(r < prob.n());
+        prob.y0[r]
+    }
+
+    fn native_stream(
+        &self,
+        m: usize,
+        seed: u64,
+    ) -> Option<Box<dyn FnMut(f64) -> Vec<Self::Rec>>> {
+        let s = StreamDrift2d::new(self.drift, m, seed);
+        Some(Box::new(move |t| s.records(t)))
     }
 }
 

@@ -1,0 +1,175 @@
+//! Block identity across assimilation ticks: partition epochs, per-block
+//! dirty bits, and the per-record observation view the streaming changelog
+//! diffs ([`crate::stream`]).
+//!
+//! The paper's DyDD premise is that observation distributions move; the
+//! streaming engine's premise is that between consecutive ticks they move
+//! *a little*. [`BlockEpoch`] gives every local block a stable identity
+//! ((partition epoch, data epoch)) so the coordinator can tell "this block
+//! is the same DD-CLS restriction as last tick" apart from "its rows
+//! changed" and "the decomposition itself moved" — the first is a cache
+//! hit, the second a re-extraction, the third a cold start.
+//!
+//! [`RecordGeometry`] extends [`Geometry`] with a flat per-observation
+//! record view: each record's subdomain owner (the census arithmetic,
+//! Remark 5) and its block membership under overlap (mirroring the
+//! local-block row-inclusion predicates exactly) are what turn an
+//! `ObsDelta` into O(|delta|) census updates and per-block dirty bits.
+
+use super::Geometry;
+use crate::util::Json;
+
+/// Identity of one block's extracted state: which partition generation it
+/// was extracted under, and which data generation of that block's rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BlockEpoch {
+    /// Bumped whenever the decomposition (the partition) changes.
+    pub partition: u64,
+    /// Bumped whenever the block's row set changes under a fixed partition.
+    pub data: u64,
+}
+
+/// Per-block epoch bookkeeping for a streaming run.
+#[derive(Debug, Clone)]
+pub struct EpochTracker {
+    partition: u64,
+    data: Vec<u64>,
+}
+
+impl EpochTracker {
+    pub fn new(p: usize) -> Self {
+        EpochTracker { partition: 0, data: vec![0; p] }
+    }
+
+    pub fn p(&self) -> usize {
+        self.data.len()
+    }
+
+    /// The decomposition moved: every block's identity changes (the block
+    /// count may too).
+    pub fn bump_partition(&mut self, p: usize) {
+        self.partition += 1;
+        self.data = vec![0; p];
+    }
+
+    /// Block `i`'s rows changed under the standing partition.
+    pub fn mark_dirty(&mut self, i: usize) {
+        self.data[i] += 1;
+    }
+
+    pub fn epoch(&self, i: usize) -> BlockEpoch {
+        BlockEpoch { partition: self.partition, data: self.data[i] }
+    }
+
+    pub fn epochs(&self) -> Vec<BlockEpoch> {
+        (0..self.p()).map(|i| self.epoch(i)).collect()
+    }
+}
+
+/// Per-observation record view of a geometry's observation sets — what the
+/// streaming changelog ([`crate::stream::ObsDelta`]) is made of.
+///
+/// Invariants the streaming engine relies on:
+///
+/// - [`obs_from_records`](RecordGeometry::obs_from_records) ∘
+///   [`obs_records`](RecordGeometry::obs_records) is the identity **bitwise**
+///   (observation-set constructors sort by the full record key, so any
+///   multiset of records rebuilds to a canonical set).
+/// - [`rec_owner`](RecordGeometry::rec_owner) is exactly the census
+///   arithmetic of [`Geometry::census`]: summing owner counts over
+///   `obs_records` reproduces the full census bit-for-bit.
+/// - [`rec_in_block`](RecordGeometry::rec_in_block) is exactly the
+///   observation-row inclusion predicate of [`Geometry::local_block`]: a
+///   record not in block `i` cannot appear among (or leave) block `i`'s
+///   rows, so the dirty marking derived from a delta is sound.
+pub trait RecordGeometry: Geometry {
+    /// One observation as a flat value record (location(s), value,
+    /// variance; plus the time level in 4-D).
+    type Rec: Clone + PartialEq + std::fmt::Debug;
+
+    /// Flatten an observation set into records (set order).
+    fn obs_records(&self, obs: &Self::Obs) -> Vec<Self::Rec>;
+
+    /// Rebuild the canonical observation set from a record multiset.
+    fn obs_from_records(&self, recs: Vec<Self::Rec>) -> Self::Obs;
+
+    /// The subdomain whose census counts this record (Remark 5).
+    fn rec_owner(&self, part: &Self::Part, rec: &Self::Rec) -> usize;
+
+    /// Whether this record's observation row is included in block `i`
+    /// extended by `overlap` — the exact local-block inclusion predicate.
+    fn rec_in_block(&self, part: &Self::Part, i: usize, overlap: usize, rec: &Self::Rec)
+        -> bool;
+
+    /// Total-order sort/dedup key (bit patterns; no float comparisons).
+    fn rec_key(&self, rec: &Self::Rec) -> [u64; 4];
+
+    /// JSONL wire form of a record (an array of numbers).
+    fn rec_to_json(&self, rec: &Self::Rec) -> Json;
+
+    /// Parse the wire form; `None` on shape/sign errors.
+    fn rec_from_json(&self, j: &Json) -> Option<Self::Rec>;
+
+    /// Datum of *state* (non-observation) row `r` of a problem — what a
+    /// cached block's right-hand side must be refreshed to when only the
+    /// background changed (state-row global ids are partition-independent,
+    /// so this is the entire `RefreshB` payload).
+    fn state_row_datum(&self, prob: &Self::Problem, r: usize) -> f64;
+
+    /// A native per-tick record emitter for this geometry's configured
+    /// drift family, if it has one: row identities are persistent so
+    /// consecutive ticks diff to sparse deltas. `None` means the streaming
+    /// engine falls back to replaying [`Geometry::cycle_obs`].
+    fn native_stream(&self, m: usize, seed: u64)
+        -> Option<Box<dyn FnMut(f64) -> Vec<Self::Rec>>>;
+}
+
+/// Read an f64 out of a JSON array slot.
+pub(crate) fn num_at(arr: &[Json], i: usize) -> Option<f64> {
+    arr.get(i).and_then(Json::as_f64)
+}
+
+/// Order-preserving f64 → u64 key: `f64_key(a) < f64_key(b)` iff
+/// `a.total_cmp(&b)` is `Less`. Record keys built from this iterate the
+/// streaming record store in exactly the canonical (sorted)
+/// observation-set order, negative values included.
+pub fn f64_key(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_key_orders_like_total_cmp() {
+        let vals = [-f64::INFINITY, -3.5, -1e-300, -0.0, 0.0, 1e-300, 0.25, 7.0, f64::INFINITY];
+        for w in vals.windows(2) {
+            assert!(f64_key(w[0]) < f64_key(w[1]), "{} !< {}", w[0], w[1]);
+            assert_eq!(w[0].total_cmp(&w[1]), std::cmp::Ordering::Less);
+        }
+        assert_eq!(f64_key(0.25), f64_key(0.25));
+    }
+
+    #[test]
+    fn tracker_distinguishes_data_and_partition_generations() {
+        let mut t = EpochTracker::new(3);
+        let e0 = t.epoch(1);
+        t.mark_dirty(1);
+        let e1 = t.epoch(1);
+        assert_eq!(e0.partition, e1.partition);
+        assert_ne!(e0, e1);
+        // Untouched blocks keep their identity.
+        assert_eq!(t.epoch(0), BlockEpoch { partition: 0, data: 0 });
+        t.bump_partition(4);
+        assert_eq!(t.p(), 4);
+        let e2 = t.epoch(1);
+        assert_ne!(e1.partition, e2.partition);
+        assert_eq!(t.epochs().len(), 4);
+    }
+}

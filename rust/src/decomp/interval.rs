@@ -1,11 +1,13 @@
 //! 1-D interval geometry: contiguous column intervals on a [`Mesh1d`]
 //! chain — the paper's original DD-CLS configuration (§4.2).
 
-use super::{cycle_phase, cycle_rng, Geometry};
+use super::{cycle_phase, cycle_rng, f64_key, Geometry, RecordGeometry};
 use crate::cls::{ClsProblem, LocalBlock, StateOp};
-use crate::domain::{generators, DriftLayout, Mesh1d, ObsLayout, ObservationSet, Partition};
+use crate::domain::{
+    generators, interp_at, DriftLayout, Mesh1d, ObsLayout, ObservationSet, Partition, StreamDrift,
+};
 use crate::graph::Graph;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// Chain-of-intervals decomposition of `[0, 1]` with `p` subdomains, plus
 /// the scenario knobs the harness drivers read (state operator, layout,
@@ -130,6 +132,66 @@ impl Geometry for IntervalGeometry {
 
     fn solve_baseline(&self, prob: &ClsProblem) -> Vec<f64> {
         crate::kf::kf_solve_cls(prob).x
+    }
+}
+
+impl RecordGeometry for IntervalGeometry {
+    /// (location, value, variance).
+    type Rec = (f64, f64, f64);
+
+    fn obs_records(&self, obs: &ObservationSet) -> Vec<Self::Rec> {
+        (0..obs.len()).map(|k| (obs.locs[k], obs.values[k], obs.variances[k])).collect()
+    }
+
+    fn obs_from_records(&self, recs: Vec<Self::Rec>) -> ObservationSet {
+        ObservationSet::new(recs)
+    }
+
+    fn rec_owner(&self, part: &Partition, rec: &Self::Rec) -> usize {
+        part.owner(self.mesh.nearest(rec.0))
+    }
+
+    fn rec_in_block(&self, part: &Partition, i: usize, overlap: usize, rec: &Self::Rec) -> bool {
+        // Mirrors `ClsProblem::local_block`'s observation-row predicate.
+        let (lo, hi) = part.interval_with_overlap(i, overlap);
+        let (j, _wl, wr) = interp_at(&self.mesh, rec.0);
+        let support_hi = if wr == 0.0 { j } else { j + 1 };
+        support_hi >= lo && j < hi
+    }
+
+    fn rec_key(&self, rec: &Self::Rec) -> [u64; 4] {
+        [f64_key(rec.0), f64_key(rec.1), f64_key(rec.2), 0]
+    }
+
+    fn rec_to_json(&self, rec: &Self::Rec) -> Json {
+        Json::Arr(vec![Json::Num(rec.0), Json::Num(rec.1), Json::Num(rec.2)])
+    }
+
+    fn rec_from_json(&self, j: &Json) -> Option<Self::Rec> {
+        let a = j.as_arr()?;
+        if a.len() != 3 {
+            return None;
+        }
+        let (x, v, r) = (
+            super::epoch::num_at(a, 0)?,
+            super::epoch::num_at(a, 1)?,
+            super::epoch::num_at(a, 2)?,
+        );
+        (r > 0.0).then_some((x, v, r))
+    }
+
+    fn state_row_datum(&self, prob: &ClsProblem, r: usize) -> f64 {
+        debug_assert!(r < prob.n());
+        prob.y0[r]
+    }
+
+    fn native_stream(
+        &self,
+        m: usize,
+        seed: u64,
+    ) -> Option<Box<dyn FnMut(f64) -> Vec<Self::Rec>>> {
+        let s = StreamDrift::new(self.drift, m, seed);
+        Some(Box::new(move |t| s.records(t)))
     }
 }
 

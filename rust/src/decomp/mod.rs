@@ -33,11 +33,13 @@
 //! stacked trajectory unknowns, the PinT decomposition of §3/§7).
 
 mod boxgrid;
+mod epoch;
 mod interval;
 pub mod registry;
 mod window;
 
 pub use boxgrid::BoxGeometry;
+pub use epoch::{f64_key, BlockEpoch, EpochTracker, RecordGeometry};
 pub use interval::IntervalGeometry;
 pub use window::WindowGeometry;
 

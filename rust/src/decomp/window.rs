@@ -12,12 +12,14 @@
 //! 1-D drift layout interpreted over the **time axis** (the observation
 //! density wanders across levels as the cycles advance).
 
-use super::{cycle_phase, cycle_rng, Geometry};
+use super::{cycle_phase, cycle_rng, f64_key, Geometry, RecordGeometry};
 use crate::cls::{LocalBlock, StateOp};
-use crate::domain::{generators, DriftLayout, Mesh1d, ObsLayout, ObservationSet, Partition};
+use crate::domain::{
+    generators, interp_at, DriftLayout, Mesh1d, ObsLayout, ObservationSet, Partition,
+};
 use crate::fourd::TrajectoryProblem;
 use crate::graph::Graph;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// Space-time decomposition of an `n`-point spatial mesh × `steps` time
 /// levels into `windows` contiguous time windows, plus the scenario knobs
@@ -255,6 +257,95 @@ impl Geometry for WindowGeometry {
         let n = self.mesh.n();
         debug_assert_eq!(x.len(), n * self.steps);
         x[(self.steps - 1) * n..].to_vec()
+    }
+}
+
+impl RecordGeometry for WindowGeometry {
+    /// (time level, spatial location, value, variance).
+    type Rec = (usize, f64, f64, f64);
+
+    fn obs_records(&self, obs: &Vec<ObservationSet>) -> Vec<Self::Rec> {
+        let mut recs = Vec::with_capacity(obs.iter().map(|o| o.len()).sum());
+        for (l, set) in obs.iter().enumerate() {
+            for k in 0..set.len() {
+                recs.push((l, set.locs[k], set.values[k], set.variances[k]));
+            }
+        }
+        recs
+    }
+
+    fn obs_from_records(&self, recs: Vec<Self::Rec>) -> Vec<ObservationSet> {
+        let mut per_level = vec![Vec::new(); self.steps];
+        for (l, x, v, r) in recs {
+            assert!(l < self.steps, "record at level {l} >= steps {}", self.steps);
+            per_level[l].push((x, v, r));
+        }
+        per_level.into_iter().map(ObservationSet::new).collect()
+    }
+
+    fn rec_owner(&self, part: &Partition, rec: &Self::Rec) -> usize {
+        // The window owning column (l, 0) owns every level-l observation
+        // (windows are level-aligned) — the census arithmetic verbatim.
+        part.owner(rec.0 * self.mesh.n())
+    }
+
+    fn rec_in_block(&self, part: &Partition, w: usize, overlap: usize, rec: &Self::Rec) -> bool {
+        // Mirrors `TrajectoryProblem::local_block_overlap`: an observation
+        // row is included iff any of its stencil columns lies in [lo, hi).
+        let (lo, hi) = part.interval_with_overlap(w, overlap);
+        let (j, _wl, wr) = interp_at(&self.mesh, rec.1);
+        let c0 = rec.0 * self.mesh.n() + j;
+        let c_hi = if wr == 0.0 { c0 } else { c0 + 1 };
+        c_hi >= lo && c0 < hi
+    }
+
+    fn rec_key(&self, rec: &Self::Rec) -> [u64; 4] {
+        [rec.0 as u64, f64_key(rec.1), f64_key(rec.2), f64_key(rec.3)]
+    }
+
+    fn rec_to_json(&self, rec: &Self::Rec) -> Json {
+        Json::Arr(vec![
+            Json::Num(rec.0 as f64),
+            Json::Num(rec.1),
+            Json::Num(rec.2),
+            Json::Num(rec.3),
+        ])
+    }
+
+    fn rec_from_json(&self, j: &Json) -> Option<Self::Rec> {
+        let a = j.as_arr()?;
+        if a.len() != 4 {
+            return None;
+        }
+        let l = a[0].as_usize()?;
+        let (x, v, r) = (
+            super::epoch::num_at(a, 1)?,
+            super::epoch::num_at(a, 2)?,
+            super::epoch::num_at(a, 3)?,
+        );
+        (r > 0.0 && l < self.steps).then_some((l, x, v, r))
+    }
+
+    fn state_row_datum(&self, prob: &TrajectoryProblem, r: usize) -> f64 {
+        // Background rows carry u_b; model-constraint rows carry 0 (the
+        // datum layout of `TrajectoryProblem::sparse_row`).
+        debug_assert!(r < prob.n());
+        if r < prob.n_space() {
+            prob.background[r]
+        } else {
+            0.0
+        }
+    }
+
+    fn native_stream(
+        &self,
+        _m: usize,
+        _seed: u64,
+    ) -> Option<Box<dyn FnMut(f64) -> Vec<Self::Rec>>> {
+        // The 4-D workload draws per-level counts *then* spatial locations
+        // from a shared stream — rows have no persistent identity, so the
+        // streaming engine replays `cycle_obs` instead.
+        None
     }
 }
 

@@ -255,6 +255,81 @@ pub fn generate_drift(
     ObservationSet::new(triples)
 }
 
+/// Native streaming emitter for [`DriftLayout`]: row identities (the
+/// stratified jitter and the measurement noise) are drawn **once** at
+/// construction, and [`StreamDrift::records`] re-evaluates every row's
+/// position/value at a phase `t`. Rows whose position does not depend on
+/// `t` (the uniform half of the blob, a stationary layout, the cluster
+/// rows that have not flipped yet) are bit-identical across ticks, so a
+/// row-aligned diff yields a sparse [`crate::stream::ObsDelta`] instead
+/// of a full re-materialization.
+///
+/// This is the *native* changelog path; it intentionally does not match
+/// [`generate_drift`] bitwise (that path re-draws jitter per cycle and is
+/// replayed by `stream`'s replay source for the parity tests).
+#[derive(Debug, Clone)]
+pub struct StreamDrift {
+    layout: DriftLayout,
+    /// Per-row stratification jitter (moving layouts) — drawn once.
+    u: Vec<f64>,
+    /// Per-row measurement noise — drawn once.
+    noise: Vec<f64>,
+    /// Frozen positions for `Stationary` layouts.
+    fixed: Vec<f64>,
+}
+
+impl StreamDrift {
+    pub fn new(layout: DriftLayout, m: usize, seed: u64) -> Self {
+        assert!(m > 0, "m = 0: nothing to stream");
+        let mut rng = Rng::new(seed);
+        let (u, fixed) = if let DriftLayout::Stationary(inner) = layout {
+            (Vec::new(), (0..m).map(|_| sample_loc(inner, &mut rng)).collect())
+        } else {
+            ((0..m).map(|_| rng.uniform()).collect(), Vec::new())
+        };
+        let noise = (0..m).map(|_| rng.gaussian_with(0.0, 0.05)).collect();
+        StreamDrift { layout, u, noise, fixed }
+    }
+
+    pub fn m(&self) -> usize {
+        self.noise.len()
+    }
+
+    /// Every row's (location, value, variance) at phase `t01 ∈ [0, 1]`.
+    pub fn records(&self, t01: f64) -> Vec<(f64, f64, f64)> {
+        let t = t01.clamp(0.0, 1.0);
+        let m = self.m();
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            let x = match self.layout {
+                DriftLayout::Stationary(_) => self.fixed[i],
+                DriftLayout::TranslatingBlob => {
+                    let m_u = m / 2;
+                    if i < m_u {
+                        (i as f64 + self.u[i]) / m_u as f64
+                    } else {
+                        let (j, m_b) = (i - m_u, m - m_u);
+                        let q = crate::util::norm_quantile((j as f64 + self.u[i]) / m_b as f64);
+                        clamp01(BLOB_MU0 + BLOB_PATH * t + BLOB_SIGMA * q)
+                    }
+                }
+                DriftLayout::RotatingBand => {
+                    let c = 0.1 + 0.8 * t;
+                    let u = (i as f64 + self.u[i]) / m as f64;
+                    (c - 0.15 + 0.3 * u).rem_euclid(1.0).min(1.0 - 1e-12)
+                }
+                DriftLayout::AppearingCluster => {
+                    let m2 = ((t * m as f64).round() as usize).min(m);
+                    let mu = if i < m2 { 0.75 } else { 0.22 };
+                    clamp01(mu + 0.06 * crate::util::norm_quantile((i as f64 + self.u[i]) / m as f64))
+                }
+            };
+            out.push((x, field(x) + self.noise[i], 0.01));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -368,6 +443,41 @@ mod tests {
         let edges = obs.locs.iter().filter(|&&x| !(0.25..0.95).contains(&x)).count();
         assert_eq!(middle, 0, "band at c=0.1 must not reach the middle");
         assert_eq!(edges, 500);
+    }
+
+    #[test]
+    fn stream_drift_stationary_rows_never_move() {
+        let s = StreamDrift::new(DriftLayout::Stationary(ObsLayout::Cluster), 120, 7);
+        assert_eq!(s.records(0.0), s.records(0.7));
+    }
+
+    #[test]
+    fn stream_drift_blob_moves_only_its_blob_half() {
+        let m = 400;
+        let s = StreamDrift::new(DriftLayout::TranslatingBlob, m, 13);
+        let (a, b) = (s.records(0.2), s.records(0.8));
+        let changed = a.iter().zip(&b).filter(|(ra, rb)| ra != rb).count();
+        assert!(changed > 0, "blob rows must move with the phase");
+        // The uniform half (and any clamped blob tail) is bit-stable.
+        assert!(changed <= m - m / 2, "changed = {changed}");
+        for i in 0..m / 2 {
+            assert_eq!(a[i], b[i], "uniform row {i} moved");
+        }
+    }
+
+    #[test]
+    fn stream_drift_rows_stay_in_domain() {
+        for layout in DriftLayout::ALL_MOVING {
+            let s = StreamDrift::new(layout, 250, 21);
+            for t in [0.0, 0.3, 0.5, 1.0] {
+                let recs = s.records(t);
+                assert_eq!(recs.len(), 250);
+                assert!(
+                    recs.iter().all(|&(x, _, r)| (0.0..=1.0).contains(&x) && r > 0.0),
+                    "{layout:?} t={t}"
+                );
+            }
+        }
     }
 
     #[test]

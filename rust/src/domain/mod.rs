@@ -11,7 +11,7 @@ pub mod mesh;
 pub mod observations;
 pub mod partition;
 
-pub use generators::{DriftLayout, ObsLayout};
+pub use generators::{DriftLayout, ObsLayout, StreamDrift};
 pub use mesh::Mesh1d;
-pub use observations::ObservationSet;
+pub use observations::{interp_at, ObservationSet};
 pub use partition::Partition;

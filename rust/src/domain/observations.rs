@@ -9,6 +9,18 @@
 use super::mesh::Mesh1d;
 use super::partition::Partition;
 
+/// Linear-interpolation stencil of a point at location `x` (clamped to
+/// [0, 1]): (left grid index, weight_left, weight_right). weight_right
+/// is 0 at the last grid point. Shared by [`ObservationSet::interp_row`]
+/// and the streaming dirty-block predicate, which must agree exactly.
+pub fn interp_at(mesh: &Mesh1d, x: f64) -> (usize, f64, f64) {
+    let x = x.clamp(0.0, 1.0);
+    let h = mesh.spacing();
+    let j = ((x / h).floor() as usize).min(mesh.n() - 2);
+    let t = (x - mesh.coord(j)) / h;
+    (j, 1.0 - t, t)
+}
+
 /// A set of point observations on [0, 1].
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ObservationSet {
@@ -22,7 +34,12 @@ pub struct ObservationSet {
 
 impl ObservationSet {
     pub fn new(mut triples: Vec<(f64, f64, f64)>) -> Self {
-        triples.sort_by(|a, b| a.0.total_cmp(&b.0));
+        // Canonical full-key order: ties in location (clamping produces
+        // exact duplicates at 0 and 1) are broken by value then variance,
+        // so any multiset of triples rebuilds to a bitwise-identical set.
+        triples.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.total_cmp(&b.2))
+        });
         let mut s = ObservationSet::default();
         for (l, v, r) in triples {
             assert!(r > 0.0, "variance must be positive");
@@ -70,11 +87,7 @@ impl ObservationSet {
     /// Interpolation row of H_1 for observation k: (left grid index,
     /// weight_left, weight_right). weight_right = 0 at the last grid point.
     pub fn interp_row(&self, mesh: &Mesh1d, k: usize) -> (usize, f64, f64) {
-        let x = self.locs[k].clamp(0.0, 1.0);
-        let h = mesh.spacing();
-        let j = ((x / h).floor() as usize).min(mesh.n() - 2);
-        let t = (x - mesh.coord(j)) / h;
-        (j, 1.0 - t, t)
+        interp_at(mesh, self.locs[k])
     }
 }
 

@@ -297,6 +297,94 @@ pub fn with_counts(
     ObservationSet2d::new(tuples)
 }
 
+/// Native streaming emitter for [`DriftLayout2d`] (the 2-D counterpart of
+/// [`crate::domain::StreamDrift`]): per-row jitter and measurement noise
+/// are drawn once at construction, and [`StreamDrift2d::records`]
+/// re-evaluates each row at a phase `t`. Rows whose position is
+/// `t`-independent (the Kronecker background of the blob, stationary
+/// layouts, cluster rows that have not flipped) are bit-identical across
+/// ticks, so row-aligned diffing yields sparse deltas.
+#[derive(Debug, Clone)]
+pub struct StreamDrift2d {
+    layout: DriftLayout2d,
+    /// Per-row stratification jitter (moving layouts) — drawn once.
+    u: Vec<f64>,
+    /// Per-row angular / width jitter (moving layouts) — drawn once.
+    u2: Vec<f64>,
+    /// Per-row measurement noise — drawn once.
+    noise: Vec<f64>,
+    /// Frozen positions for `Stationary` layouts.
+    fixed: Vec<(f64, f64)>,
+}
+
+impl StreamDrift2d {
+    pub fn new(layout: DriftLayout2d, m: usize, seed: u64) -> Self {
+        assert!(m > 0, "m = 0: nothing to stream");
+        let mut rng = Rng::new(seed);
+        let (u, u2, fixed) = if let DriftLayout2d::Stationary(inner) = layout {
+            (Vec::new(), Vec::new(), (0..m).map(|_| sample_loc(inner, &mut rng)).collect())
+        } else {
+            let u = (0..m).map(|_| rng.uniform()).collect();
+            let u2 = (0..m).map(|_| rng.uniform()).collect();
+            (u, u2, Vec::new())
+        };
+        let noise = (0..m).map(|_| rng.gaussian_with(0.0, 0.05)).collect();
+        StreamDrift2d { layout, u, u2, noise, fixed }
+    }
+
+    pub fn m(&self) -> usize {
+        self.noise.len()
+    }
+
+    /// Every row's (x, y, value, variance) at phase `t01 ∈ [0, 1]`.
+    pub fn records(&self, t01: f64) -> Vec<(f64, f64, f64, f64)> {
+        use std::f64::consts::PI;
+        let t = t01.clamp(0.0, 1.0);
+        let m = self.m();
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            let (x, y) = match self.layout {
+                DriftLayout2d::Stationary(_) => self.fixed[i],
+                DriftLayout2d::TranslatingBlob => {
+                    let m_u = m / 2;
+                    if i < m_u {
+                        let x = (i as f64 + self.u[i]) / m_u as f64;
+                        let y = (i as f64 * GOLDEN + self.u2[i] / m_u as f64).rem_euclid(1.0);
+                        (x, y.min(1.0 - 1e-12))
+                    } else {
+                        let (j, m_b) = (i - m_u, m - m_u);
+                        let q = (j as f64 + self.u[i]) / m_b as f64;
+                        let r = BLOB2_SIGMA * (-2.0 * (1.0 - q).ln()).sqrt();
+                        let theta = 2.0
+                            * PI
+                            * (j as f64 * GOLDEN + (self.u2[i] - 0.5) / m_b as f64).rem_euclid(1.0);
+                        let cx = BLOB2_C0.0 + BLOB2_PATH.0 * t;
+                        let cy = BLOB2_C0.1 + BLOB2_PATH.1 * t;
+                        (clamp01(cx + r * theta.cos()), clamp01(cy + r * theta.sin()))
+                    }
+                }
+                DriftLayout2d::RotatingBand => {
+                    let (sin_t, cos_t) = (PI * 0.5 * t).sin_cos();
+                    let s = -0.45 + 0.9 * (i as f64 + self.u[i]) / m as f64;
+                    let w = 0.08 * (self.u2[i] - 0.5);
+                    (clamp01(0.5 + s * cos_t - w * sin_t), clamp01(0.5 + s * sin_t + w * cos_t))
+                }
+                DriftLayout2d::AppearingCluster => {
+                    let m2 = ((t * m as f64).round() as usize).min(m);
+                    let (cx, cy) = if i < m2 { (0.75, 0.75) } else { (0.25, 0.25) };
+                    let q = (i as f64 + self.u[i]) / m as f64;
+                    let r = 0.07 * (-2.0 * (1.0 - q).ln()).sqrt();
+                    let theta =
+                        2.0 * PI * (i as f64 * GOLDEN + (self.u2[i] - 0.5) / m as f64).rem_euclid(1.0);
+                    (clamp01(cx + r * theta.cos()), clamp01(cy + r * theta.sin()))
+                }
+            };
+            out.push((x, y, field2(x, y) + self.noise[i], 0.01));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,6 +519,41 @@ mod tests {
         let b = centroid(&generate_drift2d(DriftLayout2d::TranslatingBlob, 3000, 1.0, &mut Rng::new(10)));
         // Half the mass is the blob: centroid moves by ~path/2 per axis.
         assert!(b.0 - a.0 > 0.015 && b.1 - a.1 > 0.012, "{a:?} -> {b:?}");
+    }
+
+    #[test]
+    fn stream_drift2d_stationary_rows_never_move() {
+        let s = StreamDrift2d::new(DriftLayout2d::Stationary(ObsLayout2d::Ring), 100, 12);
+        assert_eq!(s.records(0.1), s.records(0.9));
+    }
+
+    #[test]
+    fn stream_drift2d_blob_background_is_bit_stable() {
+        let m = 300;
+        let s = StreamDrift2d::new(DriftLayout2d::TranslatingBlob, m, 13);
+        let (a, b) = (s.records(0.0), s.records(1.0));
+        for i in 0..m / 2 {
+            assert_eq!(a[i], b[i], "background row {i} moved");
+        }
+        let changed = a.iter().zip(&b).filter(|(ra, rb)| ra != rb).count();
+        assert!(changed > 0, "blob rows must move with the phase");
+    }
+
+    #[test]
+    fn stream_drift2d_rows_stay_in_domain() {
+        for layout in DriftLayout2d::ALL_MOVING {
+            let s = StreamDrift2d::new(layout, 200, 21);
+            for t in [0.0, 0.5, 1.0] {
+                let recs = s.records(t);
+                assert_eq!(recs.len(), 200);
+                assert!(
+                    recs.iter().all(|&(x, y, _, r)| {
+                        (0.0..=1.0).contains(&x) && (0.0..=1.0).contains(&y) && r > 0.0
+                    }),
+                    "{layout:?} t={t}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod mesh;
 pub mod observations;
 pub mod partition;
 
-pub use generators::{DriftLayout2d, ObsLayout2d};
+pub use generators::{DriftLayout2d, ObsLayout2d, StreamDrift2d};
 pub use mesh::Mesh2d;
-pub use observations::ObservationSet2d;
+pub use observations::{interp_at2, ObservationSet2d};
 pub use partition::{BoxPartition, BoxRect};

@@ -5,6 +5,26 @@
 use super::mesh::Mesh2d;
 use super::partition::BoxPartition;
 
+/// Bilinear-interpolation stencil of a point at (`x`, `y`) (clamped to
+/// [0, 1]²): the flattened indices of the 4 bracketing grid points and
+/// their weights. Shared by [`ObservationSet2d::interp_row`] and the
+/// streaming dirty-block predicate, which must agree exactly.
+pub fn interp_at2(mesh: &Mesh2d, x: f64, y: f64) -> [(usize, f64); 4] {
+    let x = x.clamp(0.0, 1.0);
+    let y = y.clamp(0.0, 1.0);
+    let (hx, hy) = (mesh.spacing_x(), mesh.spacing_y());
+    let ix = ((x / hx).floor() as usize).min(mesh.nx() - 2);
+    let iy = ((y / hy).floor() as usize).min(mesh.ny() - 2);
+    let tx = (x - ix as f64 * hx) / hx;
+    let ty = (y - iy as f64 * hy) / hy;
+    [
+        (mesh.index(ix, iy), (1.0 - tx) * (1.0 - ty)),
+        (mesh.index(ix + 1, iy), tx * (1.0 - ty)),
+        (mesh.index(ix, iy + 1), (1.0 - tx) * ty),
+        (mesh.index(ix + 1, iy + 1), tx * ty),
+    ]
+}
+
 /// A set of point observations on [0, 1]².
 ///
 /// Kept sorted by (x, y) lexicographically so the x grid indices are
@@ -23,7 +43,15 @@ pub struct ObservationSet2d {
 impl ObservationSet2d {
     /// Build from (x, y, value, variance) tuples.
     pub fn new(mut tuples: Vec<(f64, f64, f64, f64)>) -> Self {
-        tuples.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        // Canonical full-key order: (x, y) ties (clamping produces exact
+        // duplicates on the boundary) are broken by value then variance,
+        // so any multiset of tuples rebuilds to a bitwise-identical set.
+        tuples.sort_by(|a, b| {
+            a.0.total_cmp(&b.0)
+                .then(a.1.total_cmp(&b.1))
+                .then(a.2.total_cmp(&b.2))
+                .then(a.3.total_cmp(&b.3))
+        });
         let mut s = ObservationSet2d::default();
         for (x, y, v, r) in tuples {
             assert!(r > 0.0, "variance must be positive");
@@ -80,19 +108,7 @@ impl ObservationSet2d {
     /// and their weights (≤ 4 non-zeros per row — the sparse structure that
     /// keeps the per-box row census meaningful).
     pub fn interp_row(&self, mesh: &Mesh2d, k: usize) -> [(usize, f64); 4] {
-        let x = self.xs[k].clamp(0.0, 1.0);
-        let y = self.ys[k].clamp(0.0, 1.0);
-        let (hx, hy) = (mesh.spacing_x(), mesh.spacing_y());
-        let ix = ((x / hx).floor() as usize).min(mesh.nx() - 2);
-        let iy = ((y / hy).floor() as usize).min(mesh.ny() - 2);
-        let tx = (x - ix as f64 * hx) / hx;
-        let ty = (y - iy as f64 * hy) / hy;
-        [
-            (mesh.index(ix, iy), (1.0 - tx) * (1.0 - ty)),
-            (mesh.index(ix + 1, iy), tx * (1.0 - ty)),
-            (mesh.index(ix, iy + 1), (1.0 - tx) * ty),
-            (mesh.index(ix + 1, iy + 1), tx * ty),
-        ]
+        interp_at2(mesh, self.xs[k], self.ys[k])
     }
 }
 

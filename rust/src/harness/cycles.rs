@@ -27,8 +27,8 @@
 //! migration volume, and the simulated-parallel critical path.
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::WorkerPool;
-use crate::decomp::{blocks_of, phases_of, Geometry};
+use crate::coordinator::{BlockTask, WorkerPool};
+use crate::decomp::{blocks_of, phases_of, EpochTracker, RecordGeometry};
 use crate::domain::{generators, DriftLayout, ObservationSet};
 use crate::domain2d::{generators as gen2d, DriftLayout2d, ObservationSet2d};
 use crate::dydd::{balance_ratio, RebalancePolicy, RebalanceRecord};
@@ -96,6 +96,16 @@ pub struct CycleRecord {
     pub t_dydd: Duration,
     /// Simulated-parallel critical path of this cycle's DD-KF solve.
     pub t_critical: Duration,
+    /// Measured wall-clock of the whole cycle (workload generation →
+    /// analysis, excluding the optional baseline) — the testbed-honest
+    /// column next to the simulated `t_critical`.
+    pub t_wall: Duration,
+    /// Blocks re-extracted (and re-factorized) this cycle; the rest were
+    /// served from the pool's block cache with a refreshed right-hand
+    /// side.
+    pub dirty_blocks: usize,
+    /// Blocks served from the cache (p − dirty_blocks).
+    pub cache_hits: usize,
     pub iters: usize,
     pub converged: bool,
     pub stalled: bool,
@@ -169,7 +179,19 @@ pub fn render_cycle_table(rep: &CycleReport) -> crate::util::Table {
     use crate::util::timer::fmt_secs;
     let mut t = crate::util::Table::new(
         &format!("{} — per-cycle report (p = {}, policy {})", rep.name, rep.p, rep.policy.name()),
-        &["cycle", "m", "E_before", "E_after", "reb", "moved", "iters", "T^p_crit", "err_DD-DA"],
+        &[
+            "cycle",
+            "m",
+            "E_before",
+            "E_after",
+            "reb",
+            "moved",
+            "dirty",
+            "iters",
+            "T^p_crit",
+            "T_wall",
+            "err_DD-DA",
+        ],
     );
     for r in &rep.records {
         t.row(&[
@@ -179,8 +201,10 @@ pub fn render_cycle_table(rep: &CycleReport) -> crate::util::Table {
             format!("{:.3}", r.balance_after),
             if r.rebalanced { "yes".into() } else { "-".to_string() },
             r.migration_volume.to_string(),
+            format!("{}/{}", r.dirty_blocks, rep.p),
             r.iters.to_string(),
             fmt_secs(r.t_critical.as_secs_f64()),
+            fmt_secs(r.t_wall.as_secs_f64()),
             r.error_dd_da.map(|e| format!("{e:.1e}")).unwrap_or_else(|| "-".into()),
         ]);
     }
@@ -247,7 +271,16 @@ pub fn run_cycles(cfg: &ExperimentConfig, with_baseline: bool) -> anyhow::Result
 
 /// The geometry-generic K-cycle driver (see module docs for the per-cycle
 /// sequence).
-pub fn run_cycles_on<G: Geometry>(
+///
+/// Extraction is incremental: each cycle's observation records are
+/// multiset-diffed against the previous cycle's, and only blocks whose
+/// row sets the diff touched are re-extracted — the rest keep their
+/// standing local factor and get their right-hand side refreshed to the
+/// chained background ([`crate::coordinator::ToWorker::RefreshB`]), which
+/// is bitwise-identical to a full re-extraction (the local factor depends
+/// only on (A, d, reg), never on b). A partition move re-extracts
+/// everything, exactly as before.
+pub fn run_cycles_on<G: RecordGeometry>(
     geom: &G,
     cfg: &ExperimentConfig,
     with_baseline: bool,
@@ -257,12 +290,15 @@ pub fn run_cycles_on<G: Geometry>(
     let p = geom.p();
     let mut part = geom.initial_partition();
     let mut pool = WorkerPool::new(p, cfg.backend, cfg.artifacts_dir.clone());
+    let mut epochs = EpochTracker::new(p);
     let mut y0 = geom.background();
     let mut x_final: Vec<f64> = Vec::new();
     let mut phases_cache: Option<(G::Part, Vec<Vec<usize>>)> = None;
+    let mut prev_records: Vec<G::Rec> = Vec::new();
     let mut records = Vec::with_capacity(cfg.cycles);
 
     for k in 0..cfg.cycles {
+        let t_wall0 = Instant::now();
         let obs = geom.cycle_obs(cfg.m, cfg.seed, k, cfg.cycles);
         let balance_before = balance_ratio(&geom.census(&part, &obs));
         let rebalanced = policy.should_rebalance(balance_before);
@@ -276,21 +312,87 @@ pub fn run_cycles_on<G: Geometry>(
         let balance_after = balance_ratio(&geom.census(&part, &obs));
         let migration_volume = dydd.as_ref().map(|g| g.dydd.migration_volume()).unwrap_or(0);
 
-        // Solve this cycle's CLS on the persistent pool. Blocks carry the
-        // cycle's data so they are re-extracted every cycle; the phase
-        // colouring depends only on the partition geometry and is reused
-        // verbatim while the partition stands still.
+        // Dirty marking: diff this cycle's observation records against the
+        // previous cycle's; a block is re-extracted iff the diff touched
+        // its (overlap-extended) row set. A partition move dirties all.
+        let cur_records = geom.obs_records(&obs);
+        let delta =
+            crate::stream::diff(&prev_records, &cur_records, |r| geom.rec_key(r), k as u64);
+        prev_records = cur_records;
+        if partition_changed {
+            epochs.bump_partition(p);
+        }
+        let all_dirty = k == 0 || partition_changed;
+        let mut dirty = vec![all_dirty; p];
+        if !all_dirty {
+            let mut touch = |rec: &G::Rec| {
+                for (i, d) in dirty.iter_mut().enumerate() {
+                    if !*d && geom.rec_in_block(&part, i, cfg.schwarz.overlap, rec) {
+                        *d = true;
+                    }
+                }
+            };
+            for rec in delta.added.iter().chain(&delta.removed) {
+                touch(rec);
+            }
+            for (old, new) in &delta.moved {
+                touch(old);
+                touch(new);
+            }
+        }
+        for (i, &d) in dirty.iter().enumerate() {
+            if d {
+                epochs.mark_dirty(i);
+            }
+        }
+        let dirty_blocks = dirty.iter().filter(|&&d| d).count();
+
+        // Solve this cycle's CLS on the persistent pool: dirty blocks are
+        // re-extracted, clean ones get RefreshB with the chained
+        // background (state rows are the only b entries that moved). The
+        // phase colouring depends only on the partition geometry and is
+        // reused verbatim while the partition stands still.
         let prob = geom.make_problem(y0.clone(), obs);
-        let blocks = blocks_of(geom, &prob, &part, cfg.schwarz.overlap);
-        let phases = match &phases_cache {
-            Some((cached_part, phases)) if *cached_part == part => phases.clone(),
+        let (tasks, phases): (Vec<BlockTask>, Vec<Vec<usize>>) = match &phases_cache {
+            Some((cached_part, phases)) if *cached_part == part => {
+                let tasks = (0..p)
+                    .map(|i| -> anyhow::Result<BlockTask> {
+                        Ok(if dirty[i] {
+                            BlockTask::Extract(geom.local_block(
+                                &prob,
+                                &part,
+                                i,
+                                cfg.schwarz.overlap,
+                            ))
+                        } else {
+                            let cb = pool.cached_block(i).ok_or_else(|| {
+                                anyhow::anyhow!("clean block {i} missing from the solve cache")
+                            })?;
+                            let mut b = cb.b.clone();
+                            for (r_loc, &r) in
+                                cb.global_rows[..cb.obs_row_start].iter().enumerate()
+                            {
+                                b[r_loc] = geom.state_row_datum(&prob, r);
+                            }
+                            BlockTask::RefreshB(b)
+                        })
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                (tasks, phases.clone())
+            }
             _ => {
+                // First cycle or partition move — everything is dirty, so
+                // the full block list is on hand for the colouring.
+                let blocks = blocks_of(geom, &prob, &part, cfg.schwarz.overlap);
                 let phases = phases_of(geom, &blocks, &part);
                 phases_cache = Some((part.clone(), phases.clone()));
-                phases
+                (blocks.into_iter().map(BlockTask::Extract).collect(), phases)
             }
         };
-        let par = pool.solve_blocks(n, blocks, &phases, &cfg.schwarz)?;
+        let epochs_now = epochs.epochs();
+        let (par, counters) =
+            pool.solve_blocks_incremental(n, tasks, &epochs_now, &phases, &cfg.schwarz, false)?;
+        let t_wall = t_wall0.elapsed();
 
         let error_dd_da = if with_baseline {
             Some(dist2(&geom.solve_baseline(&prob), &par.x))
@@ -309,6 +411,9 @@ pub fn run_cycles_on<G: Geometry>(
             dydd,
             t_dydd,
             t_critical: par.t_critical,
+            t_wall,
+            dirty_blocks,
+            cache_hits: counters.refreshed + counters.retained,
             iters: par.iters,
             converged: par.converged,
             stalled: par.stalled,

@@ -43,4 +43,5 @@ pub mod kf;
 pub mod linalg;
 pub mod model;
 pub mod runtime;
+pub mod stream;
 pub mod util;

@@ -9,15 +9,19 @@
 //!   cycle [...]              multi-cycle assimilation with drifting
 //!                            observations and a DyDD rebalance policy
 //!                            (any dim, including 4-D space-time windows)
+//!   serve [...]              streaming incremental assimilation: ingest
+//!                            per-tick observation deltas (native drift
+//!                            stream or JSONL stdin), re-solve only dirty
+//!                            blocks, emit per-tick JSONL telemetry
 //!   dydd --loads a,b,c ...   run the load balancer on an abstract scenario
 //!   dydd --dim 2 [...]       geometric DyDD on a px × py box grid
 //!   table <1..12|fig5|all>   regenerate the paper's tables/figures
 //!   bench-tables [--full]    regenerate everything (what EXPERIMENTS.md cites)
 
-use dydd_da::config::ExperimentConfig;
+use dydd_da::config::{ExperimentConfig, StreamSourceConfig};
 use dydd_da::coordinator::SolverBackend;
 use dydd_da::decomp::registry::{self, DriftSpec, LayoutSpec};
-use dydd_da::decomp::BoxGeometry;
+use dydd_da::decomp::{BoxGeometry, RecordGeometry};
 use dydd_da::dydd::{balance, balance_ratio, rebalance, DyddParams, RebalancePolicy};
 use dydd_da::graph::Graph;
 use dydd_da::harness::cycles::render_cycle_table;
@@ -25,6 +29,9 @@ use dydd_da::harness::{
     all_tables, render_table, run_cycles, run_experiment, scenarios, ExperimentReport, TableId,
 };
 use dydd_da::runtime;
+use dydd_da::stream::{
+    run_stream, DriftSource, JsonlSource, ReplaySource, StreamOptions, StreamReport,
+};
 use dydd_da::util::timer::fmt_secs;
 use std::path::Path;
 use std::process::ExitCode;
@@ -35,6 +42,7 @@ fn main() -> ExitCode {
         Some("info") => cmd_info(),
         Some("run") => cmd_run(&args[1..]),
         Some("cycle") => cmd_cycle(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("dydd") => cmd_dydd(&args[1..]),
         Some("table") => cmd_table(&args[1..]),
         Some("bench-tables") => cmd_bench_tables(&args[1..]),
@@ -66,6 +74,12 @@ USAGE:
               [--px PX] [--py PY] [--steps N_T] [--cycles K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
               [--drift D] [--seed SEED] [--no-dydd] [--no-baseline]
+  dydd-da serve [--config FILE] [--dim 1|2|4] [--n N] [--m M] [--p P]
+              [--px PX] [--py PY] [--steps N_T] [--ticks K] [--backend B]
+              [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
+              [--drift D] [--seed SEED] [--source drift|replay|-]
+              [--no-dydd] [--no-baseline] [--no-feed-forward]
+              [--no-warm-start] [--force-cold]
   dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
   dydd-da dydd --dim 2 [--px PX] [--py PY] [--layout L2] [--n N] [--m M]
               [--seed SEED]
@@ -82,6 +96,10 @@ dim 4 (space-time): p = time windows over an n x steps trajectory; 1-D
 backends: native (Cholesky) | kf (local VAR-KF) | pjrt (XLA artifacts)
           | cg (sparse matrix-free PCG — use for large grids, e.g.
           `run --dim 2 --n 128 --backend cg`)
+serve sources: drift (native per-row stream; falls back to replay when
+          the geometry has none) | replay (per-tick cycle_obs diffs)
+          | - (JSONL deltas on stdin, one {tick, add, remove, move}
+          object per line); telemetry goes to stdout as JSONL
 ";
 
 /// The sequential-KF baseline keeps a dense n × n covariance and pays
@@ -460,6 +478,195 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
         eprintln!("warning: at least one cycle did not reach the Schwarz tolerance");
     }
     Ok(())
+}
+
+/// Streaming incremental assimilation: pull one observation delta per
+/// tick, update the census in O(|delta|), re-extract only dirty blocks,
+/// and emit one JSONL telemetry line per tick on stdout (headers and the
+/// summary go to stderr so stdout stays machine-readable).
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let mut cfg = match f.get("--config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    let config_dim = cfg.dim;
+    if let Some(d) = f.parsed::<usize>("--dim")? {
+        cfg.dim = d;
+    }
+    // Same guard as `cycle`: a 1-D config's n is not a 2-D grid axis.
+    if cfg.dim == 2 && f.get("--n").is_none() && config_dim != 2 {
+        if f.get("--config").is_some() {
+            eprintln!(
+                "warning: --dim 2 overrides a dim-{config_dim} config; its n = {} is not a \
+                 2-D grid axis, using the 2-D serve default n = 48 (pass --n to choose)",
+                cfg.n
+            );
+        }
+        cfg.n = 48;
+    }
+    if cfg.dim == 4 && f.get("--n").is_none() && config_dim != 4 {
+        if f.get("--config").is_some() {
+            eprintln!(
+                "warning: --dim 4 overrides a dim-{config_dim} config; its n = {} is not a \
+                 spatial trajectory size, using the 4-D serve default n = 16 (pass --n)",
+                cfg.n
+            );
+        }
+        cfg.n = 16;
+    }
+    if let Some(n) = f.parsed::<usize>("--n")? {
+        cfg.n = n;
+    }
+    if let Some(m) = f.parsed::<usize>("--m")? {
+        cfg.m = m;
+    }
+    if let Some(p) = f.parsed::<usize>("--p")? {
+        cfg.p = p;
+    }
+    if let Some(px) = f.parsed::<usize>("--px")? {
+        cfg.px = px;
+    }
+    if let Some(py) = f.parsed::<usize>("--py")? {
+        cfg.py = py;
+    }
+    if let Some(steps) = f.parsed::<usize>("--steps")? {
+        cfg.steps = steps;
+    }
+    if let Some(k) = f.parsed::<usize>("--ticks")? {
+        cfg.ticks = k;
+    }
+    if let Some(s) = f.get("--policy") {
+        cfg.cycle_policy = RebalancePolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy {s:?}"))?;
+    }
+    if let Some(tau) = f.parsed::<f64>("--tau")? {
+        anyhow::ensure!(
+            matches!(cfg.cycle_policy, RebalancePolicy::Threshold(_)),
+            "--tau only applies to --policy threshold"
+        );
+        cfg.cycle_policy = cfg.cycle_policy.with_tau(tau);
+    }
+    if let Some(s) = f.get("--drift") {
+        match registry::parse_drift(cfg.dim, s)? {
+            DriftSpec::D1(d) => cfg.drift = d,
+            DriftSpec::D2(d) => cfg.drift2d = d,
+        }
+    }
+    if let Some(b) = f.get("--backend") {
+        cfg.backend =
+            SolverBackend::parse(b).ok_or_else(|| anyhow::anyhow!("unknown backend {b:?}"))?;
+    }
+    if let Some(seed) = f.parsed::<u64>("--seed")? {
+        cfg.seed = seed;
+    }
+    if let Some(s) = f.get("--source") {
+        cfg.stream_source = StreamSourceConfig::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown source {s:?} (drift | replay | -)"))?;
+    }
+    if f.has("--no-dydd") {
+        cfg.dydd = false;
+    }
+    if f.has("--no-feed-forward") {
+        cfg.stream_feed_forward = false;
+    }
+    if f.has("--no-warm-start") {
+        cfg.stream_warm_start = false;
+    }
+    if f.has("--force-cold") {
+        cfg.stream_force_cold = true;
+    }
+    cfg.validate()?;
+    let unknowns = match cfg.dim {
+        2 => cfg.n * cfg.n,
+        4 => cfg.n * cfg.steps,
+        _ => cfg.n,
+    };
+    let with_baseline = baseline_enabled(f.has("--no-baseline"), unknowns);
+
+    let drift_name = if cfg.dim == 2 { cfg.drift2d.name() } else { cfg.drift.name() };
+    let effective = if cfg.dydd { cfg.cycle_policy } else { RebalancePolicy::Never };
+    eprintln!(
+        "serve: dim={} n={} m={} {} ticks={} policy={} source={:?} drift={} seed={}",
+        cfg.dim,
+        cfg.n,
+        cfg.m,
+        match cfg.dim {
+            2 => format!("grid={}x{}", cfg.px, cfg.py),
+            4 => format!("steps={} windows={}", cfg.steps, cfg.p),
+            _ => format!("p={}", cfg.p),
+        },
+        cfg.ticks,
+        effective.name(),
+        cfg.stream_source,
+        drift_name,
+        cfg.seed,
+    );
+    let rep = match cfg.dim {
+        2 => serve_geometry(&cfg.box_geometry(), &cfg, with_baseline)?,
+        4 => serve_geometry(&cfg.window_geometry(), &cfg, with_baseline)?,
+        _ => serve_geometry(&cfg.interval_geometry(), &cfg, with_baseline)?,
+    };
+    eprintln!(
+        "summary: ticks={}  m_final={}  factorizations={}  cache_hit_mean={:.3}  \
+         warm_tick_wall_mean={}",
+        rep.records.len(),
+        rep.records.last().map(|r| r.m).unwrap_or(0),
+        rep.total_factorizations(),
+        rep.mean_cache_hit_rate(),
+        fmt_secs(rep.mean_warm_tick_wall()),
+    );
+    if !rep.all_converged() {
+        eprintln!("warning: at least one tick did not reach the Schwarz tolerance");
+    }
+    Ok(())
+}
+
+/// The dimension-generic half of `serve`: build the configured delta
+/// source and drain it through a streaming engine, printing one JSONL
+/// line per tick.
+fn serve_geometry<G: RecordGeometry>(
+    geom: &G,
+    cfg: &ExperimentConfig,
+    with_baseline: bool,
+) -> anyhow::Result<StreamReport> {
+    let opts = StreamOptions {
+        policy: cfg.cycle_policy,
+        dydd: cfg.dydd,
+        schwarz: cfg.schwarz.clone(),
+        backend: cfg.backend,
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        feed_forward: cfg.stream_feed_forward,
+        warm_start: cfg.stream_warm_start,
+        force_cold: cfg.stream_force_cold,
+        with_baseline,
+    };
+    let emit = |r: &dydd_da::stream::TickRecord| println!("{}", r.to_json());
+    match cfg.stream_source {
+        StreamSourceConfig::Stdin => {
+            let stdin = std::io::stdin();
+            let mut src = JsonlSource::new(stdin.lock());
+            run_stream(geom, &mut src, &opts, emit)
+        }
+        StreamSourceConfig::Replay => {
+            let mut src: ReplaySource<G> = ReplaySource::new(cfg.m, cfg.seed, cfg.ticks);
+            run_stream(geom, &mut src, &opts, emit)
+        }
+        StreamSourceConfig::Drift => {
+            match DriftSource::new(geom, cfg.m, cfg.seed, cfg.ticks) {
+                Some(mut src) => run_stream(geom, &mut src, &opts, emit),
+                None => {
+                    eprintln!(
+                        "note: this geometry/drift has no native stream; replaying \
+                         per-tick cycle observations instead"
+                    );
+                    let mut src: ReplaySource<G> =
+                        ReplaySource::new(cfg.m, cfg.seed, cfg.ticks);
+                    run_stream(geom, &mut src, &opts, emit)
+                }
+            }
+        }
+    }
 }
 
 /// The DD-KF + baseline lines shared by the 1-D and 2-D run paths.

@@ -1,0 +1,286 @@
+//! The observation changelog: per-tick record deltas, the canonical
+//! record store they accumulate into, and the O(|delta|) incremental
+//! census.
+//!
+//! The paper's DyDD loop recounts the full census every epoch; a streaming
+//! ingest only ever sees what *changed*. [`ObsDelta`] is that change
+//! (absolute record values — no indices, so deltas survive partition
+//! moves), [`RecordStore`] folds deltas into the standing observation
+//! multiset, and [`IncrementalCensus`] maintains per-subdomain counts in
+//! O(|delta|) per tick, bitwise-identical to a full
+//! [`crate::decomp::Geometry::census`] recount (the property the
+//! `stream` tier-1 tests pin).
+
+use std::collections::BTreeMap;
+
+/// What changed in the observation set at one tick. Records are absolute
+/// values keyed by their full bit pattern ([`crate::decomp::RecordGeometry::rec_key`]);
+/// a "move" is semantically remove(old) + add(new) but kept paired so
+/// consumers can attribute migration volume to drift rather than churn.
+#[derive(Debug, Clone)]
+pub struct ObsDelta<R> {
+    /// Monotonic tick index (0-based; tick 0 is the cold-start snapshot).
+    pub tick: u64,
+    pub added: Vec<R>,
+    pub removed: Vec<R>,
+    pub moved: Vec<(R, R)>,
+}
+
+impl<R> ObsDelta<R> {
+    pub fn empty(tick: u64) -> Self {
+        ObsDelta { tick, added: Vec::new(), removed: Vec::new(), moved: Vec::new() }
+    }
+
+    /// Total changed records |delta| — the work an incremental tick does.
+    pub fn changes(&self) -> usize {
+        self.added.len() + self.removed.len() + self.moved.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.changes() == 0
+    }
+}
+
+/// The standing observation multiset, keyed by full-bit-pattern record
+/// keys. Two records with equal keys are bitwise-identical, so a count
+/// per key loses nothing; iteration order is the key order — exactly the
+/// canonical order the observation-set constructors sort into, which is
+/// what makes `obs_from_records(store.records())` reproduce the full
+/// generator output bitwise.
+#[derive(Debug, Clone, Default)]
+pub struct RecordStore<R> {
+    map: BTreeMap<[u64; 4], (R, usize)>,
+    len: usize,
+}
+
+impl<R: Clone> RecordStore<R> {
+    pub fn new() -> Self {
+        RecordStore { map: BTreeMap::new(), len: 0 }
+    }
+
+    /// Standing record count (multiset cardinality).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Fold one tick's delta into the store. Removing (or moving) a record
+    /// that is not present is an error — the changelog desynced from the
+    /// store, and a silent no-op would let the census drift.
+    pub fn apply(
+        &mut self,
+        delta: &ObsDelta<R>,
+        key: impl Fn(&R) -> [u64; 4],
+    ) -> anyhow::Result<()> {
+        for rec in delta.removed.iter().chain(delta.moved.iter().map(|(old, _)| old)) {
+            self.remove(key(rec))?;
+        }
+        for rec in delta.added.iter().chain(delta.moved.iter().map(|(_, new)| new)) {
+            self.insert(key(rec), rec.clone());
+        }
+        Ok(())
+    }
+
+    fn insert(&mut self, k: [u64; 4], rec: R) {
+        self.map.entry(k).or_insert((rec, 0)).1 += 1;
+        self.len += 1;
+    }
+
+    fn remove(&mut self, k: [u64; 4]) -> anyhow::Result<()> {
+        let Some(entry) = self.map.get_mut(&k) else {
+            anyhow::bail!("changelog removes a record the store does not hold (key {k:?})");
+        };
+        entry.1 -= 1;
+        if entry.1 == 0 {
+            self.map.remove(&k);
+        }
+        self.len -= 1;
+        Ok(())
+    }
+
+    /// The standing multiset, expanded in key order.
+    pub fn records(&self) -> Vec<R> {
+        let mut out = Vec::with_capacity(self.len);
+        for (rec, count) in self.map.values() {
+            for _ in 0..*count {
+                out.push(rec.clone());
+            }
+        }
+        out
+    }
+}
+
+/// Multiset diff between two record snapshots, as an [`ObsDelta`].
+///
+/// Exactly-matching records (same full key) cancel; of the leftovers,
+/// pairs are zipped into `moved` in key order and the excess becomes
+/// `added`/`removed`. Replaying the returned delta through a
+/// [`RecordStore`] holding `prev` yields exactly `next` as a multiset —
+/// the bridge that lets the streaming engine replay the K-cycle driver's
+/// per-cycle observation sets as a changelog.
+pub fn diff<R: Clone>(
+    prev: &[R],
+    next: &[R],
+    key: impl Fn(&R) -> [u64; 4],
+    tick: u64,
+) -> ObsDelta<R> {
+    let mut counts: BTreeMap<[u64; 4], (R, i64)> = BTreeMap::new();
+    for rec in prev {
+        counts.entry(key(rec)).or_insert((rec.clone(), 0)).1 -= 1;
+    }
+    for rec in next {
+        counts.entry(key(rec)).or_insert((rec.clone(), 0)).1 += 1;
+    }
+    let mut gone: Vec<R> = Vec::new();
+    let mut came: Vec<R> = Vec::new();
+    for (rec, c) in counts.into_values() {
+        for _ in 0..c.unsigned_abs() {
+            if c < 0 {
+                gone.push(rec.clone());
+            } else {
+                came.push(rec.clone());
+            }
+        }
+    }
+    let pairs = gone.len().min(came.len());
+    let added = came.split_off(pairs);
+    let removed = gone.split_off(pairs);
+    let moved = gone.into_iter().zip(came).collect();
+    ObsDelta { tick, added, removed, moved }
+}
+
+/// Per-subdomain observation counts maintained in O(|delta|) per tick —
+/// the census DyDD's [`crate::dydd::RebalancePolicy`] decides on, without
+/// the full recount.
+#[derive(Debug, Clone)]
+pub struct IncrementalCensus {
+    counts: Vec<usize>,
+}
+
+impl IncrementalCensus {
+    pub fn new(p: usize) -> Self {
+        IncrementalCensus { counts: vec![0; p] }
+    }
+
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Update the counts for one tick's delta; `owner` is the census
+    /// arithmetic ([`crate::decomp::RecordGeometry::rec_owner`]).
+    /// Decrementing an empty subdomain is a desync error, not saturation.
+    pub fn apply<R>(
+        &mut self,
+        delta: &ObsDelta<R>,
+        owner: impl Fn(&R) -> usize,
+    ) -> anyhow::Result<()> {
+        for rec in delta.removed.iter().chain(delta.moved.iter().map(|(old, _)| old)) {
+            let i = owner(rec);
+            anyhow::ensure!(
+                self.counts[i] > 0,
+                "incremental census underflow on subdomain {i} (changelog desync)"
+            );
+            self.counts[i] -= 1;
+        }
+        for rec in delta.added.iter().chain(delta.moved.iter().map(|(_, new)| new)) {
+            self.counts[owner(rec)] += 1;
+        }
+        Ok(())
+    }
+
+    /// The partition moved: adopt the freshly recounted census (owner
+    /// arithmetic changed under every standing record, so this is the one
+    /// O(m) step a partition change costs).
+    pub fn rebase(&mut self, counts: Vec<usize>) {
+        self.counts = counts;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key1(r: &(u64, u64)) -> [u64; 4] {
+        [r.0, r.1, 0, 0]
+    }
+
+    #[test]
+    fn store_applies_deltas_and_reports_canonical_order() {
+        let mut store: RecordStore<(u64, u64)> = RecordStore::new();
+        let d0 = ObsDelta {
+            tick: 0,
+            added: vec![(3, 1), (1, 1), (1, 1), (2, 9)],
+            removed: vec![],
+            moved: vec![],
+        };
+        store.apply(&d0, key1).unwrap();
+        assert_eq!(store.len(), 4);
+        assert_eq!(store.records(), vec![(1, 1), (1, 1), (2, 9), (3, 1)]);
+
+        let d1 = ObsDelta {
+            tick: 1,
+            added: vec![],
+            removed: vec![(1, 1)],
+            moved: vec![((2, 9), (5, 9))],
+        };
+        store.apply(&d1, key1).unwrap();
+        assert_eq!(store.records(), vec![(1, 1), (3, 1), (5, 9)]);
+
+        // Removing an absent record is a desync error.
+        let bad =
+            ObsDelta { tick: 2, added: vec![], removed: vec![(7, 7)], moved: vec![] };
+        assert!(store.apply(&bad, key1).is_err());
+    }
+
+    #[test]
+    fn diff_replays_to_the_next_snapshot() {
+        let prev = vec![(1u64, 1u64), (2, 2), (2, 2), (4, 4)];
+        let next = vec![(2, 2), (3, 3), (4, 4), (4, 4), (9, 9)];
+        let d = diff(&prev, &next, key1, 5);
+        assert_eq!(d.tick, 5);
+        // One (2,2) cancels, one pairs; prev-only {(1,1),(2,2)}; next-only
+        // {(3,3),(4,4),(9,9)} -> 2 moved + 1 added.
+        assert_eq!(d.moved.len(), 2);
+        assert_eq!(d.added.len(), 1);
+        assert_eq!(d.removed.len(), 0);
+
+        let mut store: RecordStore<(u64, u64)> = RecordStore::new();
+        let seed =
+            ObsDelta { tick: 0, added: prev.clone(), removed: vec![], moved: vec![] };
+        store.apply(&seed, key1).unwrap();
+        store.apply(&d, key1).unwrap();
+        let mut want = next.clone();
+        want.sort();
+        assert_eq!(store.records(), want);
+    }
+
+    #[test]
+    fn incremental_census_tracks_owners() {
+        let mut c = IncrementalCensus::new(3);
+        let owner = |r: &(u64, u64)| (r.0 % 3) as usize;
+        let d = ObsDelta {
+            tick: 0,
+            added: vec![(0, 0), (1, 0), (1, 1), (2, 0)],
+            removed: vec![],
+            moved: vec![],
+        };
+        c.apply(&d, owner).unwrap();
+        assert_eq!(c.counts(), &[1, 2, 1]);
+        let d = ObsDelta {
+            tick: 1,
+            added: vec![],
+            removed: vec![(0, 0)],
+            moved: vec![((1, 0), (2, 7))],
+        };
+        c.apply(&d, owner).unwrap();
+        assert_eq!(c.counts(), &[0, 1, 2]);
+        // Underflow = desync.
+        let d = ObsDelta { tick: 2, added: vec![], removed: vec![(0, 9)], moved: vec![] };
+        assert!(c.apply(&d, owner).is_err());
+        c.rebase(vec![5, 5, 5]);
+        assert_eq!(c.counts(), &[5, 5, 5]);
+    }
+}

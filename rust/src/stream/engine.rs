@@ -1,0 +1,545 @@
+//! The streaming tick loop: ingest a delta, update the census in
+//! O(|delta|), let the rebalance policy consult it, re-extract only the
+//! blocks whose rows changed, and warm-start the Schwarz iteration from
+//! the cached per-block solutions.
+//!
+//! One tick is one assimilation cycle of the K-cycle driver, minus the
+//! work the changelog proves unnecessary:
+//!
+//! 1. fold the [`ObsDelta`] into the standing record store and the
+//!    [`IncrementalCensus`] (bitwise-identical to a full recount);
+//! 2. the [`crate::dydd::RebalancePolicy`] decides on ℰ of that census;
+//!    DyDD migrates from the incumbent partition when triggered;
+//! 3. mark dirty exactly the blocks whose observation-row sets the delta
+//!    touched ([`crate::decomp::RecordGeometry::rec_in_block`]); a
+//!    partition move dirties everything;
+//! 4. dispatch [`crate::coordinator::BlockTask`]s: dirty → `Extract`
+//!    (re-factorize), clean with a changed background → `RefreshB` (the
+//!    local factor depends only on (A, d, reg), so only the right-hand
+//!    side ships), untouched → `Retain` (pure cache hit);
+//! 5. solve via [`crate::coordinator::WorkerPool::solve_blocks_incremental`],
+//!    optionally warm-started from the cached block solutions; feed the
+//!    analysis forward as the next tick's background.
+//!
+//! Every tick emits a [`TickRecord`] — the replayable JSONL telemetry the
+//! `serve` CLI subcommand writes.
+
+use super::changelog::{IncrementalCensus, ObsDelta, RecordStore};
+use super::source::DeltaSource;
+use crate::cls::LocalBlock;
+use crate::coordinator::{BlockTask, SolverBackend, WorkerPool};
+use crate::ddkf::SchwarzOptions;
+use crate::decomp::{phases_of, EpochTracker, RecordGeometry};
+use crate::dydd::{balance_ratio, RebalancePolicy, RebalanceRecord};
+use crate::harness::pipeline::maybe_rebalance;
+use crate::linalg::mat::dist2;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Streaming run configuration.
+#[derive(Debug, Clone)]
+pub struct StreamOptions {
+    /// Per-tick rebalance decision (on the incremental census's ℰ).
+    pub policy: RebalancePolicy,
+    /// Master DyDD switch; `false` forces the Never policy.
+    pub dydd: bool,
+    pub schwarz: SchwarzOptions,
+    pub backend: SolverBackend,
+    pub artifacts_dir: PathBuf,
+    /// Feed each tick's analysis forward as the next background (the
+    /// K-cycle driver's chaining). Off = a fixed background, so a no-op
+    /// delta retains every block verbatim.
+    pub feed_forward: bool,
+    /// Start the Schwarz iterate from the cached block solutions instead
+    /// of zero. Leave off for runs that must be bitwise-identical to the
+    /// cold driver.
+    pub warm_start: bool,
+    /// Ablation switch: re-extract every block every tick (what the
+    /// K-cycle driver does) — the baseline incremental ticks are measured
+    /// against.
+    pub force_cold: bool,
+    /// Also run the sequential KF per tick and record error_DD-DA.
+    pub with_baseline: bool,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        StreamOptions {
+            policy: RebalancePolicy::Threshold(RebalancePolicy::DEFAULT_TAU),
+            dydd: true,
+            schwarz: SchwarzOptions::default(),
+            backend: SolverBackend::Native,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            feed_forward: true,
+            warm_start: true,
+            force_cold: false,
+            with_baseline: false,
+        }
+    }
+}
+
+/// Everything one tick reports — one JSONL line of the `serve` telemetry.
+#[derive(Debug, Clone)]
+pub struct TickRecord {
+    pub tick: u64,
+    /// Standing observation count after the delta.
+    pub m: usize,
+    pub added: usize,
+    pub removed: usize,
+    pub moved: usize,
+    /// Incremental census after the delta (after any rebase).
+    pub census: Vec<usize>,
+    /// ℰ under the incumbent partition, before any rebalance.
+    pub e_before: f64,
+    /// ℰ under the partition the solve used.
+    pub e_after: f64,
+    pub rebalanced: bool,
+    pub partition_changed: bool,
+    pub migration_volume: u64,
+    /// DyDD record for this tick (None when not rebalanced).
+    pub dydd: Option<RebalanceRecord>,
+    pub p: usize,
+    /// Blocks whose row sets the delta touched (= re-extractions).
+    pub dirty_blocks: usize,
+    pub extracted: usize,
+    pub refreshed: usize,
+    pub retained: usize,
+    /// Local factorizations paid this tick (== extracted).
+    pub factorizations: usize,
+    /// Fraction of blocks served from the cache (Retain + RefreshB).
+    pub cache_hit_rate: f64,
+    pub iters: usize,
+    pub converged: bool,
+    pub stalled: bool,
+    pub t_dydd: Duration,
+    /// Simulated-parallel critical path of the tick's DD-KF solve.
+    pub t_critical: Duration,
+    /// Measured wall-clock of the whole tick (ingest → analysis).
+    pub t_wall: Duration,
+    pub error_dd_da: Option<f64>,
+}
+
+impl TickRecord {
+    /// The JSONL wire form (one object per tick, replayable).
+    pub fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        let num = Json::Num;
+        let int = |v: usize| Json::Num(v as f64);
+        o.insert("tick".into(), Json::Num(self.tick as f64));
+        o.insert("m".into(), int(self.m));
+        o.insert("added".into(), int(self.added));
+        o.insert("removed".into(), int(self.removed));
+        o.insert("moved".into(), int(self.moved));
+        o.insert("census".into(), Json::Arr(self.census.iter().map(|&c| int(c)).collect()));
+        o.insert("e_before".into(), num(self.e_before));
+        o.insert("e_after".into(), num(self.e_after));
+        o.insert("rebalanced".into(), Json::Bool(self.rebalanced));
+        o.insert("partition_changed".into(), Json::Bool(self.partition_changed));
+        o.insert("migration_volume".into(), Json::Num(self.migration_volume as f64));
+        o.insert("p".into(), int(self.p));
+        o.insert("dirty_blocks".into(), int(self.dirty_blocks));
+        o.insert("extracted".into(), int(self.extracted));
+        o.insert("refreshed".into(), int(self.refreshed));
+        o.insert("retained".into(), int(self.retained));
+        o.insert("factorizations".into(), int(self.factorizations));
+        o.insert("cache_hit_rate".into(), num(self.cache_hit_rate));
+        o.insert("iters".into(), int(self.iters));
+        o.insert("converged".into(), Json::Bool(self.converged));
+        o.insert("stalled".into(), Json::Bool(self.stalled));
+        o.insert("t_dydd_s".into(), num(self.t_dydd.as_secs_f64()));
+        o.insert("t_critical_s".into(), num(self.t_critical.as_secs_f64()));
+        o.insert("t_wall_s".into(), num(self.t_wall.as_secs_f64()));
+        o.insert(
+            "error_dd_da".into(),
+            self.error_dd_da.map(Json::Num).unwrap_or(Json::Null),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Report of a whole streaming run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub p: usize,
+    pub records: Vec<TickRecord>,
+    /// Final analysis after the last tick.
+    pub x: Vec<f64>,
+}
+
+impl StreamReport {
+    pub fn all_converged(&self) -> bool {
+        self.records.iter().all(|r| r.converged)
+    }
+
+    /// Total local factorizations paid across the run.
+    pub fn total_factorizations(&self) -> usize {
+        self.records.iter().map(|r| r.factorizations).sum()
+    }
+
+    /// Mean cache hit rate over warm ticks (tick 0 is always cold).
+    pub fn mean_cache_hit_rate(&self) -> f64 {
+        let warm = &self.records[self.records.len().min(1)..];
+        if warm.is_empty() {
+            return 0.0;
+        }
+        warm.iter().map(|r| r.cache_hit_rate).sum::<f64>() / warm.len() as f64
+    }
+
+    /// Mean measured tick wall-clock over warm ticks.
+    pub fn mean_warm_tick_wall(&self) -> f64 {
+        let warm = &self.records[self.records.len().min(1)..];
+        if warm.is_empty() {
+            return 0.0;
+        }
+        warm.iter().map(|r| r.t_wall.as_secs_f64()).sum::<f64>() / warm.len() as f64
+    }
+}
+
+/// The incremental assimilation engine: standing record store, census,
+/// partition, epochs and worker pool for one streaming run.
+pub struct StreamEngine<'g, G: RecordGeometry> {
+    geom: &'g G,
+    opts: StreamOptions,
+    part: G::Part,
+    pool: WorkerPool,
+    epochs: EpochTracker,
+    census: IncrementalCensus,
+    store: RecordStore<G::Rec>,
+    /// Cached phase colouring; invalidated when the partition moves.
+    phases: Option<Vec<Vec<usize>>>,
+    y0: Vec<f64>,
+    /// Whether `y0` changed since the standing blocks' b was extracted.
+    bg_dirty: bool,
+    /// No tick has run yet (everything is cold).
+    first: bool,
+    x: Vec<f64>,
+}
+
+impl<'g, G: RecordGeometry> StreamEngine<'g, G> {
+    pub fn new(geom: &'g G, opts: StreamOptions) -> Self {
+        let p = geom.p();
+        let pool = WorkerPool::new(p, opts.backend, opts.artifacts_dir.clone());
+        StreamEngine {
+            geom,
+            part: geom.initial_partition(),
+            pool,
+            epochs: EpochTracker::new(p),
+            census: IncrementalCensus::new(p),
+            store: RecordStore::new(),
+            phases: None,
+            y0: geom.background(),
+            bg_dirty: false,
+            first: true,
+            opts,
+            x: Vec::new(),
+        }
+    }
+
+    /// Standing observation count.
+    pub fn m(&self) -> usize {
+        self.store.len()
+    }
+
+    /// The incumbent partition.
+    pub fn part(&self) -> &G::Part {
+        &self.part
+    }
+
+    /// Last tick's analysis (empty before the first tick).
+    pub fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    /// Run one assimilation tick over `delta` (see module docs for the
+    /// sequence).
+    pub fn tick(&mut self, delta: &ObsDelta<G::Rec>) -> anyhow::Result<TickRecord> {
+        let t_wall0 = Instant::now();
+        let geom = self.geom;
+
+        // 1. Ingest: standing multiset + incremental census, O(|delta|).
+        self.store.apply(delta, |r| geom.rec_key(r))?;
+        {
+            let part = &self.part;
+            self.census.apply(delta, |r| geom.rec_owner(part, r))?;
+        }
+        let obs = geom.obs_from_records(self.store.records());
+        debug_assert_eq!(
+            self.census.counts(),
+            geom.census(&self.part, &obs).as_slice(),
+            "incremental census desynced from the full recount"
+        );
+
+        // 2. Policy decision on the incremental census; DyDD warm-starts
+        // from the incumbent partition.
+        let e_before = balance_ratio(self.census.counts());
+        let rebalanced =
+            self.opts.dydd && self.opts.policy.should_rebalance(e_before);
+        let t0 = Instant::now();
+        let (new_part, dydd) = maybe_rebalance(geom, &self.part, &obs, rebalanced)?;
+        let t_dydd = if rebalanced { t0.elapsed() } else { Duration::ZERO };
+        let partition_changed = new_part != self.part;
+        if partition_changed {
+            self.part = new_part;
+            let p = geom.parts_of(&self.part);
+            anyhow::ensure!(
+                p == self.pool.p(),
+                "rebalance changed the subdomain count ({} -> {p})",
+                self.pool.p()
+            );
+            // Owner arithmetic changed under every standing record: the
+            // one O(m) step a partition move costs.
+            self.census.rebase(geom.census(&self.part, &obs));
+            self.epochs.bump_partition(p);
+            self.phases = None;
+        }
+        let e_after = balance_ratio(self.census.counts());
+        let migration_volume =
+            dydd.as_ref().map(|g| g.dydd.migration_volume()).unwrap_or(0);
+
+        // 3. Dirty marking: exactly the blocks whose observation-row sets
+        // the delta touched, via the local-block inclusion predicate.
+        let p = self.pool.p();
+        let overlap = self.opts.schwarz.overlap;
+        let all_dirty = self.first || partition_changed || self.opts.force_cold;
+        let mut dirty = vec![all_dirty; p];
+        if !all_dirty {
+            let part = &self.part;
+            let mut touch = |rec: &G::Rec| {
+                for (i, d) in dirty.iter_mut().enumerate() {
+                    if !*d && geom.rec_in_block(part, i, overlap, rec) {
+                        *d = true;
+                    }
+                }
+            };
+            for rec in delta.added.iter().chain(&delta.removed) {
+                touch(rec);
+            }
+            for (old, new) in &delta.moved {
+                touch(old);
+                touch(new);
+            }
+        }
+        for (i, &d) in dirty.iter().enumerate() {
+            if d {
+                self.epochs.mark_dirty(i);
+            }
+        }
+        let dirty_blocks = dirty.iter().filter(|&&d| d).count();
+
+        // 4. Task dispatch: Extract dirty blocks, refresh clean ones'
+        // right-hand sides when the background moved, retain the rest.
+        let prob = geom.make_problem(self.y0.clone(), obs);
+        let tasks: Vec<BlockTask> = if self.phases.is_none() {
+            // No standing colouring (first tick or partition move) — both
+            // cases dirty every block, so the full list is on hand.
+            let blocks: Vec<LocalBlock> = (0..p)
+                .map(|i| geom.local_block(&prob, &self.part, i, overlap))
+                .collect();
+            self.phases = Some(phases_of(geom, &blocks, &self.part));
+            blocks.into_iter().map(BlockTask::Extract).collect()
+        } else {
+            (0..p)
+                .map(|i| -> anyhow::Result<BlockTask> {
+                    Ok(if dirty[i] {
+                        BlockTask::Extract(geom.local_block(&prob, &self.part, i, overlap))
+                    } else if self.bg_dirty {
+                        let cb = self.pool.cached_block(i).ok_or_else(|| {
+                            anyhow::anyhow!("clean block {i} missing from the solve cache")
+                        })?;
+                        let mut b = cb.b.clone();
+                        for (r_loc, &r) in
+                            cb.global_rows[..cb.obs_row_start].iter().enumerate()
+                        {
+                            b[r_loc] = geom.state_row_datum(&prob, r);
+                        }
+                        BlockTask::RefreshB(b)
+                    } else {
+                        BlockTask::Retain
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?
+        };
+
+        // 5. Incremental solve on the persistent pool.
+        let epochs = self.epochs.epochs();
+        let (par, counters) = self.pool.solve_blocks_incremental(
+            geom.n_unknowns(),
+            tasks,
+            &epochs,
+            self.phases.as_ref().expect("phases computed above"),
+            &self.opts.schwarz,
+            self.opts.warm_start,
+        )?;
+
+        let error_dd_da = if self.opts.with_baseline {
+            Some(dist2(&geom.solve_baseline(&prob), &par.x))
+        } else {
+            None
+        };
+
+        // Feed the analysis forward as the next tick's background.
+        if self.opts.feed_forward {
+            self.y0 = geom.next_background(&par.x);
+            self.bg_dirty = true;
+        } else {
+            self.bg_dirty = false;
+        }
+        self.first = false;
+
+        let record = TickRecord {
+            tick: delta.tick,
+            m: self.store.len(),
+            added: delta.added.len(),
+            removed: delta.removed.len(),
+            moved: delta.moved.len(),
+            census: self.census.counts().to_vec(),
+            e_before,
+            e_after,
+            rebalanced,
+            partition_changed,
+            migration_volume,
+            dydd,
+            p,
+            dirty_blocks,
+            extracted: counters.extracted,
+            refreshed: counters.refreshed,
+            retained: counters.retained,
+            factorizations: counters.factorizations(),
+            cache_hit_rate: counters.cache_hit_rate(),
+            iters: par.iters,
+            converged: par.converged,
+            stalled: par.stalled,
+            t_dydd,
+            t_critical: par.t_critical,
+            t_wall: t_wall0.elapsed(),
+            error_dd_da,
+        };
+        self.x = par.x;
+        Ok(record)
+    }
+}
+
+/// Drain a [`DeltaSource`] through a fresh engine, invoking `on_tick` per
+/// record (the `serve` subcommand's JSONL writer) — the whole serve loop
+/// in one call.
+pub fn run_stream<G: RecordGeometry, S: DeltaSource<G>>(
+    geom: &G,
+    source: &mut S,
+    opts: &StreamOptions,
+    mut on_tick: impl FnMut(&TickRecord),
+) -> anyhow::Result<StreamReport> {
+    let mut engine = StreamEngine::new(geom, opts.clone());
+    let mut records = Vec::new();
+    let mut tick = 0u64;
+    while let Some(delta) = source.next_delta(geom, tick)? {
+        anyhow::ensure!(
+            delta.tick == tick,
+            "source emitted tick {} where {tick} was expected",
+            delta.tick
+        );
+        let record = engine.tick(&delta)?;
+        on_tick(&record);
+        records.push(record);
+        tick += 1;
+    }
+    Ok(StreamReport { p: engine.pool.p(), records, x: engine.x })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::IntervalGeometry;
+    use crate::domain::{DriftLayout, ObsLayout};
+    use crate::stream::source::DriftSource;
+
+    #[test]
+    fn noop_ticks_retain_every_block() {
+        // A stationary source with a fixed background: after the cold
+        // tick, every tick is a pure cache hit — zero re-extractions,
+        // zero factorizations (the ISSUE acceptance counter check).
+        let mut geom = IntervalGeometry::new(96, 4);
+        geom.drift = DriftLayout::Stationary(ObsLayout::Uniform);
+        let opts = StreamOptions {
+            feed_forward: false,
+            with_baseline: true,
+            ..StreamOptions::default()
+        };
+        let mut src = DriftSource::new(&geom, 60, 5, 4).unwrap();
+        let rep = run_stream(&geom, &mut src, &opts, |_| {}).unwrap();
+        assert_eq!(rep.records.len(), 4);
+        assert!(rep.all_converged());
+        let cold = &rep.records[0];
+        assert_eq!((cold.extracted, cold.factorizations), (4, 4));
+        for r in &rep.records[1..] {
+            assert!(r.added == 0 && r.removed == 0 && r.moved == 0);
+            assert_eq!(r.extracted, 0, "tick {}: re-extracted a clean block", r.tick);
+            assert_eq!(r.factorizations, 0);
+            assert_eq!(r.refreshed, 0);
+            assert_eq!(r.retained, 4);
+            assert_eq!(r.cache_hit_rate, 1.0);
+            assert!(r.error_dd_da.unwrap() < 1e-9);
+        }
+        assert_eq!(rep.total_factorizations(), 4);
+        assert_eq!(rep.mean_cache_hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn feed_forward_refreshes_clean_blocks() {
+        // Same stationary feed but with chaining: the background changes
+        // every tick, so clean blocks are RefreshB'd (no factorization)
+        // rather than retained.
+        let mut geom = IntervalGeometry::new(96, 4);
+        geom.drift = DriftLayout::Stationary(ObsLayout::Uniform);
+        let opts = StreamOptions { with_baseline: true, ..StreamOptions::default() };
+        let mut src = DriftSource::new(&geom, 60, 5, 4).unwrap();
+        let rep = run_stream(&geom, &mut src, &opts, |_| {}).unwrap();
+        assert!(rep.all_converged());
+        for r in &rep.records[1..] {
+            assert_eq!(r.extracted, 0);
+            assert_eq!(r.refreshed, 4);
+            assert_eq!(r.cache_hit_rate, 1.0);
+            assert!(r.error_dd_da.unwrap() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn drifting_blob_dirties_only_touched_blocks() {
+        let mut geom = IntervalGeometry::new(256, 8);
+        geom.drift = DriftLayout::TranslatingBlob;
+        let opts = StreamOptions { with_baseline: true, ..StreamOptions::default() };
+        let mut src = DriftSource::new(&geom, 200, 9, 6).unwrap();
+        let rep = run_stream(&geom, &mut src, &opts, |_| {}).unwrap();
+        assert!(rep.all_converged());
+        for r in &rep.records {
+            assert!(r.error_dd_da.unwrap() < 1e-9, "tick {}: {:?}", r.tick, r.error_dd_da);
+        }
+        // The blob lives in [0, ~0.45]; the far-right blocks never see a
+        // changed row on warm un-rebalanced ticks, so at least one warm
+        // tick must score cache hits.
+        let hits = rep.mean_cache_hit_rate();
+        assert!(hits > 0.0, "no cache hits across warm ticks");
+    }
+
+    #[test]
+    fn tick_record_serializes_to_one_json_object() {
+        let mut geom = IntervalGeometry::new(64, 4);
+        geom.drift = DriftLayout::Stationary(ObsLayout::Uniform);
+        let mut src = DriftSource::new(&geom, 30, 2, 2).unwrap();
+        let mut lines = Vec::new();
+        run_stream(&geom, &mut src, &StreamOptions::default(), |r| {
+            lines.push(r.to_json().to_string());
+        })
+        .unwrap();
+        assert_eq!(lines.len(), 2);
+        for (k, line) in lines.iter().enumerate() {
+            let doc = Json::parse(line).unwrap();
+            assert_eq!(doc.get("tick").and_then(Json::as_usize), Some(k));
+            assert_eq!(doc.get("m").and_then(Json::as_usize), Some(30));
+            assert_eq!(doc.get("p").and_then(Json::as_usize), Some(4));
+            assert!(doc.get("census").unwrap().as_arr().unwrap().len() == 4);
+            assert!(doc.get("t_wall_s").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+}

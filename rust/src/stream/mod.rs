@@ -1,0 +1,30 @@
+//! Streaming incremental assimilation: observation changelog, O(|delta|)
+//! census, dirty-block solves and the serve tick loop.
+//!
+//! The K-cycle driver ([`crate::harness::cycles`]) regenerates, recounts
+//! and re-extracts everything every cycle. This subsystem is the
+//! incremental counterpart for feeds where consecutive observation sets
+//! differ by a small delta:
+//!
+//! * [`changelog`] — [`ObsDelta`] (added/removed/moved records with a
+//!   monotonic tick), the canonical [`RecordStore`] and the
+//!   [`IncrementalCensus`], bitwise-identical to a full recount;
+//! * [`source`] — [`DeltaSource`] producers: native drift generators
+//!   ([`DriftSource`]), K-cycle replay ([`ReplaySource`]) and external
+//!   JSONL ([`JsonlSource`]);
+//! * [`engine`] — the [`StreamEngine`] tick loop tying the changelog to
+//!   [`crate::decomp::BlockEpoch`]-tracked dirty-block solves on the
+//!   persistent [`crate::coordinator::WorkerPool`], with per-tick
+//!   [`TickRecord`] telemetry (the `serve` CLI subcommand's JSONL).
+//!
+//! The equivalence the tier-1 `stream` tests pin: a K-tick run over a
+//! [`ReplaySource`] assimilates exactly what the K-cycle driver does —
+//! bitwise at overlap 0 with warm starts off, within 1e-9 otherwise.
+
+pub mod changelog;
+pub mod engine;
+pub mod source;
+
+pub use changelog::{diff, IncrementalCensus, ObsDelta, RecordStore};
+pub use engine::{run_stream, StreamEngine, StreamOptions, StreamReport, TickRecord};
+pub use source::{DeltaSource, DriftSource, JsonlSource, ReplaySource};

@@ -1,0 +1,255 @@
+//! Where ticks come from: native drift generators, replayed K-cycle
+//! observation sets, and JSONL stdin.
+//!
+//! A [`DeltaSource`] yields one [`ObsDelta`] per tick (or `None` when the
+//! stream ends). Three implementations:
+//!
+//! * [`DriftSource`] — the geometry's native per-row stream
+//!   ([`crate::decomp::RecordGeometry::native_stream`]): row identities
+//!   persist across ticks, so consecutive snapshots diff row-by-row into
+//!   sparse `moved` sets — the delta a real instrument feed would emit.
+//! * [`ReplaySource`] — regenerates the K-cycle driver's
+//!   [`crate::decomp::Geometry::cycle_obs`] sets and multiset-diffs
+//!   consecutive ones; a K-tick streaming run over this source assimilates
+//!   exactly the K-cycle driver's observations (the stream ≡ cycle
+//!   equivalence tests run through it).
+//! * [`JsonlSource`] — external deltas, one JSON object per line (the
+//!   `serve --source -` ingest path); records parse through
+//!   [`crate::decomp::RecordGeometry::rec_from_json`].
+
+use super::changelog::{diff, ObsDelta};
+use crate::decomp::{cycle_phase, RecordGeometry};
+use crate::util::Json;
+
+/// One tick's worth of observation changes, pulled on demand.
+pub trait DeltaSource<G: RecordGeometry> {
+    /// The delta for `tick` (0-based, strictly increasing across calls);
+    /// `None` when the stream is exhausted.
+    fn next_delta(&mut self, geom: &G, tick: u64) -> anyhow::Result<Option<ObsDelta<G::Rec>>>;
+}
+
+/// Native streaming drift: `m` persistent observation rows whose
+/// positions evolve with the drift phase. Tick `k` of `ticks` samples
+/// phase t = k/(ticks−1), matching the K-cycle drift schedule.
+pub struct DriftSource<G: RecordGeometry> {
+    gen: Box<dyn FnMut(f64) -> Vec<G::Rec>>,
+    prev: Vec<G::Rec>,
+    ticks: usize,
+}
+
+impl<G: RecordGeometry> DriftSource<G> {
+    /// `None` if the geometry has no native stream for its drift family
+    /// (4-D windows replay [`ReplaySource`] instead).
+    pub fn new(geom: &G, m: usize, seed: u64, ticks: usize) -> Option<Self> {
+        geom.native_stream(m, seed).map(|gen| DriftSource { gen, prev: Vec::new(), ticks })
+    }
+}
+
+impl<G: RecordGeometry> DeltaSource<G> for DriftSource<G> {
+    fn next_delta(&mut self, geom: &G, tick: u64) -> anyhow::Result<Option<ObsDelta<G::Rec>>> {
+        if tick as usize >= self.ticks {
+            return Ok(None);
+        }
+        let next = (self.gen)(cycle_phase(tick as usize, self.ticks));
+        let delta = if tick == 0 {
+            ObsDelta { tick, added: next.clone(), removed: Vec::new(), moved: Vec::new() }
+        } else {
+            anyhow::ensure!(
+                next.len() == self.prev.len(),
+                "native stream changed row count ({} -> {})",
+                self.prev.len(),
+                next.len()
+            );
+            // Row identities persist: a changed row is a move, full stop.
+            let moved = self
+                .prev
+                .iter()
+                .zip(&next)
+                .filter(|(old, new)| geom.rec_key(old) != geom.rec_key(new))
+                .map(|(old, new)| (old.clone(), new.clone()))
+                .collect();
+            ObsDelta { tick, added: Vec::new(), removed: Vec::new(), moved }
+        };
+        self.prev = next;
+        Ok(Some(delta))
+    }
+}
+
+/// Replay of the K-cycle driver's per-cycle observation sets as a
+/// changelog: tick `k` multiset-diffs `cycle_obs(m, seed, k, ticks)`
+/// against the previous tick's set.
+pub struct ReplaySource<G: RecordGeometry> {
+    m: usize,
+    seed: u64,
+    ticks: usize,
+    prev: Vec<G::Rec>,
+}
+
+impl<G: RecordGeometry> ReplaySource<G> {
+    pub fn new(m: usize, seed: u64, ticks: usize) -> Self {
+        ReplaySource { m, seed, ticks, prev: Vec::new() }
+    }
+}
+
+impl<G: RecordGeometry> DeltaSource<G> for ReplaySource<G> {
+    fn next_delta(&mut self, geom: &G, tick: u64) -> anyhow::Result<Option<ObsDelta<G::Rec>>> {
+        if tick as usize >= self.ticks {
+            return Ok(None);
+        }
+        let next = geom.obs_records(&geom.cycle_obs(self.m, self.seed, tick as usize, self.ticks));
+        let delta = diff(&self.prev, &next, |r| geom.rec_key(r), tick);
+        self.prev = next;
+        Ok(Some(delta))
+    }
+}
+
+/// External deltas as JSON Lines, one object per tick:
+///
+/// ```json
+/// {"tick": 3, "add": [REC, ...], "remove": [REC, ...], "move": [[REC, REC], ...]}
+/// ```
+///
+/// where `REC` is the geometry's record wire form (`[x, value, var]` in
+/// 1-D, `[x, y, value, var]` in 2-D, `[level, x, value, var]` in 4-D).
+/// All three change keys are optional; blank lines are skipped. Ticks
+/// must arrive in order (each line's `tick` must equal the engine's).
+pub struct JsonlSource<Rd> {
+    reader: Rd,
+}
+
+impl<Rd: std::io::BufRead> JsonlSource<Rd> {
+    pub fn new(reader: Rd) -> Self {
+        JsonlSource { reader }
+    }
+
+    fn next_line(&mut self) -> anyhow::Result<Option<String>> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Ok(None);
+            }
+            if !line.trim().is_empty() {
+                return Ok(Some(line));
+            }
+        }
+    }
+}
+
+fn parse_rec<G: RecordGeometry>(geom: &G, j: &Json) -> anyhow::Result<G::Rec> {
+    geom.rec_from_json(j).ok_or_else(|| anyhow::anyhow!("malformed observation record: {j}"))
+}
+
+impl<G: RecordGeometry, Rd: std::io::BufRead> DeltaSource<G> for JsonlSource<Rd> {
+    fn next_delta(&mut self, geom: &G, tick: u64) -> anyhow::Result<Option<ObsDelta<G::Rec>>> {
+        let Some(line) = self.next_line()? else {
+            return Ok(None);
+        };
+        let doc = Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("tick {tick}: bad JSONL delta: {e}"))?;
+        let declared = doc
+            .get("tick")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("tick {tick}: delta is missing \"tick\""))?;
+        anyhow::ensure!(
+            declared as u64 == tick,
+            "out-of-order delta: got tick {declared}, expected {tick}"
+        );
+        let mut delta = ObsDelta::empty(tick);
+        if let Some(arr) = doc.get("add").and_then(Json::as_arr) {
+            for j in arr {
+                delta.added.push(parse_rec(geom, j)?);
+            }
+        }
+        if let Some(arr) = doc.get("remove").and_then(Json::as_arr) {
+            for j in arr {
+                delta.removed.push(parse_rec(geom, j)?);
+            }
+        }
+        if let Some(arr) = doc.get("move").and_then(Json::as_arr) {
+            for j in arr {
+                let pair = j.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                    anyhow::anyhow!("tick {tick}: \"move\" entries are [old, new] pairs")
+                })?;
+                delta.moved.push((parse_rec(geom, &pair[0])?, parse_rec(geom, &pair[1])?));
+            }
+        }
+        Ok(Some(delta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::IntervalGeometry;
+    use crate::domain::DriftLayout;
+
+    #[test]
+    fn drift_source_emits_cold_snapshot_then_sparse_moves() {
+        let mut geom = IntervalGeometry::new(64, 4);
+        geom.drift = DriftLayout::TranslatingBlob;
+        let mut src = DriftSource::new(&geom, 40, 7, 5).unwrap();
+        let d0 = src.next_delta(&geom, 0).unwrap().unwrap();
+        assert_eq!(d0.added.len(), 40);
+        assert!(d0.removed.is_empty() && d0.moved.is_empty());
+        let d1 = src.next_delta(&geom, 1).unwrap().unwrap();
+        assert!(d1.added.is_empty() && d1.removed.is_empty());
+        // Only the blob half moves; the uniform half's rows are pinned.
+        assert!(!d1.moved.is_empty());
+        assert!(d1.moved.len() <= 20, "moved {} of 40", d1.moved.len());
+        for k in 2..5 {
+            assert!(src.next_delta(&geom, k).unwrap().is_some());
+        }
+        assert!(src.next_delta(&geom, 5).unwrap().is_none());
+    }
+
+    #[test]
+    fn stationary_drift_source_emits_empty_warm_deltas() {
+        let geom = IntervalGeometry::new(64, 4); // default Stationary layout
+        let mut src = DriftSource::new(&geom, 30, 3, 4).unwrap();
+        let d0 = src.next_delta(&geom, 0).unwrap().unwrap();
+        assert_eq!(d0.added.len(), 30);
+        for k in 1..4 {
+            let d = src.next_delta(&geom, k).unwrap().unwrap();
+            assert!(d.is_empty(), "tick {k}: {} changes", d.changes());
+        }
+    }
+
+    #[test]
+    fn replay_source_accumulates_to_each_cycles_observations() {
+        use crate::stream::RecordStore;
+        let mut geom = IntervalGeometry::new(64, 4);
+        geom.drift = DriftLayout::RotatingBand;
+        let mut src: ReplaySource<IntervalGeometry> = ReplaySource::new(25, 11, 3);
+        let mut store: RecordStore<(f64, f64, f64)> = RecordStore::new();
+        for k in 0..3 {
+            let d = src.next_delta(&geom, k).unwrap().unwrap();
+            store.apply(&d, |r| geom.rec_key(r)).unwrap();
+            let want = geom.obs_records(&geom.cycle_obs(25, 11, k as usize, 3));
+            let got = store.records();
+            // Store iterates in key order == the canonical set order.
+            assert_eq!(got, want, "tick {k}");
+        }
+        assert!(src.next_delta(&geom, 3).unwrap().is_none());
+    }
+
+    #[test]
+    fn jsonl_source_parses_and_enforces_tick_order() {
+        let geom = IntervalGeometry::new(32, 2);
+        let lines = "\
+{\"tick\":0,\"add\":[[0.25,1.5,0.01],[0.75,0.5,0.01]]}\n\
+\n\
+{\"tick\":1,\"move\":[[[0.25,1.5,0.01],[0.3,1.5,0.01]]],\"remove\":[[0.75,0.5,0.01]]}\n";
+        let mut src = JsonlSource::new(lines.as_bytes());
+        let d0: ObsDelta<(f64, f64, f64)> = src.next_delta(&geom, 0).unwrap().unwrap();
+        assert_eq!(d0.added, vec![(0.25, 1.5, 0.01), (0.75, 0.5, 0.01)]);
+        let d1 = src.next_delta(&geom, 1).unwrap().unwrap();
+        assert_eq!(d1.moved, vec![((0.25, 1.5, 0.01), (0.3, 1.5, 0.01))]);
+        assert_eq!(d1.removed, vec![(0.75, 0.5, 0.01)]);
+        assert!(src.next_delta(&geom, 2).unwrap().is_none());
+
+        let mut bad = JsonlSource::new("{\"tick\":4,\"add\":[]}\n".as_bytes());
+        let r: anyhow::Result<Option<ObsDelta<(f64, f64, f64)>>> = bad.next_delta(&geom, 0);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Streaming-engine integration properties (the ISSUE acceptance checks):
+//!
+//! * the incremental census is **bitwise identical** to a full recount
+//!   after every delta, across all drift generators × seeds in 1-D, 2-D
+//!   and 4-D (both the replayed-cycle and native-stream delta paths);
+//! * a K-tick streaming run over the replay source assimilates exactly
+//!   the K-cycle driver's observations and reproduces its analyses —
+//!   bitwise at overlap = 0, within 1e-9 otherwise — along with its
+//!   per-cycle policy decisions, dirty counts and iteration counts;
+//! * a no-op delta tick performs zero block re-extractions and zero
+//!   local factorizations, verified on the solve counters through the
+//!   external JSONL ingest path.
+
+use dydd_da::config::ExperimentConfig;
+use dydd_da::decomp::{BoxGeometry, IntervalGeometry, RecordGeometry, WindowGeometry};
+use dydd_da::domain::{DriftLayout, ObsLayout};
+use dydd_da::domain2d::{DriftLayout2d, ObsLayout2d};
+use dydd_da::harness::run_cycles_on;
+use dydd_da::linalg::mat::dist2;
+use dydd_da::stream::{
+    run_stream, DeltaSource, DriftSource, IncrementalCensus, JsonlSource, RecordStore,
+    ReplaySource, StreamOptions,
+};
+
+/// Drain `source`, folding every delta into a standing record store and
+/// incremental census, and assert both against the ground truth each
+/// tick: the census must equal a full recount bitwise, and (when the
+/// source replays `cycle_obs`) the store must rebuild the canonical
+/// observation records exactly.
+fn assert_census_tracks_recount<G, S>(geom: &G, source: &mut S, check_records: bool)
+where
+    G: RecordGeometry,
+    S: DeltaSource<G>,
+{
+    let part = geom.initial_partition();
+    let mut store: RecordStore<G::Rec> = RecordStore::new();
+    let mut census = IncrementalCensus::new(geom.p());
+    let mut tick = 0u64;
+    while let Some(delta) = source.next_delta(geom, tick).unwrap() {
+        store.apply(&delta, |r| geom.rec_key(r)).unwrap();
+        census.apply(&delta, |r| geom.rec_owner(&part, r)).unwrap();
+        let obs = geom.obs_from_records(store.records());
+        assert_eq!(
+            census.counts(),
+            geom.census(&part, &obs).as_slice(),
+            "tick {tick}: incremental census != full recount"
+        );
+        if check_records {
+            assert_eq!(store.records(), geom.obs_records(&obs), "tick {tick}");
+        }
+        tick += 1;
+    }
+    assert!(tick > 0, "source emitted no ticks");
+}
+
+#[test]
+fn prop_census_matches_recount_1d_all_drifts() {
+    let drifts = [
+        DriftLayout::TranslatingBlob,
+        DriftLayout::RotatingBand,
+        DriftLayout::AppearingCluster,
+        DriftLayout::Stationary(ObsLayout::Cluster),
+    ];
+    for drift in drifts {
+        for seed in 0..6u64 {
+            let mut geom = IntervalGeometry::new(96, 4);
+            geom.drift = drift;
+            let mut replay: ReplaySource<IntervalGeometry> = ReplaySource::new(110, seed, 5);
+            assert_census_tracks_recount(&geom, &mut replay, true);
+            if let Some(mut native) = DriftSource::new(&geom, 110, seed, 5) {
+                assert_census_tracks_recount(&geom, &mut native, false);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_census_matches_recount_2d_all_drifts() {
+    let drifts = [
+        DriftLayout2d::TranslatingBlob,
+        DriftLayout2d::RotatingBand,
+        DriftLayout2d::AppearingCluster,
+        DriftLayout2d::Stationary(ObsLayout2d::GaussianBlob),
+    ];
+    for drift in drifts {
+        for seed in 0..4u64 {
+            let mut geom = BoxGeometry::new(24, 2, 2);
+            geom.drift = drift;
+            let mut replay: ReplaySource<BoxGeometry> = ReplaySource::new(90, seed, 4);
+            assert_census_tracks_recount(&geom, &mut replay, true);
+            if let Some(mut native) = DriftSource::new(&geom, 90, seed, 4) {
+                assert_census_tracks_recount(&geom, &mut native, false);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_census_matches_recount_4d_all_drifts() {
+    // 4-D windows replay cycle_obs (no native stream); the drift moves
+    // the observation density over the time axis.
+    let drifts = [
+        DriftLayout::TranslatingBlob,
+        DriftLayout::RotatingBand,
+        DriftLayout::AppearingCluster,
+        DriftLayout::Stationary(ObsLayout::Uniform),
+    ];
+    for drift in drifts {
+        for seed in 0..4u64 {
+            let mut geom = WindowGeometry::new(12, 8, 4);
+            geom.drift = drift;
+            assert!(
+                DriftSource::new(&geom, 100, seed, 4).is_none(),
+                "4-D windows are expected to fall back to replay"
+            );
+            let mut replay: ReplaySource<WindowGeometry> = ReplaySource::new(100, seed, 4);
+            assert_census_tracks_recount(&geom, &mut replay, true);
+        }
+    }
+}
+
+/// The streaming options that make a replay-sourced run the cycle
+/// driver's equal: same policy, chained background, cold-started Schwarz
+/// iterations (warm starts change the iterate trajectory).
+fn parity_opts(cfg: &ExperimentConfig) -> StreamOptions {
+    StreamOptions {
+        policy: cfg.cycle_policy,
+        dydd: cfg.dydd,
+        schwarz: cfg.schwarz.clone(),
+        backend: cfg.backend,
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        feed_forward: true,
+        warm_start: false,
+        force_cold: false,
+        with_baseline: false,
+    }
+}
+
+/// Run both drivers over the same (geometry, config) and compare: every
+/// per-tick decision and count must match, and the final analysis must
+/// agree bitwise (overlap = 0) or to 1e-9.
+fn assert_stream_equals_cycles<G: RecordGeometry>(
+    geom: &G,
+    cfg: &ExperimentConfig,
+    bitwise: bool,
+) {
+    let cyc = run_cycles_on(geom, cfg, false).unwrap();
+    let mut src: ReplaySource<G> = ReplaySource::new(cfg.m, cfg.seed, cfg.cycles);
+    let rep = run_stream(geom, &mut src, &parity_opts(cfg), |_| {}).unwrap();
+    assert_eq!(rep.records.len(), cyc.records.len());
+    for (t, c) in rep.records.iter().zip(&cyc.records) {
+        assert_eq!(t.tick as usize, c.cycle);
+        assert_eq!(
+            t.e_before.to_bits(),
+            c.balance_before.to_bits(),
+            "tick {}: e_before {} != {}",
+            t.tick,
+            t.e_before,
+            c.balance_before
+        );
+        assert_eq!(t.e_after.to_bits(), c.balance_after.to_bits(), "tick {}", t.tick);
+        assert_eq!(t.rebalanced, c.rebalanced, "tick {}", t.tick);
+        assert_eq!(t.partition_changed, c.partition_changed, "tick {}", t.tick);
+        assert_eq!(t.migration_volume, c.migration_volume, "tick {}", t.tick);
+        assert_eq!(t.dirty_blocks, c.dirty_blocks, "tick {}", t.tick);
+        assert_eq!(t.extracted + t.refreshed + t.retained, t.p, "tick {}", t.tick);
+        assert_eq!(t.iters, c.iters, "tick {}", t.tick);
+        assert!(t.converged, "tick {} did not converge", t.tick);
+    }
+    if bitwise {
+        assert_eq!(rep.x, cyc.x, "analyses diverged bitwise");
+    } else {
+        let d = dist2(&rep.x, &cyc.x);
+        assert!(d <= 1e-9, "analyses diverged: dist2 = {d:.3e}");
+    }
+}
+
+#[test]
+fn stream_equals_cycle_driver_bitwise_1d() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 128;
+    cfg.m = 300;
+    cfg.p = 4;
+    cfg.cycles = 6;
+    cfg.schwarz.overlap = 0;
+    cfg.seed = 17;
+    cfg.drift = DriftLayout::TranslatingBlob;
+    assert_stream_equals_cycles(&cfg.interval_geometry(), &cfg, true);
+}
+
+#[test]
+fn stream_equals_cycle_driver_with_overlap_1d() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 128;
+    cfg.m = 260;
+    cfg.p = 4;
+    cfg.cycles = 5;
+    cfg.schwarz.overlap = 2;
+    cfg.seed = 23;
+    cfg.drift = DriftLayout::RotatingBand;
+    assert_stream_equals_cycles(&cfg.interval_geometry(), &cfg, false);
+}
+
+#[test]
+fn stream_equals_cycle_driver_bitwise_2d() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dim = 2;
+    cfg.n = 24;
+    cfg.m = 150;
+    cfg.px = 2;
+    cfg.py = 2;
+    cfg.cycles = 4;
+    cfg.schwarz.overlap = 0;
+    cfg.seed = 5;
+    cfg.drift2d = DriftLayout2d::TranslatingBlob;
+    assert_stream_equals_cycles(&cfg.box_geometry(), &cfg, true);
+}
+
+#[test]
+fn stream_equals_cycle_driver_bitwise_4d() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dim = 4;
+    cfg.n = 12;
+    cfg.steps = 8;
+    cfg.p = 4;
+    cfg.m = 160;
+    cfg.cycles = 4;
+    cfg.schwarz.overlap = 0;
+    cfg.seed = 31;
+    cfg.drift = DriftLayout::TranslatingBlob;
+    assert_stream_equals_cycles(&cfg.window_geometry(), &cfg, true);
+}
+
+#[test]
+fn noop_jsonl_delta_tick_performs_zero_work() {
+    // Ingest through the external JSONL path: tick 0 installs eight
+    // observations, ticks 1-2 are empty deltas. With a fixed background,
+    // the warm ticks must be pure cache hits — zero re-extractions, zero
+    // factorizations (the acceptance counter check end to end).
+    let geom = IntervalGeometry::new(64, 4);
+    let mut lines = String::from("{\"tick\":0,\"add\":[");
+    for i in 0..8 {
+        if i > 0 {
+            lines.push(',');
+        }
+        let x = (i as f64 + 0.5) / 8.0;
+        lines.push_str(&format!("[{x},1.25,0.01]"));
+    }
+    lines.push_str("]}\n{\"tick\":1}\n{\"tick\":2}\n");
+    let opts = StreamOptions {
+        dydd: false,
+        feed_forward: false,
+        ..StreamOptions::default()
+    };
+    let mut src = JsonlSource::new(lines.as_bytes());
+    let rep = run_stream(&geom, &mut src, &opts, |_| {}).unwrap();
+    assert_eq!(rep.records.len(), 3);
+    assert!(rep.all_converged());
+    assert_eq!(rep.records[0].m, 8);
+    assert_eq!(rep.records[0].extracted, 4);
+    for r in &rep.records[1..] {
+        assert_eq!(r.dirty_blocks, 0, "tick {}: dirty blocks on a no-op delta", r.tick);
+        assert_eq!(r.extracted, 0, "tick {}: re-extracted a block", r.tick);
+        assert_eq!(r.factorizations, 0, "tick {}: paid a factorization", r.tick);
+        assert_eq!(r.refreshed, 0);
+        assert_eq!(r.retained, 4);
+        assert_eq!(r.cache_hit_rate, 1.0);
+    }
+    assert_eq!(rep.total_factorizations(), 4);
+}
