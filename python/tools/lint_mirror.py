@@ -1,0 +1,420 @@
+#!/usr/bin/env python3
+"""Exact-arithmetic mirror of `cargo xtask lint` (xtask/src/{lex,rules}.rs).
+
+No Rust toolchain exists in the authoring container, so the lint's scanner
+and all five rules are ported line-for-line here and run against the real
+tree plus the fixture corpus; CI then re-runs the Rust implementation.
+Keep in sync with xtask when adding rules.
+
+Run:  python3 python/tools/lint_mirror.py            # lint rust/src/**
+      python3 python/tools/lint_mirror.py --check-fixtures
+"""
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+NO_PARTIAL_CMP = "no-partial-cmp-on-records"
+NO_WALL_CLOCK = "no-wall-clock-in-sim"
+NO_DENSE_ALLOC = "no-dense-alloc-on-sparse-path"
+NO_UNWRAP = "no-unwrap-in-lib"
+GEOMETRY_REGISTRATION = "geometry-registration"
+WAIVER_SYNTAX = "waiver-syntax"
+RULES = [NO_PARTIAL_CMP, NO_WALL_CLOCK, NO_DENSE_ALLOC, NO_UNWRAP, GEOMETRY_REGISTRATION]
+
+WALL_CLOCK_ALLOWED = ["rust/src/util/timer.rs", "rust/src/dydd/", "rust/src/coordinator/"]
+SPARSE_PATH = ["rust/src/linalg/sparse.rs", "rust/src/ddkf/local.rs", "rust/src/stream/"]
+
+
+class Line:
+    def __init__(self):
+        self.code = []
+        self.comment = []
+        self.in_test = False
+
+
+class SourceFile:
+    def __init__(self, path, lines, waivers, bad_waivers):
+        self.path = path
+        self.lines = lines
+        self.waivers = waivers  # (rule, reason, file_scoped, at, target)
+        self.bad_waivers = bad_waivers  # (at, why)
+
+    def waived(self, rule, line):
+        return any(
+            w[0] == rule and (w[2] or w[4] == line) for w in self.waivers
+        )
+
+
+def is_ident(c):
+    return c.isalnum() or c == "_"
+
+
+def literal_prefix(chars, i):
+    c = chars[i]
+    if c == '"':
+        return (1, 0, False)
+    if c in ("r", "b"):
+        j = i + 1
+        if c == "b" and j < len(chars) and chars[j] == '"':
+            return (2, 0, False)
+        if c == "b":
+            if j >= len(chars) or chars[j] != "r":
+                return None
+            j += 1
+        hashes = 0
+        while j < len(chars) and chars[j] == "#":
+            hashes += 1
+            j += 1
+        if j < len(chars) and chars[j] == '"':
+            return (j + 1 - i, hashes, True)
+    return None
+
+
+def is_char_literal(chars, i):
+    if i + 1 >= len(chars):
+        return False
+    nxt = chars[i + 1]
+    if nxt == "\\":
+        return True
+    if is_ident(nxt):
+        return i + 2 < len(chars) and chars[i + 2] == "'"
+    return True
+
+
+def scan(path, src):
+    chars = list(src)
+    lines = []
+    cur = Line()
+    mode = "code"
+    hashes = 0
+    depth = 0
+    i = 0
+    n = len(chars)
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            lines.append(cur)
+            cur = Line()
+            i += 1
+            continue
+        if mode == "code":
+            prev_ident = i > 0 and is_ident(chars[i - 1])
+            lit = None if prev_ident else literal_prefix(chars, i)
+            if c == "/" and i + 1 < n and chars[i + 1] == "/":
+                i += 2
+                while i < n and chars[i] != "\n":
+                    cur.comment.append(chars[i])
+                    i += 1
+            elif c == "/" and i + 1 < n and chars[i + 1] == "*":
+                mode, depth = "block", 1
+                i += 2
+            elif lit is not None:
+                adv, hashes, raw = lit
+                cur.code.append('"')
+                mode = "rawstr" if raw else "str"
+                i += adv
+            elif c == "'":
+                cur.code.append("'")
+                if is_char_literal(chars, i):
+                    mode = "chr"
+                i += 1
+            else:
+                cur.code.append(c)
+                i += 1
+        elif mode == "str":
+            if c == "\\":
+                if i + 1 < n and chars[i + 1] == "\n":
+                    lines.append(cur)
+                    cur = Line()
+                i += 2
+            elif c == '"':
+                cur.code.append('"')
+                mode = "code"
+                i += 1
+            else:
+                i += 1
+        elif mode == "rawstr":
+            tail = chars[i + 1 : i + 1 + hashes]
+            if c == '"' and len(tail) >= hashes and all(h == "#" for h in tail):
+                cur.code.append('"')
+                mode = "code"
+                i += 1 + hashes
+            else:
+                i += 1
+        elif mode == "chr":
+            if c == "\\":
+                i += 2
+            elif c == "'":
+                cur.code.append("'")
+                mode = "code"
+                i += 1
+            else:
+                i += 1
+        else:  # block comment
+            if c == "*" and i + 1 < n and chars[i + 1] == "/":
+                depth -= 1
+                mode = "code" if depth == 0 else "block"
+                i += 2
+            elif c == "/" and i + 1 < n and chars[i + 1] == "*":
+                depth += 1
+                i += 2
+            else:
+                cur.comment.append(c)
+                i += 1
+    if cur.code or cur.comment:
+        lines.append(cur)
+    for ln in lines:
+        ln.code = "".join(ln.code)
+        ln.comment = "".join(ln.comment)
+    mark_test_regions(lines)
+    waivers, bad = collect_waivers(lines)
+    return SourceFile(path, lines, waivers, bad)
+
+
+def mark_test_regions(lines):
+    depth = 0
+    close_at = []
+    pending = False
+    for line in lines:
+        code = line.code
+        if "#[cfg(test)]" in code or "#[cfg(all(test" in code or "#[test]" in code:
+            pending = True
+        in_test = bool(close_at)
+        for c in code:
+            if c == "{":
+                depth += 1
+                if pending:
+                    close_at.append(depth)
+                    pending = False
+                    in_test = True
+            elif c == "}":
+                if close_at and close_at[-1] == depth:
+                    close_at.pop()
+                depth -= 1
+        line.in_test = in_test or bool(close_at)
+
+
+def collect_waivers(lines):
+    waivers, bad = [], []
+    for at, line in enumerate(lines):
+        comment = line.comment
+        pos = comment.find("lint:allow")
+        if pos < 0:
+            continue
+        rest = comment[pos + len("lint:allow") :]
+        file_scoped = rest.startswith("-file")
+        if file_scoped:
+            rest = rest[len("-file") :]
+        if not rest.startswith("("):
+            bad.append((at, "expected `(` after lint:allow"))
+            continue
+        rest = rest[1:]
+        close = rest.find(")")
+        if close < 0:
+            bad.append((at, "unclosed `(` in lint:allow"))
+            continue
+        rule = rest[:close].strip()
+        reason = rest[close + 1 :].strip()
+        if not reason:
+            bad.append((at, f"waiver for `{rule}` has no reason"))
+            continue
+        target = at
+        if not line.code.strip():
+            for j in range(at + 1, len(lines)):
+                if lines[j].code.strip():
+                    target = j
+                    break
+        waivers.append((rule, reason, file_scoped, at, target))
+    return waivers, bad
+
+
+def token_positions(code, tok):
+    out = []
+    start = 0
+    while True:
+        at = code.find(tok, start)
+        if at < 0:
+            return out
+        before_ok = at == 0 or not is_ident(code[at - 1])
+        end = at + len(tok)
+        after_ok = end >= len(code) or not is_ident(code[end])
+        if before_ok and after_ok:
+            out.append(at)
+        start = at + len(tok)
+
+
+def has_token(code, tok):
+    return bool(token_positions(code, tok))
+
+
+def has_token_seq(code, tok):
+    start = 0
+    while True:
+        at = code.find(tok, start)
+        if at < 0:
+            return False
+        if at == 0 or not is_ident(code[at - 1]):
+            return True
+        start = at + len(tok)
+
+
+def geometry_impls(code):
+    names = []
+    if "impl" not in code:
+        return names
+    for trait_name in ["Geometry", "RecordGeometry"]:
+        for at in token_positions(code, trait_name):
+            rest = code[at + len(trait_name) :]
+            if not rest.startswith(" for "):
+                continue
+            rest = rest[len(" for ") :]
+            name = ""
+            for c in rest:
+                if is_ident(c):
+                    name += c
+                else:
+                    break
+            if name:
+                names.append(name)
+    return names
+
+
+def lint_file(sf):
+    out = []
+    for at, why in sf.bad_waivers:
+        out.append((sf.path, at + 1, WAIVER_SYNTAX, why))
+    for rule, _, _, at, _ in sf.waivers:
+        if rule not in RULES:
+            out.append((sf.path, at + 1, WAIVER_SYNTAX, f"unknown rule `{rule}`"))
+    wall_clock_scoped = not any(sf.path.startswith(p) for p in WALL_CLOCK_ALLOWED)
+    sparse_scoped = any(sf.path.startswith(p) for p in SPARSE_PATH)
+    unwrap_scoped = sf.path != "rust/src/main.rs"
+    for idx, line in enumerate(sf.lines):
+        if line.in_test:
+            continue
+        code = line.code
+
+        def flag(rule, msg):
+            if not sf.waived(rule, idx):
+                out.append((sf.path, idx + 1, rule, msg))
+
+        if has_token(code, "partial_cmp"):
+            flag(NO_PARTIAL_CMP, "partial_cmp breaks on NaN — total_cmp/f64_key")
+        if wall_clock_scoped:
+            for tok in ["Instant", "SystemTime"]:
+                if has_token(code, tok):
+                    flag(NO_WALL_CLOCK, f"{tok} outside util::timer/dydd/coordinator")
+        if sparse_scoped:
+            for tok in ["Mat::zeros", "Mat::identity"]:
+                if has_token_seq(code, tok):
+                    flag(NO_DENSE_ALLOC, f"{tok} on the sparse path")
+        if unwrap_scoped:
+            if ".unwrap()" in code:
+                flag(NO_UNWRAP, "unwrap() on a library path")
+            if has_token_seq(code, "panic!"):
+                flag(NO_UNWRAP, "panic! on a library path")
+    return out
+
+
+def lint_geometry_registration(files, registry, golden):
+    out = []
+    for sf in files:
+        for idx, line in enumerate(sf.lines):
+            if line.in_test:
+                continue
+            for name in geometry_impls(line.code):
+                if sf.waived(GEOMETRY_REGISTRATION, idx):
+                    continue
+                if name not in registry:
+                    out.append(
+                        (sf.path, idx + 1, GEOMETRY_REGISTRATION, f"`{name}` not in registry")
+                    )
+                if name not in golden:
+                    out.append(
+                        (sf.path, idx + 1, GEOMETRY_REGISTRATION, f"`{name}` not golden-covered")
+                    )
+    return out
+
+
+def walk(d):
+    out = []
+    for base, dirs, names in os.walk(d):
+        dirs.sort()
+        for name in sorted(names):
+            if name.endswith(".rs"):
+                out.append(os.path.join(base, name))
+    return out
+
+
+def read(p):
+    with open(p, encoding="utf-8") as f:
+        return f.read()
+
+
+def lint_tree():
+    files = []
+    for p in walk(os.path.join(ROOT, "rust", "src")):
+        rel = os.path.relpath(p, ROOT).replace(os.sep, "/")
+        files.append(scan(rel, read(p)))
+    registry = read(os.path.join(ROOT, "rust/src/decomp/registry.rs"))
+    golden = read(os.path.join(ROOT, "rust/tests/decomp_golden.rs"))
+    findings = []
+    for sf in files:
+        findings.extend(lint_file(sf))
+    findings.extend(lint_geometry_registration(files, registry, golden))
+    for path, ln, rule, msg in findings:
+        print(f"{path}:{ln}: [{rule}] {msg}")
+    print(f"lint mirror: {len(findings)} finding(s) in {len(files)} files")
+    return 1 if findings else 0
+
+
+def fixture_path(text):
+    at = text.find("lint:fixture-path(")
+    if at < 0:
+        return "rust/src/fixture.rs"
+    rest = text[at + len("lint:fixture-path(") :]
+    end = rest.find(")")
+    return rest[:end].strip() if end >= 0 else "rust/src/fixture.rs"
+
+
+def check_fixtures():
+    registry = read(os.path.join(ROOT, "rust/src/decomp/registry.rs"))
+    golden = read(os.path.join(ROOT, "rust/tests/decomp_golden.rs"))
+    failures = checked = 0
+    for p in walk(os.path.join(ROOT, "xtask", "fixtures")):
+        name = os.path.basename(p)
+        if name.endswith(".violate.rs"):
+            expect = name[: -len(".violate.rs")]
+        elif name.endswith(".ok.rs"):
+            expect = None
+        else:
+            print(f"SKIP {name}")
+            continue
+        text = read(p)
+        sf = scan(fixture_path(text), text)
+        findings = lint_file(sf)
+        findings.extend(lint_geometry_registration([sf], registry, golden))
+        checked += 1
+        rules_hit = {f[2] for f in findings}
+        if expect is None:
+            ok = not findings
+            why = f"expected clean, got {len(findings)}"
+        else:
+            ok = bool(findings) and rules_hit == {expect}
+            why = f"expected only `{expect}`, got {sorted(rules_hit)}"
+        if ok:
+            print(f"ok   {name}")
+        else:
+            print(f"FAIL {name}: {why}")
+            for f in findings:
+                print(f"     {f[0]}:{f[1]}: [{f[2]}] {f[3]}")
+            failures += 1
+    print(f"lint mirror --check-fixtures: {checked} fixtures, {failures} failure(s)")
+    return 1 if failures or not checked else 0
+
+
+if __name__ == "__main__":
+    if "--check-fixtures" in sys.argv[1:]:
+        sys.exit(check_fixtures())
+    sys.exit(lint_tree())

@@ -1,0 +1,299 @@
+#!/usr/bin/env python3
+"""Mirror of rust/src/coordinator/{protocol,model}.rs — the exhaustive
+interleaving checker for the leader/worker protocol replica.
+
+The container building this repo has no Rust toolchain, so (as with
+cycle_census_sim.py and friends) the Rust logic is validated by running an
+exact Python port of it. Keep this file in lock-step with the Rust
+checker: same states, same enabled-action rule, same verdicts. Run:
+
+    python3 python/tools/protocol_model_sim.py
+"""
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---- protocol.rs -----------------------------------------------------------
+
+SETUP, REFRESHB, RETAIN, SOLVE, SHUTDOWN = "Setup", "RefreshB", "Retain", "Solve", "Shutdown"
+READY, SOLUTION, FAILED = "Ready", "Solution", "Failed"
+
+
+class WorkerModel:
+    def __init__(self, wid):
+        self.id = wid
+        self.epoch = None
+        self.stopped = False
+
+    def key(self):
+        return (self.id, self.epoch, self.stopped)
+
+    def step(self, req):
+        kind, epoch = req
+        assert not self.stopped, "message delivered to a stopped worker"
+        if kind == SETUP:
+            self.epoch = epoch
+            return (READY, self.id, None)
+        if kind in (REFRESHB, RETAIN):
+            if self.epoch is not None:
+                return (READY, self.id, None)
+            self.stopped = True
+            return (FAILED, self.id, None)
+        if kind == SOLVE:
+            if self.epoch is not None:
+                return (SOLUTION, self.id, self.epoch)
+            self.stopped = True
+            return (FAILED, self.id, None)
+        if kind == SHUTDOWN:
+            self.stopped = True
+            return None
+        raise AssertionError(kind)
+
+
+class LeaderCache:
+    def __init__(self, p):
+        self.epochs = [None] * p
+
+    def key(self):
+        return tuple(self.epochs)
+
+    def admit(self, worker, task):
+        kind, epoch = task
+        if kind == SETUP:
+            self.epochs[worker] = epoch
+            return None
+        if kind in (REFRESHB, RETAIN):
+            if self.epochs[worker] is None:
+                return f"RefreshB/Retain for uncached block {worker}"
+            if self.epochs[worker] != epoch:
+                return f"block {worker}: cached epoch desync"
+        return None
+
+
+# ---- model.rs --------------------------------------------------------------
+
+ASSEMBLE, SOLVE_DEATH = "Assemble", "SolveDeath"
+COMPLETED, DIAGNOSED = "Completed", "Diagnosed"
+
+
+@dataclass
+class Scenario:
+    p: int
+    epochs: list  # [(tasks, phases)]
+    death: Optional[Tuple[int, str]] = None
+
+
+class Sim:
+    def __init__(self, sc):
+        self.workers = [WorkerModel(w) for w in range(sc.p)]
+        self.alive = [True] * sc.p
+        self.inbox = [deque() for _ in range(sc.p)]
+        self.outbox = [deque() for _ in range(sc.p)]
+        self.cache = LeaderCache(sc.p)
+        self.leader = ("Dispatch", 0)
+        self.advance_leader(sc)
+
+    def key(self):
+        return (
+            tuple(w.key() for w in self.workers),
+            tuple(self.alive),
+            tuple(tuple(q) for q in self.inbox),
+            tuple(tuple(q) for q in self.outbox),
+            self.cache.key(),
+            self.leader,
+        )
+
+    def clone(self, sc):
+        other = Sim.__new__(Sim)
+        other.workers = []
+        for w in self.workers:
+            nw = WorkerModel(w.id)
+            nw.epoch, nw.stopped = w.epoch, w.stopped
+            other.workers.append(nw)
+        other.alive = list(self.alive)
+        other.inbox = [deque(q) for q in self.inbox]
+        other.outbox = [deque(q) for q in self.outbox]
+        other.cache = LeaderCache(len(self.alive))
+        other.cache.epochs = list(self.cache.epochs)
+        other.leader = self.leader
+        return other
+
+    def finished(self, w):
+        return not self.alive[w] or self.workers[w].stopped
+
+    def end(self, verdict):
+        for w in range(len(self.workers)):
+            if self.alive[w] and not self.workers[w].stopped:
+                self.inbox[w].append((SHUTDOWN, None))
+        self.leader = ("Ended", verdict)
+
+    def advance_leader(self, sc):
+        while True:
+            state = self.leader
+            if state[0] == "Dispatch":
+                epoch = state[1]
+                tasks, _phases = sc.epochs[epoch]
+                for w, task in enumerate(tasks):
+                    if self.cache.admit(w, task) is not None or not self.alive[w]:
+                        self.end(DIAGNOSED)
+                        return
+                    self.inbox[w].append(task)
+                self.leader = ("AwaitReady", epoch, len(tasks))
+                return
+            if state[0] == "SendPhase":
+                epoch, phase = state[1], state[2]
+                _tasks, phases = sc.epochs[epoch]
+                if phase == len(phases):
+                    if epoch + 1 == len(sc.epochs):
+                        self.end(COMPLETED)
+                        return
+                    self.leader = ("Dispatch", epoch + 1)
+                    continue
+                for w in phases[phase]:
+                    if not self.alive[w]:
+                        self.end(DIAGNOSED)
+                        return
+                    self.inbox[w].append((SOLVE, None))
+                self.leader = ("AwaitSolutions", epoch, phase, len(phases[phase]))
+                return
+            return
+
+    def enabled(self, detect):
+        acts = []
+        for w in range(len(self.workers)):
+            if self.alive[w] and not self.workers[w].stopped and self.inbox[w]:
+                acts.append(("WorkerStep", w))
+        if self.leader[0] in ("AwaitReady", "AwaitSolutions"):
+            for w in range(len(self.workers)):
+                if self.outbox[w]:
+                    acts.append(("LeaderRecv", w))
+            drained = all(not q for q in self.outbox)
+            if detect and drained and any(self.finished(w) for w in range(len(self.workers))):
+                acts.append(("LeaderDetect",))
+        return acts
+
+    def apply(self, sc, act):
+        if act[0] == "WorkerStep":
+            w = act[1]
+            req = self.inbox[w].popleft()
+            dies = False
+            if sc.death is not None:
+                victim, point = sc.death
+                if point == ASSEMBLE:
+                    dies = victim == w and req[0] == SETUP
+                else:
+                    dies = victim == w and req[0] == SOLVE
+            if dies:
+                self.alive[w] = False
+                return
+            rep = self.workers[w].step(req)
+            if rep is not None:
+                self.outbox[w].append(rep)
+        elif act[0] == "LeaderRecv":
+            w = act[1]
+            rep = self.outbox[w].popleft()
+            kind = rep[0]
+            state = self.leader
+            if state[0] == "AwaitReady" and kind == READY:
+                self.leader = ("AwaitReady", state[1], state[2] - 1)
+            elif state[0] == "AwaitSolutions" and kind == SOLUTION:
+                _, worker, sol = rep
+                assert self.cache.epochs[worker] == sol, f"stale-epoch solution from {worker}"
+                self.leader = ("AwaitSolutions", state[1], state[2], state[3] - 1)
+            elif kind == FAILED:
+                self.end(DIAGNOSED)
+            else:
+                raise AssertionError(f"protocol violation: {rep} in {state}")
+            state = self.leader
+            if state[0] == "AwaitReady" and state[2] == 0:
+                self.leader = ("SendPhase", state[1], 0)
+                self.advance_leader(sc)
+            elif state[0] == "AwaitSolutions" and state[3] == 0:
+                self.leader = ("SendPhase", state[1], state[2] + 1)
+                self.advance_leader(sc)
+        else:
+            self.end(DIAGNOSED)
+
+
+def explore(sc, expect, detect):
+    for tasks, _ in sc.epochs:
+        assert len(tasks) == sc.p
+    visited = set()
+    terminals = 0
+    stack = [Sim(sc)]
+    while stack:
+        sim = stack.pop()
+        k = sim.key()
+        if k in visited:
+            continue
+        visited.add(k)
+        acts = sim.enabled(detect)
+        if not acts:
+            if sim.leader[0] == "Ended":
+                assert sim.leader[1] == expect, f"verdict {sim.leader[1]} != {expect}"
+                for w in range(sc.p):
+                    assert sim.finished(w), f"worker {w} still running at quiescence"
+                terminals += 1
+            else:
+                return None, f"deadlock: leader blocked in {sim.leader}"
+            continue
+        for act in acts:
+            nxt = sim.clone(sc)
+            nxt.apply(sc, act)
+            stack.append(nxt)
+    return (len(visited), terminals), None
+
+
+def check(sc, expect):
+    stats, err = explore(sc, expect, True)
+    assert err is None, err
+    return stats
+
+
+def setup_tasks(p, epoch):
+    return [(SETUP, epoch)] * p
+
+
+def main():
+    # Mirrors of the Rust #[test] scenarios, same order.
+    for phases in ([[0], [1]], [[0, 1]]):
+        stats = check(Scenario(2, [(setup_tasks(2, 0), phases)]), COMPLETED)
+        assert stats[1] >= 1 and stats[0] > 10, stats
+        print(f"solve dispatch {phases}: {stats[0]} states, {stats[1]} terminals")
+
+    sc = Scenario(
+        2,
+        [
+            (setup_tasks(2, 0), [[0], [1]]),
+            ([(RETAIN, 0), (REFRESHB, 0)], [[0], [1]]),
+        ],
+    )
+    print("epoch reuse:", check(sc, COMPLETED))
+
+    sc = Scenario(
+        2,
+        [
+            (setup_tasks(2, 0), [[0, 1]]),
+            ([(RETAIN, 1), (RETAIN, 0)], [[0, 1]]),
+        ],
+    )
+    print("epoch desync:", check(sc, DIAGNOSED))
+
+    sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]])], death=(1, ASSEMBLE))
+    print("death@assemble:", check(sc, DIAGNOSED))
+
+    for victim in range(2):
+        sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]])], death=(victim, SOLVE_DEATH))
+        print(f"death@solve victim={victim}:", check(sc, DIAGNOSED))
+
+    sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]])], death=(1, SOLVE_DEATH))
+    stats, err = explore(sc, DIAGNOSED, False)
+    assert err is not None and "deadlock" in err, (stats, err)
+    print("old leader (no detect):", err)
+
+    print("protocol model sim: all scenarios pass")
+
+
+if __name__ == "__main__":
+    main()

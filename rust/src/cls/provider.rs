@@ -59,6 +59,7 @@ pub trait RowProvider {
         let g = a.weighted_gram(&d);
         let rhs = a.at_db(&d, &b);
         Cholesky::new(&g)
+            // lint:allow(no-unwrap-in-lib) oracle path: non-SPD means a test-setup bug
             .unwrap_or_else(|e| panic!("{} normal matrix must be SPD: {e}", self.kind()))
             .solve(&rhs)
     }

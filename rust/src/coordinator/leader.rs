@@ -14,6 +14,18 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Best-effort text of a panic payload returned by [`JoinHandle::join`]
+/// (string literals and `format!`ed messages; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
 /// What each block needs this epoch — the streaming dirty-block protocol.
 ///
 /// `Extract` is the cold path (fresh restriction + factorization).
@@ -121,7 +133,9 @@ impl ParallelOutcome {
 pub struct WorkerPool {
     to_workers: Vec<mpsc::Sender<ToWorker>>,
     from_workers: mpsc::Receiver<ToLeader>,
-    handles: Vec<JoinHandle<()>>,
+    /// One slot per worker; `None` once the thread was joined (a dead
+    /// worker reaped mid-run by [`WorkerPool::reap_dead_workers`]).
+    handles: Vec<Option<JoinHandle<()>>>,
     backend: SolverBackend,
     /// Per-block cache the incremental protocol consults (all backends).
     cached: Vec<Option<CachedBlock>>,
@@ -138,7 +152,7 @@ impl WorkerPool {
             let leader_tx = to_leader.clone();
             let init =
                 WorkerInit { id, backend, artifacts_dir: artifacts_dir.clone() };
-            handles.push(std::thread::spawn(move || worker_main(init, rx, leader_tx)));
+            handles.push(Some(std::thread::spawn(move || worker_main(init, rx, leader_tx))));
         }
         let cached = (0..p).map(|_| None).collect();
         WorkerPool { to_workers, from_workers, handles, backend, cached }
@@ -150,6 +164,66 @@ impl WorkerPool {
 
     pub fn backend(&self) -> SolverBackend {
         self.backend
+    }
+
+    /// Join every worker thread that has exited mid-run and describe the
+    /// casualties ("worker 2 panicked: ..."); `None` if all are alive.
+    /// Workers only leave `worker_main` on `Shutdown`, on a send to a dead
+    /// leader, or by panicking — so a finished handle while an epoch is in
+    /// flight is always a death, never a benign exit.
+    fn reap_dead_workers(&mut self) -> Option<String> {
+        let mut dead = Vec::new();
+        for (id, slot) in self.handles.iter_mut().enumerate() {
+            if slot.as_ref().is_some_and(|h| h.is_finished()) {
+                let h = slot.take().expect("invariant: is_some checked above");
+                match h.join() {
+                    Ok(()) => dead.push(format!("worker {id} exited early")),
+                    Err(p) => {
+                        dead.push(format!("worker {id} panicked: {}", panic_message(&*p)));
+                    }
+                }
+            }
+        }
+        if dead.is_empty() {
+            None
+        } else {
+            Some(dead.join("; "))
+        }
+    }
+
+    /// `recv()` with worker-death diagnosis. The shared `from_workers`
+    /// channel only disconnects when *every* worker sender is gone; one
+    /// panicked worker among p > 1 used to leave the leader blocked
+    /// forever on a message that can never arrive. Poll with a short
+    /// timeout and, when the queue is empty, check the thread handles —
+    /// already-queued messages still drain first, so nothing a worker
+    /// managed to send before dying is lost.
+    fn recv_diagnosed(&mut self, waiting_for: &str) -> anyhow::Result<ToLeader> {
+        loop {
+            match self.from_workers.recv_timeout(Duration::from_millis(20)) {
+                Ok(msg) => return Ok(msg),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Some(report) = self.reap_dead_workers() {
+                        anyhow::bail!("{report} (leader was awaiting {waiting_for})");
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    let report =
+                        self.reap_dead_workers().unwrap_or_else(|| "every worker hung up".into());
+                    anyhow::bail!("{report} (leader was awaiting {waiting_for})");
+                }
+            }
+        }
+    }
+
+    /// `send` with worker-death diagnosis: a send only fails when the
+    /// worker's receiver is gone, i.e. the thread is dead.
+    fn send_diagnosed(&mut self, i: usize, msg: ToWorker) -> anyhow::Result<()> {
+        if self.to_workers[i].send(msg).is_ok() {
+            return Ok(());
+        }
+        let report = self.reap_dead_workers().unwrap_or_else(|| format!("worker {i} hung up"));
+        anyhow::bail!("{report} (leader was dispatching to worker {i})");
     }
 
     /// The cached write-back geometry of block `i` (right-hand side kept),
@@ -259,12 +333,8 @@ impl WorkerPool {
                     geom.halo.clear();
                     self.cached[i] =
                         Some(CachedBlock { geom, epoch: epochs[i], x_loc: None });
-                    self.to_workers[i].send(ToWorker::Setup(Box::new(EpochSetup {
-                        blk,
-                        reg,
-                        reg_cols,
-                        mu: opts.mu,
-                    })))?;
+                    let setup = EpochSetup { blk, reg, reg_cols, mu: opts.mu };
+                    self.send_diagnosed(i, ToWorker::Setup(Box::new(setup)))?;
                 }
                 BlockTask::RefreshB(b) => {
                     counters.refreshed += 1;
@@ -284,7 +354,7 @@ impl WorkerPool {
                         cb.geom.b.len()
                     );
                     cb.geom.b.clone_from(&b);
-                    self.to_workers[i].send(ToWorker::RefreshB { b })?;
+                    self.send_diagnosed(i, ToWorker::RefreshB { b })?;
                 }
                 BlockTask::Retain => {
                     counters.retained += 1;
@@ -297,14 +367,14 @@ impl WorkerPool {
                         cb.epoch,
                         epochs[i]
                     );
-                    self.to_workers[i].send(ToWorker::Retain)?;
+                    self.send_diagnosed(i, ToWorker::Retain)?;
                 }
             }
         }
 
         let mut t_assemble_max = Duration::ZERO;
         for _ in 0..p {
-            match self.from_workers.recv()? {
+            match self.recv_diagnosed("assemble acknowledgements")? {
                 ToLeader::Ready { assemble_time, .. } => {
                     t_assemble_max = t_assemble_max.max(assemble_time);
                 }
@@ -348,12 +418,12 @@ impl WorkerPool {
                 }
                 let snapshot = Arc::new(x.clone());
                 for &i in phase.iter() {
-                    self.to_workers[i].send(ToWorker::Solve { x: snapshot.clone() })?;
+                    self.send_diagnosed(i, ToWorker::Solve { x: snapshot.clone() })?;
                 }
                 let mut phase_max = Duration::ZERO;
                 let mut phase_sum = Duration::ZERO;
                 for _ in phase.iter() {
-                    match self.from_workers.recv()? {
+                    match self.recv_diagnosed("phase solutions")? {
                         ToLeader::Solution { worker, x_loc, solve_time } => {
                             worker_busy[worker] += solve_time;
                             phase_max = phase_max.max(solve_time);
@@ -414,7 +484,7 @@ impl Drop for WorkerPool {
         for tx in &self.to_workers {
             let _ = tx.send(ToWorker::Shutdown);
         }
-        for h in self.handles.drain(..) {
+        for h in self.handles.drain(..).flatten() {
             let _ = h.join();
         }
     }
@@ -649,6 +719,39 @@ mod tests {
         assert!(pool.solve_blocks(32, blocks(&part), &[vec![0, 0]], &opts).is_err());
         assert!(pool.solve_blocks(32, blocks(&part), &[vec![0, 2]], &opts).is_err());
         assert!(pool.solve_blocks(32, blocks(&part), &[vec![0], vec![1]], &opts).is_ok());
+    }
+
+    #[test]
+    fn dead_worker_mid_phase_is_diagnosed_not_hung() {
+        // Worker 1 panics on its first Solve; worker 0 stays alive, so
+        // the shared channel never disconnects. Without handle polling
+        // the leader would block forever on a message that cannot come.
+        let backend = SolverBackend::PanickingTest { victim: 1, in_assemble: false };
+        let mut pool = WorkerPool::new(2, backend, "artifacts".into());
+        let prob = problem(32, 20, 21);
+        let part = Partition::uniform(32, 2);
+        let err = pool
+            .solve_on(&g1(32, 2), &prob, &part, &SchwarzOptions::default())
+            .expect_err("victim panic must surface as an error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker 1 panicked"), "{msg}");
+        assert!(msg.contains("injected solve panic"), "{msg}");
+    }
+
+    #[test]
+    fn dead_worker_during_setup_is_diagnosed_not_hung() {
+        // Same hang in the assemble-acknowledgement loop: the leader
+        // expects p Ready messages and the victim's never arrives.
+        let backend = SolverBackend::PanickingTest { victim: 0, in_assemble: true };
+        let mut pool = WorkerPool::new(2, backend, "artifacts".into());
+        let prob = problem(32, 20, 22);
+        let part = Partition::uniform(32, 2);
+        let err = pool
+            .solve_on(&g1(32, 2), &prob, &part, &SchwarzOptions::default())
+            .expect_err("victim panic must surface as an error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker 0 panicked"), "{msg}");
+        assert!(msg.contains("injected assemble panic"), "{msg}");
     }
 
     #[test]

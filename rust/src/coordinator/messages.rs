@@ -19,6 +19,10 @@ pub enum SolverBackend {
     /// matrix-free over the block's CSR rows — no dense n×n allocation on
     /// the local-solve path; the backend for large grids.
     Cg,
+    /// Test-only: native solver that panics inside the victim worker —
+    /// the regression hook for leader-side worker-death diagnosis.
+    #[cfg(test)]
+    PanickingTest { victim: usize, in_assemble: bool },
 }
 
 impl SolverBackend {

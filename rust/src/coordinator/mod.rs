@@ -19,6 +19,9 @@
 
 mod leader;
 mod messages;
+#[cfg(test)]
+mod model;
+pub mod protocol;
 mod worker;
 
 pub use leader::{run_parallel, BlockTask, ParallelOutcome, SolveCounters, WorkerPool};

@@ -1,0 +1,421 @@
+//! Exhaustive interleaving checker for the protocol replica
+//! ([`super::protocol`]), run by tier-1 `cargo test`.
+//!
+//! The checker simulates the leader and p workers as one transition
+//! system: leader -> worker FIFOs, per-sender worker -> leader FIFOs (the
+//! shared mpsc channel guarantees per-sender order only, so delivery from
+//! any non-empty outbox models it exactly), and a nondeterministic
+//! scheduler. A DFS over every reachable state verifies, for small
+//! scenarios, that
+//!
+//! - every schedule reaches quiescence with the expected verdict — no
+//!   deadlock, no lost wakeup (a leader blocked forever on a message that
+//!   cannot arrive shows up as a quiescent state that is not terminal);
+//! - a `Solution` never carries a stale epoch (cache/worker desyncs are
+//!   rejected at dispatch, exactly as `solve_blocks_incremental` does);
+//! - a worker death (the thread unwinding without replying, as a
+//!   panicking local solver would) is *always* diagnosed, in every
+//!   interleaving — the property the `recv_diagnosed`/`reap_dead_workers`
+//!   fix in [`super::leader`] establishes. `explore` can also be run with
+//!   death detection disabled, which reproduces the pre-fix deadlock.
+//!
+//! The loom harness in `verify/loom` drives the same replica over
+//! loom-instrumented channels; this module needs no extra dependencies and
+//! therefore keeps running in the ordinary test suite.
+
+use super::protocol::{LeaderCache, Rep, Req, WorkerModel};
+use std::collections::{HashSet, VecDeque};
+
+/// One epoch of leader work: one task per worker (dispatched together,
+/// as `solve_blocks_incremental` does), then coloured solve phases.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EpochPlan {
+    pub tasks: Vec<Req>,
+    pub phases: Vec<Vec<usize>>,
+}
+
+/// Which message the victim worker dies on (models a panicking solver:
+/// the thread unwinds without replying; already-sent replies survive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeathPoint {
+    /// Dies handling `Setup` — mid-assemble, before its `Ready`.
+    Assemble,
+    /// Dies handling `Solve` — mid-phase, before its `Solution`.
+    Solve,
+}
+
+/// A checkable protocol run.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub p: usize,
+    pub epochs: Vec<EpochPlan>,
+    /// `(victim, when)`: worker `victim` dies at its first `when` message.
+    pub death: Option<(usize, DeathPoint)>,
+}
+
+/// How a run is allowed to end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Verdict {
+    /// Every epoch ran to completion and the pool shut down cleanly.
+    Completed,
+    /// The leader bailed with a diagnosis (worker death or epoch desync).
+    Diagnosed,
+}
+
+/// Leader control flow, mirroring `solve_blocks_incremental` + `Drop`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Leader {
+    Dispatch { epoch: usize },
+    AwaitReady { epoch: usize, pending: usize },
+    SendPhase { epoch: usize, phase: usize },
+    AwaitSolutions { epoch: usize, phase: usize, pending: usize },
+    /// Terminal: `Shutdown` has been sent to every live worker.
+    Ended { verdict: Verdict },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Sim {
+    workers: Vec<WorkerModel>,
+    /// Thread liveness: `false` after a death (a *stopped* worker exited
+    /// its loop cleanly; both count as "finished" for handle polling).
+    alive: Vec<bool>,
+    inbox: Vec<VecDeque<Req>>,
+    outbox: Vec<VecDeque<Rep>>,
+    cache: LeaderCache,
+    leader: Leader,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    /// Worker `i` handles its next queued message.
+    WorkerStep(usize),
+    /// The leader receives the next reply queued by worker `i`.
+    LeaderRecv(usize),
+    /// The leader's `recv_timeout` fires with an empty queue and handle
+    /// polling finds a finished worker — the death-diagnosis path.
+    LeaderDetect,
+}
+
+/// Exploration outcome: number of distinct states and quiescent states.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckStats {
+    pub states: usize,
+    pub terminals: usize,
+}
+
+impl Sim {
+    fn new(sc: &Scenario) -> Self {
+        let mut sim = Sim {
+            workers: (0..sc.p).map(WorkerModel::new).collect(),
+            alive: vec![true; sc.p],
+            inbox: vec![VecDeque::new(); sc.p],
+            outbox: vec![VecDeque::new(); sc.p],
+            cache: LeaderCache::new(sc.p),
+            leader: Leader::Dispatch { epoch: 0 },
+        };
+        sim.advance_leader(sc);
+        sim
+    }
+
+    /// A worker's thread handle reads as finished (dead or cleanly out).
+    fn finished(&self, w: usize) -> bool {
+        !self.alive[w] || self.workers[w].stopped
+    }
+
+    /// Bail: mirror `WorkerPool::drop` — `Shutdown` to every live worker
+    /// (sends to dead ones fail and are ignored), then the run is over.
+    fn end(&mut self, verdict: Verdict) {
+        for w in 0..self.workers.len() {
+            if self.alive[w] && !self.workers[w].stopped {
+                self.inbox[w].push_back(Req::Shutdown);
+            }
+        }
+        self.leader = Leader::Ended { verdict };
+    }
+
+    /// Run the leader through its non-blocking states (dispatching and
+    /// phase sends happen without intervening receives in the real code).
+    fn advance_leader(&mut self, sc: &Scenario) {
+        loop {
+            match self.leader.clone() {
+                Leader::Dispatch { epoch } => {
+                    let plan = &sc.epochs[epoch];
+                    for (w, &task) in plan.tasks.iter().enumerate() {
+                        if self.cache.admit(w, task).is_err() || !self.alive[w] {
+                            // Epoch desync or send to a dead worker: the
+                            // real leader bails before dispatching more.
+                            self.end(Verdict::Diagnosed);
+                            return;
+                        }
+                        self.inbox[w].push_back(task);
+                    }
+                    let pending = plan.tasks.len();
+                    self.leader = Leader::AwaitReady { epoch, pending };
+                    return;
+                }
+                Leader::SendPhase { epoch, phase } => {
+                    let plan = &sc.epochs[epoch];
+                    if phase == plan.phases.len() {
+                        if epoch + 1 == sc.epochs.len() {
+                            self.end(Verdict::Completed);
+                            return;
+                        }
+                        self.leader = Leader::Dispatch { epoch: epoch + 1 };
+                        continue;
+                    }
+                    for &w in &plan.phases[phase] {
+                        if !self.alive[w] {
+                            self.end(Verdict::Diagnosed);
+                            return;
+                        }
+                        self.inbox[w].push_back(Req::Solve);
+                    }
+                    let pending = plan.phases[phase].len();
+                    self.leader = Leader::AwaitSolutions { epoch, phase, pending };
+                    return;
+                }
+                Leader::AwaitReady { .. } | Leader::AwaitSolutions { .. } => return,
+                Leader::Ended { .. } => return,
+            }
+        }
+    }
+
+    fn enabled(&self, detect: bool) -> Vec<Action> {
+        let mut acts = Vec::new();
+        for w in 0..self.workers.len() {
+            if self.alive[w] && !self.workers[w].stopped && !self.inbox[w].is_empty() {
+                acts.push(Action::WorkerStep(w));
+            }
+        }
+        let awaiting = matches!(
+            self.leader,
+            Leader::AwaitReady { .. } | Leader::AwaitSolutions { .. }
+        );
+        if awaiting {
+            for w in 0..self.workers.len() {
+                if !self.outbox[w].is_empty() {
+                    acts.push(Action::LeaderRecv(w));
+                }
+            }
+            // `recv_timeout` only times out on an empty queue; handle
+            // polling then notices any finished worker.
+            let drained = self.outbox.iter().all(|q| q.is_empty());
+            if detect && drained && (0..self.workers.len()).any(|w| self.finished(w)) {
+                acts.push(Action::LeaderDetect);
+            }
+        }
+        acts
+    }
+
+    fn apply(&mut self, sc: &Scenario, act: Action) {
+        match act {
+            Action::WorkerStep(w) => {
+                let req = self.inbox[w].pop_front().expect("invariant: enabled => non-empty");
+                let dies = match sc.death {
+                    Some((victim, DeathPoint::Assemble)) => {
+                        victim == w && matches!(req, Req::Setup { .. })
+                    }
+                    Some((victim, DeathPoint::Solve)) => victim == w && req == Req::Solve,
+                    None => false,
+                };
+                if dies {
+                    // Unwind: no reply, sender dropped, handle finished.
+                    self.alive[w] = false;
+                    return;
+                }
+                if let Some(rep) = self.workers[w].step(req) {
+                    self.outbox[w].push_back(rep);
+                }
+            }
+            Action::LeaderRecv(w) => {
+                let rep = self.outbox[w].pop_front().expect("invariant: enabled => non-empty");
+                match (self.leader.clone(), rep) {
+                    (Leader::AwaitReady { epoch, pending }, Rep::Ready { .. }) => {
+                        self.leader = Leader::AwaitReady { epoch, pending: pending - 1 };
+                    }
+                    (
+                        Leader::AwaitSolutions { epoch, phase, pending },
+                        Rep::Solution { worker, epoch: sol },
+                    ) => {
+                        assert_eq!(
+                            self.cache.epochs[worker],
+                            Some(sol),
+                            "stale-epoch solution from worker {worker}"
+                        );
+                        let pending = pending - 1;
+                        self.leader = Leader::AwaitSolutions { epoch, phase, pending };
+                    }
+                    (_, Rep::Failed { .. }) => self.end(Verdict::Diagnosed),
+                    (state, rep) => {
+                        // lint:allow(no-unwrap-in-lib) checker invariant: abort the test run
+                        panic!("protocol violation: {rep:?} while leader in {state:?}")
+                    }
+                }
+                match self.leader {
+                    Leader::AwaitReady { epoch, pending: 0 } => {
+                        self.leader = Leader::SendPhase { epoch, phase: 0 };
+                        self.advance_leader(sc);
+                    }
+                    Leader::AwaitSolutions { epoch, phase, pending: 0 } => {
+                        self.leader = Leader::SendPhase { epoch, phase: phase + 1 };
+                        self.advance_leader(sc);
+                    }
+                    _ => {}
+                }
+            }
+            Action::LeaderDetect => self.end(Verdict::Diagnosed),
+        }
+    }
+}
+
+/// Explore every interleaving; `Err` describes a deadlocked schedule.
+/// `detect` toggles the leader's death-detection action — `false` models
+/// the pre-fix leader (blocking `recv()` with no handle polling).
+pub fn explore(sc: &Scenario, expect: Verdict, detect: bool) -> Result<CheckStats, String> {
+    for plan in &sc.epochs {
+        assert_eq!(plan.tasks.len(), sc.p, "one task per worker");
+    }
+    let mut visited: HashSet<Sim> = HashSet::new();
+    let mut terminals = 0usize;
+    let mut stack = vec![Sim::new(sc)];
+    while let Some(sim) = stack.pop() {
+        if !visited.insert(sim.clone()) {
+            continue;
+        }
+        let acts = sim.enabled(detect);
+        if acts.is_empty() {
+            match &sim.leader {
+                Leader::Ended { verdict } => {
+                    assert_eq!(*verdict, expect, "unexpected terminal verdict");
+                    for w in 0..sc.p {
+                        assert!(sim.finished(w), "worker {w} still running at quiescence");
+                    }
+                    terminals += 1;
+                }
+                state => {
+                    return Err(format!(
+                        "deadlock: leader blocked in {state:?} with no enabled action"
+                    ));
+                }
+            }
+            continue;
+        }
+        for act in acts {
+            let mut next = sim.clone();
+            next.apply(sc, act);
+            stack.push(next);
+        }
+    }
+    Ok(CheckStats { states: visited.len(), terminals })
+}
+
+/// Assert every interleaving of `sc` terminates with `expect` (death
+/// detection on, i.e. the current leader).
+pub fn check(sc: &Scenario, expect: Verdict) -> CheckStats {
+    match explore(sc, expect, true) {
+        Ok(stats) => stats,
+        // lint:allow(no-unwrap-in-lib) checker invariant: abort the test run
+        Err(e) => panic!("{e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup_tasks(p: usize, epoch: u32) -> Vec<Req> {
+        (0..p).map(|_| Req::Setup { epoch }).collect()
+    }
+
+    #[test]
+    fn solve_dispatch_completes_in_every_interleaving() {
+        for phases in [vec![vec![0], vec![1]], vec![vec![0, 1]]] {
+            let sc = Scenario {
+                p: 2,
+                epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases }],
+                death: None,
+            };
+            let stats = check(&sc, Verdict::Completed);
+            assert!(stats.terminals >= 1 && stats.states > 10, "{stats:?}");
+        }
+    }
+
+    #[test]
+    fn epoch_reuse_keeps_solutions_consistent() {
+        // Epoch 0 extracts; epoch 1 retains one block and refreshes the
+        // other. The in-transition assert proves no interleaving lets a
+        // solution arrive from a stale epoch.
+        let sc = Scenario {
+            p: 2,
+            epochs: vec![
+                EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]] },
+                EpochPlan {
+                    tasks: vec![Req::Retain { epoch: 0 }, Req::RefreshB { epoch: 0 }],
+                    phases: vec![vec![0], vec![1]],
+                },
+            ],
+            death: None,
+        };
+        check(&sc, Verdict::Completed);
+    }
+
+    #[test]
+    fn epoch_desync_is_rejected_at_dispatch() {
+        // The caller's tracker says epoch 1 but the cache holds epoch 0:
+        // every schedule must end in the leader's bail path, and no Solve
+        // may ever be dispatched against the stale block.
+        let sc = Scenario {
+            p: 2,
+            epochs: vec![
+                EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0, 1]] },
+                EpochPlan {
+                    tasks: vec![Req::Retain { epoch: 1 }, Req::Retain { epoch: 0 }],
+                    phases: vec![vec![0, 1]],
+                },
+            ],
+            death: None,
+        };
+        check(&sc, Verdict::Diagnosed);
+    }
+
+    #[test]
+    fn worker_death_at_assemble_is_always_diagnosed() {
+        let sc = Scenario {
+            p: 2,
+            epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]] }],
+            death: Some((1, DeathPoint::Assemble)),
+        };
+        let stats = check(&sc, Verdict::Diagnosed);
+        assert!(stats.terminals >= 1);
+    }
+
+    #[test]
+    fn worker_death_at_solve_is_always_diagnosed() {
+        for victim in 0..2 {
+            let sc = Scenario {
+                p: 2,
+                epochs: vec![EpochPlan {
+                    tasks: setup_tasks(2, 0),
+                    phases: vec![vec![0], vec![1]],
+                }],
+                death: Some((victim, DeathPoint::Solve)),
+            };
+            check(&sc, Verdict::Diagnosed);
+        }
+    }
+
+    #[test]
+    fn without_death_detection_the_old_leader_deadlocks() {
+        // The pre-fix leader blocked on `from_workers.recv()`: with one
+        // worker dead and the other's sender alive, the channel never
+        // disconnects. Disabling the detect action reproduces that
+        // deadlock — the regression the handle-polling fix closes.
+        let sc = Scenario {
+            p: 2,
+            epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]] }],
+            death: Some((1, DeathPoint::Solve)),
+        };
+        let err = explore(&sc, Verdict::Diagnosed, false).expect_err("must deadlock");
+        assert!(err.contains("deadlock"), "{err}");
+    }
+}

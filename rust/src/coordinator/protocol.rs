@@ -1,0 +1,173 @@
+//! Message-only replica of the leader <-> worker protocol.
+//!
+//! [`super::leader`] and [`super::worker`] interleave the protocol with
+//! numerics (block extraction, factorization, Schwarz sweeps), which makes
+//! the message discipline itself hard to check exhaustively: a lost wakeup
+//! or a deadlock hides behind seconds of linear algebra. This module
+//! extracts *only* the protocol — the worker automaton one `recv` step at
+//! a time, and the leader-side epoch-cache admission rule — as pure,
+//! payload-free transition functions over [`Req`]/[`Rep`].
+//!
+//! Two harnesses drive the same replica:
+//!
+//! - [`super::model`] (tier-1 `cargo test`): exhaustive DFS over every
+//!   delivery interleaving of small scenarios — solve dispatch, epoch
+//!   reuse, worker death, shutdown.
+//! - `verify/loom` (CI `analysis` lane): the loom model checker runs the
+//!   replica on real threads over loom-instrumented channels, exploring
+//!   schedules and memory orderings the DFS abstracts away.
+//!
+//! Keeping the replica next to the real implementation is deliberate: a
+//! protocol change in `leader.rs`/`worker.rs` should be mirrored here, and
+//! the checkers then re-verify it. The correspondence is documented per
+//! transition below.
+
+/// Leader -> worker, with payloads reduced to the epoch identity the
+/// protocol actually depends on. Mirrors [`super::ToWorker`]:
+/// `Setup(EpochSetup)` carries a freshly extracted block (here: the epoch
+/// it was extracted under), `RefreshB`/`Retain` reuse the standing block
+/// (here: the epoch the leader *believes* is standing), `Solve` ships an
+/// iterate snapshot (here: nothing — the snapshot does not affect control
+/// flow).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Req {
+    Setup { epoch: u32 },
+    RefreshB { epoch: u32 },
+    Retain { epoch: u32 },
+    Solve,
+    Shutdown,
+}
+
+/// Worker -> leader. Mirrors [`super::ToLeader`] with timings dropped;
+/// `Solution` carries the epoch of the block it was solved against so the
+/// checkers can assert no solution ever comes from a stale epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rep {
+    Ready { worker: usize },
+    Solution { worker: usize, epoch: u32 },
+    Failed { worker: usize },
+}
+
+/// The worker automaton: one `rx.recv()` iteration of
+/// [`super::worker::worker_main`] per [`WorkerModel::step`] call.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct WorkerModel {
+    pub id: usize,
+    /// Epoch of the armed block (`None` until the first `Setup`).
+    pub epoch: Option<u32>,
+    /// The loop was left: `Shutdown` received, or a protocol error was
+    /// reported via `Failed` (the real worker `return`s after `fail()`).
+    pub stopped: bool,
+}
+
+impl WorkerModel {
+    pub fn new(id: usize) -> Self {
+        WorkerModel { id, epoch: None, stopped: false }
+    }
+
+    /// Handle one message; returns the reply the worker sends, if any.
+    ///
+    /// Correspondence with `worker_main`: `Setup` arms the block and
+    /// acknowledges with `Ready`; `RefreshB`/`Retain` on an armed worker
+    /// keep the standing factor and acknowledge (the worker cannot check
+    /// the epoch — that is the leader cache's job, see [`LeaderCache`]);
+    /// either before any `Setup` is a protocol error (`Failed`, stop);
+    /// `Solve` answers with a `Solution` tagged with the armed epoch;
+    /// `Shutdown` leaves the loop silently.
+    pub fn step(&mut self, req: Req) -> Option<Rep> {
+        debug_assert!(!self.stopped, "message delivered to a stopped worker");
+        match req {
+            Req::Setup { epoch } => {
+                self.epoch = Some(epoch);
+                Some(Rep::Ready { worker: self.id })
+            }
+            Req::RefreshB { .. } | Req::Retain { .. } => {
+                if self.epoch.is_some() {
+                    Some(Rep::Ready { worker: self.id })
+                } else {
+                    self.stopped = true;
+                    Some(Rep::Failed { worker: self.id })
+                }
+            }
+            Req::Solve => match self.epoch {
+                Some(e) => Some(Rep::Solution { worker: self.id, epoch: e }),
+                None => {
+                    self.stopped = true;
+                    Some(Rep::Failed { worker: self.id })
+                }
+            },
+            Req::Shutdown => {
+                self.stopped = true;
+                None
+            }
+        }
+    }
+}
+
+/// Leader-side epoch-cache admission rule: the checks
+/// `solve_blocks_incremental` performs before dispatching a task, replayed
+/// over epoch identities. `RefreshB`/`Retain` are rejected when the cache
+/// is empty or disagrees with the expected epoch — the desyncs that would
+/// otherwise silently solve against stale data.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LeaderCache {
+    pub epochs: Vec<Option<u32>>,
+}
+
+impl LeaderCache {
+    pub fn new(p: usize) -> Self {
+        LeaderCache { epochs: vec![None; p] }
+    }
+
+    /// Admit (and apply) one dispatch; `Err` is the leader's bail path.
+    pub fn admit(&mut self, worker: usize, task: Req) -> Result<(), String> {
+        match task {
+            Req::Setup { epoch } => {
+                self.epochs[worker] = Some(epoch);
+                Ok(())
+            }
+            Req::RefreshB { epoch } | Req::Retain { epoch } => match self.epochs[worker] {
+                None => Err(format!("RefreshB/Retain for uncached block {worker}")),
+                Some(e) if e != epoch => {
+                    Err(format!("block {worker}: cached epoch {e} != expected {epoch}"))
+                }
+                Some(_) => Ok(()),
+            },
+            Req::Solve | Req::Shutdown => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_follows_the_happy_path() {
+        let mut w = WorkerModel::new(3);
+        assert_eq!(w.step(Req::Setup { epoch: 7 }), Some(Rep::Ready { worker: 3 }));
+        assert_eq!(w.step(Req::Solve), Some(Rep::Solution { worker: 3, epoch: 7 }));
+        assert_eq!(w.step(Req::Retain { epoch: 7 }), Some(Rep::Ready { worker: 3 }));
+        assert_eq!(w.step(Req::Shutdown), None);
+        assert!(w.stopped);
+    }
+
+    #[test]
+    fn worker_rejects_messages_before_setup() {
+        for req in [Req::RefreshB { epoch: 0 }, Req::Retain { epoch: 0 }, Req::Solve] {
+            let mut w = WorkerModel::new(0);
+            assert_eq!(w.step(req), Some(Rep::Failed { worker: 0 }));
+            assert!(w.stopped);
+        }
+    }
+
+    #[test]
+    fn cache_admission_matches_leader_checks() {
+        let mut c = LeaderCache::new(2);
+        assert!(c.admit(0, Req::Retain { epoch: 0 }).is_err(), "uncached");
+        assert!(c.admit(0, Req::Setup { epoch: 1 }).is_ok());
+        assert!(c.admit(0, Req::Retain { epoch: 1 }).is_ok());
+        assert!(c.admit(0, Req::RefreshB { epoch: 2 }).is_err(), "desync");
+        assert!(c.admit(1, Req::Solve).is_ok());
+    }
+}

@@ -20,6 +20,43 @@ pub struct WorkerInit {
 }
 
 /// The worker body. All errors are reported to the leader, not panicked.
+#[cfg(test)]
+pub(super) mod test_support {
+    use crate::cls::LocalBlock;
+    use crate::ddkf::{LocalFactor, LocalSolver, NativeLocalSolver};
+
+    /// Delegates to the native solver except on the victim worker, where
+    /// it panics — simulating a worker thread dying mid-protocol (the
+    /// scenario that used to hang the leader on `from_workers.recv()`).
+    pub struct PanickingSolver {
+        pub me: usize,
+        pub victim: usize,
+        pub in_assemble: bool,
+    }
+
+    impl LocalSolver for PanickingSolver {
+        fn assemble(&mut self, blk: &LocalBlock, reg: &[f64]) -> anyhow::Result<LocalFactor> {
+            if self.me == self.victim && self.in_assemble {
+                panic!("injected assemble panic (worker {})", self.me);
+            }
+            NativeLocalSolver.assemble(blk, reg)
+        }
+
+        fn solve(
+            &mut self,
+            blk: &LocalBlock,
+            factor: &LocalFactor,
+            b_eff: &[f64],
+            reg_rhs: &[f64],
+        ) -> anyhow::Result<Vec<f64>> {
+            if self.me == self.victim {
+                panic!("injected solve panic (worker {})", self.me);
+            }
+            NativeLocalSolver.solve(blk, factor, b_eff, reg_rhs)
+        }
+    }
+}
+
 pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader>) {
     let fail = |tx: &Sender<ToLeader>, error: String| {
         let _ = tx.send(ToLeader::Failed { worker: init.id, error });
@@ -36,6 +73,10 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                 return;
             }
         },
+        #[cfg(test)]
+        SolverBackend::PanickingTest { victim, in_assemble } => {
+            Box::new(test_support::PanickingSolver { me: init.id, victim, in_assemble })
+        }
     };
 
     // Current epoch state.

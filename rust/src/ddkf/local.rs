@@ -95,6 +95,7 @@ impl LocalSolver for KfLocalSolver {
         // provenance: global_rows < n are state rows.
         assert_eq!(reg.len(), blk.n_loc());
         let nloc = blk.n_loc();
+        // lint:allow(no-dense-alloc-on-sparse-path) KF prior gram is dense by design
         let mut g = Mat::zeros(nloc, nloc);
         for (i, &r) in reg.iter().enumerate() {
             g[(i, i)] += r;

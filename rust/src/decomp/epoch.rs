@@ -48,13 +48,21 @@ impl EpochTracker {
     /// The decomposition moved: every block's identity changes (the block
     /// count may too).
     pub fn bump_partition(&mut self, p: usize) {
+        let prev = self.partition;
         self.partition += 1;
         self.data = vec![0; p];
+        let next = BlockEpoch { partition: self.partition, data: 0 };
+        debug_assert_eq!(
+            crate::verify::check_epoch_succession(BlockEpoch { partition: prev, data: 0 }, next),
+            Ok(())
+        );
     }
 
     /// Block `i`'s rows changed under the standing partition.
     pub fn mark_dirty(&mut self, i: usize) {
+        let prev = self.epoch(i);
         self.data[i] += 1;
+        debug_assert_eq!(crate::verify::check_epoch_succession(prev, self.epoch(i)), Ok(()));
     }
 
     pub fn epoch(&self, i: usize) -> BlockEpoch {
@@ -154,6 +162,23 @@ mod tests {
             assert_eq!(w[0].total_cmp(&w[1]), std::cmp::Ordering::Less);
         }
         assert_eq!(f64_key(0.25), f64_key(0.25));
+    }
+
+    #[test]
+    fn f64_key_totally_orders_nan_inputs() {
+        // total_cmp order puts -NaN below -inf and +NaN above +inf; the
+        // key map must agree so NaN-valued records still sort totally
+        // (no panic, no duplicate-key collapse) on the store's key path.
+        let neg_nan = f64::from_bits(f64::NAN.to_bits() | (1 << 63));
+        let vals = [neg_nan, f64::NEG_INFINITY, -1.0, 0.0, 1.0, f64::INFINITY, f64::NAN];
+        for w in vals.windows(2) {
+            assert!(f64_key(w[0]) < f64_key(w[1]), "{} !< {}", w[0], w[1]);
+            assert_eq!(w[0].total_cmp(&w[1]), std::cmp::Ordering::Less);
+        }
+        // Same bit pattern, same key; a distinct payload is distinct.
+        assert_eq!(f64_key(f64::NAN), f64_key(f64::NAN));
+        let other_payload = f64::from_bits(f64::NAN.to_bits() ^ 1);
+        assert_ne!(f64_key(f64::NAN), f64_key(other_payload));
     }
 
     #[test]

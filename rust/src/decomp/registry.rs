@@ -13,6 +13,13 @@ use crate::domain2d::{DriftLayout2d, ObsLayout2d};
 /// Decomposition dimensions with a registered [`crate::decomp::Geometry`].
 pub const DIMS: [usize; 3] = [1, 2, 4];
 
+/// Every [`crate::decomp::Geometry`] implementation, by type name, in
+/// [`DIMS`] order. `cargo xtask lint` (the `geometry-registration` rule)
+/// checks each `impl Geometry` against this roster and against the golden
+/// suite in `tests/decomp_golden.rs`, so a new decomposition shape cannot
+/// ship unregistered or untested.
+pub const GEOMETRIES: [&str; 3] = ["IntervalGeometry", "BoxGeometry", "WindowGeometry"];
+
 /// A dimension-resolved layout name.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LayoutSpec {

@@ -33,10 +33,10 @@ impl Partition {
 
     /// Partition from explicit interior bounds.
     pub fn from_bounds(n: usize, bounds: Vec<usize>) -> Self {
-        assert!(bounds.len() >= 2);
-        assert_eq!(bounds[0], 0);
-        assert_eq!(*bounds.last().unwrap(), n);
-        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "empty or unordered interval");
+        if let Err(e) = crate::verify::check_bounds(n, &bounds) {
+            // lint:allow(no-unwrap-in-lib) caller contract: bounds partition {0..n}
+            panic!("Partition::from_bounds: {e}");
+        }
         Partition { n, bounds }
     }
 

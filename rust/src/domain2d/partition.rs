@@ -63,7 +63,7 @@ impl BoxPartition {
     ) -> Self {
         assert!(xbounds.len() >= 2);
         assert_eq!(xbounds[0], 0);
-        assert_eq!(*xbounds.last().unwrap(), nx);
+        assert_eq!(*xbounds.last().expect("invariant: len >= 2 asserted above"), nx);
         assert!(
             xbounds.windows(2).all(|w| w[0] < w[1]),
             "empty or unordered column interval: {xbounds:?}"
@@ -74,7 +74,7 @@ impl BoxPartition {
         for (c, yb) in ybounds.iter().enumerate() {
             assert_eq!(yb.len(), py + 1, "column {c}: inconsistent py");
             assert_eq!(yb[0], 0);
-            assert_eq!(*yb.last().unwrap(), ny);
+            assert_eq!(*yb.last().expect("invariant: len checked above"), ny);
             assert!(
                 yb.windows(2).all(|w| w[0] < w[1]),
                 "column {c}: empty or unordered row interval: {yb:?}"

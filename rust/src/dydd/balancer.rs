@@ -104,7 +104,10 @@ pub fn repair(g: &Graph, loads: &mut [usize]) -> Result<bool, BalanceError> {
                 return Err(BalanceError::Unrepairable(i));
             }
             // Max-load adjacent subdomain.
-            let &j = nbrs.iter().max_by_key(|&&j| loads[j]).unwrap();
+            let &j = nbrs
+                .iter()
+                .max_by_key(|&&j| loads[j])
+                .expect("invariant: non-empty checked above");
             if loads[j] <= 1 {
                 continue; // neighbour can't be split yet; later passes may fill it
             }
@@ -164,8 +167,8 @@ fn polish(g: &Graph, loads: &mut [usize], migrations: &mut Vec<(usize, usize, i6
         }
         // Shift one unit along the path (recorded edge by edge).
         let mut path = vec![lo];
-        while *path.last().unwrap() != hi {
-            path.push(prev[*path.last().unwrap()]);
+        while *path.last().expect("invariant: path starts non-empty") != hi {
+            path.push(prev[*path.last().expect("invariant: path starts non-empty")]);
         }
         path.reverse(); // hi ... lo
         for w in path.windows(2) {

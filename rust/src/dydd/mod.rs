@@ -35,8 +35,8 @@ pub fn balance_ratio(loads: &[usize]) -> f64 {
     if loads.is_empty() {
         return 1.0;
     }
-    let mx = loads.iter().copied().max().unwrap();
-    let mn = loads.iter().copied().min().unwrap();
+    let mx = loads.iter().copied().max().expect("invariant: non-empty checked above");
+    let mn = loads.iter().copied().min().expect("invariant: non-empty checked above");
     if mx == 0 {
         return 0.0;
     }

@@ -77,6 +77,13 @@ pub fn rebalance<G: Geometry>(
     let (partition, census_after) = realize(&outcome.l_fin);
     // Boundary shifting is part of the migration step the paper times.
     outcome.t_dydd = outcome.t_dydd.max(t0.elapsed());
+    // Migration moves observations between subdomains, never creates or
+    // drops them; the re-mapped partition must still cover the domain.
+    debug_assert_eq!(crate::verify::check_census_conserved(&census, &census_after), Ok(()));
+    debug_assert_eq!(
+        crate::verify::check_part_sizes(geom.n_unknowns(), &geom.part_sizes(&partition)),
+        Ok(())
+    );
     Ok(GeometricOutcome { dydd: outcome, partition, census_after })
 }
 

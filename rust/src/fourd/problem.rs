@@ -96,6 +96,7 @@ impl TrajectoryProblem {
             }
             k -= set.len();
         }
+        // lint:allow(no-unwrap-in-lib) caller contract: r < num_rows
         panic!("row {r} out of range");
     }
 

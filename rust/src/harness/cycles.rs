@@ -34,6 +34,7 @@ use crate::domain2d::{generators as gen2d, DriftLayout2d, ObservationSet2d};
 use crate::dydd::{balance_ratio, RebalancePolicy, RebalanceRecord};
 use crate::harness::pipeline::maybe_rebalance;
 use crate::linalg::mat::dist2;
+// lint:allow-file(no-wall-clock-in-sim) per-cycle wall-clock benchmark columns
 use std::time::{Duration, Instant};
 
 pub use crate::decomp::cycle_phase;

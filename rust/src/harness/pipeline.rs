@@ -10,6 +10,7 @@ use crate::decomp::Geometry;
 use crate::domain::{generators, Mesh1d, Partition};
 use crate::dydd::{balance_ratio, rebalance, DyddParams, RebalanceRecord};
 use crate::linalg::mat::dist2;
+// lint:allow-file(no-wall-clock-in-sim) experiment wall-clock timing columns
 use std::time::{Duration, Instant};
 
 /// The DyDD gate every pipeline entry point shares (single-shot runs and

@@ -188,10 +188,9 @@ pub fn render_table(id: TableId, full: bool) -> anyhow::Result<Table> {
                 let counts = split_counts(m, p, &scenarios::example1(1).l_in);
                 let rep = run_with_counts(&cfg, &counts, true)?;
                 if p == 2 {
-                    t.footnote = Some(format!(
-                        "T^1(m,n) = {} (sequential KF)",
-                        fmt_secs(rep.t_sequential.unwrap().as_secs_f64())
-                    ));
+                    let t1 = rep.t_sequential.expect("invariant: baseline requested");
+                    let t1 = fmt_secs(t1.as_secs_f64());
+                    t.footnote = Some(format!("T^1(m,n) = {t1} (sequential KF)"));
                 }
                 ddkf_perf_rows(&mut t, &rep);
             }
@@ -205,8 +204,8 @@ pub fn render_table(id: TableId, full: bool) -> anyhow::Result<Table> {
             for p in [2usize, 4, 8, 16, 32] {
                 let sc = scenarios::example3(p);
                 let out = balance(&sc.graph, &sc.l_in, &params)?;
-                let lmax = *out.l_fin.iter().max().unwrap();
-                let lmin = *out.l_fin.iter().min().unwrap();
+                let lmax = *out.l_fin.iter().max().expect("invariant: p >= 2 loads");
+                let lmin = *out.l_fin.iter().min().expect("invariant: p >= 2 loads");
                 t.row(&[
                     p.to_string(),
                     (p - 1).to_string(),
@@ -226,7 +225,8 @@ pub fn render_table(id: TableId, full: bool) -> anyhow::Result<Table> {
                 cfg.p = p;
                 let counts = split_counts(m, p, &scenarios::example1(1).l_in);
                 let rep = run_with_counts(&cfg, &counts, true)?;
-                t.row(&[p.to_string(), format!("{:.2e}", rep.error_dd_da.unwrap())]);
+                let err = rep.error_dd_da.expect("invariant: baseline requested");
+                t.row(&[p.to_string(), format!("{err:.2e}")]);
             }
             t
         }
@@ -247,10 +247,9 @@ pub fn render_table(id: TableId, full: bool) -> anyhow::Result<Table> {
                 let tdydd =
                     rep.dydd.as_ref().map(|d| d.dydd.t_dydd.as_secs_f64()).unwrap_or(0.0);
                 if p == ps[0] {
-                    t.footnote = Some(format!(
-                        "T^1(m,n) = {} (sequential KF)",
-                        fmt_secs(rep.t_sequential.unwrap().as_secs_f64())
-                    ));
+                    let t1 = rep.t_sequential.expect("invariant: baseline requested");
+                    let t1 = fmt_secs(t1.as_secs_f64());
+                    t.footnote = Some(format!("T^1(m,n) = {t1} (sequential KF)"));
                 }
                 t.row(&[
                     p.to_string(),
@@ -275,9 +274,13 @@ pub fn render_table(id: TableId, full: bool) -> anyhow::Result<Table> {
             for &p in ps {
                 cfg.p = p;
                 let c3 = rescale_counts(&scenarios::example3(p).l_in, m3);
-                let e3 = run_with_counts(&cfg, &c3, true)?.error_dd_da.unwrap();
+                let e3 = run_with_counts(&cfg, &c3, true)?
+                    .error_dd_da
+                    .expect("invariant: baseline requested");
                 let c4 = rescale_counts(&scenarios::example4(p).l_in, m4);
-                let e4 = run_with_counts(&cfg, &c4, true)?.error_dd_da.unwrap();
+                let e4 = run_with_counts(&cfg, &c4, true)?
+                    .error_dd_da
+                    .expect("invariant: baseline requested");
                 t.row(&[p.to_string(), format!("{e3:.2e}"), format!("{e4:.2e}")]);
             }
             t.footnote =

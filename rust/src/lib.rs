@@ -45,3 +45,4 @@ pub mod model;
 pub mod runtime;
 pub mod stream;
 pub mod util;
+pub mod verify;

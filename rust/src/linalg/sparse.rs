@@ -76,7 +76,24 @@ impl CsrMatrix {
             }
             m.indptr.push(m.indices.len());
         }
+        debug_assert_eq!(m.check_well_formed(), Ok(()));
         m
+    }
+
+    /// CSR structural well-formedness — the invariant every kernel in this
+    /// module assumes (see [`crate::verify::check_csr`]). Asserted in debug
+    /// builds after construction; public so callers holding a matrix from
+    /// any source can re-validate it.
+    pub fn check_well_formed(&self) -> Result<(), String> {
+        crate::verify::check_csr(self.rows, self.cols, &self.indptr, &self.indices)?;
+        if self.values.len() != self.indices.len() {
+            return Err(format!(
+                "values/indices length mismatch: {} vs {}",
+                self.values.len(),
+                self.indices.len()
+            ));
+        }
+        Ok(())
     }
 
     #[inline]
@@ -112,6 +129,7 @@ impl CsrMatrix {
 
     /// Dense materialization — oracle and artifact-padding paths only.
     pub fn to_dense(&self) -> Mat {
+        // lint:allow(no-dense-alloc-on-sparse-path) explicit dense oracle path
         let mut m = Mat::zeros(self.rows, self.cols);
         for r in 0..self.rows {
             let (cols, vals) = self.row(r);
@@ -178,6 +196,7 @@ impl CsrMatrix {
     pub fn weighted_gram(&self, d: &[f64]) -> Mat {
         assert_eq!(d.len(), self.rows);
         let n = self.cols;
+        // lint:allow(no-dense-alloc-on-sparse-path) dense Gram is the documented output
         let mut g = Mat::zeros(n, n);
         for r in 0..self.rows {
             let dr = d[r];
@@ -425,6 +444,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "hundreds of CG iterations; too slow interpreted")]
     fn pcg_solves_regularized_normal_equations() {
         for seed in 0..5u64 {
             let mut rng = Rng::new(400 + seed);

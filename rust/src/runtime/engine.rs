@@ -104,7 +104,7 @@ pub fn with_engine<T>(
         if rebuild {
             *slot = Some((dir.to_path_buf(), Rc::new(Engine::new(dir)?)));
         }
-        let engine = slot.as_ref().unwrap().1.clone();
+        let engine = slot.as_ref().expect("invariant: slot filled above").1.clone();
         drop(slot); // allow nested with_engine from f
         f(&engine)
     })

@@ -236,6 +236,39 @@ mod tests {
     }
 
     #[test]
+    fn store_handles_nan_records_without_desync() {
+        use crate::decomp::f64_key;
+        // The real rec_key paths are built from f64_key, which totally
+        // orders full bit patterns — so a NaN-valued record behaves like
+        // any other: insertable, removable by bitwise identity, stably
+        // placed in the canonical order, never a panic.
+        let key = |r: &(f64, f64)| [f64_key(r.0), f64_key(r.1), 0, 0];
+        let mut store: RecordStore<(f64, f64)> = RecordStore::new();
+        let d0 = ObsDelta {
+            tick: 0,
+            added: vec![(0.5, f64::NAN), (0.25, 1.0), (0.5, 1.0)],
+            removed: vec![],
+            moved: vec![],
+        };
+        store.apply(&d0, key).unwrap();
+        assert_eq!(store.len(), 3);
+        // +NaN sorts above every finite value in total_cmp order, so the
+        // NaN record lands after (0.5, 1.0).
+        let recs = store.records();
+        assert_eq!(recs[0].0, 0.25);
+        assert!(recs[2].1.is_nan());
+        // Removing by an equal bit pattern finds the record; a different
+        // NaN payload is a different record and errors as a desync.
+        let nan_rec = (0.5, f64::NAN);
+        let d1 = ObsDelta { tick: 1, added: vec![], removed: vec![nan_rec], moved: vec![] };
+        store.apply(&d1, key).unwrap();
+        assert_eq!(store.len(), 2);
+        let other = f64::from_bits(f64::NAN.to_bits() ^ 1);
+        let d2 = ObsDelta { tick: 2, added: vec![], removed: vec![(0.5, other)], moved: vec![] };
+        assert!(store.apply(&d2, key).is_err());
+    }
+
+    #[test]
     fn diff_replays_to_the_next_snapshot() {
         let prev = vec![(1u64, 1u64), (2, 2), (2, 2), (4, 4)];
         let next = vec![(2, 2), (3, 3), (4, 4), (4, 4), (9, 9)];

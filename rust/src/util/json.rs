@@ -191,7 +191,8 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .expect("invariant: number chars are ASCII");
         s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 
@@ -220,8 +221,8 @@ impl<'a> Parser<'a> {
                             if self.i + 4 >= self.b.len() {
                                 return Err(self.err("bad \\u escape"));
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|_| self.err("bad \\u escape"))?;
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             // Surrogate pairs are not needed for our manifests.
@@ -236,7 +237,7 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 code point.
                     let s = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = s.chars().next().unwrap();
+                    let c = s.chars().next().expect("invariant: peek saw a byte");
                     out.push(c);
                     self.i += c.len_utf8();
                 }

@@ -1,0 +1,186 @@
+//! Runtime invariant checkers for debug builds.
+//!
+//! Each checker is a pure function returning `Result<(), String>` so the
+//! same predicate can back a `debug_assert!` at a subsystem seam *and* be
+//! unit-tested directly, failure messages included. This workspace keeps
+//! `debug-assertions = true` in the `dev`/`test` profiles (see the root
+//! Cargo.toml), so every `cargo test` run exercises the seams; release
+//! builds compile them out entirely.
+//!
+//! Wired seams:
+//!
+//! - [`check_part_sizes`] + [`check_census_conserved`] after the
+//!   Migration/Update steps in [`crate::dydd::rebalance`]: boundary
+//!   shifting moves observations between subdomains — it must never
+//!   create, drop, or starve.
+//! - [`check_census_matches`] after delta ingestion in
+//!   [`crate::stream::StreamEngine::tick`]: the O(|delta|) incremental
+//!   census must stay bitwise-identical to a full recount.
+//! - [`check_csr`] after [`crate::linalg::CsrMatrix::from_rows`]: per-row
+//!   strictly ascending, in-bounds column indices and a well-bracketed
+//!   row pointer — what every sparse kernel silently assumes.
+//! - [`check_epoch_succession`] inside
+//!   [`crate::decomp::EpochTracker`]: block identities only move
+//!   forward, and a partition bump restarts data generations at zero.
+
+use crate::decomp::BlockEpoch;
+
+/// A bounds vector partitioning `{0..n}`: starts at 0, ends at `n`,
+/// strictly increasing (no empty interval).
+pub fn check_bounds(n: usize, bounds: &[usize]) -> Result<(), String> {
+    if bounds.len() < 2 {
+        return Err(format!("bounds has {} entries; need at least 2", bounds.len()));
+    }
+    if bounds[0] != 0 {
+        return Err(format!("bounds start at {}, not 0", bounds[0]));
+    }
+    let last = bounds[bounds.len() - 1];
+    if last != n {
+        return Err(format!("bounds end at {last}, not n = {n}"));
+    }
+    for w in bounds.windows(2) {
+        if w[0] >= w[1] {
+            return Err(format!("empty or unordered interval at bound {} >= {}", w[0], w[1]));
+        }
+    }
+    Ok(())
+}
+
+/// Partition well-formedness over any geometry: every subdomain owns at
+/// least one unknown and together they cover the domain exactly.
+pub fn check_part_sizes(n_unknowns: usize, sizes: &[usize]) -> Result<(), String> {
+    if sizes.is_empty() {
+        return Err("partition has no subdomains".into());
+    }
+    if let Some(i) = sizes.iter().position(|&s| s == 0) {
+        return Err(format!("subdomain {i} owns no unknowns"));
+    }
+    let total: usize = sizes.iter().sum();
+    if total != n_unknowns {
+        return Err(format!("subdomain sizes sum to {total}, domain has {n_unknowns}"));
+    }
+    Ok(())
+}
+
+/// Census conservation across a migration: boundary shifts move
+/// observations between subdomains, never create or drop them. (The
+/// per-subdomain counts legitimately change; the total must not.)
+pub fn check_census_conserved(before: &[usize], after: &[usize]) -> Result<(), String> {
+    let (b, a) = (before.iter().sum::<usize>(), after.iter().sum::<usize>());
+    if b != a {
+        return Err(format!("census total changed across migration: {b} -> {a}"));
+    }
+    Ok(())
+}
+
+/// Incremental-vs-recount census agreement: the streaming engine's
+/// O(|delta|) bookkeeping must be bitwise the full recount.
+pub fn check_census_matches(incremental: &[usize], recount: &[usize]) -> Result<(), String> {
+    if incremental != recount {
+        return Err(format!(
+            "incremental census desynced from the full recount: {incremental:?} vs {recount:?}"
+        ));
+    }
+    Ok(())
+}
+
+/// CSR well-formedness: `indptr` is monotone, starts at 0 and ends at
+/// `indices.len()`; every row's column indices are strictly ascending and
+/// in bounds.
+pub fn check_csr(
+    rows: usize,
+    cols: usize,
+    indptr: &[usize],
+    indices: &[usize],
+) -> Result<(), String> {
+    if indptr.len() != rows + 1 {
+        return Err(format!("indptr has {} entries for {rows} rows", indptr.len()));
+    }
+    if indptr[0] != 0 || indptr[rows] != indices.len() {
+        return Err(format!(
+            "indptr brackets [{}, {}] do not span {} stored entries",
+            indptr[0],
+            indptr[rows],
+            indices.len()
+        ));
+    }
+    if let Some(r) = (0..rows).find(|&r| indptr[r] > indptr[r + 1]) {
+        return Err(format!("indptr decreases at row {r}"));
+    }
+    for r in 0..rows {
+        let row = &indices[indptr[r]..indptr[r + 1]];
+        if let Some(&c) = row.iter().find(|&&c| c >= cols) {
+            return Err(format!("row {r}: column {c} out of range for {cols} columns"));
+        }
+        if let Some(w) = row.windows(2).find(|w| w[0] >= w[1]) {
+            return Err(format!("row {r}: columns not strictly ascending at {} >= {}", w[0], w[1]));
+        }
+    }
+    Ok(())
+}
+
+/// Epoch-tracker monotonicity: a block's identity only moves forward —
+/// either the data generation advances under a fixed partition epoch, or
+/// the partition epoch advances and the data generation restarts at 0.
+pub fn check_epoch_succession(prev: BlockEpoch, next: BlockEpoch) -> Result<(), String> {
+    let ok = (next.partition == prev.partition && next.data > prev.data)
+        || (next.partition > prev.partition && next.data == 0);
+    if ok {
+        Ok(())
+    } else {
+        Err(format!("epoch moved backwards or sideways: {prev:?} -> {next:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_checker_accepts_and_rejects() {
+        assert_eq!(check_bounds(10, &[0, 3, 10]), Ok(()));
+        assert!(check_bounds(10, &[0]).is_err(), "too short");
+        assert!(check_bounds(10, &[1, 10]).is_err(), "bad start");
+        assert!(check_bounds(10, &[0, 9]).is_err(), "bad end");
+        assert!(check_bounds(10, &[0, 5, 5, 10]).is_err(), "empty interval");
+    }
+
+    #[test]
+    fn part_sizes_checker_accepts_and_rejects() {
+        assert_eq!(check_part_sizes(12, &[4, 4, 4]), Ok(()));
+        assert!(check_part_sizes(12, &[]).is_err(), "no subdomains");
+        assert!(check_part_sizes(12, &[6, 0, 6]).is_err(), "starved subdomain");
+        assert!(check_part_sizes(12, &[6, 7]).is_err(), "over-cover");
+    }
+
+    #[test]
+    fn census_checkers_accept_and_reject() {
+        assert_eq!(check_census_conserved(&[5, 1], &[3, 3]), Ok(()));
+        assert!(check_census_conserved(&[5, 1], &[3, 2]).is_err());
+        assert_eq!(check_census_matches(&[2, 2], &[2, 2]), Ok(()));
+        assert!(check_census_matches(&[2, 2], &[3, 1]).is_err());
+    }
+
+    #[test]
+    fn csr_checker_accepts_and_rejects() {
+        // 2x4, rows {0,2} and {1,3}.
+        assert_eq!(check_csr(2, 4, &[0, 2, 4], &[0, 2, 1, 3]), Ok(()));
+        assert!(check_csr(2, 4, &[0, 2], &[0, 2]).is_err(), "short indptr");
+        assert!(check_csr(2, 4, &[0, 2, 3], &[0, 2, 1, 3]).is_err(), "bad bracket");
+        assert!(check_csr(3, 4, &[0, 3, 2, 3], &[0, 1, 2]).is_err(), "decreasing indptr");
+        assert!(check_csr(2, 4, &[0, 2, 4], &[0, 4, 1, 3]).is_err(), "column range");
+        assert!(check_csr(2, 4, &[0, 2, 4], &[2, 0, 1, 3]).is_err(), "unsorted row");
+        assert!(check_csr(2, 4, &[0, 2, 4], &[0, 0, 1, 3]).is_err(), "duplicate column");
+    }
+
+    #[test]
+    fn epoch_succession_accepts_and_rejects() {
+        let e = |partition, data| BlockEpoch { partition, data };
+        assert_eq!(check_epoch_succession(e(0, 0), e(0, 1)), Ok(()));
+        assert_eq!(check_epoch_succession(e(0, 7), e(1, 0)), Ok(()));
+        assert!(check_epoch_succession(e(0, 1), e(0, 1)).is_err(), "no progress");
+        assert!(check_epoch_succession(e(0, 2), e(0, 1)).is_err(), "data backwards");
+        assert!(check_epoch_succession(e(1, 0), e(0, 0)).is_err(), "partition backwards");
+        assert!(check_epoch_succession(e(0, 3), e(1, 1)).is_err(), "bump without reset");
+    }
+}

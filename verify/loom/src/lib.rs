@@ -1,0 +1,112 @@
+//! Loom-instrumented plumbing for model checking the coordinator
+//! protocol replica (`dydd_da::coordinator::protocol`).
+//!
+//! The real coordinator communicates over `std::sync::mpsc`, which loom
+//! cannot instrument. [`chan`] is a small faithful replica — FIFO
+//! ordering, multi-producer/single-consumer, blocking `recv`, disconnect
+//! when the last sender (or the receiver) drops — built from loom's
+//! `Mutex`/`Condvar` so the model checker can explore every schedule and
+//! every memory ordering, including the lost-wakeup and deadlock classes
+//! the exhaustive DFS in `coordinator::model` abstracts away.
+//!
+//! The scenarios live in `tests/loom_coordinator.rs` and are gated on
+//! `--cfg loom` (see rust/README.md, "Correctness tooling").
+
+pub mod chan {
+    use loom::sync::{Arc, Condvar, Mutex};
+    use std::collections::VecDeque;
+
+    struct Inner<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+        receiver_alive: bool,
+    }
+
+    struct Shared<T> {
+        inner: Mutex<Inner<T>>,
+        ready: Condvar,
+    }
+
+    pub struct Sender<T>(Arc<Shared<T>>);
+    pub struct Receiver<T>(Arc<Shared<T>>);
+
+    /// The receiver is gone; the value could not be delivered.
+    #[derive(Debug, PartialEq, Eq)]
+    pub struct SendError;
+
+    /// Every sender is gone and the queue is drained.
+    #[derive(Debug, PartialEq, Eq)]
+    pub struct RecvError;
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                senders: 1,
+                receiver_alive: true,
+            }),
+            ready: Condvar::new(),
+        });
+        (Sender(shared.clone()), Receiver(shared))
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            self.0.inner.lock().unwrap().senders += 1;
+            Sender(self.0.clone())
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut inner = self.0.inner.lock().unwrap();
+            inner.senders -= 1;
+            if inner.senders == 0 {
+                // Last sender gone: wake a blocked recv so it reports the
+                // disconnect instead of sleeping forever (the lost-wakeup
+                // hazard this harness exists to check).
+                self.0.ready.notify_all();
+            }
+        }
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, value: T) -> Result<(), SendError> {
+            let mut inner = self.0.inner.lock().unwrap();
+            if !inner.receiver_alive {
+                return Err(SendError);
+            }
+            inner.queue.push_back(value);
+            self.0.ready.notify_all();
+            Ok(())
+        }
+    }
+
+    impl<T> Receiver<T> {
+        /// Block until a value arrives or every sender is gone.
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut inner = self.0.inner.lock().unwrap();
+            loop {
+                if let Some(v) = inner.queue.pop_front() {
+                    return Ok(v);
+                }
+                if inner.senders == 0 {
+                    return Err(RecvError);
+                }
+                inner = self.0.ready.wait(inner).unwrap();
+            }
+        }
+
+        /// Non-blocking pop — the polling primitive `recv_diagnosed`-style
+        /// leaders use alongside thread-liveness flags.
+        pub fn try_recv(&self) -> Option<T> {
+            self.0.inner.lock().unwrap().queue.pop_front()
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            self.0.inner.lock().unwrap().receiver_alive = false;
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Loom model checking of the leader/worker protocol replica.
+//!
+//! Each `loom::model` body below is one coordinator scenario run on real
+//! (loom-virtualized) threads over the instrumented channel in
+//! `dydd_loom::chan`. Loom exhaustively explores thread schedules and
+//! memory orderings; a deadlock or lost wakeup in any schedule fails the
+//! test. Run with:
+//!
+//!   RUSTFLAGS="--cfg loom" cargo test --manifest-path verify/loom/Cargo.toml \
+//!       --release --test loom_coordinator
+#![cfg(loom)]
+
+use dydd_da::coordinator::protocol::{Rep, Req, WorkerModel};
+use dydd_loom::chan::{channel, Receiver, Sender};
+use loom::sync::atomic::{AtomicBool, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+/// `worker_main` over the replica: serve messages until `Shutdown`, a
+/// protocol error, or leader disconnect; flag the thread as finished on
+/// the way out (the loom stand-in for `JoinHandle::is_finished`).
+fn worker(id: usize, rx: Receiver<Req>, tx: Sender<Rep>, finished: Arc<AtomicBool>) {
+    let mut wm = WorkerModel::new(id);
+    while let Ok(req) = rx.recv() {
+        match wm.step(req) {
+            Some(rep) => {
+                if tx.send(rep).is_err() {
+                    break;
+                }
+            }
+            None => break,
+        }
+        if wm.stopped {
+            break;
+        }
+    }
+    finished.store(true, Ordering::Release);
+}
+
+/// The fixed leader's receive: drain the queue first, then consult the
+/// liveness flags — the loom mirror of `WorkerPool::recv_diagnosed`.
+/// Returns `Err(worker)` when a finished worker is diagnosed.
+fn recv_diagnosed(
+    from_workers: &Receiver<Rep>,
+    finished: &[Arc<AtomicBool>],
+) -> Result<Rep, usize> {
+    loop {
+        if let Some(rep) = from_workers.try_recv() {
+            return Ok(rep);
+        }
+        if let Some(dead) = finished.iter().position(|f| f.load(Ordering::Acquire)) {
+            // One more drain before bailing: anything the worker managed
+            // to send before dying must not be lost.
+            if let Some(rep) = from_workers.try_recv() {
+                return Ok(rep);
+            }
+            return Err(dead);
+        }
+        thread::yield_now();
+    }
+}
+
+struct Pool {
+    to_workers: Vec<Sender<Req>>,
+    from_workers: Receiver<Rep>,
+    finished: Vec<Arc<AtomicBool>>,
+    joins: Vec<thread::JoinHandle<()>>,
+}
+
+fn spawn_pool(p: usize) -> Pool {
+    let (to_leader, from_workers) = channel::<Rep>();
+    let mut to_workers = Vec::new();
+    let mut finished = Vec::new();
+    let mut joins = Vec::new();
+    for id in 0..p {
+        let (tx, rx) = channel::<Req>();
+        to_workers.push(tx);
+        let ltx = to_leader.clone();
+        let fin = Arc::new(AtomicBool::new(false));
+        finished.push(fin.clone());
+        joins.push(thread::spawn(move || worker(id, rx, ltx, fin)));
+    }
+    drop(to_leader);
+    Pool { to_workers, from_workers, finished, joins }
+}
+
+/// Solve dispatch + epoch reuse: Setup/solve, then Retain+RefreshB/solve.
+/// Every schedule must complete with epoch-consistent solutions and shut
+/// down cleanly.
+#[test]
+fn solve_dispatch_and_epoch_reuse_complete() {
+    loom::model(|| {
+        let pool = spawn_pool(2);
+        // Epoch 0: extract both blocks, await both acks.
+        for tx in &pool.to_workers {
+            tx.send(Req::Setup { epoch: 0 }).unwrap();
+        }
+        for _ in 0..2 {
+            let rep = pool.from_workers.recv().unwrap();
+            assert!(matches!(rep, Rep::Ready { .. }), "{rep:?}");
+        }
+        // Epoch 1: pure cache reuse, then one two-phase sweep.
+        pool.to_workers[0].send(Req::Retain { epoch: 0 }).unwrap();
+        pool.to_workers[1].send(Req::RefreshB { epoch: 0 }).unwrap();
+        for _ in 0..2 {
+            let rep = pool.from_workers.recv().unwrap();
+            assert!(matches!(rep, Rep::Ready { .. }), "{rep:?}");
+        }
+        for (i, tx) in pool.to_workers.iter().enumerate() {
+            tx.send(Req::Solve).unwrap();
+            match pool.from_workers.recv().unwrap() {
+                Rep::Solution { worker, epoch } => assert_eq!((worker, epoch), (i, 0)),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        for tx in &pool.to_workers {
+            tx.send(Req::Shutdown).unwrap();
+        }
+        for j in pool.joins {
+            j.join().unwrap();
+        }
+    });
+}
+
+/// Worker death mid-assemble: the victim consumes its `Setup` and unwinds
+/// without replying. The healthy worker's sender keeps the shared channel
+/// connected, so a blocking `recv` would deadlock — the polling leader
+/// must diagnose the victim in every schedule, without losing anything
+/// the healthy worker sent.
+#[test]
+fn worker_death_is_diagnosed_not_deadlocked() {
+    loom::model(|| {
+        let (to_leader, from_workers) = channel::<Rep>();
+        let finished =
+            vec![Arc::new(AtomicBool::new(false)), Arc::new(AtomicBool::new(false))];
+        let mut to_workers = Vec::new();
+        let mut joins = Vec::new();
+        // Worker 0: healthy.
+        let (tx0, rx0) = channel::<Req>();
+        to_workers.push(tx0);
+        let ltx = to_leader.clone();
+        let fin = finished[0].clone();
+        joins.push(thread::spawn(move || worker(0, rx0, ltx, fin)));
+        // Worker 1: dies handling its first message (panicking solver).
+        let (tx1, rx1) = channel::<Req>();
+        to_workers.push(tx1);
+        let ltx = to_leader.clone();
+        let fin = finished[1].clone();
+        joins.push(thread::spawn(move || {
+            let _ = rx1.recv();
+            drop(ltx); // unwind: sender dropped, no reply
+            fin.store(true, Ordering::Release);
+        }));
+        drop(to_leader);
+
+        for tx in &to_workers {
+            tx.send(Req::Setup { epoch: 0 }).unwrap();
+        }
+        let mut readys = 0;
+        let diagnosed = loop {
+            match recv_diagnosed(&from_workers, &finished) {
+                Ok(Rep::Ready { .. }) => readys += 1,
+                Ok(other) => panic!("unexpected {other:?}"),
+                Err(dead) => break dead,
+            }
+            assert!(readys <= 1, "the victim never acknowledges");
+        };
+        assert_eq!(diagnosed, 1, "diagnosis must name the victim");
+        // Drop-time shutdown with a dead worker: the failed send to the
+        // victim is ignored, the healthy worker still joins.
+        let _ = to_workers[0].send(Req::Shutdown);
+        let _ = to_workers[1].send(Req::Shutdown);
+        for j in joins {
+            let _ = j.join();
+        }
+    });
+}
+
+/// Drop-time shutdown: one worker is told to stop, the other observes the
+/// leader hanging up (every sender dropped). Both paths must wake a
+/// blocked `recv` — no lost wakeup, no leaked thread.
+#[test]
+fn shutdown_and_disconnect_terminate_workers() {
+    loom::model(|| {
+        let mut pool = spawn_pool(2);
+        pool.to_workers[0].send(Req::Shutdown).unwrap();
+        pool.to_workers.clear(); // worker 1 sees the disconnect
+        for j in pool.joins.drain(..) {
+            j.join().unwrap();
+        }
+        assert!(pool.finished.iter().all(|f| f.load(Ordering::Acquire)));
+        // With every worker gone the shared reply channel reports
+        // disconnect instead of blocking the leader forever.
+        assert!(pool.from_workers.recv().is_err());
+    });
+}

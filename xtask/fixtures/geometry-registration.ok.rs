@@ -1,0 +1,5 @@
+// lint:fixture-path(rust/src/decomp/fixture.rs)
+// IntervalGeometry is on the registry roster and golden-covered.
+impl Geometry for IntervalGeometry {
+    type Part = Partition;
+}

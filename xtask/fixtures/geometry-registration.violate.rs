@@ -1,0 +1,6 @@
+// lint:fixture-path(rust/src/decomp/fixture.rs)
+// A Geometry impl that is neither in decomp/registry.rs GEOMETRIES nor
+// covered by tests/decomp_golden.rs must not ship.
+impl Geometry for GhostGeometry {
+    type Part = Partition;
+}

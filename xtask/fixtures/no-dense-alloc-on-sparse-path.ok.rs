@@ -1,0 +1,7 @@
+// lint:fixture-path(rust/src/linalg/sparse.rs)
+// O(n_loc) state is fine on the sparse path.
+pub fn gram_diag(a: &CsrMatrix, d: &[f64]) -> Vec<f64> {
+    let mut diag = vec![0.0; a.cols];
+    a.accumulate_diag(&mut diag, d);
+    diag
+}

@@ -1,0 +1,8 @@
+// lint:fixture-path(rust/src/linalg/sparse.rs)
+// An O(n_loc^2) dense allocation on the sparse path undoes what the
+// CSR/CG backend exists for.
+pub fn gram(a: &CsrMatrix, d: &[f64]) -> Mat {
+    let n = a.cols;
+    let g = Mat::zeros(n, n);
+    accumulate(g, a, d)
+}

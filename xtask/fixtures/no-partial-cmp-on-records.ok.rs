@@ -1,0 +1,7 @@
+// lint:fixture-path(rust/src/stream/fixture.rs)
+// total_cmp is the NaN-safe total order the record keys are built on.
+pub fn worst(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[0]
+}

@@ -1,0 +1,8 @@
+// lint:fixture-path(rust/src/stream/fixture.rs)
+// Sorting record keys through partial_cmp silently misorders NaN values —
+// exactly the bug the stream multiset diff cannot tolerate.
+pub fn worst(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("comparable"));
+    v[0]
+}

@@ -1,0 +1,13 @@
+// lint:fixture-path(rust/src/util/fixture.rs)
+// Result with context on fallible paths; unwrap stays legal in tests.
+pub fn head(xs: &[u32]) -> anyhow::Result<u32> {
+    xs.first().copied().ok_or_else(|| anyhow::anyhow!("empty input"))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(super::head(&[7]).unwrap(), 7);
+    }
+}

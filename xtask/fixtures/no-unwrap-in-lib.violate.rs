@@ -1,0 +1,8 @@
+// lint:fixture-path(rust/src/util/fixture.rs)
+// Library paths must not unwrap or panic without an invariant message.
+pub fn head(xs: &[u32]) -> u32 {
+    if xs.is_empty() {
+        panic!("empty");
+    }
+    xs.first().copied().unwrap()
+}

@@ -1,0 +1,8 @@
+// lint:fixture-path(rust/src/harness/fixture.rs)
+// The simulated critical path is pure Duration arithmetic over per-block
+// costs — no clock reads.
+use std::time::Duration;
+
+pub fn t_critical(per_block: &[Duration]) -> Duration {
+    per_block.iter().copied().max().unwrap_or(Duration::ZERO)
+}

@@ -1,0 +1,9 @@
+// lint:fixture-path(rust/src/harness/fixture.rs)
+// Reading the wall clock inside a simulated-time path makes t_critical
+// depend on the host machine.
+use std::time::{Duration, Instant};
+
+pub fn t_critical_wrong() -> Duration {
+    let t0 = Instant::now();
+    t0.elapsed()
+}

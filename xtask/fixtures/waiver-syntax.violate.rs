@@ -1,0 +1,8 @@
+// lint:fixture-path(rust/src/harness/fixture.rs)
+// A waiver with no reason, and one naming a rule that does not exist —
+// both are findings, not silent passes.
+// lint:allow(no-wall-clock-in-sim)
+pub fn nothing() {}
+
+// lint:allow(no-such-rule) the rule name is checked against the roster
+pub fn also_nothing() {}

@@ -1,0 +1,347 @@
+//! Minimal Rust source scanner for the repo lint.
+//!
+//! Strips comments and literal contents (strings, raw strings, chars),
+//! tracks `#[cfg(test)]` / `#[test]` regions by brace depth, and collects
+//! `lint:allow` waivers out of comments. Deliberately lexical and
+//! dependency-free: the builder containers this runs in have no crates.io
+//! access, which rules out `syn`; every rule in [`crate::rules`] is
+//! token-shaped (forbidden identifiers and call forms), so a faithful
+//! comment/string/char-aware token stream is all the precision needed.
+//!
+//! Known approximation: a `#[cfg(test)]` attribute is assumed to annotate
+//! a braced item (`mod tests { .. }`, `fn case() { .. }`) — the only form
+//! the codebase uses. A braceless `#[cfg(test)] use ..;` would extend the
+//! test region to the next braced item.
+
+/// One source line after stripping.
+#[derive(Debug, Default)]
+pub struct Line {
+    /// Source text with comments removed and literal contents blanked
+    /// (quotes kept so tokens cannot merge across a literal).
+    pub code: String,
+    /// Comment text on the line (line and block comments, concatenated).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` region or `#[test]` function body.
+    pub in_test: bool,
+}
+
+/// One parsed `lint:allow` / `lint:allow-file` comment.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    pub reason: String,
+    /// `lint:allow-file` (whole file) vs `lint:allow` (one line).
+    pub file_scoped: bool,
+    /// 0-based line the waiver comment sits on.
+    pub at: usize,
+    /// 0-based line a line-scoped waiver covers: its own line when it
+    /// trails code, otherwise the next line that has code.
+    pub target: usize,
+}
+
+/// A `lint:allow` comment the parser could not make sense of.
+#[derive(Debug, Clone)]
+pub struct BadWaiver {
+    /// 0-based line of the malformed comment.
+    pub at: usize,
+    pub why: String,
+}
+
+/// A scanned source file: stripped lines plus the waivers found in it.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative `/`-separated path the rules scope on.
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub waivers: Vec<Waiver>,
+    pub bad_waivers: Vec<BadWaiver>,
+}
+
+impl SourceFile {
+    /// Whether `rule` is waived at 0-based `line` (file waivers cover
+    /// everything; line waivers cover exactly their target line).
+    pub fn waived(&self, rule: &str, line: usize) -> bool {
+        self.waivers
+            .iter()
+            .any(|w| w.rule == rule && (w.file_scoped || w.target == line))
+    }
+}
+
+enum Mode {
+    Code,
+    Str,
+    RawStr(usize),
+    Chr,
+    Block(usize),
+}
+
+/// Scan `src` into stripped lines, test regions and waivers. `path` is
+/// recorded verbatim (the rules scope on it).
+pub fn scan(path: &str, src: &str) -> SourceFile {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let prev_ident = i > 0 && is_ident(chars[i - 1]);
+                let lit = if prev_ident { None } else { literal_prefix(&chars, i) };
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    i += 2;
+                    while i < chars.len() && chars[i] != '\n' {
+                        cur.comment.push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if let Some((adv, hashes, raw)) = lit {
+                    cur.code.push('"');
+                    mode = if raw { Mode::RawStr(hashes) } else { Mode::Str };
+                    i += adv;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    if is_char_literal(&chars, i) {
+                        mode = Mode::Chr;
+                    }
+                    i += 1;
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        lines.push(std::mem::take(&mut cur));
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                let tail = &chars[i + 1..];
+                if c == '"' && tail.len() >= hashes && tail[..hashes].iter().all(|&h| h == '#')
+                {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Chr => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    mark_test_regions(&mut lines);
+    let (waivers, bad_waivers) = collect_waivers(&lines);
+    SourceFile { path: path.to_string(), lines, waivers, bad_waivers }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// String-literal opener at `i`: plain `"`, raw `r#*"`, byte `b"` or raw
+/// byte `br#*"`. Returns (chars to skip past the opener, hash count,
+/// is_raw).
+fn literal_prefix(chars: &[char], i: usize) -> Option<(usize, usize, bool)> {
+    match chars[i] {
+        '"' => Some((1, 0, false)),
+        'r' | 'b' => {
+            let mut j = i + 1;
+            if chars[i] == 'b' && chars.get(j) == Some(&'"') {
+                return Some((2, 0, false));
+            }
+            if chars[i] == 'b' {
+                if chars.get(j) != Some(&'r') {
+                    return None;
+                }
+                j += 1;
+            }
+            let mut hashes = 0;
+            while chars.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if chars.get(j) == Some(&'"') {
+                Some((j + 1 - i, hashes, true))
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// `'` at `i`: char literal or lifetime? `'\..'` and `'<punct>'` are
+/// chars; `'x` followed by anything but a closing quote is a lifetime.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(c) if is_ident(*c) => chars.get(i + 2) == Some(&'\''),
+        Some(_) => true,
+        None => false,
+    }
+}
+
+/// Mark lines inside `#[cfg(test)]` / `#[test]` items: after one of those
+/// attributes, the next `{` opens a test region that closes at its
+/// matching `}` (regions nest; brace depth is tracked on stripped code).
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut close_at: Vec<i64> = Vec::new();
+    let mut pending = false;
+    for line in lines.iter_mut() {
+        let code = line.code.clone();
+        if code.contains("#[cfg(test)]")
+            || code.contains("#[cfg(all(test")
+            || code.contains("#[test]")
+        {
+            pending = true;
+        }
+        let mut in_test = !close_at.is_empty();
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        close_at.push(depth);
+                        pending = false;
+                        in_test = true;
+                    }
+                }
+                '}' => {
+                    if close_at.last() == Some(&depth) {
+                        close_at.pop();
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        line.in_test = in_test || !close_at.is_empty();
+    }
+}
+
+/// Parse `lint:allow(<rule>) reason` / `lint:allow-file(<rule>) reason`
+/// comments. A line-scoped waiver trailing code covers its own line; one
+/// on a comment-only line covers the next line that has code.
+fn collect_waivers(lines: &[Line]) -> (Vec<Waiver>, Vec<BadWaiver>) {
+    let mut waivers = Vec::new();
+    let mut bad = Vec::new();
+    for (at, line) in lines.iter().enumerate() {
+        let comment = &line.comment;
+        let Some(pos) = comment.find("lint:allow") else { continue };
+        let rest = &comment[pos + "lint:allow".len()..];
+        let (file_scoped, rest) = match rest.strip_prefix("-file") {
+            Some(r) => (true, r),
+            None => (false, rest),
+        };
+        let Some(rest) = rest.strip_prefix('(') else {
+            bad.push(BadWaiver { at, why: "expected `(` after lint:allow".into() });
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            bad.push(BadWaiver { at, why: "unclosed `(` in lint:allow".into() });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let reason = rest[close + 1..].trim().to_string();
+        if reason.is_empty() {
+            bad.push(BadWaiver {
+                at,
+                why: format!("waiver for `{rule}` has no reason — `// lint:allow({rule}) why`"),
+            });
+            continue;
+        }
+        let target = if line.code.trim().is_empty() {
+            match lines[at + 1..].iter().position(|l| !l.code.trim().is_empty()) {
+                Some(off) => at + 1 + off,
+                None => at,
+            }
+        } else {
+            at
+        };
+        waivers.push(Waiver { rule, reason, file_scoped, at, target });
+    }
+    (waivers, bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_strings_and_chars() {
+        let src = "let a = \"panic!()\"; // panic! here\nlet b = '\\''; /* Instant */ let c = 'x';\nlet l: &'static str = r#\"Instant\"#;\n";
+        let sf = scan("rust/src/x.rs", src);
+        assert_eq!(sf.lines.len(), 3);
+        assert!(!sf.lines[0].code.contains("panic"));
+        assert!(sf.lines[0].comment.contains("panic! here"));
+        assert!(!sf.lines[1].code.contains("Instant"));
+        assert!(sf.lines[1].code.contains("let c ="));
+        assert!(sf.lines[2].code.contains("&'static str"));
+        assert!(!sf.lines[2].code.contains("Instant"));
+    }
+
+    #[test]
+    fn marks_cfg_test_regions() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn lib2() {}\n";
+        let sf = scan("rust/src/x.rs", src);
+        assert!(!sf.lines[0].in_test);
+        assert!(sf.lines[3].in_test);
+        assert!(!sf.lines[5].in_test);
+    }
+
+    #[test]
+    fn parses_waivers_and_targets() {
+        let src = "// lint:allow(no-unwrap-in-lib) argument contract\nx.unwrap();\ny.unwrap(); // lint:allow-file(no-wall-clock-in-sim) telemetry\nz(); // lint:allow(no-unwrap-in-lib)\n";
+        let sf = scan("rust/src/x.rs", src);
+        assert_eq!(sf.waivers.len(), 2);
+        assert!(sf.waived("no-unwrap-in-lib", 1));
+        assert!(!sf.waived("no-unwrap-in-lib", 2));
+        assert!(sf.waived("no-wall-clock-in-sim", 0));
+        // The reasonless waiver on line 3 is malformed, not silently valid.
+        assert_eq!(sf.bad_waivers.len(), 1);
+        assert_eq!(sf.bad_waivers[0].at, 3);
+    }
+}

@@ -1,0 +1,186 @@
+//! `cargo xtask` — repo-local developer tooling.
+//!
+//! Subcommands:
+//!
+//! * `cargo xtask lint` — run the five repo-specific lint rules over
+//!   `rust/src/**` (see [`rules`] and `rust/README.md` § Correctness
+//!   tooling). Exit 1 on any finding.
+//! * `cargo xtask lint --check-fixtures` — self-test: every fixture in
+//!   `xtask/fixtures/` named `<rule>.violate.rs` must trip exactly that
+//!   rule and every `*.ok.rs` must scan clean, so the rules cannot
+//!   silently rot.
+
+mod lex;
+mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let argv: Vec<&str> = args.iter().map(String::as_str).collect();
+    match argv.as_slice() {
+        ["lint"] => lint_tree(),
+        ["lint", "--check-fixtures"] => check_fixtures(),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--check-fixtures]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// The repo root: one level above this crate's manifest.
+fn repo_root() -> PathBuf {
+    let manifest =
+        std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").into());
+    let root = Path::new(&manifest).parent().expect("invariant: xtask sits under the repo root");
+    root.to_path_buf()
+}
+
+/// All `.rs` files under `dir`, depth-first, sorted for stable output.
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", dir.display()))
+        .map(|e| e.expect("invariant: readable dir entry").path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk(&path, out);
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn read(path: &Path) -> String {
+    fs::read_to_string(path).unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()))
+}
+
+/// Scan `rust/src/**` and apply every rule; print findings and fail on any.
+fn lint_tree() -> ExitCode {
+    let root = repo_root();
+    let mut paths = Vec::new();
+    walk(&root.join("rust").join("src"), &mut paths);
+    let files: Vec<lex::SourceFile> = paths
+        .iter()
+        .map(|p| {
+            let rel = p
+                .strip_prefix(&root)
+                .expect("invariant: walked paths live under the root")
+                .to_string_lossy()
+                .replace('\\', "/");
+            lex::scan(&rel, &read(p))
+        })
+        .collect();
+    let registry = read(&root.join("rust/src/decomp/registry.rs"));
+    let golden = read(&root.join("rust/tests/decomp_golden.rs"));
+    let mut findings = Vec::new();
+    for sf in &files {
+        findings.extend(rules::lint_file(sf));
+    }
+    findings.extend(rules::lint_geometry_registration(&files, &registry, &golden));
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+    }
+    if findings.is_empty() {
+        println!("xtask lint: clean ({} files, {} rules)", files.len(), rules::RULES.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("xtask lint: {} finding(s) in {} files scanned", findings.len(), files.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Self-test the rules against the checked-in fixture corpus.
+fn check_fixtures() -> ExitCode {
+    let root = repo_root();
+    let mut paths = Vec::new();
+    walk(&root.join("xtask").join("fixtures"), &mut paths);
+    let registry = read(&root.join("rust/src/decomp/registry.rs"));
+    let golden = read(&root.join("rust/tests/decomp_golden.rs"));
+    let mut failures = 0usize;
+    let mut checked = 0usize;
+    for path in &paths {
+        let name = path.file_name().expect("invariant: walked files are named").to_string_lossy();
+        let Some(expectation) = Expectation::from_name(&name) else {
+            println!("SKIP {name}: not *.violate.rs / *.ok.rs");
+            continue;
+        };
+        let text = read(path);
+        let mapped = fixture_path(&text);
+        let sf = lex::scan(&mapped, &text);
+        let mut findings = rules::lint_file(&sf);
+        findings.extend(rules::lint_geometry_registration(
+            std::slice::from_ref(&sf),
+            &registry,
+            &golden,
+        ));
+        checked += 1;
+        match expectation.judge(&findings) {
+            Ok(()) => println!("ok   {name}"),
+            Err(why) => {
+                println!("FAIL {name}: {why}");
+                for f in &findings {
+                    println!("     {}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+                }
+                failures += 1;
+            }
+        }
+    }
+    println!("xtask lint --check-fixtures: {checked} fixtures, {failures} failure(s)");
+    if failures == 0 && checked > 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+/// What a fixture's filename promises about its findings.
+enum Expectation {
+    /// `<rule>.violate.rs`: at least one finding, all of `rule`.
+    Violates(String),
+    /// `*.ok.rs`: no findings at all.
+    Clean,
+}
+
+impl Expectation {
+    fn from_name(name: &str) -> Option<Self> {
+        if let Some(stem) = name.strip_suffix(".violate.rs") {
+            Some(Expectation::Violates(stem.to_string()))
+        } else {
+            name.strip_suffix(".ok.rs").map(|_| Expectation::Clean)
+        }
+    }
+
+    fn judge(&self, findings: &[rules::Finding]) -> Result<(), String> {
+        match self {
+            Expectation::Clean if findings.is_empty() => Ok(()),
+            Expectation::Clean => {
+                Err(format!("expected clean, got {} finding(s)", findings.len()))
+            }
+            Expectation::Violates(rule) => {
+                if findings.is_empty() {
+                    return Err(format!("expected a `{rule}` finding, lint came back clean"));
+                }
+                if let Some(other) = findings.iter().find(|f| f.rule != rule) {
+                    return Err(format!("expected only `{rule}`, got `{}` too", other.rule));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Fixtures carry a `lint:fixture-path(<repo-relative path>)` directive so
+/// the path-scoped rules see them where they claim to live.
+fn fixture_path(text: &str) -> String {
+    let default = "rust/src/fixture.rs".to_string();
+    let Some(at) = text.find("lint:fixture-path(") else { return default };
+    let rest = &text[at + "lint:fixture-path(".len()..];
+    match rest.find(')') {
+        Some(end) => rest[..end].trim().to_string(),
+        None => default,
+    }
+}

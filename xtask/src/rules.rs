@@ -1,0 +1,301 @@
+//! The five repo-specific lint rules.
+//!
+//! Each rule guards an invariant the DD-KF sims otherwise re-verify by
+//! hand (see `rust/README.md` § Correctness tooling for the rationale and
+//! the waiver syntax). Rules operate on the stripped token stream of
+//! [`crate::lex::scan`], skip `#[cfg(test)]` / `#[test]` regions, and
+//! honour `// lint:allow(<rule>) reason` waivers.
+
+use crate::lex::SourceFile;
+
+/// One lint violation.
+#[derive(Debug)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+pub const NO_PARTIAL_CMP: &str = "no-partial-cmp-on-records";
+pub const NO_WALL_CLOCK: &str = "no-wall-clock-in-sim";
+pub const NO_DENSE_ALLOC: &str = "no-dense-alloc-on-sparse-path";
+pub const NO_UNWRAP: &str = "no-unwrap-in-lib";
+pub const GEOMETRY_REGISTRATION: &str = "geometry-registration";
+/// Pseudo-rule for malformed waiver comments (cannot itself be waived).
+pub const WAIVER_SYNTAX: &str = "waiver-syntax";
+
+/// Every rule name a waiver may reference.
+pub const RULES: [&str; 5] =
+    [NO_PARTIAL_CMP, NO_WALL_CLOCK, NO_DENSE_ALLOC, NO_UNWRAP, GEOMETRY_REGISTRATION];
+
+/// Files where wall-clock reads are the point: the timer utility, DyDD
+/// migration timing (T_DyDD is a measured quantity in the paper's tables)
+/// and the coordinator's wall-clock telemetry columns. Everything else
+/// must keep `t_critical` on the simulated clock or carry a waiver.
+const WALL_CLOCK_ALLOWED: [&str; 3] =
+    ["rust/src/util/timer.rs", "rust/src/dydd/", "rust/src/coordinator/"];
+
+/// The sparse path: files where an O(n_loc²) dense allocation would
+/// silently undo what the CSR/CG backend exists for.
+const SPARSE_PATH: [&str; 3] =
+    ["rust/src/linalg/sparse.rs", "rust/src/ddkf/local.rs", "rust/src/stream/"];
+
+/// Run the four per-file rules plus waiver validation on one file.
+pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for bad in &sf.bad_waivers {
+        out.push(Finding {
+            path: sf.path.clone(),
+            line: bad.at + 1,
+            rule: WAIVER_SYNTAX,
+            msg: bad.why.clone(),
+        });
+    }
+    for w in &sf.waivers {
+        if !RULES.contains(&w.rule.as_str()) {
+            out.push(Finding {
+                path: sf.path.clone(),
+                line: w.at + 1,
+                rule: WAIVER_SYNTAX,
+                msg: format!("waiver names unknown rule `{}`", w.rule),
+            });
+        }
+    }
+    let wall_clock_scoped = !WALL_CLOCK_ALLOWED.iter().any(|p| sf.path.starts_with(p));
+    let sparse_scoped = SPARSE_PATH.iter().any(|p| sf.path.starts_with(p));
+    let unwrap_scoped = sf.path != "rust/src/main.rs";
+    for (idx, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+        let flag = |rule: &'static str, msg: String, out: &mut Vec<Finding>| {
+            if !sf.waived(rule, idx) {
+                out.push(Finding { path: sf.path.clone(), line: idx + 1, rule, msg });
+            }
+        };
+        if has_token(code, "partial_cmp") {
+            let msg = "f64 ordering via partial_cmp breaks on NaN records — use \
+                       total_cmp or decomp::f64_key";
+            flag(NO_PARTIAL_CMP, msg.to_string(), &mut out);
+        }
+        if wall_clock_scoped {
+            for tok in ["Instant", "SystemTime"] {
+                if has_token(code, tok) {
+                    let msg = format!(
+                        "{tok} outside util::timer / dydd / coordinator — the simulated \
+                         clock (t_critical) must not read wall time"
+                    );
+                    flag(NO_WALL_CLOCK, msg, &mut out);
+                }
+            }
+        }
+        if sparse_scoped {
+            for tok in ["Mat::zeros", "Mat::identity"] {
+                if has_token_seq(code, tok) {
+                    let msg = format!(
+                        "{tok} on the sparse path — dense O(n_loc²) storage undoes the \
+                         CSR/CG backend"
+                    );
+                    flag(NO_DENSE_ALLOC, msg, &mut out);
+                }
+            }
+        }
+        if unwrap_scoped {
+            if code.contains(".unwrap()") {
+                let msg = "unwrap() on a library path — return Result with context or \
+                           expect(\"invariant: ...\")";
+                flag(NO_UNWRAP, msg.to_string(), &mut out);
+            }
+            if has_token_seq(code, "panic!") {
+                let msg = "panic! on a library path — return Result with context or \
+                           expect(\"invariant: ...\")";
+                flag(NO_UNWRAP, msg.to_string(), &mut out);
+            }
+        }
+    }
+    out
+}
+
+/// Cross-file rule: every `impl Geometry for X` / `impl RecordGeometry
+/// for X` must be named in `decomp/registry.rs` (the `GEOMETRIES` roster)
+/// and exercised by `tests/decomp_golden.rs`, so a new decomposition shape
+/// cannot ship without golden coverage.
+pub fn lint_geometry_registration(
+    files: &[SourceFile],
+    registry: &str,
+    golden: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for sf in files {
+        for (idx, line) in sf.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for name in geometry_impls(&line.code) {
+                if sf.waived(GEOMETRY_REGISTRATION, idx) {
+                    continue;
+                }
+                if !registry.contains(&name) {
+                    out.push(Finding {
+                        path: sf.path.clone(),
+                        line: idx + 1,
+                        rule: GEOMETRY_REGISTRATION,
+                        msg: format!(
+                            "`{name}` implements Geometry but is not listed in \
+                             decomp/registry.rs GEOMETRIES"
+                        ),
+                    });
+                }
+                if !golden.contains(&name) {
+                    out.push(Finding {
+                        path: sf.path.clone(),
+                        line: idx + 1,
+                        rule: GEOMETRY_REGISTRATION,
+                        msg: format!(
+                            "`{name}` implements Geometry but has no golden coverage \
+                             in tests/decomp_golden.rs"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Type names from `impl Geometry for X` / `impl RecordGeometry for X`
+/// on one stripped line.
+fn geometry_impls(code: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    if !code.contains("impl") {
+        return names;
+    }
+    for trait_name in ["Geometry", "RecordGeometry"] {
+        for at in token_positions(code, trait_name) {
+            let rest = &code[at + trait_name.len()..];
+            let Some(rest) = rest.strip_prefix(" for ") else { continue };
+            let name: String =
+                rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+            if !name.is_empty() {
+                names.push(name);
+            }
+        }
+    }
+    names
+}
+
+/// Identifier-boundary occurrences of `tok` in `code`.
+fn token_positions(code: &str, tok: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(off) = code[from..].find(tok) {
+        let at = from + off;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + tok.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + tok.len();
+    }
+    out
+}
+
+/// Whether `tok` (a plain identifier) occurs in `code` at identifier
+/// boundaries.
+fn has_token(code: &str, tok: &str) -> bool {
+    !token_positions(code, tok).is_empty()
+}
+
+/// Like [`has_token`] but for multi-token sequences (`Mat::zeros`,
+/// `panic!`): only the leading identifier's left boundary is checked, the
+/// trailing punctuation ends the match on its own.
+fn has_token_seq(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(off) = code[from..].find(tok) {
+        let at = from + off;
+        if at == 0 || !is_ident_byte(bytes[at - 1]) {
+            return true;
+        }
+        from = at + tok.len();
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::scan;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        lint_file(&scan(path, src))
+    }
+
+    #[test]
+    fn flags_partial_cmp_outside_tests() {
+        let f = findings("rust/src/stream/x.rs", "a.partial_cmp(&b);\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, NO_PARTIAL_CMP);
+        assert!(findings("rust/src/stream/x.rs", "a.total_cmp(&b);\n").is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n  fn t() { a.partial_cmp(&b); }\n}\n";
+        assert!(findings("rust/src/stream/x.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_scoping_and_waivers() {
+        let src = "use std::time::Instant;\n";
+        assert_eq!(findings("rust/src/stream/x.rs", src).len(), 1);
+        assert!(findings("rust/src/util/timer.rs", src).is_empty());
+        assert!(findings("rust/src/dydd/balancer.rs", src).is_empty());
+        assert!(findings("rust/src/coordinator/leader.rs", src).is_empty());
+        let waived = "// lint:allow-file(no-wall-clock-in-sim) telemetry column\n\
+                      use std::time::Instant;\n";
+        assert!(findings("rust/src/stream/x.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn dense_alloc_scoped_to_sparse_path() {
+        let src = "let g = Mat::zeros(n, n);\n";
+        assert_eq!(findings("rust/src/linalg/sparse.rs", src).len(), 1);
+        // Dense code is allowed to allocate dense matrices.
+        assert!(findings("rust/src/linalg/mat.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_rule_spares_expect_and_main() {
+        let f = findings("rust/src/util/json.rs", "x.unwrap();\npanic!(\"boom\");\n");
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|f| f.rule == NO_UNWRAP));
+        let ok = "x.expect(\"invariant: filled above\");\nx.unwrap_or_default();\n";
+        assert!(findings("rust/src/util/json.rs", ok).is_empty());
+        assert!(findings("rust/src/main.rs", "x.unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn unknown_waiver_rule_is_a_finding() {
+        let f = findings("rust/src/x.rs", "// lint:allow(no-such-rule) because\nfoo();\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, WAIVER_SYNTAX);
+    }
+
+    #[test]
+    fn geometry_registration_checks_both_rosters() {
+        let files = vec![scan(
+            "rust/src/decomp/ghost.rs",
+            "impl Geometry for GhostGeometry {\n}\nimpl RecordGeometry for KnownGeometry {\n}\n",
+        )];
+        let f = lint_geometry_registration(&files, "KnownGeometry", "KnownGeometry");
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|f| f.rule == GEOMETRY_REGISTRATION));
+        assert!(f.iter().all(|f| f.msg.contains("GhostGeometry")));
+    }
+}
