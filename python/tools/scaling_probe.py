@@ -1,0 +1,310 @@
+#!/usr/bin/env python3
+"""Seed the repo-root `BENCH_scaling.json` with *measured* wall-clock
+numbers when no Rust toolchain is available.
+
+This is a timed port of the A9 strong-scaling cells in
+`rust/benches/ablations.rs` (same problem family as
+`python/tools/sparse_cg_sim.py`): FivePoint state rows + gaussian-blob
+bilinear observation rows on an n x n grid, split into a px x py box
+grid (p = px * py), zero-overlap multiplicative Schwarz over
+checkerboard phases, with two local backends:
+
+ * dense  — per-block weighted Gram + Cholesky factorization, cold
+            (factor + solve) vs warm (cached factor, warm-started);
+ * cg     — per-block Jacobi-preconditioned CG on the matrix-free
+            normal operator (the `SparseCg` port), tol 1e-13.
+
+Every `t_wall_*` field is a real `time.perf_counter()` measurement of
+this process. The container is single-CPU, so blocks execute
+sequentially and the dense-backend speedup at p > 1 is the
+decomposition's algorithmic effect (p blocks of (n/p) unknowns cost
+~n^3/p^2 to factor vs n^3 for one block), not thread parallelism;
+`t_critical_s` is the simulated parallel critical path (sum over outer
+sweeps of the max per-phase block time), as in the Rust coordinator.
+`cargo xtask bench-refresh` (the CI bench job) overwrites this document
+with multi-worker Rust measurements; the schema here matches the A9
+emitter field for field.
+
+Run: python3 python/tools/scaling_probe.py  (writes BENCH_scaling.json
+at the repo root)
+"""
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import scipy.sparse as sp
+import scipy.sparse.linalg  # noqa: F401  (registers the .linalg accessor)
+
+SEED = 7
+OBS_PER_AXIS = 8
+GRIDS = [64, 128, 256]
+DENSE_CAP = 64
+WORKERS = [1, 2, 4, 8]
+
+
+def grid_of(p):
+    """Subdomain grid for p workers, as in examples/scaling_sweep.rs."""
+    return {1: (1, 1), 2: (2, 1), 4: (2, 2), 8: (4, 2)}.get(p, (p, 1))
+
+
+def build_problem(n, m_obs, seed):
+    """FivePoint{main=1.0, off=0.12} state rows (weight 4) + bilinear
+    gaussian-blob obs rows (weight 100) — the rust generators' weight
+    structure (values are irrelevant to timing/conditioning)."""
+    r = np.random.default_rng(seed)
+    rows = []  # (cols, vals, w, y)
+
+    def idx(ix, iy):
+        return iy * n + ix
+
+    for iy in range(n):
+        for ix in range(n):
+            cols, vals = [], []
+            if iy > 0:
+                cols.append(idx(ix, iy - 1)); vals.append(0.12)
+            if ix > 0:
+                cols.append(idx(ix - 1, iy)); vals.append(0.12)
+            cols.append(idx(ix, iy)); vals.append(1.0)
+            if ix + 1 < n:
+                cols.append(idx(ix + 1, iy)); vals.append(0.12)
+            if iy + 1 < n:
+                cols.append(idx(ix, iy + 1)); vals.append(0.12)
+            rows.append((cols, vals, 4.0, r.normal()))
+    for _ in range(m_obs):
+        x = min(max(r.normal(0.3, 0.08), 0.0), 1.0 - 1e-12)
+        y = min(max(r.normal(0.35, 0.08), 0.0), 1.0 - 1e-12)
+        fx, fy = x * (n - 1), y * (n - 1)
+        jx, jy = int(fx), int(fy)
+        tx, ty = fx - jx, fy - jy
+        cols, vals = [], []
+        for (dx, dy, wgt) in [(0, 0, (1 - tx) * (1 - ty)), (1, 0, tx * (1 - ty)),
+                              (0, 1, (1 - tx) * ty), (1, 1, tx * ty)]:
+            if wgt != 0.0 and jx + dx < n and jy + dy < n:
+                cols.append(idx(jx + dx, jy + dy)); vals.append(wgt)
+        if cols:
+            rows.append((cols, vals, 100.0, r.normal()))
+    return rows
+
+
+def extract_blocks(rows, n, px, py):
+    """Zero-overlap px x py box restriction: per block the in-set rows as
+    a scipy CSR, the weights, data, halo couplings and checkerboard
+    phase (bx + by) mod 2."""
+    xb = [round(i * n / px) for i in range(px + 1)]
+    yb = [round(i * n / py) for i in range(py + 1)]
+    blocks = []
+    owner = np.empty(n * n, dtype=np.int64)
+    box_of = []
+    for by in range(py):
+        for bx in range(px):
+            box_of.append((bx, by))
+    for bi, (bx, by) in enumerate(box_of):
+        for iy in range(yb[by], yb[by + 1]):
+            owner[iy * n + xb[bx]: iy * n + xb[bx + 1]] = bi
+    for bi, (bx, by) in enumerate(box_of):
+        cols = np.flatnonzero(owner == bi)
+        colset = {int(gc): c for c, gc in enumerate(cols)}
+        data, indices, indptr = [], [], [0]
+        b_w, b_y, halo = [], [], []
+        for (rcols, rvals, w, y) in rows:
+            loc = [(colset[c], v) for c, v in zip(rcols, rvals) if c in colset]
+            if not loc:
+                continue
+            r_loc = len(b_w)
+            for c, v in loc:
+                indices.append(c); data.append(v)
+            indptr.append(len(indices))
+            b_w.append(w)
+            b_y.append(y)
+            for c, v in zip(rcols, rvals):
+                if c not in colset and v != 0.0:
+                    halo.append((r_loc, c, v))
+        a = sp.csr_matrix((data, indices, indptr), shape=(len(b_w), len(cols)))
+        halo_arr = (np.array([h[0] for h in halo], dtype=np.int64),
+                    np.array([h[1] for h in halo], dtype=np.int64),
+                    np.array([h[2] for h in halo]))
+        blocks.append({
+            "cols": cols, "a": a, "w": np.array(b_w), "y": np.array(b_y),
+            "halo": halo_arr, "phase": (bx + by) % 2,
+        })
+    return blocks
+
+
+def pcg(apply_op, rhs, diag_inv, tol, max_iters, x0=None):
+    """Port of rust `linalg::sparse::pcg` (Jacobi, warm start, stagnation
+    window scaled as `stall_window(n) = max(120, n / 2)`)."""
+    n = len(rhs)
+    rhs_norm = np.linalg.norm(rhs)
+    if rhs_norm == 0.0:
+        return np.zeros(n), 0
+    stall = max(120, n // 2)
+    if x0 is not None:
+        x = x0.copy()
+        r = rhs - apply_op(x0)
+    else:
+        x = np.zeros(n)
+        r = rhs.copy()
+    z = r * diag_inv
+    p = z.copy()
+    rz = r @ z
+    best, since_best, iters = np.inf, 0, 0
+    while True:
+        rel = np.linalg.norm(r) / rhs_norm
+        if rel <= tol or iters >= max_iters:
+            break
+        if rel < best * 0.999:
+            best, since_best = rel, 0
+        else:
+            since_best += 1
+            if since_best >= stall:
+                break
+        q = apply_op(p)
+        pq = p @ q
+        if pq <= 0.0:
+            break
+        alpha = rz / pq
+        x += alpha * p
+        r -= alpha * q
+        z = r * diag_inv
+        rz_new = r @ z
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+        iters += 1
+    return x, iters
+
+
+class DenseLocal:
+    """Per-block weighted Gram + Cholesky, as the `native` backend."""
+
+    def __init__(self, blk):
+        a = blk["a"].toarray()
+        g = (a.T * blk["w"]) @ a
+        self.at_w = a.T * blk["w"]
+        self.f = np.linalg.cholesky(g)
+
+    def solve(self, b_eff, _warm):
+        rhs = self.at_w @ b_eff
+        return np.linalg.solve(self.f.T, np.linalg.solve(self.f, rhs))
+
+
+class CgLocal:
+    """Per-block matrix-free Jacobi-PCG, as the `cg` backend."""
+
+    def __init__(self, blk):
+        a = blk["a"]
+        self.a, self.w = a, blk["w"]
+        g_diag = (a.multiply(a)).T @ blk["w"]
+        self.diag_inv = 1.0 / np.asarray(g_diag).ravel()
+        self.nloc = a.shape[1]
+
+    def solve(self, b_eff, warm):
+        rhs = self.a.T @ (self.w * b_eff)
+        x, _ = pcg(lambda v: self.a.T @ (self.w * (self.a @ v)), rhs,
+                   self.diag_inv, 1e-13, 10 * self.nloc + 200, x0=warm)
+        return x
+
+
+def schwarz(blocks, locals_, nn, x0=None, max_iters=200):
+    """Multiplicative Schwarz over checkerboard phases; returns the
+    analysis, outer sweeps and the simulated critical path (sum over
+    sweeps of the max per-phase block wall time)."""
+    x = x0.copy() if x0 is not None else np.zeros(nn)
+    warm = [None] * len(blocks)
+    floor = 64.0 * np.finfo(float).eps * np.sqrt(nn)
+    tol_eff = max(1e-13, floor)
+    phases = sorted({b["phase"] for b in blocks})
+    t_crit = 0.0
+    for sweep in range(1, max_iters + 1):
+        x_prev = x.copy()
+        for ph in phases:
+            t_max = 0.0
+            for bi, blk in enumerate(blocks):
+                if blk["phase"] != ph:
+                    continue
+                hr, hc, hv = blk["halo"]
+                b_eff = blk["y"].copy()
+                if len(hr):
+                    np.subtract.at(b_eff, hr, hv * x[hc])
+                t0 = time.perf_counter()
+                x_loc = locals_[bi].solve(b_eff, warm[bi])
+                t_max = max(t_max, time.perf_counter() - t0)
+                warm[bi] = x_loc
+                x[blk["cols"]] = x_loc
+            t_crit += t_max
+        rel = np.linalg.norm(x - x_prev) / (1.0 + np.linalg.norm(x))
+        if rel < tol_eff:
+            return x, sweep, t_crit
+    return x, max_iters, t_crit
+
+
+def run_cell(n, backend, p, problem_cache):
+    """One measured (grid, backend, p) cell: cold (extract + factor +
+    solve) and warm (cached factors, warm-started re-solve)."""
+    if n not in problem_cache:
+        problem_cache[n] = build_problem(n, OBS_PER_AXIS * n, SEED)
+    rows = problem_cache[n]
+    px, py = grid_of(p)
+    nn = n * n
+
+    t0 = time.perf_counter()
+    blocks = extract_blocks(rows, n, px, py)
+    mk = DenseLocal if backend == "dense" else CgLocal
+    locals_ = [mk(b) for b in blocks]
+    x, iters, t_crit = schwarz(blocks, locals_, nn)
+    t_cold = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    schwarz(blocks, locals_, nn, x0=x)
+    t_warm = time.perf_counter() - t0
+    return t_cold, t_warm, t_crit, iters
+
+
+def main():
+    problem_cache = {}
+    rows_out = []
+    for n in GRIDS:
+        for backend in ["dense", "cg"]:
+            if backend == "dense" and n > DENSE_CAP:
+                print(f"note: skipping dense on {n}² (capped at {DENSE_CAP}²)")
+                continue
+            w1 = None
+            for p in WORKERS:
+                t_cold, t_warm, t_crit, iters = run_cell(n, backend, p, problem_cache)
+                if w1 is None:
+                    w1 = t_cold
+                speedup = w1 / max(t_cold, 1e-12)
+                print(f"{n:3d}² {backend:5s} p={p}: iters={iters:3d} "
+                      f"cold={t_cold:8.3f}s warm={t_warm:7.3f}s "
+                      f"crit={t_crit:7.3f}s S={speedup:.2f}")
+                rows_out.append({
+                    "grid": n, "backend": backend, "p": p, "iters": iters,
+                    "t_wall_cold_s": round(t_cold, 6),
+                    "t_wall_warm_s": round(t_warm, 6),
+                    "t_critical_s": round(t_crit, 6),
+                    "speedup_wall": round(speedup, 4),
+                })
+    doc = {
+        "bench": "scaling",
+        "measured": True,
+        "kernel_threads": 1,
+        "obs_per_grid_axis": OBS_PER_AXIS,
+        "seed": SEED,
+        "note": ("seed baseline measured by python/tools/scaling_probe.py — "
+                 "a timed single-process port of the A9 cells (1-CPU "
+                 "container: blocks run sequentially, so dense speedup is "
+                 "the algorithmic p*(n/p)^3 decomposition effect and "
+                 "t_critical_s carries the simulated parallel path). "
+                 "`cargo xtask bench-refresh` replaces this document with "
+                 "multi-worker Rust measurements."),
+        "source": "python/tools/scaling_probe.py",
+        "rows": rows_out,
+    }
+    out = Path(__file__).resolve().parents[2] / "BENCH_scaling.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

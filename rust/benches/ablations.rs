@@ -14,6 +14,11 @@
 //!  A8. Streaming engine: incremental dirty-block ticks vs forced cold
 //!      re-extraction on the K=16 drifting blob (emits
 //!      `BENCH_stream.json`).
+//!  A9. Strong scaling: measured wall-clock (cold and warm epochs) next
+//!      to the simulated critical path over p = 1..8 workers on 2-D
+//!      grids, dense vs cg local solvers, plus the kernel-thread bitwise
+//!      determinism gate (emits `BENCH_scaling.json`; set
+//!      DYDD_BENCH_FULL=1 to extend the cg rows to 512²).
 
 use dydd_da::cls::{ClsProblem, ClsProblem2d, StateOp, StateOp2d};
 use dydd_da::config::ExperimentConfig;
@@ -375,6 +380,120 @@ fn main() -> anyhow::Result<()> {
     );
     doc.insert("err_incremental_vs_cold".into(), Json::Num(dist2(&warm.x, &cold.x)));
     let path = "BENCH_stream.json";
+    std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
+    println!("wrote {path}");
+
+    // ---------- A9: strong scaling with measured wall-clock ----------
+    use dydd_da::coordinator::{BlockTask, WorkerPool};
+    use dydd_da::decomp::{blocks_of, phases_of, BlockEpoch, BoxGeometry, Geometry};
+
+    // One (grid, backend, p) cell: cold epoch (extract + factorize every
+    // block) then a warm Retain epoch on the same pool — both under real
+    // wall-clock, with the simulated critical path alongside.
+    let scaling_cell = |n_axis: usize,
+                        backend: SolverBackend,
+                        p: usize|
+     -> anyhow::Result<(f64, f64, f64, usize, Vec<f64>)> {
+        let (px, py) = match p {
+            1 => (1, 1),
+            2 => (2, 1),
+            4 => (2, 2),
+            _ => (4, 2),
+        };
+        let geom = BoxGeometry::new(n_axis, px, py);
+        let mut rng = Rng::new(7);
+        let obs = geom.static_obs(8 * n_axis, &mut rng);
+        let prob = geom.make_problem(geom.background(), obs);
+        let part = geom.initial_partition();
+        let opts = SchwarzOptions::default();
+        let nn = geom.n_unknowns();
+        let mut pool = WorkerPool::new(p, backend, "artifacts".into());
+        let epochs = vec![BlockEpoch::default(); p];
+        let t0 = std::time::Instant::now();
+        let blocks = blocks_of(&geom, &prob, &part, opts.overlap);
+        let phases = phases_of(&geom, &blocks, &part);
+        let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
+        let (cold, _) = pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, false)?;
+        let t_cold = t0.elapsed().as_secs_f64();
+        let tasks: Vec<BlockTask> = (0..p).map(|_| BlockTask::Retain).collect();
+        let t0 = std::time::Instant::now();
+        pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, true)?;
+        let t_warm = t0.elapsed().as_secs_f64();
+        Ok((t_cold, t_warm, cold.t_critical.as_secs_f64(), cold.iters, cold.x))
+    };
+
+    // Kernel-thread determinism gate: the dense gram/matmul kernels must
+    // be bitwise-identical at every thread count (banded reduction).
+    let bitwise_ok = {
+        dydd_da::util::threads::set_threads(1);
+        let (.., x1) = scaling_cell(64, SolverBackend::Native, 4)?;
+        dydd_da::util::threads::set_threads(4);
+        let (.., x4) = scaling_cell(64, SolverBackend::Native, 4)?;
+        dydd_da::util::threads::set_threads(1);
+        let ok = x1.len() == x4.len()
+            && x1.iter().zip(&x4).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(ok, "kernel threads changed the analysis bitwise");
+        ok
+    };
+    println!("A9 bitwise gate: threads 1 vs 4 identical on 64² native p=4");
+
+    let full = std::env::var("DYDD_BENCH_FULL").is_ok_and(|v| v == "1");
+    let grids: &[usize] = if full { &[64, 128, 256, 512] } else { &[64, 128, 256] };
+    if !full {
+        eprintln!("note: A9 cg rows stop at 256² (set DYDD_BENCH_FULL=1 for 512²)");
+    }
+    // Dense local Cholesky is O((n/p)³); past 64² it dominates the bench
+    // runtime, so dense rows are capped there (and the cap is logged).
+    let dense_cap = 64;
+    let mut t = Table::new(
+        "A9 — strong scaling: measured wall next to simulated critical path",
+        &["grid", "backend", "p", "iters", "T_wall cold", "T_wall warm", "T^p_crit", "S_wall"],
+    );
+    let mut scaling_rows: Vec<Json> = Vec::new();
+    for &n_axis in grids {
+        for backend in [SolverBackend::Native, SolverBackend::Cg] {
+            if backend == SolverBackend::Native && n_axis > dense_cap {
+                eprintln!("note: A9 skips dense on {n_axis}² (capped at {dense_cap}²)");
+                continue;
+            }
+            let label = if backend == SolverBackend::Native { "dense" } else { "cg" };
+            let mut w1: Option<f64> = None;
+            for p in [1usize, 2, 4, 8] {
+                let (t_cold, t_warm, t_crit, iters, _) = scaling_cell(n_axis, backend, p)?;
+                let base = *w1.get_or_insert(t_cold);
+                t.row(&[
+                    format!("{n_axis}x{n_axis}"),
+                    label.to_string(),
+                    p.to_string(),
+                    iters.to_string(),
+                    fmt_secs(t_cold),
+                    fmt_secs(t_warm),
+                    fmt_secs(t_crit),
+                    format!("{:.2}", base / t_cold.max(1e-12)),
+                ]);
+                let mut row = BTreeMap::new();
+                row.insert("grid".into(), Json::Num(n_axis as f64));
+                row.insert("backend".into(), Json::Str(label.into()));
+                row.insert("p".into(), Json::Num(p as f64));
+                row.insert("iters".into(), Json::Num(iters as f64));
+                row.insert("t_wall_cold_s".into(), Json::Num(t_cold));
+                row.insert("t_wall_warm_s".into(), Json::Num(t_warm));
+                row.insert("t_critical_s".into(), Json::Num(t_crit));
+                row.insert("speedup_wall".into(), Json::Num(base / t_cold.max(1e-12)));
+                scaling_rows.push(Json::Obj(row));
+            }
+        }
+    }
+    println!("{}", t.render());
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("scaling".into()));
+    doc.insert("measured".into(), Json::Bool(true));
+    doc.insert("kernel_threads".into(), Json::Num(1.0));
+    doc.insert("bitwise_threads_ok".into(), Json::Bool(bitwise_ok));
+    doc.insert("obs_per_grid_axis".into(), Json::Num(8.0));
+    doc.insert("seed".into(), Json::Num(7.0));
+    doc.insert("rows".into(), Json::Arr(scaling_rows));
+    let path = "BENCH_scaling.json";
     std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
     println!("wrote {path}");
 

@@ -83,6 +83,117 @@ fn main() {
     }
     println!();
 
+    // Guard-bench for the banded-parallel kernels: every thread count must
+    // reproduce the serial result bit-for-bit (the deterministic banding
+    // contract) BEFORE its timing row counts for anything.
+    println!("-- banded-parallel guard: serial vs threaded (bitwise, then timed) --");
+    let bitwise_eq = |x: &Mat, y: &Mat| {
+        x.as_slice().len() == y.as_slice().len()
+            && x.as_slice().iter().zip(y.as_slice()).all(|(a, b)| a.to_bits() == b.to_bits())
+    };
+    for n in [128usize, 256, 512] {
+        let a = Mat::gaussian(2 * n, n, &mut rng);
+        let b = Mat::gaussian(n, n, &mut rng);
+        let d: Vec<f64> = (0..2 * n).map(|_| rng.uniform() + 0.5).collect();
+        let mm1 = a.matmul_threads(&b, 1);
+        let wg1 = a.weighted_gram_threads(&d, 1);
+        for t in [2usize, 4, 8] {
+            assert!(
+                bitwise_eq(&mm1, &a.matmul_threads(&b, t)),
+                "matmul not bitwise-stable at n={n} t={t}"
+            );
+            assert!(
+                bitwise_eq(&wg1, &a.weighted_gram_threads(&d, t)),
+                "weighted_gram not bitwise-stable at n={n} t={t}"
+            );
+        }
+        for t in [1usize, 2, 4] {
+            bench(&format!("matmul        n={n} t={t}"), 5, || a.matmul_threads(&b, t));
+            bench(&format!("weighted_gram n={n} t={t}"), 5, || a.weighted_gram_threads(&d, t));
+        }
+    }
+    println!();
+
+    // Oracle-bench for the IC(0) preconditioner: on the CLS normal
+    // equations its PCG solution must match the dense Cholesky answer to
+    // 1e-10 before the iteration-count/time rows mean anything.
+    println!("-- IC(0) oracle: PCG-with-IC(0) vs dense Cholesky --");
+    {
+        use dydd_da::linalg::sparse::{pcg, pcg_with, Ic0};
+        let n = 256;
+        let mesh = Mesh1d::new(n);
+        let mut r2 = Rng::new(15);
+        let obs = generators::generate(ObsLayout::Cluster, 180, &mut r2);
+        let y0 = (0..n).map(|j| generators::field(j as f64 / (n - 1) as f64)).collect();
+        let prob = ClsProblem::new(
+            mesh,
+            StateOp::Tridiag { main: 1.0, off: 0.15 },
+            y0,
+            vec![4.0; n],
+            obs,
+        );
+        let blk = prob.local_block(&Partition::uniform(n, 1), 0, 0);
+        let reg = vec![0.0; blk.n_loc()];
+        let rhs = {
+            let be = blk.b_eff(|_| 0.0);
+            let t: Vec<f64> = be.iter().zip(&blk.d).map(|(b, d)| b * d).collect();
+            blk.a.spmv_t(&t)
+        };
+        let g = blk.a.weighted_gram_csr(&blk.d, &reg);
+        let ic = Ic0::new(&g).unwrap();
+        let dense_g = blk.a.weighted_gram(&blk.d);
+        let chol = Cholesky::new(&dense_g).unwrap();
+        let want = chol.solve(&rhs);
+        let apply = |x: &[f64]| blk.a.normal_apply(&blk.d, &reg, x);
+        let out = pcg_with(apply, &rhs, |r| ic.solve(r), None, 1e-14, 10 * n);
+        let err: f64 = want
+            .iter()
+            .zip(&out.x)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 1e-10, "IC(0)-PCG drifted from Cholesky: {err:e}");
+        let diag = blk.a.weighted_gram_diag(&blk.d);
+        let diag_inv: Vec<f64> =
+            diag.iter().map(|&v| if v > 0.0 { 1.0 / v } else { 1.0 }).collect();
+        let jac = pcg(
+            |x: &[f64]| blk.a.normal_apply(&blk.d, &reg, x),
+            &rhs,
+            &diag_inv,
+            None,
+            1e-14,
+            10 * n,
+        );
+        println!(
+            "ic0 oracle ok: err={err:.1e}  iters ic0={} jacobi={}  fill nnz(L)={}",
+            out.iters,
+            jac.iters,
+            ic.nnz()
+        );
+        bench("ic0 factor (256-col gram)", 10, || Ic0::new(&g).unwrap());
+        bench("pcg ic0    (256 cols)", 10, || {
+            pcg_with(
+                |x: &[f64]| blk.a.normal_apply(&blk.d, &reg, x),
+                &rhs,
+                |r| ic.solve(r),
+                None,
+                1e-14,
+                10 * n,
+            )
+        });
+        bench("pcg jacobi (256 cols)", 10, || {
+            pcg(
+                |x: &[f64]| blk.a.normal_apply(&blk.d, &reg, x),
+                &rhs,
+                &diag_inv,
+                None,
+                1e-14,
+                10 * n,
+            )
+        });
+    }
+    println!();
+
     println!("-- linalg substrate --");
     for n in [128usize, 256, 512] {
         let a = Mat::gaussian(2 * n, n, &mut rng);

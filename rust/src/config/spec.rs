@@ -94,6 +94,12 @@ pub struct ExperimentConfig {
     pub stream_warm_start: bool,
     /// Diagnostic: disable the incremental path (every tick cold-solves).
     pub stream_force_cold: bool,
+    /// Kernel threads for the parallel gram/matmul kernels
+    /// (`[perf] threads` / `--threads`). 0 = inherit the process default
+    /// (the `DYDD_THREADS` environment variable, else 1). The deterministic
+    /// banding contract means this knob can never change a result, only
+    /// wall-clock.
+    pub threads: usize,
 }
 
 /// Delta source for the streaming engine's `serve` loop.
@@ -150,6 +156,7 @@ impl Default for ExperimentConfig {
             stream_feed_forward: true,
             stream_warm_start: true,
             stream_force_cold: false,
+            threads: 0,
         }
     }
 }
@@ -284,6 +291,7 @@ impl ExperimentConfig {
                 "stream.force_cold" => {
                     cfg.stream_force_cold = v.as_bool().ok_or_else(|| bad(k))?
                 }
+                "perf.threads" => cfg.threads = v.as_usize().ok_or_else(|| bad(k))?,
                 other => {
                     return Err(ValidationError::Invalid(format!("unknown key {other:?}")))
                 }
@@ -409,7 +417,21 @@ impl ExperimentConfig {
                 return fail(format!("threshold tau = {tau} out of (0, 1]"));
             }
         }
+        if self.threads > 1024 {
+            return fail(format!("perf.threads = {} is not a plausible core count", self.threads));
+        }
         Ok(())
+    }
+
+    /// Install this config's kernel-thread knob into the process-global
+    /// setting the parallel kernels read. `threads = 0` keeps the process
+    /// default (`DYDD_THREADS`, else serial). Called by every run entry
+    /// point (run/cycle/serve), so a config's `[perf] threads` takes
+    /// effect no matter which driver loads it.
+    pub fn apply_threads(&self) {
+        if self.threads > 0 {
+            crate::util::threads::set_threads(self.threads);
+        }
     }
 
     /// Build the CLS problem instance this config describes.
@@ -537,6 +559,17 @@ dydd = true
         let cfg = ExperimentConfig::from_toml_str("[run]\nbackend = \"cg\"").unwrap();
         assert_eq!(cfg.backend, SolverBackend::Cg);
         assert!(ExperimentConfig::from_toml_str("[run]\nbackend = \"lobpcg\"").is_err());
+    }
+
+    #[test]
+    fn perf_threads_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str("[perf]\nthreads = 4").unwrap();
+        assert_eq!(cfg.threads, 4);
+        // Default: inherit the process-wide setting.
+        assert_eq!(ExperimentConfig::default().threads, 0);
+        let mut bad = ExperimentConfig::default();
+        bad.threads = 4096;
+        assert!(bad.validate().is_err(), "absurd thread counts must be rejected");
     }
 
     #[test]

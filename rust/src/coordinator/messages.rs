@@ -19,6 +19,11 @@ pub enum SolverBackend {
     /// matrix-free over the block's CSR rows — no dense n×n allocation on
     /// the local-solve path; the backend for large grids.
     Cg,
+    /// Same matrix-free CG, preconditioned by blocked IC(0) on the sparse
+    /// normal matrix instead of Jacobi scaling — fewer iterations on
+    /// stencil-coupled blocks at the cost of one incomplete factorization
+    /// per epoch.
+    CgIc0,
     /// Test-only: native solver that panics inside the victim worker —
     /// the regression hook for leader-side worker-death diagnosis.
     #[cfg(test)]
@@ -32,6 +37,7 @@ impl SolverBackend {
             "kf" => SolverBackend::Kf,
             "pjrt" | "xla" => SolverBackend::Pjrt,
             "cg" | "sparse" => SolverBackend::Cg,
+            "cg-ic0" | "cg_ic0" | "ic0" => SolverBackend::CgIc0,
             _ => return None,
         })
     }

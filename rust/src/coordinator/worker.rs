@@ -66,6 +66,7 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
         SolverBackend::Native => Box::new(NativeLocalSolver),
         SolverBackend::Kf => Box::new(KfLocalSolver),
         SolverBackend::Cg => Box::new(SparseCg::default()),
+        SolverBackend::CgIc0 => Box::new(SparseCg::ic0()),
         SolverBackend::Pjrt => match PjrtLocalSolver::new(init.artifacts_dir.clone()) {
             Ok(s) => Box::new(s),
             Err(e) => {

@@ -13,7 +13,7 @@
 
 use super::balancer::{balance, BalanceError, DyddOutcome, DyddParams};
 use crate::decomp::Geometry;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Outcome of a geometric rebalance on any [`Geometry`].
 #[derive(Debug, Clone)]
@@ -27,6 +27,11 @@ pub struct GeometricOutcome<P> {
     /// from `dydd.l_fin` by what a boundary cannot split: grid-point tie
     /// groups in 1-D/2-D, whole time levels in 4-D.
     pub census_after: Vec<usize>,
+    /// Cost of the `debug_assertions`-only invariant recounts run inside
+    /// this call. Callers holding an open wall-clock window around
+    /// [`rebalance`] subtract this so reported metrics never include
+    /// verification work (zero in release builds up to timer overhead).
+    pub t_verify: Duration,
 }
 
 impl<P> GeometricOutcome<P> {
@@ -48,6 +53,10 @@ pub struct RebalanceRecord {
     pub census_after: Vec<usize>,
     /// Unknowns owned by each subdomain of the realized partition.
     pub sizes: Vec<usize>,
+    /// Verification cost incurred inside the rebalance (see
+    /// [`GeometricOutcome::t_verify`]) — subtracted from the caller's
+    /// timed window, never reported as DyDD work.
+    pub t_verify: Duration,
 }
 
 impl RebalanceRecord {
@@ -79,12 +88,17 @@ pub fn rebalance<G: Geometry>(
     outcome.t_dydd = outcome.t_dydd.max(t0.elapsed());
     // Migration moves observations between subdomains, never creates or
     // drops them; the re-mapped partition must still cover the domain.
-    debug_assert_eq!(crate::verify::check_census_conserved(&census, &census_after), Ok(()));
-    debug_assert_eq!(
-        crate::verify::check_part_sizes(geom.n_unknowns(), &geom.part_sizes(&partition)),
-        Ok(())
-    );
-    Ok(GeometricOutcome { dydd: outcome, partition, census_after })
+    // The recounts run under `verify_window` so their cost is measured and
+    // reported separately — callers subtract it from any enclosing
+    // wall-clock metric instead of booking it as DyDD/solve time.
+    let ((), t_verify) = crate::util::timer::verify_window(|| {
+        debug_assert_eq!(crate::verify::check_census_conserved(&census, &census_after), Ok(()));
+        debug_assert_eq!(
+            crate::verify::check_part_sizes(geom.n_unknowns(), &geom.part_sizes(&partition)),
+            Ok(())
+        );
+    });
+    Ok(GeometricOutcome { dydd: outcome, partition, census_after, t_verify })
 }
 
 #[cfg(test)]

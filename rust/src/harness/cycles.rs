@@ -98,9 +98,13 @@ pub struct CycleRecord {
     /// Simulated-parallel critical path of this cycle's DD-KF solve.
     pub t_critical: Duration,
     /// Measured wall-clock of the whole cycle (workload generation →
-    /// analysis, excluding the optional baseline) — the testbed-honest
-    /// column next to the simulated `t_critical`.
+    /// analysis, excluding the optional baseline and `t_verify`) — the
+    /// testbed-honest column next to the simulated `t_critical`.
     pub t_wall: Duration,
+    /// Cost of `debug_assertions`-only verification inside the cycle
+    /// (DyDD conservation recounts). Already excluded from `t_wall` and
+    /// `t_dydd`; zero in release builds.
+    pub t_verify: Duration,
     /// Blocks re-extracted (and re-factorized) this cycle; the rest were
     /// served from the pool's block cache with a refreshed right-hand
     /// side.
@@ -286,6 +290,7 @@ pub fn run_cycles_on<G: RecordGeometry>(
     cfg: &ExperimentConfig,
     with_baseline: bool,
 ) -> anyhow::Result<CycleReport> {
+    cfg.apply_threads();
     let policy = effective_policy(cfg);
     let n = geom.n_unknowns();
     let p = geom.p();
@@ -307,7 +312,15 @@ pub fn run_cycles_on<G: RecordGeometry>(
         // Warm start: DyDD migrates from the incumbent bounds.
         let t0 = Instant::now();
         let (new_part, dydd) = maybe_rebalance(geom, &part, &obs, rebalanced)?;
-        let t_dydd = if rebalanced { t0.elapsed() } else { Duration::ZERO };
+        // DyDD's debug-assert conservation recounts are measured inside
+        // rebalance(); keep their cost out of both timing columns.
+        let t_verify =
+            dydd.as_ref().map(|r| r.t_verify).unwrap_or(Duration::ZERO);
+        let t_dydd = if rebalanced {
+            t0.elapsed().saturating_sub(t_verify)
+        } else {
+            Duration::ZERO
+        };
         let partition_changed = new_part != part;
         part = new_part;
         let balance_after = balance_ratio(&geom.census(&part, &obs));
@@ -393,7 +406,7 @@ pub fn run_cycles_on<G: RecordGeometry>(
         let epochs_now = epochs.epochs();
         let (par, counters) =
             pool.solve_blocks_incremental(n, tasks, &epochs_now, &phases, &cfg.schwarz, false)?;
-        let t_wall = t_wall0.elapsed();
+        let t_wall = t_wall0.elapsed().saturating_sub(t_verify);
 
         let error_dd_da = if with_baseline {
             Some(dist2(&geom.solve_baseline(&prob), &par.x))
@@ -413,6 +426,7 @@ pub fn run_cycles_on<G: RecordGeometry>(
             t_dydd,
             t_critical: par.t_critical,
             t_wall,
+            t_verify,
             dirty_blocks,
             cache_hits: counters.refreshed + counters.retained,
             iters: par.iters,
@@ -559,6 +573,40 @@ mod tests {
         }
         // The report carries the full final space-time trajectory.
         assert_eq!(rep.x.len(), 64);
+    }
+
+    #[test]
+    fn cycle_wall_clock_excludes_verification_cost() {
+        // Every cycle rebalances, so every cycle pays DyDD's verify
+        // window; inflate it past the whole cycle's runtime and check the
+        // cost lands in t_verify, not t_wall or t_dydd.
+        let delay = Duration::from_millis(150);
+        crate::util::timer::set_extra_verify_delay(delay);
+        let cfg = cycle_cfg();
+        let rep = run_cycles(&cfg, false);
+        crate::util::timer::set_extra_verify_delay(Duration::ZERO);
+        let rep = rep.unwrap();
+        assert_eq!(rep.rebalances(), 3);
+        for r in &rep.records {
+            assert!(
+                r.t_verify >= delay,
+                "cycle {}: t_verify = {:?} missed the injected delay",
+                r.cycle,
+                r.t_verify
+            );
+            assert!(
+                r.t_wall < delay,
+                "cycle {}: t_wall = {:?} absorbed verification cost",
+                r.cycle,
+                r.t_wall
+            );
+            assert!(
+                r.t_dydd < delay,
+                "cycle {}: t_dydd = {:?} absorbed verification cost",
+                r.cycle,
+                r.t_dydd
+            );
+        }
     }
 
     #[test]

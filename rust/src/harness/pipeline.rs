@@ -30,6 +30,7 @@ pub fn maybe_rebalance<G: Geometry>(
             dydd: out.dydd,
             census_after: out.census_after,
             sizes: geom.part_sizes(&out.partition),
+            t_verify: out.t_verify,
         };
         Ok((out.partition, Some(record)))
     } else {
@@ -111,6 +112,7 @@ pub fn run_experiment(
     cfg: &ExperimentConfig,
     with_baseline: bool,
 ) -> anyhow::Result<ExperimentReport> {
+    cfg.apply_threads();
     let (geom, cfg) = resolve_geometry(cfg)?;
     match geom {
         ResolvedGeometry::D1(g) => run_experiment_on(&g, &cfg, with_baseline),
@@ -228,6 +230,7 @@ pub fn run_with_counts(
     with_baseline: bool,
 ) -> anyhow::Result<ExperimentReport> {
     anyhow::ensure!(base.dim == 1, "run_with_counts drives the 1-D DD-KF pipeline");
+    base.apply_threads();
     let mut geom = base.interval_geometry();
     geom.p = counts.len();
     let mesh = Mesh1d::new(base.n);

@@ -181,32 +181,69 @@ impl Mat {
         y
     }
 
-    /// C = A * B, blocked i-k-j loop: the inner loop walks row k of the
-    /// transposed operand B contiguously (row-major cache lines), with the
-    /// C row slice hoisted out of the k loop so the inner loop is a pure
-    /// zipped axpy with no per-k re-borrow or bounds checks.
+    /// C = A * B, blocked k-i-j loop: the inner loop walks row k of B
+    /// contiguously (row-major cache lines), with the C row slice hoisted
+    /// out of the k loop so the inner loop is a pure zipped axpy.
+    ///
+    /// Runs on [`crate::util::threads::threads`] scoped threads (gated so
+    /// tiny products stay serial) by banding the C rows; because every
+    /// C element is accumulated by exactly one thread in k-ascending
+    /// order — the same order as the serial loop — the result is bitwise
+    /// identical at every thread count.
     pub fn matmul(&self, b: &Mat) -> Mat {
+        let t = crate::util::threads::threads();
+        let t = if self.rows * b.cols < 4096 { 1 } else { t };
+        self.matmul_threads(b, t)
+    }
+
+    /// [`Mat::matmul`] with an explicit thread count (the deterministic
+    /// banding contract makes the result independent of `t`).
+    pub fn matmul_threads(&self, b: &Mat, t: usize) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let mut c = Mat::zeros(self.rows, b.cols);
+        let bands = crate::util::threads::bands(self.rows, t);
+        if bands.len() <= 1 {
+            self.matmul_rows(b, 0, &mut c.data);
+            return c;
+        }
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = &mut c.data;
+            for &(r0, r1) in &bands {
+                let (band, tail) = rest.split_at_mut((r1 - r0) * b.cols);
+                rest = tail;
+                s.spawn(move || self.matmul_rows(b, r0, band));
+            }
+        });
+        c
+    }
+
+    /// Accumulate C rows `[r0, r0 + band.len() / b.cols)` into `band` —
+    /// the original blocked loop nest restricted to a row band, so the
+    /// single-band call is byte-for-byte the serial kernel.
+    fn matmul_rows(&self, b: &Mat, r0: usize, band: &mut [f64]) {
         const BK: usize = 64;
+        let bc = b.cols;
+        if bc == 0 {
+            return;
+        }
+        let rows = band.len() / bc;
         for k0 in (0..self.cols).step_by(BK) {
             let k1 = (k0 + BK).min(self.cols);
-            for i in 0..self.rows {
-                let arow = &self.data[i * self.cols..(i + 1) * self.cols];
-                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for ii in 0..rows {
+                let arow = self.row(r0 + ii);
+                let crow = &mut band[ii * bc..(ii + 1) * bc];
                 for k in k0..k1 {
                     let aik = arow[k];
                     if aik == 0.0 {
                         continue;
                     }
-                    let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+                    let brow = &b.data[k * bc..(k + 1) * bc];
                     for (cj, bj) in crow.iter_mut().zip(brow) {
                         *cj += aik * bj;
                     }
                 }
             }
         }
-        c
     }
 
     /// G = A^T diag(d) A — the weighted gram (native oracle for the L1
@@ -214,26 +251,37 @@ impl Mat {
     /// the G row tail are walked contiguously) and mirrors it afterwards —
     /// half the flops of the full accumulation, and the result is exactly
     /// symmetric by construction.
+    ///
+    /// Runs on [`crate::util::threads::threads`] scoped threads (gated so
+    /// small grams stay serial) by banding the G rows, each band sized to
+    /// an equal share of the upper-triangle area. Every thread scans all
+    /// observation rows i in ascending order and touches only its own G
+    /// band, so each G element is accumulated i-ascending by one thread —
+    /// bitwise identical to the serial result at every thread count.
     pub fn weighted_gram(&self, d: &[f64]) -> Mat {
+        let t = crate::util::threads::threads();
+        let t = if self.rows * self.cols < 4096 { 1 } else { t };
+        self.weighted_gram_threads(d, t)
+    }
+
+    /// [`Mat::weighted_gram`] with an explicit thread count (the
+    /// deterministic banding contract makes the result independent of `t`).
+    pub fn weighted_gram_threads(&self, d: &[f64], t: usize) -> Mat {
         assert_eq!(d.len(), self.rows);
         let n = self.cols;
         let mut g = Mat::zeros(n, n);
-        for i in 0..self.rows {
-            let di = d[i];
-            if di == 0.0 {
-                continue;
-            }
-            let row = self.row(i);
-            for a in 0..n {
-                let v = di * row[a];
-                if v == 0.0 {
-                    continue;
+        let bands = gram_bands(n, t);
+        if bands.len() <= 1 {
+            self.weighted_gram_rows(d, 0, &mut g.data);
+        } else {
+            std::thread::scope(|s| {
+                let mut rest: &mut [f64] = &mut g.data;
+                for &(a0, a1) in &bands {
+                    let (band, tail) = rest.split_at_mut((a1 - a0) * n);
+                    rest = tail;
+                    s.spawn(move || self.weighted_gram_rows(d, a0, band));
                 }
-                let grow = &mut g.data[a * n + a..(a + 1) * n];
-                for (gv, rv) in grow.iter_mut().zip(&row[a..]) {
-                    *gv += v * rv;
-                }
-            }
+            });
         }
         for a in 0..n {
             for b in (a + 1)..n {
@@ -241,6 +289,34 @@ impl Mat {
             }
         }
         g
+    }
+
+    /// Accumulate the upper-triangle tails of G rows
+    /// `[a0, a0 + band.len() / n)` into `band`; the single-band call is
+    /// byte-for-byte the serial kernel.
+    fn weighted_gram_rows(&self, d: &[f64], a0: usize, band: &mut [f64]) {
+        let n = self.cols;
+        if n == 0 {
+            return;
+        }
+        let a1 = a0 + band.len() / n;
+        for i in 0..self.rows {
+            let di = d[i];
+            if di == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for a in a0..a1 {
+                let v = di * row[a];
+                if v == 0.0 {
+                    continue;
+                }
+                let grow = &mut band[(a - a0) * n + a..(a - a0 + 1) * n];
+                for (gv, rv) in grow.iter_mut().zip(&row[a..]) {
+                    *gv += v * rv;
+                }
+            }
+        }
     }
 
     /// c = A^T diag(d) r.
@@ -301,6 +377,34 @@ impl IndexMut<(usize, usize)> for Mat {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
     }
+}
+
+/// Contiguous G-row bands for the upper-triangle gram accumulation, sized
+/// so each band holds roughly an equal share of the triangle's area (row
+/// `a` contributes `n - a` elements). The band layout cannot affect the
+/// result — per-element accumulation order is fixed — so it is free to
+/// chase load balance.
+fn gram_bands(n: usize, t: usize) -> Vec<(usize, usize)> {
+    let t = t.max(1).min(n.max(1));
+    if t <= 1 {
+        return if n == 0 { Vec::new() } else { vec![(0, n)] };
+    }
+    let total = (n as u128) * (n as u128 + 1) / 2;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    let mut cum: u128 = 0;
+    for a in 0..n {
+        cum += (n - a) as u128;
+        let k = out.len() as u128 + 1;
+        if k < t as u128 && cum * t as u128 >= total * k {
+            out.push((start, a + 1));
+            start = a + 1;
+        }
+    }
+    if start < n {
+        out.push((start, n));
+    }
+    out
 }
 
 /// Euclidean norm of a vector.
@@ -382,6 +486,66 @@ mod tests {
         let rs = a.row_slice(1, 3);
         assert_eq!(rs.rows(), 2);
         assert_eq!(rs[(0, 0)], 10.0);
+    }
+
+    fn assert_bitwise(a: &Mat, b: &Mat, ctx: &str) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{ctx}");
+        for (k, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {k}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_bitwise_equals_serial() {
+        let mut rng = Rng::new(11);
+        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (33, 64, 65), (70, 129, 40)] {
+            let a = Mat::gaussian(m, k, &mut rng);
+            let b = Mat::gaussian(k, n, &mut rng);
+            let serial = a.matmul_threads(&b, 1);
+            for t in [2usize, 3, 4, 7, 16] {
+                let par = a.matmul_threads(&b, t);
+                assert_bitwise(&serial, &par, &format!("matmul {m}x{k}x{n} t={t}"));
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_gram_parallel_bitwise_equals_serial() {
+        let mut rng = Rng::new(12);
+        for (m, n) in [(1, 1), (9, 4), (40, 33), (65, 64), (31, 129)] {
+            let a = Mat::gaussian(m, n, &mut rng);
+            // Include exact zeros so the sparsity guards fire identically.
+            let d: Vec<f64> =
+                (0..m).map(|i| if i % 5 == 0 { 0.0 } else { 0.5 + i as f64 }).collect();
+            let serial = a.weighted_gram_threads(&d, 1);
+            for t in [2usize, 3, 4, 7, 16] {
+                let par = a.weighted_gram_threads(&d, t);
+                assert_bitwise(&serial, &par, &format!("gram {m}x{n} t={t}"));
+            }
+        }
+    }
+
+    #[test]
+    fn gram_bands_cover_and_balance() {
+        for n in [0usize, 1, 2, 5, 64, 127] {
+            for t in [1usize, 2, 3, 4, 8, 200] {
+                let bands = gram_bands(n, t);
+                let mut next = 0;
+                for &(s, e) in &bands {
+                    assert_eq!(s, next, "contiguous (n={n}, t={t})");
+                    assert!(e > s, "non-empty (n={n}, t={t})");
+                    next = e;
+                }
+                assert_eq!(next, n, "cover (n={n}, t={t})");
+                assert!(bands.len() <= t.max(1));
+            }
+        }
+        // Area balance: with 2 bands over the triangle, the split lands
+        // near n(1 - 1/sqrt(2)), not n/2.
+        let bands = gram_bands(100, 2);
+        assert_eq!(bands.len(), 2);
+        let split = bands[0].1;
+        assert!((25..=35).contains(&split), "triangle-balanced split, got {split}");
     }
 
     #[test]

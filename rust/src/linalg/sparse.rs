@@ -193,11 +193,79 @@ impl CsrMatrix {
     /// G = AᵀDA as a dense matrix, assembled sparsely: O(Σ_r nnz_r²)
     /// instead of the dense O(m·n²) — the factorizing backends still need
     /// the dense Gram, but no longer pay dense assembly for it.
+    ///
+    /// Runs on [`crate::util::threads::threads`] scoped threads (gated so
+    /// small assemblies stay serial) by banding the G rows: each thread
+    /// scans every CSR row in ascending order but accumulates only the G
+    /// rows in its band, so each element is accumulated by one thread in
+    /// exactly the serial order — bitwise identical at every thread count.
     pub fn weighted_gram(&self, d: &[f64]) -> Mat {
+        let t = crate::util::threads::threads();
+        let t = if self.nnz() < 4096 { 1 } else { t };
+        self.weighted_gram_threads(d, t)
+    }
+
+    /// [`CsrMatrix::weighted_gram`] with an explicit thread count (the
+    /// deterministic banding contract makes the result independent of `t`).
+    pub fn weighted_gram_threads(&self, d: &[f64], t: usize) -> Mat {
         assert_eq!(d.len(), self.rows);
         let n = self.cols;
         // lint:allow(no-dense-alloc-on-sparse-path) dense Gram is the documented output
         let mut g = Mat::zeros(n, n);
+        let bands = crate::util::threads::bands(n, t);
+        if bands.len() <= 1 {
+            self.weighted_gram_band(d, 0, n, g.as_mut_slice());
+            return g;
+        }
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = g.as_mut_slice();
+            for &(a0, a1) in &bands {
+                let (band, tail) = rest.split_at_mut((a1 - a0) * n);
+                rest = tail;
+                s.spawn(move || self.weighted_gram_band(d, a0, a1, band));
+            }
+        });
+        g
+    }
+
+    /// Accumulate G rows `[a0, a1)` into `band` (row-major, `cols` wide):
+    /// scans every CSR row r in ascending order, skipping contributions
+    /// outside the band, so the single-band call is byte-for-byte the
+    /// serial kernel.
+    fn weighted_gram_band(&self, d: &[f64], a0: usize, a1: usize, band: &mut [f64]) {
+        let n = self.cols;
+        for r in 0..self.rows {
+            let dr = d[r];
+            if dr == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(r);
+            for (i, &ca) in cols.iter().enumerate() {
+                if ca < a0 || ca >= a1 {
+                    continue;
+                }
+                let v = dr * vals[i];
+                let grow = &mut band[(ca - a0) * n..(ca - a0 + 1) * n];
+                for (j, &cb) in cols.iter().enumerate() {
+                    grow[cb] += v * vals[j];
+                }
+            }
+        }
+    }
+
+    /// G = AᵀDA + diag(reg) as a *sparse* CSR matrix — the input the
+    /// IC(0) preconditioner factors. O(Σ_r nnz_r²) entries before
+    /// coalescing; for the ≤ 5-point stencil rows of the CLS problems the
+    /// result stays O(n) sparse.
+    pub fn weighted_gram_csr(&self, d: &[f64], reg: &[f64]) -> CsrMatrix {
+        assert_eq!(d.len(), self.rows);
+        assert_eq!(reg.len(), self.cols);
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.cols];
+        for (j, &rj) in reg.iter().enumerate() {
+            if rj != 0.0 {
+                rows[j].push((j, rj));
+            }
+        }
         for r in 0..self.rows {
             let dr = d[r];
             if dr == 0.0 {
@@ -207,11 +275,11 @@ impl CsrMatrix {
             for (i, &ca) in cols.iter().enumerate() {
                 let v = dr * vals[i];
                 for (j, &cb) in cols.iter().enumerate() {
-                    g[(ca, cb)] += v * vals[j];
+                    rows[ca].push((cb, v * vals[j]));
                 }
             }
         }
-        g
+        CsrMatrix::from_rows(self.cols, &rows)
     }
 
     /// diag(AᵀDA) in one CSR pass — the Jacobi preconditioner of the CG
@@ -249,6 +317,189 @@ impl CsrMatrix {
     }
 }
 
+/// Incomplete Cholesky factorization with zero fill — IC(0) — of a sparse
+/// SPD matrix G: a lower-triangular CSR factor L with exactly the sparsity
+/// of G's lower triangle, so that L·Lᵀ ≈ G. Used as the blocked
+/// preconditioner of the CG backend: where Jacobi only rescales, IC(0)
+/// couples neighbouring unknowns through the stencil and collapses the
+/// iteration count on locally smooth operators.
+///
+/// IC(0) can break down (a non-positive pivot) on matrices that are SPD
+/// but not H-matrices; [`Ic0::new`] retries with an escalating diagonal
+/// shift `αI` and records the shift that succeeded.
+#[derive(Debug, Clone)]
+pub struct Ic0 {
+    /// Lower-triangular factor, diagonal stored last in each row.
+    l: CsrMatrix,
+    /// Diagonal shift α that made the factorization succeed (0.0 when the
+    /// unshifted factorization went through).
+    pub shift: f64,
+}
+
+impl Ic0 {
+    /// Factor `g` (sparse SPD, diagonal structurally present in every
+    /// row). Retries with an escalating relative diagonal shift on pivot
+    /// breakdown; fails only if breakdown persists at a shift far beyond
+    /// any reasonable conditioning.
+    pub fn new(g: &CsrMatrix) -> anyhow::Result<Ic0> {
+        anyhow::ensure!(g.rows == g.cols, "IC(0) needs a square matrix, got {g:?}");
+        let n = g.rows;
+        let mut diag_scale = 0.0;
+        for i in 0..n {
+            diag_scale += g.get(i, i).abs();
+        }
+        let diag_scale = if n > 0 { (diag_scale / n as f64).max(f64::MIN_POSITIVE) } else { 1.0 };
+        let mut shift = 0.0;
+        for _attempt in 0..10 {
+            if let Some(l) = Self::factor(g, shift) {
+                return Ok(Ic0 { l, shift });
+            }
+            shift = if shift == 0.0 { 1e-10 * diag_scale } else { shift * 100.0 };
+        }
+        anyhow::bail!(
+            "IC(0) breakdown persists after shifted retries (last shift {shift:.3e}): \
+             matrix is not SPD at working precision"
+        )
+    }
+
+    /// One factorization attempt at a fixed diagonal shift. Returns `None`
+    /// on pivot breakdown (or a structurally missing diagonal).
+    fn factor(g: &CsrMatrix, shift: f64) -> Option<CsrMatrix> {
+        let n = g.rows;
+        let mut indptr: Vec<usize> = Vec::with_capacity(n + 1);
+        indptr.push(0);
+        let mut indices: Vec<usize> = Vec::new();
+        let mut values: Vec<f64> = Vec::new();
+        for i in 0..n {
+            let row_start = indices.len();
+            let (gcols, gvals) = g.row(i);
+            let mut diag_seen = false;
+            for (k, &j) in gcols.iter().enumerate() {
+                if j > i {
+                    break;
+                }
+                if j == i {
+                    // L[i][i] = sqrt(g_ii + α − Σ_{k<i} L[i][k]²)
+                    let mut s = gvals[k] + shift;
+                    for v in &values[row_start..] {
+                        s -= v * v;
+                    }
+                    if s <= 0.0 || !s.is_finite() {
+                        return None;
+                    }
+                    indices.push(i);
+                    values.push(s.sqrt());
+                    diag_seen = true;
+                } else {
+                    // L[i][j] = (g_ij − Σ_{k<j} L[i][k]·L[j][k]) / L[j][j],
+                    // the correction restricted to G's sparsity (zero fill).
+                    let mut s = gvals[k];
+                    let (jlo, jhi) = (indptr[j], indptr[j + 1]);
+                    let (mut a, mut b) = (row_start, jlo);
+                    while a < indices.len() && b < jhi {
+                        let (ca, cb) = (indices[a], indices[b]);
+                        if ca >= j || cb >= j {
+                            break;
+                        }
+                        match ca.cmp(&cb) {
+                            std::cmp::Ordering::Equal => {
+                                s -= values[a] * values[b];
+                                a += 1;
+                                b += 1;
+                            }
+                            std::cmp::Ordering::Less => a += 1,
+                            std::cmp::Ordering::Greater => b += 1,
+                        }
+                    }
+                    // Row j's diagonal sits last in its row (ascending cols).
+                    let ljj = values[jhi - 1];
+                    indices.push(j);
+                    values.push(s / ljj);
+                }
+            }
+            if !diag_seen {
+                return None;
+            }
+            indptr.push(indices.len());
+        }
+        Some(CsrMatrix { rows: n, cols: n, indptr, indices, values })
+    }
+
+    /// Apply the preconditioner: solve L·Lᵀ·z = r by forward then backward
+    /// substitution.
+    pub fn solve(&self, r: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(r.len(), n);
+        let mut y = r.to_vec();
+        for i in 0..n {
+            let (cols, vals) = self.l.row(i);
+            let mut s = y[i];
+            for (k, &j) in cols.iter().enumerate() {
+                if j == i {
+                    y[i] = s / vals[k];
+                    break;
+                }
+                s -= vals[k] * y[j];
+            }
+        }
+        let mut z = y;
+        for i in (0..n).rev() {
+            let (cols, vals) = self.l.row(i);
+            let zi = z[i] / vals[vals.len() - 1];
+            z[i] = zi;
+            for (k, &j) in cols.iter().enumerate() {
+                if j == i {
+                    break;
+                }
+                z[j] -= vals[k] * zi;
+            }
+        }
+        z
+    }
+
+    /// Structural non-zero count of the factor.
+    pub fn nnz(&self) -> usize {
+        self.l.nnz()
+    }
+}
+
+/// Why a [`pcg`] run stopped — `converged` alone cannot distinguish a
+/// stall from a curvature breakdown from an exhausted budget, and the
+/// `SparseCg` failure gate wants to name the actual cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcgStop {
+    /// ‖r‖/‖rhs‖ reached the requested tolerance.
+    Converged,
+    /// The stagnation window expired without a 0.1% improvement on the
+    /// best residual: the iteration hit its floating-point noise floor.
+    Stalled,
+    /// pᵀq ≤ 0: the operator is not SPD at working precision.
+    CurvatureBreakdown,
+    /// `max_iters` applications spent before any other exit fired.
+    BudgetExhausted,
+}
+
+impl PcgStop {
+    /// Short human-readable cause for diagnostics.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            PcgStop::Converged => "converged",
+            PcgStop::Stalled => "stalled at residual floor",
+            PcgStop::CurvatureBreakdown => "curvature breakdown (operator not SPD)",
+            PcgStop::BudgetExhausted => "iteration budget exhausted",
+        }
+    }
+}
+
+/// Stagnation window for [`pcg`]: how many consecutive iterations without
+/// a 0.1% best-residual improvement count as a stall. Scale-aware — CG's
+/// worst-case trajectory needs O(n) iterations, and large ill-conditioned
+/// blocks show long plateaus mid-convergence, so the window grows with the
+/// problem while keeping the historical floor of 120 for small blocks.
+pub fn stall_window(n: usize) -> usize {
+    120.max(n / 2)
+}
+
 /// Result of a [`pcg`] run.
 #[derive(Debug, Clone)]
 pub struct PcgOutcome {
@@ -258,33 +509,59 @@ pub struct PcgOutcome {
     pub converged: bool,
     /// Final relative residual (recurrence residual).
     pub rel_residual: f64,
+    /// Why the iteration stopped.
+    pub stop: PcgStop,
 }
 
-/// Jacobi-preconditioned conjugate gradient on an SPD operator.
-///
-/// `apply` is one operator application (e.g. [`CsrMatrix::normal_apply`]),
-/// `diag_inv` the inverse operator diagonal, `x0` an optional warm start
-/// (any start converges to the same solution; a good one — e.g. the
-/// previous Schwarz sweep's local solution — just gets there in far fewer
-/// iterations). Iterates until ‖r‖ ≤ `tol`·‖rhs‖, the iteration budget
-/// runs out, or the residual stagnates at its fp noise floor (a 120-
-/// iteration window without a 0.1% improvement on the best residual —
-/// wide enough that the transient plateaus of a non-monotone CG residual
-/// history don't trip it mid-convergence, and a true floor still exits
-/// long before a large `max_iters` budget is burned).
+/// Jacobi-preconditioned conjugate gradient on an SPD operator: the
+/// historical entry point, now a thin wrapper over [`pcg_with`] with the
+/// diagonal preconditioner `z = diag_inv ⊙ r`.
 pub fn pcg(
-    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    apply: impl FnMut(&[f64]) -> Vec<f64>,
     rhs: &[f64],
     diag_inv: &[f64],
     x0: Option<&[f64]>,
     tol: f64,
     max_iters: usize,
 ) -> PcgOutcome {
+    assert_eq!(diag_inv.len(), rhs.len());
+    let precond = |r: &[f64]| r.iter().zip(diag_inv).map(|(ri, mi)| ri * mi).collect();
+    pcg_with(apply, rhs, precond, x0, tol, max_iters)
+}
+
+/// Preconditioned conjugate gradient on an SPD operator with a generic
+/// preconditioner application `z = M⁻¹ r` (Jacobi via [`pcg`], IC(0) via
+/// [`Ic0::solve`], or anything SPD).
+///
+/// `apply` is one operator application (e.g. [`CsrMatrix::normal_apply`]),
+/// `x0` an optional warm start (any start converges to the same solution;
+/// a good one — e.g. the previous Schwarz sweep's local solution — just
+/// gets there in far fewer iterations). Iterates until ‖r‖ ≤ `tol`·‖rhs‖,
+/// the iteration budget runs out, the curvature test fails, or the
+/// residual stagnates at its fp noise floor ([`stall_window`] iterations
+/// without a 0.1% improvement on the best residual — wide enough that the
+/// transient plateaus of a non-monotone CG residual history don't trip it
+/// mid-convergence, and scale-aware so large blocks with slow-but-real
+/// progress aren't cut off). The outcome's [`PcgStop`] names which exit
+/// fired.
+pub fn pcg_with(
+    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    rhs: &[f64],
+    mut precond: impl FnMut(&[f64]) -> Vec<f64>,
+    x0: Option<&[f64]>,
+    tol: f64,
+    max_iters: usize,
+) -> PcgOutcome {
     let n = rhs.len();
-    assert_eq!(diag_inv.len(), n);
     let rhs_norm = norm2(rhs);
     if rhs_norm == 0.0 {
-        return PcgOutcome { x: vec![0.0; n], iters: 0, converged: true, rel_residual: 0.0 };
+        return PcgOutcome {
+            x: vec![0.0; n],
+            iters: 0,
+            converged: true,
+            rel_residual: 0.0,
+            stop: PcgStop::Converged,
+        };
     }
     let (mut x, mut r) = match x0 {
         Some(x0) => {
@@ -295,15 +572,23 @@ pub fn pcg(
         }
         None => (vec![0.0; n], rhs.to_vec()),
     };
-    let mut z: Vec<f64> = r.iter().zip(diag_inv).map(|(ri, mi)| ri * mi).collect();
+    let mut z: Vec<f64> = precond(&r);
+    assert_eq!(z.len(), n, "preconditioner must preserve dimension");
     let mut p = z.clone();
     let mut rz = dot(&r, &z);
+    let window = stall_window(n);
     let mut best = f64::INFINITY;
     let mut since_best = 0usize;
     let mut iters = 0usize;
+    let stop;
     loop {
         let rel = norm2(&r) / rhs_norm;
-        if rel <= tol || iters >= max_iters {
+        if rel <= tol {
+            stop = PcgStop::Converged;
+            break;
+        }
+        if iters >= max_iters {
+            stop = PcgStop::BudgetExhausted;
             break;
         }
         if rel < best * 0.999 {
@@ -311,22 +596,21 @@ pub fn pcg(
             since_best = 0;
         } else {
             since_best += 1;
-            if since_best >= 120 {
+            if since_best >= window {
+                stop = PcgStop::Stalled;
                 break;
             }
         }
         let q = apply(&p);
         let pq = dot(&p, &q);
         if pq <= 0.0 {
-            // Curvature breakdown: operator not SPD at working precision.
+            stop = PcgStop::CurvatureBreakdown;
             break;
         }
         let alpha = rz / pq;
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &q, &mut r);
-        for (zi, (ri, mi)) in z.iter_mut().zip(r.iter().zip(diag_inv)) {
-            *zi = ri * mi;
-        }
+        z = precond(&r);
         let rz_new = dot(&r, &z);
         let beta = rz_new / rz;
         for (pi, zi) in p.iter_mut().zip(&z) {
@@ -336,7 +620,7 @@ pub fn pcg(
         iters += 1;
     }
     let rel_residual = norm2(&r) / rhs_norm;
-    PcgOutcome { x, iters, converged: rel_residual <= tol, rel_residual }
+    PcgOutcome { x, iters, converged: rel_residual <= tol, rel_residual, stop }
 }
 
 #[cfg(test)]
@@ -497,5 +781,181 @@ mod tests {
         assert!(out.converged);
         assert_eq!(out.x, vec![0.0; 4]);
         assert_eq!(out.iters, 0);
+        assert_eq!(out.stop, PcgStop::Converged);
+    }
+
+    #[test]
+    fn weighted_gram_parallel_bitwise_equals_serial() {
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(500 + seed);
+            let (m, n) = (20 + rng.below(40), 10 + rng.below(30));
+            let rows = random_rows(m, n, 5, &mut rng);
+            let a = CsrMatrix::from_rows(n, &rows);
+            let d: Vec<f64> =
+                (0..m).map(|i| if i % 7 == 0 { 0.0 } else { rng.uniform() + 0.1 }).collect();
+            let serial = a.weighted_gram_threads(&d, 1);
+            for t in [2usize, 3, 4, 8, 64] {
+                let par = a.weighted_gram_threads(&d, t);
+                for (k, (x, y)) in serial.as_slice().iter().zip(par.as_slice()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "seed {seed} t={t} element {k}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_gram_csr_matches_dense_plus_reg() {
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(600 + seed);
+            let (m, n) = (10 + rng.below(20), 5 + rng.below(10));
+            let rows = random_rows(m, n, 4, &mut rng);
+            let a = CsrMatrix::from_rows(n, &rows);
+            let d: Vec<f64> = (0..m).map(|_| rng.uniform() + 0.1).collect();
+            let reg: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.2).collect();
+            let g_sparse = a.weighted_gram_csr(&d, &reg);
+            let mut g_dense = a.weighted_gram(&d);
+            for (j, &r) in reg.iter().enumerate() {
+                g_dense[(j, j)] += r;
+            }
+            let mut diff = g_sparse.to_dense();
+            diff.scale(-1.0);
+            diff.add_assign(&g_dense);
+            assert!(diff.max_abs() < 1e-12, "seed {seed}: {:e}", diff.max_abs());
+        }
+    }
+
+    #[test]
+    fn ic0_exact_on_tridiagonal() {
+        // A tridiagonal SPD matrix's Cholesky factor has no fill, so IC(0)
+        // IS the exact factor and the preconditioned iteration converges
+        // in O(1) steps.
+        let n = 24;
+        let rows: Vec<Vec<(usize, f64)>> = (0..n)
+            .map(|i| {
+                let mut r = vec![(i, 4.0)];
+                if i > 0 {
+                    r.push((i - 1, -1.0));
+                }
+                if i + 1 < n {
+                    r.push((i + 1, -1.0));
+                }
+                r
+            })
+            .collect();
+        let g = CsrMatrix::from_rows(n, &rows);
+        let ic = Ic0::new(&g).unwrap();
+        assert_eq!(ic.shift, 0.0, "no shift needed on an M-matrix");
+        let mut rng = Rng::new(700);
+        let rhs = rng.gaussian_vec(n);
+        let out = pcg_with(|x: &[f64]| g.spmv(x), &rhs, |r| ic.solve(r), None, 1e-12, 50);
+        assert!(out.converged, "stop: {:?}", out.stop);
+        assert!(out.iters <= 3, "exact preconditioner should converge instantly: {}", out.iters);
+        let want = Cholesky::new(&g.to_dense()).unwrap().solve(&rhs);
+        assert!(dist2(&out.x, &want) < 1e-10);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "CG iteration loops; too slow interpreted")]
+    fn ic0_preconditioned_pcg_matches_cholesky() {
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(800 + seed);
+            let (m, n) = (40, 16);
+            let rows = random_rows(m, n, 5, &mut rng);
+            let a = CsrMatrix::from_rows(n, &rows);
+            let d: Vec<f64> = (0..m).map(|_| rng.uniform() + 0.5).collect();
+            let reg = vec![0.7; n];
+            let rhs = rng.gaussian_vec(n);
+            let g = a.weighted_gram_csr(&d, &reg);
+            let want = Cholesky::new(&g.to_dense()).unwrap().solve(&rhs);
+            let ic = Ic0::new(&g).unwrap();
+            let out = pcg_with(
+                |x: &[f64]| a.normal_apply(&d, &reg, x),
+                &rhs,
+                |r| ic.solve(r),
+                None,
+                1e-13,
+                10 * n + 200,
+            );
+            let err = dist2(&out.x, &want);
+            assert!(err <= 1e-10, "seed {seed}: IC(0)-PCG vs Cholesky = {err:e}");
+
+            // IC(0) must not be slower than Jacobi on the same system.
+            let mut diag_inv = a.weighted_gram_diag(&d);
+            for (v, r) in diag_inv.iter_mut().zip(&reg) {
+                *v = 1.0 / (*v + r);
+            }
+            let jac = pcg(
+                |x: &[f64]| a.normal_apply(&d, &reg, x),
+                &rhs,
+                &diag_inv,
+                None,
+                1e-13,
+                10 * n + 200,
+            );
+            assert!(
+                out.iters <= jac.iters,
+                "seed {seed}: IC(0) took {} iters vs Jacobi {}",
+                out.iters,
+                jac.iters
+            );
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "hundreds of CG iterations; too slow interpreted")]
+    fn pcg_stop_reasons_are_distinguished() {
+        // Budget exhaustion: one iteration cannot solve a coupled system.
+        let n = 8;
+        let rows: Vec<Vec<(usize, f64)>> = (0..n)
+            .map(|i| {
+                let mut r = vec![(i, 3.0)];
+                if i > 0 {
+                    r.push((i - 1, -1.0));
+                }
+                if i + 1 < n {
+                    r.push((i + 1, -1.0));
+                }
+                r
+            })
+            .collect();
+        let g = CsrMatrix::from_rows(n, &rows);
+        let rhs = vec![1.0; n];
+        let diag_inv = vec![1.0 / 3.0; n];
+        let out = pcg(|x: &[f64]| g.spmv(x), &rhs, &diag_inv, None, 1e-14, 1);
+        assert!(!out.converged);
+        assert_eq!(out.stop, PcgStop::BudgetExhausted);
+
+        // Curvature breakdown: a negative-definite operator fails pᵀq > 0
+        // on the first application.
+        let out = pcg(
+            |x: &[f64]| x.iter().map(|v| -v).collect(),
+            &[1.0, 2.0],
+            &[1.0, 1.0],
+            None,
+            1e-14,
+            100,
+        );
+        assert!(!out.converged);
+        assert_eq!(out.stop, PcgStop::CurvatureBreakdown);
+
+        // Stall: an unreachable tolerance (0.0) with a generous budget
+        // rides the residual down to its fp floor, then trips the window.
+        let out = pcg(|x: &[f64]| g.spmv(x), &rhs, &diag_inv, None, 0.0, 1_000_000);
+        assert!(!out.converged);
+        assert_eq!(out.stop, PcgStop::Stalled);
+        assert!(out.rel_residual < 1e-12, "stall must happen at the floor");
+    }
+
+    #[test]
+    fn stall_window_is_scale_aware() {
+        assert_eq!(stall_window(0), 120);
+        assert_eq!(stall_window(12), 120);
+        assert_eq!(stall_window(240), 120);
+        assert_eq!(stall_window(1000), 500);
+        assert_eq!(stall_window(1 << 17), 1 << 16);
     }
 }

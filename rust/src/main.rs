@@ -68,18 +68,19 @@ USAGE:
   dydd-da info
   dydd-da run [--config FILE] [--n N] [--m M] [--p P] [--layout L]
               [--dim 1|2|4] [--px PX] [--py PY] [--steps N_T]
-              [--backend native|kf|pjrt|cg] [--overlap S] [--mu MU]
-              [--no-dydd] [--seed SEED] [--no-baseline]
+              [--backend native|kf|pjrt|cg|cg-ic0] [--overlap S] [--mu MU]
+              [--threads T] [--no-dydd] [--seed SEED] [--no-baseline]
   dydd-da cycle [--config FILE] [--dim 1|2|4] [--n N] [--m M] [--p P]
               [--px PX] [--py PY] [--steps N_T] [--cycles K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
-              [--drift D] [--seed SEED] [--no-dydd] [--no-baseline]
+              [--drift D] [--seed SEED] [--threads T] [--no-dydd]
+              [--no-baseline]
   dydd-da serve [--config FILE] [--dim 1|2|4] [--n N] [--m M] [--p P]
               [--px PX] [--py PY] [--steps N_T] [--ticks K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
               [--drift D] [--seed SEED] [--source drift|replay|-]
-              [--no-dydd] [--no-baseline] [--no-feed-forward]
-              [--no-warm-start] [--force-cold]
+              [--threads T] [--no-dydd] [--no-baseline]
+              [--no-feed-forward] [--no-warm-start] [--force-cold]
   dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
   dydd-da dydd --dim 2 [--px PX] [--py PY] [--layout L2] [--n N] [--m M]
               [--seed SEED]
@@ -95,7 +96,12 @@ dim 4 (space-time): p = time windows over an n x steps trajectory; 1-D
                     1-D drifts move the density over the time axis
 backends: native (Cholesky) | kf (local VAR-KF) | pjrt (XLA artifacts)
           | cg (sparse matrix-free PCG — use for large grids, e.g.
-          `run --dim 2 --n 128 --backend cg`)
+          `run --dim 2 --n 128 --backend cg`) | cg-ic0 (same PCG with a
+          blocked IC(0) preconditioner — fewer iterations on
+          stencil-coupled blocks)
+--threads T: dense/sparse kernel threads (default: DYDD_THREADS or 1).
+          Banded deterministic reduction — results are bitwise-identical
+          at every thread count.
 serve sources: drift (native per-row stream; falls back to replay when
           the geometry has none) | replay (per-tick cycle_obs diffs)
           | - (JSONL deltas on stdin, one {tick, add, remove, move}
@@ -270,6 +276,9 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     if let Some(mu) = f.parsed::<f64>("--mu")? {
         cfg.schwarz.mu = mu;
     }
+    if let Some(t) = f.parsed::<usize>("--threads")? {
+        cfg.threads = t;
+    }
     if let Some(seed) = f.parsed::<u64>("--seed")? {
         cfg.seed = seed;
     }
@@ -431,6 +440,9 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
     if let Some(seed) = f.parsed::<u64>("--seed")? {
         cfg.seed = seed;
     }
+    if let Some(t) = f.parsed::<usize>("--threads")? {
+        cfg.threads = t;
+    }
     if f.has("--no-dydd") {
         cfg.dydd = false;
     }
@@ -573,10 +585,16 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     if f.has("--no-warm-start") {
         cfg.stream_warm_start = false;
     }
+    if let Some(t) = f.parsed::<usize>("--threads")? {
+        cfg.threads = t;
+    }
     if f.has("--force-cold") {
         cfg.stream_force_cold = true;
     }
     cfg.validate()?;
+    // `serve` drives the stream engine directly (no pipeline entry
+    // point), so the kernel-thread knob is applied here.
+    cfg.apply_threads();
     let unknowns = match cfg.dim {
         2 => cfg.n * cfg.n,
         4 => cfg.n * cfg.steps,

@@ -117,8 +117,13 @@ pub struct TickRecord {
     pub t_dydd: Duration,
     /// Simulated-parallel critical path of the tick's DD-KF solve.
     pub t_critical: Duration,
-    /// Measured wall-clock of the whole tick (ingest → analysis).
+    /// Measured wall-clock of the whole tick (ingest → analysis),
+    /// excluding `t_verify`.
     pub t_wall: Duration,
+    /// Cost of `debug_assertions`-only verification (full census recounts
+    /// and conservation checks). Already excluded from `t_wall` and
+    /// `t_dydd`; zero in release builds.
+    pub t_verify: Duration,
     pub error_dd_da: Option<f64>,
 }
 
@@ -152,6 +157,7 @@ impl TickRecord {
         o.insert("t_dydd_s".into(), num(self.t_dydd.as_secs_f64()));
         o.insert("t_critical_s".into(), num(self.t_critical.as_secs_f64()));
         o.insert("t_wall_s".into(), num(self.t_wall.as_secs_f64()));
+        o.insert("t_verify_s".into(), num(self.t_verify.as_secs_f64()));
         o.insert(
             "error_dd_da".into(),
             self.error_dd_da.map(Json::Num).unwrap_or(Json::Null),
@@ -266,13 +272,18 @@ impl<'g, G: RecordGeometry> StreamEngine<'g, G> {
             self.census.apply(delta, |r| geom.rec_owner(part, r))?;
         }
         let obs = geom.obs_from_records(self.store.records());
-        debug_assert_eq!(
-            crate::verify::check_census_matches(
-                self.census.counts(),
-                &geom.census(&self.part, &obs),
-            ),
-            Ok(())
-        );
+        // The full-census recount is a debug-assertions-only cross-check;
+        // its O(m·p) cost must not leak into the tick's t_wall, so it runs
+        // inside a measured verify window that is subtracted at the end.
+        let ((), mut t_verify) = crate::util::timer::verify_window(|| {
+            debug_assert_eq!(
+                crate::verify::check_census_matches(
+                    self.census.counts(),
+                    &geom.census(&self.part, &obs),
+                ),
+                Ok(())
+            );
+        });
 
         // 2. Policy decision on the incremental census; DyDD warm-starts
         // from the incumbent partition.
@@ -281,7 +292,16 @@ impl<'g, G: RecordGeometry> StreamEngine<'g, G> {
             self.opts.dydd && self.opts.policy.should_rebalance(e_before);
         let t0 = Instant::now();
         let (new_part, dydd) = maybe_rebalance(geom, &self.part, &obs, rebalanced)?;
-        let t_dydd = if rebalanced { t0.elapsed() } else { Duration::ZERO };
+        // rebalance() runs its own conservation asserts; their measured
+        // cost rides along in the record — keep it out of the DyDD timing.
+        let dydd_verify =
+            dydd.as_ref().map(|r| r.t_verify).unwrap_or(Duration::ZERO);
+        t_verify += dydd_verify;
+        let t_dydd = if rebalanced {
+            t0.elapsed().saturating_sub(dydd_verify)
+        } else {
+            Duration::ZERO
+        };
         let partition_changed = new_part != self.part;
         if partition_changed {
             self.part = new_part;
@@ -416,7 +436,8 @@ impl<'g, G: RecordGeometry> StreamEngine<'g, G> {
             stalled: par.stalled,
             t_dydd,
             t_critical: par.t_critical,
-            t_wall: t_wall0.elapsed(),
+            t_wall: t_wall0.elapsed().saturating_sub(t_verify),
+            t_verify,
             error_dd_da,
         };
         self.x = par.x;
@@ -526,6 +547,38 @@ mod tests {
     }
 
     #[test]
+    fn tick_wall_clock_excludes_verification_cost() {
+        // Regression for the t_wall0-before-recount bug: inflate the
+        // verify window by a delay dwarfing the whole tick and check that
+        // t_wall stays unaffected while t_verify books the cost. The
+        // injected delay fires whether or not debug_assertions compiled
+        // the recount in, so the invariant "t_wall is insensitive to
+        // debug-only work" holds in every profile.
+        let delay = Duration::from_millis(150);
+        crate::util::timer::set_extra_verify_delay(delay);
+        let mut geom = IntervalGeometry::new(96, 4);
+        geom.drift = DriftLayout::Stationary(ObsLayout::Uniform);
+        let mut src = DriftSource::new(&geom, 60, 5, 3).unwrap();
+        let rep = run_stream(&geom, &mut src, &StreamOptions::default(), |_| {});
+        crate::util::timer::set_extra_verify_delay(Duration::ZERO);
+        let rep = rep.unwrap();
+        for r in &rep.records {
+            assert!(
+                r.t_verify >= delay,
+                "tick {}: t_verify = {:?} missed the injected delay",
+                r.tick,
+                r.t_verify
+            );
+            assert!(
+                r.t_wall < delay,
+                "tick {}: t_wall = {:?} absorbed verification cost",
+                r.tick,
+                r.t_wall
+            );
+        }
+    }
+
+    #[test]
     fn tick_record_serializes_to_one_json_object() {
         let mut geom = IntervalGeometry::new(64, 4);
         geom.drift = DriftLayout::Stationary(ObsLayout::Uniform);
@@ -543,6 +596,7 @@ mod tests {
             assert_eq!(doc.get("p").and_then(Json::as_usize), Some(4));
             assert!(doc.get("census").unwrap().as_arr().unwrap().len() == 4);
             assert!(doc.get("t_wall_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(doc.get("t_verify_s").unwrap().as_f64().unwrap() >= 0.0);
         }
     }
 }

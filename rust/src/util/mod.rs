@@ -6,6 +6,7 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod threads;
 pub mod timer;
 
 pub use json::Json;

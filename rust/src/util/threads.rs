@@ -1,0 +1,101 @@
+//! Global kernel-thread knob for the parallel dense/sparse kernels.
+//!
+//! The dense `Mat::matmul` / `Mat::weighted_gram` and the CSR
+//! `CsrMatrix::weighted_gram` kernels parallelise by banding their *output*
+//! rows across scoped threads. Because every output element is accumulated
+//! by exactly one thread, in exactly the same order as the serial loop, the
+//! parallel result is bitwise identical to the serial one at every thread
+//! count — the deterministic-reduction contract the golden tests pin.
+//!
+//! The knob is process-global so deep call sites (local solvers inside the
+//! worker pool) do not need a threads parameter threaded through every
+//! signature. It resolves lazily from the `DYDD_THREADS` environment
+//! variable (CI's thread matrix sets it) and can be overridden at runtime
+//! via [`set_threads`] — the config/CLI layer does so from `[perf] threads`
+//! / `--threads`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 means "not yet resolved"; resolution reads `DYDD_THREADS` once.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+fn default_threads() -> usize {
+    match std::env::var("DYDD_THREADS") {
+        Ok(v) => v.trim().parse::<usize>().ok().filter(|&t| t >= 1).unwrap_or(1),
+        Err(_) => 1,
+    }
+}
+
+/// Number of kernel threads currently in effect (always >= 1).
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let d = default_threads();
+    // A racing first call recomputes the same deterministic default, so a
+    // plain store is fine.
+    THREADS.store(d, Ordering::Relaxed);
+    d
+}
+
+/// Set the kernel thread count (clamped up to 1).
+pub fn set_threads(t: usize) {
+    THREADS.store(t.max(1), Ordering::Relaxed);
+}
+
+/// Split `n` items into `t` contiguous bands whose sizes differ by at most
+/// one: the first `n % t` bands get `n / t + 1` items. Returns the
+/// half-open `[start, end)` ranges of the non-empty bands.
+pub fn bands(n: usize, t: usize) -> Vec<(usize, usize)> {
+    let t = t.max(1).min(n.max(1));
+    let base = n / t;
+    let extra = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for k in 0..t {
+        let len = base + usize::from(k < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_get_round_trip() {
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0); // clamps to 1
+        assert_eq!(threads(), 1);
+        set_threads(1);
+    }
+
+    #[test]
+    fn bands_cover_exactly_once() {
+        for n in [0usize, 1, 2, 7, 64, 65, 100] {
+            for t in [1usize, 2, 3, 4, 8, 17] {
+                let b = bands(n, t);
+                let mut next = 0;
+                for (s, e) in &b {
+                    assert_eq!(*s, next, "bands must be contiguous (n={n}, t={t})");
+                    assert!(*e > *s, "bands must be non-empty (n={n}, t={t})");
+                    next = *e;
+                }
+                assert_eq!(next, n, "bands must cover 0..n (n={n}, t={t})");
+                assert!(b.len() <= t);
+                if n > 0 {
+                    let max = b.iter().map(|(s, e)| e - s).max().unwrap();
+                    let min = b.iter().map(|(s, e)| e - s).min().unwrap();
+                    assert!(max - min <= 1, "bands must be balanced (n={n}, t={t})");
+                }
+            }
+        }
+    }
+}

@@ -110,6 +110,38 @@ impl TimingStats {
     }
 }
 
+thread_local! {
+    /// Test hook: extra sleep injected inside every [`verify_window`] on
+    /// this thread, standing in for arbitrarily expensive
+    /// `debug_assertions`-only verification work.
+    static EXTRA_VERIFY_DELAY_NS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Inject an artificial delay into every [`verify_window`] call on the
+/// current thread. Test-only hook: it lets the timing-exclusion regression
+/// tests prove that reported wall-clocks are insensitive to verification
+/// cost without having to toggle `debug_assertions` across builds.
+#[doc(hidden)]
+pub fn set_extra_verify_delay(d: Duration) {
+    EXTRA_VERIFY_DELAY_NS.with(|c| c.set(d.as_nanos() as u64));
+}
+
+/// Run `f` — verification-only work such as a `debug_assert!` recount —
+/// and return its output together with its measured cost, so a caller
+/// holding an open wall-clock window can subtract the verification time
+/// from the metric it reports. This is how `t_wall` / `t_dydd` stay honest
+/// under the dev/test profile (debug assertions on) without moving the
+/// checks out of the state they need to observe.
+pub fn verify_window<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    let extra = EXTRA_VERIFY_DELAY_NS.with(|c| c.get());
+    if extra > 0 {
+        std::thread::sleep(Duration::from_nanos(extra));
+    }
+    (out, t0.elapsed())
+}
+
 /// Format seconds in engineering style: "4.11e-2 s" like the paper's tables.
 pub fn fmt_secs(s: f64) -> String {
     if !s.is_finite() {
@@ -155,5 +187,19 @@ mod tests {
     fn fmt() {
         assert_eq!(fmt_secs(0.0411), "4.11e-2");
         assert_eq!(fmt_secs(0.0), "0");
+    }
+
+    #[test]
+    fn verify_window_measures_injected_delay() {
+        let (out, cost) = verify_window(|| 7);
+        assert_eq!(out, 7);
+        assert!(cost < Duration::from_millis(50));
+
+        set_extra_verify_delay(Duration::from_millis(20));
+        let (_, cost) = verify_window(|| ());
+        assert!(cost >= Duration::from_millis(20), "hook delay must be inside the window");
+        set_extra_verify_delay(Duration::ZERO);
+        let (_, cost) = verify_window(|| ());
+        assert!(cost < Duration::from_millis(20));
     }
 }

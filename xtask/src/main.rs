@@ -9,6 +9,11 @@
 //!   `xtask/fixtures/` named `<rule>.violate.rs` must trip exactly that
 //!   rule and every `*.ok.rs` must scan clean, so the rules cannot
 //!   silently rot.
+//! * `cargo xtask bench-refresh` — run the ablation benches (A6/A7/A8/A9)
+//!   and refresh the repo-root `BENCH_*.json` documents with measured
+//!   numbers, failing unless every refreshed document carries
+//!   `"measured": true`. This is the only sanctioned way to rewrite the
+//!   committed bench baselines.
 
 mod lex;
 mod rules;
@@ -23,8 +28,9 @@ fn main() -> ExitCode {
     match argv.as_slice() {
         ["lint"] => lint_tree(),
         ["lint", "--check-fixtures"] => check_fixtures(),
+        ["bench-refresh"] => bench_refresh(),
         _ => {
-            eprintln!("usage: cargo xtask lint [--check-fixtures]");
+            eprintln!("usage: cargo xtask lint [--check-fixtures] | bench-refresh");
             ExitCode::from(2)
         }
     }
@@ -131,6 +137,66 @@ fn check_fixtures() -> ExitCode {
     }
     println!("xtask lint --check-fixtures: {checked} fixtures, {failures} failure(s)");
     if failures == 0 && checked > 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+/// The BENCH documents the ablation benches emit (and the repo commits).
+const BENCH_DOCS: [&str; 4] =
+    ["BENCH_cycles.json", "BENCH_sparse.json", "BENCH_stream.json", "BENCH_scaling.json"];
+
+/// Run the ablation benches and move their freshly measured `BENCH_*.json`
+/// documents to the repo root, verifying each one is a real measurement
+/// (`"measured": true`) rather than a seed baseline.
+fn bench_refresh() -> ExitCode {
+    let root = repo_root();
+    let cargo = std::env::var("CARGO").unwrap_or_else(|_| "cargo".into());
+    println!("bench-refresh: running `cargo bench -p dydd-da --bench ablations` (release)…");
+    let status = std::process::Command::new(&cargo)
+        .args(["bench", "-p", "dydd-da", "--bench", "ablations"])
+        .current_dir(&root)
+        .status();
+    match status {
+        Ok(s) if s.success() => {}
+        Ok(s) => {
+            eprintln!("bench-refresh: bench run failed ({s})");
+            return ExitCode::FAILURE;
+        }
+        Err(e) => {
+            eprintln!("bench-refresh: cannot spawn {cargo}: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    let mut failures = 0usize;
+    for name in BENCH_DOCS {
+        // Cargo runs benches with the package dir as cwd, so the fresh
+        // documents land in rust/; committed baselines live at the root.
+        let in_pkg = root.join("rust").join(name);
+        let at_root = root.join(name);
+        if in_pkg.exists() {
+            if let Err(e) = fs::rename(&in_pkg, &at_root) {
+                eprintln!("bench-refresh: cannot move {name} to the repo root: {e}");
+                failures += 1;
+                continue;
+            }
+        }
+        if !at_root.exists() {
+            eprintln!("bench-refresh: {name} was not produced by the bench run");
+            failures += 1;
+            continue;
+        }
+        let text = read(&at_root);
+        if !(text.contains("\"measured\": true") || text.contains("\"measured\":true")) {
+            eprintln!("bench-refresh: {name} lacks \"measured\": true — refusing a fake baseline");
+            failures += 1;
+            continue;
+        }
+        println!("bench-refresh: {name} refreshed (measured)");
+    }
+    if failures == 0 {
+        println!("bench-refresh: all {} documents refreshed", BENCH_DOCS.len());
         ExitCode::SUCCESS
     } else {
         ExitCode::FAILURE
