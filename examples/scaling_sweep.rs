@@ -10,7 +10,9 @@
 //! The smoke mode is the CI gate: p ∈ {1, 2, 4} on a 128² grid with the
 //! cg backend, asserting (a) the analysis with kernel threads = 4 is
 //! bitwise-identical to kernel threads = 1 (the banded deterministic
-//! reduction contract) and (b) the wall-clock speedup from parallel
+//! reduction contract), likewise with batched dispatch forced on vs off
+//! (the same contract for same-shape block grouping), and (b) the
+//! wall-clock speedup from parallel
 //! execution at p = 4 is real (> 1): the aggregate worker busy time
 //! exceeds the measured wall-clock, which is only possible when workers
 //! genuinely overlap in time. The gate deliberately does *not* compare
@@ -112,6 +114,32 @@ fn run_cell(n_axis: usize, backend: SolverBackend, p: usize, seed: u64) -> anyho
     })
 }
 
+/// The batched-dispatch determinism gate: the same solve with the batch
+/// mode forced off vs on must produce bitwise-identical analyses (batched
+/// kernels band across members; padding is storage-only).
+fn assert_batch_bitwise(n_axis: usize, p: usize, seed: u64) -> anyhow::Result<()> {
+    use dydd_da::util::batch::{set_batch_mode, BatchMode};
+    set_batch_mode(BatchMode::Off);
+    let off = run_cell(n_axis, SolverBackend::Native, p, seed)?;
+    set_batch_mode(BatchMode::On);
+    let on = run_cell(n_axis, SolverBackend::Native, p, seed)?;
+    set_batch_mode(BatchMode::Auto);
+    anyhow::ensure!(off.x.len() == on.x.len(), "analysis length changed");
+    anyhow::ensure!(off.iters == on.iters, "iteration count changed under batching");
+    for (i, (a, b)) in off.x.iter().zip(&on.x).enumerate() {
+        anyhow::ensure!(
+            a.to_bits() == b.to_bits(),
+            "analysis[{i}] differs across batch modes: {a:e} vs {b:e}"
+        );
+    }
+    println!(
+        "bitwise check OK: {n_axis}² native p={p}, batch off vs on identical \
+         ({} unknowns)",
+        off.x.len()
+    );
+    Ok(())
+}
+
 /// The banded-kernel determinism gate: the same native-backend solve with
 /// kernel threads 1 vs 4 must produce bitwise-identical analyses (the
 /// dense gram/matmul path is the one the threads knob parallelizes).
@@ -138,8 +166,10 @@ fn assert_threads_bitwise(n_axis: usize, p: usize, seed: u64) -> anyhow::Result<
 
 fn smoke() -> anyhow::Result<()> {
     // (a) Deterministic parallel kernels, where the dense gram actually
-    // crosses the parallel-gate size.
+    // crosses the parallel-gate size — and the batched-dispatch contract
+    // on the same cell.
     assert_threads_bitwise(64, 4, 7)?;
+    assert_batch_bitwise(64, 8, 7)?;
 
     // (b) Real parallel execution on 128² with the sparse backend.
     let n_axis = 128;
@@ -191,6 +221,7 @@ fn main() -> anyhow::Result<()> {
     let dense_cap = 64;
 
     assert_threads_bitwise(64, 4, seed)?;
+    assert_batch_bitwise(64, 8, seed)?;
 
     for &n_axis in grids {
         for backend in [SolverBackend::Native, SolverBackend::Cg] {

@@ -1,0 +1,225 @@
+#!/usr/bin/env python3
+"""Seed the repo-root `BENCH_batch.json` with *measured* timings when no
+Rust toolchain is available.
+
+Timed port of the A10 ablation in `rust/benches/ablations.rs`: the
+many-small-blocks cell (64² grid, p=8 as a 4x2 box partition, dense
+local backend) solved over warm Retain ticks with per-block vs batched
+dispatch. The problem family comes from `scaling_probe`; the
+shape-bucket ladder (powers of two plus 1.5x midpoints from 8) is a
+faithful port of `linalg::batch::bucket`, and the pad-waste field
+reports the bucket-slab storage overhead of the arena exactly as
+`linalg::batch::pad_waste` defines it.
+
+A warm tick applies every block's cached factor (here the explicit gram
+inverse, identical for both paths) phase by phase on an 8-thread worker
+pool — numpy releases the GIL inside BLAS, so the pool genuinely
+parallelises and per-job dispatch cost is measured, as in the Rust
+`WorkerPool` cell. The per-block path submits one job per block and
+allocates fresh rhs/solution buffers every solve (what the per-block
+coordinator path does); the batched path submits one job per shape
+group and stages into persistent arena stacks through `out=` views —
+the same per-member BLAS operations, fewer dispatches, zero per-solve
+allocation.
+
+The authoritative bitwise contract lives on the Rust side (A10 gate,
+`rust/tests/batch.rs`); here the per-member analyses are compared and
+reported in `analysis_max_abs_diff`.
+
+`cargo xtask bench-refresh` (the CI bench job) overwrites this document
+with Rust A10 measurements; the schema matches that emitter.
+
+Run: python3 python/tools/batch_probe.py  (writes BENCH_batch.json at
+the repo root)
+"""
+
+import json
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import numpy as np
+
+from scaling_probe import build_problem, extract_blocks
+
+GRID = 64
+PX, PY = 4, 2
+P = PX * PY
+SEED = 7
+OBS_PER_AXIS = 8
+WARM_TICKS = 20
+WORKERS = 8
+
+
+def bucket(d):
+    """Port of `linalg::batch::bucket`: powers of two + 1.5x midpoints."""
+    if d == 0:
+        return 0
+    b = 8
+    while True:
+        if d <= b:
+            return b
+        if d <= b + b // 2:
+            return b + b // 2
+        b *= 2
+
+
+def setup():
+    """Extract + factor every block once (the cold epoch); group each
+    phase's members by bucketed shape, as `plan_batches` does."""
+    rows = build_problem(GRID, OBS_PER_AXIS * GRID, SEED)
+    blocks = extract_blocks(rows, GRID, PX, PY)
+    members = []
+    for blk in blocks:
+        a = blk["a"].toarray()
+        at_w = a.T * blk["w"]
+        g = at_w @ a
+        members.append({
+            "phase": blk["phase"],
+            "at_w": at_w,
+            "ginv": np.linalg.inv(g),
+            "b": blk["y"],
+            "n": a.shape[1],
+            "m": a.shape[0],
+        })
+    phases = sorted({m["phase"] for m in members})
+    groups = []
+    for ph in phases:
+        by_shape = {}
+        for mi, m in enumerate(members):
+            if m["phase"] != ph:
+                continue
+            key = (bucket(m["n"]), bucket(m["m"]))
+            by_shape.setdefault(key, []).append(mi)
+        for key, mem in sorted(by_shape.items()):
+            groups.append((key, mem))
+    return members, phases, groups
+
+
+def pad_waste(members, groups):
+    padded = sum(np * mp * len(mem) for (np, mp), mem in groups)
+    used = sum(members[i]["n"] * members[i]["m"] for _, mem in groups for i in mem)
+    return 1.0 - used / padded if padded else 0.0
+
+
+def make_arena(members, groups):
+    """Persistent rhs/solution stacks per group (the workspace arena):
+    allocated once at pack time, refilled in place every tick."""
+    arena = []
+    for (_, mem) in groups:
+        n_max = max(members[i]["n"] for i in mem)
+        arena.append((np.empty((len(mem), n_max)), np.empty((len(mem), n_max))))
+    return arena
+
+
+def tick_per_block(pool, members, by_phase):
+    """One warm tick, per-block dispatch: one pooled job per block, each
+    solve allocating its own rhs and solution buffers."""
+    def job(m):
+        rhs = m["at_w"] @ m["b"]
+        return m["ginv"] @ rhs
+
+    out = [None] * len(members)
+    for ph, mids in by_phase:
+        futs = [(mi, pool.submit(job, members[mi])) for mi in mids]
+        for mi, f in futs:
+            out[mi] = f.result()
+    return out
+
+
+def tick_batched(pool, members, groups, arena, phase_groups):
+    """One warm tick, batched dispatch: one pooled job per shape group,
+    staging into the group's arena stacks through `out=` views — the
+    same per-member BLAS calls with zero per-solve allocation."""
+    def job(gi):
+        _, mem = groups[gi]
+        rhs_buf, x_buf = arena[gi]
+        for i, mi in enumerate(mem):
+            m = members[mi]
+            n = m["n"]
+            np.dot(m["at_w"], m["b"], out=rhs_buf[i, :n])
+            np.dot(m["ginv"], rhs_buf[i, :n], out=x_buf[i, :n])
+        return gi
+
+    out = [None] * len(members)
+    for ph, gids in phase_groups:
+        futs = [pool.submit(job, gi) for gi in gids]
+        for f in futs:
+            gi = f.result()
+            _, mem = groups[gi]
+            _, x_buf = arena[gi]
+            for i, mi in enumerate(mem):
+                out[mi] = x_buf[i, : members[mi]["n"]]
+    return out
+
+
+def main():
+    members, phases, groups = setup()
+    arena = make_arena(members, groups)
+    by_phase = [(ph, [mi for mi, m in enumerate(members) if m["phase"] == ph])
+                for ph in phases]
+    phase_groups = [(ph, [gi for gi, (_, mem) in enumerate(groups)
+                          if members[mem[0]]["phase"] == ph])
+                    for ph in phases]
+    pool = ThreadPoolExecutor(max_workers=WORKERS)
+
+    # Alternate the two modes across rounds and keep each mode's best
+    # round: decorrelates scheduler/thermal drift from the comparison.
+    rounds = 5
+    t_per, t_bat = np.inf, np.inf
+    x_per = x_bat = None
+    tick_per_block(pool, members, by_phase)  # pool warm-up
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(WARM_TICKS):
+            x_per = tick_per_block(pool, members, by_phase)
+        t_per = min(t_per, (time.perf_counter() - t0) / WARM_TICKS)
+        t0 = time.perf_counter()
+        for _ in range(WARM_TICKS):
+            x_bat = tick_batched(pool, members, groups, arena, phase_groups)
+        t_bat = min(t_bat, (time.perf_counter() - t0) / WARM_TICKS)
+    pool.shutdown()
+
+    diff = max(float(np.max(np.abs(a - b))) for a, b in zip(x_per, x_bat))
+    bitwise = all(np.array_equal(a, b) for a, b in zip(x_per, x_bat))
+    speedup = t_per / max(t_bat, 1e-12)
+    waste = pad_waste(members, groups)
+    g_per = 1.0  # Off mode: one dispatch group per phase.
+    g_bat = len(groups) / len(phases)
+    print(f"per-block: {t_per * 1e3:.3f}ms/tick   "
+          f"batched: {t_bat * 1e3:.3f}ms/tick   speedup {speedup:.2f}x")
+    print(f"groups/phase {g_bat:.2f}  pad_waste {waste:.3f}  "
+          f"max|Δx| {diff:.1e}  bitwise={bitwise}")
+    doc = {
+        "bench": "batch",
+        "measured": True,
+        "scenario": {
+            "dim": 2, "grid": GRID, "p": P, "backend": "dense",
+            "warm_ticks": WARM_TICKS, "seed": SEED,
+        },
+        "warm_tick_per_block_s": round(t_per, 6),
+        "warm_tick_batched_s": round(t_bat, 6),
+        "speedup": round(speedup, 4),
+        "groups_per_phase_per_block": g_per,
+        "groups_per_phase_batched": round(g_bat, 4),
+        "pad_waste": round(waste, 6),
+        "analysis_max_abs_diff": diff,
+        "bitwise_batch_ok": bool(bitwise),
+        "note": ("seed baseline measured by python/tools/batch_probe.py — "
+                 "a timed single-process port of the A10 cell (pooled "
+                 "group-wise dispatch with arena-resident scratch vs a "
+                 "per-block job per solve with fresh buffers, 8 worker "
+                 "threads, identical per-member BLAS calls). The bitwise "
+                 "batched-vs-per-block contract is enforced by the Rust "
+                 "A10 gate and rust/tests/batch.rs; `cargo xtask "
+                 "bench-refresh` replaces this document with Rust "
+                 "measurements."),
+        "source": "python/tools/batch_probe.py",
+    }
+    out = Path(__file__).resolve().parents[2] / "BENCH_batch.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Stamp the repo-root `BENCH_cycles.json` with *measured* timings when no
+Rust toolchain is available.
+
+Timed port of the A6 cells in `rust/benches/ablations.rs`: the K=8
+translating-blob cycle scenario on a 1-D n=512 interval (m=800, p=4)
+under the three rebalance policies. Census, trigger and partition
+arithmetic come from the integer-exact `cycle_census_sim` port (the same
+module that seeded the committed balance numbers), so the `e_*` fields
+reproduce the Rust values exactly; the timing fields are real
+`time.perf_counter()` measurements of this process: per-cycle block
+extraction + dense factorization + multiplicative Schwarz, with the
+DyDD repartition timed separately (`rebalance_overhead_fraction` =
+ΣT_DyDD / (ΣT_DyDD + ΣT^p_critical), as in `CycleReport`).
+
+Migration volume is the exact 1-D chain flow: Σ over interior edges of
+|prefix(census − targets)| — the Σ|δ| of the applied schedule on a path
+graph. `cargo xtask bench-refresh` (the CI bench job) overwrites the
+document with Rust measurements. The schema matches the A6 emitter
+field for field.
+
+Run: python3 python/tools/cycles_probe.py  (writes BENCH_cycles.json at
+the repo root)
+"""
+
+import json
+import time
+from pathlib import Path
+
+from cycle_census_sim import (balance_ratio, census_1d, cycle_rng,
+                              drift_blob_1d, from_targets, nearest)
+from scaling_probe import DenseLocal, schwarz
+from stream_probe import extract_block, obs_row, state_rows
+
+N = 512
+P = 4
+M = 800
+CYCLES = 8
+SEED = 42
+TAU = 0.9
+MU0, PATH, SIGMA = 0.28, 0.06, 0.16
+
+
+def migration_volume(census, targets):
+    """Σ|δ| of the minimal path-graph schedule moving `census` to
+    `targets`: the absolute prefix flows over interior edges."""
+    flow, vol = 0, 0
+    for c, t in zip(census[:-1], targets[:-1]):
+        flow += c - t
+        vol += abs(flow)
+    return vol
+
+
+def run_policy(policy):
+    """One K-cycle run under `policy`; returns the summary row fields."""
+    bounds = [i * N // P for i in range(P + 1)]
+    srows = state_rows(N)
+    rebalances = 0
+    migrated = 0
+    balances = []
+    t_dydd_sum = 0.0
+    t_crit_sum = 0.0
+    t0_total = time.perf_counter()
+    for k in range(CYCLES):
+        t = 0.0 if CYCLES <= 1 else k / (CYCLES - 1)
+        rng = cycle_rng(SEED, k)
+        xs = drift_blob_1d(M, t, rng, MU0, PATH, SIGMA)
+        cen = census_1d(xs, N, bounds)
+        bal_before = balance_ratio(cen)
+        if policy == "never":
+            reb = False
+        elif policy == "every_cycle":
+            reb = True
+        else:
+            reb = bal_before < TAU
+        if reb:
+            td0 = time.perf_counter()
+            targets = [M // P] * P
+            for i in range(M % P):
+                targets[i] += 1
+            migrated += migration_volume(cen, targets)
+            grid = sorted(nearest(x, N) for x in xs)
+            bounds = from_targets(N, grid, targets)
+            t_dydd_sum += time.perf_counter() - td0
+            rebalances += 1
+        balances.append(balance_ratio(census_1d(xs, N, bounds)))
+        rows = srows + [obs_row(x, N, rng.uniform() - 0.5) for x in xs]
+        blocks = [extract_block(rows, bounds, bi) for bi in range(P)]
+        locals_ = [DenseLocal(b) for b in blocks]
+        _, _, t_crit = schwarz(blocks, locals_, N)
+        t_crit_sum += t_crit
+    wall = time.perf_counter() - t0_total
+    overhead = t_dydd_sum / max(t_dydd_sum + t_crit_sum, 1e-12)
+    return {
+        "policy": policy if policy != "threshold" else f"threshold:{TAU}",
+        "rebalances": rebalances,
+        "e_final": balances[-1],
+        # Left-to-right sum, as the Rust emitter accumulates it (pairwise
+        # np.mean differs in the last ulp).
+        "e_mean": sum(balances) / len(balances),
+        "cycles_per_sec": round(CYCLES / max(wall, 1e-9), 4),
+        "rebalance_overhead_fraction": round(overhead, 6),
+        "migration_volume": migrated,
+    }
+
+
+def main():
+    rows = []
+    for policy in ["never", "every_cycle", "threshold"]:
+        row = run_policy(policy)
+        rows.append(row)
+        print(f"{row['policy']:14s} rebs={row['rebalances']} "
+              f"e_final={row['e_final']:.3f} e_mean={row['e_mean']:.3f} "
+              f"cyc/s={row['cycles_per_sec']:.2f} "
+              f"overhead={row['rebalance_overhead_fraction']:.3f} "
+              f"moved={row['migration_volume']}")
+    doc = {
+        "bench": "cycles",
+        "measured": True,
+        "scenario": {
+            "cycles": CYCLES, "dim": 1, "drift": "translating_blob",
+            "m": M, "n": N, "p": P, "seed": SEED,
+        },
+        "policies": rows,
+        "note": ("seed baseline measured by python/tools/cycles_probe.py — "
+                 "census/balance fields are integer-exact (cycle_census_sim "
+                 "arithmetic); timing fields are a single-process port of "
+                 "the A6 cycle loop. `cargo xtask bench-refresh` replaces "
+                 "this document with Rust measurements."),
+        "source": "python/tools/cycles_probe.py",
+    }
+    out = Path(__file__).resolve().parents[2] / "BENCH_cycles.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

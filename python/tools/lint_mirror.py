@@ -2,7 +2,7 @@
 """Exact-arithmetic mirror of `cargo xtask lint` (xtask/src/{lex,rules}.rs).
 
 No Rust toolchain exists in the authoring container, so the lint's scanner
-and all five rules are ported line-for-line here and run against the real
+and all six rules are ported line-for-line here and run against the real
 tree plus the fixture corpus; CI then re-runs the Rust implementation.
 Keep in sync with xtask when adding rules.
 
@@ -19,11 +19,20 @@ NO_WALL_CLOCK = "no-wall-clock-in-sim"
 NO_DENSE_ALLOC = "no-dense-alloc-on-sparse-path"
 NO_UNWRAP = "no-unwrap-in-lib"
 GEOMETRY_REGISTRATION = "geometry-registration"
+NO_SWEEP_ALLOC = "no-alloc-in-sweep-loop"
 WAIVER_SYNTAX = "waiver-syntax"
-RULES = [NO_PARTIAL_CMP, NO_WALL_CLOCK, NO_DENSE_ALLOC, NO_UNWRAP, GEOMETRY_REGISTRATION]
+RULES = [
+    NO_PARTIAL_CMP,
+    NO_WALL_CLOCK,
+    NO_DENSE_ALLOC,
+    NO_UNWRAP,
+    GEOMETRY_REGISTRATION,
+    NO_SWEEP_ALLOC,
+]
 
 WALL_CLOCK_ALLOWED = ["rust/src/util/timer.rs", "rust/src/dydd/", "rust/src/coordinator/"]
 SPARSE_PATH = ["rust/src/linalg/sparse.rs", "rust/src/ddkf/local.rs", "rust/src/stream/"]
+SWEEP_HOT_FILES = ["rust/src/ddkf/schwarz.rs", "rust/src/coordinator/worker.rs"]
 
 
 class Line:
@@ -31,6 +40,7 @@ class Line:
         self.code = []
         self.comment = []
         self.in_test = False
+        self.in_hot = False
 
 
 class SourceFile:
@@ -168,6 +178,7 @@ def scan(path, src):
         ln.code = "".join(ln.code)
         ln.comment = "".join(ln.comment)
     mark_test_regions(lines)
+    mark_hot_regions(lines)
     waivers, bad = collect_waivers(lines)
     return SourceFile(path, lines, waivers, bad)
 
@@ -193,6 +204,17 @@ def mark_test_regions(lines):
                     close_at.pop()
                 depth -= 1
         line.in_test = in_test or bool(close_at)
+
+
+def mark_hot_regions(lines):
+    # lint:sweep-hot-start … lint:sweep-hot-end comment markers, inclusive.
+    hot = False
+    for line in lines:
+        if "lint:sweep-hot-start" in line.comment:
+            hot = True
+        line.in_hot = hot
+        if "lint:sweep-hot-end" in line.comment:
+            hot = False
 
 
 def collect_waivers(lines):
@@ -290,6 +312,7 @@ def lint_file(sf):
     wall_clock_scoped = not any(sf.path.startswith(p) for p in WALL_CLOCK_ALLOWED)
     sparse_scoped = any(sf.path.startswith(p) for p in SPARSE_PATH)
     unwrap_scoped = sf.path != "rust/src/main.rs"
+    sweep_scoped = sf.path in SWEEP_HOT_FILES
     for idx, line in enumerate(sf.lines):
         if line.in_test:
             continue
@@ -309,6 +332,10 @@ def lint_file(sf):
             for tok in ["Mat::zeros", "Mat::identity"]:
                 if has_token_seq(code, tok):
                     flag(NO_DENSE_ALLOC, f"{tok} on the sparse path")
+        if sweep_scoped and line.in_hot:
+            for tok in ["Vec::new", "vec!", "Mat::zeros"]:
+                if has_token_seq(code, tok):
+                    flag(NO_SWEEP_ALLOC, f"{tok} inside a sweep hot region")
         if unwrap_scoped:
             if ".unwrap()" in code:
                 flag(NO_UNWRAP, "unwrap() on a library path")

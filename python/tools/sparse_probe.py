@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Stamp the repo-root `BENCH_sparse.json` with *measured* timings when no
+Rust toolchain is available.
+
+Timed port of the A7 cells in `rust/benches/ablations.rs`: block (0, 0)
+of the uniform 2x2 box partition of an n x n FivePoint + gaussian-blob
+problem (the `scaling_probe` problem family), dense weighted-Gram
+Cholesky vs matrix-free Jacobi-PCG, one assemble plus 10 solves per
+backend against perturbed right-hand sides (CG warm-starts, so identical
+rhs would make solves 2..K near-free and inflate the speedup — same
+guard as the Rust bench).
+
+Every `t_*_s` field is a real `time.perf_counter()` measurement of this
+process; `cargo xtask bench-refresh` (the CI bench job) overwrites the
+document with Rust measurements. The schema matches the A7 emitter
+field for field.
+
+Run: python3 python/tools/sparse_probe.py  (writes BENCH_sparse.json at
+the repo root)
+"""
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from scaling_probe import CgLocal, DenseLocal, build_problem, extract_blocks
+
+SEED = 77
+GRIDS = [32, 64, 96, 128]
+SOLVES = 10
+
+
+def run_cell(n):
+    """One measured (grid) cell: assemble + SOLVES solves per backend on
+    block (0, 0), timed separately for dense and cg."""
+    rows = build_problem(n, (n * n) // 8, SEED)
+    blk = extract_blocks(rows, n, 2, 2)[0]
+    n_loc = blk["a"].shape[1]
+    m_loc = blk["a"].shape[0]
+    b_eff = blk["y"].copy()
+    # Distinct rhs per timed solve, as in the Rust bench.
+    bes = []
+    for k in range(SOLVES):
+        r = np.random.default_rng(1000 + k)
+        bes.append(b_eff + 0.01 * r.standard_normal(len(b_eff)))
+
+    t0 = time.perf_counter()
+    dense = DenseLocal(blk)
+    for be in bes:
+        x_dense = dense.solve(be, None)
+    t_dense = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    cg = CgLocal(blk)
+    warm = None
+    for be in bes:
+        warm = cg.solve(be, warm)
+    x_cg = warm
+    t_cg = time.perf_counter() - t0
+
+    err = float(np.linalg.norm(x_dense - x_cg))
+    return n_loc, m_loc, t_dense, t_cg, err
+
+
+def main():
+    rows_out = []
+    for n in GRIDS:
+        n_loc, m_loc, t_dense, t_cg, err = run_cell(n)
+        speedup = t_dense / max(t_cg, 1e-9)
+        print(f"{n:3d}² n_loc={n_loc:5d} m_loc={m_loc:5d} "
+              f"dense={t_dense:7.3f}s cg={t_cg:7.3f}s "
+              f"S={speedup:5.1f} err={err:.1e}")
+        rows_out.append({
+            "grid": n, "n_loc": n_loc, "m_loc": m_loc,
+            "t_dense_s": round(t_dense, 6),
+            "t_cg_s": round(t_cg, 6),
+            "speedup": round(speedup, 4),
+            "err_dense_vs_cg": err,
+        })
+    doc = {
+        "bench": "sparse",
+        "measured": True,
+        "solves_per_backend": SOLVES,
+        "note": ("seed baseline measured by python/tools/sparse_probe.py — "
+                 "a timed single-process port of the A7 cells (dense "
+                 "weighted-Gram Cholesky vs Jacobi-PCG on block (0,0) of "
+                 "the 2x2 box partition). `cargo xtask bench-refresh` "
+                 "replaces this document with Rust measurements."),
+        "source": "python/tools/sparse_probe.py",
+        "rows": rows_out,
+    }
+    out = Path(__file__).resolve().parents[2] / "BENCH_sparse.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

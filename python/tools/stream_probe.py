@@ -1,0 +1,185 @@
+#!/usr/bin/env python3
+"""Stamp the repo-root `BENCH_stream.json` with *measured* timings when no
+Rust toolchain is available.
+
+Timed port of the A8 cells in `rust/benches/ablations.rs`: the K=16
+translating-blob stream on a 1-D n=512 interval split into p=8 uniform
+blocks (Tridiag{main=1.0, off=0.15} state rows, weight 4, plus
+nearest-point observation rows, weight 100). The uniform half of the
+observation set is emitted once and held; the blob half drifts tick to
+tick (`DriftSource` delta semantics), so a block is dirty exactly when a
+blob observation entered or left it:
+
+ * incremental — re-extract + refactor dirty blocks only, warm-started
+   multiplicative Schwarz from the previous tick's analysis;
+ * cold       — forced re-extraction + refactorization of every block
+   each tick (same warm-started outer solve).
+
+Every tick-cost field is a real `time.perf_counter()` measurement of
+this process; `cargo xtask bench-refresh` (the CI bench job) overwrites
+the document with Rust measurements. The schema matches the A8 emitter
+field for field.
+
+Run: python3 python/tools/stream_probe.py  (writes BENCH_stream.json at
+the repo root)
+"""
+
+import bisect
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import scipy.sparse as sp
+
+from cycle_census_sim import Rng, cycle_rng, drift_blob_1d, nearest
+from scaling_probe import DenseLocal, schwarz
+
+N = 512
+P = 8
+M = 800
+TICKS = 16
+SEED = 42
+# DriftLayout::TranslatingBlob constants (see cycle_census_sim).
+MU0, PATH, SIGMA = 0.28, 0.06, 0.16
+
+
+def state_rows(n):
+    """Tridiag{main=1.0, off=0.15} state rows, weight 4, fixed background."""
+    bg = np.random.default_rng(123).standard_normal(n)
+    rows = []
+    for j in range(n):
+        cols, vals = [], []
+        if j > 0:
+            cols.append(j - 1); vals.append(0.15)
+        cols.append(j); vals.append(1.0)
+        if j + 1 < n:
+            cols.append(j + 1); vals.append(0.15)
+        rows.append((cols, vals, 4.0, bg[j]))
+    return rows
+
+
+def obs_row(x, n, y):
+    """Nearest-point observation of grid point `x`, weight 100."""
+    return ([nearest(x, n)], [1.0], 100.0, y)
+
+
+def extract_block(rows, bounds, bi):
+    """One zero-overlap interval block: in-set rows as scipy CSR plus the
+    halo couplings, shaped like `scaling_probe.extract_blocks` output.
+    The block's own index is its Schwarz phase (multiplicative order)."""
+    lo, hi = bounds[bi], bounds[bi + 1]
+    cols = np.arange(lo, hi, dtype=np.int64)
+    data, indices, indptr = [], [], [0]
+    b_w, b_y, halo = [], [], []
+    for (rcols, rvals, w, y) in rows:
+        loc = [(c - lo, v) for c, v in zip(rcols, rvals) if lo <= c < hi]
+        if not loc:
+            continue
+        r_loc = len(b_w)
+        for c, v in loc:
+            indices.append(c); data.append(v)
+        indptr.append(len(indices))
+        b_w.append(w)
+        b_y.append(y)
+        for c, v in zip(rcols, rvals):
+            if not lo <= c < hi and v != 0.0:
+                halo.append((r_loc, c, v))
+    a = sp.csr_matrix((data, indices, indptr), shape=(len(b_w), hi - lo))
+    halo_arr = (np.array([h[0] for h in halo], dtype=np.int64),
+                np.array([h[1] for h in halo], dtype=np.int64),
+                np.array([h[2] for h in halo]))
+    return {"cols": cols, "a": a, "w": np.array(b_w), "y": np.array(b_y),
+            "halo": halo_arr, "phase": bi}
+
+
+def owner_of(g, bounds):
+    return min(bisect.bisect_right(bounds, g) - 1, len(bounds) - 2)
+
+
+def blob_ticks():
+    """Per-tick blob observation rows (positions + values), uniform half
+    held fixed: the `DriftSource` delta structure."""
+    base = Rng(SEED)
+    m_u = M // 2
+    uniform = [obs_row((i + base.uniform()) / m_u, N, base.uniform() - 0.5)
+               for i in range(m_u)]
+    ticks = []
+    for k in range(TICKS):
+        t = 0.0 if TICKS <= 1 else k / (TICKS - 1)
+        rng = cycle_rng(SEED, k)
+        xs = drift_blob_1d(M, t, rng, MU0, PATH, SIGMA)[m_u:]
+        ticks.append([obs_row(x, N, rng.uniform() - 0.5) for x in xs])
+    return uniform, ticks
+
+
+def run_mode(force_cold):
+    """One full stream run; returns (x, tick wall times, dirty counts)."""
+    bounds = [i * N // P for i in range(P + 1)]
+    srows = state_rows(N)
+    uniform, ticks = blob_ticks()
+    blocks = [None] * P
+    locals_ = [None] * P
+    x = None
+    walls, dirty_counts = [], []
+    prev_touch = set()
+    for k in range(TICKS):
+        rows = srows + uniform + ticks[k]
+        touch = {owner_of(r[0][0], bounds) for r in ticks[k]}
+        dirty = set(range(P)) if (k == 0 or force_cold) else touch | prev_touch
+        prev_touch = touch
+        t0 = time.perf_counter()
+        for bi in sorted(dirty):
+            blocks[bi] = extract_block(rows, bounds, bi)
+            locals_[bi] = DenseLocal(blocks[bi])
+        x, _, _ = schwarz(blocks, locals_, N, x0=x)
+        walls.append(time.perf_counter() - t0)
+        dirty_counts.append(len(dirty))
+    return x, walls, dirty_counts
+
+
+def main():
+    t0 = time.perf_counter()
+    x_inc, w_inc, d_inc = run_mode(False)
+    x_cold, w_cold, d_cold = run_mode(True)
+    # Warm-tick statistics skip tick 0 (the unavoidable cold start), as in
+    # the Rust A8 emitter.
+    warm_mean = float(np.mean(w_inc[1:]))
+    cold_mean = float(np.mean(w_cold[1:]))
+    dirty_fraction = float(np.mean([d / P for d in d_inc[1:]]))
+    cache_hit = float(np.mean([(P - d) / P for d in d_inc[1:]]))
+    err = float(np.linalg.norm(x_inc - x_cold))
+    print(f"incremental: factors={sum(d_inc)} warm_tick={warm_mean:.4f}s "
+          f"cache_hit={cache_hit:.3f}")
+    print(f"cold:        factors={sum(d_cold)} warm_tick={cold_mean:.4f}s")
+    print(f"speedup={cold_mean / max(warm_mean, 1e-12):.2f} err={err:.1e} "
+          f"({time.perf_counter() - t0:.1f}s total)")
+    doc = {
+        "bench": "stream",
+        "measured": True,
+        "scenario": {
+            "dim": 1, "n": N, "m": M, "p": P, "ticks": TICKS, "seed": SEED,
+            "drift": "translating_blob", "source": "drift",
+        },
+        "warm_tick_mean_s": round(warm_mean, 6),
+        "cold_tick_mean_s": round(cold_mean, 6),
+        "speedup": round(cold_mean / max(warm_mean, 1e-12), 4),
+        "dirty_block_fraction": round(dirty_fraction, 6),
+        "cache_hit_rate": round(cache_hit, 6),
+        "factorizations_incremental": sum(d_inc),
+        "factorizations_cold": sum(d_cold),
+        "err_incremental_vs_cold": err,
+        "note": ("seed baseline measured by python/tools/stream_probe.py — "
+                 "a timed single-process port of the A8 scenario "
+                 "(dirty-block incremental vs forced cold re-extraction on "
+                 "the K=16 drifting blob). `cargo xtask bench-refresh` "
+                 "replaces this document with Rust measurements."),
+        "source": "python/tools/stream_probe.py",
+    }
+    out = Path(__file__).resolve().parents[2] / "BENCH_stream.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,10 @@
 //!      grids, dense vs cg local solvers, plus the kernel-thread bitwise
 //!      determinism gate (emits `BENCH_scaling.json`; set
 //!      DYDD_BENCH_FULL=1 to extend the cg rows to 512²).
+//! A10. Batched same-shape dispatch: warm Retain ticks with the batch
+//!      mode forced off vs on on the many-small-blocks cell (64², p=8),
+//!      with the bitwise gate between the two modes (emits
+//!      `BENCH_batch.json`).
 
 use dydd_da::cls::{ClsProblem, ClsProblem2d, StateOp, StateOp2d};
 use dydd_da::config::ExperimentConfig;
@@ -393,7 +397,7 @@ fn main() -> anyhow::Result<()> {
     let scaling_cell = |n_axis: usize,
                         backend: SolverBackend,
                         p: usize|
-     -> anyhow::Result<(f64, f64, f64, usize, Vec<f64>)> {
+     -> anyhow::Result<(f64, f64, f64, usize, usize, Vec<f64>)> {
         let (px, py) = match p {
             1 => (1, 1),
             2 => (2, 1),
@@ -417,9 +421,9 @@ fn main() -> anyhow::Result<()> {
         let t_cold = t0.elapsed().as_secs_f64();
         let tasks: Vec<BlockTask> = (0..p).map(|_| BlockTask::Retain).collect();
         let t0 = std::time::Instant::now();
-        pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, true)?;
+        let (warm, _) = pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, true)?;
         let t_warm = t0.elapsed().as_secs_f64();
-        Ok((t_cold, t_warm, cold.t_critical.as_secs_f64(), cold.iters, cold.x))
+        Ok((t_cold, t_warm, cold.t_critical.as_secs_f64(), cold.iters, warm.iters, cold.x))
     };
 
     // Kernel-thread determinism gate: the dense gram/matmul kernels must
@@ -447,7 +451,10 @@ fn main() -> anyhow::Result<()> {
     let dense_cap = 64;
     let mut t = Table::new(
         "A9 — strong scaling: measured wall next to simulated critical path",
-        &["grid", "backend", "p", "iters", "T_wall cold", "T_wall warm", "T^p_crit", "S_wall"],
+        &[
+            "grid", "backend", "p", "iters", "T_wall cold", "T_wall warm", "T_warm/iter",
+            "T^p_crit", "S_wall",
+        ],
     );
     let mut scaling_rows: Vec<Json> = Vec::new();
     for &n_axis in grids {
@@ -459,8 +466,12 @@ fn main() -> anyhow::Result<()> {
             let label = if backend == SolverBackend::Native { "dense" } else { "cg" };
             let mut w1: Option<f64> = None;
             for p in [1usize, 2, 4, 8] {
-                let (t_cold, t_warm, t_crit, iters, _) = scaling_cell(n_axis, backend, p)?;
+                let (t_cold, t_warm, t_crit, iters, warm_iters, _) =
+                    scaling_cell(n_axis, backend, p)?;
                 let base = *w1.get_or_insert(t_cold);
+                // Iters-normalized warm cost: comparable across cells whose
+                // Schwarz iteration counts differ.
+                let t_per_sweep = t_warm / (warm_iters as f64).max(1.0);
                 t.row(&[
                     format!("{n_axis}x{n_axis}"),
                     label.to_string(),
@@ -468,6 +479,7 @@ fn main() -> anyhow::Result<()> {
                     iters.to_string(),
                     fmt_secs(t_cold),
                     fmt_secs(t_warm),
+                    fmt_secs(t_per_sweep),
                     fmt_secs(t_crit),
                     format!("{:.2}", base / t_cold.max(1e-12)),
                 ]);
@@ -478,6 +490,7 @@ fn main() -> anyhow::Result<()> {
                 row.insert("iters".into(), Json::Num(iters as f64));
                 row.insert("t_wall_cold_s".into(), Json::Num(t_cold));
                 row.insert("t_wall_warm_s".into(), Json::Num(t_warm));
+                row.insert("t_per_sweep_s".into(), Json::Num(t_per_sweep));
                 row.insert("t_critical_s".into(), Json::Num(t_crit));
                 row.insert("speedup_wall".into(), Json::Num(base / t_cold.max(1e-12)));
                 scaling_rows.push(Json::Obj(row));
@@ -494,6 +507,94 @@ fn main() -> anyhow::Result<()> {
     doc.insert("seed".into(), Json::Num(7.0));
     doc.insert("rows".into(), Json::Arr(scaling_rows));
     let path = "BENCH_scaling.json";
+    std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
+    println!("wrote {path}");
+
+    // ---------- A10: batched same-shape dispatch vs per-block ----------
+    use dydd_da::util::batch::{set_batch_mode, BatchMode};
+
+    // The many-small-blocks cell where batching should win: 64² grid cut
+    // into p=8 boxes gives two colour phases of four same-shape blocks
+    // each, so the batched path fuses 4 grams + 4 factor solves into one
+    // dispatch per phase. Warm Retain ticks isolate the per-sweep cost
+    // from one-off extraction/factorization.
+    const A10_TICKS: usize = 5;
+    let batch_cell = |mode: BatchMode| -> anyhow::Result<(f64, f64, f64, Vec<f64>)> {
+        set_batch_mode(mode);
+        let geom = BoxGeometry::new(64, 4, 2);
+        let mut rng = Rng::new(7);
+        let obs = geom.static_obs(8 * 64, &mut rng);
+        let prob = geom.make_problem(geom.background(), obs);
+        let part = geom.initial_partition();
+        let opts = SchwarzOptions::default();
+        let nn = geom.n_unknowns();
+        let mut pool = WorkerPool::new(8, SolverBackend::Native, "artifacts".into());
+        let epochs = vec![BlockEpoch::default(); 8];
+        let blocks = blocks_of(&geom, &prob, &part, opts.overlap);
+        let phases = phases_of(&geom, &blocks, &part);
+        let n_phases = phases.len();
+        let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
+        pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, false)?;
+        let mut t_warm = 0.0;
+        let mut out = None;
+        for _ in 0..A10_TICKS {
+            let tasks: Vec<BlockTask> = (0..8).map(|_| BlockTask::Retain).collect();
+            let t0 = std::time::Instant::now();
+            let (o, _) = pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, true)?;
+            t_warm += t0.elapsed().as_secs_f64();
+            out = Some(o);
+        }
+        let out = out.expect("A10_TICKS > 0");
+        let groups_per_phase = out.batch_groups as f64 / n_phases.max(1) as f64;
+        Ok((t_warm / A10_TICKS as f64, groups_per_phase, out.pad_waste, out.x))
+    };
+    let (t_off, g_off, _w_off, x_off) = batch_cell(BatchMode::Off)?;
+    let (t_on, g_on, w_on, x_on) = batch_cell(BatchMode::On)?;
+    set_batch_mode(BatchMode::Auto);
+    // The bitwise gate the whole feature is contracted on.
+    assert!(
+        x_off.len() == x_on.len()
+            && x_off.iter().zip(&x_on).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "batched dispatch changed the analysis bitwise"
+    );
+    println!("A10 bitwise gate: batch on vs off identical on 64² dense p=8");
+    let mut t = Table::new(
+        "A10 — batched same-shape dispatch (64², p=8, dense, warm Retain ticks)",
+        &["mode", "groups/phase", "pad_waste", "warm tick mean", "speedup"],
+    );
+    let speedup = t_off / t_on.max(1e-12);
+    for (name, tick, g, w, s) in [
+        ("per-block", t_off, g_off, 0.0, 1.0),
+        ("batched", t_on, g_on, w_on, speedup),
+    ] {
+        t.row(&[
+            name.to_string(),
+            format!("{g:.2}"),
+            format!("{w:.3}"),
+            fmt_secs(tick),
+            format!("{s:.2}x"),
+        ]);
+    }
+    println!("{}", t.render());
+    let mut scenario = BTreeMap::new();
+    scenario.insert("dim".into(), Json::Num(2.0));
+    scenario.insert("grid".into(), Json::Num(64.0));
+    scenario.insert("p".into(), Json::Num(8.0));
+    scenario.insert("backend".into(), Json::Str("dense".into()));
+    scenario.insert("warm_ticks".into(), Json::Num(A10_TICKS as f64));
+    scenario.insert("seed".into(), Json::Num(7.0));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("batch".into()));
+    doc.insert("measured".into(), Json::Bool(true));
+    doc.insert("scenario".into(), Json::Obj(scenario));
+    doc.insert("warm_tick_per_block_s".into(), Json::Num(t_off));
+    doc.insert("warm_tick_batched_s".into(), Json::Num(t_on));
+    doc.insert("speedup".into(), Json::Num(speedup));
+    doc.insert("groups_per_phase_per_block".into(), Json::Num(g_off));
+    doc.insert("groups_per_phase_batched".into(), Json::Num(g_on));
+    doc.insert("pad_waste".into(), Json::Num(w_on));
+    doc.insert("bitwise_batch_ok".into(), Json::Bool(true));
+    let path = "BENCH_batch.json";
     std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
     println!("wrote {path}");
 

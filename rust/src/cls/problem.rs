@@ -200,11 +200,20 @@ impl LocalBlock {
     /// b_eff = b − A_other x_other (eq. 24): subtract halo contributions
     /// given a lookup of neighbour-owned unknowns.
     pub fn b_eff(&self, x_at: impl Fn(usize) -> f64) -> Vec<f64> {
-        let mut be = self.b.clone();
+        let mut be = Vec::new();
+        self.b_eff_into(x_at, &mut be);
+        be
+    }
+
+    /// [`LocalBlock::b_eff`] into a reused buffer (cleared and refilled;
+    /// the capacity survives across sweeps, so the per-iteration hot path
+    /// allocates nothing).
+    pub fn b_eff_into(&self, x_at: impl Fn(usize) -> f64, be: &mut Vec<f64>) {
+        be.clear();
+        be.extend_from_slice(&self.b);
         for &(r, c, v) in &self.halo {
             be[r] -= v * x_at(c);
         }
-        be
     }
 }
 

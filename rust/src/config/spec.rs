@@ -100,6 +100,11 @@ pub struct ExperimentConfig {
     /// banding contract means this knob can never change a result, only
     /// wall-clock.
     pub threads: usize,
+    /// Same-shape batched dispatch mode (`[perf] batch` / `--batch`).
+    /// `None` = inherit the process default (the `DYDD_BATCH` environment
+    /// variable, else auto). Like `threads`, the bitwise batched ≡
+    /// per-block contract means this knob can never change a result.
+    pub batch: Option<crate::util::batch::BatchMode>,
 }
 
 /// Delta source for the streaming engine's `serve` loop.
@@ -157,6 +162,7 @@ impl Default for ExperimentConfig {
             stream_warm_start: true,
             stream_force_cold: false,
             threads: 0,
+            batch: None,
         }
     }
 }
@@ -292,6 +298,13 @@ impl ExperimentConfig {
                     cfg.stream_force_cold = v.as_bool().ok_or_else(|| bad(k))?
                 }
                 "perf.threads" => cfg.threads = v.as_usize().ok_or_else(|| bad(k))?,
+                "perf.batch" => {
+                    cfg.batch = Some(
+                        v.as_str()
+                            .and_then(crate::util::batch::BatchMode::parse)
+                            .ok_or_else(|| bad(k))?,
+                    )
+                }
                 other => {
                     return Err(ValidationError::Invalid(format!("unknown key {other:?}")))
                 }
@@ -434,6 +447,16 @@ impl ExperimentConfig {
         }
     }
 
+    /// Install this config's batched-dispatch mode into the process-global
+    /// knob the dispatch layers read. `None` keeps the process default
+    /// (`DYDD_BATCH`, else auto). Called by every run entry point, like
+    /// [`ExperimentConfig::apply_threads`].
+    pub fn apply_batch(&self) {
+        if let Some(m) = self.batch {
+            crate::util::batch::set_batch_mode(m);
+        }
+    }
+
     /// Build the CLS problem instance this config describes.
     pub fn build_problem(&self) -> crate::cls::ClsProblem {
         use crate::domain::{generators, Mesh1d};
@@ -570,6 +593,21 @@ dydd = true
         let mut bad = ExperimentConfig::default();
         bad.threads = 4096;
         assert!(bad.validate().is_err(), "absurd thread counts must be rejected");
+    }
+
+    #[test]
+    fn perf_batch_parses_and_validates() {
+        use crate::util::batch::BatchMode;
+        let cfg = ExperimentConfig::from_toml_str("[perf]\nbatch = \"off\"").unwrap();
+        assert_eq!(cfg.batch, Some(BatchMode::Off));
+        let cfg = ExperimentConfig::from_toml_str("[perf]\nbatch = \"auto\"").unwrap();
+        assert_eq!(cfg.batch, Some(BatchMode::Auto));
+        // Default: inherit the process-wide setting.
+        assert_eq!(ExperimentConfig::default().batch, None);
+        assert!(
+            ExperimentConfig::from_toml_str("[perf]\nbatch = \"sometimes\"").is_err(),
+            "unknown batch modes must be rejected"
+        );
     }
 
     #[test]

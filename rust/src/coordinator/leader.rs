@@ -8,6 +8,8 @@ use crate::cls::LocalBlock;
 use crate::ddkf::schwarz::{overlap_reg, rel_update, write_back};
 use crate::ddkf::{ConvergenceCheck, OverlapAccumulator, SchwarzOptions, Verdict};
 use crate::decomp::{blocks_of, phases_of, BlockEpoch, Geometry};
+use crate::linalg::batch::{pad_waste, plan_batches, BlockBatch, ShapeClass};
+use crate::util::batch::BatchMode;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -109,6 +111,13 @@ pub struct ParallelOutcome {
     /// kept every processor busy.
     pub t_imbalance: Duration,
     pub update_norms: Vec<f64>,
+    /// Dispatch groups per sweep under the active batch mode (Σ over
+    /// phases). Equal to the phase count when batching is off or nothing
+    /// grouped; smaller-phase fan-out shows up here.
+    pub batch_groups: usize,
+    /// Aggregate pad-waste fraction of the shape groups that actually
+    /// batched (0 when batching is off or no group formed).
+    pub pad_waste: f64,
 }
 
 impl ParallelOutcome {
@@ -333,7 +342,8 @@ impl WorkerPool {
                     geom.halo.clear();
                     self.cached[i] =
                         Some(CachedBlock { geom, epoch: epochs[i], x_loc: None });
-                    let setup = EpochSetup { blk, reg, reg_cols, mu: opts.mu };
+                    let shape = ShapeClass::of(blk.n_loc(), blk.m_loc());
+                    let setup = EpochSetup { blk, reg, reg_cols, mu: opts.mu, shape };
                     self.send_diagnosed(i, ToWorker::Setup(Box::new(setup)))?;
                 }
                 BlockTask::RefreshB(b) => {
@@ -387,6 +397,49 @@ impl WorkerPool {
             }
         }
 
+        // Plan the dispatch groups once per epoch: block shapes are fixed
+        // until the next Setup, so each phase's shape grouping is too.
+        // Under [`BatchMode::Off`] each phase is one group (the historical
+        // fan-out); otherwise same-shape members dispatch together, with
+        // the heuristic-rejected remainder pooled into a final group.
+        let mode = crate::util::batch::batch_mode();
+        let mut accepted: Vec<BlockBatch> = Vec::new();
+        let groups_of: Vec<Vec<Vec<usize>>> = phases
+            .iter()
+            .map(|phase| {
+                if phase.is_empty() {
+                    return Vec::new();
+                }
+                if mode == BatchMode::Off {
+                    return vec![phase.clone()];
+                }
+                let dims: Vec<(usize, usize)> = phase
+                    .iter()
+                    .map(|&i| {
+                        let g = &self.cached[i].as_ref().expect("phase blocks are cached").geom;
+                        (g.cols.len(), g.b.len())
+                    })
+                    .collect();
+                let mut groups = Vec::new();
+                let mut rest = Vec::new();
+                for b in plan_batches(&dims) {
+                    let members: Vec<usize> = b.members.iter().map(|&k| phase[k]).collect();
+                    if mode.batches(members.len(), b.shape.n_pad) {
+                        groups.push(members);
+                        accepted.push(b);
+                    } else {
+                        rest.extend(members);
+                    }
+                }
+                if !rest.is_empty() {
+                    groups.push(rest);
+                }
+                groups
+            })
+            .collect();
+        let batch_groups = groups_of.iter().map(Vec::len).sum();
+        let pad_waste_frac = pad_waste(&accepted);
+
         let mut x = vec![0.0; n];
         if warm_start {
             // Seed from the cached solutions of blocks that were not
@@ -410,42 +463,59 @@ impl WorkerPool {
         let mut stalled = false;
         let mut iters = 0;
 
+        let mut phase_solutions: Vec<Option<Vec<f64>>> = (0..p).map(|_| None).collect();
         'outer: while iters < opts.max_iters {
             let x_prev = x.clone();
-            for phase in phases {
+            for (pi, phase) in phases.iter().enumerate() {
                 if phase.is_empty() {
                     continue;
                 }
+                // One snapshot per phase regardless of grouping: members
+                // of one phase never couple, so group-wise dispatch solves
+                // against identical data — batched ≡ per-block bitwise.
                 let snapshot = Arc::new(x.clone());
-                for &i in phase.iter() {
-                    self.send_diagnosed(i, ToWorker::Solve { x: snapshot.clone() })?;
-                }
-                let mut phase_max = Duration::ZERO;
+                let mut phase_crit = Duration::ZERO;
                 let mut phase_sum = Duration::ZERO;
-                for _ in phase.iter() {
-                    match self.recv_diagnosed("phase solutions")? {
-                        ToLeader::Solution { worker, x_loc, solve_time } => {
-                            worker_busy[worker] += solve_time;
-                            phase_max = phase_max.max(solve_time);
-                            phase_sum += solve_time;
-                            let cb = self.cached[worker]
-                                .as_mut()
-                                .expect("solving block is always cached");
-                            write_back(&cb.geom, &x_loc, &mut x, &mut acc);
-                            // Keep the latest local solution as the next
-                            // epoch's warm-start seed.
-                            cb.x_loc = Some(x_loc);
-                        }
-                        ToLeader::Failed { worker, error } => {
-                            anyhow::bail!("worker {worker} failed: {error}")
-                        }
-                        ToLeader::Ready { worker, .. } => {
-                            anyhow::bail!("unexpected Ready from worker {worker}")
+                for group in &groups_of[pi] {
+                    for &i in group {
+                        self.send_diagnosed(i, ToWorker::Solve { x: snapshot.clone() })?;
+                    }
+                    let mut group_max = Duration::ZERO;
+                    for _ in group {
+                        match self.recv_diagnosed("phase solutions")? {
+                            ToLeader::Solution { worker, x_loc, solve_time } => {
+                                worker_busy[worker] += solve_time;
+                                group_max = group_max.max(solve_time);
+                                phase_sum += solve_time;
+                                phase_solutions[worker] = Some(x_loc);
+                            }
+                            ToLeader::Failed { worker, error } => {
+                                anyhow::bail!("worker {worker} failed: {error}")
+                            }
+                            ToLeader::Ready { worker, .. } => {
+                                anyhow::bail!("unexpected Ready from worker {worker}")
+                            }
                         }
                     }
+                    // Each group is one synchronized dispatch on the
+                    // simulated p-processor clock.
+                    phase_crit += group_max;
                 }
-                t_critical += phase_max;
-                t_imbalance += phase_max - phase_sum / phase.len() as u32;
+                // Deterministic write-back in phase member order, not
+                // arrival order: overlap accumulation is a float sum, so
+                // its order is part of the bitwise contract across batch
+                // modes and worker schedules.
+                for &i in phase {
+                    let x_loc = phase_solutions[i].take().expect("every member reported");
+                    let cb =
+                        self.cached[i].as_mut().expect("solving block is always cached");
+                    write_back(&cb.geom, &x_loc, &mut x, &mut acc);
+                    // Keep the latest local solution as the next epoch's
+                    // warm-start seed.
+                    cb.x_loc = Some(x_loc);
+                }
+                t_critical += phase_crit;
+                t_imbalance += phase_crit - phase_sum / phase.len() as u32;
             }
             // End of sweep: average overlap contributions (eq. 28).
             acc.finalize(&mut x);
@@ -474,6 +544,8 @@ impl WorkerPool {
             t_critical,
             t_imbalance,
             update_norms: check.into_norms(),
+            batch_groups,
+            pad_waste: pad_waste_frac,
         };
         Ok((outcome, counters))
     }
@@ -667,6 +739,46 @@ mod tests {
     }
 
     #[test]
+    fn batch_dispatch_is_bitwise_the_per_block_dispatch() {
+        use crate::util::batch::{test_mode, BatchMode};
+        // Ragged partition: phases mix shape buckets, so batching forms
+        // real (and singleton) groups; overlap > 0 makes the write-back
+        // accumulation order observable — exactly what the deterministic
+        // member-order contract must hide.
+        let guard = test_mode(BatchMode::Off);
+        let prob = problem(96, 60, 31);
+        let part = Partition::from_bounds(96, vec![0, 10, 34, 58, 96]);
+        let opts = SchwarzOptions {
+            overlap: 2,
+            mu: 1e-6,
+            tol: 1e-12,
+            max_iters: 400,
+            order: crate::ddkf::SweepOrder::RedBlack,
+        };
+        let mut run = |mode: BatchMode| {
+            guard.set(mode);
+            let mut pool = WorkerPool::new(4, SolverBackend::Native, "artifacts".into());
+            pool.solve_on(&g1(96, 4), &prob, &part, &opts).unwrap()
+        };
+        let off = run(BatchMode::Off);
+        let on = run(BatchMode::On);
+        let auto_ = run(BatchMode::Auto);
+        for (got, name) in [(&on, "on"), (&auto_, "auto")] {
+            assert_eq!(got.iters, off.iters, "batch={name}");
+            assert_eq!(got.x.len(), off.x.len());
+            for (a, b) in got.x.iter().zip(&off.x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "batch={name} differs from off");
+            }
+        }
+        // Telemetry: off runs one dispatch group per phase; on splits by
+        // shape bucket and reports the batched groups' pad waste.
+        assert_eq!(off.pad_waste, 0.0);
+        assert!(on.batch_groups >= off.batch_groups, "{} < {}", on.batch_groups, off.batch_groups);
+        assert!((0.0..1.0).contains(&on.pad_waste));
+        drop(guard);
+    }
+
+    #[test]
     fn incremental_rejects_epoch_desync_and_uncached_blocks() {
         use crate::decomp::{phases_of, BlockEpoch};
         let geom = g1(32, 2);
@@ -690,7 +802,7 @@ mod tests {
             (0..2).map(|i| prob.local_block(&part, i, 0)).collect();
         let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
         pool.solve_blocks_incremental(32, tasks, &epochs, &phases, &opts, false).unwrap();
-        let bumped = vec![BlockEpoch { partition: 1, data: 0 }; 2];
+        let bumped = vec![BlockEpoch { partition: 1, ..BlockEpoch::default() }; 2];
         let tasks: Vec<BlockTask> = (0..2).map(|_| BlockTask::Retain).collect();
         assert!(pool
             .solve_blocks_incremental(32, tasks, &bumped, &phases, &opts, false)
@@ -782,6 +894,8 @@ mod tests {
             t_critical: Duration::from_millis(40),
             t_imbalance: Duration::from_millis(10),
             update_norms: vec![],
+            batch_groups: 2,
+            pad_waste: 0.0,
         };
         assert!((out.overhead_fraction() - 0.25).abs() < 1e-12);
         let zero = ParallelOutcome { t_critical: Duration::ZERO, ..out };

@@ -1,6 +1,7 @@
 //! Leader <-> worker message types.
 
 use crate::cls::LocalBlock;
+use crate::linalg::batch::ShapeClass;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -51,6 +52,10 @@ pub struct EpochSetup {
     /// Local column indices carrying μ (for reg_rhs = μ·x_other).
     pub reg_cols: Vec<usize>,
     pub mu: f64,
+    /// Padded shape signature the leader grouped this block under —
+    /// workers pre-warm their workspace arena to it so the first Solve of
+    /// the epoch already stages its rhs from the pool.
+    pub shape: ShapeClass,
 }
 
 /// Leader -> worker.

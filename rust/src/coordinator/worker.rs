@@ -7,6 +7,7 @@
 
 use super::messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
 use crate::ddkf::{KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver, SparseCg};
+use crate::linalg::batch::WorkspaceArena;
 use crate::runtime::PjrtLocalSolver;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
@@ -82,6 +83,10 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
 
     // Current epoch state.
     let mut epoch: Option<(EpochSetup, LocalFactor, Vec<f64>)> = None;
+    // Per-worker scratch pool: the per-sweep rhs staging buffer cycles
+    // through it (take → fill → solve → put), so a settled sweep loop
+    // allocates nothing on this thread.
+    let mut arena = WorkspaceArena::new();
 
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -91,6 +96,11 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                 match solver.assemble(&setup.blk, &setup.reg) {
                     Ok(factor) => {
                         let reg_rhs = vec![0.0; setup.blk.n_loc()];
+                        // Pre-warm the arena to this epoch's shape bucket:
+                        // the first Solve then stages its rhs from the
+                        // pool instead of allocating mid-sweep.
+                        let warm = arena.take(setup.shape.m_pad.max(setup.blk.m_loc()));
+                        arena.put(warm);
                         epoch = Some((*setup, factor, reg_rhs));
                         if tx
                             .send(ToLeader::Ready {
@@ -150,11 +160,17 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                     return;
                 };
                 let t0 = Instant::now();
-                let b_eff = setup.blk.b_eff(|c| x[c]);
+                // lint:sweep-hot-start per-iteration solve path: stage
+                // buffers through the arena, never allocate fresh.
+                let mut b_eff = arena.take(setup.blk.m_loc());
+                setup.blk.b_eff_into(|c| x[c], &mut b_eff);
                 for &lc in &setup.reg_cols {
                     reg_rhs[lc] = setup.mu * x[setup.blk.cols[lc]];
                 }
-                match solver.solve(&setup.blk, factor, &b_eff, reg_rhs) {
+                let solved = solver.solve(&setup.blk, factor, &b_eff, reg_rhs);
+                arena.put(b_eff);
+                // lint:sweep-hot-end
+                match solved {
                     Ok(x_loc) => {
                         let _ = tx.send(ToLeader::Solution {
                             worker: init.id,

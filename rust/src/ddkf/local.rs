@@ -16,8 +16,12 @@
 
 use crate::cls::LocalBlock;
 use crate::kf::sequential::rank1_update;
-use crate::linalg::sparse::{pcg_with, Ic0};
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::batch::{
+    batched_cholesky, batched_pcg, batched_weighted_gram, bucket, BatchPrecond, PcgBatchJob,
+    WorkspaceArena,
+};
+use crate::linalg::sparse::{pcg_with_scratch, Ic0, PcgScratch};
+use crate::linalg::{Cholesky, CsrMatrix, Mat};
 
 /// Opaque per-subdomain factorization state produced by `assemble`.
 pub enum LocalFactor {
@@ -49,6 +53,23 @@ pub enum CgPrecond {
     Ic0,
 }
 
+/// One member of a batched `assemble` call. All members of one call share
+/// a [`ShapeClass`] bucket (the caller plans groups with
+/// [`crate::linalg::batch::plan_batches`]).
+pub struct BatchAssembleJob<'a> {
+    pub blk: &'a LocalBlock,
+    pub reg: &'a [f64],
+}
+
+/// One member of a batched `solve` call — exactly the inputs of the
+/// per-block [`LocalSolver::solve`].
+pub struct BatchSolveJob<'a> {
+    pub blk: &'a LocalBlock,
+    pub factor: &'a LocalFactor,
+    pub b_eff: &'a [f64],
+    pub reg_rhs: &'a [f64],
+}
+
 /// A solver for the local regularized problem
 /// (AᵀDA + diag(reg)) x = AᵀD b_eff + reg_rhs.
 pub trait LocalSolver {
@@ -64,6 +85,30 @@ pub trait LocalSolver {
         b_eff: &[f64],
         reg_rhs: &[f64],
     ) -> anyhow::Result<Vec<f64>>;
+
+    /// Factor a same-shape group of blocks in one call. The default is the
+    /// per-block loop — member i is exactly `assemble(jobs[i])` in member
+    /// order — so every backend satisfies the bitwise batched ≡ per-block
+    /// contract for free; [`NativeLocalSolver`] and [`SparseCg`] override
+    /// it with genuinely fused kernels that keep the contract by banding
+    /// *members* across the kernel threads.
+    fn assemble_batch(
+        &mut self,
+        jobs: &[BatchAssembleJob],
+        _arena: &mut WorkspaceArena,
+    ) -> anyhow::Result<Vec<LocalFactor>> {
+        jobs.iter().map(|j| self.assemble(j.blk, j.reg)).collect()
+    }
+
+    /// Solve a same-shape group in one call (default: the per-block loop,
+    /// member by member in order — bitwise the serial path).
+    fn solve_batch(
+        &mut self,
+        jobs: &[BatchSolveJob],
+        _arena: &mut WorkspaceArena,
+    ) -> anyhow::Result<Vec<Vec<f64>>> {
+        jobs.iter().map(|j| self.solve(j.blk, j.factor, j.b_eff, j.reg_rhs)).collect()
+    }
 }
 
 /// Native Cholesky path.
@@ -95,6 +140,102 @@ impl LocalSolver for NativeLocalSolver {
             *r += v;
         }
         Ok(chol.solve(&rhs))
+    }
+
+    fn assemble_batch(
+        &mut self,
+        jobs: &[BatchAssembleJob],
+        arena: &mut WorkspaceArena,
+    ) -> anyhow::Result<Vec<LocalFactor>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for j in jobs {
+            assert_eq!(j.reg.len(), j.blk.n_loc());
+        }
+        // The slab stride needs only the unknown-count bucket (the gram is
+        // n×n); callers group by full shape signature, but ragged row
+        // counts within a group are harmless here.
+        let n_pad = jobs
+            .iter()
+            .map(|j| bucket(j.blk.n_loc()))
+            .max()
+            .expect("invariant: jobs is non-empty past the early return");
+        let mats: Vec<&CsrMatrix> = jobs.iter().map(|j| &j.blk.a).collect();
+        let ds: Vec<&[f64]> = jobs.iter().map(|j| j.blk.d.as_slice()).collect();
+        // One fused gram over the group, then the regularization diagonals
+        // in member order — same element order as the per-block path.
+        let mut grams = batched_weighted_gram(&mats, &ds, n_pad, arena);
+        for (k, j) in jobs.iter().enumerate() {
+            let n = j.blk.n_loc();
+            let g = grams.member_mut(k);
+            for (i, &r) in j.reg.iter().enumerate() {
+                g[i * n + i] += r;
+            }
+        }
+        let factors = match batched_cholesky(&grams) {
+            Ok(f) => f,
+            Err((i, e)) => {
+                grams.recycle(arena);
+                return Err(anyhow::Error::new(e).context(format!("batched member {i}")));
+            }
+        };
+        grams.recycle(arena);
+        Ok(factors.into_iter().map(LocalFactor::Native).collect())
+    }
+
+    fn solve_batch(
+        &mut self,
+        jobs: &[BatchSolveJob],
+        arena: &mut WorkspaceArena,
+    ) -> anyhow::Result<Vec<Vec<f64>>> {
+        let k = jobs.len();
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        // Rhs staging buffers come from the arena, so a warm sweep loop
+        // allocates nothing here; the solutions are the returned values
+        // and necessarily fresh.
+        let mut rhs_bufs: Vec<Vec<f64>> = jobs.iter().map(|j| arena.take(j.blk.n_loc())).collect();
+        let mut out: Vec<Option<anyhow::Result<Vec<f64>>>> = (0..k).map(|_| None).collect();
+        let run = |job: &BatchSolveJob, rhs: &mut Vec<f64>| -> anyhow::Result<Vec<f64>> {
+            let LocalFactor::Native(chol) = job.factor else {
+                anyhow::bail!("factor/solver mismatch");
+            };
+            job.blk.a.at_db_into(&job.blk.d, job.b_eff, rhs);
+            for (r, &v) in rhs.iter_mut().zip(job.reg_rhs) {
+                *r += v;
+            }
+            Ok(chol.solve(rhs))
+        };
+        let t = crate::util::threads::threads();
+        let bands = crate::util::threads::bands(k, t);
+        if bands.len() <= 1 {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = Some(run(&jobs[i], &mut rhs_bufs[i]));
+            }
+        } else {
+            std::thread::scope(|s| {
+                let mut rest: &mut [Option<anyhow::Result<Vec<f64>>>] = &mut out;
+                let mut buf_rest: &mut [Vec<f64>] = &mut rhs_bufs;
+                for &(a0, a1) in &bands {
+                    let (chunk, tail) = rest.split_at_mut(a1 - a0);
+                    rest = tail;
+                    let (bufs, buf_tail) = buf_rest.split_at_mut(a1 - a0);
+                    buf_rest = buf_tail;
+                    let run = &run;
+                    s.spawn(move || {
+                        for (j, (slot, rhs)) in chunk.iter_mut().zip(bufs).enumerate() {
+                            *slot = Some(run(&jobs[a0 + j], rhs));
+                        }
+                    });
+                }
+            });
+        }
+        for buf in rhs_bufs {
+            arena.put(buf);
+        }
+        out.into_iter().map(|o| o.expect("invariant: every member was solved")).collect()
     }
 }
 
@@ -218,8 +359,18 @@ pub struct SparseCg {
     /// Last solution per block, keyed by (first global column, n_loc) —
     /// the warm start for the next solve of that block. CG converges to
     /// the same solution from any start, so a stale or mismatched entry
-    /// only costs iterations, never correctness.
+    /// only costs iterations, never correctness. Warm updates reuse the
+    /// standing entry's buffer (`clone_from`), so a settled sweep loop
+    /// never reallocates here.
     warm: std::collections::HashMap<(usize, usize), Vec<f64>>,
+    /// Reusable CG vectors for the per-block `solve` path.
+    scratch: PcgScratch,
+    /// Reusable effective-rhs buffer for the per-block path.
+    rhs_buf: Vec<f64>,
+    /// Reusable operator temporary (the D·A·x intermediate).
+    apply_tmp: Vec<f64>,
+    /// One scratch per batched member, grown once and kept across sweeps.
+    batch_scratch: Vec<PcgScratch>,
 }
 
 impl Default for SparseCg {
@@ -230,6 +381,10 @@ impl Default for SparseCg {
             accept_tol: 1e-6,
             precond: CgPrecond::Jacobi,
             warm: std::collections::HashMap::new(),
+            scratch: PcgScratch::new(),
+            rhs_buf: Vec::new(),
+            apply_tmp: Vec::new(),
+            batch_scratch: Vec::new(),
         }
     }
 }
@@ -239,6 +394,19 @@ impl SparseCg {
     /// matrix instead of Jacobi scaling.
     pub fn ic0() -> Self {
         SparseCg { precond: CgPrecond::Ic0, ..SparseCg::default() }
+    }
+
+    /// Total reserved capacity (in f64 elements) across every reusable
+    /// buffer this solver owns: CG scratch, rhs/operator temporaries,
+    /// batched scratches, and the warm-start map. The no-churn test pins
+    /// this: once a sweep loop has seen each block shape, repeated solves
+    /// must not move it.
+    pub fn alloc_footprint(&self) -> usize {
+        self.scratch.capacity()
+            + self.rhs_buf.capacity()
+            + self.apply_tmp.capacity()
+            + self.batch_scratch.iter().map(PcgScratch::capacity).sum::<usize>()
+            + self.warm.values().map(Vec::capacity).sum::<usize>()
     }
 }
 
@@ -277,42 +445,145 @@ impl LocalSolver for SparseCg {
         let LocalFactor::Cg { reg, diag_inv, ic0 } = factor else {
             anyhow::bail!("factor/solver mismatch");
         };
-        let mut rhs = blk.a.at_db(&blk.d, b_eff);
-        for (r, &v) in rhs.iter_mut().zip(reg_rhs) {
-            *r += v;
-        }
         let max_iters = self.max_iters.unwrap_or(10 * blk.n_loc() + 200);
         let key = (blk.cols.first().copied().unwrap_or(0), blk.n_loc());
-        let x0 = self.warm.get(&key).filter(|v| v.len() == blk.n_loc());
-        let apply = |x: &[f64]| blk.a.normal_apply(&blk.d, reg, x);
+        // Split the borrows: the warm map feeds x0 while the scratch
+        // buffers back the CG vectors — all per-solver state, reused
+        // across sweeps (the sweep loop allocates nothing here once warm).
+        let SparseCg { warm, scratch, rhs_buf, apply_tmp, tol, accept_tol, .. } = self;
+        blk.a.at_db_into(&blk.d, b_eff, rhs_buf);
+        for (r, &v) in rhs_buf.iter_mut().zip(reg_rhs) {
+            *r += v;
+        }
+        let x0 = warm.get(&key).filter(|v| v.len() == blk.n_loc());
+        let apply =
+            |x: &[f64], y: &mut Vec<f64>| blk.a.normal_apply_into(&blk.d, reg, x, apply_tmp, y);
         let out = match ic0 {
-            Some(ic) => pcg_with(
+            Some(ic) => pcg_with_scratch(
                 apply,
-                &rhs,
-                |r: &[f64]| ic.solve(r),
+                rhs_buf,
+                |r, z: &mut Vec<f64>| ic.solve_into(r, z),
                 x0.map(Vec::as_slice),
-                self.tol,
+                *tol,
                 max_iters,
+                scratch,
             ),
-            None => pcg_with(
+            None => pcg_with_scratch(
                 apply,
-                &rhs,
-                |r: &[f64]| r.iter().zip(diag_inv).map(|(ri, mi)| ri * mi).collect(),
+                rhs_buf,
+                |r, z: &mut Vec<f64>| {
+                    z.clear();
+                    z.extend(r.iter().zip(diag_inv).map(|(ri, mi)| ri * mi));
+                },
                 x0.map(Vec::as_slice),
-                self.tol,
+                *tol,
                 max_iters,
+                scratch,
             ),
         };
         anyhow::ensure!(
-            out.rel_residual <= self.accept_tol,
+            out.rel_residual <= *accept_tol,
             "CG failed ({}): rel residual {:.3e} after {} iters (accept_tol {:.1e})",
             out.stop.describe(),
             out.rel_residual,
             out.iters,
-            self.accept_tol
+            accept_tol
         );
-        self.warm.insert(key, out.x.clone());
+        match warm.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().clone_from(&out.x),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(out.x.clone());
+            }
+        }
         Ok(out.x)
+    }
+
+    fn solve_batch(
+        &mut self,
+        jobs: &[BatchSolveJob],
+        arena: &mut WorkspaceArena,
+    ) -> anyhow::Result<Vec<Vec<f64>>> {
+        let k = jobs.len();
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        for j in jobs {
+            anyhow::ensure!(matches!(j.factor, LocalFactor::Cg { .. }), "factor/solver mismatch");
+        }
+        let SparseCg { warm, batch_scratch, tol, max_iters, accept_tol, .. } = self;
+        while batch_scratch.len() < k {
+            batch_scratch.push(PcgScratch::new());
+        }
+        // Stage every member's effective rhs (arena buffers: no fresh
+        // allocation once the pool is warm).
+        let rhs_bufs: Vec<Vec<f64>> = jobs
+            .iter()
+            .map(|j| {
+                let mut rhs = arena.take(j.blk.n_loc());
+                j.blk.a.at_db_into(&j.blk.d, j.b_eff, &mut rhs);
+                for (r, &v) in rhs.iter_mut().zip(j.reg_rhs) {
+                    *r += v;
+                }
+                rhs
+            })
+            .collect();
+        // Warm starts are prefetched for the whole group before any solve
+        // writes back. Within one phase group the warm keys are distinct
+        // (colouring keeps same-phase blocks non-adjacent), so this is
+        // exactly what the sequential member-order loop reads too.
+        let keys: Vec<(usize, usize)> = jobs
+            .iter()
+            .map(|j| (j.blk.cols.first().copied().unwrap_or(0), j.blk.n_loc()))
+            .collect();
+        let pjobs: Vec<PcgBatchJob> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| {
+                let LocalFactor::Cg { reg, diag_inv, ic0 } = j.factor else {
+                    unreachable!("validated above");
+                };
+                PcgBatchJob {
+                    a: &j.blk.a,
+                    d: &j.blk.d,
+                    reg,
+                    rhs: &rhs_bufs[i],
+                    x0: warm.get(&keys[i]).filter(|v| v.len() == j.blk.n_loc()).map(Vec::as_slice),
+                    precond: match ic0 {
+                        Some(ic) => BatchPrecond::Ic0(ic),
+                        None => BatchPrecond::Jacobi(diag_inv),
+                    },
+                    tol: *tol,
+                    max_iters: max_iters.unwrap_or(10 * j.blk.n_loc() + 200),
+                }
+            })
+            .collect();
+        let outs = batched_pcg(&pjobs, &mut batch_scratch[..k]);
+        drop(pjobs);
+        let mut xs = Vec::with_capacity(k);
+        for (i, out) in outs.into_iter().enumerate() {
+            anyhow::ensure!(
+                out.rel_residual <= *accept_tol,
+                "CG failed on batched member {i} ({}): rel residual {:.3e} after {} iters \
+                 (accept_tol {:.1e})",
+                out.stop.describe(),
+                out.rel_residual,
+                out.iters,
+                accept_tol
+            );
+            match warm.entry(keys[i]) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    e.get_mut().clone_from(&out.x)
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(out.x.clone());
+                }
+            }
+            xs.push(out.x);
+        }
+        for buf in rhs_bufs {
+            arena.put(buf);
+        }
+        Ok(xs)
     }
 }
 
@@ -440,6 +711,191 @@ mod tests {
         let xb = cg.solve(&blk, &fb, &be, &reg_rhs).unwrap();
         let err = dist2(&xa, &xb);
         assert!(err < 1e-9, "CG vs native with μ: {err:e}");
+    }
+
+    fn assert_bits_eq(got: &[Vec<f64>], want: &[Vec<f64>], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(g.len(), w.len(), "{ctx} block {i}");
+            for (a, b) in g.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{ctx} block {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_batched_paths_are_bitwise_the_per_block_paths() {
+        let prob = problem(48, 36, 5);
+        let part = Partition::uniform(48, 4);
+        let blks: Vec<_> = (0..4).map(|i| prob.local_block(&part, i, 0)).collect();
+        let regs: Vec<Vec<f64>> = blks.iter().map(|b| vec![0.0; b.n_loc()]).collect();
+        let mut rng = Rng::new(6);
+        let xg = rng.gaussian_vec(48);
+        let bes: Vec<Vec<f64>> = blks.iter().map(|b| b.b_eff(|c| xg[c])).collect();
+        let mut per = NativeLocalSolver;
+        let want: Vec<Vec<f64>> = blks
+            .iter()
+            .zip(&regs)
+            .zip(&bes)
+            .map(|((blk, reg), be)| {
+                let f = per.assemble(blk, reg).unwrap();
+                per.solve(blk, &f, be, reg).unwrap()
+            })
+            .collect();
+        for t in [1usize, 4] {
+            crate::util::threads::set_threads(t);
+            let mut arena = WorkspaceArena::new();
+            let mut s = NativeLocalSolver;
+            let ajobs: Vec<BatchAssembleJob> =
+                blks.iter().zip(&regs).map(|(blk, reg)| BatchAssembleJob { blk, reg }).collect();
+            let factors = s.assemble_batch(&ajobs, &mut arena).unwrap();
+            let sjobs: Vec<BatchSolveJob> = blks
+                .iter()
+                .zip(&factors)
+                .zip(&bes)
+                .zip(&regs)
+                .map(|(((blk, factor), b_eff), reg_rhs)| BatchSolveJob {
+                    blk,
+                    factor,
+                    b_eff,
+                    reg_rhs,
+                })
+                .collect();
+            let got = s.solve_batch(&sjobs, &mut arena).unwrap();
+            assert_bits_eq(&got, &want, &format!("native t={t}"));
+        }
+        crate::util::threads::set_threads(1);
+    }
+
+    #[test]
+    fn sparse_cg_batched_paths_are_bitwise_the_per_block_paths() {
+        let prob = problem(48, 36, 12);
+        let part = Partition::uniform(48, 4);
+        let blks: Vec<_> = (0..4).map(|i| prob.local_block(&part, i, 0)).collect();
+        let regs: Vec<Vec<f64>> = blks.iter().map(|b| vec![0.0; b.n_loc()]).collect();
+        let mut rng = Rng::new(13);
+        let sweeps: Vec<Vec<f64>> = (0..2).map(|_| rng.gaussian_vec(48)).collect();
+        for ic in [false, true] {
+            let mk = || if ic { SparseCg::ic0() } else { SparseCg::default() };
+            let mut per = mk();
+            let factors: Vec<LocalFactor> =
+                blks.iter().zip(&regs).map(|(b, r)| per.assemble(b, r).unwrap()).collect();
+            // Two sweeps so the second one reads warm starts in both modes.
+            let want: Vec<Vec<Vec<f64>>> = sweeps
+                .iter()
+                .map(|xg| {
+                    blks.iter()
+                        .zip(&factors)
+                        .zip(&regs)
+                        .map(|((b, f), r)| {
+                            let be = b.b_eff(|c| xg[c]);
+                            per.solve(b, f, &be, r).unwrap()
+                        })
+                        .collect()
+                })
+                .collect();
+            for t in [1usize, 4] {
+                crate::util::threads::set_threads(t);
+                let mut arena = WorkspaceArena::new();
+                let mut s = mk();
+                let ajobs: Vec<BatchAssembleJob> = blks
+                    .iter()
+                    .zip(&regs)
+                    .map(|(blk, reg)| BatchAssembleJob { blk, reg })
+                    .collect();
+                let bfactors = s.assemble_batch(&ajobs, &mut arena).unwrap();
+                for (si, xg) in sweeps.iter().enumerate() {
+                    let bes: Vec<Vec<f64>> = blks.iter().map(|b| b.b_eff(|c| xg[c])).collect();
+                    let sjobs: Vec<BatchSolveJob> = blks
+                        .iter()
+                        .zip(&bfactors)
+                        .zip(&bes)
+                        .zip(&regs)
+                        .map(|(((blk, factor), b_eff), reg_rhs)| BatchSolveJob {
+                            blk,
+                            factor,
+                            b_eff,
+                            reg_rhs,
+                        })
+                        .collect();
+                    let got = s.solve_batch(&sjobs, &mut arena).unwrap();
+                    assert_bits_eq(&got, &want[si], &format!("ic0={ic} t={t} sweep {si}"));
+                }
+            }
+        }
+        crate::util::threads::set_threads(1);
+    }
+
+    #[test]
+    fn sparse_cg_footprint_stops_growing_across_100_sweeps() {
+        let prob = problem(40, 30, 21);
+        let part = Partition::uniform(40, 4);
+        let blks: Vec<_> = (0..4).map(|i| prob.local_block(&part, i, 0)).collect();
+        let regs: Vec<Vec<f64>> = blks.iter().map(|b| vec![0.0; b.n_loc()]).collect();
+        let mut s = SparseCg::default();
+        let factors: Vec<LocalFactor> =
+            blks.iter().zip(&regs).map(|(b, r)| s.assemble(b, r).unwrap()).collect();
+        let mut rng = Rng::new(22);
+        let mut settled = 0;
+        for sweep in 0..100 {
+            let xg = rng.gaussian_vec(40);
+            for ((b, f), r) in blks.iter().zip(&factors).zip(&regs) {
+                let be = b.b_eff(|c| xg[c]);
+                s.solve(b, f, &be, r).unwrap();
+            }
+            match sweep {
+                0 => {}
+                1 => settled = s.alloc_footprint(),
+                _ => assert_eq!(
+                    s.alloc_footprint(),
+                    settled,
+                    "per-solver buffers grew on sweep {sweep}"
+                ),
+            }
+        }
+        assert!(settled > 0, "the footprint observable must see the warm buffers");
+    }
+
+    #[test]
+    fn batched_sweep_loop_allocates_nothing_once_warm() {
+        let prob = problem(40, 30, 25);
+        let part = Partition::uniform(40, 4);
+        let blks: Vec<_> = (0..4).map(|i| prob.local_block(&part, i, 0)).collect();
+        let regs: Vec<Vec<f64>> = blks.iter().map(|b| vec![0.0; b.n_loc()]).collect();
+        let mut arena = WorkspaceArena::new();
+        let mut s = SparseCg::default();
+        let ajobs: Vec<BatchAssembleJob> =
+            blks.iter().zip(&regs).map(|(blk, reg)| BatchAssembleJob { blk, reg }).collect();
+        let factors = s.assemble_batch(&ajobs, &mut arena).unwrap();
+        let mut rng = Rng::new(26);
+        let mut settled = (0, 0);
+        for sweep in 0..100 {
+            let xg = rng.gaussian_vec(40);
+            let bes: Vec<Vec<f64>> = blks.iter().map(|b| b.b_eff(|c| xg[c])).collect();
+            let sjobs: Vec<BatchSolveJob> = blks
+                .iter()
+                .zip(&factors)
+                .zip(&bes)
+                .zip(&regs)
+                .map(|(((blk, factor), b_eff), reg_rhs)| BatchSolveJob {
+                    blk,
+                    factor,
+                    b_eff,
+                    reg_rhs,
+                })
+                .collect();
+            s.solve_batch(&sjobs, &mut arena).unwrap();
+            match sweep {
+                0 => {}
+                1 => settled = (arena.allocations(), s.alloc_footprint()),
+                _ => assert_eq!(
+                    (arena.allocations(), s.alloc_footprint()),
+                    settled,
+                    "batched sweep {sweep} allocated"
+                ),
+            }
+        }
+        assert!(arena.reuses() > 0, "warm sweeps must be served from the pool");
     }
 
     #[test]

@@ -17,7 +17,10 @@
 mod local;
 pub(crate) mod schwarz;
 
-pub use local::{KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver, SparseCg};
+pub use local::{
+    BatchAssembleJob, BatchSolveJob, KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver,
+    SparseCg,
+};
 pub use schwarz::{
     box_grid_order, coupling_phases, schwarz_solve, schwarz_solve2d, write_back,
     ConvergenceCheck, OverlapAccumulator, SchwarzOptions, SchwarzOutcome, SweepOrder, Verdict,

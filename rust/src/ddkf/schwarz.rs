@@ -5,10 +5,12 @@
 //! partitions alike: the iteration only sees [`LocalBlock`]s and a sweep
 //! order.
 
-use super::local::{LocalFactor, LocalSolver};
+use super::local::{BatchAssembleJob, LocalFactor, LocalSolver};
 use crate::cls::{ClsProblem, ClsProblem2d, LocalBlock};
 use crate::domain::Partition;
 use crate::domain2d::BoxPartition;
+use crate::linalg::batch::{plan_batches, WorkspaceArena};
+use crate::util::batch::batch_mode;
 
 /// Sweep ordering.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -201,6 +203,10 @@ pub(crate) struct SubdomainState {
     /// Local columns carrying the μ regularization (overlap columns).
     pub reg_cols: Vec<usize>,
     pub factor: LocalFactor,
+    /// Persistent rhs staging buffers: refilled in place every sweep so
+    /// the settled iteration allocates nothing per solve.
+    pub b_eff: Vec<f64>,
+    pub reg_rhs: Vec<f64>,
 }
 
 /// μ regularization diagonal + regularized local columns for one block.
@@ -223,12 +229,43 @@ pub(crate) fn build_states<S: LocalSolver>(
     blocks: Vec<LocalBlock>,
     opts: &SchwarzOptions,
     solver: &mut S,
+    arena: &mut WorkspaceArena,
 ) -> anyhow::Result<Vec<SubdomainState>> {
+    let regs: Vec<(Vec<f64>, Vec<usize>)> =
+        blocks.iter().map(|blk| overlap_reg(blk, opts)).collect();
+    // Group same-shape blocks and assemble each group through one fused
+    // gram/factor call. Unlike the multiplicative sweep itself, assembly
+    // is order-free, and the batched kernels are bitwise-identical per
+    // member to the per-block path — so grouping here is a pure
+    // performance choice with no numerical consequence. (The sequential
+    // *solve* loop stays per-block: multiplicative Schwarz reads every
+    // earlier write of the same sweep.)
+    let mode = batch_mode();
+    let dims: Vec<(usize, usize)> =
+        blocks.iter().map(|blk| (blk.n_loc(), blk.b.len())).collect();
+    let mut factors: Vec<Option<LocalFactor>> = blocks.iter().map(|_| None).collect();
+    for group in plan_batches(&dims) {
+        if mode.batches(group.members.len(), group.shape.n_pad) {
+            let jobs: Vec<BatchAssembleJob> = group
+                .members
+                .iter()
+                .map(|&i| BatchAssembleJob { blk: &blocks[i], reg: &regs[i].0 })
+                .collect();
+            for (&i, factor) in group.members.iter().zip(solver.assemble_batch(&jobs, arena)?) {
+                factors[i] = Some(factor);
+            }
+        } else {
+            for &i in &group.members {
+                factors[i] = Some(solver.assemble(&blocks[i], &regs[i].0)?);
+            }
+        }
+    }
     let mut states = Vec::with_capacity(blocks.len());
-    for blk in blocks {
-        let (reg, reg_cols) = overlap_reg(&blk, opts);
-        let factor = solver.assemble(&blk, &reg)?;
-        states.push(SubdomainState { blk, reg_cols, factor });
+    for ((blk, (_, reg_cols)), factor) in blocks.into_iter().zip(regs).zip(factors) {
+        let factor = factor.expect("every block is assembled by exactly one group");
+        let b_eff = Vec::with_capacity(blk.b.len());
+        let reg_rhs = vec![0.0; blk.n_loc()];
+        states.push(SubdomainState { blk, reg_cols, factor, b_eff, reg_rhs });
     }
     Ok(states)
 }
@@ -236,34 +273,37 @@ pub(crate) fn build_states<S: LocalSolver>(
 /// Solve one subdomain against the current global iterate and return its
 /// local solution (length n_loc of the extended column set).
 pub(crate) fn local_sweep<S: LocalSolver>(
-    state: &SubdomainState,
+    state: &mut SubdomainState,
     x_global: &[f64],
     mu: f64,
     solver: &mut S,
 ) -> anyhow::Result<Vec<f64>> {
-    let blk = &state.blk;
-    let b_eff = blk.b_eff(|c| x_global[c]);
+    // lint:sweep-hot-start per-iteration staging refills the state's
+    // persistent buffers in place — never allocate fresh here.
+    state.blk.b_eff_into(|c| x_global[c], &mut state.b_eff);
     // reg_rhs: μ·x_other on overlap columns (the O_{1,2} coupling of
     // eqs. 25-26 — pulls the local overlap values towards the neighbour's
-    // current estimate), zero elsewhere.
-    let mut reg_rhs = vec![0.0; blk.n_loc()];
+    // current estimate), zero elsewhere. Only the reg_cols entries ever
+    // change, so overwriting exactly those keeps the rest zero.
     for &lc in &state.reg_cols {
-        reg_rhs[lc] = mu * x_global[blk.cols[lc]];
+        state.reg_rhs[lc] = mu * x_global[state.blk.cols[lc]];
     }
-    solver.solve(blk, &state.factor, &b_eff, &reg_rhs)
+    solver.solve(&state.blk, &state.factor, &state.b_eff, &state.reg_rhs)
+    // lint:sweep-hot-end
 }
 
 /// Core sequential iteration over pre-built subdomain states; `order` is
 /// one full sweep (every subdomain exactly once). Shared by the 1-D and
 /// 2-D entry points.
 fn schwarz_iterate<S: LocalSolver>(
-    states: &[SubdomainState],
+    states: &mut [SubdomainState],
     n: usize,
     order: &[usize],
     opts: &SchwarzOptions,
     solver: &mut S,
 ) -> anyhow::Result<SchwarzOutcome> {
     let mut x = vec![0.0; n];
+    let mut x_prev = vec![0.0; n];
     let mut acc = OverlapAccumulator::new(n);
     let mut check = ConvergenceCheck::new(opts.tol, n);
     let mut converged = false;
@@ -271,9 +311,9 @@ fn schwarz_iterate<S: LocalSolver>(
     let mut iters = 0;
 
     while iters < opts.max_iters {
-        let x_prev = x.clone();
+        x_prev.clone_from(&x);
         for &i in order {
-            let x_loc = local_sweep(&states[i], &x, opts.mu, solver)?;
+            let x_loc = local_sweep(&mut states[i], &x, opts.mu, solver)?;
             write_back(&states[i].blk, &x_loc, &mut x, &mut acc);
         }
         acc.finalize(&mut x);
@@ -395,8 +435,9 @@ pub fn schwarz_solve<S: LocalSolver>(
     let blocks: Vec<LocalBlock> =
         (0..part.p()).map(|i| prob.local_block(part, i, opts.overlap)).collect();
     let order = chain_order(part.p(), opts.order);
-    let mut states = build_states(blocks, opts, solver)?;
-    let out = schwarz_iterate(&states, prob.n(), &order, opts, solver);
+    let mut arena = WorkspaceArena::new();
+    let mut states = build_states(blocks, opts, solver, &mut arena)?;
+    let out = schwarz_iterate(&mut states, prob.n(), &order, opts, solver);
     // Drop factors explicitly (runtime solvers may hold device buffers).
     states.clear();
     out
@@ -414,8 +455,9 @@ pub fn schwarz_solve2d<S: LocalSolver>(
     let blocks: Vec<LocalBlock> =
         (0..part.p()).map(|b| prob.local_block(part, b, opts.overlap)).collect();
     let order = box_grid_order(part, opts.order);
-    let mut states = build_states(blocks, opts, solver)?;
-    let out = schwarz_iterate(&states, prob.n(), &order, opts, solver);
+    let mut arena = WorkspaceArena::new();
+    let mut states = build_states(blocks, opts, solver, &mut arena)?;
+    let out = schwarz_iterate(&mut states, prob.n(), &order, opts, solver);
     states.clear();
     out
 }
@@ -717,6 +759,41 @@ mod tests {
         let check = ConvergenceCheck::new(1e-30, 64);
         assert!(check.tol_eff() > 1e-30);
         assert!(check.tol_eff() < 1e-10);
+    }
+
+    #[test]
+    fn batched_assembly_is_bitwise_the_per_block_assembly() {
+        // Sequential engine: only *assembly* is grouped (the
+        // multiplicative sweep is order-dependent and stays per-block),
+        // and the fused assemble must leave the whole solve bitwise
+        // untouched for both the dense and the CG backend.
+        use crate::ddkf::local::SparseCg;
+        use crate::util::batch::{test_mode, BatchMode};
+        let prob = problem(96, 60, 21);
+        let part = Partition::from_bounds(96, vec![0, 24, 48, 58, 96]);
+        let opts = SchwarzOptions {
+            overlap: 2,
+            mu: 1e-6,
+            tol: 1e-12,
+            max_iters: 400,
+            order: SweepOrder::Multiplicative,
+        };
+        let guard = test_mode(BatchMode::Off);
+        let off = schwarz_solve(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+        let off_cg = schwarz_solve(&prob, &part, &opts, &mut SparseCg::ic0()).unwrap();
+        for mode in [BatchMode::On, BatchMode::Auto] {
+            guard.set(mode);
+            let on = schwarz_solve(&prob, &part, &opts, &mut NativeLocalSolver).unwrap();
+            assert_eq!(on.iters, off.iters, "{mode:?} native iter count drifted");
+            for (a, b) in on.x.iter().zip(&off.x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} native bits drifted");
+            }
+            let on_cg = schwarz_solve(&prob, &part, &opts, &mut SparseCg::ic0()).unwrap();
+            assert_eq!(on_cg.iters, off_cg.iters, "{mode:?} cg iter count drifted");
+            for (a, b) in on_cg.x.iter().zip(&off_cg.x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} cg bits drifted");
+            }
+        }
     }
 
     #[test]

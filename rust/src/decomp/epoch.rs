@@ -17,16 +17,24 @@
 //! `ObsDelta` into O(|delta|) census updates and per-block dirty bits.
 
 use super::Geometry;
+use crate::linalg::batch::ShapeClass;
 use crate::util::Json;
 
 /// Identity of one block's extracted state: which partition generation it
-/// was extracted under, and which data generation of that block's rows.
+/// was extracted under, which data generation of that block's rows, and
+/// the padded shape signature the block was extracted with. The shape
+/// rides on the epoch because it has the same lifecycle: it can only
+/// change when the block is re-extracted (a data or partition bump), and
+/// the batched dispatch layer groups cached blocks by it without touching
+/// the (dropped) matrix payloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct BlockEpoch {
     /// Bumped whenever the decomposition (the partition) changes.
     pub partition: u64,
     /// Bumped whenever the block's row set changes under a fixed partition.
     pub data: u64,
+    /// Padded (n_loc, m_loc) bucket signature; default = not yet stamped.
+    pub shape: ShapeClass,
 }
 
 /// Per-block epoch bookkeeping for a streaming run.
@@ -34,11 +42,12 @@ pub struct BlockEpoch {
 pub struct EpochTracker {
     partition: u64,
     data: Vec<u64>,
+    shapes: Vec<ShapeClass>,
 }
 
 impl EpochTracker {
     pub fn new(p: usize) -> Self {
-        EpochTracker { partition: 0, data: vec![0; p] }
+        EpochTracker { partition: 0, data: vec![0; p], shapes: vec![ShapeClass::default(); p] }
     }
 
     pub fn p(&self) -> usize {
@@ -46,14 +55,19 @@ impl EpochTracker {
     }
 
     /// The decomposition moved: every block's identity changes (the block
-    /// count may too).
+    /// count may too), and every shape stamp resets until the blocks are
+    /// re-extracted.
     pub fn bump_partition(&mut self, p: usize) {
         let prev = self.partition;
         self.partition += 1;
         self.data = vec![0; p];
-        let next = BlockEpoch { partition: self.partition, data: 0 };
+        self.shapes = vec![ShapeClass::default(); p];
+        let next = BlockEpoch { partition: self.partition, ..BlockEpoch::default() };
         debug_assert_eq!(
-            crate::verify::check_epoch_succession(BlockEpoch { partition: prev, data: 0 }, next),
+            crate::verify::check_epoch_succession(
+                BlockEpoch { partition: prev, ..BlockEpoch::default() },
+                next,
+            ),
             Ok(())
         );
     }
@@ -65,8 +79,15 @@ impl EpochTracker {
         debug_assert_eq!(crate::verify::check_epoch_succession(prev, self.epoch(i)), Ok(()));
     }
 
+    /// Record block `i`'s extracted shape signature. Stamping must happen
+    /// alongside (re-)extraction — the identity `(partition, data)` pins
+    /// which extraction the stamp describes.
+    pub fn stamp_shape(&mut self, i: usize, shape: ShapeClass) {
+        self.shapes[i] = shape;
+    }
+
     pub fn epoch(&self, i: usize) -> BlockEpoch {
-        BlockEpoch { partition: self.partition, data: self.data[i] }
+        BlockEpoch { partition: self.partition, data: self.data[i], shape: self.shapes[i] }
     }
 
     pub fn epochs(&self) -> Vec<BlockEpoch> {
@@ -190,11 +211,24 @@ mod tests {
         assert_eq!(e0.partition, e1.partition);
         assert_ne!(e0, e1);
         // Untouched blocks keep their identity.
-        assert_eq!(t.epoch(0), BlockEpoch { partition: 0, data: 0 });
+        assert_eq!(t.epoch(0), BlockEpoch::default());
         t.bump_partition(4);
         assert_eq!(t.p(), 4);
         let e2 = t.epoch(1);
         assert_ne!(e1.partition, e2.partition);
         assert_eq!(t.epochs().len(), 4);
+    }
+
+    #[test]
+    fn shape_stamps_ride_the_epoch_and_reset_on_repartition() {
+        let mut t = EpochTracker::new(2);
+        assert!(!t.epoch(0).shape.is_stamped(), "fresh trackers are unstamped");
+        t.stamp_shape(0, ShapeClass::of(10, 40));
+        assert_eq!(t.epoch(0).shape, ShapeClass { n_pad: 12, m_pad: 48 });
+        // A stamped and an unstamped view of the same (partition, data)
+        // are different identities — the cache must not conflate them.
+        assert_ne!(t.epoch(0), t.epoch(1));
+        t.bump_partition(3);
+        assert!(!t.epoch(0).shape.is_stamped(), "repartition clears stamps");
     }
 }

@@ -33,6 +33,7 @@ use crate::domain::{generators, DriftLayout, ObservationSet};
 use crate::domain2d::{generators as gen2d, DriftLayout2d, ObservationSet2d};
 use crate::dydd::{balance_ratio, RebalancePolicy, RebalanceRecord};
 use crate::harness::pipeline::maybe_rebalance;
+use crate::linalg::batch::ShapeClass;
 use crate::linalg::mat::dist2;
 // lint:allow-file(no-wall-clock-in-sim) per-cycle wall-clock benchmark columns
 use std::time::{Duration, Instant};
@@ -114,6 +115,9 @@ pub struct CycleRecord {
     pub iters: usize,
     pub converged: bool,
     pub stalled: bool,
+    /// Dispatch groups per sweep under the active batch mode: one per
+    /// phase when batching is off; split by shape bucket when it fuses.
+    pub batch_groups: usize,
     /// ‖x̂_KF − x̂_DD-DA‖ on this cycle's problem (None without baseline).
     pub error_dd_da: Option<f64>,
 }
@@ -192,6 +196,7 @@ pub fn render_cycle_table(rep: &CycleReport) -> crate::util::Table {
             "reb",
             "moved",
             "dirty",
+            "groups",
             "iters",
             "T^p_crit",
             "T_wall",
@@ -207,6 +212,7 @@ pub fn render_cycle_table(rep: &CycleReport) -> crate::util::Table {
             if r.rebalanced { "yes".into() } else { "-".to_string() },
             r.migration_volume.to_string(),
             format!("{}/{}", r.dirty_blocks, rep.p),
+            r.batch_groups.to_string(),
             r.iters.to_string(),
             fmt_secs(r.t_critical.as_secs_f64()),
             fmt_secs(r.t_wall.as_secs_f64()),
@@ -291,6 +297,7 @@ pub fn run_cycles_on<G: RecordGeometry>(
     with_baseline: bool,
 ) -> anyhow::Result<CycleReport> {
     cfg.apply_threads();
+    cfg.apply_batch();
     let policy = effective_policy(cfg);
     let n = geom.n_unknowns();
     let p = geom.p();
@@ -372,12 +379,14 @@ pub fn run_cycles_on<G: RecordGeometry>(
                 let tasks = (0..p)
                     .map(|i| -> anyhow::Result<BlockTask> {
                         Ok(if dirty[i] {
-                            BlockTask::Extract(geom.local_block(
-                                &prob,
-                                &part,
-                                i,
-                                cfg.schwarz.overlap,
-                            ))
+                            let blk =
+                                geom.local_block(&prob, &part, i, cfg.schwarz.overlap);
+                            // Stamp before the epoch snapshot below: the
+                            // pool caches Extracts under the epoch they
+                            // ship with, and later cache hits present the
+                            // stamped one.
+                            epochs.stamp_shape(i, ShapeClass::of(blk.n_loc(), blk.m_loc()));
+                            BlockTask::Extract(blk)
                         } else {
                             let cb = pool.cached_block(i).ok_or_else(|| {
                                 anyhow::anyhow!("clean block {i} missing from the solve cache")
@@ -400,6 +409,9 @@ pub fn run_cycles_on<G: RecordGeometry>(
                 let blocks = blocks_of(geom, &prob, &part, cfg.schwarz.overlap);
                 let phases = phases_of(geom, &blocks, &part);
                 phases_cache = Some((part.clone(), phases.clone()));
+                for (i, blk) in blocks.iter().enumerate() {
+                    epochs.stamp_shape(i, ShapeClass::of(blk.n_loc(), blk.m_loc()));
+                }
                 (blocks.into_iter().map(BlockTask::Extract).collect(), phases)
             }
         };
@@ -432,6 +444,7 @@ pub fn run_cycles_on<G: RecordGeometry>(
             iters: par.iters,
             converged: par.converged,
             stalled: par.stalled,
+            batch_groups: par.batch_groups,
             error_dd_da,
         });
 

@@ -113,6 +113,7 @@ pub fn run_experiment(
     with_baseline: bool,
 ) -> anyhow::Result<ExperimentReport> {
     cfg.apply_threads();
+    cfg.apply_batch();
     let (geom, cfg) = resolve_geometry(cfg)?;
     match geom {
         ResolvedGeometry::D1(g) => run_experiment_on(&g, &cfg, with_baseline),
@@ -231,6 +232,7 @@ pub fn run_with_counts(
 ) -> anyhow::Result<ExperimentReport> {
     anyhow::ensure!(base.dim == 1, "run_with_counts drives the 1-D DD-KF pipeline");
     base.apply_threads();
+    base.apply_batch();
     let mut geom = base.interval_geometry();
     geom.p = counts.len();
     let mesh = Mesh1d::new(base.n);

@@ -7,12 +7,14 @@
 //! so straightforward cache-aware implementations suffice; the heavy
 //! per-subdomain gram/factor work runs through the AOT XLA artifacts.
 
+pub mod batch;
 pub mod chol;
 pub mod lu;
 pub mod mat;
 pub mod sparse;
 pub mod tri;
 
+pub use batch::{BlockBatch, ShapeClass, WorkspaceArena};
 pub use chol::Cholesky;
 pub use lu::Lu;
 pub use mat::Mat;

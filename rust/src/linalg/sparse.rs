@@ -142,8 +142,17 @@ impl CsrMatrix {
 
     /// y = A x.
     pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.spmv_into(x, &mut y);
+        y
+    }
+
+    /// [`CsrMatrix::spmv`] into a reused buffer (cleared and resized; the
+    /// capacity survives across calls, so sweep loops allocate nothing).
+    pub fn spmv_into(&self, x: &[f64], y: &mut Vec<f64>) {
         assert_eq!(x.len(), self.cols);
-        let mut y = vec![0.0; self.rows];
+        y.clear();
+        y.resize(self.rows, 0.0);
         for r in 0..self.rows {
             let (cols, vals) = self.row(r);
             let mut acc = 0.0;
@@ -152,13 +161,20 @@ impl CsrMatrix {
             }
             y[r] = acc;
         }
-        y
     }
 
     /// y = Aᵀ x.
     pub fn spmv_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.spmv_t_into(x, &mut y);
+        y
+    }
+
+    /// [`CsrMatrix::spmv_t`] into a reused buffer.
+    pub fn spmv_t_into(&self, x: &[f64], y: &mut Vec<f64>) {
         assert_eq!(x.len(), self.rows);
-        let mut y = vec![0.0; self.cols];
+        y.clear();
+        y.resize(self.cols, 0.0);
         for r in 0..self.rows {
             let xr = x[r];
             if xr == 0.0 {
@@ -169,14 +185,21 @@ impl CsrMatrix {
                 y[c] += vals[k] * xr;
             }
         }
-        y
     }
 
     /// c = Aᵀ diag(d) r — same contract as [`Mat::at_db`], one CSR pass.
     pub fn at_db(&self, d: &[f64], r: &[f64]) -> Vec<f64> {
+        let mut c = Vec::new();
+        self.at_db_into(d, r, &mut c);
+        c
+    }
+
+    /// [`CsrMatrix::at_db`] into a reused buffer.
+    pub fn at_db_into(&self, d: &[f64], r: &[f64], c: &mut Vec<f64>) {
         assert_eq!(d.len(), self.rows);
         assert_eq!(r.len(), self.rows);
-        let mut c = vec![0.0; self.cols];
+        c.clear();
+        c.resize(self.cols, 0.0);
         for i in 0..self.rows {
             let s = d[i] * r[i];
             if s == 0.0 {
@@ -187,7 +210,6 @@ impl CsrMatrix {
                 c[j] += s * vals[k];
             }
         }
-        c
     }
 
     /// G = AᵀDA as a dense matrix, assembled sparsely: O(Σ_r nnz_r²)
@@ -231,8 +253,10 @@ impl CsrMatrix {
     /// Accumulate G rows `[a0, a1)` into `band` (row-major, `cols` wide):
     /// scans every CSR row r in ascending order, skipping contributions
     /// outside the band, so the single-band call is byte-for-byte the
-    /// serial kernel.
-    fn weighted_gram_band(&self, d: &[f64], a0: usize, a1: usize, band: &mut [f64]) {
+    /// serial kernel. `pub(crate)` because the batched dispatch layer
+    /// ([`crate::linalg::batch`]) reuses it to band whole-gram member
+    /// computations across a batch instead of rows within one gram.
+    pub(crate) fn weighted_gram_band(&self, d: &[f64], a0: usize, a1: usize, band: &mut [f64]) {
         let n = self.cols;
         for r in 0..self.rows {
             let dr = d[r];
@@ -304,16 +328,33 @@ impl CsrMatrix {
     /// matrix-free: y = AᵀD(Ax) + reg⊙x. Never forms the Gram matrix —
     /// O(nnz) per application.
     pub fn normal_apply(&self, d: &[f64], reg: &[f64], x: &[f64]) -> Vec<f64> {
+        let (mut tmp, mut y) = (Vec::new(), Vec::new());
+        self.normal_apply_into(d, reg, x, &mut tmp, &mut y);
+        y
+    }
+
+    /// [`CsrMatrix::normal_apply`] into reused buffers: `tmp` holds the
+    /// m-sized weighted residual D(Ax), `y` the n-sized result. Bitwise
+    /// the same arithmetic as the allocating form — this is the CG hot
+    /// path, applied once per iteration, so the solver keeps both buffers
+    /// alive across sweeps.
+    pub fn normal_apply_into(
+        &self,
+        d: &[f64],
+        reg: &[f64],
+        x: &[f64],
+        tmp: &mut Vec<f64>,
+        y: &mut Vec<f64>,
+    ) {
         assert_eq!(reg.len(), self.cols);
-        let mut t = self.spmv(x);
-        for (ti, di) in t.iter_mut().zip(d) {
+        self.spmv_into(x, tmp);
+        for (ti, di) in tmp.iter_mut().zip(d) {
             *ti *= di;
         }
-        let mut y = self.spmv_t(&t);
+        self.spmv_t_into(tmp, y);
         for (yi, (ri, xi)) in y.iter_mut().zip(reg.iter().zip(x)) {
             *yi += ri * xi;
         }
-        y
     }
 }
 
@@ -428,21 +469,30 @@ impl Ic0 {
     /// Apply the preconditioner: solve L·Lᵀ·z = r by forward then backward
     /// substitution.
     pub fn solve(&self, r: &[f64]) -> Vec<f64> {
+        let mut z = Vec::new();
+        self.solve_into(r, &mut z);
+        z
+    }
+
+    /// [`Ic0::solve`] into a reused buffer — the per-CG-iteration form the
+    /// scratch-based solvers use (same arithmetic, no allocation once the
+    /// buffer's capacity has grown to n).
+    pub fn solve_into(&self, r: &[f64], z: &mut Vec<f64>) {
         let n = self.l.rows;
         assert_eq!(r.len(), n);
-        let mut y = r.to_vec();
+        z.clear();
+        z.extend_from_slice(r);
         for i in 0..n {
             let (cols, vals) = self.l.row(i);
-            let mut s = y[i];
+            let mut s = z[i];
             for (k, &j) in cols.iter().enumerate() {
                 if j == i {
-                    y[i] = s / vals[k];
+                    z[i] = s / vals[k];
                     break;
                 }
-                s -= vals[k] * y[j];
+                s -= vals[k] * z[j];
             }
         }
-        let mut z = y;
         for i in (0..n).rev() {
             let (cols, vals) = self.l.row(i);
             let zi = z[i] / vals[vals.len() - 1];
@@ -454,7 +504,6 @@ impl Ic0 {
                 z[j] -= vals[k] * zi;
             }
         }
-        z
     }
 
     /// Structural non-zero count of the factor.
@@ -529,6 +578,50 @@ pub fn pcg(
     pcg_with(apply, rhs, precond, x0, tol, max_iters)
 }
 
+/// Reusable CG workspace: the five iteration vectors (x, r, z, p, q) of
+/// one [`pcg_with_scratch`] run, kept alive by the owning solver so a
+/// sweep loop performs zero vector allocations once every buffer has
+/// reached its block's size. `grows()` counts capacity growth events —
+/// the observable the no-allocation-churn tests pin.
+#[derive(Debug, Default, Clone)]
+pub struct PcgScratch {
+    x: Vec<f64>,
+    r: Vec<f64>,
+    z: Vec<f64>,
+    p: Vec<f64>,
+    q: Vec<f64>,
+    grows: usize,
+}
+
+impl PcgScratch {
+    pub fn new() -> Self {
+        PcgScratch::default()
+    }
+
+    /// Size every buffer for an n-unknown solve (zero-filled lengths; the
+    /// capacity is kept, and a growth beyond it is counted).
+    fn ensure(&mut self, n: usize) {
+        for v in [&mut self.x, &mut self.r, &mut self.z, &mut self.p, &mut self.q] {
+            if v.capacity() < n {
+                self.grows += 1;
+            }
+            v.clear();
+            v.resize(n, 0.0);
+        }
+    }
+
+    /// How many times any buffer had to grow its capacity. Constant across
+    /// repeated same-shape solves — that is the reuse contract.
+    pub fn grows(&self) -> usize {
+        self.grows
+    }
+
+    /// Total f64 capacity currently held (allocation-footprint telemetry).
+    pub fn capacity(&self) -> usize {
+        [&self.x, &self.r, &self.z, &self.p, &self.q].iter().map(|v| v.capacity()).sum()
+    }
+}
+
 /// Preconditioned conjugate gradient on an SPD operator with a generic
 /// preconditioner application `z = M⁻¹ r` (Jacobi via [`pcg`], IC(0) via
 /// [`Ic0::solve`], or anything SPD).
@@ -552,6 +645,33 @@ pub fn pcg_with(
     tol: f64,
     max_iters: usize,
 ) -> PcgOutcome {
+    let mut ws = PcgScratch::new();
+    pcg_with_scratch(
+        |x, y: &mut Vec<f64>| *y = apply(x),
+        rhs,
+        |r, z: &mut Vec<f64>| *z = precond(r),
+        x0,
+        tol,
+        max_iters,
+        &mut ws,
+    )
+}
+
+/// [`pcg_with`] with buffer-writing operator/preconditioner closures and a
+/// caller-owned [`PcgScratch`] — the allocation-free form the sweep-loop
+/// solvers ([`crate::ddkf::SparseCg`], the batched dispatch layer) run.
+/// Arithmetic is bitwise identical to the allocating wrapper: same
+/// iteration, same operation order, only the storage is reused.
+#[allow(clippy::too_many_arguments)]
+pub fn pcg_with_scratch(
+    mut apply: impl FnMut(&[f64], &mut Vec<f64>),
+    rhs: &[f64],
+    mut precond: impl FnMut(&[f64], &mut Vec<f64>),
+    x0: Option<&[f64]>,
+    tol: f64,
+    max_iters: usize,
+    ws: &mut PcgScratch,
+) -> PcgOutcome {
     let n = rhs.len();
     let rhs_norm = norm2(rhs);
     if rhs_norm == 0.0 {
@@ -563,26 +683,31 @@ pub fn pcg_with(
             stop: PcgStop::Converged,
         };
     }
-    let (mut x, mut r) = match x0 {
+    ws.ensure(n);
+    let PcgScratch { x, r, z, p, q, .. } = ws;
+    match x0 {
         Some(x0) => {
             assert_eq!(x0.len(), n);
-            let gx = apply(x0);
-            let r: Vec<f64> = rhs.iter().zip(&gx).map(|(bi, gi)| bi - gi).collect();
-            (x0.to_vec(), r)
+            apply(x0, q);
+            for (ri, (bi, gi)) in r.iter_mut().zip(rhs.iter().zip(q.iter())) {
+                *ri = bi - gi;
+            }
+            x.copy_from_slice(x0);
         }
-        None => (vec![0.0; n], rhs.to_vec()),
-    };
-    let mut z: Vec<f64> = precond(&r);
+        None => r.copy_from_slice(rhs),
+    }
+    precond(r, z);
     assert_eq!(z.len(), n, "preconditioner must preserve dimension");
-    let mut p = z.clone();
-    let mut rz = dot(&r, &z);
+    p.clear();
+    p.extend_from_slice(z);
+    let mut rz = dot(r, z);
     let window = stall_window(n);
     let mut best = f64::INFINITY;
     let mut since_best = 0usize;
     let mut iters = 0usize;
     let stop;
     loop {
-        let rel = norm2(&r) / rhs_norm;
+        let rel = norm2(r) / rhs_norm;
         if rel <= tol {
             stop = PcgStop::Converged;
             break;
@@ -601,26 +726,26 @@ pub fn pcg_with(
                 break;
             }
         }
-        let q = apply(&p);
-        let pq = dot(&p, &q);
+        apply(p, q);
+        let pq = dot(p, q);
         if pq <= 0.0 {
             stop = PcgStop::CurvatureBreakdown;
             break;
         }
         let alpha = rz / pq;
-        axpy(alpha, &p, &mut x);
-        axpy(-alpha, &q, &mut r);
-        z = precond(&r);
-        let rz_new = dot(&r, &z);
+        axpy(alpha, p, x);
+        axpy(-alpha, q, r);
+        precond(r, z);
+        let rz_new = dot(r, z);
         let beta = rz_new / rz;
-        for (pi, zi) in p.iter_mut().zip(&z) {
+        for (pi, zi) in p.iter_mut().zip(z.iter()) {
             *pi = zi + beta * *pi;
         }
         rz = rz_new;
         iters += 1;
     }
-    let rel_residual = norm2(&r) / rhs_norm;
-    PcgOutcome { x, iters, converged: rel_residual <= tol, rel_residual, stop }
+    let rel_residual = norm2(r) / rhs_norm;
+    PcgOutcome { x: x.clone(), iters, converged: rel_residual <= tol, rel_residual, stop }
 }
 
 #[cfg(test)]

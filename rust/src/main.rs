@@ -69,18 +69,20 @@ USAGE:
   dydd-da run [--config FILE] [--n N] [--m M] [--p P] [--layout L]
               [--dim 1|2|4] [--px PX] [--py PY] [--steps N_T]
               [--backend native|kf|pjrt|cg|cg-ic0] [--overlap S] [--mu MU]
-              [--threads T] [--no-dydd] [--seed SEED] [--no-baseline]
+              [--threads T] [--batch on|off|auto] [--no-dydd] [--seed SEED]
+              [--no-baseline]
   dydd-da cycle [--config FILE] [--dim 1|2|4] [--n N] [--m M] [--p P]
               [--px PX] [--py PY] [--steps N_T] [--cycles K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
-              [--drift D] [--seed SEED] [--threads T] [--no-dydd]
-              [--no-baseline]
+              [--drift D] [--seed SEED] [--threads T] [--batch on|off|auto]
+              [--no-dydd] [--no-baseline]
   dydd-da serve [--config FILE] [--dim 1|2|4] [--n N] [--m M] [--p P]
               [--px PX] [--py PY] [--steps N_T] [--ticks K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
               [--drift D] [--seed SEED] [--source drift|replay|-]
-              [--threads T] [--no-dydd] [--no-baseline]
-              [--no-feed-forward] [--no-warm-start] [--force-cold]
+              [--threads T] [--batch on|off|auto] [--no-dydd]
+              [--no-baseline] [--no-feed-forward] [--no-warm-start]
+              [--force-cold]
   dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
   dydd-da dydd --dim 2 [--px PX] [--py PY] [--layout L2] [--n N] [--m M]
               [--seed SEED]
@@ -102,6 +104,10 @@ backends: native (Cholesky) | kf (local VAR-KF) | pjrt (XLA artifacts)
 --threads T: dense/sparse kernel threads (default: DYDD_THREADS or 1).
           Banded deterministic reduction — results are bitwise-identical
           at every thread count.
+--batch M: same-shape block dispatch (default: DYDD_BATCH or auto). on =
+          always group same-shape blocks into fused batched solves, off =
+          per-block dispatch, auto = group only where batching wins.
+          Batched dispatch is bitwise-identical to per-block.
 serve sources: drift (native per-row stream; falls back to replay when
           the geometry has none) | replay (per-tick cycle_obs diffs)
           | - (JSONL deltas on stdin, one {tick, add, remove, move}
@@ -156,6 +162,16 @@ impl<'a> Flags<'a> {
                 .parse::<T>()
                 .map(Some)
                 .map_err(|_| anyhow::anyhow!("bad value for {key}: {v:?}")),
+        }
+    }
+
+    /// The `--batch on|off|auto` flag, shared by run/cycle/serve.
+    fn batch(&self) -> anyhow::Result<Option<dydd_da::util::batch::BatchMode>> {
+        match self.get("--batch") {
+            None => Ok(None),
+            Some(s) => dydd_da::util::batch::BatchMode::parse(s)
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("bad value for --batch: {s:?} (on | off | auto)")),
         }
     }
 }
@@ -278,6 +294,9 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     }
     if let Some(t) = f.parsed::<usize>("--threads")? {
         cfg.threads = t;
+    }
+    if let Some(b) = f.batch()? {
+        cfg.batch = Some(b);
     }
     if let Some(seed) = f.parsed::<u64>("--seed")? {
         cfg.seed = seed;
@@ -443,6 +462,9 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
     if let Some(t) = f.parsed::<usize>("--threads")? {
         cfg.threads = t;
     }
+    if let Some(b) = f.batch()? {
+        cfg.batch = Some(b);
+    }
     if f.has("--no-dydd") {
         cfg.dydd = false;
     }
@@ -588,13 +610,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     if let Some(t) = f.parsed::<usize>("--threads")? {
         cfg.threads = t;
     }
+    if let Some(b) = f.batch()? {
+        cfg.batch = Some(b);
+    }
     if f.has("--force-cold") {
         cfg.stream_force_cold = true;
     }
     cfg.validate()?;
     // `serve` drives the stream engine directly (no pipeline entry
-    // point), so the kernel-thread knob is applied here.
+    // point), so the kernel-thread and batch knobs are applied here.
     cfg.apply_threads();
+    cfg.apply_batch();
     let unknowns = match cfg.dim {
         2 => cfg.n * cfg.n,
         4 => cfg.n * cfg.steps,

@@ -32,6 +32,7 @@ use crate::ddkf::SchwarzOptions;
 use crate::decomp::{phases_of, EpochTracker, RecordGeometry};
 use crate::dydd::{balance_ratio, RebalancePolicy, RebalanceRecord};
 use crate::harness::pipeline::maybe_rebalance;
+use crate::linalg::batch::ShapeClass;
 use crate::linalg::mat::dist2;
 use crate::util::Json;
 use std::collections::BTreeMap;
@@ -114,6 +115,11 @@ pub struct TickRecord {
     pub iters: usize,
     pub converged: bool,
     pub stalled: bool,
+    /// Dispatch groups per sweep under the active batch mode: one per
+    /// phase when batching is off; split by shape bucket when it fuses.
+    pub batch_groups: usize,
+    /// Aggregate pad-waste fraction of the accepted shape groups.
+    pub pad_waste: f64,
     pub t_dydd: Duration,
     /// Simulated-parallel critical path of the tick's DD-KF solve.
     pub t_critical: Duration,
@@ -154,6 +160,8 @@ impl TickRecord {
         o.insert("iters".into(), int(self.iters));
         o.insert("converged".into(), Json::Bool(self.converged));
         o.insert("stalled".into(), Json::Bool(self.stalled));
+        o.insert("batch_groups".into(), int(self.batch_groups));
+        o.insert("pad_waste".into(), num(self.pad_waste));
         o.insert("t_dydd_s".into(), num(self.t_dydd.as_secs_f64()));
         o.insert("t_critical_s".into(), num(self.t_critical.as_secs_f64()));
         o.insert("t_wall_s".into(), num(self.t_wall.as_secs_f64()));
@@ -354,6 +362,10 @@ impl<'g, G: RecordGeometry> StreamEngine<'g, G> {
         // 4. Task dispatch: Extract dirty blocks, refresh clean ones'
         // right-hand sides when the background moved, retain the rest.
         let prob = geom.make_problem(self.y0.clone(), obs);
+        // Shape stamps must land on the tracker *before* the epoch list is
+        // snapshotted below: the pool caches each Extract under the epoch
+        // it ships with, and a later Retain of the same block presents the
+        // stamped epoch — an unstamped Extract would desync the cache.
         let tasks: Vec<BlockTask> = if self.phases.is_none() {
             // No standing colouring (first tick or partition move) — both
             // cases dirty every block, so the full list is on hand.
@@ -361,12 +373,18 @@ impl<'g, G: RecordGeometry> StreamEngine<'g, G> {
                 .map(|i| geom.local_block(&prob, &self.part, i, overlap))
                 .collect();
             self.phases = Some(phases_of(geom, &blocks, &self.part));
+            for (i, blk) in blocks.iter().enumerate() {
+                self.epochs.stamp_shape(i, ShapeClass::of(blk.n_loc(), blk.m_loc()));
+            }
             blocks.into_iter().map(BlockTask::Extract).collect()
         } else {
             (0..p)
                 .map(|i| -> anyhow::Result<BlockTask> {
                     Ok(if dirty[i] {
-                        BlockTask::Extract(geom.local_block(&prob, &self.part, i, overlap))
+                        let blk = geom.local_block(&prob, &self.part, i, overlap);
+                        self.epochs
+                            .stamp_shape(i, ShapeClass::of(blk.n_loc(), blk.m_loc()));
+                        BlockTask::Extract(blk)
                     } else if self.bg_dirty {
                         let cb = self.pool.cached_block(i).ok_or_else(|| {
                             anyhow::anyhow!("clean block {i} missing from the solve cache")
@@ -434,6 +452,8 @@ impl<'g, G: RecordGeometry> StreamEngine<'g, G> {
             iters: par.iters,
             converged: par.converged,
             stalled: par.stalled,
+            batch_groups: par.batch_groups,
+            pad_waste: par.pad_waste,
             t_dydd,
             t_critical: par.t_critical,
             t_wall: t_wall0.elapsed().saturating_sub(t_verify),
@@ -597,6 +617,11 @@ mod tests {
             assert!(doc.get("census").unwrap().as_arr().unwrap().len() == 4);
             assert!(doc.get("t_wall_s").unwrap().as_f64().unwrap() > 0.0);
             assert!(doc.get("t_verify_s").unwrap().as_f64().unwrap() >= 0.0);
+            // Batched-dispatch telemetry rides every tick record.
+            let groups = doc.get("batch_groups").and_then(Json::as_usize).unwrap();
+            assert!((1..=4).contains(&groups), "batch_groups = {groups}");
+            let waste = doc.get("pad_waste").unwrap().as_f64().unwrap();
+            assert!((0.0..1.0).contains(&waste));
         }
     }
 }

@@ -1,0 +1,181 @@
+//! Global batched-dispatch knob for the same-shape block batching layer.
+//!
+//! [`crate::linalg::batch`] groups the blocks of one colour-class phase by
+//! padded shape signature and runs one fused gram/factor/solve call per
+//! group. Whether that grouping is used at all is a process-global mode —
+//! like the kernel-thread knob in [`crate::util::threads`], deep call
+//! sites (the coordinator's phase dispatch, the sequential Schwarz
+//! engine's assembly) should not need a mode parameter threaded through
+//! every signature.
+//!
+//! Resolution order mirrors the threads knob: lazily from the
+//! `DYDD_BATCH` environment variable (`on` / `off` / `auto`), overridable
+//! at runtime via [`set_batch_mode`] — the config/CLI layer does so from
+//! `[perf] batch` / `--batch`.
+//!
+//! `Auto` must stay deterministic: the decision reads only block shapes
+//! (never timings), so two runs of the same problem always pick the same
+//! dispatch — a precondition of the bitwise batched ≡ per-block contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Whether phase dispatch groups same-shape blocks into fused batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Always group; every phase runs one fused call per shape group.
+    On,
+    /// Never group; every block is dispatched on the per-block path.
+    Off,
+    /// Group exactly the phases where batching is expected to win: a
+    /// shape group is batched iff it has at least [`AUTO_MIN_GROUP`]
+    /// members and its padded column count is at most
+    /// [`AUTO_MAX_BUCKET`]. Deterministic — decided from shapes alone.
+    Auto,
+}
+
+/// `Auto` batches a group only when it has at least this many members
+/// (a singleton group gains nothing over the per-block path).
+pub const AUTO_MIN_GROUP: usize = 2;
+
+/// `Auto` batches a group only when its padded unknown count is at most
+/// this bucket — few large blocks amortize their own dispatch overhead
+/// and lose the per-member banding freedom batching takes away.
+pub const AUTO_MAX_BUCKET: usize = 4096;
+
+impl BatchMode {
+    /// Parse a mode string (the CLI / `DYDD_BATCH` surface).
+    pub fn parse(s: &str) -> Option<BatchMode> {
+        Some(match s.trim().to_ascii_lowercase().as_str() {
+            "on" | "1" | "true" => BatchMode::On,
+            "off" | "0" | "false" => BatchMode::Off,
+            "auto" => BatchMode::Auto,
+            _ => return None,
+        })
+    }
+
+    /// Canonical string form (round-trips through [`BatchMode::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BatchMode::On => "on",
+            BatchMode::Off => "off",
+            BatchMode::Auto => "auto",
+        }
+    }
+
+    /// Whether a shape group of `members` blocks with `n_pad` padded
+    /// unknowns each should run the fused batched path under this mode.
+    pub fn batches(&self, members: usize, n_pad: usize) -> bool {
+        match self {
+            BatchMode::On => true,
+            BatchMode::Off => false,
+            BatchMode::Auto => members >= AUTO_MIN_GROUP && n_pad <= AUTO_MAX_BUCKET,
+        }
+    }
+}
+
+/// 0 means "not yet resolved"; 1/2/3 encode On/Off/Auto.
+static MODE: AtomicUsize = AtomicUsize::new(0);
+
+fn encode(m: BatchMode) -> usize {
+    match m {
+        BatchMode::On => 1,
+        BatchMode::Off => 2,
+        BatchMode::Auto => 3,
+    }
+}
+
+fn decode(v: usize) -> Option<BatchMode> {
+    match v {
+        1 => Some(BatchMode::On),
+        2 => Some(BatchMode::Off),
+        3 => Some(BatchMode::Auto),
+        _ => None,
+    }
+}
+
+fn default_mode() -> BatchMode {
+    match std::env::var("DYDD_BATCH") {
+        Ok(v) => BatchMode::parse(&v).unwrap_or(BatchMode::Auto),
+        Err(_) => BatchMode::Auto,
+    }
+}
+
+/// Batch mode currently in effect (defaults to `Auto` via `DYDD_BATCH`).
+pub fn batch_mode() -> BatchMode {
+    if let Some(m) = decode(MODE.load(Ordering::Relaxed)) {
+        return m;
+    }
+    let d = default_mode();
+    // A racing first call recomputes the same deterministic default, so a
+    // plain store is fine.
+    MODE.store(encode(d), Ordering::Relaxed);
+    d
+}
+
+/// Set the batch mode (config/CLI entry point).
+pub fn set_batch_mode(m: BatchMode) {
+    MODE.store(encode(m), Ordering::Relaxed);
+}
+
+/// Serializes tests that flip the process-global mode (the harness runs
+/// tests concurrently; a solve observing a mid-flip mode would still be
+/// bitwise correct, but telemetry assertions on grouping would race).
+#[cfg(test)]
+pub(crate) static TEST_MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// RAII guard for tests: hold the lock, set a mode, restore `Auto`.
+#[cfg(test)]
+pub(crate) struct TestModeGuard(std::sync::MutexGuard<'static, ()>);
+
+#[cfg(test)]
+pub(crate) fn test_mode(m: BatchMode) -> TestModeGuard {
+    let g = TEST_MODE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    set_batch_mode(m);
+    TestModeGuard(g)
+}
+
+#[cfg(test)]
+impl TestModeGuard {
+    pub(crate) fn set(&self, m: BatchMode) {
+        set_batch_mode(m);
+    }
+}
+
+#[cfg(test)]
+impl Drop for TestModeGuard {
+    fn drop(&mut self) {
+        set_batch_mode(BatchMode::Auto);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        for m in [BatchMode::On, BatchMode::Off, BatchMode::Auto] {
+            assert_eq!(BatchMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(BatchMode::parse("ON"), Some(BatchMode::On));
+        assert_eq!(BatchMode::parse("0"), Some(BatchMode::Off));
+        assert_eq!(BatchMode::parse("sometimes"), None);
+    }
+
+    #[test]
+    fn set_and_get_round_trip() {
+        let guard = test_mode(BatchMode::On);
+        assert_eq!(batch_mode(), BatchMode::On);
+        guard.set(BatchMode::Auto);
+        assert_eq!(batch_mode(), BatchMode::Auto);
+    }
+
+    #[test]
+    fn auto_heuristic_is_shape_only() {
+        assert!(BatchMode::Auto.batches(2, 64));
+        assert!(!BatchMode::Auto.batches(1, 64), "singleton groups stay per-block");
+        assert!(!BatchMode::Auto.batches(8, AUTO_MAX_BUCKET + 1), "huge blocks stay per-block");
+        assert!(BatchMode::On.batches(1, usize::MAX));
+        assert!(!BatchMode::Off.batches(100, 1));
+    }
+}

@@ -2,6 +2,7 @@
 //! environment), deterministic RNG, wall-clock timing, and ASCII table
 //! rendering for the benchmark harness.
 
+pub mod batch;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -175,7 +175,7 @@ mod tests {
 
     #[test]
     fn epoch_succession_accepts_and_rejects() {
-        let e = |partition, data| BlockEpoch { partition, data };
+        let e = |partition, data| BlockEpoch { partition, data, ..BlockEpoch::default() };
         assert_eq!(check_epoch_succession(e(0, 0), e(0, 1)), Ok(()));
         assert_eq!(check_epoch_succession(e(0, 7), e(1, 0)), Ok(()));
         assert!(check_epoch_succession(e(0, 1), e(0, 1)).is_err(), "no progress");

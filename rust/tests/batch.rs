@@ -1,0 +1,238 @@
+//! Property suite for the batched same-shape dispatch layer: the batched
+//! path must be *bitwise* identical to the per-block path — analyses and
+//! epoch counters — across every layout × backend × thread-count cell,
+//! plus ragged-shape grouping units (bucket boundaries, singleton groups,
+//! empty phases, pad-waste accounting).
+
+use dydd_da::cls::{ClsProblem, ClsProblem2d, StateOp, StateOp2d};
+use dydd_da::coordinator::{BlockTask, SolveCounters, SolverBackend, WorkerPool};
+use dydd_da::ddkf::{schwarz_solve, schwarz_solve2d, NativeLocalSolver, SchwarzOptions, SparseCg};
+use dydd_da::decomp::{blocks_of, phases_of, BlockEpoch, BoxGeometry, Geometry};
+use dydd_da::domain::{generators, Mesh1d, ObsLayout, Partition};
+use dydd_da::domain2d::{generators as gen2d, Mesh2d, ObsLayout2d};
+use dydd_da::linalg::batch::{bucket, pad_waste, plan_batches, ShapeClass};
+use dydd_da::util::batch::{set_batch_mode, BatchMode};
+use dydd_da::util::threads::{set_threads, threads};
+use dydd_da::util::Rng;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: analysis length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{tag}: x[{i}] differs: {x:e} vs {y:e}");
+    }
+}
+
+const BACKENDS: [&str; 3] = ["native", "cg", "cg-ic0"];
+
+fn solve_1d(layout: ObsLayout, backend: &str) -> (Vec<f64>, usize) {
+    let (n, m, p) = (96usize, 70usize, 4usize);
+    let mesh = Mesh1d::new(n);
+    let mut rng = Rng::new(21_000);
+    let obs = generators::generate(layout, m, &mut rng);
+    let y0 = rng.gaussian_vec(n);
+    let prob =
+        ClsProblem::new(mesh, StateOp::Tridiag { main: 1.0, off: 0.15 }, y0, vec![4.0; n], obs);
+    let part = Partition::uniform(n, p);
+    let opts = SchwarzOptions::default();
+    let out = match backend {
+        "native" => schwarz_solve(&prob, &part, &opts, &mut NativeLocalSolver).unwrap(),
+        "cg" => schwarz_solve(&prob, &part, &opts, &mut SparseCg::default()).unwrap(),
+        _ => schwarz_solve(&prob, &part, &opts, &mut SparseCg::ic0()).unwrap(),
+    };
+    (out.x, out.iters)
+}
+
+fn solve_2d(layout: ObsLayout2d, backend: &str) -> (Vec<f64>, usize) {
+    let (n, m) = (12usize, 50usize);
+    let mesh = Mesh2d::square(n);
+    let mut rng = Rng::new(22_000);
+    let obs = gen2d::generate(layout, m, &mut rng);
+    let y0 = gen2d::background_field(&mesh);
+    let nn = mesh.n();
+    let prob = ClsProblem2d::new(
+        mesh,
+        StateOp2d::FivePoint { main: 1.0, off: 0.12 },
+        y0,
+        vec![4.0; nn],
+        obs,
+    );
+    let part = dydd_da::domain2d::BoxPartition::uniform(n, n, 2, 2);
+    let opts = SchwarzOptions::default();
+    let out = match backend {
+        "native" => schwarz_solve2d(&prob, &part, &opts, &mut NativeLocalSolver).unwrap(),
+        "cg" => schwarz_solve2d(&prob, &part, &opts, &mut SparseCg::default()).unwrap(),
+        _ => schwarz_solve2d(&prob, &part, &opts, &mut SparseCg::ic0()).unwrap(),
+    };
+    (out.x, out.iters)
+}
+
+/// One cold-Extract + one warm-Retain pool epoch under `mode`; returns the
+/// two analyses, their epoch counters and the cold run's dispatch-group
+/// count.
+#[allow(clippy::type_complexity)]
+fn pool_run(mode: BatchMode) -> (Vec<f64>, SolveCounters, Vec<f64>, SolveCounters, usize) {
+    set_batch_mode(mode);
+    let geom = BoxGeometry::new(16, 2, 2);
+    let mut rng = Rng::new(5);
+    let obs = geom.static_obs(120, &mut rng);
+    let prob = geom.make_problem(geom.background(), obs);
+    let part = geom.initial_partition();
+    let opts = SchwarzOptions::default();
+    let nn = geom.n_unknowns();
+    let mut pool = WorkerPool::new(4, SolverBackend::Native, std::env::temp_dir());
+    let epochs = vec![BlockEpoch::default(); 4];
+    let blocks = blocks_of(&geom, &prob, &part, opts.overlap);
+    let phases = phases_of(&geom, &blocks, &part);
+    let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
+    let (cold, c_cold) =
+        pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, false).unwrap();
+    let tasks: Vec<BlockTask> = (0..4).map(|_| BlockTask::Retain).collect();
+    let (warm, c_warm) =
+        pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, true).unwrap();
+    (cold.x, c_cold, warm.x, c_warm, cold.batch_groups)
+}
+
+/// The tentpole contract, exhaustively: five 1-D + five 2-D layouts ×
+/// backends {native, cg, cg-ic0} × kernel threads {1, 4} × batch
+/// {off, on} — same iteration count, bitwise-equal analysis. The batch
+/// mode and thread knob are process-global, so every combination runs
+/// inside this one test, serially; a vacuous pass is impossible because
+/// each off/on pair re-sets the mode immediately before its run.
+#[test]
+fn batched_dispatch_bitwise_equals_per_block_all_cells() {
+    let t_restore = threads();
+    let layouts_1d = [
+        ObsLayout::Uniform,
+        ObsLayout::Ramp,
+        ObsLayout::Cluster,
+        ObsLayout::TwoClusters,
+        ObsLayout::LeftPacked,
+    ];
+    for layout in layouts_1d {
+        for backend in BACKENDS {
+            for t in [1usize, 4] {
+                set_threads(t);
+                set_batch_mode(BatchMode::Off);
+                let (x_off, it_off) = solve_1d(layout, backend);
+                set_batch_mode(BatchMode::On);
+                let (x_on, it_on) = solve_1d(layout, backend);
+                let tag = format!("1-D {layout:?} {backend} t={t}");
+                assert_eq!(it_off, it_on, "{tag}: iteration count");
+                assert_bits_eq(&x_off, &x_on, &tag);
+            }
+        }
+    }
+    for layout in ObsLayout2d::ALL {
+        for backend in BACKENDS {
+            for t in [1usize, 4] {
+                set_threads(t);
+                set_batch_mode(BatchMode::Off);
+                let (x_off, it_off) = solve_2d(layout, backend);
+                set_batch_mode(BatchMode::On);
+                let (x_on, it_on) = solve_2d(layout, backend);
+                let tag = format!("2-D {layout:?} {backend} t={t}");
+                assert_eq!(it_off, it_on, "{tag}: iteration count");
+                assert_bits_eq(&x_off, &x_on, &tag);
+            }
+        }
+    }
+    // Auto sits between the two and must agree with both (it only picks
+    // *which* groups fuse — never different arithmetic).
+    set_threads(t_restore);
+    set_batch_mode(BatchMode::Off);
+    let (x_off, _) = solve_2d(ObsLayout2d::Uniform2d, "native");
+    set_batch_mode(BatchMode::Auto);
+    let (x_auto, _) = solve_2d(ObsLayout2d::Uniform2d, "native");
+    assert_bits_eq(&x_off, &x_auto, "auto vs off");
+
+    // Coordinator pool path: cold-Extract + warm-Retain epochs produce
+    // bitwise-equal analyses AND identical SolveCounters across modes —
+    // batching never changes what the epoch cache extracts or retains.
+    let (cold_off, cc_off, warm_off, cw_off, g_off) = pool_run(BatchMode::Off);
+    let (cold_on, cc_on, warm_on, cw_on, g_on) = pool_run(BatchMode::On);
+    set_batch_mode(BatchMode::Auto);
+    assert_eq!(cc_off, cc_on, "cold-epoch counters differ across batch modes");
+    assert_eq!(cw_off, cw_on, "warm-epoch counters differ across batch modes");
+    assert_eq!(cc_off, SolveCounters { extracted: 4, refreshed: 0, retained: 0 });
+    assert_eq!(cw_off, SolveCounters { extracted: 0, refreshed: 0, retained: 4 });
+    assert_bits_eq(&cold_off, &cold_on, "pool cold epoch");
+    assert_bits_eq(&warm_off, &warm_on, "pool warm epoch");
+    // Off runs one dispatch group per phase; On splits phases by shape
+    // bucket, so it can only have at least as many groups.
+    assert!(g_on >= g_off, "on={g_on} groups vs off={g_off}");
+}
+
+#[test]
+fn bucket_ladder_boundaries() {
+    assert_eq!(bucket(0), 0);
+    for d in 1..=8 {
+        assert_eq!(bucket(d), 8, "d={d}");
+    }
+    assert_eq!(bucket(9), 12);
+    assert_eq!(bucket(12), 12);
+    assert_eq!(bucket(13), 16);
+    assert_eq!(bucket(16), 16);
+    assert_eq!(bucket(17), 24);
+    assert_eq!(bucket(24), 24);
+    assert_eq!(bucket(25), 32);
+    assert_eq!(bucket(48), 48);
+    assert_eq!(bucket(49), 64);
+    assert_eq!(bucket(96), 96);
+    assert_eq!(bucket(97), 128);
+    // The ladder is a closure: every bucket value maps to itself, and
+    // rounding never shrinks a dimension.
+    for d in 1..4096usize {
+        let b = bucket(d);
+        assert!(b >= d, "bucket({d}) = {b} < {d}");
+        assert_eq!(bucket(b), b, "bucket not idempotent at {d}");
+    }
+}
+
+#[test]
+fn ragged_grouping_singletons_and_shared_buckets() {
+    // Empty phase: no groups.
+    assert!(plan_batches(&[]).is_empty());
+
+    // Singleton phase: one group, one member, exact dims retained.
+    let plan = plan_batches(&[(10, 20)]);
+    assert_eq!(plan.len(), 1);
+    assert_eq!(plan[0].members, vec![0]);
+    assert_eq!(plan[0].dims, vec![(10, 20)]);
+    assert_eq!(plan[0].shape, ShapeClass::of(10, 20));
+
+    // Ragged mix: (10,20) and (12,24) round to the same (12,24) signature
+    // and fuse; (13,20) rounds to (16,24) and stays alone; (5,5) is its
+    // own tiny group. Groups appear in order of first member, members in
+    // phase order.
+    let plan = plan_batches(&[(10, 20), (13, 20), (12, 24), (5, 5)]);
+    assert_eq!(plan.len(), 3);
+    assert_eq!(plan[0].shape, ShapeClass { n_pad: 12, m_pad: 24 });
+    assert_eq!(plan[0].members, vec![0, 2]);
+    assert_eq!(plan[0].dims, vec![(10, 20), (12, 24)]);
+    assert_eq!(plan[1].shape, ShapeClass { n_pad: 16, m_pad: 24 });
+    assert_eq!(plan[1].members, vec![1]);
+    assert_eq!(plan[2].shape, ShapeClass { n_pad: 8, m_pad: 8 });
+    assert_eq!(plan[2].members, vec![3]);
+
+    // Pad-waste accounting: padded = 12·24·2 + 16·24 + 8·8 = 1024 slots,
+    // used = 200 + 288 + 260 + 25 = 773.
+    let w = pad_waste(&plan);
+    assert!((w - (1.0 - 773.0 / 1024.0)).abs() < 1e-12, "pad_waste = {w}");
+
+    // A bucket-exact singleton wastes nothing.
+    let exact = plan_batches(&[(8, 8)]);
+    assert_eq!(exact[0].pad_waste(), 0.0);
+    assert_eq!(pad_waste(&[]), 0.0);
+}
+
+#[test]
+fn auto_heuristic_reads_shapes_only() {
+    // Singleton groups never fuse under Auto; pairs do, up to the size
+    // cutoff — and the decision is a pure function of (members, n_pad).
+    assert!(!BatchMode::Auto.batches(1, 64));
+    assert!(BatchMode::Auto.batches(2, 64));
+    assert!(BatchMode::Auto.batches(8, 4096));
+    assert!(!BatchMode::Auto.batches(8, 4097));
+    assert!(BatchMode::On.batches(1, 1 << 20));
+    assert!(!BatchMode::Off.batches(16, 8));
+}

@@ -1,0 +1,11 @@
+// lint:fixture-path(rust/src/coordinator/worker.rs)
+// Refilling the persistent buffers in place inside the hot region is the
+// sanctioned pattern; allocation outside the markers stays legal.
+fn sweep_like(buf: &mut Vec<f64>, src: &[f64]) -> usize {
+    let cold_scratch = vec![0.0; src.len()];
+    // lint:sweep-hot-start stage through the persistent buffer only.
+    buf.clear();
+    buf.extend_from_slice(src);
+    // lint:sweep-hot-end
+    cold_scratch.len() + buf.len()
+}

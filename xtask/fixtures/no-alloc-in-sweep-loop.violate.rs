@@ -1,0 +1,12 @@
+// lint:fixture-path(rust/src/ddkf/schwarz.rs)
+// Allocating fresh storage inside the marked sweep hot region reintroduces
+// the per-solve churn the workspace arena and persistent staging buffers
+// exist to remove.
+fn local_sweep_like(state: &mut SubdomainState, n: usize) -> Vec<f64> {
+    // lint:sweep-hot-start per-iteration staging must reuse persistent buffers.
+    let staged = vec![0.0; n];
+    let mut extra = Vec::new();
+    extra.extend_from_slice(&staged);
+    // lint:sweep-hot-end
+    extra
+}

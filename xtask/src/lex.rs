@@ -23,6 +23,9 @@ pub struct Line {
     pub comment: String,
     /// Inside a `#[cfg(test)]` region or `#[test]` function body.
     pub in_test: bool,
+    /// Inside a `lint:sweep-hot-start` … `lint:sweep-hot-end` region
+    /// (markers inclusive) — the per-sweep hot path some rules scope on.
+    pub in_hot: bool,
 }
 
 /// One parsed `lint:allow` / `lint:allow-file` comment.
@@ -172,6 +175,7 @@ pub fn scan(path: &str, src: &str) -> SourceFile {
         lines.push(cur);
     }
     mark_test_regions(&mut lines);
+    mark_hot_regions(&mut lines);
     let (waivers, bad_waivers) = collect_waivers(&lines);
     SourceFile { path: path.to_string(), lines, waivers, bad_waivers }
 }
@@ -262,6 +266,24 @@ fn mark_test_regions(lines: &mut [Line]) {
     }
 }
 
+/// Mark lines between `lint:sweep-hot-start` and `lint:sweep-hot-end`
+/// comment markers, both marker lines included. The markers annotate the
+/// per-sweep hot path (see the `no-alloc-in-sweep-loop` rule); regions do
+/// not nest and an unclosed start runs to end of file, which is the
+/// conservative direction for an allocation lint.
+fn mark_hot_regions(lines: &mut [Line]) {
+    let mut hot = false;
+    for line in lines.iter_mut() {
+        if line.comment.contains("lint:sweep-hot-start") {
+            hot = true;
+        }
+        line.in_hot = hot;
+        if line.comment.contains("lint:sweep-hot-end") {
+            hot = false;
+        }
+    }
+}
+
 /// Parse `lint:allow(<rule>) reason` / `lint:allow-file(<rule>) reason`
 /// comments. A line-scoped waiver trailing code covers its own line; one
 /// on a comment-only line covers the next line that has code.
@@ -330,6 +352,15 @@ mod tests {
         assert!(!sf.lines[0].in_test);
         assert!(sf.lines[3].in_test);
         assert!(!sf.lines[5].in_test);
+    }
+
+    #[test]
+    fn marks_sweep_hot_regions() {
+        let src = "fn f() {\n// lint:sweep-hot-start staging\nlet x = 1;\n// lint:sweep-hot-end\nlet y = 2;\n}\n";
+        let sf = scan("rust/src/ddkf/schwarz.rs", src);
+        assert!(!sf.lines[0].in_hot);
+        assert!(sf.lines[1].in_hot && sf.lines[2].in_hot && sf.lines[3].in_hot);
+        assert!(!sf.lines[4].in_hot);
     }
 
     #[test]

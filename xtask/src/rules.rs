@@ -1,4 +1,4 @@
-//! The five repo-specific lint rules.
+//! The six repo-specific lint rules.
 //!
 //! Each rule guards an invariant the DD-KF sims otherwise re-verify by
 //! hand (see `rust/README.md` § Correctness tooling for the rationale and
@@ -23,12 +23,19 @@ pub const NO_WALL_CLOCK: &str = "no-wall-clock-in-sim";
 pub const NO_DENSE_ALLOC: &str = "no-dense-alloc-on-sparse-path";
 pub const NO_UNWRAP: &str = "no-unwrap-in-lib";
 pub const GEOMETRY_REGISTRATION: &str = "geometry-registration";
+pub const NO_SWEEP_ALLOC: &str = "no-alloc-in-sweep-loop";
 /// Pseudo-rule for malformed waiver comments (cannot itself be waived).
 pub const WAIVER_SYNTAX: &str = "waiver-syntax";
 
 /// Every rule name a waiver may reference.
-pub const RULES: [&str; 5] =
-    [NO_PARTIAL_CMP, NO_WALL_CLOCK, NO_DENSE_ALLOC, NO_UNWRAP, GEOMETRY_REGISTRATION];
+pub const RULES: [&str; 6] = [
+    NO_PARTIAL_CMP,
+    NO_WALL_CLOCK,
+    NO_DENSE_ALLOC,
+    NO_UNWRAP,
+    GEOMETRY_REGISTRATION,
+    NO_SWEEP_ALLOC,
+];
 
 /// Files where wall-clock reads are the point: the timer utility, DyDD
 /// migration timing (T_DyDD is a measured quantity in the paper's tables)
@@ -42,7 +49,14 @@ const WALL_CLOCK_ALLOWED: [&str; 3] =
 const SPARSE_PATH: [&str; 3] =
     ["rust/src/linalg/sparse.rs", "rust/src/ddkf/local.rs", "rust/src/stream/"];
 
-/// Run the four per-file rules plus waiver validation on one file.
+/// Files whose `lint:sweep-hot-start` / `lint:sweep-hot-end` regions mark
+/// the per-sweep solve hot path. The settled iteration there must refill
+/// persistent buffers in place — a fresh allocation per sweep is exactly
+/// the churn the workspace arena removed.
+const SWEEP_HOT_FILES: [&str; 2] =
+    ["rust/src/ddkf/schwarz.rs", "rust/src/coordinator/worker.rs"];
+
+/// Run the five per-file rules plus waiver validation on one file.
 pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
     let mut out = Vec::new();
     for bad in &sf.bad_waivers {
@@ -66,6 +80,7 @@ pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
     let wall_clock_scoped = !WALL_CLOCK_ALLOWED.iter().any(|p| sf.path.starts_with(p));
     let sparse_scoped = SPARSE_PATH.iter().any(|p| sf.path.starts_with(p));
     let unwrap_scoped = sf.path != "rust/src/main.rs";
+    let sweep_scoped = SWEEP_HOT_FILES.contains(&sf.path.as_str());
     for (idx, line) in sf.lines.iter().enumerate() {
         if line.in_test {
             continue;
@@ -100,6 +115,17 @@ pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
                          CSR/CG backend"
                     );
                     flag(NO_DENSE_ALLOC, msg, &mut out);
+                }
+            }
+        }
+        if sweep_scoped && line.in_hot {
+            for tok in ["Vec::new", "vec!", "Mat::zeros"] {
+                if has_token_seq(code, tok) {
+                    let msg = format!(
+                        "{tok} inside a sweep hot region — the settled iteration must \
+                         refill persistent buffers / arena scratch, not allocate per solve"
+                    );
+                    flag(NO_SWEEP_ALLOC, msg, &mut out);
                 }
             }
         }
@@ -278,6 +304,30 @@ mod tests {
         let ok = "x.expect(\"invariant: filled above\");\nx.unwrap_or_default();\n";
         assert!(findings("rust/src/util/json.rs", ok).is_empty());
         assert!(findings("rust/src/main.rs", "x.unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn sweep_alloc_rule_scoped_to_hot_regions() {
+        let hot = "// lint:sweep-hot-start refill in place only\n\
+                   let v = Vec::new();\n\
+                   // lint:sweep-hot-end\n";
+        let f = findings("rust/src/ddkf/schwarz.rs", hot);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, NO_SWEEP_ALLOC);
+        // The same allocation outside the marked region is legal…
+        assert!(findings("rust/src/ddkf/schwarz.rs", "let v = Vec::new();\n").is_empty());
+        // …and hot markers in files off the sweep path are inert.
+        assert!(findings("rust/src/harness/x.rs", hot).is_empty());
+        // In-place refills inside the region pass; waivers are honoured.
+        let ok = "// lint:sweep-hot-start staging\n\
+                  buf.clear();\n\
+                  buf.extend_from_slice(src);\n\
+                  // lint:sweep-hot-end\n";
+        assert!(findings("rust/src/coordinator/worker.rs", ok).is_empty());
+        let waived = "// lint:sweep-hot-start staging\n\
+                      let v = vec![0.0; n]; // lint:allow(no-alloc-in-sweep-loop) cold path\n\
+                      // lint:sweep-hot-end\n";
+        assert!(findings("rust/src/coordinator/worker.rs", waived).is_empty());
     }
 
     #[test]
