@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""Seed the repo-root `BENCH_comms.json` with *measured* numbers when no
+Rust toolchain is available.
+
+This is a timed port of the A11 communication-mode cells in
+`rust/benches/ablations.rs` (same problem family and block extraction as
+`python/tools/scaling_probe.py`), with the leader's comm-byte ledger
+ported exactly:
+
+ * full       — every solve dispatch ships the dense iterate:
+                8*n payload + 8*n_loc reply per block per sweep;
+ * restricted — ships only the block's read set (the halo columns its
+                couplings actually load): 8*|read_set| + 8*n_loc reply;
+ * delta      — first dispatch per solve call ships the full read set,
+                later dispatches ship only the bitwise-changed entries at
+                12 bytes each (u32 index + f64 value); an empty delta on
+                the pure-solve dense backend skips the dispatch entirely
+                (0 bytes, counted in `solves_skipped`).
+
+`comm_bytes_saved` is the dense baseline 8*(n + n_loc) per
+dispatched-or-skipped block minus the bytes actually moved. The modes
+are wire shapes, never arithmetic: a block is only skipped when its
+read-set inputs are bitwise unchanged, so its solve would reproduce the
+standing solution exactly — asserted here by the full-vs-delta bitwise
+gate on the p=8 cell, as in the Rust bench. The probe runs the
+zero-overlap extraction (the Rust A11 cell runs overlap 2; both sit in
+the `overlap <= 2` regime the delta exchange targets), so `scenario.
+overlap` is 0 until `cargo xtask bench-refresh` replaces this document.
+
+Run: python3 python/tools/comms_probe.py  (writes BENCH_comms.json at
+the repo root)
+"""
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from scaling_probe import (DenseLocal, OBS_PER_AXIS, SEED, build_problem,
+                           extract_blocks)
+
+GRID = 64
+TICKS = 3
+PS = [4, 8, 16]
+MODES = ["full", "restricted", "delta"]
+
+
+def grid_of(p):
+    return {4: (2, 2), 8: (4, 2), 16: (4, 4)}[p]
+
+
+def read_set_of(blk):
+    """Sorted distinct halo columns — the wire format of a restricted
+    send (order is the format; deltas index into it)."""
+    _, hc, _ = blk["halo"]
+    return np.unique(hc)
+
+
+class CommLedger:
+    """Per-solve-call byte ledger, as kept by the leader. `delta` mode
+    re-ships the full read set on the first dispatch to a block (the
+    change tracker is per solve call), then only bitwise-changed
+    entries."""
+
+    def __init__(self, mode, nn, blocks, read_sets):
+        self.mode = mode
+        self.nn = nn
+        self.read_sets = read_sets
+        self.n_loc = [len(b["cols"]) for b in blocks]
+        self.snap = [None] * len(blocks)
+        self.comm_bytes = 0
+        self.comm_bytes_saved = 0
+        self.solves_skipped = 0
+
+    def dispatch(self, bi, x):
+        """Account one solve dispatch for block `bi` against iterate `x`;
+        returns False when the dispatch is skipped (empty delta on a
+        pure-solve backend)."""
+        dense = 8 * (self.nn + self.n_loc[bi])
+        rs = self.read_sets[bi]
+        vals = x[rs]
+        if self.mode == "full":
+            actual = 8 * self.nn + 8 * self.n_loc[bi]
+            sent = True
+        elif self.mode == "restricted" or self.snap[bi] is None:
+            actual = 8 * len(rs) + 8 * self.n_loc[bi]
+            sent = True
+        else:
+            changed = int(np.count_nonzero(
+                vals.view(np.int64) != self.snap[bi].view(np.int64)))
+            if changed == 0:
+                actual = 0
+                sent = False
+                self.solves_skipped += 1
+            else:
+                actual = 12 * changed + 8 * self.n_loc[bi]
+                sent = True
+        if self.mode == "delta":
+            self.snap[bi] = vals.copy()
+        self.comm_bytes += actual
+        self.comm_bytes_saved += max(dense - actual, 0)
+        return sent
+
+
+def schwarz_call(blocks, locals_, nn, ledger, x0=None, max_iters=200):
+    """One solve call (port of the scaling probe's `schwarz`), with every
+    per-sweep dispatch routed through the ledger; skipped blocks keep
+    the standing solution, which is bitwise what the solve would have
+    produced."""
+    x = x0.copy() if x0 is not None else np.zeros(nn)
+    floor = 64.0 * np.finfo(float).eps * np.sqrt(nn)
+    tol_eff = max(1e-13, floor)
+    phases = sorted({b["phase"] for b in blocks})
+    for sweep in range(1, max_iters + 1):
+        x_prev = x.copy()
+        for ph in phases:
+            for bi, blk in enumerate(blocks):
+                if blk["phase"] != ph:
+                    continue
+                if not ledger.dispatch(bi, x):
+                    continue
+                hr, hc, hv = blk["halo"]
+                b_eff = blk["y"].copy()
+                if len(hr):
+                    np.subtract.at(b_eff, hr, hv * x[hc])
+                x[blk["cols"]] = locals_[bi].solve(b_eff, None)
+        rel = np.linalg.norm(x - x_prev) / (1.0 + np.linalg.norm(x))
+        if rel < tol_eff:
+            return x, sweep
+    return x, max_iters
+
+
+def comm_cell(rows, mode, p):
+    """Cold call then TICKS warm calls under `mode`; returns the mean
+    warm wall and the last warm call's (x, iters, ledger) — the outcome
+    the Rust A11 emitter reports."""
+    px, py = grid_of(p)
+    nn = GRID * GRID
+    blocks = extract_blocks(rows, GRID, px, py)
+    read_sets = [read_set_of(b) for b in blocks]
+    locals_ = [DenseLocal(b) for b in blocks]
+    cold_ledger = CommLedger(mode, nn, blocks, read_sets)
+    x, _ = schwarz_call(blocks, locals_, nn, cold_ledger)
+    t_warm = 0.0
+    for _ in range(TICKS):
+        ledger = CommLedger(mode, nn, blocks, read_sets)
+        t0 = time.perf_counter()
+        x, iters = schwarz_call(blocks, locals_, nn, ledger, x0=x)
+        t_warm += time.perf_counter() - t0
+    return t_warm / TICKS, x, iters, ledger
+
+
+def main():
+    rows = build_problem(GRID, OBS_PER_AXIS * GRID, SEED)
+
+    # The bitwise gate the whole feature is contracted on (p = 8).
+    _, x_full, it_full, _ = comm_cell(rows, "full", 8)
+    _, x_delta, it_delta, _ = comm_cell(rows, "delta", 8)
+    assert it_full == it_delta, "comm mode changed the iteration count"
+    assert np.array_equal(x_full.view(np.int64), x_delta.view(np.int64)), \
+        "comm mode changed the analysis bitwise"
+    print("bitwise gate: full vs delta identical on 64² dense p=8")
+
+    rows_out = []
+    for p in PS:
+        full_bps = None
+        for mode in MODES:
+            tick, _, iters, led = comm_cell(rows, mode, p)
+            bps = led.comm_bytes / max(iters, 1)
+            if full_bps is None:
+                full_bps = bps
+            reduction = full_bps / max(bps, 1e-9)
+            print(f"p={p:2d} {mode:10s}: {bps:10.0f} B/sweep "
+                  f"({reduction:5.1f}x vs full), skipped={led.solves_skipped}, "
+                  f"warm tick {tick:.4f}s")
+            rows_out.append({
+                "p": p, "mode": mode,
+                "comm_bytes": led.comm_bytes,
+                "comm_bytes_saved": led.comm_bytes_saved,
+                "bytes_per_sweep": round(bps, 1),
+                "reduction_vs_full": round(reduction, 3),
+                "solves_skipped": led.solves_skipped,
+                "iters": iters,
+                "t_warm_tick_s": round(tick, 6),
+            })
+    doc = {
+        "bench": "comms",
+        "measured": True,
+        "scenario": {
+            "dim": 2, "grid": GRID, "backend": "dense", "overlap": 0,
+            "warm_ticks": TICKS, "seed": SEED,
+        },
+        "bitwise_comm_ok": True,
+        "note": ("seed baseline measured by python/tools/comms_probe.py — a "
+                 "timed single-process port of the A11 cells with the "
+                 "leader's comm-byte ledger (zero-overlap extraction; the "
+                 "Rust cell runs overlap 2). `cargo xtask bench-refresh` "
+                 "replaces this document with Rust measurements."),
+        "source": "python/tools/comms_probe.py",
+        "rows": rows_out,
+    }
+    out = Path(__file__).resolve().parents[2] / "BENCH_comms.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 """Exact-arithmetic mirror of `cargo xtask lint` (xtask/src/{lex,rules}.rs).
 
 No Rust toolchain exists in the authoring container, so the lint's scanner
-and all six rules are ported line-for-line here and run against the real
+and all seven rules are ported line-for-line here and run against the real
 tree plus the fixture corpus; CI then re-runs the Rust implementation.
 Keep in sync with xtask when adding rules.
 
@@ -20,6 +20,7 @@ NO_DENSE_ALLOC = "no-dense-alloc-on-sparse-path"
 NO_UNWRAP = "no-unwrap-in-lib"
 GEOMETRY_REGISTRATION = "geometry-registration"
 NO_SWEEP_ALLOC = "no-alloc-in-sweep-loop"
+NO_GLOBAL_BROADCAST = "no-global-broadcast-in-phase-loop"
 WAIVER_SYNTAX = "waiver-syntax"
 RULES = [
     NO_PARTIAL_CMP,
@@ -28,11 +29,13 @@ RULES = [
     NO_UNWRAP,
     GEOMETRY_REGISTRATION,
     NO_SWEEP_ALLOC,
+    NO_GLOBAL_BROADCAST,
 ]
 
 WALL_CLOCK_ALLOWED = ["rust/src/util/timer.rs", "rust/src/dydd/", "rust/src/coordinator/"]
 SPARSE_PATH = ["rust/src/linalg/sparse.rs", "rust/src/ddkf/local.rs", "rust/src/stream/"]
 SWEEP_HOT_FILES = ["rust/src/ddkf/schwarz.rs", "rust/src/coordinator/worker.rs"]
+PHASE_HOT_FILES = ["rust/src/coordinator/leader.rs"]
 
 
 class Line:
@@ -41,6 +44,7 @@ class Line:
         self.comment = []
         self.in_test = False
         self.in_hot = False
+        self.in_phase = False
 
 
 class SourceFile:
@@ -179,6 +183,7 @@ def scan(path, src):
         ln.comment = "".join(ln.comment)
     mark_test_regions(lines)
     mark_hot_regions(lines)
+    mark_phase_regions(lines)
     waivers, bad = collect_waivers(lines)
     return SourceFile(path, lines, waivers, bad)
 
@@ -214,6 +219,17 @@ def mark_hot_regions(lines):
             hot = True
         line.in_hot = hot
         if "lint:sweep-hot-end" in line.comment:
+            hot = False
+
+
+def mark_phase_regions(lines):
+    # lint:phase-hot-start … lint:phase-hot-end comment markers, inclusive.
+    hot = False
+    for line in lines:
+        if "lint:phase-hot-start" in line.comment:
+            hot = True
+        line.in_phase = hot
+        if "lint:phase-hot-end" in line.comment:
             hot = False
 
 
@@ -313,6 +329,7 @@ def lint_file(sf):
     sparse_scoped = any(sf.path.startswith(p) for p in SPARSE_PATH)
     unwrap_scoped = sf.path != "rust/src/main.rs"
     sweep_scoped = sf.path in SWEEP_HOT_FILES
+    phase_scoped = sf.path in PHASE_HOT_FILES
     for idx, line in enumerate(sf.lines):
         if line.in_test:
             continue
@@ -336,6 +353,8 @@ def lint_file(sf):
             for tok in ["Vec::new", "vec!", "Mat::zeros"]:
                 if has_token_seq(code, tok):
                     flag(NO_SWEEP_ALLOC, f"{tok} inside a sweep hot region")
+        if phase_scoped and line.in_phase and has_token_seq(code, "Arc::new"):
+            flag(NO_GLOBAL_BROADCAST, "Arc::new inside the phase dispatch loop")
         if unwrap_scoped:
             if ".unwrap()" in code:
                 flag(NO_UNWRAP, "unwrap() on a library path")

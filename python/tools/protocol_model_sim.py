@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 # ---- protocol.rs -----------------------------------------------------------
 
 SETUP, REFRESHB, RETAIN, SOLVE, SHUTDOWN = "Setup", "RefreshB", "Retain", "Solve", "Shutdown"
+SOLVE_RESTRICTED, SOLVE_DELTA = "SolveRestricted", "SolveDelta"
 READY, SOLUTION, FAILED = "Ready", "Solution", "Failed"
 
 
@@ -24,24 +25,42 @@ class WorkerModel:
     def __init__(self, wid):
         self.id = wid
         self.epoch = None
+        # A read-set snapshot is standing (SolveRestricted since the last
+        # epoch dispatch). The real worker would accept a premature delta
+        # against a zeroed snapshot; the replica rejects it instead, so
+        # the checkers prove the leader never sends one.
+        self.snapshot = False
         self.stopped = False
 
     def key(self):
-        return (self.id, self.epoch, self.stopped)
+        return (self.id, self.epoch, self.snapshot, self.stopped)
 
     def step(self, req):
         kind, epoch = req
         assert not self.stopped, "message delivered to a stopped worker"
         if kind == SETUP:
             self.epoch = epoch
+            self.snapshot = False
             return (READY, self.id, None)
         if kind in (REFRESHB, RETAIN):
             if self.epoch is not None:
+                self.snapshot = False
                 return (READY, self.id, None)
             self.stopped = True
             return (FAILED, self.id, None)
         if kind == SOLVE:
             if self.epoch is not None:
+                return (SOLUTION, self.id, self.epoch)
+            self.stopped = True
+            return (FAILED, self.id, None)
+        if kind == SOLVE_RESTRICTED:
+            if self.epoch is not None:
+                self.snapshot = True
+                return (SOLUTION, self.id, self.epoch)
+            self.stopped = True
+            return (FAILED, self.id, None)
+        if kind == SOLVE_DELTA:
+            if self.epoch is not None and self.snapshot:
                 return (SOLUTION, self.id, self.epoch)
             self.stopped = True
             return (FAILED, self.id, None)
@@ -73,14 +92,14 @@ class LeaderCache:
 
 # ---- model.rs --------------------------------------------------------------
 
-ASSEMBLE, SOLVE_DEATH = "Assemble", "SolveDeath"
+ASSEMBLE, SOLVE_DEATH, DELTA_DEATH = "Assemble", "SolveDeath", "DeltaDeath"
 COMPLETED, DIAGNOSED = "Completed", "Diagnosed"
 
 
 @dataclass
 class Scenario:
     p: int
-    epochs: list  # [(tasks, phases)]
+    epochs: list  # [(tasks, phases, delta)]
     death: Optional[Tuple[int, str]] = None
 
 
@@ -91,6 +110,10 @@ class Sim:
         self.inbox = [deque() for _ in range(sc.p)]
         self.outbox = [deque() for _ in range(sc.p)]
         self.cache = LeaderCache(sc.p)
+        # Leader-side delta bookkeeping (`sent_stamp` in the real leader):
+        # reset at every epoch dispatch, exactly as the change tracker is
+        # per solve call.
+        self.snap_sent = [False] * sc.p
         self.leader = ("Dispatch", 0)
         self.advance_leader(sc)
 
@@ -101,6 +124,7 @@ class Sim:
             tuple(tuple(q) for q in self.inbox),
             tuple(tuple(q) for q in self.outbox),
             self.cache.key(),
+            tuple(self.snap_sent),
             self.leader,
         )
 
@@ -109,13 +133,14 @@ class Sim:
         other.workers = []
         for w in self.workers:
             nw = WorkerModel(w.id)
-            nw.epoch, nw.stopped = w.epoch, w.stopped
+            nw.epoch, nw.snapshot, nw.stopped = w.epoch, w.snapshot, w.stopped
             other.workers.append(nw)
         other.alive = list(self.alive)
         other.inbox = [deque(q) for q in self.inbox]
         other.outbox = [deque(q) for q in self.outbox]
         other.cache = LeaderCache(len(self.alive))
         other.cache.epochs = list(self.cache.epochs)
+        other.snap_sent = list(self.snap_sent)
         other.leader = self.leader
         return other
 
@@ -133,7 +158,10 @@ class Sim:
             state = self.leader
             if state[0] == "Dispatch":
                 epoch = state[1]
-                tasks, _phases = sc.epochs[epoch]
+                tasks, _phases, _delta = sc.epochs[epoch]
+                # A new epoch starts a fresh change tracker: every block's
+                # next solve must re-ship its full read set.
+                self.snap_sent = [False] * len(self.workers)
                 for w, task in enumerate(tasks):
                     if self.cache.admit(w, task) is not None or not self.alive[w]:
                         self.end(DIAGNOSED)
@@ -143,7 +171,7 @@ class Sim:
                 return
             if state[0] == "SendPhase":
                 epoch, phase = state[1], state[2]
-                _tasks, phases = sc.epochs[epoch]
+                _tasks, phases, delta = sc.epochs[epoch]
                 if phase == len(phases):
                     if epoch + 1 == len(sc.epochs):
                         self.end(COMPLETED)
@@ -154,7 +182,14 @@ class Sim:
                     if not self.alive[w]:
                         self.end(DIAGNOSED)
                         return
-                    self.inbox[w].append((SOLVE, None))
+                    if not delta:
+                        req = (SOLVE, None)
+                    elif not self.snap_sent[w]:
+                        self.snap_sent[w] = True
+                        req = (SOLVE_RESTRICTED, None)
+                    else:
+                        req = (SOLVE_DELTA, None)
+                    self.inbox[w].append(req)
                 self.leader = ("AwaitSolutions", epoch, phase, len(phases[phase]))
                 return
             return
@@ -182,8 +217,10 @@ class Sim:
                 victim, point = sc.death
                 if point == ASSEMBLE:
                     dies = victim == w and req[0] == SETUP
+                elif point == DELTA_DEATH:
+                    dies = victim == w and req[0] == SOLVE_DELTA
                 else:
-                    dies = victim == w and req[0] == SOLVE
+                    dies = victim == w and req[0] in (SOLVE, SOLVE_RESTRICTED)
             if dies:
                 self.alive[w] = False
                 return
@@ -217,7 +254,7 @@ class Sim:
 
 
 def explore(sc, expect, detect):
-    for tasks, _ in sc.epochs:
+    for tasks, _, _ in sc.epochs:
         assert len(tasks) == sc.p
     visited = set()
     terminals = 0
@@ -258,15 +295,15 @@ def setup_tasks(p, epoch):
 def main():
     # Mirrors of the Rust #[test] scenarios, same order.
     for phases in ([[0], [1]], [[0, 1]]):
-        stats = check(Scenario(2, [(setup_tasks(2, 0), phases)]), COMPLETED)
+        stats = check(Scenario(2, [(setup_tasks(2, 0), phases, False)]), COMPLETED)
         assert stats[1] >= 1 and stats[0] > 10, stats
         print(f"solve dispatch {phases}: {stats[0]} states, {stats[1]} terminals")
 
     sc = Scenario(
         2,
         [
-            (setup_tasks(2, 0), [[0], [1]]),
-            ([(RETAIN, 0), (REFRESHB, 0)], [[0], [1]]),
+            (setup_tasks(2, 0), [[0], [1]], False),
+            ([(RETAIN, 0), (REFRESHB, 0)], [[0], [1]], False),
         ],
     )
     print("epoch reuse:", check(sc, COMPLETED))
@@ -274,20 +311,53 @@ def main():
     sc = Scenario(
         2,
         [
-            (setup_tasks(2, 0), [[0, 1]]),
-            ([(RETAIN, 1), (RETAIN, 0)], [[0, 1]]),
+            (setup_tasks(2, 0), [[0, 1]], False),
+            ([(RETAIN, 1), (RETAIN, 0)], [[0, 1]], False),
         ],
     )
     print("epoch desync:", check(sc, DIAGNOSED))
 
-    sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]])], death=(1, ASSEMBLE))
+    sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]], False)], death=(1, ASSEMBLE))
     print("death@assemble:", check(sc, DIAGNOSED))
 
     for victim in range(2):
-        sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]])], death=(victim, SOLVE_DEATH))
+        sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]], False)],
+                      death=(victim, SOLVE_DEATH))
         print(f"death@solve victim={victim}:", check(sc, DIAGNOSED))
 
-    sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]])], death=(1, SOLVE_DEATH))
+    # Delta shape: each block's first solve ships the full read set, the
+    # second a patch; every-schedule completion proves the
+    # restricted-before-delta ordering (the replica rejects premature
+    # deltas).
+    delta_phases = [[0], [1], [0], [1]]
+    sc = Scenario(2, [(setup_tasks(2, 0), delta_phases, True)])
+    stats = check(sc, COMPLETED)
+    assert stats[1] >= 1 and stats[0] > 10, stats
+    print(f"delta dispatch: {stats[0]} states, {stats[1]} terminals")
+
+    # A reused epoch starts a fresh change tracker: its first solve must
+    # re-ship the full read set, not open with a delta.
+    sc = Scenario(
+        2,
+        [
+            (setup_tasks(2, 0), delta_phases, True),
+            ([(RETAIN, 0), (REFRESHB, 0)], delta_phases, True),
+        ],
+    )
+    print("delta epoch reuse:", check(sc, COMPLETED))
+
+    for victim in range(2):
+        sc = Scenario(2, [(setup_tasks(2, 0), delta_phases, True)],
+                      death=(victim, DELTA_DEATH))
+        print(f"death@delta victim={victim}:", check(sc, DIAGNOSED))
+
+    sc = Scenario(2, [(setup_tasks(2, 0), delta_phases, True)],
+                  death=(1, DELTA_DEATH))
+    stats, err = explore(sc, DIAGNOSED, False)
+    assert err is not None and "deadlock" in err, (stats, err)
+    print("unacked delta (no detect):", err)
+
+    sc = Scenario(2, [(setup_tasks(2, 0), [[0], [1]], False)], death=(1, SOLVE_DEATH))
     stats, err = explore(sc, DIAGNOSED, False)
     assert err is not None and "deadlock" in err, (stats, err)
     print("old leader (no detect):", err)

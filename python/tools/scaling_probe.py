@@ -30,7 +30,9 @@ at the repo root)
 """
 
 import json
+import os
 import time
+from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 
 import numpy as np
@@ -261,6 +263,64 @@ def run_cell(n, backend, p, problem_cache):
     return t_cold, t_warm, t_crit, iters, warm_iters
 
 
+def oversubscription_cell(problem_cache):
+    """The A9 oversubscription cell: p = 4 x cores subdomains on the 64²
+    grid, warm ticks solved by a real thread pool of width W — W = p
+    (one thread per subdomain, the legacy scheduler) vs W = cores (the
+    core-bounded pool). NumPy releases the GIL inside the dense solves,
+    so the contention between oversubscribed threads is genuinely
+    measured. Block write-backs land after each phase's futures resolve,
+    in block order, so the analysis is identical under either packing
+    (asserted bitwise)."""
+    cores = os.cpu_count() or 1
+    p = 4 * cores
+    n = 64
+    if n not in problem_cache:
+        problem_cache[n] = build_problem(n, OBS_PER_AXIS * n, SEED)
+    blocks = extract_blocks(problem_cache[n], n, 4, cores)
+    locals_ = [DenseLocal(b) for b in blocks]
+    x0, _, _ = schwarz(blocks, locals_, n * n)
+    phases = sorted({b["phase"] for b in blocks})
+    ticks = 3
+
+    def warm_ticks(width):
+        x = x0.copy()
+        wall = 0.0
+        with ThreadPoolExecutor(max_workers=width) as pool_:
+            for _ in range(ticks):
+                t0 = time.perf_counter()
+                for ph in phases:
+                    members = [bi for bi, b in enumerate(blocks) if b["phase"] == ph]
+                    b_effs = []
+                    for bi in members:
+                        hr, hc, hv = blocks[bi]["halo"]
+                        b_eff = blocks[bi]["y"].copy()
+                        if len(hr):
+                            np.subtract.at(b_eff, hr, hv * x[hc])
+                        b_effs.append(b_eff)
+                    futs = [pool_.submit(locals_[bi].solve, be, None)
+                            for bi, be in zip(members, b_effs)]
+                    for bi, fut in zip(members, futs):
+                        x[blocks[bi]["cols"]] = fut.result()
+                wall += time.perf_counter() - t0
+        return wall / ticks, x
+
+    t_tpb, x_tpb = warm_ticks(p)       # legacy: one thread per subdomain
+    t_cb, x_cb = warm_ticks(cores)     # core-bounded pool
+    bitwise_ok = bool(np.array_equal(x_tpb.view(np.int64), x_cb.view(np.int64)))
+    assert bitwise_ok, "pool width changed the analysis bitwise"
+    speedup = t_tpb / max(t_cb, 1e-12)
+    print(f"oversubscription (64², p={p} = 4x{cores} cores, warm ticks): "
+          f"W=p {t_tpb:.4f}s vs W=cores {t_cb:.4f}s ({speedup:.2f}x)")
+    return {
+        "grid": n, "cores": cores, "p": p,
+        "t_warm_thread_per_block_s": round(t_tpb, 6),
+        "t_warm_core_bounded_s": round(t_cb, 6),
+        "speedup_core_bounded": round(speedup, 4),
+        "bitwise_workers_ok": bitwise_ok,
+    }
+
+
 def main():
     problem_cache = {}
     rows_out = []
@@ -305,6 +365,7 @@ def main():
                  "`cargo xtask bench-refresh` replaces this document with "
                  "multi-worker Rust measurements."),
         "source": "python/tools/scaling_probe.py",
+        "oversubscription": oversubscription_cell(problem_cache),
         "rows": rows_out,
     }
     out = Path(__file__).resolve().parents[2] / "BENCH_scaling.json"

@@ -17,12 +17,18 @@
 //!  A9. Strong scaling: measured wall-clock (cold and warm epochs) next
 //!      to the simulated critical path over p = 1..8 workers on 2-D
 //!      grids, dense vs cg local solvers, plus the kernel-thread bitwise
-//!      determinism gate (emits `BENCH_scaling.json`; set
-//!      DYDD_BENCH_FULL=1 to extend the cg rows to 512²).
+//!      determinism gate and an oversubscription cell (p = 4×cores,
+//!      one-thread-per-subdomain vs the core-bounded pool) (emits
+//!      `BENCH_scaling.json`; set DYDD_BENCH_FULL=1 to extend the cg
+//!      rows to 512²).
 //! A10. Batched same-shape dispatch: warm Retain ticks with the batch
 //!      mode forced off vs on on the many-small-blocks cell (64², p=8),
 //!      with the bitwise gate between the two modes (emits
 //!      `BENCH_batch.json`).
+//! A11. Communication modes: full broadcast vs halo-restricted vs delta
+//!      exchange on warm ticks at p ∈ {4, 8, 16} (64², overlap 2), with
+//!      the bitwise gate between all three modes (emits
+//!      `BENCH_comms.json`).
 
 use dydd_da::cls::{ClsProblem, ClsProblem2d, StateOp, StateOp2d};
 use dydd_da::config::ExperimentConfig;
@@ -498,6 +504,64 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("{}", t.render());
+
+    // Oversubscription cell: p = 4×cores subdomains, the legacy
+    // one-thread-per-subdomain scheduler (W = p) vs the core-bounded
+    // pool (W = cores), warm ticks on the same problem. The decomposition
+    // — and therefore the math — is identical; only the packing changes.
+    let cores = dydd_da::util::workers::available_cores();
+    let p_over = 4 * cores;
+    let oversub_cell = |w: usize| -> anyhow::Result<(f64, Vec<f64>)> {
+        let geom = BoxGeometry::new(64, 4, cores);
+        let mut rng = Rng::new(7);
+        let obs = geom.static_obs(8 * 64, &mut rng);
+        let prob = geom.make_problem(geom.background(), obs);
+        let part = geom.initial_partition();
+        let opts = SchwarzOptions::default();
+        let nn = geom.n_unknowns();
+        let mut pool = WorkerPool::with_workers(p_over, w, SolverBackend::Native, "artifacts".into());
+        let epochs = vec![BlockEpoch::default(); p_over];
+        let blocks = blocks_of(&geom, &prob, &part, opts.overlap);
+        let phases = phases_of(&geom, &blocks, &part);
+        let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
+        pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, false)?;
+        const TICKS: usize = 3;
+        let mut t_warm = 0.0;
+        let mut x = Vec::new();
+        for _ in 0..TICKS {
+            let tasks: Vec<BlockTask> = (0..p_over).map(|_| BlockTask::Retain).collect();
+            let t0 = std::time::Instant::now();
+            let (o, _) = pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, true)?;
+            t_warm += t0.elapsed().as_secs_f64();
+            x = o.x;
+        }
+        Ok((t_warm / TICKS as f64, x))
+    };
+    let (t_thread_per_block, x_tpb) = oversub_cell(p_over)?;
+    let (t_core_bounded, x_cb) = oversub_cell(cores)?;
+    assert!(
+        x_tpb.iter().zip(&x_cb).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "pool width changed the analysis bitwise"
+    );
+    println!(
+        "A9 oversubscription (64², p = {p_over} = 4x{cores} cores, warm ticks): \
+         W=p {} vs W=cores {} ({:.2}x)",
+        fmt_secs(t_thread_per_block),
+        fmt_secs(t_core_bounded),
+        t_thread_per_block / t_core_bounded.max(1e-12)
+    );
+    let mut oversub = BTreeMap::new();
+    oversub.insert("grid".into(), Json::Num(64.0));
+    oversub.insert("cores".into(), Json::Num(cores as f64));
+    oversub.insert("p".into(), Json::Num(p_over as f64));
+    oversub.insert("t_warm_thread_per_block_s".into(), Json::Num(t_thread_per_block));
+    oversub.insert("t_warm_core_bounded_s".into(), Json::Num(t_core_bounded));
+    oversub.insert(
+        "speedup_core_bounded".into(),
+        Json::Num(t_thread_per_block / t_core_bounded.max(1e-12)),
+    );
+    oversub.insert("bitwise_workers_ok".into(), Json::Bool(true));
+
     let mut doc = BTreeMap::new();
     doc.insert("bench".into(), Json::Str("scaling".into()));
     doc.insert("measured".into(), Json::Bool(true));
@@ -505,6 +569,7 @@ fn main() -> anyhow::Result<()> {
     doc.insert("bitwise_threads_ok".into(), Json::Bool(bitwise_ok));
     doc.insert("obs_per_grid_axis".into(), Json::Num(8.0));
     doc.insert("seed".into(), Json::Num(7.0));
+    doc.insert("oversubscription".into(), Json::Obj(oversub));
     doc.insert("rows".into(), Json::Arr(scaling_rows));
     let path = "BENCH_scaling.json";
     std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
@@ -595,6 +660,111 @@ fn main() -> anyhow::Result<()> {
     doc.insert("pad_waste".into(), Json::Num(w_on));
     doc.insert("bitwise_batch_ok".into(), Json::Bool(true));
     let path = "BENCH_batch.json";
+    std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
+    println!("wrote {path}");
+
+    // ---------- A11: communication modes (full / restricted / delta) ----------
+    use dydd_da::util::comm::{set_comm_mode, CommMode};
+
+    // Warm ticks on the 64² grid with overlap 2: after the cold epoch the
+    // iterate settles, so late sweeps touch few columns — the regime the
+    // delta exchange targets. Each cell returns the warm outcome so both
+    // the byte ledger and the analysis can be compared across modes.
+    const A11_TICKS: usize = 3;
+    let comm_cell = |mode: CommMode,
+                     p: usize|
+     -> anyhow::Result<(f64, dydd_da::coordinator::ParallelOutcome)> {
+        set_comm_mode(mode);
+        let (px, py) = match p {
+            4 => (2, 2),
+            8 => (4, 2),
+            _ => (4, 4),
+        };
+        let geom = BoxGeometry::new(64, px, py);
+        let mut rng = Rng::new(7);
+        let obs = geom.static_obs(8 * 64, &mut rng);
+        let prob = geom.make_problem(geom.background(), obs);
+        let part = geom.initial_partition();
+        let opts = SchwarzOptions { overlap: 2, mu: 1e-8, ..SchwarzOptions::default() };
+        let nn = geom.n_unknowns();
+        let mut pool = WorkerPool::new(p, SolverBackend::Native, "artifacts".into());
+        let epochs = vec![BlockEpoch::default(); p];
+        let blocks = blocks_of(&geom, &prob, &part, opts.overlap);
+        let phases = phases_of(&geom, &blocks, &part);
+        let tasks: Vec<BlockTask> = blocks.into_iter().map(BlockTask::Extract).collect();
+        pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, false)?;
+        let mut t_warm = 0.0;
+        let mut out = None;
+        for _ in 0..A11_TICKS {
+            let tasks: Vec<BlockTask> = (0..p).map(|_| BlockTask::Retain).collect();
+            let t0 = std::time::Instant::now();
+            let (o, _) = pool.solve_blocks_incremental(nn, tasks, &epochs, &phases, &opts, true)?;
+            t_warm += t0.elapsed().as_secs_f64();
+            out = Some(o);
+        }
+        Ok((t_warm / A11_TICKS as f64, out.expect("A11_TICKS > 0")))
+    };
+
+    // The bitwise gate the whole feature is contracted on, on the
+    // acceptance cell (p = 8).
+    let (_, full8) = comm_cell(CommMode::Full, 8)?;
+    let (_, delta8) = comm_cell(CommMode::Delta, 8)?;
+    assert!(
+        full8.x.iter().zip(&delta8.x).all(|(a, b)| a.to_bits() == b.to_bits())
+            && full8.iters == delta8.iters,
+        "comm mode changed the analysis bitwise"
+    );
+    println!("A11 bitwise gate: full vs delta identical on 64² dense p=8 overlap=2");
+
+    let mut t = Table::new(
+        "A11 — communication modes (64², overlap 2, dense, warm ticks)",
+        &["p", "mode", "bytes/sweep", "reduction", "skipped", "warm tick mean"],
+    );
+    let mut comm_rows: Vec<Json> = Vec::new();
+    for p in [4usize, 8, 16] {
+        let mut full_bps: Option<f64> = None;
+        for mode in [CommMode::Full, CommMode::Restricted, CommMode::Delta] {
+            let (tick, out) = comm_cell(mode, p)?;
+            let bytes_per_sweep = out.comm_bytes as f64 / (out.iters as f64).max(1.0);
+            let base = *full_bps.get_or_insert(bytes_per_sweep);
+            let reduction = base / bytes_per_sweep.max(1e-9);
+            t.row(&[
+                p.to_string(),
+                mode.as_str().to_string(),
+                format!("{bytes_per_sweep:.0}"),
+                format!("{reduction:.1}x"),
+                out.solves_skipped.to_string(),
+                fmt_secs(tick),
+            ]);
+            let mut row = BTreeMap::new();
+            row.insert("p".into(), Json::Num(p as f64));
+            row.insert("mode".into(), Json::Str(mode.as_str().into()));
+            row.insert("comm_bytes".into(), Json::Num(out.comm_bytes as f64));
+            row.insert("comm_bytes_saved".into(), Json::Num(out.comm_bytes_saved as f64));
+            row.insert("bytes_per_sweep".into(), Json::Num(bytes_per_sweep));
+            row.insert("reduction_vs_full".into(), Json::Num(reduction));
+            row.insert("solves_skipped".into(), Json::Num(out.solves_skipped as f64));
+            row.insert("iters".into(), Json::Num(out.iters as f64));
+            row.insert("t_warm_tick_s".into(), Json::Num(tick));
+            comm_rows.push(Json::Obj(row));
+        }
+    }
+    set_comm_mode(CommMode::Delta);
+    println!("{}", t.render());
+    let mut scenario = BTreeMap::new();
+    scenario.insert("dim".into(), Json::Num(2.0));
+    scenario.insert("grid".into(), Json::Num(64.0));
+    scenario.insert("backend".into(), Json::Str("dense".into()));
+    scenario.insert("overlap".into(), Json::Num(2.0));
+    scenario.insert("warm_ticks".into(), Json::Num(A11_TICKS as f64));
+    scenario.insert("seed".into(), Json::Num(7.0));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("comms".into()));
+    doc.insert("measured".into(), Json::Bool(true));
+    doc.insert("scenario".into(), Json::Obj(scenario));
+    doc.insert("bitwise_comm_ok".into(), Json::Bool(true));
+    doc.insert("rows".into(), Json::Arr(comm_rows));
+    let path = "BENCH_comms.json";
     std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
     println!("wrote {path}");
 

@@ -105,6 +105,16 @@ pub struct ExperimentConfig {
     /// variable, else auto). Like `threads`, the bitwise batched ≡
     /// per-block contract means this knob can never change a result.
     pub batch: Option<crate::util::batch::BatchMode>,
+    /// Coordinator pool width W (`[perf] workers` / `--workers`): how many
+    /// worker threads host the p subdomain blocks. 0 = inherit the process
+    /// default (the `DYDD_WORKERS` environment variable, else
+    /// min(p, available cores)). Bitwise-neutral at any W.
+    pub workers: usize,
+    /// Leader ↔ worker iterate-exchange wire format (`[perf] comm` /
+    /// `--comm`). `None` = inherit the process default (the `DYDD_COMM`
+    /// environment variable, else delta). All modes are bitwise-identical
+    /// on the analysis; they differ only in bytes shipped per sweep.
+    pub comm: Option<crate::util::comm::CommMode>,
 }
 
 /// Delta source for the streaming engine's `serve` loop.
@@ -163,6 +173,8 @@ impl Default for ExperimentConfig {
             stream_force_cold: false,
             threads: 0,
             batch: None,
+            workers: 0,
+            comm: None,
         }
     }
 }
@@ -305,6 +317,14 @@ impl ExperimentConfig {
                             .ok_or_else(|| bad(k))?,
                     )
                 }
+                "perf.workers" => cfg.workers = v.as_usize().ok_or_else(|| bad(k))?,
+                "perf.comm" => {
+                    cfg.comm = Some(
+                        v.as_str()
+                            .and_then(crate::util::comm::CommMode::parse)
+                            .ok_or_else(|| bad(k))?,
+                    )
+                }
                 other => {
                     return Err(ValidationError::Invalid(format!("unknown key {other:?}")))
                 }
@@ -433,6 +453,12 @@ impl ExperimentConfig {
         if self.threads > 1024 {
             return fail(format!("perf.threads = {} is not a plausible core count", self.threads));
         }
+        if self.workers > 1024 {
+            return fail(format!(
+                "perf.workers = {} is not a plausible pool width",
+                self.workers
+            ));
+        }
         Ok(())
     }
 
@@ -454,6 +480,25 @@ impl ExperimentConfig {
     pub fn apply_batch(&self) {
         if let Some(m) = self.batch {
             crate::util::batch::set_batch_mode(m);
+        }
+    }
+
+    /// Install this config's pool-width knob into the process-global
+    /// setting new [`crate::coordinator::WorkerPool`]s resolve against.
+    /// `workers = 0` keeps the process default (`DYDD_WORKERS`, else
+    /// min(p, available cores)).
+    pub fn apply_workers(&self) {
+        if self.workers > 0 {
+            crate::util::workers::set_workers(self.workers);
+        }
+    }
+
+    /// Install this config's comm-mode knob into the process-global
+    /// setting the leader's dispatch loop reads. `None` keeps the process
+    /// default (`DYDD_COMM`, else delta).
+    pub fn apply_comm(&self) {
+        if let Some(m) = self.comm {
+            crate::util::comm::set_comm_mode(m);
         }
     }
 
@@ -607,6 +652,32 @@ dydd = true
         assert!(
             ExperimentConfig::from_toml_str("[perf]\nbatch = \"sometimes\"").is_err(),
             "unknown batch modes must be rejected"
+        );
+    }
+
+    #[test]
+    fn perf_workers_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str("[perf]\nworkers = 8").unwrap();
+        assert_eq!(cfg.workers, 8);
+        // Default: inherit the process-wide setting (core-bounded auto).
+        assert_eq!(ExperimentConfig::default().workers, 0);
+        let mut bad = ExperimentConfig::default();
+        bad.workers = 4096;
+        assert!(bad.validate().is_err(), "absurd pool widths must be rejected");
+    }
+
+    #[test]
+    fn perf_comm_parses_and_validates() {
+        use crate::util::comm::CommMode;
+        let cfg = ExperimentConfig::from_toml_str("[perf]\ncomm = \"full\"").unwrap();
+        assert_eq!(cfg.comm, Some(CommMode::Full));
+        let cfg = ExperimentConfig::from_toml_str("[perf]\ncomm = \"delta\"").unwrap();
+        assert_eq!(cfg.comm, Some(CommMode::Delta));
+        // Default: inherit the process-wide setting.
+        assert_eq!(ExperimentConfig::default().comm, None);
+        assert!(
+            ExperimentConfig::from_toml_str("[perf]\ncomm = \"telepathy\"").is_err(),
+            "unknown comm modes must be rejected"
         );
     }
 

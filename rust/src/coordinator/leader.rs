@@ -1,15 +1,32 @@
 //! Leader: owns a persistent worker pool, sequences red-black Schwarz
 //! phases, collects metrics, checks convergence.
+//!
+//! Two scheduler-level properties hold regardless of knob settings (see
+//! `rust/tests/comms.rs` for the property suite):
+//!
+//! * **Core-bounded pool** — `W = min(p, cores)` worker threads host the
+//!   `p` blocks under a fixed `block % W` placement (per-block solver
+//!   state is thread-bound), and results are bitwise-identical at any W
+//!   because per-block arithmetic is untouched and write-back runs in
+//!   deterministic phase-member order, never arrival order.
+//! * **Halo-restricted delta exchange** — under
+//!   [`crate::util::comm::CommMode`] `Restricted`/`Delta` the leader
+//!   ships each block only its recorded read-set values (then only the
+//!   changed subset, tracked by [`ChangeTracker`] off the write-back
+//!   touched-set), and skips the dispatch entirely for a pure-solver
+//!   block none of whose read columns changed. All modes are bitwise
+//!   identical on `x` and `iters`.
 
-use super::messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
+use super::messages::{read_columns, EpochSetup, SolverBackend, ToLeader, ToWorker};
 use super::worker::{worker_main, WorkerInit};
 use super::RunConfig;
 use crate::cls::LocalBlock;
-use crate::ddkf::schwarz::{overlap_reg, rel_update, write_back};
+use crate::ddkf::schwarz::{overlap_reg, rel_update, write_back_tracked, ChangeTracker};
 use crate::ddkf::{ConvergenceCheck, OverlapAccumulator, SchwarzOptions, Verdict};
 use crate::decomp::{blocks_of, phases_of, BlockEpoch, Geometry};
 use crate::linalg::batch::{pad_waste, plan_batches, BlockBatch, ShapeClass};
 use crate::util::batch::BatchMode;
+use crate::util::comm::CommMode;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -75,12 +92,14 @@ impl SolveCounters {
 
 /// Leader-side cache entry for one block: the write-back geometry (with
 /// the right-hand side kept, so `RefreshB` payloads can be computed
-/// incrementally), the epoch it was extracted under, and the last local
-/// solution (the warm-start seed).
+/// incrementally), the epoch it was extracted under, the last local
+/// solution (the warm-start seed / skip replay), and the block's read
+/// columns — the restricted/delta wire order shared with the worker.
 struct CachedBlock {
     geom: LocalBlock,
     epoch: BlockEpoch,
     x_loc: Option<Vec<f64>>,
+    read_set: Vec<usize>,
 }
 
 /// Metrics + solution of a parallel run.
@@ -97,13 +116,14 @@ pub struct ParallelOutcome {
     pub t_total: Duration,
     /// Max per-worker assembly time (factorization is one-off).
     pub t_assemble_max: Duration,
-    /// Total per-worker solve time (load-balance diagnostics).
+    /// Total solve time per pool worker (length W, not p — the
+    /// load-balance diagnostic for the core-bounded scheduler).
     pub worker_busy: Vec<Duration>,
     /// Simulated-parallel critical path: max assemble time + Σ over phases
-    /// of the slowest worker in that phase. On a 1-core testbed (where
-    /// workers time-share) this is the faithful estimate of the wall-clock
-    /// a p-processor run would achieve — the substitution DESIGN.md
-    /// documents for the paper's 64-core cluster.
+    /// of the slowest *block* in that phase. Timing attribution stays
+    /// per-block even though W < p blocks time-share worker threads, so
+    /// this remains the faithful estimate of a p-processor run — the
+    /// substitution DESIGN.md documents for the paper's 64-core cluster.
     pub t_critical: Duration,
     /// Synchronization idle time on the simulated-parallel clock: Σ over
     /// phases of (slowest worker − phase mean). This is the part of
@@ -118,6 +138,19 @@ pub struct ParallelOutcome {
     /// Aggregate pad-waste fraction of the shape groups that actually
     /// batched (0 when batching is off or no group formed).
     pub pad_waste: f64,
+    /// Modeled iterate-exchange traffic of this solve: 8 bytes per f64
+    /// value and 4 per u32 delta index actually shipped leader→worker,
+    /// plus 8 per f64 of every solution reply. Setup/RefreshB payloads
+    /// are epoch traffic, not per-sweep traffic, and are not counted.
+    pub comm_bytes: u64,
+    /// What the dense `CommMode::Full` broadcast would have shipped for
+    /// the same solve schedule, minus `comm_bytes` — the restricted/delta
+    /// savings, including dispatches skipped outright.
+    pub comm_bytes_saved: u64,
+    /// Solve dispatches skipped because no read column of a pure-solver
+    /// block changed since its last snapshot (the leader replays the
+    /// cached local solution bitwise instead).
+    pub solves_skipped: usize,
 }
 
 impl ParallelOutcome {
@@ -137,25 +170,41 @@ impl ParallelOutcome {
     }
 }
 
-/// A persistent pool of worker threads. Re-usable across DyDD epochs /
-/// assimilation cycles: Pjrt workers keep their compiled executables.
+/// A persistent pool of `W ≤ p` worker threads hosting `p` blocks.
+/// Re-usable across DyDD epochs / assimilation cycles: Pjrt workers keep
+/// their compiled executables, CG workers their warm starts.
 pub struct WorkerPool {
+    /// One channel per pool worker (length W).
     to_workers: Vec<mpsc::Sender<ToWorker>>,
     from_workers: mpsc::Receiver<ToLeader>,
     /// One slot per worker; `None` once the thread was joined (a dead
     /// worker reaped mid-run by [`WorkerPool::reap_dead_workers`]).
     handles: Vec<Option<JoinHandle<()>>>,
     backend: SolverBackend,
+    /// Number of blocks (subdomains) this pool serves.
+    p: usize,
     /// Per-block cache the incremental protocol consults (all backends).
     cached: Vec<Option<CachedBlock>>,
 }
 
 impl WorkerPool {
+    /// Pool for `p` blocks with the core-bounded default width
+    /// `W = min(p, configured workers or available cores)` — see
+    /// [`crate::util::workers::resolve_workers`].
     pub fn new(p: usize, backend: SolverBackend, artifacts_dir: PathBuf) -> Self {
+        let w = crate::util::workers::resolve_workers(p);
+        Self::with_workers(p, w, backend, artifacts_dir)
+    }
+
+    /// Pool for `p` blocks with an explicit width `W` (clamped to
+    /// `[1, p]`) — tests pin placement with this; everything else should
+    /// go through [`WorkerPool::new`].
+    pub fn with_workers(p: usize, w: usize, backend: SolverBackend, artifacts_dir: PathBuf) -> Self {
+        let w = w.clamp(1, p.max(1));
         let (to_leader, from_workers) = mpsc::channel::<ToLeader>();
-        let mut to_workers = Vec::with_capacity(p);
-        let mut handles = Vec::with_capacity(p);
-        for id in 0..p {
+        let mut to_workers = Vec::with_capacity(w);
+        let mut handles = Vec::with_capacity(w);
+        for id in 0..w {
             let (tx, rx) = mpsc::channel::<ToWorker>();
             to_workers.push(tx);
             let leader_tx = to_leader.clone();
@@ -164,11 +213,22 @@ impl WorkerPool {
             handles.push(Some(std::thread::spawn(move || worker_main(init, rx, leader_tx))));
         }
         let cached = (0..p).map(|_| None).collect();
-        WorkerPool { to_workers, from_workers, handles, backend, cached }
+        WorkerPool { to_workers, from_workers, handles, backend, p, cached }
     }
 
+    /// Number of blocks (subdomains) this pool serves.
     pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Number of pool worker threads (W).
+    pub fn workers(&self) -> usize {
         self.to_workers.len()
+    }
+
+    /// The fixed worker hosting block `i`.
+    fn worker_of(&self, i: usize) -> usize {
+        i % self.to_workers.len()
     }
 
     pub fn backend(&self) -> SolverBackend {
@@ -202,7 +262,7 @@ impl WorkerPool {
 
     /// `recv()` with worker-death diagnosis. The shared `from_workers`
     /// channel only disconnects when *every* worker sender is gone; one
-    /// panicked worker among p > 1 used to leave the leader blocked
+    /// panicked worker among W > 1 used to leave the leader blocked
     /// forever on a message that can never arrive. Poll with a short
     /// timeout and, when the queue is empty, check the thread handles —
     /// already-queued messages still drain first, so nothing a worker
@@ -225,14 +285,16 @@ impl WorkerPool {
         }
     }
 
-    /// `send` with worker-death diagnosis: a send only fails when the
-    /// worker's receiver is gone, i.e. the thread is dead.
+    /// `send` to the worker hosting block `i`, with worker-death
+    /// diagnosis: a send only fails when the worker's receiver is gone,
+    /// i.e. the thread is dead.
     fn send_diagnosed(&mut self, i: usize, msg: ToWorker) -> anyhow::Result<()> {
-        if self.to_workers[i].send(msg).is_ok() {
+        let w = self.worker_of(i);
+        if self.to_workers[w].send(msg).is_ok() {
             return Ok(());
         }
-        let report = self.reap_dead_workers().unwrap_or_else(|| format!("worker {i} hung up"));
-        anyhow::bail!("{report} (leader was dispatching to worker {i})");
+        let report = self.reap_dead_workers().unwrap_or_else(|| format!("worker {w} hung up"));
+        anyhow::bail!("{report} (leader was dispatching block {i} to worker {w})");
     }
 
     /// The cached write-back geometry of block `i` (right-hand side kept),
@@ -306,7 +368,7 @@ impl WorkerPool {
         let p = tasks.len();
         anyhow::ensure!(
             p == self.p(),
-            "partition has {p} subdomains but pool has {} workers",
+            "partition has {p} subdomains but pool serves {} blocks",
             self.p()
         );
         anyhow::ensure!(epochs.len() == p, "{} epochs for {p} blocks", epochs.len());
@@ -333,6 +395,7 @@ impl WorkerPool {
                 BlockTask::Extract(blk) => {
                     counters.extracted += 1;
                     let (reg, reg_cols) = overlap_reg(&blk, opts);
+                    let read_set = read_columns(&blk, &reg_cols);
                     // Leader-side copy for write-back and RefreshB: matrix
                     // payloads dropped, the right-hand side kept so later
                     // epochs can refresh it in place.
@@ -340,10 +403,15 @@ impl WorkerPool {
                     geom.a = crate::linalg::CsrMatrix::zeros(0, 0);
                     geom.d.clear();
                     geom.halo.clear();
-                    self.cached[i] =
-                        Some(CachedBlock { geom, epoch: epochs[i], x_loc: None });
+                    self.cached[i] = Some(CachedBlock {
+                        geom,
+                        epoch: epochs[i],
+                        x_loc: None,
+                        read_set: read_set.clone(),
+                    });
                     let shape = ShapeClass::of(blk.n_loc(), blk.m_loc());
-                    let setup = EpochSetup { blk, reg, reg_cols, mu: opts.mu, shape };
+                    let setup =
+                        EpochSetup { block: i, blk, reg, reg_cols, mu: opts.mu, read_set, shape };
                     self.send_diagnosed(i, ToWorker::Setup(Box::new(setup)))?;
                 }
                 BlockTask::RefreshB(b) => {
@@ -364,7 +432,7 @@ impl WorkerPool {
                         cb.geom.b.len()
                     );
                     cb.geom.b.clone_from(&b);
-                    self.send_diagnosed(i, ToWorker::RefreshB { b })?;
+                    self.send_diagnosed(i, ToWorker::RefreshB { block: i, b })?;
                 }
                 BlockTask::Retain => {
                     counters.retained += 1;
@@ -377,7 +445,7 @@ impl WorkerPool {
                         cb.epoch,
                         epochs[i]
                     );
-                    self.send_diagnosed(i, ToWorker::Retain)?;
+                    self.send_diagnosed(i, ToWorker::Retain { block: i })?;
                 }
             }
         }
@@ -454,11 +522,29 @@ impl WorkerPool {
                 }
             }
         }
+        let comm = crate::util::comm::comm_mode();
+        // Solve skipping replays a cached local solution; that is only
+        // bitwise-safe for pure (stateless) local solvers — a CG warm
+        // start must observe every solve to keep its trajectory on the
+        // full-broadcast schedule.
+        let skip_eligible = comm == CommMode::Delta && self.backend.pure_solve();
+        let mut tracker = ChangeTracker::new(n);
+        // Per-block delta bookkeeping: the stamp each block's snapshot
+        // was taken at (None until its first dispatch this call — the
+        // first send is always the full read set, so cross-call snapshot
+        // staleness cannot leak in) and whether it has solved at all this
+        // call (skip replay needs a solution for *this* epoch's data).
+        let mut sent_stamp: Vec<Option<u64>> = vec![None; p];
+        let mut solved_once = vec![false; p];
         let mut acc = OverlapAccumulator::new(n);
         let mut check = ConvergenceCheck::new(opts.tol, n);
-        let mut worker_busy = vec![Duration::ZERO; p];
+        let w = self.workers();
+        let mut worker_busy = vec![Duration::ZERO; w];
         let mut t_critical = t_assemble_max;
         let mut t_imbalance = Duration::ZERO;
+        let mut comm_bytes: u64 = 0;
+        let mut comm_dense: u64 = 0;
+        let mut solves_skipped = 0usize;
         let mut converged = false;
         let mut stalled = false;
         let mut iters = 0;
@@ -470,24 +556,84 @@ impl WorkerPool {
                 if phase.is_empty() {
                     continue;
                 }
+                // lint:phase-hot-start per-phase dispatch: ship read-set
+                // values / deltas, never a fresh global snapshot — the
+                // whole-iterate broadcast belongs to CommMode::Full only.
+                //
                 // One snapshot per phase regardless of grouping: members
                 // of one phase never couple, so group-wise dispatch solves
                 // against identical data — batched ≡ per-block bitwise.
-                let snapshot = Arc::new(x.clone());
+                let snapshot = if comm == CommMode::Full {
+                    // lint:allow(no-global-broadcast-in-phase-loop) CommMode::Full is the dense baseline the A11 ablation measures against
+                    Some(Arc::new(x.clone()))
+                } else {
+                    None
+                };
                 let mut phase_crit = Duration::ZERO;
                 let mut phase_sum = Duration::ZERO;
                 for group in &groups_of[pi] {
+                    let mut outstanding = 0usize;
                     for &i in group {
-                        self.send_diagnosed(i, ToWorker::Solve { x: snapshot.clone() })?;
+                        let cb = self.cached[i].as_ref().expect("phase blocks are cached");
+                        let n_loc = cb.geom.cols.len();
+                        // What the dense baseline would ship for this
+                        // dispatch: the full iterate out, x_loc back.
+                        comm_dense += 8 * (n as u64 + n_loc as u64);
+                        let msg = match comm {
+                            CommMode::Full => {
+                                comm_bytes += 8 * n as u64;
+                                let x = snapshot.as_ref().expect("snapshot built for Full").clone();
+                                ToWorker::Solve { block: i, x }
+                            }
+                            CommMode::Restricted => {
+                                let vals: Vec<f64> =
+                                    cb.read_set.iter().map(|&gc| x[gc]).collect();
+                                comm_bytes += 8 * vals.len() as u64;
+                                ToWorker::SolveRestricted { block: i, vals }
+                            }
+                            CommMode::Delta => match sent_stamp[i] {
+                                None => {
+                                    let vals: Vec<f64> =
+                                        cb.read_set.iter().map(|&gc| x[gc]).collect();
+                                    comm_bytes += 8 * vals.len() as u64;
+                                    sent_stamp[i] = Some(tracker.stamp());
+                                    ToWorker::SolveRestricted { block: i, vals }
+                                }
+                                Some(since) => {
+                                    let mut idx: Vec<u32> = Vec::new();
+                                    let mut vals: Vec<f64> = Vec::new();
+                                    for (k, &gc) in cb.read_set.iter().enumerate() {
+                                        if tracker.changed_since(gc, since) {
+                                            idx.push(k as u32);
+                                            vals.push(x[gc]);
+                                        }
+                                    }
+                                    sent_stamp[i] = Some(tracker.stamp());
+                                    if idx.is_empty() && solved_once[i] && skip_eligible {
+                                        // Nothing this block reads moved:
+                                        // skip the dispatch, replay the
+                                        // cached solution at write-back.
+                                        solves_skipped += 1;
+                                        continue;
+                                    }
+                                    comm_bytes += (8 + 4) * idx.len() as u64;
+                                    ToWorker::SolveDelta { block: i, idx, vals }
+                                }
+                            },
+                        };
+                        self.send_diagnosed(i, msg)?;
+                        outstanding += 1;
                     }
                     let mut group_max = Duration::ZERO;
-                    for _ in group {
+                    for _ in 0..outstanding {
                         match self.recv_diagnosed("phase solutions")? {
-                            ToLeader::Solution { worker, x_loc, solve_time } => {
+                            ToLeader::Solution { worker, block, x_loc, solve_time } => {
                                 worker_busy[worker] += solve_time;
                                 group_max = group_max.max(solve_time);
                                 phase_sum += solve_time;
-                                phase_solutions[worker] = Some(x_loc);
+                                comm_bytes += 8 * x_loc.len() as u64;
+                                solved_once[block] = true;
+                                phase_solutions[block] = Some(x_loc);
                             }
                             ToLeader::Failed { worker, error } => {
                                 anyhow::bail!("worker {worker} failed: {error}")
@@ -501,24 +647,48 @@ impl WorkerPool {
                     // simulated p-processor clock.
                     phase_crit += group_max;
                 }
+                // lint:phase-hot-end
+                //
                 // Deterministic write-back in phase member order, not
                 // arrival order: overlap accumulation is a float sum, so
                 // its order is part of the bitwise contract across batch
-                // modes and worker schedules.
+                // modes, comm modes and worker schedules. The stamp
+                // generation advances first, so every change lands
+                // strictly after the dispatches above recorded their
+                // snapshots.
+                tracker.advance();
                 for &i in phase {
-                    let x_loc = phase_solutions[i].take().expect("every member reported");
                     let cb =
                         self.cached[i].as_mut().expect("solving block is always cached");
-                    write_back(&cb.geom, &x_loc, &mut x, &mut acc);
-                    // Keep the latest local solution as the next epoch's
-                    // warm-start seed.
-                    cb.x_loc = Some(x_loc);
+                    match phase_solutions[i].take() {
+                        Some(x_loc) => {
+                            write_back_tracked(&cb.geom, &x_loc, &mut x, &mut acc, &mut tracker);
+                            // Keep the latest local solution as the next
+                            // epoch's warm-start seed / skip replay.
+                            cb.x_loc = Some(x_loc);
+                        }
+                        None => {
+                            // Skipped dispatch: its inputs are unchanged
+                            // and the solver is pure, so the cached
+                            // solution *is* this solve's result — the
+                            // write-back applies identical values and the
+                            // iterate stays bitwise on the full-broadcast
+                            // trajectory.
+                            let x_loc = cb
+                                .x_loc
+                                .as_ref()
+                                .expect("skipped blocks solved earlier this call");
+                            write_back_tracked(&cb.geom, x_loc, &mut x, &mut acc, &mut tracker);
+                        }
+                    }
                 }
                 t_critical += phase_crit;
                 t_imbalance += phase_crit - phase_sum / phase.len() as u32;
             }
-            // End of sweep: average overlap contributions (eq. 28).
-            acc.finalize(&mut x);
+            // End of sweep: average overlap contributions (eq. 28). The
+            // tracked finalize stamps averaged overlap columns too, so
+            // the next sweep's deltas carry them.
+            acc.finalize_tracked(&mut x, &mut tracker);
             iters += 1;
             match check.push(rel_update(&x, &x_prev)) {
                 Verdict::Converged => {
@@ -546,6 +716,9 @@ impl WorkerPool {
             update_norms: check.into_norms(),
             batch_groups,
             pad_waste: pad_waste_frac,
+            comm_bytes,
+            comm_bytes_saved: comm_dense.saturating_sub(comm_bytes),
+            solves_skipped,
         };
         Ok((outcome, counters))
     }
@@ -779,6 +952,107 @@ mod tests {
     }
 
     #[test]
+    fn comm_modes_are_bitwise_identical_and_restricted_saves_bytes() {
+        use crate::util::comm::{test_mode, CommMode};
+        // Overlap + μ makes every read set strictly larger than the halo
+        // and the write-back order observable; the three wire formats must
+        // still produce the same bits, differing only in bytes shipped.
+        let guard = test_mode(CommMode::Full);
+        let prob = problem(96, 60, 33);
+        let part = Partition::from_bounds(96, vec![0, 10, 34, 58, 96]);
+        let opts = SchwarzOptions {
+            overlap: 2,
+            mu: 1e-6,
+            tol: 1e-12,
+            max_iters: 400,
+            order: crate::ddkf::SweepOrder::RedBlack,
+        };
+        let mut run = |mode: CommMode| {
+            guard.set(mode);
+            let mut pool = WorkerPool::new(4, SolverBackend::Native, "artifacts".into());
+            pool.solve_on(&g1(96, 4), &prob, &part, &opts).unwrap()
+        };
+        let full = run(CommMode::Full);
+        let restricted = run(CommMode::Restricted);
+        let delta = run(CommMode::Delta);
+        for (got, name) in [(&restricted, "restricted"), (&delta, "delta")] {
+            assert_eq!(got.iters, full.iters, "comm={name}");
+            for (a, b) in got.x.iter().zip(&full.x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "comm={name} differs from full");
+            }
+        }
+        // The dense baseline ships everything and saves nothing.
+        assert_eq!(full.comm_bytes_saved, 0);
+        assert_eq!(full.solves_skipped, 0);
+        // Read sets are far smaller than n here, so both sparse modes beat
+        // the broadcast; their saved-bytes ledger must account the gap.
+        assert!(restricted.comm_bytes < full.comm_bytes);
+        assert!(delta.comm_bytes < full.comm_bytes);
+        assert!(restricted.comm_bytes_saved > 0);
+        assert!(delta.comm_bytes_saved > 0);
+        assert_eq!(full.comm_bytes, restricted.comm_bytes + restricted.comm_bytes_saved);
+        drop(guard);
+    }
+
+    #[test]
+    fn delta_skips_unchanged_pure_solves() {
+        use crate::util::comm::{test_mode, CommMode};
+        // p = 1: no halo, no overlap → the read set is empty, so from the
+        // second sweep on the delta is empty and the (pure) solve is
+        // skipped outright; replaying the cached solution keeps the
+        // two-sweep convergence bitwise on the dense trajectory.
+        let guard = test_mode(CommMode::Full);
+        let prob = problem(48, 30, 34);
+        let part = Partition::uniform(48, 1);
+        let mut run = |mode: CommMode| {
+            guard.set(mode);
+            let mut pool = WorkerPool::new(1, SolverBackend::Native, "artifacts".into());
+            pool.solve_on(&g1(48, 1), &prob, &part, &SchwarzOptions::default()).unwrap()
+        };
+        let full = run(CommMode::Full);
+        let delta = run(CommMode::Delta);
+        assert!(full.converged && delta.converged);
+        assert_eq!(delta.iters, full.iters);
+        for (a, b) in delta.x.iter().zip(&full.x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(full.solves_skipped, 0);
+        assert!(delta.solves_skipped >= 1, "second sweep should skip the dispatch");
+        drop(guard);
+    }
+
+    #[test]
+    fn pool_width_is_bitwise_invariant() {
+        // The core-bounded scheduler contract: any W gives the same bits,
+        // because write-back order is phase-member order and per-block
+        // solver state is keyed by block, not by thread count.
+        let prob = problem(96, 60, 35);
+        let part = Partition::from_bounds(96, vec![0, 10, 34, 58, 96]);
+        let opts = SchwarzOptions {
+            overlap: 2,
+            mu: 1e-6,
+            tol: 1e-12,
+            max_iters: 400,
+            order: crate::ddkf::SweepOrder::RedBlack,
+        };
+        let mut run = |w: usize| {
+            let mut pool = WorkerPool::with_workers(4, w, SolverBackend::Native, "artifacts".into());
+            assert_eq!(pool.workers(), w);
+            assert_eq!(pool.p(), 4);
+            pool.solve_on(&g1(96, 4), &prob, &part, &opts).unwrap()
+        };
+        let serial = run(1);
+        for w in [2usize, 4] {
+            let out = run(w);
+            assert_eq!(out.iters, serial.iters, "W={w}");
+            assert_eq!(out.worker_busy.len(), w);
+            for (a, b) in out.x.iter().zip(&serial.x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "W={w} differs from W=1");
+            }
+        }
+    }
+
+    #[test]
     fn incremental_rejects_epoch_desync_and_uncached_blocks() {
         use crate::decomp::{phases_of, BlockEpoch};
         let geom = g1(32, 2);
@@ -838,8 +1112,9 @@ mod tests {
         // Worker 1 panics on its first Solve; worker 0 stays alive, so
         // the shared channel never disconnects. Without handle polling
         // the leader would block forever on a message that cannot come.
+        // Pinned W = 2 so the victim worker exists on any machine.
         let backend = SolverBackend::PanickingTest { victim: 1, in_assemble: false };
-        let mut pool = WorkerPool::new(2, backend, "artifacts".into());
+        let mut pool = WorkerPool::with_workers(2, 2, backend, "artifacts".into());
         let prob = problem(32, 20, 21);
         let part = Partition::uniform(32, 2);
         let err = pool
@@ -855,7 +1130,7 @@ mod tests {
         // Same hang in the assemble-acknowledgement loop: the leader
         // expects p Ready messages and the victim's never arrives.
         let backend = SolverBackend::PanickingTest { victim: 0, in_assemble: true };
-        let mut pool = WorkerPool::new(2, backend, "artifacts".into());
+        let mut pool = WorkerPool::with_workers(2, 2, backend, "artifacts".into());
         let prob = problem(32, 20, 22);
         let part = Partition::uniform(32, 2);
         let err = pool
@@ -868,10 +1143,14 @@ mod tests {
 
     #[test]
     fn worker_busy_reported_for_all() {
+        // Pinned W = 2 hosting 4 blocks: busy time is per pool worker,
+        // and both workers solve every sweep (blocks 0,2 vs 1,3).
         let prob = problem(64, 48, 5);
         let part = Partition::uniform(64, 4);
-        let out = run_parallel(&g1(64, 4), &prob, &part, &RunConfig::default()).unwrap();
-        assert_eq!(out.worker_busy.len(), 4);
+        let mut pool =
+            WorkerPool::with_workers(4, 2, SolverBackend::Native, "artifacts".into());
+        let out = pool.solve_on(&g1(64, 4), &prob, &part, &SchwarzOptions::default()).unwrap();
+        assert_eq!(out.worker_busy.len(), 2);
         assert!(out.worker_busy.iter().all(|d| *d > Duration::ZERO));
         assert!((0.0..=1.0).contains(&out.overhead_fraction()));
     }
@@ -896,6 +1175,9 @@ mod tests {
             update_norms: vec![],
             batch_groups: 2,
             pad_waste: 0.0,
+            comm_bytes: 0,
+            comm_bytes_saved: 0,
+            solves_skipped: 0,
         };
         assert!((out.overhead_fraction() - 0.25).abs() < 1e-12);
         let zero = ParallelOutcome { t_critical: Duration::ZERO, ..out };

@@ -1,4 +1,13 @@
 //! Leader <-> worker message types.
+//!
+//! Since the core-bounded scheduler a worker *hosts* several blocks
+//! (`block % W` placement), so every per-block message carries the block
+//! id it concerns. Iterate values travel in one of three shapes (see
+//! [`crate::util::comm`]): the legacy dense snapshot (`Solve`), the
+//! block's recorded column read set (`SolveRestricted`), or a delta
+//! against the worker's last snapshot (`SolveDelta`). All three produce
+//! bitwise-identical local solves — they differ only in which entries are
+//! shipped.
 
 use crate::cls::LocalBlock;
 use crate::linalg::batch::ShapeClass;
@@ -42,16 +51,53 @@ impl SolverBackend {
             _ => return None,
         })
     }
+
+    /// Whether a local solve under this backend is a pure function of
+    /// `(block, factor, rhs)` — no state carried between solves. Pure
+    /// backends may have an unchanged-input solve *skipped* (the leader
+    /// replays the cached solution bitwise); stateful ones (CG warm
+    /// starts evolve a per-block trajectory) must run every solve so the
+    /// trajectory matches the full-broadcast schedule.
+    pub fn pure_solve(&self) -> bool {
+        match self {
+            SolverBackend::Native | SolverBackend::Kf => true,
+            SolverBackend::Pjrt | SolverBackend::Cg | SolverBackend::CgIc0 => false,
+            #[cfg(test)]
+            SolverBackend::PanickingTest { .. } => false,
+        }
+    }
+}
+
+/// The global columns a block's local solve reads from the iterate:
+/// halo coupling columns (consumed by `b_eff_into`) merged with the
+/// overlap-regularization columns (consumed by the μ·x_other rhs).
+/// Sorted, deduplicated — this fixed order *is* the wire format of
+/// [`ToWorker::SolveRestricted`] / [`ToWorker::SolveDelta`], so leader
+/// and worker derive positions from the same vector.
+pub fn read_columns(blk: &LocalBlock, reg_cols: &[usize]) -> Vec<usize> {
+    let mut set = blk.halo_cols();
+    for &lc in reg_cols {
+        set.push(blk.cols[lc]);
+    }
+    set.sort_unstable();
+    set.dedup();
+    set
 }
 
 /// Per-epoch subdomain assignment (a new DyDD epoch re-sends this).
 pub struct EpochSetup {
+    /// Which of the leader's blocks this setup assigns (a pooled worker
+    /// hosts every block with `block % W == worker`).
+    pub block: usize,
     pub blk: LocalBlock,
     /// Diagonal regularization (μ on overlap columns, 0 elsewhere).
     pub reg: Vec<f64>,
     /// Local column indices carrying μ (for reg_rhs = μ·x_other).
     pub reg_cols: Vec<usize>,
     pub mu: f64,
+    /// The block's global read columns — the restricted/delta wire order.
+    /// Leader and worker each keep a copy so index payloads stay aligned.
+    pub read_set: Vec<usize>,
     /// Padded shape signature the leader grouped this block under —
     /// workers pre-warm their workspace arena to it so the first Solve of
     /// the epoch already stages its rhs from the pool.
@@ -62,26 +108,34 @@ pub struct EpochSetup {
 pub enum ToWorker {
     /// (Re-)assign a subdomain: extract factor, then serve solves.
     Setup(Box<EpochSetup>),
-    /// Replace the standing block's right-hand side only — the background
+    /// Replace a standing block's right-hand side only — the background
     /// changed but no observation row did. The local factor depends only
     /// on (A, d, reg), never on b, so it is kept verbatim (no
     /// re-factorization).
-    RefreshB { b: Vec<f64> },
-    /// Keep the standing block untouched (nothing changed for it since the
+    RefreshB { block: usize, b: Vec<f64> },
+    /// Keep a standing block untouched (nothing changed for it since the
     /// last epoch) — a pure cache hit.
-    Retain,
-    /// Solve the local problem against this global-iterate snapshot.
-    Solve { x: Arc<Vec<f64>> },
+    Retain { block: usize },
+    /// Solve a block against this dense global-iterate snapshot
+    /// (`CommMode::Full` — the measurable O(n)-per-dispatch baseline).
+    Solve { block: usize, x: Arc<Vec<f64>> },
+    /// Solve a block against its full read set: `vals[k]` is the iterate
+    /// value of `read_set[k]`. Replaces the worker's snapshot wholesale.
+    SolveRestricted { block: usize, vals: Vec<f64> },
+    /// Solve a block against a delta: for each k, the iterate value of
+    /// `read_set[idx[k]]` became `vals[k]`; unnamed read-set entries are
+    /// unchanged since the worker's previous snapshot.
+    SolveDelta { block: usize, idx: Vec<u32>, vals: Vec<f64> },
     /// End of run.
     Shutdown,
 }
 
 /// Worker -> leader.
 pub enum ToLeader {
-    /// Assembly (factorization) finished.
-    Ready { worker: usize, assemble_time: Duration },
+    /// Assembly (factorization) of one block finished.
+    Ready { worker: usize, block: usize, assemble_time: Duration },
     /// One local solve finished.
-    Solution { worker: usize, x_loc: Vec<f64>, solve_time: Duration },
+    Solution { worker: usize, block: usize, x_loc: Vec<f64>, solve_time: Duration },
     /// Unrecoverable worker error.
     Failed { worker: usize, error: String },
 }

@@ -32,6 +32,12 @@ use std::collections::{HashSet, VecDeque};
 pub struct EpochPlan {
     pub tasks: Vec<Req>,
     pub phases: Vec<Vec<usize>>,
+    /// Dispatch solves in the halo-restricted delta shape: a block's first
+    /// solve of the epoch ships the full read set (`SolveRestricted`),
+    /// every later one a patch (`SolveDelta`) — the leader's
+    /// `CommMode::Delta` schedule. `false` models the dense `Solve`
+    /// broadcast.
+    pub delta: bool,
 }
 
 /// Which message the victim worker dies on (models a panicking solver:
@@ -42,6 +48,9 @@ pub enum DeathPoint {
     Assemble,
     /// Dies handling `Solve` — mid-phase, before its `Solution`.
     Solve,
+    /// Dies handling a `SolveDelta` — holding an un-acknowledged delta
+    /// (the leader has already advanced its change tracker for it).
+    Delta,
 }
 
 /// A checkable protocol run.
@@ -83,6 +92,11 @@ struct Sim {
     outbox: Vec<VecDeque<Rep>>,
     cache: LeaderCache,
     leader: Leader,
+    /// Leader-side delta bookkeeping (`sent_stamp` in the real leader):
+    /// whether each block's full read set has been shipped this epoch —
+    /// reset at every epoch dispatch, exactly as the change tracker is
+    /// per solve call.
+    snap_sent: Vec<bool>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -112,6 +126,7 @@ impl Sim {
             outbox: vec![VecDeque::new(); sc.p],
             cache: LeaderCache::new(sc.p),
             leader: Leader::Dispatch { epoch: 0 },
+            snap_sent: vec![false; sc.p],
         };
         sim.advance_leader(sc);
         sim
@@ -140,6 +155,9 @@ impl Sim {
             match self.leader.clone() {
                 Leader::Dispatch { epoch } => {
                     let plan = &sc.epochs[epoch];
+                    // A new epoch starts a fresh change tracker: every
+                    // block's next solve must re-ship its full read set.
+                    self.snap_sent = vec![false; self.workers.len()];
                     for (w, &task) in plan.tasks.iter().enumerate() {
                         if self.cache.admit(w, task).is_err() || !self.alive[w] {
                             // Epoch desync or send to a dead worker: the
@@ -168,7 +186,15 @@ impl Sim {
                             self.end(Verdict::Diagnosed);
                             return;
                         }
-                        self.inbox[w].push_back(Req::Solve);
+                        let req = if !plan.delta {
+                            Req::Solve
+                        } else if !self.snap_sent[w] {
+                            self.snap_sent[w] = true;
+                            Req::SolveRestricted
+                        } else {
+                            Req::SolveDelta
+                        };
+                        self.inbox[w].push_back(req);
                     }
                     let pending = plan.phases[phase].len();
                     self.leader = Leader::AwaitSolutions { epoch, phase, pending };
@@ -215,7 +241,10 @@ impl Sim {
                     Some((victim, DeathPoint::Assemble)) => {
                         victim == w && matches!(req, Req::Setup { .. })
                     }
-                    Some((victim, DeathPoint::Solve)) => victim == w && req == Req::Solve,
+                    Some((victim, DeathPoint::Solve)) => {
+                        victim == w && matches!(req, Req::Solve | Req::SolveRestricted)
+                    }
+                    Some((victim, DeathPoint::Delta)) => victim == w && req == Req::SolveDelta,
                     None => false,
                 };
                 if dies {
@@ -332,7 +361,7 @@ mod tests {
         for phases in [vec![vec![0], vec![1]], vec![vec![0, 1]]] {
             let sc = Scenario {
                 p: 2,
-                epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases }],
+                epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases, delta: false }],
                 death: None,
             };
             let stats = check(&sc, Verdict::Completed);
@@ -348,10 +377,11 @@ mod tests {
         let sc = Scenario {
             p: 2,
             epochs: vec![
-                EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]] },
+                EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]], delta: false },
                 EpochPlan {
                     tasks: vec![Req::Retain { epoch: 0 }, Req::RefreshB { epoch: 0 }],
                     phases: vec![vec![0], vec![1]],
+                    delta: false,
                 },
             ],
             death: None,
@@ -367,10 +397,11 @@ mod tests {
         let sc = Scenario {
             p: 2,
             epochs: vec![
-                EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0, 1]] },
+                EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0, 1]], delta: false },
                 EpochPlan {
                     tasks: vec![Req::Retain { epoch: 1 }, Req::Retain { epoch: 0 }],
                     phases: vec![vec![0, 1]],
+                    delta: false,
                 },
             ],
             death: None,
@@ -382,7 +413,7 @@ mod tests {
     fn worker_death_at_assemble_is_always_diagnosed() {
         let sc = Scenario {
             p: 2,
-            epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]] }],
+            epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]], delta: false }],
             death: Some((1, DeathPoint::Assemble)),
         };
         let stats = check(&sc, Verdict::Diagnosed);
@@ -397,11 +428,94 @@ mod tests {
                 epochs: vec![EpochPlan {
                     tasks: setup_tasks(2, 0),
                     phases: vec![vec![0], vec![1]],
+                    delta: false,
                 }],
                 death: Some((victim, DeathPoint::Solve)),
             };
             check(&sc, Verdict::Diagnosed);
         }
+    }
+
+    #[test]
+    fn delta_dispatch_completes_in_every_interleaving() {
+        // Two sweeps over two phases in the delta shape: each block's
+        // first solve ships the full read set, the second a patch. The
+        // replica worker rejects a premature delta, so every-schedule
+        // completion also proves the restricted-before-delta ordering.
+        let sc = Scenario {
+            p: 2,
+            epochs: vec![EpochPlan {
+                tasks: setup_tasks(2, 0),
+                phases: vec![vec![0], vec![1], vec![0], vec![1]],
+                delta: true,
+            }],
+            death: None,
+        };
+        let stats = check(&sc, Verdict::Completed);
+        assert!(stats.terminals >= 1 && stats.states > 10, "{stats:?}");
+    }
+
+    #[test]
+    fn epoch_reuse_resends_the_full_read_set_before_deltas() {
+        // A Retain/RefreshB epoch starts a fresh change tracker: its first
+        // solve must be SolveRestricted again. If the leader carried
+        // `snap_sent` across epochs it would open with a delta and the
+        // replica worker would fail every schedule.
+        let sc = Scenario {
+            p: 2,
+            epochs: vec![
+                EpochPlan {
+                    tasks: setup_tasks(2, 0),
+                    phases: vec![vec![0], vec![1], vec![0], vec![1]],
+                    delta: true,
+                },
+                EpochPlan {
+                    tasks: vec![Req::Retain { epoch: 0 }, Req::RefreshB { epoch: 0 }],
+                    phases: vec![vec![0], vec![1], vec![0], vec![1]],
+                    delta: true,
+                },
+            ],
+            death: None,
+        };
+        check(&sc, Verdict::Completed);
+    }
+
+    #[test]
+    fn worker_death_holding_an_unacked_delta_is_diagnosed() {
+        // The victim consumes a SolveDelta — a patch the leader's change
+        // tracker has already advanced past — and unwinds without
+        // replying. Every interleaving must end Diagnosed, never blocked
+        // on the solution that cannot arrive.
+        for victim in 0..2 {
+            let sc = Scenario {
+                p: 2,
+                epochs: vec![EpochPlan {
+                    tasks: setup_tasks(2, 0),
+                    phases: vec![vec![0], vec![1], vec![0], vec![1]],
+                    delta: true,
+                }],
+                death: Some((victim, DeathPoint::Delta)),
+            };
+            let stats = check(&sc, Verdict::Diagnosed);
+            assert!(stats.terminals >= 1);
+        }
+    }
+
+    #[test]
+    fn unacked_delta_death_deadlocks_without_detection() {
+        // Same scenario under the pre-fix leader (blocking recv, no handle
+        // polling): the un-acked delta is a lost wakeup.
+        let sc = Scenario {
+            p: 2,
+            epochs: vec![EpochPlan {
+                tasks: setup_tasks(2, 0),
+                phases: vec![vec![0], vec![1], vec![0], vec![1]],
+                delta: true,
+            }],
+            death: Some((1, DeathPoint::Delta)),
+        };
+        let err = explore(&sc, Verdict::Diagnosed, false).expect_err("must deadlock");
+        assert!(err.contains("deadlock"), "{err}");
     }
 
     #[test]
@@ -412,7 +526,7 @@ mod tests {
         // deadlock — the regression the handle-polling fix closes.
         let sc = Scenario {
             p: 2,
-            epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]] }],
+            epochs: vec![EpochPlan { tasks: setup_tasks(2, 0), phases: vec![vec![0], vec![1]], delta: false }],
             death: Some((1, DeathPoint::Solve)),
         };
         let err = explore(&sc, Verdict::Diagnosed, false).expect_err("must deadlock");

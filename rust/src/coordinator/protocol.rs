@@ -26,15 +26,19 @@
 /// protocol actually depends on. Mirrors [`super::ToWorker`]:
 /// `Setup(EpochSetup)` carries a freshly extracted block (here: the epoch
 /// it was extracted under), `RefreshB`/`Retain` reuse the standing block
-/// (here: the epoch the leader *believes* is standing), `Solve` ships an
-/// iterate snapshot (here: nothing — the snapshot does not affect control
-/// flow).
+/// (here: the epoch the leader *believes* is standing), `Solve` ships a
+/// dense iterate snapshot and `SolveRestricted` a read-set snapshot (here:
+/// nothing — the values do not affect control flow), and `SolveDelta`
+/// patches the worker's *previous* snapshot — the one dispatch whose
+/// correctness depends on what was sent before it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Req {
     Setup { epoch: u32 },
     RefreshB { epoch: u32 },
     Retain { epoch: u32 },
     Solve,
+    SolveRestricted,
+    SolveDelta,
     Shutdown,
 }
 
@@ -55,6 +59,12 @@ pub struct WorkerModel {
     pub id: usize,
     /// Epoch of the armed block (`None` until the first `Setup`).
     pub epoch: Option<u32>,
+    /// A read-set snapshot is standing: a `SolveRestricted` arrived since
+    /// the last epoch dispatch, so a `SolveDelta` has something to patch.
+    /// The real worker would *accept* a premature delta and silently solve
+    /// against a zeroed snapshot — the replica rejects it instead, so the
+    /// checkers prove the leader never sends one.
+    pub snapshot: bool,
     /// The loop was left: `Shutdown` received, or a protocol error was
     /// reported via `Failed` (the real worker `return`s after `fail()`).
     pub stopped: bool,
@@ -62,7 +72,7 @@ pub struct WorkerModel {
 
 impl WorkerModel {
     pub fn new(id: usize) -> Self {
-        WorkerModel { id, epoch: None, stopped: false }
+        WorkerModel { id, epoch: None, snapshot: false, stopped: false }
     }
 
     /// Handle one message; returns the reply the worker sends, if any.
@@ -72,17 +82,24 @@ impl WorkerModel {
     /// keep the standing factor and acknowledge (the worker cannot check
     /// the epoch — that is the leader cache's job, see [`LeaderCache`]);
     /// either before any `Setup` is a protocol error (`Failed`, stop);
-    /// `Solve` answers with a `Solution` tagged with the armed epoch;
-    /// `Shutdown` leaves the loop silently.
+    /// `Solve`/`SolveRestricted` answer with a `Solution` tagged with the
+    /// armed epoch (`SolveRestricted` additionally establishes the
+    /// snapshot a later `SolveDelta` patches); `SolveDelta` without a
+    /// standing snapshot is a protocol error — every epoch dispatch
+    /// (`Setup`/`RefreshB`/`Retain`) invalidates it, because the leader's
+    /// change tracker is per solve call and must re-send the full read set
+    /// first; `Shutdown` leaves the loop silently.
     pub fn step(&mut self, req: Req) -> Option<Rep> {
         debug_assert!(!self.stopped, "message delivered to a stopped worker");
         match req {
             Req::Setup { epoch } => {
                 self.epoch = Some(epoch);
+                self.snapshot = false;
                 Some(Rep::Ready { worker: self.id })
             }
             Req::RefreshB { .. } | Req::Retain { .. } => {
                 if self.epoch.is_some() {
+                    self.snapshot = false;
                     Some(Rep::Ready { worker: self.id })
                 } else {
                     self.stopped = true;
@@ -92,6 +109,25 @@ impl WorkerModel {
             Req::Solve => match self.epoch {
                 Some(e) => Some(Rep::Solution { worker: self.id, epoch: e }),
                 None => {
+                    self.stopped = true;
+                    Some(Rep::Failed { worker: self.id })
+                }
+            },
+            Req::SolveRestricted => match self.epoch {
+                Some(e) => {
+                    self.snapshot = true;
+                    Some(Rep::Solution { worker: self.id, epoch: e })
+                }
+                None => {
+                    self.stopped = true;
+                    Some(Rep::Failed { worker: self.id })
+                }
+            },
+            Req::SolveDelta => match self.epoch {
+                Some(e) if self.snapshot => {
+                    Some(Rep::Solution { worker: self.id, epoch: e })
+                }
+                _ => {
                     self.stopped = true;
                     Some(Rep::Failed { worker: self.id })
                 }
@@ -133,7 +169,7 @@ impl LeaderCache {
                 }
                 Some(_) => Ok(()),
             },
-            Req::Solve | Req::Shutdown => Ok(()),
+            Req::Solve | Req::SolveRestricted | Req::SolveDelta | Req::Shutdown => Ok(()),
         }
     }
 }
@@ -154,11 +190,35 @@ mod tests {
 
     #[test]
     fn worker_rejects_messages_before_setup() {
-        for req in [Req::RefreshB { epoch: 0 }, Req::Retain { epoch: 0 }, Req::Solve] {
+        for req in [
+            Req::RefreshB { epoch: 0 },
+            Req::Retain { epoch: 0 },
+            Req::Solve,
+            Req::SolveRestricted,
+            Req::SolveDelta,
+        ] {
             let mut w = WorkerModel::new(0);
             assert_eq!(w.step(req), Some(Rep::Failed { worker: 0 }));
             assert!(w.stopped);
         }
+    }
+
+    #[test]
+    fn delta_requires_a_standing_snapshot() {
+        // Premature delta (no SolveRestricted since Setup) is rejected.
+        let mut w = WorkerModel::new(1);
+        w.step(Req::Setup { epoch: 0 });
+        assert_eq!(w.step(Req::SolveDelta), Some(Rep::Failed { worker: 1 }));
+        assert!(w.stopped);
+
+        // Restricted-then-delta is the happy path, but any epoch dispatch
+        // invalidates the snapshot and demands a fresh full send.
+        let mut w = WorkerModel::new(2);
+        w.step(Req::Setup { epoch: 0 });
+        assert_eq!(w.step(Req::SolveRestricted), Some(Rep::Solution { worker: 2, epoch: 0 }));
+        assert_eq!(w.step(Req::SolveDelta), Some(Rep::Solution { worker: 2, epoch: 0 }));
+        assert_eq!(w.step(Req::Retain { epoch: 0 }), Some(Rep::Ready { worker: 2 }));
+        assert_eq!(w.step(Req::SolveDelta), Some(Rep::Failed { worker: 2 }));
     }
 
     #[test]

@@ -1,6 +1,14 @@
 //! Worker loop: a persistent thread that accepts per-epoch subdomain
 //! assignments (Setup), factors once, then serves Solve requests.
 //!
+//! Since the core-bounded scheduler one worker thread hosts *several*
+//! blocks (the leader assigns `block % W` to worker `W`), each in its own
+//! slot: standing setup + factor + the worker's current snapshot of the
+//! block's read-set values (`xr`), which `SolveRestricted` replaces and
+//! `SolveDelta` patches. Per-block state (factor caches, CG warm starts
+//! inside the solver, the snapshot) stays on one thread for the pool's
+//! lifetime.
+//!
 //! Workers outlive epochs: for the Pjrt backend the thread-local engine's
 //! executable cache persists across Setup messages, so artifact
 //! compilation is paid once per (bucket, worker), not once per epoch.
@@ -9,6 +17,7 @@ use super::messages::{EpochSetup, SolverBackend, ToLeader, ToWorker};
 use crate::ddkf::{KfLocalSolver, LocalFactor, LocalSolver, NativeLocalSolver, SparseCg};
 use crate::linalg::batch::WorkspaceArena;
 use crate::runtime::PjrtLocalSolver;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
@@ -58,6 +67,32 @@ pub(super) mod test_support {
     }
 }
 
+/// One hosted block's standing state.
+struct BlockSlot {
+    setup: EpochSetup,
+    factor: LocalFactor,
+    /// μ·x_other staging (only reg_cols entries ever change).
+    reg_rhs: Vec<f64>,
+    /// Snapshot of the iterate at the block's read-set columns, in
+    /// `setup.read_set` order — `SolveRestricted` replaces it wholesale,
+    /// `SolveDelta` patches the named positions.
+    xr: Vec<f64>,
+}
+
+impl BlockSlot {
+    /// Iterate value at global column `gc`, read from the snapshot. The
+    /// leader only ships read-set columns, and `b_eff_into` / reg_rhs only
+    /// ask for read-set columns, so the lookup always lands.
+    fn at(&self, gc: usize) -> f64 {
+        let k = self
+            .setup
+            .read_set
+            .binary_search(&gc)
+            .expect("invariant: solves only read recorded read-set columns");
+        self.xr[k]
+    }
+}
+
 pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader>) {
     let fail = |tx: &Sender<ToLeader>, error: String| {
         let _ = tx.send(ToLeader::Failed { worker: init.id, error });
@@ -81,8 +116,8 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
         }
     };
 
-    // Current epoch state.
-    let mut epoch: Option<(EpochSetup, LocalFactor, Vec<f64>)> = None;
+    // Hosted blocks, keyed by block id.
+    let mut slots: BTreeMap<usize, BlockSlot> = BTreeMap::new();
     // Per-worker scratch pool: the per-sweep rhs staging buffer cycles
     // through it (take → fill → solve → put), so a settled sweep loop
     // allocates nothing on this thread.
@@ -96,15 +131,18 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                 match solver.assemble(&setup.blk, &setup.reg) {
                     Ok(factor) => {
                         let reg_rhs = vec![0.0; setup.blk.n_loc()];
+                        let xr = vec![0.0; setup.read_set.len()];
                         // Pre-warm the arena to this epoch's shape bucket:
                         // the first Solve then stages its rhs from the
                         // pool instead of allocating mid-sweep.
                         let warm = arena.take(setup.shape.m_pad.max(setup.blk.m_loc()));
                         arena.put(warm);
-                        epoch = Some((*setup, factor, reg_rhs));
+                        let block = setup.block;
+                        slots.insert(block, BlockSlot { setup: *setup, factor, reg_rhs, xr });
                         if tx
                             .send(ToLeader::Ready {
                                 worker: init.id,
+                                block,
                                 assemble_time: t0.elapsed(),
                             })
                             .is_err()
@@ -118,35 +156,40 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                     }
                 }
             }
-            ToWorker::RefreshB { b } => {
+            ToWorker::RefreshB { block, b } => {
                 let t0 = Instant::now();
-                let Some((setup, _factor, _reg_rhs)) = epoch.as_mut() else {
-                    fail(&tx, "RefreshB before Setup".into());
+                let Some(slot) = slots.get_mut(&block) else {
+                    fail(&tx, format!("RefreshB for unassigned block {block}"));
                     return;
                 };
-                if b.len() != setup.blk.b.len() {
+                if b.len() != slot.setup.blk.b.len() {
                     fail(
                         &tx,
-                        format!("RefreshB length {} != block rows {}", b.len(), setup.blk.b.len()),
+                        format!(
+                            "RefreshB length {} != block rows {}",
+                            b.len(),
+                            slot.setup.blk.b.len()
+                        ),
                     );
                     return;
                 }
-                setup.blk.b = b;
+                slot.setup.blk.b = b;
                 if tx
-                    .send(ToLeader::Ready { worker: init.id, assemble_time: t0.elapsed() })
+                    .send(ToLeader::Ready { worker: init.id, block, assemble_time: t0.elapsed() })
                     .is_err()
                 {
                     return;
                 }
             }
-            ToWorker::Retain => {
-                if epoch.is_none() {
-                    fail(&tx, "Retain before Setup".into());
+            ToWorker::Retain { block } => {
+                if !slots.contains_key(&block) {
+                    fail(&tx, format!("Retain for unassigned block {block}"));
                     return;
                 }
                 if tx
                     .send(ToLeader::Ready {
                         worker: init.id,
+                        block,
                         assemble_time: std::time::Duration::ZERO,
                     })
                     .is_err()
@@ -154,36 +197,99 @@ pub fn worker_main(init: WorkerInit, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                     return;
                 }
             }
-            ToWorker::Solve { x } => {
-                let Some((setup, factor, reg_rhs)) = epoch.as_mut() else {
-                    fail(&tx, "Solve before Setup".into());
+            ToWorker::Solve { block, x } => {
+                let Some(slot) = slots.get_mut(&block) else {
+                    fail(&tx, format!("Solve for unassigned block {block}"));
                     return;
                 };
-                let t0 = Instant::now();
-                // lint:sweep-hot-start per-iteration solve path: stage
-                // buffers through the arena, never allocate fresh.
-                let mut b_eff = arena.take(setup.blk.m_loc());
-                setup.blk.b_eff_into(|c| x[c], &mut b_eff);
-                for &lc in &setup.reg_cols {
-                    reg_rhs[lc] = setup.mu * x[setup.blk.cols[lc]];
-                }
-                let solved = solver.solve(&setup.blk, factor, &b_eff, reg_rhs);
-                arena.put(b_eff);
-                // lint:sweep-hot-end
-                match solved {
-                    Ok(x_loc) => {
-                        let _ = tx.send(ToLeader::Solution {
-                            worker: init.id,
-                            x_loc,
-                            solve_time: t0.elapsed(),
-                        });
-                    }
-                    Err(e) => {
-                        fail(&tx, format!("solve: {e}"));
-                        return;
-                    }
+                if !solve_slot(slot, |gc| x[gc], &mut *solver, &mut arena, init.id, &tx) {
+                    return;
                 }
             }
+            ToWorker::SolveRestricted { block, vals } => {
+                let Some(slot) = slots.get_mut(&block) else {
+                    fail(&tx, format!("SolveRestricted for unassigned block {block}"));
+                    return;
+                };
+                if vals.len() != slot.xr.len() {
+                    fail(
+                        &tx,
+                        format!(
+                            "SolveRestricted length {} != read set {}",
+                            vals.len(),
+                            slot.xr.len()
+                        ),
+                    );
+                    return;
+                }
+                slot.xr = vals;
+                let slot = &slots[&block];
+                if !solve_slot(slot, |gc| slot.at(gc), &mut *solver, &mut arena, init.id, &tx) {
+                    return;
+                }
+            }
+            ToWorker::SolveDelta { block, idx, vals } => {
+                let Some(slot) = slots.get_mut(&block) else {
+                    fail(&tx, format!("SolveDelta for unassigned block {block}"));
+                    return;
+                };
+                if idx.len() != vals.len() || idx.iter().any(|&k| k as usize >= slot.xr.len()) {
+                    fail(&tx, format!("malformed SolveDelta for block {block}"));
+                    return;
+                }
+                for (&k, &v) in idx.iter().zip(&vals) {
+                    slot.xr[k as usize] = v;
+                }
+                let slot = &slots[&block];
+                if !solve_slot(slot, |gc| slot.at(gc), &mut *solver, &mut arena, init.id, &tx) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Run one local solve for a slot against an iterate accessor (dense
+/// snapshot or read-set snapshot — the values are identical either way,
+/// so the staged rhs and therefore the solution are bitwise identical).
+/// Returns false when the worker should exit (leader gone or solve
+/// failed).
+fn solve_slot(
+    slot: &BlockSlot,
+    x_at: impl Fn(usize) -> f64,
+    solver: &mut dyn LocalSolver,
+    arena: &mut WorkspaceArena,
+    worker: usize,
+    tx: &Sender<ToLeader>,
+) -> bool {
+    let setup = &slot.setup;
+    let t0 = Instant::now();
+    // lint:sweep-hot-start per-iteration solve path: stage buffers
+    // through the arena, never allocate fresh.
+    let mut b_eff = arena.take(setup.blk.m_loc());
+    setup.blk.b_eff_into(&x_at, &mut b_eff);
+    let mut reg_rhs = arena.take(slot.reg_rhs.len());
+    reg_rhs.clear();
+    reg_rhs.extend_from_slice(&slot.reg_rhs);
+    for &lc in &setup.reg_cols {
+        reg_rhs[lc] = setup.mu * x_at(setup.blk.cols[lc]);
+    }
+    let solved = solver.solve(&setup.blk, &slot.factor, &b_eff, &reg_rhs);
+    arena.put(reg_rhs);
+    arena.put(b_eff);
+    // lint:sweep-hot-end
+    match solved {
+        Ok(x_loc) => tx
+            .send(ToLeader::Solution {
+                worker,
+                block: setup.block,
+                x_loc,
+                solve_time: t0.elapsed(),
+            })
+            .is_ok(),
+        Err(e) => {
+            let _ = tx.send(ToLeader::Failed { worker, error: format!("solve: {e}") });
+            false
         }
     }
 }

@@ -164,13 +164,71 @@ impl OverlapAccumulator {
     /// x[c] ← (x_owner[c] + Σ contributions) / (1 + #contributors).
     /// Resets the accumulator for the next sweep.
     pub fn finalize(&mut self, x_global: &mut [f64]) {
+        self.finalize_impl(x_global, None);
+    }
+
+    /// [`OverlapAccumulator::finalize`] that also stamps every column
+    /// whose value actually changed into `tracker` — the leader's delta
+    /// exchange reads those stamps instead of scanning n.
+    pub fn finalize_tracked(&mut self, x_global: &mut [f64], tracker: &mut ChangeTracker) {
+        self.finalize_impl(x_global, Some(tracker));
+    }
+
+    /// One shared arithmetic path for the tracked and untracked finalize,
+    /// so the two cannot drift bitwise.
+    fn finalize_impl(&mut self, x_global: &mut [f64], mut tracker: Option<&mut ChangeTracker>) {
         for &gc in &self.touched {
-            x_global[gc] =
-                (x_global[gc] + self.sum[gc]) / (1.0 + self.count[gc] as f64);
+            let v = (x_global[gc] + self.sum[gc]) / (1.0 + self.count[gc] as f64);
+            if let Some(t) = tracker.as_deref_mut() {
+                if v.to_bits() != x_global[gc].to_bits() {
+                    t.mark(gc);
+                }
+            }
+            x_global[gc] = v;
             self.sum[gc] = 0.0;
             self.count[gc] = 0;
         }
         self.touched.clear();
+    }
+}
+
+/// Leader-side change stamps over the global iterate, feeding the
+/// halo-restricted *delta* exchange (see [`crate::util::comm`]): every
+/// write-back batch advances the sweep stamp, every column whose value
+/// changed **bitwise** is stamped, and a dispatch for a block that last
+/// saw stamp `s` ships exactly the read-set columns stamped after `s`.
+/// Tracking rides the write-back touched-set, so maintaining it is O(cols
+/// actually written), never O(n).
+#[derive(Debug, Clone)]
+pub struct ChangeTracker {
+    stamp: u64,
+    col_stamp: Vec<u64>,
+}
+
+impl ChangeTracker {
+    pub fn new(n: usize) -> Self {
+        ChangeTracker { stamp: 1, col_stamp: vec![0; n] }
+    }
+
+    /// Current sweep stamp (a dispatch snapshots this as its `sent` mark).
+    pub fn stamp(&self) -> u64 {
+        self.stamp
+    }
+
+    /// Open a new stamp generation. Called before each write-back batch
+    /// so mutations land strictly after every dispatch that preceded them.
+    pub fn advance(&mut self) {
+        self.stamp += 1;
+    }
+
+    /// Stamp one column as changed in the current generation.
+    pub fn mark(&mut self, gc: usize) {
+        self.col_stamp[gc] = self.stamp;
+    }
+
+    /// Whether `gc` changed after stamp `since`.
+    pub fn changed_since(&self, gc: usize, since: u64) -> bool {
+        self.col_stamp[gc] > since
     }
 }
 
@@ -183,9 +241,40 @@ pub fn write_back(
     x_global: &mut [f64],
     acc: &mut OverlapAccumulator,
 ) {
+    write_back_impl(blk, x_loc, x_global, acc, None);
+}
+
+/// [`write_back`] that also stamps changed owned columns into `tracker`
+/// (overlap columns are stamped later, by
+/// [`OverlapAccumulator::finalize_tracked`], where their final averaged
+/// value is known).
+pub fn write_back_tracked(
+    blk: &LocalBlock,
+    x_loc: &[f64],
+    x_global: &mut [f64],
+    acc: &mut OverlapAccumulator,
+    tracker: &mut ChangeTracker,
+) {
+    write_back_impl(blk, x_loc, x_global, acc, Some(tracker));
+}
+
+/// One shared arithmetic path for the tracked and untracked write-back,
+/// so the two cannot drift bitwise.
+fn write_back_impl(
+    blk: &LocalBlock,
+    x_loc: &[f64],
+    x_global: &mut [f64],
+    acc: &mut OverlapAccumulator,
+    mut tracker: Option<&mut ChangeTracker>,
+) {
     for (c, &v) in x_loc.iter().enumerate() {
         let gc = blk.cols[c];
         if blk.owned[c] {
+            if let Some(t) = tracker.as_deref_mut() {
+                if v.to_bits() != x_global[gc].to_bits() {
+                    t.mark(gc);
+                }
+            }
             x_global[gc] = v;
         } else {
             if acc.count[gc] == 0 {
@@ -819,5 +908,60 @@ mod tests {
         }
         acc.finalize(&mut xb);
         assert!(dist2(&xa, &xb) < 1e-12, "write-back depends on sweep order");
+    }
+
+    #[test]
+    fn tracked_write_back_is_bitwise_the_untracked_and_stamps_changes() {
+        // The delta exchange hangs off ChangeTracker: the tracked path
+        // must (a) leave the iterate bitwise identical to the untracked
+        // one and (b) stamp exactly the columns whose bits changed.
+        let prob = problem(40, 25, 14);
+        let part = Partition::uniform(40, 4);
+        let blocks: Vec<LocalBlock> =
+            (0..4).map(|i| prob.local_block(&part, i, 2)).collect();
+        let mut rng = Rng::new(15);
+        let sols: Vec<Vec<f64>> =
+            blocks.iter().map(|b| rng.gaussian_vec(b.n_loc())).collect();
+        let mut xa = rng.gaussian_vec(40);
+        let mut xb = xa.clone();
+        let before = xa.clone();
+        let mut acc = OverlapAccumulator::new(40);
+        for i in 0..4 {
+            write_back(&blocks[i], &sols[i], &mut xa, &mut acc);
+        }
+        acc.finalize(&mut xa);
+        let mut tracker = ChangeTracker::new(40);
+        let sent = tracker.stamp();
+        tracker.advance();
+        for i in 0..4 {
+            write_back_tracked(&blocks[i], &sols[i], &mut xb, &mut acc, &mut tracker);
+        }
+        acc.finalize_tracked(&mut xb, &mut tracker);
+        for (gc, (a, b)) in xa.iter().zip(&xb).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "tracked write-back drifted at {gc}");
+            assert_eq!(
+                tracker.changed_since(gc, sent),
+                before[gc].to_bits() != b.to_bits(),
+                "stamp wrong at column {gc}"
+            );
+        }
+        // A second generation with identical solutions re-stamps nothing
+        // new for owned columns whose values did not move… but overlap
+        // averaging contracts towards the fixed point, so only columns
+        // that truly changed bits get the new stamp.
+        let sent2 = tracker.stamp();
+        tracker.advance();
+        let xc = xb.clone();
+        for i in 0..4 {
+            write_back_tracked(&blocks[i], &sols[i], &mut xb, &mut acc, &mut tracker);
+        }
+        acc.finalize_tracked(&mut xb, &mut tracker);
+        for gc in 0..40 {
+            assert_eq!(
+                tracker.changed_since(gc, sent2),
+                xc[gc].to_bits() != xb[gc].to_bits(),
+                "second-generation stamp wrong at column {gc}"
+            );
+        }
     }
 }

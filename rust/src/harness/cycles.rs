@@ -118,6 +118,15 @@ pub struct CycleRecord {
     /// Dispatch groups per sweep under the active batch mode: one per
     /// phase when batching is off; split by shape bucket when it fuses.
     pub batch_groups: usize,
+    /// Measured busy time of each pool worker this cycle (length = pool
+    /// width W, not p): solve time attributed to the thread that ran it.
+    pub worker_busy: Vec<Duration>,
+    /// Payload bytes this cycle's solve actually moved leader↔workers
+    /// under the active comm mode (x dispatches + x_loc replies).
+    pub comm_bytes: u64,
+    /// Bytes a dense full-broadcast of the same sweeps would have moved,
+    /// minus `comm_bytes` — the halo-restriction/delta win.
+    pub comm_bytes_saved: u64,
     /// ‖x̂_KF − x̂_DD-DA‖ on this cycle's problem (None without baseline).
     pub error_dd_da: Option<f64>,
 }
@@ -199,11 +208,16 @@ pub fn render_cycle_table(rep: &CycleReport) -> crate::util::Table {
             "groups",
             "iters",
             "T^p_crit",
+            "T_busy^max",
+            "comm",
+            "saved",
             "T_wall",
             "err_DD-DA",
         ],
     );
     for r in &rep.records {
+        let busy_max =
+            r.worker_busy.iter().copied().max().unwrap_or(Duration::ZERO);
         t.row(&[
             r.cycle.to_string(),
             r.m.to_string(),
@@ -215,6 +229,9 @@ pub fn render_cycle_table(rep: &CycleReport) -> crate::util::Table {
             r.batch_groups.to_string(),
             r.iters.to_string(),
             fmt_secs(r.t_critical.as_secs_f64()),
+            fmt_secs(busy_max.as_secs_f64()),
+            crate::util::fmt_bytes(r.comm_bytes),
+            crate::util::fmt_bytes(r.comm_bytes_saved),
             fmt_secs(r.t_wall.as_secs_f64()),
             r.error_dd_da.map(|e| format!("{e:.1e}")).unwrap_or_else(|| "-".into()),
         ]);
@@ -298,6 +315,8 @@ pub fn run_cycles_on<G: RecordGeometry>(
 ) -> anyhow::Result<CycleReport> {
     cfg.apply_threads();
     cfg.apply_batch();
+    cfg.apply_workers();
+    cfg.apply_comm();
     let policy = effective_policy(cfg);
     let n = geom.n_unknowns();
     let p = geom.p();
@@ -445,6 +464,9 @@ pub fn run_cycles_on<G: RecordGeometry>(
             converged: par.converged,
             stalled: par.stalled,
             batch_groups: par.batch_groups,
+            worker_busy: par.worker_busy.clone(),
+            comm_bytes: par.comm_bytes,
+            comm_bytes_saved: par.comm_bytes_saved,
             error_dd_da,
         });
 

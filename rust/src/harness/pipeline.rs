@@ -114,6 +114,8 @@ pub fn run_experiment(
 ) -> anyhow::Result<ExperimentReport> {
     cfg.apply_threads();
     cfg.apply_batch();
+    cfg.apply_workers();
+    cfg.apply_comm();
     let (geom, cfg) = resolve_geometry(cfg)?;
     match geom {
         ResolvedGeometry::D1(g) => run_experiment_on(&g, &cfg, with_baseline),
@@ -233,6 +235,8 @@ pub fn run_with_counts(
     anyhow::ensure!(base.dim == 1, "run_with_counts drives the 1-D DD-KF pipeline");
     base.apply_threads();
     base.apply_batch();
+    base.apply_workers();
+    base.apply_comm();
     let mut geom = base.interval_geometry();
     geom.p = counts.len();
     let mesh = Mesh1d::new(base.n);

@@ -69,18 +69,21 @@ USAGE:
   dydd-da run [--config FILE] [--n N] [--m M] [--p P] [--layout L]
               [--dim 1|2|4] [--px PX] [--py PY] [--steps N_T]
               [--backend native|kf|pjrt|cg|cg-ic0] [--overlap S] [--mu MU]
-              [--threads T] [--batch on|off|auto] [--no-dydd] [--seed SEED]
+              [--threads T] [--batch on|off|auto] [--workers W]
+              [--comm full|restricted|delta] [--no-dydd] [--seed SEED]
               [--no-baseline]
   dydd-da cycle [--config FILE] [--dim 1|2|4] [--n N] [--m M] [--p P]
               [--px PX] [--py PY] [--steps N_T] [--cycles K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
               [--drift D] [--seed SEED] [--threads T] [--batch on|off|auto]
-              [--no-dydd] [--no-baseline]
+              [--workers W] [--comm full|restricted|delta] [--no-dydd]
+              [--no-baseline]
   dydd-da serve [--config FILE] [--dim 1|2|4] [--n N] [--m M] [--p P]
               [--px PX] [--py PY] [--steps N_T] [--ticks K] [--backend B]
               [--policy never|every_cycle|threshold[:TAU]] [--tau TAU]
               [--drift D] [--seed SEED] [--source drift|replay|-]
-              [--threads T] [--batch on|off|auto] [--no-dydd]
+              [--threads T] [--batch on|off|auto] [--workers W]
+              [--comm full|restricted|delta] [--no-dydd]
               [--no-baseline] [--no-feed-forward] [--no-warm-start]
               [--force-cold]
   dydd-da dydd --loads L1,L2,... [--graph chain|star|ring]
@@ -108,6 +111,15 @@ backends: native (Cholesky) | kf (local VAR-KF) | pjrt (XLA artifacts)
           always group same-shape blocks into fused batched solves, off =
           per-block dispatch, auto = group only where batching wins.
           Batched dispatch is bitwise-identical to per-block.
+--workers W: coordinator pool width — how many worker threads host the p
+          subdomain blocks (default: DYDD_WORKERS, else min(p, cores)).
+          Results are bitwise-identical at every W; --threads parallelizes
+          kernels inside one solve, --workers schedules solves themselves.
+--comm M: leader-to-worker iterate exchange (default: DYDD_COMM or delta).
+          full = dense broadcast of the whole iterate every phase,
+          restricted = each block's recorded read set only, delta = read
+          set once, then only changed entries (+ skipped sends for
+          unchanged pure-solver blocks). All modes are bitwise-identical.
 serve sources: drift (native per-row stream; falls back to replay when
           the geometry has none) | replay (per-tick cycle_obs diffs)
           | - (JSONL deltas on stdin, one {tick, add, remove, move}
@@ -172,6 +184,16 @@ impl<'a> Flags<'a> {
             Some(s) => dydd_da::util::batch::BatchMode::parse(s)
                 .map(Some)
                 .ok_or_else(|| anyhow::anyhow!("bad value for --batch: {s:?} (on | off | auto)")),
+        }
+    }
+
+    /// The `--comm full|restricted|delta` flag, shared by run/cycle/serve.
+    fn comm(&self) -> anyhow::Result<Option<dydd_da::util::comm::CommMode>> {
+        match self.get("--comm") {
+            None => Ok(None),
+            Some(s) => dydd_da::util::comm::CommMode::parse(s).map(Some).ok_or_else(|| {
+                anyhow::anyhow!("bad value for --comm: {s:?} (full | restricted | delta)")
+            }),
         }
     }
 }
@@ -297,6 +319,12 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     }
     if let Some(b) = f.batch()? {
         cfg.batch = Some(b);
+    }
+    if let Some(w) = f.parsed::<usize>("--workers")? {
+        cfg.workers = w;
+    }
+    if let Some(c) = f.comm()? {
+        cfg.comm = Some(c);
     }
     if let Some(seed) = f.parsed::<u64>("--seed")? {
         cfg.seed = seed;
@@ -465,6 +493,12 @@ fn cmd_cycle(args: &[String]) -> anyhow::Result<()> {
     if let Some(b) = f.batch()? {
         cfg.batch = Some(b);
     }
+    if let Some(w) = f.parsed::<usize>("--workers")? {
+        cfg.workers = w;
+    }
+    if let Some(c) = f.comm()? {
+        cfg.comm = Some(c);
+    }
     if f.has("--no-dydd") {
         cfg.dydd = false;
     }
@@ -613,14 +647,22 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     if let Some(b) = f.batch()? {
         cfg.batch = Some(b);
     }
+    if let Some(w) = f.parsed::<usize>("--workers")? {
+        cfg.workers = w;
+    }
+    if let Some(c) = f.comm()? {
+        cfg.comm = Some(c);
+    }
     if f.has("--force-cold") {
         cfg.stream_force_cold = true;
     }
     cfg.validate()?;
     // `serve` drives the stream engine directly (no pipeline entry
-    // point), so the kernel-thread and batch knobs are applied here.
+    // point), so the perf knobs are applied here.
     cfg.apply_threads();
     cfg.apply_batch();
+    cfg.apply_workers();
+    cfg.apply_comm();
     let unknowns = match cfg.dim {
         2 => cfg.n * cfg.n,
         4 => cfg.n * cfg.steps,

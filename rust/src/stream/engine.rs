@@ -120,6 +120,16 @@ pub struct TickRecord {
     pub batch_groups: usize,
     /// Aggregate pad-waste fraction of the accepted shape groups.
     pub pad_waste: f64,
+    /// Total solve time per pool worker this tick (length W — the
+    /// load-balance telemetry of the core-bounded scheduler).
+    pub worker_busy: Vec<Duration>,
+    /// Modeled iterate-exchange bytes of the tick's solve (see
+    /// [`crate::coordinator::ParallelOutcome::comm_bytes`]).
+    pub comm_bytes: u64,
+    /// Bytes the dense broadcast would have shipped on top of that.
+    pub comm_bytes_saved: u64,
+    /// Solve dispatches skipped outright (empty delta, pure backend).
+    pub solves_skipped: usize,
     pub t_dydd: Duration,
     /// Simulated-parallel critical path of the tick's DD-KF solve.
     pub t_critical: Duration,
@@ -162,6 +172,13 @@ impl TickRecord {
         o.insert("stalled".into(), Json::Bool(self.stalled));
         o.insert("batch_groups".into(), int(self.batch_groups));
         o.insert("pad_waste".into(), num(self.pad_waste));
+        o.insert(
+            "t_busy_s".into(),
+            Json::Arr(self.worker_busy.iter().map(|d| num(d.as_secs_f64())).collect()),
+        );
+        o.insert("comm_bytes".into(), Json::Num(self.comm_bytes as f64));
+        o.insert("comm_bytes_saved".into(), Json::Num(self.comm_bytes_saved as f64));
+        o.insert("solves_skipped".into(), int(self.solves_skipped));
         o.insert("t_dydd_s".into(), num(self.t_dydd.as_secs_f64()));
         o.insert("t_critical_s".into(), num(self.t_critical.as_secs_f64()));
         o.insert("t_wall_s".into(), num(self.t_wall.as_secs_f64()));
@@ -454,6 +471,10 @@ impl<'g, G: RecordGeometry> StreamEngine<'g, G> {
             stalled: par.stalled,
             batch_groups: par.batch_groups,
             pad_waste: par.pad_waste,
+            worker_busy: par.worker_busy.clone(),
+            comm_bytes: par.comm_bytes,
+            comm_bytes_saved: par.comm_bytes_saved,
+            solves_skipped: par.solves_skipped,
             t_dydd,
             t_critical: par.t_critical,
             t_wall: t_wall0.elapsed().saturating_sub(t_verify),
@@ -622,6 +643,14 @@ mod tests {
             assert!((1..=4).contains(&groups), "batch_groups = {groups}");
             let waste = doc.get("pad_waste").unwrap().as_f64().unwrap();
             assert!((0.0..1.0).contains(&waste));
+            // Core-bounded scheduler + comm telemetry ride along too:
+            // one busy entry per pool worker (W ≤ p) and a byte ledger.
+            let busy = doc.get("t_busy_s").unwrap().as_arr().unwrap();
+            assert!((1..=4).contains(&busy.len()), "t_busy_s len = {}", busy.len());
+            assert!(busy.iter().all(|b| b.as_f64().unwrap() >= 0.0));
+            assert!(doc.get("comm_bytes").unwrap().as_f64().unwrap() > 0.0);
+            assert!(doc.get("comm_bytes_saved").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(doc.get("solves_skipped").and_then(Json::as_usize).is_some());
         }
     }
 }

@@ -1,0 +1,156 @@
+//! Global communication-mode knob for the leader ↔ worker exchange.
+//!
+//! The coordinator historically broadcast the *full* global iterate to
+//! every worker every phase (`Solve { x: Arc<Vec<f64>> }`) and received
+//! the full local solution back — O(p·n) traffic per sweep when only a
+//! handful of halo columns moved. The halo-restricted exchange sends each
+//! worker only the columns its block actually reads (owned + overlap
+//! halo, known from `LocalBlock`), and after the first sweep only the
+//! *delta* — the subset of that read set whose values changed since the
+//! worker's last snapshot, tracked leader-side by the write-back
+//! touched-set rather than by scanning n.
+//!
+//! All three modes are bitwise-identical on `x` and `iters` (the repo's
+//! standing perf-knob contract): the wire format changes which f64s are
+//! shipped, never their values or the order they are consumed in.
+//!
+//! Resolution order mirrors the batch knob in [`crate::util::batch`]:
+//! lazily from the `DYDD_COMM` environment variable (`full` /
+//! `restricted` / `delta`), overridable at runtime via [`set_comm_mode`]
+//! — the config/CLI layer does so from `[perf] comm` / `--comm`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How the leader ships iterate values to workers each phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommMode {
+    /// Legacy dense broadcast: the full global iterate to every worker
+    /// every phase. Kept as the measurable baseline for the A11 ablation.
+    Full,
+    /// Read-set restricted: each dispatch carries exactly the values of
+    /// the worker's recorded column read set, every phase.
+    Restricted,
+    /// Restricted first dispatch, then per-dispatch deltas: only read-set
+    /// entries whose value changed (bitwise) since that block's last
+    /// snapshot, plus send skipping for blocks with an empty delta.
+    Delta,
+}
+
+impl CommMode {
+    /// Parse a mode string (the CLI / `DYDD_COMM` surface).
+    pub fn parse(s: &str) -> Option<CommMode> {
+        Some(match s.trim().to_ascii_lowercase().as_str() {
+            "full" | "dense" | "broadcast" => CommMode::Full,
+            "restricted" | "halo" => CommMode::Restricted,
+            "delta" => CommMode::Delta,
+            _ => return None,
+        })
+    }
+
+    /// Canonical string form (round-trips through [`CommMode::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CommMode::Full => "full",
+            CommMode::Restricted => "restricted",
+            CommMode::Delta => "delta",
+        }
+    }
+}
+
+/// 0 means "not yet resolved"; 1/2/3 encode Full/Restricted/Delta.
+static MODE: AtomicUsize = AtomicUsize::new(0);
+
+fn encode(m: CommMode) -> usize {
+    match m {
+        CommMode::Full => 1,
+        CommMode::Restricted => 2,
+        CommMode::Delta => 3,
+    }
+}
+
+fn decode(v: usize) -> Option<CommMode> {
+    match v {
+        1 => Some(CommMode::Full),
+        2 => Some(CommMode::Restricted),
+        3 => Some(CommMode::Delta),
+        _ => None,
+    }
+}
+
+fn default_mode() -> CommMode {
+    match std::env::var("DYDD_COMM") {
+        Ok(v) => CommMode::parse(&v).unwrap_or(CommMode::Delta),
+        Err(_) => CommMode::Delta,
+    }
+}
+
+/// Comm mode currently in effect (defaults to `Delta` via `DYDD_COMM`).
+pub fn comm_mode() -> CommMode {
+    if let Some(m) = decode(MODE.load(Ordering::Relaxed)) {
+        return m;
+    }
+    let d = default_mode();
+    // A racing first call recomputes the same deterministic default, so a
+    // plain store is fine.
+    MODE.store(encode(d), Ordering::Relaxed);
+    d
+}
+
+/// Set the comm mode (config/CLI entry point).
+pub fn set_comm_mode(m: CommMode) {
+    MODE.store(encode(m), Ordering::Relaxed);
+}
+
+/// Serializes tests that flip the process-global mode (solves observing a
+/// mid-flip mode stay bitwise correct, but byte-count assertions would
+/// race).
+#[cfg(test)]
+pub(crate) static TEST_MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// RAII guard for tests: hold the lock, set a mode, restore `Delta`.
+#[cfg(test)]
+pub(crate) struct TestModeGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+#[cfg(test)]
+pub(crate) fn test_mode(m: CommMode) -> TestModeGuard {
+    let g = TEST_MODE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    set_comm_mode(m);
+    TestModeGuard(g)
+}
+
+#[cfg(test)]
+impl TestModeGuard {
+    pub(crate) fn set(&self, m: CommMode) {
+        set_comm_mode(m);
+    }
+}
+
+#[cfg(test)]
+impl Drop for TestModeGuard {
+    fn drop(&mut self) {
+        set_comm_mode(CommMode::Delta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        for m in [CommMode::Full, CommMode::Restricted, CommMode::Delta] {
+            assert_eq!(CommMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(CommMode::parse("FULL"), Some(CommMode::Full));
+        assert_eq!(CommMode::parse("halo"), Some(CommMode::Restricted));
+        assert_eq!(CommMode::parse("sparse-ish"), None);
+    }
+
+    #[test]
+    fn set_and_get_round_trip() {
+        let guard = test_mode(CommMode::Full);
+        assert_eq!(comm_mode(), CommMode::Full);
+        guard.set(CommMode::Delta);
+        assert_eq!(comm_mode(), CommMode::Delta);
+    }
+}

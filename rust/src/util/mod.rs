@@ -3,15 +3,45 @@
 //! rendering for the benchmark harness.
 
 pub mod batch;
+pub mod comm;
 pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod threads;
 pub mod timer;
+pub mod workers;
 
 pub use json::Json;
 pub use rng::Rng;
 pub use stats::norm_quantile;
 pub use table::Table;
 pub use timer::{Stopwatch, TimingStats};
+
+/// Render a byte count with a human-readable binary suffix for the
+/// benchmark tables' `comm` columns.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf < K {
+        format!("{b} B")
+    } else if bf < K * K {
+        format!("{:.1} KiB", bf / K)
+    } else if bf < K * K * K {
+        format!("{:.1} MiB", bf / (K * K))
+    } else {
+        format!("{:.1} GiB", bf / (K * K * K))
+    }
+}
+
+#[cfg(test)]
+mod fmt_tests {
+    #[test]
+    fn bytes_format_across_suffixes() {
+        assert_eq!(super::fmt_bytes(0), "0 B");
+        assert_eq!(super::fmt_bytes(1023), "1023 B");
+        assert_eq!(super::fmt_bytes(1536), "1.5 KiB");
+        assert_eq!(super::fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+        assert_eq!(super::fmt_bytes(5 * 1024 * 1024 * 1024), "5.0 GiB");
+    }
+}

@@ -1,0 +1,98 @@
+//! Global worker-pool-width knob for the coordinator's phase scheduler.
+//!
+//! The WorkerPool historically spawned one OS thread per subdomain, so a
+//! `--dim 2 --px 8 --py 4` run oversubscribes a 8-core machine 4× and
+//! wall-clock strong scaling stalls at p ≈ cores. The core-bounded
+//! scheduler instead spawns `W = min(p, cores)` persistent workers, each
+//! hosting the blocks assigned to it (fixed `block % W` placement, so
+//! factor caches and any thread-bound engine state stay put). Results are
+//! bitwise-identical at every W: per-block arithmetic is untouched and
+//! the leader's write-back runs in deterministic phase-member order
+//! regardless of which thread produced a solution.
+//!
+//! `0` means *auto*: resolve to the machine's available parallelism at
+//! pool construction (`min(p, available cores)`). Resolution mirrors the
+//! threads knob: lazily from `DYDD_WORKERS`, overridable at runtime via
+//! [`set_workers`] — the config/CLI layer does so from `[perf] workers` /
+//! `--workers`. Note the distinction from [`crate::util::threads`]: that
+//! knob bands *kernel* loops inside one local solve; this one bounds how
+//! many local solves run concurrently.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Sentinel meaning "not yet resolved from the environment".
+const UNRESOLVED: usize = usize::MAX;
+
+/// 0 means "auto" (resolved against p and core count per pool).
+static WORKERS: AtomicUsize = AtomicUsize::new(UNRESOLVED);
+
+fn default_workers() -> usize {
+    match std::env::var("DYDD_WORKERS") {
+        Ok(v) => v.trim().parse::<usize>().unwrap_or(0),
+        Err(_) => 0,
+    }
+}
+
+/// Configured worker count: 0 = auto (resolve per pool via
+/// [`resolve_workers`]).
+pub fn workers() -> usize {
+    let w = WORKERS.load(Ordering::Relaxed);
+    if w != UNRESOLVED {
+        return w;
+    }
+    let d = default_workers();
+    // A racing first call recomputes the same deterministic default, so a
+    // plain store is fine.
+    WORKERS.store(d, Ordering::Relaxed);
+    d
+}
+
+/// Set the worker count (config/CLI entry point; 0 restores auto).
+pub fn set_workers(w: usize) {
+    WORKERS.store(w, Ordering::Relaxed);
+}
+
+/// Cores available to this process (≥ 1; used by auto resolution).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Pool width for `p` subdomains under the current knob: an explicit
+/// setting is honoured (clamped to `[1, p]` — more workers than blocks
+/// would idle forever), auto picks `min(p, available cores)`.
+pub fn resolve_workers(p: usize) -> usize {
+    let p = p.max(1);
+    match workers() {
+        0 => p.min(available_cores()),
+        w => w.min(p),
+    }
+}
+
+/// Serializes tests that flip the process-global knob (the harness runs
+/// tests concurrently).
+#[cfg(test)]
+pub(crate) static TEST_WORKERS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_setting_clamps_to_block_count() {
+        let _g = TEST_WORKERS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_workers(3);
+        assert_eq!(workers(), 3);
+        assert_eq!(resolve_workers(8), 3);
+        assert_eq!(resolve_workers(2), 2, "never more workers than blocks");
+        set_workers(0);
+    }
+
+    #[test]
+    fn auto_is_core_bounded() {
+        let _g = TEST_WORKERS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_workers(0);
+        let w = resolve_workers(1024);
+        assert!(w >= 1 && w <= available_cores());
+        assert_eq!(resolve_workers(1), 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Property suite for the halo-restricted delta exchange: the comm mode
+//! is a *wire-shape* knob, never an arithmetic one — `Restricted` and
+//! `Delta` must be bitwise identical to the dense `Full` broadcast on the
+//! analysis and the iteration count across every layout × backend ×
+//! overlap × pool-width cell, while moving strictly fewer bytes.
+
+use dydd_da::coordinator::{SolverBackend, WorkerPool};
+use dydd_da::ddkf::SchwarzOptions;
+use dydd_da::decomp::{BoxGeometry, Geometry, IntervalGeometry};
+use dydd_da::domain::{generators, ObsLayout};
+use dydd_da::domain2d::{generators as gen2d, ObsLayout2d};
+use dydd_da::util::comm::{set_comm_mode, CommMode};
+use dydd_da::util::Rng;
+use std::sync::Mutex;
+
+/// The comm mode is process-global, so the tests that flip it serialize
+/// on one lock (mirrors the batch/threads suites).
+static COMM_LOCK: Mutex<()> = Mutex::new(());
+
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: analysis length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{tag}: x[{i}] differs: {x:e} vs {y:e}");
+    }
+}
+
+const BACKENDS: [(&str, SolverBackend); 3] = [
+    ("native", SolverBackend::Native),
+    ("cg", SolverBackend::Cg),
+    ("cg-ic0", SolverBackend::CgIc0),
+];
+
+/// One pool solve of a 1-D interval problem under the *current* comm mode
+/// with an explicit pool width; returns (analysis, iters, comm bytes).
+fn pool_solve_1d(
+    layout: ObsLayout,
+    backend: SolverBackend,
+    overlap: usize,
+    w: usize,
+) -> (Vec<f64>, usize, u64) {
+    let (n, m, p) = (96usize, 70usize, 4usize);
+    let geom = IntervalGeometry::new(n, p);
+    let mut rng = Rng::new(21_000);
+    let obs = generators::generate(layout, m, &mut rng);
+    let prob = geom.make_problem(geom.background(), obs);
+    let part = geom.initial_partition();
+    let mut opts = SchwarzOptions::default();
+    opts.overlap = overlap;
+    let mut pool = WorkerPool::with_workers(p, w, backend, std::env::temp_dir());
+    let out = pool.solve_on(&geom, &prob, &part, &opts).unwrap();
+    (out.x, out.iters, out.comm_bytes)
+}
+
+/// Same for a 2-D box-grid problem (2×2 subdomains on a 12×12 grid).
+fn pool_solve_2d(
+    layout: ObsLayout2d,
+    backend: SolverBackend,
+    overlap: usize,
+    w: usize,
+) -> (Vec<f64>, usize, u64) {
+    let (n, m, p) = (12usize, 50usize, 4usize);
+    let geom = BoxGeometry::new(n, 2, 2);
+    let mut rng = Rng::new(22_000);
+    let obs = gen2d::generate(layout, m, &mut rng);
+    let prob = geom.make_problem(geom.background(), obs);
+    let part = geom.initial_partition();
+    let mut opts = SchwarzOptions::default();
+    opts.overlap = overlap;
+    let mut pool = WorkerPool::with_workers(p, w, backend, std::env::temp_dir());
+    let out = pool.solve_on(&geom, &prob, &part, &opts).unwrap();
+    (out.x, out.iters, out.comm_bytes)
+}
+
+/// The tentpole contract, exhaustively: five 1-D + five 2-D layouts ×
+/// backends {native, cg, cg-ic0} × overlap {0, 2} × pool width
+/// W ∈ {1, 2, p} — `Restricted` and `Delta` reproduce the `Full`
+/// broadcast bitwise (analysis and iteration count) at every width, and
+/// both move strictly fewer payload bytes than the dense baseline. The
+/// `Full` reference runs at W = p, so the comparison also re-checks that
+/// the pool width itself never leaks into the arithmetic.
+#[test]
+fn delta_exchange_bitwise_equals_full_broadcast_all_cells() {
+    let _g = COMM_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let layouts_1d = [
+        ObsLayout::Uniform,
+        ObsLayout::Ramp,
+        ObsLayout::Cluster,
+        ObsLayout::TwoClusters,
+        ObsLayout::LeftPacked,
+    ];
+    for layout in layouts_1d {
+        for (bname, backend) in BACKENDS {
+            for overlap in [0usize, 2] {
+                set_comm_mode(CommMode::Full);
+                let (x_ref, it_ref, b_full) = pool_solve_1d(layout, backend, overlap, 4);
+                for w in [1usize, 2, 4] {
+                    for mode in [CommMode::Restricted, CommMode::Delta] {
+                        set_comm_mode(mode);
+                        let (x, it, b) = pool_solve_1d(layout, backend, overlap, w);
+                        let tag = format!(
+                            "1-D {layout:?} {bname} ov={overlap} W={w} {}",
+                            mode.as_str()
+                        );
+                        assert_eq!(it, it_ref, "{tag}: iteration count");
+                        assert_bits_eq(&x, &x_ref, &tag);
+                        assert!(b < b_full, "{tag}: {b} bytes !< full {b_full}");
+                    }
+                }
+            }
+        }
+    }
+    for layout in ObsLayout2d::ALL {
+        for (bname, backend) in BACKENDS {
+            for overlap in [0usize, 2] {
+                set_comm_mode(CommMode::Full);
+                let (x_ref, it_ref, b_full) = pool_solve_2d(layout, backend, overlap, 4);
+                for w in [1usize, 2, 4] {
+                    for mode in [CommMode::Restricted, CommMode::Delta] {
+                        set_comm_mode(mode);
+                        let (x, it, b) = pool_solve_2d(layout, backend, overlap, w);
+                        let tag = format!(
+                            "2-D {layout:?} {bname} ov={overlap} W={w} {}",
+                            mode.as_str()
+                        );
+                        assert_eq!(it, it_ref, "{tag}: iteration count");
+                        assert_bits_eq(&x, &x_ref, &tag);
+                        assert!(b < b_full, "{tag}: {b} bytes !< full {b_full}");
+                    }
+                }
+            }
+        }
+    }
+    set_comm_mode(CommMode::Delta);
+}
+
+/// `DYDD_COMM`-style runtime overrides go through [`set_comm_mode`]; the
+/// parse table is the single name/mode mapping the CLI and config use.
+#[test]
+fn comm_mode_names_round_trip() {
+    for m in [CommMode::Full, CommMode::Restricted, CommMode::Delta] {
+        assert_eq!(CommMode::parse(m.as_str()), Some(m));
+    }
+    assert_eq!(CommMode::parse("telepathy"), None);
+}

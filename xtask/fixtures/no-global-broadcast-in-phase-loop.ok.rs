@@ -1,0 +1,15 @@
+// lint:fixture-path(rust/src/coordinator/leader.rs)
+// Gathering only the per-block read set inside the phase loop is the
+// sanctioned pattern; sharing the dense state is fine outside the markers
+// (epoch setup runs once, not per phase).
+fn dispatch_phase_like(x: &[f64], read_sets: &[Vec<u32>]) -> usize {
+    let setup_snapshot = Arc::new(x.to_vec());
+    let mut sent = setup_snapshot.len();
+    // lint:phase-hot-start ship read-set slices or deltas, never the dense state.
+    for cols in read_sets {
+        let vals: Vec<f64> = cols.iter().map(|&c| x[c as usize]).collect();
+        sent += vals.len();
+    }
+    // lint:phase-hot-end
+    sent
+}

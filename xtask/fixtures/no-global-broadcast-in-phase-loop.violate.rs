@@ -1,0 +1,14 @@
+// lint:fixture-path(rust/src/coordinator/leader.rs)
+// A fresh Arc of the full iterate inside the marked phase dispatch loop is
+// the dense global broadcast the halo-restricted delta exchange replaced:
+// every phase re-ships all n entries to every hosted block.
+fn dispatch_phase_like(x: &[f64], members: &[usize]) -> usize {
+    let mut sent = 0;
+    // lint:phase-hot-start ship read-set slices or deltas, never the dense state.
+    for &_block in members {
+        let snapshot = Arc::new(x.to_vec());
+        sent += snapshot.len();
+    }
+    // lint:phase-hot-end
+    sent
+}

@@ -26,6 +26,10 @@ pub struct Line {
     /// Inside a `lint:sweep-hot-start` … `lint:sweep-hot-end` region
     /// (markers inclusive) — the per-sweep hot path some rules scope on.
     pub in_hot: bool,
+    /// Inside a `lint:phase-hot-start` … `lint:phase-hot-end` region
+    /// (markers inclusive) — the leader's per-phase dispatch loop the
+    /// `no-global-broadcast-in-phase-loop` rule scopes on.
+    pub in_phase: bool,
 }
 
 /// One parsed `lint:allow` / `lint:allow-file` comment.
@@ -176,6 +180,7 @@ pub fn scan(path: &str, src: &str) -> SourceFile {
     }
     mark_test_regions(&mut lines);
     mark_hot_regions(&mut lines);
+    mark_phase_regions(&mut lines);
     let (waivers, bad_waivers) = collect_waivers(&lines);
     SourceFile { path: path.to_string(), lines, waivers, bad_waivers }
 }
@@ -284,6 +289,24 @@ fn mark_hot_regions(lines: &mut [Line]) {
     }
 }
 
+/// Mark lines between `lint:phase-hot-start` and `lint:phase-hot-end`
+/// comment markers, both marker lines included. The markers annotate the
+/// leader's per-phase dispatch loop (see the
+/// `no-global-broadcast-in-phase-loop` rule); same semantics as the sweep
+/// markers — no nesting, an unclosed start runs to end of file.
+fn mark_phase_regions(lines: &mut [Line]) {
+    let mut hot = false;
+    for line in lines.iter_mut() {
+        if line.comment.contains("lint:phase-hot-start") {
+            hot = true;
+        }
+        line.in_phase = hot;
+        if line.comment.contains("lint:phase-hot-end") {
+            hot = false;
+        }
+    }
+}
+
 /// Parse `lint:allow(<rule>) reason` / `lint:allow-file(<rule>) reason`
 /// comments. A line-scoped waiver trailing code covers its own line; one
 /// on a comment-only line covers the next line that has code.
@@ -361,6 +384,17 @@ mod tests {
         assert!(!sf.lines[0].in_hot);
         assert!(sf.lines[1].in_hot && sf.lines[2].in_hot && sf.lines[3].in_hot);
         assert!(!sf.lines[4].in_hot);
+    }
+
+    #[test]
+    fn marks_phase_hot_regions() {
+        let src = "fn f() {\n// lint:phase-hot-start dispatch loop\nlet x = 1;\n// lint:phase-hot-end\nlet y = 2;\n}\n";
+        let sf = scan("rust/src/coordinator/leader.rs", src);
+        assert!(!sf.lines[0].in_phase);
+        assert!(sf.lines[1].in_phase && sf.lines[2].in_phase && sf.lines[3].in_phase);
+        assert!(!sf.lines[4].in_phase);
+        // The two marker families are independent.
+        assert!(sf.lines.iter().all(|l| !l.in_hot));
     }
 
     #[test]

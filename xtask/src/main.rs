@@ -2,14 +2,14 @@
 //!
 //! Subcommands:
 //!
-//! * `cargo xtask lint` — run the six repo-specific lint rules over
+//! * `cargo xtask lint` — run the seven repo-specific lint rules over
 //!   `rust/src/**` (see [`rules`] and `rust/README.md` § Correctness
 //!   tooling). Exit 1 on any finding.
 //! * `cargo xtask lint --check-fixtures` — self-test: every fixture in
 //!   `xtask/fixtures/` named `<rule>.violate.rs` must trip exactly that
 //!   rule and every `*.ok.rs` must scan clean, so the rules cannot
 //!   silently rot.
-//! * `cargo xtask bench-refresh` — run the ablation benches (A6–A10)
+//! * `cargo xtask bench-refresh` — run the ablation benches (A6–A11)
 //!   and refresh the repo-root `BENCH_*.json` documents with measured
 //!   numbers, failing unless every refreshed document carries
 //!   `"measured": true`. This is the only sanctioned way to rewrite the
@@ -144,12 +144,13 @@ fn check_fixtures() -> ExitCode {
 }
 
 /// The BENCH documents the ablation benches emit (and the repo commits).
-const BENCH_DOCS: [&str; 5] = [
+const BENCH_DOCS: [&str; 6] = [
     "BENCH_cycles.json",
     "BENCH_sparse.json",
     "BENCH_stream.json",
     "BENCH_scaling.json",
     "BENCH_batch.json",
+    "BENCH_comms.json",
 ];
 
 /// Run the ablation benches and move their freshly measured `BENCH_*.json`

@@ -1,4 +1,4 @@
-//! The six repo-specific lint rules.
+//! The seven repo-specific lint rules.
 //!
 //! Each rule guards an invariant the DD-KF sims otherwise re-verify by
 //! hand (see `rust/README.md` § Correctness tooling for the rationale and
@@ -24,17 +24,19 @@ pub const NO_DENSE_ALLOC: &str = "no-dense-alloc-on-sparse-path";
 pub const NO_UNWRAP: &str = "no-unwrap-in-lib";
 pub const GEOMETRY_REGISTRATION: &str = "geometry-registration";
 pub const NO_SWEEP_ALLOC: &str = "no-alloc-in-sweep-loop";
+pub const NO_GLOBAL_BROADCAST: &str = "no-global-broadcast-in-phase-loop";
 /// Pseudo-rule for malformed waiver comments (cannot itself be waived).
 pub const WAIVER_SYNTAX: &str = "waiver-syntax";
 
 /// Every rule name a waiver may reference.
-pub const RULES: [&str; 6] = [
+pub const RULES: [&str; 7] = [
     NO_PARTIAL_CMP,
     NO_WALL_CLOCK,
     NO_DENSE_ALLOC,
     NO_UNWRAP,
     GEOMETRY_REGISTRATION,
     NO_SWEEP_ALLOC,
+    NO_GLOBAL_BROADCAST,
 ];
 
 /// Files where wall-clock reads are the point: the timer utility, DyDD
@@ -56,7 +58,14 @@ const SPARSE_PATH: [&str; 3] =
 const SWEEP_HOT_FILES: [&str; 2] =
     ["rust/src/ddkf/schwarz.rs", "rust/src/coordinator/worker.rs"];
 
-/// Run the five per-file rules plus waiver validation on one file.
+/// Files whose `lint:phase-hot-start` / `lint:phase-hot-end` regions mark
+/// the leader's per-phase dispatch loop. A fresh `Arc::new` there clones
+/// the full n-vector iterate per phase — the dense global broadcast the
+/// halo-restricted delta exchange replaced. The one legitimate occurrence
+/// (the `CommMode::Full` reference baseline) carries an explicit waiver.
+const PHASE_HOT_FILES: [&str; 1] = ["rust/src/coordinator/leader.rs"];
+
+/// Run the six per-file rules plus waiver validation on one file.
 pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
     let mut out = Vec::new();
     for bad in &sf.bad_waivers {
@@ -81,6 +90,7 @@ pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
     let sparse_scoped = SPARSE_PATH.iter().any(|p| sf.path.starts_with(p));
     let unwrap_scoped = sf.path != "rust/src/main.rs";
     let sweep_scoped = SWEEP_HOT_FILES.contains(&sf.path.as_str());
+    let phase_scoped = PHASE_HOT_FILES.contains(&sf.path.as_str());
     for (idx, line) in sf.lines.iter().enumerate() {
         if line.in_test {
             continue;
@@ -128,6 +138,13 @@ pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
                     flag(NO_SWEEP_ALLOC, msg, &mut out);
                 }
             }
+        }
+        if phase_scoped && line.in_phase && has_token_seq(code, "Arc::new") {
+            let msg = "Arc::new inside the phase dispatch loop — a per-phase clone of \
+                       the full iterate is the dense global broadcast the delta \
+                       exchange removed; ship the read set or a delta instead"
+                .to_string();
+            flag(NO_GLOBAL_BROADCAST, msg, &mut out);
         }
         if unwrap_scoped {
             if code.contains(".unwrap()") {
@@ -328,6 +345,35 @@ mod tests {
                       let v = vec![0.0; n]; // lint:allow(no-alloc-in-sweep-loop) cold path\n\
                       // lint:sweep-hot-end\n";
         assert!(findings("rust/src/coordinator/worker.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn global_broadcast_rule_scoped_to_phase_regions() {
+        let hot = "// lint:phase-hot-start dispatch\n\
+                   let snap = Arc::new(x.clone());\n\
+                   // lint:phase-hot-end\n";
+        let f = findings("rust/src/coordinator/leader.rs", hot);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, NO_GLOBAL_BROADCAST);
+        // The same Arc outside the marked region is setup-time and legal…
+        assert!(findings(
+            "rust/src/coordinator/leader.rs",
+            "let snap = Arc::new(x.clone());\n"
+        )
+        .is_empty());
+        // …phase markers in other files are inert…
+        assert!(findings("rust/src/coordinator/worker.rs", hot).is_empty());
+        // …and the CommMode::Full baseline carries an explicit waiver.
+        let waived = "// lint:phase-hot-start dispatch\n\
+                      let snap = Arc::new(x.clone()); \
+                      // lint:allow(no-global-broadcast-in-phase-loop) Full baseline\n\
+                      // lint:phase-hot-end\n";
+        assert!(findings("rust/src/coordinator/leader.rs", waived).is_empty());
+        // Restricted/delta sends inside the region pass.
+        let ok = "// lint:phase-hot-start dispatch\n\
+                  let vals = gather(&x, read_set);\n\
+                  // lint:phase-hot-end\n";
+        assert!(findings("rust/src/coordinator/leader.rs", ok).is_empty());
     }
 
     #[test]
